@@ -1,0 +1,43 @@
+//! Quickstart: load the artifacts, score one text under FP16 vs MUXQ
+//! INT8, and print perplexities — the 60-second tour of the public API.
+//!
+//!     cargo run --release --example quickstart
+
+use anyhow::Result;
+use muxq::coordinator::{VariantKey, VariantRegistry};
+use muxq::data::bpe::Bpe;
+use muxq::data::eval_set::EvalSet;
+use muxq::harness::eval_ppl;
+
+fn main() -> Result<()> {
+    let artifacts = muxq::artifacts_dir();
+
+    // 1. the tokenizer trained at build time
+    let bpe = Bpe::load(artifacts.join("corpus").join("tokenizer.bpe"))?;
+    println!("tokenizer: {} tokens", bpe.vocab_size());
+    let sample = "The quick brown fox jumps over the lazy dog.";
+    let ids = bpe.encode(sample);
+    println!("encode({sample:?}) -> {} tokens, roundtrip ok: {}",
+        ids.len(), bpe.decode(&ids) == sample);
+
+    // 2. the compiled model variants (PJRT executables from jax+pallas)
+    let registry = VariantRegistry::open_default()?;
+    println!("\navailable variants: {}", registry.keys().len());
+
+    // 3. score validation windows under three quantization schemes
+    let eval = EvalSet::load(&artifacts, "valid")?;
+    let windows = eval.windows(128, 8);
+    println!("\nperplexity on {} validation windows (sim-small):", windows.len());
+    for (label, tag, ia, w) in [
+        ("FP16 reference     ", "fp16-pt", 8.0, 8.0),
+        ("naive INT8/tensor  ", "naive-pt", 8.0, 8.0),
+        ("MUXQ  INT8/tensor  ", "muxq-pt", 8.0, 8.0),
+        ("MUXQ  INT6 acts    ", "muxq-pt", 6.0, 8.0),
+    ] {
+        let key = VariantKey::eval("sim-small", tag);
+        let ppl = eval_ppl(&registry, &key, ia, w, &windows)?;
+        println!("  {label} ppl = {ppl:.4}");
+    }
+    println!("\nMUXQ holds perplexity near FP16 where naive per-tensor INT8 degrades.");
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! End-to-end serving driver (the repo's E2E validation, see DESIGN.md):
+//! starts the coordinator over the AOT artifacts, generates a realistic
+//! scoring workload from the synthetic corpus, drives it through the
+//! dynamic batcher from concurrent client threads, and reports perplexity
+//! + latency/throughput, comparing quantization methods end to end.
+//!
+//!     cargo run --release --example serve
+//!     cargo run --release --example serve -- --requests 128 --clients 16
+
+use anyhow::Result;
+use muxq::coordinator::{Coordinator, CoordinatorConfig, ScoreRequest, VariantKey};
+use muxq::data::eval_set::{perplexity, EvalSet};
+use muxq::util::cli::Cli;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let p = Cli::new("serve", "end-to-end serving driver")
+        .opt("model", "sim-small", "model to serve")
+        .opt("requests", "64", "requests per method")
+        .opt("clients", "8", "concurrent client threads")
+        .opt("ia-bits", "8", "activation bits")
+        .parse(&args)?;
+    let model = p.get("model").to_string();
+    let n_requests = p.get_usize("requests")?;
+    let n_clients = p.get_usize("clients")?.max(1);
+    let ia_bits = p.get_f64("ia-bits")? as f32;
+
+    let artifacts = muxq::artifacts_dir();
+    let mut cfg = CoordinatorConfig::default();
+    cfg.batcher.max_wait = std::time::Duration::from_millis(10);
+    let coord = Arc::new(Coordinator::start(&artifacts, cfg)?);
+    let eval = EvalSet::load(&artifacts, "valid")?;
+    let windows = Arc::new(eval.windows(128, 0));
+    println!(
+        "serving {model}: {} validation windows, {n_clients} clients, \
+         {n_requests} requests/method\n",
+        windows.len()
+    );
+    println!(
+        "{:<22} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "variant", "ppl", "req/s", "tok/s", "p50", "p95", "batchfill"
+    );
+
+    for tag in ["fp16-pt", "naive-pt", "muxq-pt", "llmint8-pt", "muxq-pv"] {
+        let variant = VariantKey::eval(&model, tag);
+        if coord.manifest().meta(&variant).is_none() {
+            continue;
+        }
+        // warm up compilation outside the timed section
+        coord.score(ScoreRequest {
+            variant: variant.clone(),
+            tokens: windows[0].clone(),
+            ia_bits,
+            w_bits: 8.0,
+        })?;
+
+        let batches_before = coord.stats().batches;
+        let completed_before = coord.stats().completed;
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for client in 0..n_clients {
+            let coord = coord.clone();
+            let windows = windows.clone();
+            let variant = variant.clone();
+            handles.push(std::thread::spawn(move || -> Result<Vec<(f32, f32, f64)>> {
+                let mut out = Vec::new();
+                // round-robin split of the request stream across clients
+                for i in (client..n_requests).step_by(n_clients) {
+                    let w = &windows[i % windows.len()];
+                    let t = Instant::now();
+                    let resp = coord.score(ScoreRequest {
+                        variant: variant.clone(),
+                        tokens: w.clone(),
+                        ia_bits,
+                        w_bits: 8.0,
+                    })?;
+                    out.push((resp.nll, resp.count, t.elapsed().as_secs_f64()));
+                }
+                Ok(out)
+            }));
+        }
+        let mut all: Vec<(f32, f32, f64)> = Vec::new();
+        for h in handles {
+            all.extend(h.join().unwrap()?);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let pairs: Vec<(f32, f32)> = all.iter().map(|(n, c, _)| (*n, *c)).collect();
+        let mut lats: Vec<f64> = all.iter().map(|(_, _, l)| *l).collect();
+        lats.sort_by(f64::total_cmp);
+        let tokens: f32 = pairs.iter().map(|(_, c)| c).sum();
+        let batches = coord.stats().batches - batches_before;
+        let completed = coord.stats().completed - completed_before;
+        println!(
+            "{:<22} {:>10.4} {:>10.1} {:>10.0} {:>9.0}ms {:>9.0}ms {:>9.1}",
+            format!("{model}[{tag}]"),
+            perplexity(&pairs),
+            all.len() as f64 / wall,
+            tokens as f64 / wall,
+            lats[lats.len() / 2] * 1e3,
+            lats[(lats.len() * 95 / 100).min(lats.len() - 1)] * 1e3,
+            completed as f64 / batches.max(1) as f64,
+        );
+    }
+
+    println!("\ncoordinator metrics:\n{}", coord.metrics().render());
+    Ok(())
+}

@@ -1,0 +1,317 @@
+"""AOT build orchestrator (``make artifacts``).
+
+Pipeline (each stage skipped when its outputs already exist, so the
+Makefile target is an incremental no-op):
+
+1. corpus      — synthetic WikiText-like train/valid splits
+2. tokenizer   — byte-level BPE (256 merges), token caches
+3. training    — the three sim GPT-2 models (FP32, build-time)
+4. injection   — function-preserving outlier injection
+5. calibration — per-site activation abs-max, SmoothQuant scales
+6. export      — HLO *text* per (model, variant): eval + logits graphs
+7. goldens     — oracles for the rust quantization twin & runtime tests
+
+HLO text (not serialized proto) is the interchange format: jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Weights are HLO *inputs*, not constants (keeps HLO text small and lets
+every variant share one weights file). Input order contract with rust:
+all weights.bin tensors in byte-sorted name order, then tokens i32[B,S],
+ia_bits f32[], w_bits f32[].
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import bpe as bpe_mod
+from . import quant
+from .calibrate import (calib_tensors, capture_absmax, outlier_stats,
+                        smooth_scales_per_block, smooth_tensors)
+from .config import (EVAL_BATCH, EVAL_SEQ, EXPORT_VARIANTS, INJECT_ALPHA,
+                     INJECT_CHANNELS, MODELS, SIM_MODELS, ModelConfig,
+                     QuantConfig)
+from .corpus import generate
+from .iohelpers import params_to_tensors, read_tensors, tensors_to_params, write_tensors
+from .kernels import ref
+from .model import forward, inject_outliers, nll_per_seq, nll_sums
+from .train import train
+
+#: extra ablation variants, exported for sim-small only (Fig.4 trade-off)
+ABLATION_VARIANTS = [
+    QuantConfig("muxq", "per-tensor", exp_factor=1),
+    QuantConfig("muxq", "per-tensor", exp_factor=3),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ----------------------------------------------------------------- stages
+def stage_corpus(root: Path, log) -> tuple:
+    cdir = root / "corpus"
+    train_p, valid_p = cdir / "train.txt", cdir / "valid.txt"
+    if train_p.exists() and valid_p.exists():
+        return train_p.read_text(), valid_p.read_text()
+    log("[corpus] generating synthetic WikiText-like corpus...")
+    train_text, valid_text = generate()
+    cdir.mkdir(parents=True, exist_ok=True)
+    train_p.write_text(train_text)
+    valid_p.write_text(valid_text)
+    log(f"[corpus] train {len(train_text)/1e6:.2f} MB, valid {len(valid_text)/1e3:.0f} KB")
+    return train_text, valid_text
+
+
+def stage_tokenizer(root: Path, train_text: str, valid_text: str, log):
+    cdir = root / "corpus"
+    tok_p = cdir / "tokenizer.bpe"
+    tok_cache = cdir / "tokens.bin"
+    if tok_p.exists() and tok_cache.exists():
+        tok = bpe_mod.BPETokenizer.load(tok_p.read_text())
+        t = read_tensors(tok_cache)
+        return tok, t["train"], t["valid"]
+    log("[bpe] training byte-level BPE (256 merges)...")
+    tok = bpe_mod.train(train_text, n_merges=256)
+    tok_p.write_text(tok.dump())
+    log("[bpe] encoding corpus...")
+    train_ids = np.asarray(tok.encode(train_text), np.int32)
+    valid_ids = np.asarray(tok.encode(valid_text), np.int32)
+    write_tensors(tok_cache, {"train": train_ids, "valid": valid_ids})
+    log(f"[bpe] vocab {tok.vocab_size}, train {len(train_ids)} tokens, "
+        f"valid {len(valid_ids)} tokens")
+    return tok, train_ids, valid_ids
+
+
+def stage_model(root: Path, cfg: ModelConfig, train_ids, valid_ids, log) -> dict:
+    wdir = root / "weights"
+    wpath = wdir / f"{cfg.name}.bin"
+    if wpath.exists():
+        flat = read_tensors(wpath)
+        n_layer = cfg.n_layer
+        weights = {k: v for k, v in flat.items() if not k.startswith("smooth/")}
+        return tensors_to_params(weights, n_layer) | {"_flat": flat}
+    log(f"[train] {cfg.name}: {cfg.n_layer}L d={cfg.d_model} "
+        f"({cfg.param_count()/1e6:.2f}M params), {cfg.train_steps} steps")
+    res = train(cfg, train_ids, log=log)
+    log(f"[train] {cfg.name} done in {res.seconds:.0f}s, final loss {res.final_loss:.4f}")
+
+    params = inject_outliers(res.params, cfg, INJECT_CHANNELS, INJECT_ALPHA)
+
+    # calibration on valid windows
+    calib = [np.stack([valid_ids[i * EVAL_SEQ:(i + 1) * EVAL_SEQ]
+                       for i in range(b * EVAL_BATCH, (b + 1) * EVAL_BATCH)]).astype(np.int32)
+             for b in range(2)]
+    absmax = capture_absmax(params, cfg, calib)
+    stats = outlier_stats(absmax)
+    worst = max(stats.values(), key=lambda s: s["max"])
+    log(f"[calib] {cfg.name}: worst site max|x|={worst['max']:.1f}, "
+        f"outlier channels (theta=6) at c_fc/l0: "
+        f"{stats[(0,'c_fc')]['outliers']}/{stats[(0,'c_fc')]['channels']}")
+    smooth = smooth_scales_per_block(params, cfg, absmax, alpha=0.5)
+
+    flat = params_to_tensors(params) | smooth_tensors(smooth)
+    write_tensors(wpath, flat)
+    write_tensors(root / "calib" / f"{cfg.name}.bin", calib_tensors(absmax))
+    (root / "train_logs").mkdir(parents=True, exist_ok=True)
+    (root / "train_logs" / f"{cfg.name}.json").write_text(json.dumps({
+        "final_loss": res.final_loss, "steps": res.steps,
+        "seconds": res.seconds, "curve": res.loss_curve,
+        "outlier_stats": {f"{li}/{site}": v for (li, site), v in stats.items()},
+    }, indent=1))
+    return params | {"_flat": flat}
+
+
+def sorted_weight_names(flat: dict) -> list:
+    return sorted(k for k in flat if k != "_flat")
+
+
+def _smooth_from_flat(flat: dict, n_layer: int) -> list:
+    out = []
+    for li in range(n_layer):
+        per_site = {}
+        for site in ("c_attn", "attn_proj", "c_fc", "mlp_proj"):
+            key = f"smooth/block{li:02d}/{site}"
+            if key in flat:
+                per_site[site] = jnp.asarray(flat[key])
+        out.append(per_site)
+    return out
+
+
+def build_eval_fn(cfg: ModelConfig, qcfg: QuantConfig, names: list, kind: str):
+    """Returns fn(*weights, tokens, ia_bits, w_bits) for jax.jit export.
+    kind: 'eval' -> (nll_sum, count); 'logits' -> logits."""
+
+    def fn(*args):
+        ws, tokens, ia_bits, w_bits = args[:-3], args[-3], args[-2], args[-1]
+        flat = dict(zip(names, ws))
+        weights = {k: v for k, v in flat.items() if not k.startswith("smooth/")}
+        params = tensors_to_params(weights, cfg.n_layer)
+        smooth = _smooth_from_flat(flat, cfg.n_layer) if qcfg.smooth else None
+        kw = dict(qcfg=qcfg, ia_bits=ia_bits, w_bits=w_bits,
+                  smooth_per_block=smooth)
+        if kind == "eval":
+            s, c = nll_per_seq(params, tokens, cfg, **kw)
+            return (s, c)
+        return (forward(params, tokens, cfg, **kw),)
+
+    return fn
+
+
+def stage_export(root: Path, cfg: ModelConfig, flat: dict, variants, log,
+                 kinds=("eval",)) -> list:
+    hdir = root / "hlo"
+    hdir.mkdir(parents=True, exist_ok=True)
+    names = sorted_weight_names(flat)
+    specs = [jax.ShapeDtypeStruct(flat[n].shape, jnp.float32) for n in names]
+    tok_spec = jax.ShapeDtypeStruct((EVAL_BATCH, EVAL_SEQ), jnp.int32)
+    bit_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    manifest = []
+    for qcfg in variants:
+        for kind in kinds:
+            out = hdir / f"{cfg.name}-{kind}-{qcfg.tag}.hlo.txt"
+            manifest.append({
+                "model": cfg.name, "kind": kind, "tag": qcfg.tag,
+                "method": qcfg.method, "granularity": qcfg.granularity,
+                "smooth": qcfg.smooth, "exp_factor": qcfg.exp_factor,
+                "file": out.name, "batch": EVAL_BATCH, "seq": EVAL_SEQ,
+                "weights": f"weights/{cfg.name}.bin",
+            })
+            if out.exists():
+                continue
+            t0 = time.time()
+            fn = build_eval_fn(cfg, qcfg, names, kind)
+            lowered = jax.jit(fn, keep_unused=True).lower(*specs, tok_spec, bit_spec, bit_spec)
+            text = to_hlo_text(lowered)
+            out.write_text(text)
+            log(f"[export] {out.name}: {len(text)/1e6:.1f} MB HLO text "
+                f"({time.time()-t0:.1f}s)")
+    return manifest
+
+
+def stage_goldens(root: Path, log) -> None:
+    """Oracles for the rust quantization twin (rust/src/quant tests)."""
+    gpath = root / "goldens" / "quant.bin"
+    if gpath.exists():
+        return
+    log("[goldens] generating quantization oracles for rust cross-check...")
+    rng = np.random.default_rng(42)
+    x = rng.normal(size=(64, 96)).astype(np.float32)
+    x[:, 7] *= 25.0  # outlier channels
+    x[:, 40] *= 14.0
+    w = rng.normal(size=(96, 32)).astype(np.float32)
+    g: dict = {"x": x, "w": w}
+    q8 = 127.0
+    for gran, axx, axw in (("pt", None, None), ("pv", 1, 0)):
+        sx = np.asarray(ref.absmax_scale(jnp.asarray(x), q8, axis=axx)).reshape(
+            (-1, 1) if axx == 1 else (1, 1))
+        sw = np.asarray(ref.absmax_scale(jnp.asarray(w), q8, axis=axw)).reshape(
+            (1, -1) if axw == 0 else (1, 1))
+        g[f"fq_naive_x_{gran}"] = np.asarray(ref.fake_quant(jnp.asarray(x), jnp.asarray(sx), q8))
+        g[f"fq_naive_w_{gran}"] = np.asarray(ref.fake_quant(jnp.asarray(w), jnp.asarray(sw), q8))
+        g[f"qmm_{gran}"] = np.asarray(ref.quant_matmul(
+            jnp.asarray(x), jnp.asarray(w), jnp.asarray(sx), jnp.asarray(sw), q8, q8))
+        g[f"fq_muxq_x_{gran}"] = np.asarray(ref.fq_muxq(jnp.asarray(x), q8, axx, 6.0, 2))
+        g[f"fq_llmint8_x_{gran}"] = np.asarray(ref.fq_llmint8_act(jnp.asarray(x), q8, axx, 6.0))
+    mask = np.asarray(ref.outlier_mask(jnp.asarray(x), 6.0))
+    g["outlier_mask"] = mask.astype(np.float32)
+    body, aux = ref.muxq_decompose(jnp.asarray(x), jnp.asarray(mask), 2)
+    g["muxq_body"] = np.asarray(body)
+    g["muxq_aux"] = np.asarray(aux)
+    # 4-bit variants for the low-bit paths
+    q4 = 7.0
+    s4 = np.asarray(ref.absmax_scale(jnp.asarray(x), q4, axis=None)).reshape(1, 1)
+    g["fq_naive_x_pt_4b"] = np.asarray(ref.fake_quant(jnp.asarray(x), jnp.asarray(s4), q4))
+    g["smooth_s"] = np.asarray(ref.smooth_scales(
+        jnp.asarray(np.abs(x).max(axis=0)), jnp.asarray(w), 0.5))
+    write_tensors(gpath, g)
+
+
+def stage_eval_goldens(root: Path, cfg: ModelConfig, flat: dict, valid_ids,
+                       variants, log) -> None:
+    """Per-variant (nll, count) on one fixed batch — used by rust
+    integration tests to validate the whole PJRT path end to end."""
+    gpath = root / "goldens" / f"eval_{cfg.name}.bin"
+    if gpath.exists():
+        return
+    tokens = np.stack([valid_ids[i * EVAL_SEQ:(i + 1) * EVAL_SEQ]
+                       for i in range(EVAL_BATCH)]).astype(np.int32)
+    weights = {k: v for k, v in flat.items() if not k.startswith("smooth/") and k != "_flat"}
+    params = tensors_to_params(weights, cfg.n_layer)
+    smooth = _smooth_from_flat(flat, cfg.n_layer)
+    g: dict = {"tokens": tokens}
+    for qcfg in variants:
+        s, c = nll_sums(params, jnp.asarray(tokens), cfg, qcfg=qcfg,
+                        ia_bits=8.0, w_bits=8.0,
+                        smooth_per_block=smooth if qcfg.smooth else None)
+        g[f"nll/{qcfg.tag}"] = np.asarray([float(s), float(c)], np.float32)
+        log(f"[golden] {cfg.name} {qcfg.tag}: ppl(8,8) = {np.exp(float(s)/float(c)):.4f}")
+    write_tensors(gpath, g)
+
+
+# ------------------------------------------------------------------- main
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="MUXQ AOT artifact builder")
+    ap.add_argument("--out", default=None, help="(legacy) single-HLO output path")
+    ap.add_argument("--root", default=None, help="artifacts root")
+    ap.add_argument("--models", nargs="*", default=SIM_MODELS)
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="use jnp reference instead of pallas kernels")
+    args = ap.parse_args(argv)
+
+    if args.no_pallas:
+        quant.USE_PALLAS = False
+
+    root = Path(args.root) if args.root else Path(__file__).resolve().parents[2] / "artifacts"
+    root.mkdir(parents=True, exist_ok=True)
+    log = lambda *a: print(*a, flush=True)
+
+    t_start = time.time()
+    train_text, valid_text = stage_corpus(root, log)
+    tok, train_ids, valid_ids = stage_tokenizer(root, train_text, valid_text, log)
+    stage_goldens(root, log)
+
+    manifest: list = []
+    for name in args.models:
+        cfg = MODELS[name]
+        params = stage_model(root, cfg, train_ids, valid_ids, log)
+        flat = params["_flat"]
+        variants = list(EXPORT_VARIANTS)
+        kinds = ("eval",)
+        manifest += stage_export(root, cfg, flat, variants, log, kinds=kinds)
+        # logits graphs for the serving example (fp16 + muxq-pt)
+        manifest += stage_export(root, cfg, flat,
+                                 [QuantConfig("fp16", "per-tensor"),
+                                  QuantConfig("muxq", "per-tensor")],
+                                 log, kinds=("logits",))
+        if name == "sim-small":
+            manifest += stage_export(root, cfg, flat, ABLATION_VARIANTS, log)
+        stage_eval_goldens(root, cfg, flat, valid_ids, variants, log)
+
+    (root / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    # legacy single-file target used by the Makefile stamp
+    if args.out:
+        stamp = Path(args.out)
+        stamp.parent.mkdir(parents=True, exist_ok=True)
+        stamp.write_text(f"# muxq artifacts built in {time.time()-t_start:.0f}s; "
+                         f"see manifest.json\n")
+    log(f"[aot] all artifacts ready in {time.time()-t_start:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

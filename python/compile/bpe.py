@@ -1,0 +1,142 @@
+"""Byte-level BPE tokenizer (train + encode + decode).
+
+Mirrored by ``rust/src/data/bpe.rs`` (encode/decode only — training happens
+once at build time here, and the merge table ships in
+``artifacts/corpus/tokenizer.bpe``).
+
+Design: classic byte-level BPE a la GPT-2, but without the regex pre-split
+(our synthetic corpus is plain ASCII): the corpus is split on whitespace
+into words (the space is attached to the *following* word as in GPT-2's
+"Ġ" convention, here kept literally as a leading space byte), merges are
+learned over the word-frequency table, and encoding greedily applies merges
+by rank.
+
+Token id space: 0..255 are raw bytes, 256..256+n_merges are merge tokens.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+
+
+class BPETokenizer:
+    def __init__(self, merges: list) -> None:
+        #: list of ((left_id, right_id)) in training order; rank = index
+        self.merges = list(merges)
+        self.rank = {pair: i for i, pair in enumerate(self.merges)}
+        #: token id -> bytes
+        self.vocab = [bytes([i]) for i in range(256)]
+        for left, right in self.merges:
+            self.vocab.append(self.vocab[left] + self.vocab[right])
+        self._word_cache: dict = {}
+
+    # ------------------------------------------------------------------ api
+    @property
+    def vocab_size(self) -> int:
+        return len(self.vocab)
+
+    def encode_word(self, word: bytes) -> list:
+        """Encode one pre-split word (greedy lowest-rank merge first)."""
+        cached = self._word_cache.get(word)
+        if cached is not None:
+            return list(cached)
+        seq = list(word)
+        while len(seq) > 1:
+            best_rank = None
+            best_i = -1
+            for i in range(len(seq) - 1):
+                r = self.rank.get((seq[i], seq[i + 1]))
+                if r is not None and (best_rank is None or r < best_rank):
+                    best_rank = r
+                    best_i = i
+            if best_rank is None:
+                break
+            seq[best_i: best_i + 2] = [256 + best_rank]
+        self._word_cache[word] = tuple(seq)
+        return seq
+
+    def encode(self, text: str) -> list:
+        ids: list = []
+        for word in split_words(text):
+            ids.extend(self.encode_word(word))
+        return ids
+
+    def decode(self, ids: list) -> str:
+        return b"".join(self.vocab[i] for i in ids).decode("utf-8", errors="replace")
+
+    # ------------------------------------------------------------ serialize
+    def dump(self) -> str:
+        lines = ["#muxq-bpe-v1"]
+        lines += [f"{l} {r}" for l, r in self.merges]
+        return "\n".join(lines) + "\n"
+
+    @classmethod
+    def load(cls, text: str) -> "BPETokenizer":
+        lines = [ln for ln in text.strip().splitlines() if ln and not ln.startswith("#")]
+        merges = []
+        for ln in lines:
+            l, r = ln.split()
+            merges.append((int(l), int(r)))
+        return cls(merges)
+
+
+def split_words(text: str) -> list:
+    """Split text into byte 'words'. Whitespace is attached to the
+    following word (GPT-2 style) so decode(encode(x)) == x. Newlines are
+    standalone tokens-in-waiting so document structure survives."""
+    out: list = []
+    buf = bytearray()
+    pending_space = bytearray()
+    for ch in text.encode("utf-8"):
+        if ch == 0x0A:  # newline: flush word, newline is its own word
+            if buf:
+                out.append(bytes(buf))
+                buf.clear()
+            if pending_space:
+                out.append(bytes(pending_space))
+                pending_space.clear()
+            out.append(b"\n")
+        elif ch == 0x20:
+            if buf:
+                out.append(bytes(buf))
+                buf.clear()
+            pending_space.append(ch)
+        else:
+            if pending_space:
+                buf.extend(pending_space)
+                pending_space.clear()
+            buf.append(ch)
+    if buf:
+        out.append(bytes(buf))
+    if pending_space:
+        out.append(bytes(pending_space))
+    return out
+
+
+def train(text: str, n_merges: int = 256) -> BPETokenizer:
+    """Learn ``n_merges`` merges from word frequencies (standard BPE)."""
+    word_freq = Counter(split_words(text))
+    # each word is a mutable token sequence
+    words = [(list(w), f) for w, f in word_freq.items()]
+    merges: list = []
+    for step in range(n_merges):
+        pair_freq: Counter = Counter()
+        for seq, f in words:
+            for i in range(len(seq) - 1):
+                pair_freq[(seq[i], seq[i + 1])] += f
+        if not pair_freq:
+            break
+        # deterministic tie-break: highest count, then smallest pair ids
+        best = min(pair_freq.items(), key=lambda kv: (-kv[1], kv[0]))[0]
+        if pair_freq[best] < 2:
+            break
+        new_id = 256 + len(merges)
+        merges.append(best)
+        for seq, _f in words:
+            i = 0
+            while i < len(seq) - 1:
+                if seq[i] == best[0] and seq[i + 1] == best[1]:
+                    seq[i: i + 2] = [new_id]
+                else:
+                    i += 1
+    return BPETokenizer(merges)

@@ -1,0 +1,79 @@
+"""Calibration pass: per-site activation statistics.
+
+Runs the FP model over a few calibration batches and records, for each
+(block, projection-site), the per-channel abs-max of the input
+activations. These feed
+
+* the SmoothQuant migration scales (stored into weights.bin as
+  ``smooth/blockNN/<site>`` so the exported HLO takes them as inputs);
+* Figure 1 (outlier channel magnitude profile) via
+  ``artifacts/calib/<model>.bin`` (``absmax/blockNN/<site>``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, QuantConfig
+from .kernels import ref
+from .model import PROJ_SITES, forward
+
+#: weight matrix feeding each capture site
+SITE_WEIGHT = {"c_attn": "c_attn", "attn_proj": "attn_proj",
+               "c_fc": "c_fc", "mlp_proj": "mlp_proj"}
+
+
+def capture_absmax(params: dict, cfg: ModelConfig, token_batches) -> dict:
+    """Returns {(layer, site): np.ndarray[K]} — running abs-max across
+    calibration batches."""
+    agg: dict = {}
+    for batch in token_batches:
+        cap: dict = {}
+        forward(params, jnp.asarray(batch), cfg, capture=cap)
+        for key, vec in cap.items():
+            v = np.asarray(vec)
+            agg[key] = np.maximum(agg[key], v) if key in agg else v
+    return agg
+
+
+def smooth_scales_per_block(params: dict, cfg: ModelConfig, absmax: dict,
+                            alpha: float) -> list:
+    """SmoothQuant migration scales s_j per (block, site)."""
+    out = []
+    for li, blk in enumerate(params["blocks"]):
+        per_site = {}
+        for site in PROJ_SITES:
+            w = blk[SITE_WEIGHT[site]]["w"]
+            am = jnp.asarray(absmax[(li, site)])
+            per_site[site] = np.asarray(ref.smooth_scales(am, w, alpha))
+        out.append(per_site)
+    return out
+
+
+def calib_tensors(absmax: dict) -> dict:
+    """Flatten capture dict for the tensor container."""
+    return {f"absmax/block{li:02d}/{site}": np.asarray(v, np.float32)
+            for (li, site), v in sorted(absmax.items(), key=lambda kv: (kv[0][0], kv[0][1]))}
+
+
+def smooth_tensors(smooth_per_block: list) -> dict:
+    out = {}
+    for li, per_site in enumerate(smooth_per_block):
+        for site, s in per_site.items():
+            out[f"smooth/block{li:02d}/{site}"] = np.asarray(s, np.float32)
+    return out
+
+
+def outlier_stats(absmax: dict, theta: float = 6.0) -> dict:
+    """Summary used in EXPERIMENTS.md: outlier channel counts per site."""
+    stats = {}
+    for (li, site), v in absmax.items():
+        n_out = int((v > theta).sum())
+        stats[(li, site)] = {
+            "channels": int(v.size),
+            "outliers": n_out,
+            "max": float(v.max()),
+            "median": float(np.median(v)),
+        }
+    return stats

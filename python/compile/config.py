@@ -1,0 +1,120 @@
+"""Model + quantization configuration shared across the build pipeline.
+
+The three ``sim-*`` configs are the scaled-down stand-ins for the paper's
+GPT-2 small/medium/large (see DESIGN.md §2 — pretrained HF checkpoints are
+unavailable in this environment, so the models are trained at build time).
+The real GPT-2 configs are kept for users who have checkpoints.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layer: int
+    d_model: int
+    n_head: int
+    n_ctx: int
+    vocab_size: int
+    #: training steps at build time (0 for configs we never train here)
+    train_steps: int = 0
+    train_batch: int = 16
+    lr: float = 3e-3
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    def param_count(self) -> int:
+        d, v, L = self.d_model, self.vocab_size, self.n_layer
+        per_block = (
+            d * 3 * d + 3 * d      # c_attn
+            + d * d + d            # attn c_proj
+            + d * self.d_ff + self.d_ff  # c_fc
+            + self.d_ff * d + d    # mlp c_proj
+            + 4 * d                # two layernorms
+        )
+        return v * d + self.n_ctx * d + L * per_block + 2 * d
+
+
+#: BPE vocab: 256 bytes + 256 merges
+SIM_VOCAB = 512
+
+MODELS = {
+    "sim-small": ModelConfig("sim-small", n_layer=4, d_model=128, n_head=4,
+                             n_ctx=128, vocab_size=SIM_VOCAB,
+                             train_steps=700, lr=3e-3),
+    "sim-medium": ModelConfig("sim-medium", n_layer=6, d_model=192, n_head=6,
+                              n_ctx=128, vocab_size=SIM_VOCAB,
+                              train_steps=900, lr=2.5e-3),
+    "sim-large": ModelConfig("sim-large", n_layer=8, d_model=256, n_head=8,
+                             n_ctx=128, vocab_size=SIM_VOCAB,
+                             train_steps=1400, lr=2e-3),
+    # Real GPT-2 configs (not trained here; for users with checkpoints).
+    "gpt2-small": ModelConfig("gpt2-small", 12, 768, 12, 1024, 50257),
+    "gpt2-medium": ModelConfig("gpt2-medium", 24, 1024, 16, 1024, 50257),
+    "gpt2-large": ModelConfig("gpt2-large", 36, 1280, 20, 1024, 50257),
+}
+
+SIM_MODELS = ["sim-small", "sim-medium", "sim-large"]
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    """One quantization *variant* — a (method, granularity, options) point.
+
+    Bit-widths are deliberately NOT part of the variant: they are runtime
+    scalar inputs of the exported HLO so one executable serves the whole
+    bit sweep of Tables 1–2.
+    """
+
+    #: 'fp16' | 'naive' | 'muxq' | 'llmint8'
+    method: str = "fp16"
+    #: 'per-vector' (per-token IA, per-out-channel W) | 'per-tensor'
+    granularity: str = "per-tensor"
+    #: outlier threshold (LLM.int8() criterion: any |x| > theta)
+    theta: float = 6.0
+    #: MUXQ exponent shift: Body = X / 2^exp_factor
+    exp_factor: int = 2
+    #: apply SmoothQuant difficulty migration before quantizing
+    smooth: bool = False
+    #: SmoothQuant alpha
+    smooth_alpha: float = 0.5
+
+    @property
+    def tag(self) -> str:
+        g = "pv" if self.granularity == "per-vector" else "pt"
+        s = "-sq" if self.smooth else ""
+        e = f"-e{self.exp_factor}" if self.method == "muxq" and self.exp_factor != 2 else ""
+        return f"{self.method}-{g}{s}{e}"
+
+
+#: variants exported per sim model (Tables 1, 2 + combos)
+EXPORT_VARIANTS = [
+    QuantConfig("fp16", "per-tensor"),
+    QuantConfig("naive", "per-vector"),
+    QuantConfig("naive", "per-tensor"),
+    QuantConfig("muxq", "per-vector"),
+    QuantConfig("muxq", "per-tensor"),
+    QuantConfig("llmint8", "per-vector"),
+    QuantConfig("llmint8", "per-tensor"),
+    QuantConfig("muxq", "per-tensor", smooth=True),
+    QuantConfig("naive", "per-tensor", smooth=True),
+]
+
+#: eval batch geometry baked into exported HLO (rust pads to this)
+EVAL_BATCH = 8
+EVAL_SEQ = 128
+
+#: outlier injection (DESIGN.md §2): k channels scaled by alpha,
+#: function-preserving (consuming projection rows scaled by 1/alpha)
+INJECT_CHANNELS = 6
+INJECT_ALPHA = 12.0

@@ -1,0 +1,106 @@
+"""Flat tensor-container format shared with rust (``rust/src/data/tensors.rs``).
+
+Layout (little-endian):
+
+    magic   8 bytes  b"MUXQTNSR"
+    version u32      1
+    count   u32
+    per tensor:
+        name_len u16, name utf-8
+        dtype    u8   (0 = f32, 1 = i32, 2 = u8)
+        ndim     u8
+        dims     u32 * ndim
+        data     raw little-endian
+
+Used for model weights (``artifacts/weights/<model>.bin``), goldens
+(``artifacts/goldens/*.bin``) and calibration data. Deliberately trivial so
+the rust reader needs no external crates.
+"""
+
+from __future__ import annotations
+
+import struct
+from pathlib import Path
+
+import numpy as np
+
+MAGIC = b"MUXQTNSR"
+DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.uint8): 2}
+DTYPES_REV = {0: np.float32, 1: np.int32, 2: np.uint8}
+
+
+def write_tensors(path, tensors: dict) -> None:
+    """tensors: {name: np.ndarray} (f32/i32/u8)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in DTYPES:
+                arr = arr.astype(np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_tensors(path) -> dict:
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:8] == MAGIC, "bad magic"
+    ver, count = struct.unpack_from("<II", data, 8)
+    assert ver == 1
+    off = 16
+    out = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<H", data, off)
+        off += 2
+        name = data[off: off + nlen].decode("utf-8")
+        off += nlen
+        dt, ndim = struct.unpack_from("<BB", data, off)
+        off += 2
+        dims = struct.unpack_from(f"<{ndim}I", data, off)
+        off += 4 * ndim
+        dtype = np.dtype(DTYPES_REV[dt])
+        n = int(np.prod(dims)) if ndim else 1
+        arr = np.frombuffer(data, dtype=dtype, count=n, offset=off).reshape(dims)
+        off += n * dtype.itemsize
+        out[name] = arr
+    return out
+
+
+def params_to_tensors(params: dict) -> dict:
+    """Flatten the model pytree into {path: array} with '/'-joined keys
+    (blocks indexed as block<NN>)."""
+    flat = {}
+    flat["wte"] = np.asarray(params["wte"])
+    flat["wpe"] = np.asarray(params["wpe"])
+    flat["ln_f/g"] = np.asarray(params["ln_f"]["g"])
+    flat["ln_f/b"] = np.asarray(params["ln_f"]["b"])
+    for i, blk in enumerate(params["blocks"]):
+        for mod, sub in blk.items():
+            for pname, arr in sub.items():
+                flat[f"block{i:02d}/{mod}/{pname}"] = np.asarray(arr)
+    return flat
+
+
+def tensors_to_params(flat: dict, n_layer: int) -> dict:
+    params = {
+        "wte": flat["wte"], "wpe": flat["wpe"],
+        "ln_f": {"g": flat["ln_f/g"], "b": flat["ln_f/b"]},
+        "blocks": [],
+    }
+    for i in range(n_layer):
+        blk: dict = {}
+        prefix = f"block{i:02d}/"
+        for key, arr in flat.items():
+            if key.startswith(prefix):
+                _, mod, pname = key.split("/")
+                blk.setdefault(mod, {})[pname] = arr
+        params["blocks"].append(blk)
+    return params

@@ -1,0 +1,15 @@
+"""L1 — Pallas kernels (build-time only; lowered into the exported HLO).
+
+Public surface:
+
+* :mod:`.ref` — pure-jnp oracle defining kernel semantics
+* :func:`.absmax.absmax_rows_pallas`, :func:`.absmax.fake_quant_pallas`
+* :func:`.muxq.muxq_decompose_pallas`
+* :func:`.qmatmul.quant_matmul_pallas`
+"""
+
+from . import ref  # noqa: F401
+from .absmax import absmax_rows_pallas, fake_quant_pallas  # noqa: F401
+from .muxq import muxq_decompose_pallas  # noqa: F401
+from .muxq_fused import muxq_fused_fq_pallas  # noqa: F401
+from .qmatmul import quant_matmul_pallas  # noqa: F401

@@ -1,0 +1,92 @@
+"""Pallas kernels for abs-max scale computation and fake quantization.
+
+Two kernels:
+
+* :func:`absmax_rows_pallas` — tiled reduction producing per-row abs-max
+  (the per-token granularity). Per-tensor reduces the row result once more
+  (cheap [M,1] -> [1,1] reduction, done in jnp by the caller).
+* :func:`fake_quant_pallas` — tiled quantize->dequantize given
+  precomputed scales at any granularity (per-row [M,1], per-col [1,N] or
+  per-tensor [1,1]) and a runtime qmax scalar.
+
+Hardware notes (DESIGN.md §Hardware-Adaptation): blocks are sized so one
+(bm, bn) activation tile plus its scale vector fit VMEM; the scale lives in
+a (bm,1)/(1,bn)/(1,1) block so the division broadcasts inside the VPU
+without re-reading HBM. On CPU we run interpret=True (Mosaic custom-calls
+cannot execute on the CPU PJRT plugin).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tiling import pick_block
+
+INTERPRET = True
+
+
+# --------------------------------------------------------------- abs-max
+def _absmax_rows_kernel(x_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    blk = jnp.max(jnp.abs(x_ref[...]), axis=1, keepdims=True)
+    o_ref[...] = jnp.maximum(o_ref[...], blk)
+
+
+def absmax_rows_pallas(x):
+    """Per-row abs-max of a 2-D array -> [M, 1]."""
+    m, n = x.shape
+    bm, bn = pick_block(m), pick_block(n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _absmax_rows_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), x.dtype),
+        interpret=INTERPRET,
+    )(x)
+
+
+# ------------------------------------------------------------ fake quant
+def _fake_quant_kernel(x_ref, s_ref, q_ref, o_ref):
+    s = s_ref[...]
+    q = q_ref[0, 0]
+    y = jnp.round(x_ref[...] / s)
+    o_ref[...] = jnp.clip(y, -q, q) * s
+
+
+def fake_quant_pallas(x, scale, qmax):
+    """quantize->dequantize with a precomputed ``scale`` broadcastable to
+    ``x`` ([M,1] per-row, [1,N] per-col, [1,1] per-tensor) and runtime
+    ``qmax`` (scalar or 0-d array)."""
+    m, n = x.shape
+    sm, sn = scale.shape
+    bm, bn = pick_block(m), pick_block(n)
+    if sm == m and sn == 1:
+        s_spec = pl.BlockSpec((bm, 1), lambda i, j: (i, 0))
+    elif sm == 1 and sn == n:
+        s_spec = pl.BlockSpec((1, bn), lambda i, j: (0, j))
+    elif sm == 1 and sn == 1:
+        s_spec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    else:
+        raise ValueError(f"unsupported scale shape {scale.shape} for x {x.shape}")
+    qarr = jnp.asarray(qmax, x.dtype).reshape(1, 1)
+    return pl.pallas_call(
+        _fake_quant_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            s_spec,
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=INTERPRET,
+    )(x, scale, qarr)

@@ -1,0 +1,63 @@
+"""Pallas kernel for the MUXQ outlier decomposition (paper §3.3).
+
+Fuses the three steps that a naive implementation would do in three HBM
+passes — apply the outlier mask, shift (divide by 2^exp_factor), and split
+into Body / Aux — into ONE pass over the activation tile:
+
+    Body = x * (mask * 2^-exp + (1 - mask))     (outlier cols shifted)
+    Aux  = x * (mask * 2^-exp)                  (only outlier cols, shifted)
+
+so that   x == Body + (2^exp - 1) * Aux   holds exactly in FP.
+
+The mask is a per-channel [1, N] vector computed by the caller (it is a
+column-wise reduction over the *whole* activation matrix, i.e. a different
+dataflow, and reuses :func:`..absmax.absmax_rows_pallas` on x^T). ``inv``
+(= 2^-exp_factor) arrives as a runtime (1,1) scalar so one compiled kernel
+serves every exp_factor ablation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tiling import pick_block
+
+INTERPRET = True
+
+
+def _muxq_kernel(x_ref, m_ref, inv_ref, body_ref, aux_ref):
+    x = x_ref[...]
+    mask = m_ref[...]
+    inv = inv_ref[0, 0]
+    shifted = mask * inv
+    body_ref[...] = x * (shifted + (1.0 - mask))
+    aux_ref[...] = x * shifted
+
+
+def muxq_decompose_pallas(x, mask, exp_factor):
+    """Decompose ``x`` [M,N] given per-channel ``mask`` [1,N] into
+    (Body, Aux). ``exp_factor`` may be a python int or a traced scalar."""
+    m, n = x.shape
+    bm, bn = pick_block(m), pick_block(n)
+    inv = jnp.exp2(-jnp.asarray(exp_factor, x.dtype)).reshape(1, 1)
+    body, aux = pl.pallas_call(
+        _muxq_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), x.dtype),
+            jax.ShapeDtypeStruct((m, n), x.dtype),
+        ],
+        interpret=INTERPRET,
+    )(x, mask, inv)
+    return body, aux

@@ -1,0 +1,86 @@
+"""Fused MUXQ fake-quant kernel (perf pass, EXPERIMENTS.md §Perf L1).
+
+The straightforward formulation runs FOUR memory passes over the
+activation matrix per projection:
+
+    decompose -> fake_quant(Body) -> fake_quant(Aux) -> reconstruct
+
+Each pass is a full HBM round-trip on real hardware (and a separate
+grid-loop in interpret mode). This kernel fuses all four into ONE pass:
+
+    shifted = x * 2^-exp
+    body    = mask ? shifted : x
+    aux     = mask ? shifted : 0
+    x_hat   = fq(body, s_body) + (2^exp - 1) * fq(aux, s_aux)
+
+The scales are still computed outside (global reductions; XLA fuses them
+with the surrounding graph). VMEM residency per grid step: one (bm, bn)
+input tile + two scale vectors + the output tile — identical to the
+plain fake-quant kernel, i.e. the fusion is free.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tiling import pick_block
+
+INTERPRET = True
+
+
+def _muxq_fused_kernel(x_ref, m_ref, sb_ref, sa_ref, q_ref, inv_ref, f_ref, o_ref):
+    x = x_ref[...]
+    mask = m_ref[...]
+    q = q_ref[0, 0]
+    inv = inv_ref[0, 0]
+    f = f_ref[0, 0]
+    sb = sb_ref[...]
+    sa = sa_ref[...]
+    shifted = x * inv
+    body = mask * shifted + (1.0 - mask) * x
+    aux = mask * shifted
+    body_q = jnp.clip(jnp.round(body / sb), -q, q) * sb
+    aux_q = jnp.clip(jnp.round(aux / sa), -q, q) * sa
+    o_ref[...] = body_q + f * aux_q
+
+
+def _scale_spec(shape, m, n, bm, bn):
+    if shape == (m, 1):
+        return pl.BlockSpec((bm, 1), lambda i, j: (i, 0))
+    if shape == (1, 1):
+        return pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    raise ValueError(f"unsupported scale shape {shape}")
+
+
+def muxq_fused_fq_pallas(x, mask, s_body, s_aux, qmax, exp_factor):
+    """One-pass MUXQ fake quantization.
+
+    x: [M, N]; mask: [1, N] (1.0 = outlier channel); s_body/s_aux: [M,1]
+    per-token or [1,1] per-tensor scales (computed on the decomposed
+    Body/Aux); qmax, exp_factor: runtime scalars.
+    """
+    m, n = x.shape
+    bm, bn = pick_block(m), pick_block(n)
+    e = jnp.asarray(exp_factor, x.dtype)
+    inv = jnp.exp2(-e).reshape(1, 1)
+    f = (jnp.exp2(e) - 1.0).reshape(1, 1)
+    qarr = jnp.asarray(qmax, x.dtype).reshape(1, 1)
+    scalar = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    return pl.pallas_call(
+        _muxq_fused_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            _scale_spec(s_body.shape, m, n, bm, bn),
+            _scale_spec(s_aux.shape, m, n, bm, bn),
+            scalar,
+            scalar,
+            scalar,
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=INTERPRET,
+    )(x, mask, s_body, s_aux, qarr, inv, f)

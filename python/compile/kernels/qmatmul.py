@@ -1,0 +1,81 @@
+"""Pallas kernel for the fused quantized matmul (the paper's compute
+hot-spot: every Conv1D projection in GPT-2 runs through this).
+
+True INT pipeline semantics (quantize -> integer matmul -> dequantize):
+
+    xq = clip(round(x / sx), -q, q)        # int grid, stored f32
+    wq = clip(round(w / sw), -q, q)
+    y  = (xq @ wq) * sx * sw
+
+The scales factor out of the integer matmul, so this is numerically equal
+to fake_quant(x) @ fake_quant(w) — pytest asserts both. Integer products
+accumulate exactly in f32 for K·q² < 2^24, which holds for every shape in
+this repo (K <= 1024, q <= 127); the Mosaic lowering would use an i32
+accumulator on the MXU instead.
+
+Grid is (M/bm, N/bn) with the full K dimension resident per step: K is at
+most d_ff = 1024 here, so an (bm=128, K=1024) f32 x-tile is 512 KiB —
+within VMEM with double buffering (see tiling.vmem_bytes_quant_matmul).
+For larger K this kernel would add a third grid axis with an accumulator.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tiling import pick_block
+
+INTERPRET = True
+
+
+def _qmm_kernel(x_ref, w_ref, sx_ref, sw_ref, q_ref, o_ref):
+    q = q_ref[0, 0]
+    sx = sx_ref[...]
+    sw = sw_ref[...]
+    xq = jnp.clip(jnp.round(x_ref[...] / sx), -q, q)
+    wq = jnp.clip(jnp.round(w_ref[...] / sw), -q, q)
+    acc = jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+    o_ref[...] = acc * (sx * sw)
+
+
+def quant_matmul_pallas(x, w, sx, sw, qmax):
+    """Fused quantized matmul.
+
+    x: [M, K]; w: [K, N]; sx: [M,1] or [1,1]; sw: [1,N] or [1,1];
+    qmax: runtime scalar. Returns [M, N] f32.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch {k} vs {k2}"
+    bm, bn = pick_block(m), pick_block(n)
+
+    if sx.shape == (m, 1):
+        sx_spec = pl.BlockSpec((bm, 1), lambda i, j: (i, 0))
+    elif sx.shape == (1, 1):
+        sx_spec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    else:
+        raise ValueError(f"bad sx shape {sx.shape}")
+    if sw.shape == (1, n):
+        sw_spec = pl.BlockSpec((1, bn), lambda i, j: (0, j))
+    elif sw.shape == (1, 1):
+        sw_spec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    else:
+        raise ValueError(f"bad sw shape {sw.shape}")
+
+    qarr = jnp.asarray(qmax, x.dtype).reshape(1, 1)
+    return pl.pallas_call(
+        _qmm_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            sx_spec,
+            sw_spec,
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w, sx, sw, qarr)

@@ -1,0 +1,122 @@
+"""Pure-jnp reference oracle for every Pallas kernel.
+
+These functions define the *semantics* the kernels must match bit-for-bit
+(pytest asserts allclose with tight tolerances; integer-valued paths must be
+exact). The rust quantization engine (``rust/src/quant``) is additionally
+cross-validated against goldens produced from these references.
+
+Conventions
+-----------
+* symmetric abs-max quantization, qmax = 2^(bits-1) - 1
+* rounding is round-half-to-even (jnp.round / IEEE rint) — the rust twin
+  implements rint explicitly because ``f32::round`` rounds half away from 0
+* scales are floored at EPS to avoid division by zero on all-zero slices
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def qmax_from_bits(bits):
+    """2^(bits-1) - 1 for scalar/array ``bits`` (float ok: runtime input)."""
+    return jnp.exp2(bits - 1.0) - 1.0
+
+
+def absmax_scale(x, qmax, axis=None):
+    """Abs-max scale over ``axis`` (None = per-tensor). Keeps dims so the
+    result broadcasts against x."""
+    m = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(m, EPS) / qmax
+
+
+def quantize(x, scale, qmax):
+    """FP -> integer grid (values are integers stored in f32)."""
+    return jnp.clip(jnp.round(x / scale), -qmax, qmax)
+
+
+def fake_quant(x, scale, qmax):
+    """quantize -> dequantize (the paper's evaluation pipeline, §4.3)."""
+    return quantize(x, scale, qmax) * scale
+
+
+def quant_matmul(x, w, sx, sw, qmax_x, qmax_w):
+    """True INT pipeline: quantize both operands, integer matmul, dequant.
+
+    ``sx`` broadcasts over x (per-token: [M,1]; per-tensor: [1,1]);
+    ``sw`` broadcasts over w's columns (per-out-channel: [1,N]; [1,1]).
+    Equals fake_quant(x)@fake_quant(w) exactly because the scales factor out
+    of the integer matmul.
+    """
+    xq = quantize(x, sx, qmax_x)
+    wq = quantize(w, sw, qmax_w)
+    return (xq @ wq) * (sx * sw)
+
+
+def outlier_mask(x, theta):
+    """Per-channel outlier mask (LLM.int8() criterion): channel j is an
+    outlier iff any row has |x[i, j]| > theta. Returns float [1, N]."""
+    return (jnp.max(jnp.abs(x), axis=0, keepdims=True) > theta).astype(x.dtype)
+
+
+def muxq_decompose(x, mask, exp_factor):
+    """MUXQ outlier decomposition (paper eqs. 4-6).
+
+    Body  = x with outlier columns divided by 2^exp_factor
+    Aux   = outlier columns divided by 2^exp_factor, zeros elsewhere
+    Identity: x == Body + (2^exp_factor - 1) * Aux   (exact in FP)
+    """
+    inv = jnp.exp2(-jnp.asarray(exp_factor, x.dtype))
+    body = x * (mask * inv + (1.0 - mask))
+    aux = x * (mask * inv)
+    return body, aux
+
+
+def muxq_reconstruct(body, aux, exp_factor):
+    f = jnp.exp2(jnp.asarray(exp_factor, body.dtype)) - 1.0
+    return body + f * aux
+
+
+def fq_naive(x, qmax, axis):
+    """Naive abs-max fake quant of a full tensor at given granularity."""
+    s = absmax_scale(x, qmax, axis=axis)
+    return fake_quant(x, s, qmax)
+
+
+def fq_muxq(x, qmax, axis, theta, exp_factor):
+    """MUXQ fake-quant of activations: decompose, quantize Body and Aux
+    each with their own (reduced-range) scales, reconstruct."""
+    mask = outlier_mask(x, theta)
+    body, aux = muxq_decompose(x, mask, exp_factor)
+    s_body = absmax_scale(body, qmax, axis=axis)
+    s_aux = absmax_scale(aux, qmax, axis=axis)
+    body_q = fake_quant(body, s_body, qmax)
+    aux_q = fake_quant(aux, s_aux, qmax)
+    return muxq_reconstruct(body_q, aux_q, exp_factor)
+
+
+def fq_llmint8_act(x, qmax, axis, theta):
+    """LLM.int8() activation side: outlier columns stay FP, the rest is
+    fake-quantized with scales computed over non-outlier entries only."""
+    mask = outlier_mask(x, theta)
+    x_norm = x * (1.0 - mask)
+    s = absmax_scale(x_norm, qmax, axis=axis)
+    return fake_quant(x_norm, s, qmax) + x * mask
+
+
+def fq_llmint8_weight(w, qmax, axis, mask):
+    """LLM.int8() weight side: rows feeding outlier channels stay FP."""
+    row_mask = mask.reshape(-1, 1)  # [K,1]
+    wq = fq_naive(w, qmax, axis)
+    return wq * (1.0 - row_mask) + w * row_mask
+
+
+def smooth_scales(act_absmax, w, alpha):
+    """SmoothQuant per-channel migration scale:
+    s_j = max|X_j|^alpha / max|W_j|^(1-alpha), clipped to >= EPS."""
+    wmax = jnp.max(jnp.abs(w), axis=1)  # per input channel
+    a = jnp.maximum(act_absmax, EPS) ** alpha
+    b = jnp.maximum(wmax, EPS) ** (1.0 - alpha)
+    return jnp.maximum(a / b, EPS)

@@ -1,0 +1,36 @@
+"""Block-size selection shared by all Pallas kernels.
+
+Pallas blocks must tile the array exactly (we never rely on implicit
+padding so the same BlockSpecs are valid for a real Mosaic lowering).
+``pick_block`` returns the largest power-of-two divisor of ``dim`` capped
+at ``max_block``.
+
+The 512 cap is the measured sweet spot (EXPERIMENTS.md §Perf L1): the
+elementwise kernels (fake-quant, fused MUXQ) are grid-overhead-bound, so
+larger tiles win, while a 512-row quant-matmul tile (512xK f32, K <= 1024
+-> 2 MiB) still fits the ~16 MiB VMEM of a TPU core with double-buffering.
+Raising the cap to 1024 gains ~12% in interpret mode but pushes the
+matmul kernel's working set to the VMEM edge on real hardware.
+"""
+
+from __future__ import annotations
+
+
+def pick_block(dim: int, max_block: int = 512) -> int:
+    """Largest power-of-two divisor of ``dim``, capped at ``max_block``."""
+    if dim <= 0:
+        raise ValueError("dim must be positive")
+    b = 1
+    while b * 2 <= max_block and dim % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def vmem_bytes_quant_matmul(bm: int, bk: int, bn: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM residency of one quant-matmul grid step (used by the
+    DESIGN.md §Perf roofline estimate and the L1 perf tests)."""
+    x_tile = bm * bk * dtype_bytes
+    w_tile = bk * bn * dtype_bytes
+    o_tile = bm * bn * dtype_bytes
+    scales = (bm + bn + 2) * dtype_bytes
+    return 2 * (x_tile + w_tile) + o_tile + scales  # 2x for double-buffering

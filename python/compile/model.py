@@ -1,0 +1,205 @@
+"""L2 — GPT-2 in JAX with pluggable quantized projections.
+
+Architecture follows HF GPT-2 (the paper's testbed): learned positional
+embeddings, pre-LN blocks, Conv1D-convention projections (weights stored
+[in, out]), GELU MLP with d_ff = 4d, tied LM head. Quantization is applied
+to exactly the four projections the paper targets (§4.3): ``c_attn``, the
+attention ``c_proj``, ``c_fc`` and the MLP ``c_proj``.
+
+Everything is a pure function over a params pytree, so the same code
+serves training (FP, no quant), calibration, and the exported eval /
+logits graphs (quantized, bit-widths as traced scalars).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, QuantConfig
+from .kernels import ref
+from .quant import quant_linear
+
+#: the four quantized projection sites, in block order
+PROJ_SITES = ("c_attn", "attn_proj", "c_fc", "mlp_proj")
+
+
+# ------------------------------------------------------------------ init
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    """GPT-2 initialization (N(0, 0.02), residual projections scaled by
+    1/sqrt(2L) as in the GPT-2 paper)."""
+    rng = np.random.default_rng(seed)
+    d, v, L = cfg.d_model, cfg.vocab_size, cfg.n_layer
+
+    def norm(*shape, std=0.02):
+        return jnp.asarray(rng.normal(0.0, std, size=shape).astype(np.float32))
+
+    res_std = 0.02 / np.sqrt(2.0 * L)
+    params = {
+        "wte": norm(v, d),
+        "wpe": norm(cfg.n_ctx, d, std=0.01),
+        "ln_f": {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)},
+        "blocks": [],
+    }
+    for _ in range(L):
+        params["blocks"].append({
+            "ln_1": {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)},
+            "c_attn": {"w": norm(d, 3 * d), "b": jnp.zeros((3 * d,), jnp.float32)},
+            "attn_proj": {"w": norm(d, d, std=res_std), "b": jnp.zeros((d,), jnp.float32)},
+            "ln_2": {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)},
+            "c_fc": {"w": norm(d, cfg.d_ff), "b": jnp.zeros((cfg.d_ff,), jnp.float32)},
+            "mlp_proj": {"w": norm(cfg.d_ff, d, std=res_std), "b": jnp.zeros((d,), jnp.float32)},
+        })
+    return params
+
+
+# --------------------------------------------------------------- helpers
+def layer_norm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def gelu(x):
+    """tanh-approximate GELU (the GPT-2 variant)."""
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x ** 3)))
+
+
+def _proj(x2d, wb, site, qctx):
+    """Apply one (possibly quantized) projection on flattened tokens."""
+    if qctx is None:
+        return x2d @ wb["w"] + wb["b"]
+    qcfg, ia_qmax, w_qmax, smooth = qctx
+    s = smooth.get(site) if smooth else None
+    return quant_linear(x2d, wb["w"], wb["b"], qcfg, ia_qmax, w_qmax, smooth_s=s)
+
+
+# --------------------------------------------------------------- forward
+def forward(params: dict, tokens, cfg: ModelConfig,
+            qcfg: Optional[QuantConfig] = None,
+            ia_bits=None, w_bits=None,
+            smooth_per_block: Optional[list] = None,
+            capture: Optional[dict] = None):
+    """Run the model. tokens: i32 [B, S] -> logits f32 [B, S, V].
+
+    * ``qcfg is None`` — pure FP forward (training / calibration).
+    * otherwise the four projection sites are quantized with runtime
+      ``ia_bits`` / ``w_bits`` scalars.
+    * ``capture`` — optional dict; when given, per-site input-activation
+      abs-max vectors are recorded (calibration & Fig.1 data).
+    """
+    B, S = tokens.shape
+    d = cfg.d_model
+    qctx_base = None
+    if qcfg is not None and qcfg.method != "fp16":
+        ia_qmax = ref.qmax_from_bits(jnp.asarray(ia_bits, jnp.float32))
+        w_qmax = ref.qmax_from_bits(jnp.asarray(w_bits, jnp.float32))
+    else:
+        ia_qmax = w_qmax = None
+
+    pos = jnp.arange(S)
+    h = params["wte"][tokens] + params["wpe"][pos][None, :, :]
+
+    for li, blk in enumerate(params["blocks"]):
+        smooth = smooth_per_block[li] if smooth_per_block else None
+        qctx = (qcfg, ia_qmax, w_qmax, smooth) if ia_qmax is not None else None
+
+        # ---- attention
+        x = layer_norm(h, blk["ln_1"]["g"], blk["ln_1"]["b"])
+        x2 = x.reshape(B * S, d)
+        if capture is not None:
+            capture[(li, "c_attn")] = jnp.max(jnp.abs(x2), axis=0)
+        qkv = _proj(x2, blk["c_attn"], "c_attn", qctx).reshape(B, S, 3 * d)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):
+            return t.reshape(B, S, cfg.n_head, cfg.d_head).transpose(0, 2, 1, 3)
+
+        q, k, v = heads(q), heads(k), heads(v)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(cfg.d_head)
+        causal = jnp.tril(jnp.ones((S, S), bool))
+        att = jnp.where(causal[None, None], att, -1e9)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        o = o.transpose(0, 2, 1, 3).reshape(B * S, d)
+        if capture is not None:
+            capture[(li, "attn_proj")] = jnp.max(jnp.abs(o), axis=0)
+        h = h + _proj(o, blk["attn_proj"], "attn_proj", qctx).reshape(B, S, d)
+
+        # ---- MLP
+        x = layer_norm(h, blk["ln_2"]["g"], blk["ln_2"]["b"])
+        x2 = x.reshape(B * S, d)
+        if capture is not None:
+            capture[(li, "c_fc")] = jnp.max(jnp.abs(x2), axis=0)
+        u = gelu(_proj(x2, blk["c_fc"], "c_fc", qctx))
+        if capture is not None:
+            capture[(li, "mlp_proj")] = jnp.max(jnp.abs(u), axis=0)
+        h = h + _proj(u, blk["mlp_proj"], "mlp_proj", qctx).reshape(B, S, d)
+
+    h = layer_norm(h, params["ln_f"]["g"], params["ln_f"]["b"])
+    logits = h @ params["wte"].T  # tied head (not quantized, per the paper)
+    return logits
+
+
+# ------------------------------------------------------------------ loss
+def nll_per_seq(params, tokens, cfg, **kw):
+    """Per-sequence next-token NLL sums and token counts ([B], [B]).
+
+    Predicts tokens[:, 1:] from tokens[:, :-1]. Per-sequence outputs let
+    the rust dynamic batcher serve *mixed* batches (each request gets its
+    own nll back, padding rows are discarded) while Table-1 shards still
+    aggregate exactly: ppl = exp(sum nll / sum count).
+    """
+    logits = forward(params, tokens, cfg, **kw)[:, :-1]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tok_ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    counts = jnp.full((tokens.shape[0],), tokens.shape[1] - 1, jnp.float32)
+    return -jnp.sum(tok_ll, axis=1), counts
+
+
+def nll_sums(params, tokens, cfg, **kw):
+    """Batch-summed NLL and token count (training / quick eval)."""
+    s, c = nll_per_seq(params, tokens, cfg, **kw)
+    return jnp.sum(s), jnp.sum(c)
+
+
+def lm_loss(params, tokens, cfg):
+    s, c = nll_sums(params, tokens, cfg)
+    return s / c
+
+
+# -------------------------------------------------- outlier injection
+def inject_outliers(params: dict, cfg: ModelConfig, channels_per_block: int,
+                    alpha: float, seed: int = 7) -> dict:
+    """Function-preserving outlier injection (DESIGN.md §2).
+
+    For each block and each of the two post-LN sites, scale ``k`` LN gain
+    channels by ``alpha`` and the matching rows of the consuming projection
+    by 1/alpha. The FP forward is unchanged (the factors cancel through
+    the linear map) but the *activations* feeding c_attn / c_fc now carry
+    genuine outlier channels — the exact phenomenon the paper handles.
+    LN beta is scaled too so the affine part also cancels.
+    """
+    rng = np.random.default_rng(seed)
+    out = jax.tree_util.tree_map(lambda t: t, params)  # shallow-ish copy
+    new_blocks = []
+    for blk in out["blocks"]:
+        nb = {k: dict(v) for k, v in blk.items()}
+        for ln_name, proj_name in (("ln_1", "c_attn"), ("ln_2", "c_fc")):
+            d = nb[ln_name]["g"].shape[0]
+            ch = rng.choice(d, size=channels_per_block, replace=False)
+            scale = np.ones((d,), np.float32)
+            scale[ch] = alpha
+            s = jnp.asarray(scale)
+            nb[ln_name] = {"g": nb[ln_name]["g"] * s, "b": nb[ln_name]["b"] * s}
+            nb[proj_name] = {
+                "w": nb[proj_name]["w"] / s[:, None],
+                "b": nb[proj_name]["b"],
+            }
+        new_blocks.append(nb)
+    out["blocks"] = new_blocks
+    return out

@@ -1,0 +1,86 @@
+"""Deterministic 64-bit PRNG (splitmix64) mirrored bit-for-bit in
+``rust/src/data/prng.rs``.
+
+The synthetic-corpus generator and workload generators on both sides of the
+language boundary must be able to reproduce identical streams, so we do not
+use ``random``/``numpy`` here. splitmix64 is the standard seeding PRNG from
+Vigna (2015): tiny, fast, passes BigCrush when used as a stream.
+"""
+
+from __future__ import annotations
+
+MASK64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """splitmix64 stream. ``next_u64`` advances the state by the golden
+    gamma and finalizes with the murmur3-style mixer."""
+
+    __slots__ = ("state",)
+
+    def __init__(self, seed: int) -> None:
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def next_f64(self) -> float:
+        """Uniform in [0, 1) with 53 bits of entropy (same construction as
+        the rust twin: take the top 53 bits)."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def next_below(self, n: int) -> int:
+        """Uniform integer in [0, n). Uses the (slightly biased for huge n,
+        identical on both sides) multiply-shift reduction."""
+        if n <= 0:
+            raise ValueError("next_below requires n > 0")
+        return (self.next_u64() * n) >> 64
+
+    def next_range(self, lo: int, hi: int) -> int:
+        """Uniform integer in [lo, hi] inclusive."""
+        if hi < lo:
+            raise ValueError("next_range requires hi >= lo")
+        return lo + self.next_below(hi - lo + 1)
+
+
+def mix(*vals: int) -> int:
+    """Hash a tuple of integers into a 64-bit value, deterministically and
+    identically to the rust twin (fold through one splitmix64 step each)."""
+    h = 0x243F6A8885A308D3  # pi fractional bits
+    for v in vals:
+        h = (h ^ (v & MASK64)) & MASK64
+        # one splitmix64 finalization round per element
+        h = (h + 0x9E3779B97F4A7C15) & MASK64
+        h = ((h ^ (h >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        h = ((h ^ (h >> 27)) * 0x94D049BB133111EB) & MASK64
+        h = (h ^ (h >> 31)) & MASK64
+    return h
+
+
+def zipf_index(rng: SplitMix64, n: int, s: float = 1.05) -> int:
+    """Sample an index in [0, n) with an (approximately) Zipfian
+    distribution of exponent ``s`` via inverse-CDF on the harmonic weights.
+
+    To stay cheap and identical across languages we use the closed-form
+    approximation: u ~ U(0,1), idx = floor(n^(u^k)) - 1 style curves are
+    fiddly, so instead we use rejection-free bounded pareto:
+        x = (1 - u)^(-1/(s-epsilon_guard)) ... (heavy tail clipped to n)
+    """
+    u = rng.next_f64()
+    # bounded Pareto inverse CDF over [1, n]
+    alpha = max(s, 0.2)
+    lo = 1.0
+    hi = float(n)
+    num = (hi ** alpha) * (lo ** alpha)
+    den = u * (lo ** alpha) + (1.0 - u) * (hi ** alpha)
+    x = (num / den) ** (1.0 / alpha)
+    idx = int(x) - 1
+    if idx < 0:
+        idx = 0
+    if idx >= n:
+        idx = n - 1
+    return idx

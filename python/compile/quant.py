@@ -1,0 +1,172 @@
+"""L2 quantization ops: method dispatch over the L1 Pallas kernels.
+
+This is the glue between the model (which sees one ``quant_linear``
+entry point) and the kernels. Responsibilities:
+
+* compute scales / outlier masks (cheap reductions, left to XLA so they
+  fuse with surrounding ops);
+* dispatch on method (fp16 | naive | muxq | llmint8) and granularity
+  (per-vector | per-tensor);
+* optionally apply the SmoothQuant difficulty migration first;
+* call the Pallas kernels for the bandwidth-bound transforms
+  (fake-quant, MUXQ decomposition).
+
+Bit-widths arrive as *traced scalars* (runtime inputs of the exported
+HLO), so a single executable serves the entire bit sweep of Tables 1–2.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax.numpy as jnp
+
+from .config import QuantConfig
+from .kernels import (
+    fake_quant_pallas,
+    muxq_decompose_pallas,
+    muxq_fused_fq_pallas,
+    quant_matmul_pallas,
+)
+from .kernels import ref
+
+# Set False to bypass pallas_call and use the jnp reference (used by the
+# AOT exporter's --no-pallas escape hatch and by A/B tests).
+USE_PALLAS = True
+
+
+def _fq(x, scale, qmax):
+    if USE_PALLAS:
+        return fake_quant_pallas(x, scale, qmax)
+    return ref.fake_quant(x, scale, qmax)
+
+
+def _decompose(x, mask, exp_factor):
+    if USE_PALLAS:
+        return muxq_decompose_pallas(x, mask, exp_factor)
+    return ref.muxq_decompose(x, mask, exp_factor)
+
+
+def _act_axis(granularity: str):
+    """Reduction axis for activation scales on [T, K]."""
+    return 1 if granularity == "per-vector" else None  # per-token rows
+
+
+def _w_axis(granularity: str):
+    """Reduction axis for weight scales on [K, N]."""
+    return 0 if granularity == "per-vector" else None  # per-out-channel
+
+
+def _scale(x, qmax, axis):
+    s = ref.absmax_scale(x, qmax, axis=axis)
+    if axis is None:
+        s = s.reshape(1, 1)
+    return s
+
+
+def _scale_from_absmax(abs_x, qmax, axis):
+    """Scale from a precomputed |x| array (avoids re-materializing the
+    decomposed Body/Aux just to reduce them)."""
+    m = jnp.max(abs_x, axis=axis, keepdims=axis is not None)
+    s = jnp.maximum(m, ref.EPS) / qmax
+    if axis is None:
+        s = s.reshape(1, 1)
+    return s
+
+
+def quantize_weight(w, qcfg: QuantConfig, w_qmax, mask=None):
+    """Fake-quantize a weight matrix [K, N] per the variant config.
+
+    ``mask`` ([1,K] outlier-channel mask) is only consulted by llmint8,
+    which keeps the rows feeding outlier channels in FP.
+    """
+    axis = _w_axis(qcfg.granularity)
+    sw = _scale(w, w_qmax, axis)
+    wq = _fq(w, sw, w_qmax)
+    if qcfg.method == "llmint8" and mask is not None:
+        row_mask = mask.reshape(-1, 1)
+        wq = wq * (1.0 - row_mask) + w * row_mask
+    return wq
+
+
+def quantize_act(x, qcfg: QuantConfig, ia_qmax):
+    """Fake-quantize activations [T, K] per the variant config. Returns
+    (x_hat, mask) — mask is needed by llmint8's weight side."""
+    axis = _act_axis(qcfg.granularity)
+    if qcfg.method == "fp16":
+        return x, None
+    if qcfg.method == "naive":
+        sx = _scale(x, ia_qmax, axis)
+        return _fq(x, sx, ia_qmax), None
+
+    mask = ref.outlier_mask(x, qcfg.theta)
+    if qcfg.method == "muxq":
+        # scales are computed on the decomposed Body/Aux via the cheap
+        # closed form (Body/Aux are elementwise masks of x, so their
+        # abs-max reductions can be taken on masked views without
+        # materializing them)
+        inv = jnp.exp2(-jnp.asarray(float(qcfg.exp_factor), x.dtype))
+        shifted = jnp.abs(x) * inv
+        body_abs = jnp.where(mask > 0, shifted, jnp.abs(x))
+        aux_abs = shifted * mask
+        s_body = _scale_from_absmax(body_abs, ia_qmax, axis)
+        s_aux = _scale_from_absmax(aux_abs, ia_qmax, axis)
+        if USE_PALLAS:
+            # fused single-pass kernel (EXPERIMENTS.md §Perf L1): one HBM
+            # round-trip instead of four
+            return muxq_fused_fq_pallas(
+                x, mask, s_body, s_aux, ia_qmax, float(qcfg.exp_factor)
+            ), mask
+        body, aux = _decompose(x, mask, float(qcfg.exp_factor))
+        body_q = _fq(body, s_body, ia_qmax)
+        aux_q = _fq(aux, s_aux, ia_qmax)
+        return ref.muxq_reconstruct(body_q, aux_q, float(qcfg.exp_factor)), mask
+    if qcfg.method == "llmint8":
+        x_norm = x * (1.0 - mask)
+        sx = _scale(x_norm, ia_qmax, axis)
+        return _fq(x_norm, sx, ia_qmax) + x * mask, mask
+    raise ValueError(f"unknown method {qcfg.method!r}")
+
+
+def quant_linear(x, w, b, qcfg: QuantConfig, ia_qmax, w_qmax, smooth_s=None):
+    """Quantized linear y = Q(x') @ Q(w') + b with optional SmoothQuant
+    migration x' = x/s, w' = s*w (``smooth_s``: per-channel [K] scales from
+    calibration).
+
+    x: [T, K] activations; w: [K, N]; b: [N] or None.
+    """
+    if qcfg.method == "fp16":
+        y = x @ w
+        return y + b if b is not None else y
+
+    if qcfg.smooth and smooth_s is not None:
+        x = x / smooth_s.reshape(1, -1)
+        w = w * smooth_s.reshape(-1, 1)
+
+    x_hat, mask = quantize_act(x, qcfg, ia_qmax)
+    w_hat = quantize_weight(w, qcfg, w_qmax, mask=mask)
+    y = x_hat @ w_hat
+    return y + b if b is not None else y
+
+
+def quant_linear_int(x, w, qcfg: QuantConfig, ia_qmax, w_qmax):
+    """True INT pipeline variant (quantize -> int matmul -> dequant) via
+    the fused Pallas kernel — the serving hot path. Only 'naive' and
+    'muxq' are expressible as pure INT GEMMs (that is the paper's point:
+    llmint8's FP16 side stays FP)."""
+    axis_x = _act_axis(qcfg.granularity)
+    axis_w = _w_axis(qcfg.granularity)
+    sw = _scale(w, w_qmax, axis_w)
+    if qcfg.method == "naive":
+        sx = _scale(x, ia_qmax, axis_x)
+        return quant_matmul_pallas(x, w, sx, sw, ia_qmax)
+    if qcfg.method == "muxq":
+        mask = ref.outlier_mask(x, qcfg.theta)
+        body, aux = _decompose(x, mask, float(qcfg.exp_factor))
+        s_body = _scale(body, ia_qmax, axis_x)
+        s_aux = _scale(aux, ia_qmax, axis_x)
+        y_body = quant_matmul_pallas(body, w, s_body, sw, ia_qmax)
+        y_aux = quant_matmul_pallas(aux, w, s_aux, sw, ia_qmax)
+        f = jnp.exp2(float(qcfg.exp_factor)) - 1.0
+        return y_body + f * y_aux
+    raise ValueError(f"int pipeline supports naive|muxq, got {qcfg.method!r}")

@@ -1,0 +1,94 @@
+"""Build-time training of the sim GPT-2 family on the synthetic corpus.
+
+Hand-rolled AdamW (optax is not available in the offline image) with cosine
+decay + linear warmup. Training is FP32 and quantization-free; quantization
+is strictly post-training, as in the paper.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .model import init_params, lm_loss
+
+
+@dataclass
+class TrainResult:
+    params: dict
+    final_loss: float
+    steps: int
+    seconds: float
+    loss_curve: list
+
+
+def batches(token_ids: np.ndarray, cfg: ModelConfig, steps: int, seed: int = 1):
+    """Yield [batch, n_ctx+? ] -> we use windows of exactly n_ctx tokens."""
+    rng = np.random.default_rng(seed)
+    n = len(token_ids) - cfg.n_ctx - 1
+    if n <= 0:
+        raise ValueError("corpus too small for context length")
+    for _ in range(steps):
+        starts = rng.integers(0, n, size=cfg.train_batch)
+        yield np.stack([token_ids[s: s + cfg.n_ctx] for s in starts]).astype(np.int32)
+
+
+def adamw_init(params):
+    zeros = lambda t: jnp.zeros_like(t)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "t": jnp.zeros((), jnp.float32),
+    }
+
+
+def adamw_update(params, grads, state, lr, *, b1=0.9, b2=0.99, eps=1e-8,
+                 weight_decay=0.01):
+    t = state["t"] + 1.0
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, m_, v_):
+        step = lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        return p - step - lr * weight_decay * p
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def cosine_lr(base_lr: float, step, total: int, warmup: int = 40):
+    warm = base_lr * (step + 1.0) / warmup
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def train(cfg: ModelConfig, token_ids: np.ndarray, seed: int = 0,
+          log_every: int = 50, log=print) -> TrainResult:
+    params = init_params(cfg, seed=seed)
+    opt = adamw_init(params)
+    total = cfg.train_steps
+
+    @jax.jit
+    def step_fn(params, opt, batch, step):
+        loss, grads = jax.value_and_grad(lm_loss)(params, batch, cfg)
+        lr = cosine_lr(cfg.lr, step, total)
+        params, opt = adamw_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    t0 = time.time()
+    curve = []
+    for i, batch in enumerate(batches(token_ids, cfg, total, seed=seed + 1)):
+        params, opt, loss = step_fn(params, opt, jnp.asarray(batch), jnp.asarray(i, jnp.float32))
+        if i % log_every == 0 or i == total - 1:
+            lv = float(loss)
+            curve.append((i, lv))
+            log(f"  [{cfg.name}] step {i:4d}/{total} loss {lv:.4f} ppl {np.exp(lv):.2f}")
+    return TrainResult(params, float(loss), total, time.time() - t0, curve)

@@ -1,0 +1,106 @@
+"""AOT export pipeline tests (tiny configs — the full build is exercised
+by `make artifacts`)."""
+
+import json
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.aot import build_eval_fn, sorted_weight_names, to_hlo_text
+from compile.config import ModelConfig, QuantConfig
+from compile.iohelpers import (params_to_tensors, read_tensors,
+                               tensors_to_params, write_tensors)
+from compile.model import init_params, nll_sums
+
+CFG = ModelConfig("t", n_layer=1, d_model=32, n_head=2, n_ctx=16, vocab_size=64)
+
+
+@pytest.fixture(scope="module")
+def flat():
+    return params_to_tensors(init_params(CFG, seed=3))
+
+
+def test_tensor_container_roundtrip(tmp_path, flat):
+    p = tmp_path / "w.bin"
+    write_tensors(p, flat)
+    back = read_tensors(p)
+    assert set(back) == set(flat)
+    for k in flat:
+        np.testing.assert_array_equal(back[k], np.asarray(flat[k]))
+
+
+def test_tensors_to_params_inverse(flat):
+    params = tensors_to_params(flat, CFG.n_layer)
+    flat2 = params_to_tensors(params)
+    assert set(flat2) == set(flat)
+
+
+def test_sorted_names_stable(flat):
+    names = sorted_weight_names(flat)
+    assert names == sorted(names)
+    assert "wte" in names
+
+
+@pytest.mark.parametrize("method,gran", [
+    ("fp16", "per-tensor"),
+    ("naive", "per-tensor"),
+    ("muxq", "per-vector"),
+    ("llmint8", "per-tensor"),
+])
+def test_export_hlo_text(flat, method, gran):
+    """Every variant lowers to parseable HLO text with the agreed input
+    signature (weights sorted, tokens, ia_bits, w_bits)."""
+    names = sorted_weight_names(flat)
+    specs = [jax.ShapeDtypeStruct(flat[n].shape, jnp.float32) for n in names]
+    tok = jax.ShapeDtypeStruct((2, CFG.n_ctx), jnp.int32)
+    bit = jax.ShapeDtypeStruct((), jnp.float32)
+    fn = build_eval_fn(CFG, QuantConfig(method, gran), names, "eval")
+    lowered = jax.jit(fn).lower(*specs, tok, bit, bit)
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert text.count("parameter") >= len(names) + 3
+
+
+def test_exported_fn_matches_direct_eval(flat):
+    """The closed-over export fn computes the same nll as calling the
+    model directly — guards against weight-ordering bugs."""
+    names = sorted_weight_names(flat)
+    fn = build_eval_fn(CFG, QuantConfig("muxq", "per-tensor"), names, "eval")
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, 64, size=(2, 16)).astype(np.int32))
+    args = [jnp.asarray(flat[n]) for n in names] + [toks,
+            jnp.asarray(8.0, jnp.float32), jnp.asarray(8.0, jnp.float32)]
+    s, c = fn(*args)  # per-sequence arrays [B]
+    assert s.shape == (2,) and c.shape == (2,)
+    params = tensors_to_params(flat, CFG.n_layer)
+    s2, c2 = nll_sums(params, toks, CFG, qcfg=QuantConfig("muxq", "per-tensor"),
+                      ia_bits=8.0, w_bits=8.0)
+    assert float(jnp.sum(c)) == float(c2)
+    np.testing.assert_allclose(float(jnp.sum(s)), float(s2), rtol=1e-5)
+
+
+def test_logits_kind_shape(flat):
+    names = sorted_weight_names(flat)
+    fn = build_eval_fn(CFG, QuantConfig("fp16", "per-tensor"), names, "logits")
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, 64, size=(2, 16)).astype(np.int32))
+    args = [jnp.asarray(flat[n]) for n in names] + [toks,
+            jnp.asarray(8.0, jnp.float32), jnp.asarray(8.0, jnp.float32)]
+    (logits,) = fn(*args)
+    assert logits.shape == (2, 16, 64)
+
+
+def test_manifest_written_by_full_build():
+    """If the background artifact build has completed, validate manifest
+    integrity (skipped otherwise)."""
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+    mf = root / "manifest.json"
+    if not mf.exists():
+        pytest.skip("full artifacts not built yet")
+    entries = json.loads(mf.read_text())
+    assert len(entries) >= 20
+    for e in entries:
+        assert (root / "hlo" / e["file"]).exists(), e["file"]
+        assert (root / e["weights"]).exists()

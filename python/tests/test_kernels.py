@@ -1,0 +1,204 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle.
+
+hypothesis sweeps shapes and value distributions (including adversarial
+outlier structure); assertions are exact where the math is exact.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    absmax_rows_pallas,
+    fake_quant_pallas,
+    muxq_decompose_pallas,
+    quant_matmul_pallas,
+    ref,
+)
+from compile.kernels.tiling import pick_block, vmem_bytes_quant_matmul
+
+DIMS = st.sampled_from([1, 2, 3, 4, 8, 12, 16, 24, 32, 48, 64, 96, 128, 160, 256])
+BITS = st.sampled_from([4.0, 5.0, 6.0, 7.0, 8.0])
+SEED = st.integers(0, 2**31 - 1)
+
+
+def rand(shape, seed, outlier_cols=0, outlier_scale=20.0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=shape).astype(np.float32)
+    if outlier_cols:
+        cols = rng.choice(shape[1], size=min(outlier_cols, shape[1]), replace=False)
+        x[:, cols] *= outlier_scale
+    return x
+
+
+# ------------------------------------------------------------- pick_block
+@given(st.integers(1, 4096))
+def test_pick_block_divides(dim):
+    b = pick_block(dim)
+    assert dim % b == 0
+    assert b <= 512
+    assert b & (b - 1) == 0  # power of two
+
+
+def test_vmem_estimate_within_budget():
+    # the default tiling must fit a 16 MiB VMEM with double-buffering
+    assert vmem_bytes_quant_matmul(128, 1024, 128) < 16 * 2**20
+    assert vmem_bytes_quant_matmul(512, 1024, 512) < 16 * 2**20
+
+
+# ---------------------------------------------------------------- absmax
+@settings(deadline=None, max_examples=25)
+@given(DIMS, DIMS, SEED)
+def test_absmax_rows(m, n, seed):
+    x = jnp.asarray(rand((m, n), seed))
+    got = absmax_rows_pallas(x)
+    want = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------------ fake quant
+@settings(deadline=None, max_examples=25)
+@given(DIMS, DIMS, BITS, SEED, st.sampled_from(["row", "col", "tensor"]))
+def test_fake_quant_matches_ref(m, n, bits, seed, gran):
+    x = jnp.asarray(rand((m, n), seed, outlier_cols=1))
+    q = float(2 ** (bits - 1) - 1)
+    axis = {"row": 1, "col": 0, "tensor": None}[gran]
+    s = ref.absmax_scale(x, q, axis=axis)
+    if axis is None:
+        s = s.reshape(1, 1)
+    got = fake_quant_pallas(x, s, q)
+    want = ref.fake_quant(x, s, q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fake_quant_idempotent():
+    x = jnp.asarray(rand((32, 64), 3))
+    q = 127.0
+    s = ref.absmax_scale(x, q).reshape(1, 1)
+    once = fake_quant_pallas(x, s, q)
+    twice = fake_quant_pallas(once, s, q)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), rtol=1e-6)
+
+
+def test_fake_quant_levels_bounded():
+    x = jnp.asarray(rand((16, 16), 9) * 100)
+    for bits in (4.0, 8.0):
+        q = float(2 ** (bits - 1) - 1)
+        s = ref.absmax_scale(x, q).reshape(1, 1)
+        y = np.asarray(fake_quant_pallas(x, s, q))
+        levels = np.unique(np.round(y / np.asarray(s)))
+        assert levels.size <= 2 * q + 1
+        assert np.abs(levels).max() <= q
+
+
+# ----------------------------------------------------------------- muxq
+@settings(deadline=None, max_examples=25)
+@given(DIMS, DIMS, SEED, st.sampled_from([1, 2, 3, 4]))
+def test_muxq_decompose_matches_ref_and_reconstructs(m, n, seed, exp):
+    x = jnp.asarray(rand((m, n), seed, outlier_cols=2))
+    mask = ref.outlier_mask(x, 6.0)
+    body, aux = muxq_decompose_pallas(x, mask, float(exp))
+    body_r, aux_r = ref.muxq_decompose(x, mask, float(exp))
+    np.testing.assert_array_equal(np.asarray(body), np.asarray(body_r))
+    np.testing.assert_array_equal(np.asarray(aux), np.asarray(aux_r))
+    # exact FP identity (paper eq. 6)
+    rec = ref.muxq_reconstruct(body, aux, float(exp))
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(x), rtol=1e-6, atol=1e-6)
+
+
+def test_muxq_reduces_outlier_magnitude():
+    x = jnp.asarray(rand((64, 32), 0, outlier_cols=3, outlier_scale=30.0))
+    mask = ref.outlier_mask(x, 6.0)
+    assert np.asarray(mask).sum() >= 3
+    body, _ = muxq_decompose_pallas(x, mask, 2.0)
+    body_max = np.abs(np.asarray(body)).max()
+    x_max = np.abs(np.asarray(x)).max()
+    assert body_max <= x_max / 4 + 1e-6
+
+
+def test_muxq_no_outliers_is_identity():
+    x = jnp.asarray(rand((16, 16), 5) * 0.1)  # everything far below theta
+    mask = ref.outlier_mask(x, 6.0)
+    assert np.asarray(mask).sum() == 0
+    body, aux = muxq_decompose_pallas(x, mask, 2.0)
+    np.testing.assert_array_equal(np.asarray(body), np.asarray(x))
+    assert np.abs(np.asarray(aux)).max() == 0.0
+
+
+# --------------------------------------------------------------- qmatmul
+@settings(deadline=None, max_examples=20)
+@given(DIMS, DIMS, DIMS, BITS, SEED, st.booleans())
+def test_quant_matmul_matches_ref(m, k, n, bits, seed, per_tensor):
+    x = jnp.asarray(rand((m, k), seed, outlier_cols=1))
+    w = jnp.asarray(rand((k, n), seed + 1))
+    q = float(2 ** (bits - 1) - 1)
+    if per_tensor:
+        sx = ref.absmax_scale(x, q).reshape(1, 1)
+        sw = ref.absmax_scale(w, q).reshape(1, 1)
+    else:
+        sx = ref.absmax_scale(x, q, axis=1)
+        sw = ref.absmax_scale(w, q, axis=0)
+    got = quant_matmul_pallas(x, w, sx, sw, q)
+    want = ref.quant_matmul(x, w, sx, sw, q, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_quant_matmul_equals_fakequant_matmul():
+    """quantize->matmul->dequant == fakequant(x) @ fakequant(w) (the scales
+    factor out of the integer matmul) — the identity that makes the
+    paper's fake-quant evaluation representative of the INT pipeline."""
+    x = jnp.asarray(rand((64, 96), 11, outlier_cols=2))
+    w = jnp.asarray(rand((96, 32), 12))
+    q = 127.0
+    sx = ref.absmax_scale(x, q, axis=1)
+    sw = ref.absmax_scale(w, q, axis=0)
+    got = quant_matmul_pallas(x, w, sx, sw, q)
+    fq = ref.fake_quant(x, sx, q) @ ref.fake_quant(w, sw, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(fq), rtol=1e-5, atol=1e-4)
+
+
+def test_quant_error_shrinks_with_bits():
+    x = jnp.asarray(rand((64, 64), 21))
+    w = jnp.asarray(rand((64, 64), 22))
+    exact = np.asarray(x) @ np.asarray(w)
+    errs = []
+    for bits in (4.0, 6.0, 8.0):
+        q = float(2 ** (bits - 1) - 1)
+        sx = ref.absmax_scale(x, q, axis=1)
+        sw = ref.absmax_scale(w, q, axis=0)
+        y = np.asarray(quant_matmul_pallas(x, w, sx, sw, q))
+        errs.append(np.abs(y - exact).mean())
+    assert errs[0] > errs[1] > errs[2]
+
+
+# ----------------------------------------------------------- muxq fused
+@settings(deadline=None, max_examples=20)
+@given(DIMS, DIMS, BITS, SEED, st.sampled_from([1, 2, 3]), st.booleans())
+def test_muxq_fused_matches_four_pass_reference(m, n, bits, seed, exp, per_row):
+    """The fused single-pass kernel (perf pass, §Perf L1) must equal the
+    decompose -> fq -> fq -> reconstruct reference exactly."""
+    from compile.kernels import muxq_fused_fq_pallas
+    x = jnp.asarray(rand((m, n), seed, outlier_cols=2))
+    q = float(2 ** (bits - 1) - 1)
+    axis = 1 if per_row else None
+    mask = ref.outlier_mask(x, 6.0)
+    body, aux = ref.muxq_decompose(x, mask, float(exp))
+    s_body = ref.absmax_scale(body, q, axis=axis)
+    s_aux = ref.absmax_scale(aux, q, axis=axis)
+    if axis is None:
+        s_body = s_body.reshape(1, 1)
+        s_aux = s_aux.reshape(1, 1)
+    got = muxq_fused_fq_pallas(x, mask, s_body, s_aux, q, float(exp))
+    want = ref.muxq_reconstruct(
+        ref.fake_quant(body, s_body, q), ref.fake_quant(aux, s_aux, q), float(exp))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_muxq_fused_equals_fq_muxq_end_to_end():
+    from compile.quant import quantize_act
+    from compile.config import QuantConfig
+    x = jnp.asarray(rand((64, 96), 33, outlier_cols=3, outlier_scale=25.0))
+    got, _ = quantize_act(x, QuantConfig("muxq", "per-tensor"), 63.0)
+    want = ref.fq_muxq(x, 63.0, None, 6.0, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)

@@ -1,0 +1,86 @@
+//! Coordinator-substrate benchmarks: batcher formation, threadpool
+//! dispatch, metrics overhead — the L3 costs that must stay far below
+//! one model execution (~ms). Run: `cargo bench --bench bench_coordinator`.
+
+use muxq::coordinator::batcher::{BatchKey, Batcher, BatcherConfig};
+use muxq::coordinator::request::{Pending, ScoreRequest};
+use muxq::coordinator::VariantKey;
+use muxq::util::bench::Bencher;
+use muxq::util::metrics::Registry;
+use muxq::util::threadpool::ThreadPool;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+fn pending(variant: &VariantKey) -> Pending {
+    let (tx, _rx) = mpsc::channel();
+    // _rx dropped: send() will fail silently, fine for formation benches
+    Pending {
+        req: ScoreRequest {
+            variant: variant.clone(),
+            tokens: vec![0; 128],
+            ia_bits: 8.0,
+            w_bits: 8.0,
+        },
+        submitted: Instant::now(),
+        tx,
+    }
+}
+
+fn main() {
+    let mut b = Bencher::default();
+    Bencher::header("batcher (max_batch=8)");
+    let variant = VariantKey::eval("sim-small", "muxq-pt");
+    let key = BatchKey::of(&variant, 8.0, 8.0);
+
+    b.bench("push+form_full_batch(8 reqs)", || {
+        let batcher = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_secs(1),
+            max_queue: 64,
+        });
+        for _ in 0..8 {
+            batcher.push(key.clone(), pending(&variant)).unwrap();
+        }
+        batcher.next_batch().unwrap().requests.len()
+    });
+
+    b.bench("push_only", || {
+        let batcher = Batcher::new(BatcherConfig::default());
+        batcher.push(key.clone(), pending(&variant)).unwrap();
+    });
+
+    Bencher::header("threadpool (4 workers)");
+    let pool = ThreadPool::new(4, 256);
+    let counter = Arc::new(AtomicU64::new(0));
+    b.bench("submit+execute 64 noop jobs", || {
+        let done = Arc::new(AtomicU64::new(0));
+        for _ in 0..64 {
+            let d = done.clone();
+            pool.submit(move || {
+                d.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
+        }
+        while done.load(Ordering::Relaxed) < 64 {
+            std::hint::spin_loop();
+        }
+    });
+    drop(counter);
+
+    Bencher::header("metrics");
+    let reg = Registry::default();
+    let c = reg.counter("bench");
+    let h = reg.histogram("bench");
+    b.bench("counter_inc x1000", || {
+        for _ in 0..1000 {
+            c.inc();
+        }
+    });
+    b.bench("histogram_record x1000", || {
+        for i in 0..1000u64 {
+            h.record(Duration::from_micros(i + 1));
+        }
+    });
+    b.bench("histogram_quantile", || h.quantile(0.95));
+}

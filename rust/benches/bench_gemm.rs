@@ -1,0 +1,67 @@
+//! GEMM pipeline benchmarks: FP32 reference vs the true-INT pipelines of
+//! each method (the deployment-path cost the paper argues about, here on
+//! CPU; the NPU projection lives in bench_npusim / npu_latency).
+//! Run: `cargo bench --bench bench_gemm`.
+
+use muxq::data::prng::SplitMix64;
+use muxq::quant::gemm::{matmul_f32, quant_matmul};
+use muxq::quant::llmint8::llmint8_matmul;
+use muxq::quant::muxq::{muxq_matmul_int, MuxqParams};
+use muxq::quant::{Granularity, MatF32};
+use muxq::util::bench::Bencher;
+
+fn mat(rows: usize, cols: usize, seed: u64, outliers: &[usize]) -> MatF32 {
+    let mut rng = SplitMix64::new(seed);
+    let mut m = MatF32::from_vec(
+        rows,
+        cols,
+        (0..rows * cols).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0).collect(),
+    )
+    .unwrap();
+    for r in 0..rows {
+        for &c in outliers {
+            *m.at_mut(r, c) *= 25.0;
+        }
+    }
+    m
+}
+
+fn main() {
+    let mut b = Bencher::default();
+    let p = MuxqParams::default();
+
+    for (m, k, n, label) in [
+        (256, 512, 512, "c_fc-like 256x512x512"),
+        (1024, 256, 1024, "sim-large c_fc 1024x256x1024"),
+    ] {
+        Bencher::header(&format!("GEMM pipelines ({label}, 8 outlier cols)"));
+        let x = mat(m, k, 1, &[1, 30, 60, 90, 120, 150, 180, 210]);
+        let w = mat(k, n, 2, &[]);
+        b.bench("fp32_reference", || matmul_f32(&x, &w));
+        b.bench("naive_int8 (quant+i8gemm+dequant)", || {
+            quant_matmul(&x, &w, 127.0, Granularity::PerRow, Granularity::PerCol)
+        });
+        b.bench("muxq_int8 (body+skinny aux)", || {
+            muxq_matmul_int(&x, &w, 127.0, Granularity::PerRow, Granularity::PerCol, &p)
+        });
+        b.bench("llmint8 (int8 + fp16 outlier path)", || {
+            llmint8_matmul(&x, &w, 127.0, Granularity::PerRow, Granularity::PerCol, 6.0)
+        });
+    }
+
+    let naive = b
+        .results
+        .iter()
+        .find(|r| r.name.starts_with("naive_int8"))
+        .unwrap()
+        .mean
+        .as_secs_f64();
+    let muxq = b
+        .results
+        .iter()
+        .find(|r| r.name.starts_with("muxq_int8"))
+        .unwrap()
+        .mean
+        .as_secs_f64();
+    println!("\nmuxq INT pipeline overhead vs naive INT (first shape): {:.2}x", muxq / naive);
+}

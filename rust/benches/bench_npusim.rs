@@ -1,0 +1,31 @@
+//! NPU cost-model benchmarks + the §4.5 hardware-efficiency study as a
+//! bench target (regenerates the latency/energy comparison table).
+//! Run: `cargo bench --bench bench_npusim`.
+
+use muxq::npusim::report::{compare, paper_geometries, render_table};
+use muxq::npusim::{model_cost, NpuConfig};
+use muxq::quant::Method;
+use muxq::util::bench::Bencher;
+
+fn main() {
+    // the study itself (cheap, deterministic — print it)
+    let cfg = NpuConfig::default();
+    let mut rows = Vec::new();
+    for (name, g) in paper_geometries() {
+        rows.extend(compare(&cfg, name, g, 8));
+    }
+    println!("hardware-efficiency study (paper §4.5):\n{}", render_table(&rows));
+
+    // simulator throughput (it sits inside sweep loops, keep it cheap)
+    let mut b = Bencher::default();
+    Bencher::header("cost-model evaluation speed");
+    b.bench("model_cost gpt2-large 36L", || {
+        model_cost(&cfg, Method::Muxq, 36, 1024, 1280, 16, 8)
+    });
+    b.bench("full 4-method comparison x3 models", || {
+        paper_geometries()
+            .into_iter()
+            .map(|(n, g)| compare(&cfg, n, g, 8))
+            .collect::<Vec<_>>()
+    });
+}

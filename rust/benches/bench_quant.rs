@@ -1,0 +1,59 @@
+//! Micro-benchmarks of the rust-native quantization transforms — the L3
+//! hot-path components (quantize, decompose, methods at both
+//! granularities). Run: `cargo bench --bench bench_quant`.
+
+use muxq::data::prng::SplitMix64;
+use muxq::quant::muxq::{decompose, fq_muxq, outlier_mask, MuxqParams};
+use muxq::quant::{fq_naive, Granularity, MatF32, Method, QuantSpec, Scales};
+use muxq::util::bench::Bencher;
+
+fn outlier_mat(rows: usize, cols: usize, seed: u64) -> MatF32 {
+    let mut rng = SplitMix64::new(seed);
+    let mut m = MatF32::from_vec(
+        rows,
+        cols,
+        (0..rows * cols).map(|_| (rng.next_f64() as f32 - 0.5) * 4.0).collect(),
+    )
+    .unwrap();
+    for r in 0..rows {
+        for c in [3usize, 17, 40] {
+            if c < cols {
+                *m.at_mut(r, c) *= 25.0;
+            }
+        }
+    }
+    m
+}
+
+fn main() {
+    let mut b = Bencher::default();
+    Bencher::header("quantization transforms (1024x768 activations)");
+    let x = outlier_mat(1024, 768, 1);
+    let p = MuxqParams::default();
+
+    b.bench("absmax_scales/per-tensor", || Scales::compute(&x, 127.0, Granularity::PerTensor));
+    b.bench("absmax_scales/per-row", || Scales::compute(&x, 127.0, Granularity::PerRow));
+    b.bench("outlier_mask", || outlier_mask(&x, 6.0));
+    b.bench("muxq_decompose", || {
+        let mask = outlier_mask(&x, 6.0);
+        decompose(&x, &mask, &p)
+    });
+    b.bench("fq_naive/per-tensor", || fq_naive(&x, 127.0, Granularity::PerTensor));
+    b.bench("fq_muxq/per-tensor", || fq_muxq(&x, 127.0, Granularity::PerTensor, &p));
+    b.bench("fq_muxq/per-row", || fq_muxq(&x, 127.0, Granularity::PerRow, &p));
+
+    Bencher::header("method dispatch fq_act (1024x768)");
+    for method in [Method::Naive, Method::Muxq, Method::LlmInt8] {
+        let spec = QuantSpec::new(method, "per-tensor", 8, 8).unwrap();
+        b.bench(&format!("fq_act/{}", method.name()), || spec.fq_act(&x));
+    }
+
+    // MUXQ overhead summary vs naive (the "modest computational overhead"
+    // claim)
+    let naive = b.results.iter().find(|r| r.name == "fq_naive/per-tensor").unwrap().mean;
+    let muxq = b.results.iter().find(|r| r.name == "fq_muxq/per-tensor").unwrap().mean;
+    println!(
+        "\nmuxq fake-quant overhead vs naive: {:.2}x",
+        muxq.as_secs_f64() / naive.as_secs_f64()
+    );
+}

@@ -1,0 +1,52 @@
+//! Table-1 end-to-end bench: times the full serving path (tokens ->
+//! PJRT quantized eval -> per-seq nll) for each method at IA=8 and IA=6,
+//! reporting tokens/s per variant — the throughput companion to
+//! `examples/table1.rs` (which reports the perplexities themselves).
+//! Run: `cargo bench --bench bench_table1` (needs `make artifacts`).
+
+use muxq::coordinator::{VariantKey, VariantRegistry};
+use muxq::data::eval_set::EvalSet;
+use muxq::util::bench::Bencher;
+
+fn main() {
+    let registry = match VariantRegistry::open_default() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("skipping bench_table1: {e:#}\n(run `make artifacts` first)");
+            return;
+        }
+    };
+    let eval = EvalSet::load(&muxq::artifacts_dir(), "valid").expect("eval set");
+
+    let mut b = Bencher::default();
+    for model in ["sim-small", "sim-medium", "sim-large"] {
+        Bencher::header(&format!("table1 e2e eval ({model}, one 8x128 batch)"));
+        let mut rows = Vec::new();
+        for tag in ["fp16-pt", "naive-pt", "muxq-pt", "llmint8-pt", "muxq-pv"] {
+            let key = VariantKey::eval(model, tag);
+            let Some(meta) = registry.meta(&key) else { continue };
+            let (batch, seq) = (meta.batch, meta.seq);
+            let windows = eval.windows(seq, batch);
+            let mut toks = Vec::with_capacity(batch * seq);
+            for w in &windows {
+                toks.extend_from_slice(w);
+            }
+            while toks.len() < batch * seq {
+                toks.extend_from_slice(&windows[0]);
+            }
+            let compiled = registry.get(&key).expect("compile variant");
+            // warmup happens inside Bencher; first call includes nothing
+            // extra since compilation already happened in get()
+            let stats = b
+                .bench(&format!("{model}/{tag}"), || {
+                    compiled.run(&toks, 8.0, 8.0).expect("run")
+                })
+                .clone();
+            let tok_per_s = (batch * seq) as f64 / stats.mean.as_secs_f64();
+            rows.push((tag, tok_per_s));
+        }
+        for (tag, tps) in rows {
+            println!("    -> {tag}: {tps:.0} tok/s");
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! Table-2 bench: weight-bit sweep execution cost. Bit-widths are runtime
+//! scalars, so this measures that the *same compiled executable* serves
+//! W in {8,5,4} with identical latency (no per-bit recompiles — the
+//! design decision that makes the Table 2 sweep cheap).
+//! Run: `cargo bench --bench bench_table2` (needs `make artifacts`).
+
+use muxq::coordinator::{VariantKey, VariantRegistry};
+use muxq::data::eval_set::EvalSet;
+use muxq::util::bench::Bencher;
+
+fn main() {
+    let registry = match VariantRegistry::open_default() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("skipping bench_table2: {e:#}\n(run `make artifacts` first)");
+            return;
+        }
+    };
+    let eval = EvalSet::load(&muxq::artifacts_dir(), "valid").expect("eval set");
+    let key = VariantKey::eval("sim-small", "muxq-pv");
+    let Some(meta) = registry.meta(&key) else {
+        eprintln!("muxq-pv variant missing");
+        return;
+    };
+    let (batch, seq) = (meta.batch, meta.seq);
+    let windows = eval.windows(seq, batch);
+    let mut toks = Vec::with_capacity(batch * seq);
+    for w in &windows {
+        toks.extend_from_slice(w);
+    }
+    while toks.len() < batch * seq {
+        toks.extend_from_slice(&windows[0]);
+    }
+    let compiled = registry.get(&key).expect("compile variant");
+
+    let mut b = Bencher::default();
+    Bencher::header("table2: one executable, runtime weight-bit sweep (sim-small muxq-pv)");
+    let mut means = Vec::new();
+    for w_bits in [8.0f32, 5.0, 4.0] {
+        let s = b
+            .bench(&format!("w_bits={w_bits}"), || {
+                compiled.run(&toks, 8.0, w_bits).expect("run")
+            })
+            .clone();
+        means.push(s.mean.as_secs_f64());
+    }
+    let spread = (means.iter().cloned().fold(f64::MIN, f64::max)
+        - means.iter().cloned().fold(f64::MAX, f64::min))
+        / means[0];
+    println!(
+        "\nlatency spread across W bit-widths: {:.1}% (expected ~0: bits are runtime scalars)",
+        spread * 100.0
+    );
+}

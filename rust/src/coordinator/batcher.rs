@@ -1,0 +1,269 @@
+//! Dynamic batcher: coalesces single-sequence scoring requests into the
+//! fixed-shape batches the compiled variants expect (vLLM-style
+//! max-batch / max-wait policy).
+//!
+//! Batch compatibility: a batch shares (variant, ia_bits, w_bits) because
+//! bit-widths are per-execution scalars. Underfull batches are padded by
+//! repeating the first row; padded rows are dropped on the way out.
+
+use super::request::Pending;
+use super::variants::VariantKey;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Queue key: variant + bit-widths (f32 bit patterns so Eq/Ord work).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BatchKey {
+    pub variant: VariantKey,
+    pub ia_bits: u32,
+    pub w_bits: u32,
+}
+
+impl BatchKey {
+    pub fn of(variant: &VariantKey, ia_bits: f32, w_bits: f32) -> Self {
+        BatchKey { variant: variant.clone(), ia_bits: ia_bits.to_bits(), w_bits: w_bits.to_bits() }
+    }
+}
+
+/// A batch ready for execution.
+pub struct ReadyBatch {
+    pub key: BatchKey,
+    pub requests: Vec<Pending>,
+}
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// max sequences per batch (must match the compiled batch dim)
+    pub max_batch: usize,
+    /// coalescing window: flush a non-empty queue after this long
+    pub max_wait: Duration,
+    /// admission control: max queued requests across all queues
+    pub max_queue: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            max_queue: 1024,
+        }
+    }
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum AdmitError {
+    QueueFull,
+    Shutdown,
+}
+
+struct State {
+    queues: BTreeMap<BatchKey, VecDeque<Pending>>,
+    total: usize,
+    shutdown: bool,
+}
+
+/// The batcher. `push` is called by the router, `next_batch` by scheduler
+/// workers (blocking with timeout).
+pub struct Batcher {
+    pub cfg: BatcherConfig,
+    state: Mutex<State>,
+    nonempty: Condvar,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Batcher {
+            cfg,
+            state: Mutex::new(State { queues: BTreeMap::new(), total: 0, shutdown: false }),
+            nonempty: Condvar::new(),
+        }
+    }
+
+    pub fn push(&self, key: BatchKey, p: Pending) -> Result<(), AdmitError> {
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown {
+            return Err(AdmitError::Shutdown);
+        }
+        if st.total >= self.cfg.max_queue {
+            return Err(AdmitError::QueueFull);
+        }
+        st.queues.entry(key).or_default().push_back(p);
+        st.total += 1;
+        self.nonempty.notify_one();
+        Ok(())
+    }
+
+    pub fn queued(&self) -> usize {
+        self.state.lock().unwrap().total
+    }
+
+    pub fn shutdown(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.shutdown = true;
+        self.nonempty.notify_all();
+    }
+
+    /// Pull the next ready batch, blocking until one is ready or shutdown
+    /// (then drains remaining queues, returning None only when empty).
+    ///
+    /// Ready = a queue reached `max_batch`, or its oldest entry has waited
+    /// `max_wait`.
+    pub fn next_batch(&self) -> Option<ReadyBatch> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            // find a full queue, else the queue with the oldest deadline
+            let mut oldest: Option<(BatchKey, Instant)> = None;
+            let mut full: Option<BatchKey> = None;
+            for (key, q) in st.queues.iter() {
+                if q.len() >= self.cfg.max_batch {
+                    full = Some(key.clone());
+                    break;
+                }
+                if let Some(front) = q.front() {
+                    let due = front.submitted + self.cfg.max_wait;
+                    if oldest.as_ref().map_or(true, |(_, d)| due < *d) {
+                        oldest = Some((key.clone(), due));
+                    }
+                }
+            }
+            let pick = if let Some(key) = full {
+                Some(key)
+            } else if st.shutdown {
+                // drain: take any non-empty queue immediately
+                oldest.as_ref().map(|(k, _)| k.clone())
+            } else {
+                match &oldest {
+                    Some((key, due)) if *due <= now => Some(key.clone()),
+                    Some((_, due)) => {
+                        let wait = due.saturating_duration_since(now);
+                        let (g, _timeout) = self.nonempty.wait_timeout(st, wait).unwrap();
+                        st = g;
+                        continue;
+                    }
+                    None => {
+                        if st.shutdown {
+                            return None;
+                        }
+                        st = self.nonempty.wait(st).unwrap();
+                        continue;
+                    }
+                }
+            };
+            let key = pick?;
+            let q = st.queues.get_mut(&key).unwrap();
+            let n = q.len().min(self.cfg.max_batch);
+            let requests: Vec<Pending> = q.drain(..n).collect();
+            if q.is_empty() {
+                st.queues.remove(&key);
+            }
+            st.total -= requests.len();
+            return Some(ReadyBatch { key, requests });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::ScoreRequest;
+    use std::sync::mpsc;
+
+    fn pending(variant: &VariantKey) -> (Pending, mpsc::Receiver<anyhow::Result<super::super::request::ScoreResponse>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Pending {
+                req: ScoreRequest {
+                    variant: variant.clone(),
+                    tokens: vec![0; 16],
+                    ia_bits: 8.0,
+                    w_bits: 8.0,
+                },
+                submitted: Instant::now(),
+                tx,
+            },
+            rx,
+        )
+    }
+
+    fn key() -> BatchKey {
+        BatchKey::of(&VariantKey::eval("sim-small", "muxq-pt"), 8.0, 8.0)
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let b = Batcher::new(BatcherConfig { max_batch: 4, ..Default::default() });
+        let v = VariantKey::eval("m", "t");
+        for _ in 0..4 {
+            let (p, _rx) = pending(&v);
+            b.push(key(), p).unwrap();
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.requests.len(), 4);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn partial_batch_flushes_after_max_wait() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(10),
+            ..Default::default()
+        });
+        let v = VariantKey::eval("m", "t");
+        let (p, _rx) = pending(&v);
+        b.push(key(), p).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(9), "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn distinct_bits_never_share_a_batch() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        });
+        let v = VariantKey::eval("m", "t");
+        let (p1, _r1) = pending(&v);
+        let (p2, _r2) = pending(&v);
+        b.push(BatchKey::of(&v, 8.0, 8.0), p1).unwrap();
+        b.push(BatchKey::of(&v, 6.0, 8.0), p2).unwrap();
+        let b1 = b.next_batch().unwrap();
+        let b2 = b.next_batch().unwrap();
+        assert_eq!(b1.requests.len(), 1);
+        assert_eq!(b2.requests.len(), 1);
+        assert_ne!(b1.key, b2.key);
+    }
+
+    #[test]
+    fn admission_control() {
+        let b = Batcher::new(BatcherConfig { max_queue: 2, ..Default::default() });
+        let v = VariantKey::eval("m", "t");
+        let (p1, _r1) = pending(&v);
+        let (p2, _r2) = pending(&v);
+        let (p3, _r3) = pending(&v);
+        b.push(key(), p1).unwrap();
+        b.push(key(), p2).unwrap();
+        assert_eq!(b.push(key(), p3), Err(AdmitError::QueueFull));
+    }
+
+    #[test]
+    fn shutdown_drains_then_none() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_secs(60), // would block forever
+            ..Default::default()
+        });
+        let v = VariantKey::eval("m", "t");
+        let (p, _rx) = pending(&v);
+        b.push(key(), p).unwrap();
+        b.shutdown();
+        assert!(b.next_batch().is_some(), "drain pending on shutdown");
+        assert!(b.next_batch().is_none());
+    }
+}

@@ -1,0 +1,27 @@
+//! L3 — the serving coordinator (rust owns the request path; python never
+//! runs after `make artifacts`).
+//!
+//! Dataflow:
+//!
+//! ```text
+//! client ──submit──> Coordinator (admission) ──> Batcher (coalesce by
+//!    (variant, bits), max-batch / max-wait) ──> scheduler workers ──>
+//!    VariantRegistry (compile-once, weights-on-device) ──> PJRT exec ──>
+//!    per-sequence (nll, count) ──> ResponseHandle
+//! ```
+//!
+//! * [`variants`] — manifest discovery, lazy compile, device-resident
+//!   weights shared across variants of a model.
+//! * [`batcher`] — dynamic batching with padding + admission control.
+//! * [`request`] — request/response/handle types.
+//! * [`scheduler`] — worker threads executing ready batches.
+
+pub mod batcher;
+pub mod request;
+pub mod scheduler;
+pub mod variants;
+
+pub use batcher::{AdmitError, BatcherConfig};
+pub use request::{ResponseHandle, ScoreRequest, ScoreResponse};
+pub use scheduler::{Coordinator, CoordinatorConfig, CoordinatorStats};
+pub use variants::{VariantKey, VariantRegistry};

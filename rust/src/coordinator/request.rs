@@ -1,0 +1,64 @@
+//! Request/response types for the serving layer.
+
+use super::variants::VariantKey;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// A scoring request: one token sequence to evaluate under a variant at
+/// given bit-widths. Sequences shorter than the compiled `seq` are
+/// rejected at admission (the eval graphs are fixed-shape; the client
+/// library chunks long texts into windows).
+#[derive(Debug, Clone)]
+pub struct ScoreRequest {
+    pub variant: VariantKey,
+    pub tokens: Vec<i32>,
+    pub ia_bits: f32,
+    pub w_bits: f32,
+}
+
+/// Result for one scoring request.
+#[derive(Debug, Clone)]
+pub struct ScoreResponse {
+    /// summed next-token NLL over the sequence
+    pub nll: f32,
+    /// number of predicted tokens
+    pub count: f32,
+    /// total time from submit to completion
+    pub latency: std::time::Duration,
+}
+
+impl ScoreResponse {
+    pub fn ppl(&self) -> f32 {
+        (self.nll / self.count).exp()
+    }
+}
+
+/// Handle the caller blocks on.
+pub struct ResponseHandle {
+    pub(crate) rx: mpsc::Receiver<anyhow::Result<ScoreResponse>>,
+}
+
+impl ResponseHandle {
+    pub fn wait(self) -> anyhow::Result<ScoreResponse> {
+        self.rx.recv().map_err(|_| anyhow::anyhow!("coordinator dropped request"))?
+    }
+}
+
+/// A request in flight through the batcher (public within the crate's
+/// serving pipeline; constructed only by the coordinator).
+pub struct Pending {
+    pub req: ScoreRequest,
+    pub submitted: Instant,
+    pub tx: mpsc::Sender<anyhow::Result<ScoreResponse>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ppl_math() {
+        let r = ScoreResponse { nll: 254.0, count: 127.0, latency: Default::default() };
+        assert!((r.ppl() - (2.0f32).exp()).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,216 @@
+//! Scheduler: worker threads pull ready batches from the batcher, execute
+//! them on the PJRT runtime and fulfil response handles. The public
+//! [`Coordinator`] facade owns admission, the batcher and the workers.
+//!
+//! Threading model: all PJRT objects are confined to the process-wide
+//! runtime service thread (see `runtime::service`); the registry is
+//! `Send + Sync` and shared by every worker. Workers overlap batch
+//! assembly/response handling with execution; execution dispatch itself
+//! serializes on the service thread (PJRT CPU executions are internally
+//! multi-threaded, so this costs nothing on a small host).
+
+use super::batcher::{AdmitError, BatchKey, Batcher, BatcherConfig, ReadyBatch};
+use super::request::{Pending, ResponseHandle, ScoreRequest, ScoreResponse};
+use super::variants::{Manifest, VariantRegistry};
+use crate::util::metrics::Registry;
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Default)]
+pub struct CoordinatorConfig {
+    pub batcher: BatcherConfig,
+    /// scheduler workers, each with a private PJRT engine (0 => 1)
+    pub n_workers: usize,
+}
+
+/// Point-in-time statistics snapshot.
+#[derive(Debug, Clone)]
+pub struct CoordinatorStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub padded_rows: u64,
+    pub queued_now: usize,
+}
+
+/// The serving coordinator (see mod.rs for the dataflow).
+pub struct Coordinator {
+    manifest: Manifest,
+    registry: Arc<VariantRegistry>,
+    batcher: Arc<Batcher>,
+    metrics: Arc<Registry>,
+    workers: Vec<JoinHandle<()>>,
+    running: Arc<AtomicBool>,
+}
+
+impl Coordinator {
+    /// Start over the artifacts directory (usually `crate::artifacts_dir()`).
+    pub fn start(root: impl Into<PathBuf>, cfg: CoordinatorConfig) -> Result<Self> {
+        let root = root.into();
+        let registry = Arc::new(VariantRegistry::load(&root)?);
+        let manifest = registry.manifest().clone();
+        let n_workers = if cfg.n_workers == 0 { 1 } else { cfg.n_workers };
+        let batcher = Arc::new(Batcher::new(cfg.batcher));
+        let metrics = Arc::new(Registry::default());
+        let running = Arc::new(AtomicBool::new(true));
+        let workers = (0..n_workers)
+            .map(|i| {
+                let batcher = batcher.clone();
+                let metrics = metrics.clone();
+                let registry = registry.clone();
+                std::thread::Builder::new()
+                    .name(format!("muxq-sched-{i}"))
+                    .spawn(move || worker_loop(batcher, registry, metrics))
+                    .expect("spawn scheduler worker")
+            })
+            .collect();
+        Ok(Coordinator { manifest, registry, batcher, metrics, workers, running })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// The shared variant registry (direct access for tooling).
+    pub fn registry(&self) -> &Arc<VariantRegistry> {
+        &self.registry
+    }
+
+    pub fn metrics(&self) -> &Arc<Registry> {
+        &self.metrics
+    }
+
+    /// Submit one scoring request; returns a handle to block on.
+    pub fn submit(&self, req: ScoreRequest) -> Result<ResponseHandle> {
+        if !self.running.load(Ordering::SeqCst) {
+            return Err(anyhow!("coordinator is shut down"));
+        }
+        // admission checks that fail fast (shape, variant existence)
+        let meta = self
+            .manifest
+            .meta(&req.variant)
+            .ok_or_else(|| anyhow!("unknown variant {:?}", req.variant))?;
+        if req.tokens.len() != meta.seq {
+            return Err(anyhow!(
+                "sequence length {} != compiled seq {} for {:?}",
+                req.tokens.len(),
+                meta.seq,
+                req.variant
+            ));
+        }
+        if !(2.0..=8.0).contains(&req.ia_bits) || !(2.0..=8.0).contains(&req.w_bits) {
+            return Err(anyhow!("bit-widths must be in [2, 8]"));
+        }
+        let (tx, rx) = mpsc::channel();
+        let key = BatchKey::of(&req.variant, req.ia_bits, req.w_bits);
+        let pending = Pending { req, submitted: Instant::now(), tx };
+        self.metrics.counter("submitted").inc();
+        match self.batcher.push(key, pending) {
+            Ok(()) => Ok(ResponseHandle { rx }),
+            Err(AdmitError::QueueFull) => {
+                self.metrics.counter("rejected").inc();
+                Err(anyhow!("queue full (backpressure)"))
+            }
+            Err(AdmitError::Shutdown) => Err(anyhow!("coordinator is shut down")),
+        }
+    }
+
+    /// Convenience: submit + wait.
+    pub fn score(&self, req: ScoreRequest) -> Result<ScoreResponse> {
+        self.submit(req)?.wait()
+    }
+
+    pub fn stats(&self) -> CoordinatorStats {
+        CoordinatorStats {
+            submitted: self.metrics.counter("submitted").get(),
+            completed: self.metrics.counter("completed").get(),
+            rejected: self.metrics.counter("rejected").get(),
+            batches: self.metrics.counter("batches").get(),
+            padded_rows: self.metrics.counter("padded_rows").get(),
+            queued_now: self.batcher.queued(),
+        }
+    }
+
+    /// Drain queues and join workers.
+    pub fn shutdown(mut self) {
+        self.running.store(false, Ordering::SeqCst);
+        self.batcher.shutdown();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.running.store(false, Ordering::SeqCst);
+        self.batcher.shutdown();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(batcher: Arc<Batcher>, registry: Arc<VariantRegistry>, metrics: Arc<Registry>) {
+    while let Some(batch) = batcher.next_batch() {
+        execute_batch(&registry, &metrics, batch);
+    }
+}
+
+fn execute_batch(registry: &VariantRegistry, metrics: &Registry, batch: ReadyBatch) {
+    let exec_hist = metrics.histogram("batch_exec");
+    let lat_hist = metrics.histogram("request_latency");
+    let result = (|| -> Result<(Vec<f32>, Vec<f32>)> {
+        let variant = registry.get(&batch.key.variant)?;
+        let meta = &variant.meta;
+        let b = meta.batch;
+        let s = meta.seq;
+        // assemble the padded token block
+        let mut tokens = Vec::with_capacity(b * s);
+        for p in &batch.requests {
+            tokens.extend_from_slice(&p.req.tokens);
+        }
+        let n_pad = b - batch.requests.len();
+        for _ in 0..n_pad {
+            // pad with the first row (any valid tokens work; outputs are
+            // discarded)
+            tokens.extend_from_slice(&batch.requests[0].req.tokens);
+        }
+        metrics.counter("padded_rows").add(n_pad as u64);
+        let ia = f32::from_bits(batch.key.ia_bits);
+        let w = f32::from_bits(batch.key.w_bits);
+        let t0 = Instant::now();
+        let out = variant.run(&tokens, ia, w)?;
+        exec_hist.record(t0.elapsed());
+        let nll = out[0].data.clone();
+        let count = out[1].data.clone();
+        Ok((nll, count))
+    })();
+
+    metrics.counter("batches").inc();
+    match result {
+        Ok((nll, count)) => {
+            for (i, p) in batch.requests.iter().enumerate() {
+                let latency = p.submitted.elapsed();
+                lat_hist.record(latency);
+                metrics.counter("completed").inc();
+                let _ = p.tx.send(Ok(ScoreResponse {
+                    nll: nll[i],
+                    count: count[i],
+                    latency,
+                }));
+            }
+        }
+        Err(e) => {
+            metrics.counter("batch_errors").inc();
+            for p in &batch.requests {
+                let _ = p.tx.send(Err(anyhow!("batch execution failed: {e:#}")));
+            }
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! Variant registry: discovers AOT artifacts via `manifest.json`, compiles
+//! HLO on first use through the process-wide PJRT runtime service, and
+//! keeps each model's weights resident on device (uploaded once, shared
+//! by every variant of that model).
+//!
+//! Everything here is `Send + Sync`: PJRT objects never leave the runtime
+//! service thread (see `runtime::service` for why that confinement is
+//! mandatory with xla_extension 0.5.1).
+
+use crate::runtime::service::{ExeId, RuntimeService, WeightsId};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// Identity of one compiled variant.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VariantKey {
+    pub model: String,
+    /// "eval" (per-seq nll) or "logits"
+    pub kind: String,
+    /// e.g. "muxq-pt", "naive-pv", "fp16-pt", "muxq-pt-sq", "muxq-pt-e1"
+    pub tag: String,
+}
+
+impl VariantKey {
+    pub fn eval(model: &str, tag: &str) -> Self {
+        VariantKey { model: model.into(), kind: "eval".into(), tag: tag.into() }
+    }
+
+    pub fn logits(model: &str, tag: &str) -> Self {
+        VariantKey { model: model.into(), kind: "logits".into(), tag: tag.into() }
+    }
+}
+
+/// Manifest entry (one exported HLO).
+#[derive(Debug, Clone)]
+pub struct VariantMeta {
+    pub key: VariantKey,
+    pub method: String,
+    pub granularity: String,
+    pub smooth: bool,
+    pub exp_factor: u32,
+    pub file: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub weights_file: String,
+}
+
+/// Parsed `manifest.json` — engine-independent.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: BTreeMap<VariantKey, VariantMeta>,
+}
+
+impl Manifest {
+    pub fn load(root: &std::path::Path) -> Result<Self> {
+        let mpath = root.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("read {} — run `make artifacts` first", mpath.display()))?;
+        let json = Json::parse(&text).context("parse manifest.json")?;
+        let mut entries = BTreeMap::new();
+        for e in json.as_arr()? {
+            let key = VariantKey {
+                model: e.get("model")?.as_str()?.to_string(),
+                kind: e.get("kind")?.as_str()?.to_string(),
+                tag: e.get("tag")?.as_str()?.to_string(),
+            };
+            let meta = VariantMeta {
+                key: key.clone(),
+                method: e.get("method")?.as_str()?.to_string(),
+                granularity: e.get("granularity")?.as_str()?.to_string(),
+                smooth: e.get("smooth")?.as_bool()?,
+                exp_factor: e.get("exp_factor")?.as_usize()? as u32,
+                file: e.get("file")?.as_str()?.to_string(),
+                batch: e.get("batch")?.as_usize()?,
+                seq: e.get("seq")?.as_usize()?,
+                weights_file: e.get("weights")?.as_str()?.to_string(),
+            };
+            entries.insert(key, meta);
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn keys(&self) -> Vec<VariantKey> {
+        self.entries.keys().cloned().collect()
+    }
+
+    pub fn meta(&self, key: &VariantKey) -> Option<&VariantMeta> {
+        self.entries.get(key)
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.entries.keys().map(|k| k.model.clone()).collect();
+        v.dedup();
+        v
+    }
+}
+
+/// A compiled, ready-to-run variant (weights already on device).
+/// Send + Sync — just handles into the runtime service.
+pub struct CompiledVariant {
+    pub meta: VariantMeta,
+    service: RuntimeService,
+    exe: ExeId,
+    weights: WeightsId,
+}
+
+impl CompiledVariant {
+    /// Execute on a full batch of token ids (`batch` x `seq`) with runtime
+    /// bit-widths; returns the raw output buffers (host f32).
+    pub fn run(
+        &self,
+        tokens: &[i32],
+        ia_bits: f32,
+        w_bits: f32,
+    ) -> Result<Vec<crate::runtime::service::HostOutput>> {
+        let want = self.meta.batch * self.meta.seq;
+        if tokens.len() != want {
+            bail!("tokens len {} != batch*seq {}", tokens.len(), want);
+        }
+        self.service.run(
+            self.exe,
+            Some(self.weights),
+            tokens.to_vec(),
+            (self.meta.batch, self.meta.seq),
+            ia_bits,
+            w_bits,
+        )
+    }
+}
+
+/// Registry over the artifacts directory. Send + Sync; shared by all
+/// scheduler workers.
+pub struct VariantRegistry {
+    service: RuntimeService,
+    root: PathBuf,
+    manifest: Manifest,
+    compiled: Mutex<BTreeMap<VariantKey, Arc<CompiledVariant>>>,
+}
+
+impl VariantRegistry {
+    /// Parse `manifest.json` under `root`.
+    pub fn load(root: impl Into<PathBuf>) -> Result<Self> {
+        let root = root.into();
+        let manifest = Manifest::load(&root)?;
+        Ok(VariantRegistry {
+            service: RuntimeService::global(),
+            root,
+            manifest,
+            compiled: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Open the default artifacts dir.
+    pub fn open_default() -> Result<Self> {
+        Self::load(crate::artifacts_dir())
+    }
+
+    pub fn service(&self) -> &RuntimeService {
+        &self.service
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn keys(&self) -> Vec<VariantKey> {
+        self.manifest.keys()
+    }
+
+    pub fn meta(&self, key: &VariantKey) -> Option<&VariantMeta> {
+        self.manifest.meta(key)
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        self.manifest.models()
+    }
+
+    /// Get (compiling + uploading on first use) a variant.
+    pub fn get(&self, key: &VariantKey) -> Result<Arc<CompiledVariant>> {
+        if let Some(v) = self.compiled.lock().unwrap().get(key) {
+            return Ok(v.clone());
+        }
+        let meta = self
+            .manifest
+            .entries
+            .get(key)
+            .with_context(|| format!("variant {key:?} not in manifest"))?
+            .clone();
+        // compile OUTSIDE the cache lock (compilation takes seconds);
+        // the service dedups concurrent requests for the same file
+        let weights = self.service.upload_weights(self.root.join(&meta.weights_file))?;
+        let exe = self.service.load_hlo(self.root.join("hlo").join(&meta.file))?;
+        let variant =
+            Arc::new(CompiledVariant { meta, service: self.service.clone(), exe, weights });
+        let mut cache = self.compiled.lock().unwrap();
+        Ok(cache.entry(key.clone()).or_insert(variant).clone())
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.lock().unwrap().len()
+    }
+}

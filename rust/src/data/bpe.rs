@@ -1,0 +1,194 @@
+//! Byte-level BPE tokenizer — encode/decode twin of
+//! `python/compile/bpe.py`. Training happens once at build time in python;
+//! the merge table ships in `artifacts/corpus/tokenizer.bpe` and the rust
+//! side only encodes/decodes (the serving request path).
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Loaded BPE tokenizer. Token ids: 0..255 raw bytes, 256+i = merge i.
+pub struct Bpe {
+    pub merges: Vec<(u32, u32)>,
+    rank: HashMap<(u32, u32), u32>,
+    vocab: Vec<Vec<u8>>,
+}
+
+impl Bpe {
+    pub fn new(merges: Vec<(u32, u32)>) -> Self {
+        let rank = merges
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (*p, i as u32))
+            .collect();
+        let mut vocab: Vec<Vec<u8>> = (0..=255u8).map(|b| vec![b]).collect();
+        for (l, r) in &merges {
+            let mut v = vocab[*l as usize].clone();
+            v.extend_from_slice(&vocab[*r as usize]);
+            vocab.push(v);
+        }
+        Bpe { merges, rank, vocab }
+    }
+
+    /// Parse the `#muxq-bpe-v1` merge-table format.
+    pub fn load_str(text: &str) -> Result<Self> {
+        let mut merges = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let l: u32 = it.next().context("missing left id")?.parse()?;
+            let r: u32 = it.next().context("missing right id")?.parse()?;
+            if l as usize >= 256 + merges.len() || r as usize >= 256 + merges.len() {
+                bail!("merge ({l},{r}) references future token");
+            }
+            merges.push((l, r));
+        }
+        Ok(Bpe::new(merges))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read {}", path.as_ref().display()))?;
+        Self::load_str(&text)
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    /// Encode one pre-split word (greedy lowest-rank merge first — twin of
+    /// python `encode_word`).
+    fn encode_word(&self, word: &[u8]) -> Vec<u32> {
+        let mut seq: Vec<u32> = word.iter().map(|b| *b as u32).collect();
+        while seq.len() > 1 {
+            let mut best_rank = u32::MAX;
+            let mut best_i = usize::MAX;
+            for i in 0..seq.len() - 1 {
+                if let Some(&r) = self.rank.get(&(seq[i], seq[i + 1])) {
+                    if r < best_rank {
+                        best_rank = r;
+                        best_i = i;
+                    }
+                }
+            }
+            if best_i == usize::MAX {
+                break;
+            }
+            seq[best_i] = 256 + best_rank;
+            seq.remove(best_i + 1);
+        }
+        seq
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids = Vec::new();
+        for word in split_words(text.as_bytes()) {
+            ids.extend(self.encode_word(&word));
+        }
+        ids
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for id in ids {
+            bytes.extend_from_slice(&self.vocab[*id as usize]);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+/// Split into byte 'words' — twin of python `split_words`: whitespace
+/// attaches to the following word, newlines stand alone.
+pub fn split_words(text: &[u8]) -> Vec<Vec<u8>> {
+    let mut out = Vec::new();
+    let mut buf: Vec<u8> = Vec::new();
+    let mut pending_space: Vec<u8> = Vec::new();
+    for &ch in text {
+        match ch {
+            0x0A => {
+                if !buf.is_empty() {
+                    out.push(std::mem::take(&mut buf));
+                }
+                if !pending_space.is_empty() {
+                    out.push(std::mem::take(&mut pending_space));
+                }
+                out.push(vec![0x0A]);
+            }
+            0x20 => {
+                if !buf.is_empty() {
+                    out.push(std::mem::take(&mut buf));
+                }
+                pending_space.push(ch);
+            }
+            _ => {
+                if !pending_space.is_empty() {
+                    buf.append(&mut pending_space);
+                }
+                buf.push(ch);
+            }
+        }
+    }
+    if !buf.is_empty() {
+        out.push(buf);
+    }
+    if !pending_space.is_empty() {
+        out.push(pending_space);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Bpe {
+        // merges: (h,e)=256, (256,l)=257
+        Bpe::new(vec![(b'h' as u32, b'e' as u32), (256, b'l' as u32)])
+    }
+
+    #[test]
+    fn encode_applies_merges_in_rank_order() {
+        let t = toy();
+        assert_eq!(t.encode("hel"), vec![257]);
+        assert_eq!(t.encode("he"), vec![256]);
+        assert_eq!(t.encode("eh"), vec![b'e' as u32, b'h' as u32]);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = toy();
+        for s in ["hello world", "  spaces  ", "line\nbreaks\n\n", "= Heading ="] {
+            assert_eq!(t.decode(&t.encode(s)), s);
+        }
+    }
+
+    #[test]
+    fn split_words_preserves_bytes() {
+        let s = b"hello  world\n= Heading =\n\ntail ";
+        let joined: Vec<u8> = split_words(s).concat();
+        assert_eq!(joined, s);
+    }
+
+    #[test]
+    fn load_str_roundtrip() {
+        let dump = "#muxq-bpe-v1\n104 101\n256 108\n";
+        let t = Bpe::load_str(dump).unwrap();
+        assert_eq!(t.merges, vec![(104, 101), (256, 108)]);
+        assert_eq!(t.vocab_size(), 258);
+    }
+
+    #[test]
+    fn load_rejects_future_reference() {
+        assert!(Bpe::load_str("300 5\n").is_err());
+    }
+
+    #[test]
+    fn byte_fallback() {
+        let t = Bpe::new(vec![]);
+        let ids = t.encode("anything at all");
+        assert!(ids.iter().all(|&i| i < 256));
+    }
+}

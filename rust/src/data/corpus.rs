@@ -1,0 +1,168 @@
+//! Synthetic WikiText-like corpus generator — twin of
+//! `python/compile/corpus.py`. Used for serving-workload generation in
+//! benches/examples; determinism cross-checked against the python stream
+//! in `tests/cross_language.rs`.
+
+use super::prng::{mix, zipf_index, SplitMix64};
+
+pub const SYLLABLES: [&str; 30] = [
+    "ka", "ro", "mi", "ten", "sol", "ar", "ven", "da", "lu", "per", "no", "ti", "gra", "bel",
+    "os", "un", "ser", "al", "cor", "em", "fa", "ri", "qua", "sto", "ne", "il", "tur", "ba",
+    "che", "mon",
+];
+
+pub const SUCCESSORS: usize = 24;
+
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    pub seed: u64,
+    pub vocab_words: usize,
+    pub articles: usize,
+    pub paragraphs_per_article: (u64, u64),
+    pub sentences_per_paragraph: (u64, u64),
+    pub words_per_sentence: (u64, u64),
+    pub zipf_s: f64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            seed: 0x5EED_2026,
+            vocab_words: 1500,
+            articles: 120,
+            paragraphs_per_article: (3, 7),
+            sentences_per_paragraph: (2, 6),
+            words_per_sentence: (4, 18),
+            zipf_s: 1.05,
+        }
+    }
+}
+
+/// Deterministic pronounceable word from its id (twin of `make_word`).
+pub fn make_word(word_id: u64, seed: u64) -> String {
+    let h = mix(&[seed, word_id]);
+    let mut rng = SplitMix64::new(h);
+    let n_syll = 2 + rng.next_below(3);
+    (0..n_syll)
+        .map(|_| SYLLABLES[rng.next_below(SYLLABLES.len() as u64) as usize])
+        .collect()
+}
+
+pub struct CorpusGenerator {
+    pub cfg: CorpusConfig,
+    words: Vec<String>,
+}
+
+impl CorpusGenerator {
+    pub fn new(cfg: CorpusConfig) -> Self {
+        let words = (0..cfg.vocab_words as u64).map(|i| make_word(i, cfg.seed)).collect();
+        CorpusGenerator { cfg, words }
+    }
+
+    fn successors(&self, word_id: u64) -> Vec<usize> {
+        let h = mix(&[self.cfg.seed, 0xA11CE, word_id]);
+        let mut rng = SplitMix64::new(h);
+        (0..SUCCESSORS)
+            .map(|_| rng.next_below(self.cfg.vocab_words as u64) as usize)
+            .collect()
+    }
+
+    fn sentence(&self, rng: &mut SplitMix64, mut cur: usize) -> (String, usize) {
+        let (lo, hi) = self.cfg.words_per_sentence;
+        let n = rng.next_range(lo, hi);
+        let mut out: Vec<&str> = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            let succ = self.successors(cur as u64);
+            cur = succ[zipf_index(rng, SUCCESSORS, self.cfg.zipf_s)];
+            out.push(&self.words[cur]);
+        }
+        let mut s = out.join(" ");
+        // capitalize first letter (ASCII by construction)
+        if let Some(first) = s.get_mut(0..1) {
+            first.make_ascii_uppercase();
+        }
+        s.push('.');
+        (s, cur)
+    }
+
+    fn title(&self, rng: &mut SplitMix64) -> String {
+        let n = rng.next_range(1, 3);
+        (0..n)
+            .map(|_| {
+                let w = &self.words[zipf_index(rng, self.cfg.vocab_words, self.cfg.zipf_s)];
+                let mut c = w.clone();
+                c.get_mut(0..1).map(|f| f.make_ascii_uppercase());
+                c
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn article(&self, rng: &mut SplitMix64) -> String {
+        let mut lines = vec![format!("= {} =", self.title(rng)), String::new()];
+        let mut cur = zipf_index(rng, self.cfg.vocab_words, self.cfg.zipf_s);
+        let (p_lo, p_hi) = self.cfg.paragraphs_per_article;
+        let (s_lo, s_hi) = self.cfg.sentences_per_paragraph;
+        for _ in 0..rng.next_range(p_lo, p_hi) {
+            let mut sents = Vec::new();
+            for _ in 0..rng.next_range(s_lo, s_hi) {
+                let (s, nc) = self.sentence(rng, cur);
+                cur = nc;
+                sents.push(s);
+            }
+            lines.push(sents.join(" "));
+            lines.push(String::new());
+        }
+        lines.join("\n")
+    }
+
+    /// Named split — identical stream-seed derivation as the python twin.
+    pub fn split(&self, name: &str, articles: Option<usize>) -> String {
+        let char_sum: u64 = name.chars().map(|c| c as u64).sum();
+        let stream_seed = mix(&[self.cfg.seed, char_sum, name.len() as u64]);
+        let mut rng = SplitMix64::new(stream_seed);
+        let n = articles.unwrap_or(self.cfg.articles);
+        (0..n).map(|_| self.article(&mut rng)).collect::<Vec<_>>().join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut cfg = CorpusConfig::default();
+        cfg.articles = 2;
+        let a = CorpusGenerator::new(cfg.clone()).split("train", None);
+        let b = CorpusGenerator::new(cfg).split("train", None);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn wikitext_structure() {
+        let mut cfg = CorpusConfig::default();
+        cfg.articles = 3;
+        let t = CorpusGenerator::new(cfg).split("train", None);
+        assert!(t.starts_with("= "));
+        assert!(t.contains(". ") || t.contains(".\n"));
+        assert!(t.len() > 500);
+    }
+
+    #[test]
+    fn splits_differ() {
+        let mut cfg = CorpusConfig::default();
+        cfg.articles = 2;
+        let g = CorpusGenerator::new(cfg);
+        assert_ne!(g.split("train", None), g.split("valid", None));
+    }
+
+    #[test]
+    fn words_pronounceable() {
+        for i in 0..50 {
+            let w = make_word(i, 1);
+            assert!(w.len() >= 4 && w.len() <= 12, "{w}");
+            assert!(w.chars().all(|c| c.is_ascii_lowercase()));
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! Evaluation dataset access: token caches + fixed-size windows (the
+//! WikiText-2-style perplexity protocol: contiguous non-overlapping
+//! windows of the validation split).
+
+use super::tensors::TensorFile;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Token stream of one split.
+pub struct EvalSet {
+    pub tokens: Vec<i32>,
+}
+
+impl EvalSet {
+    /// Load a split ("train" | "valid") from `artifacts/corpus/tokens.bin`.
+    pub fn load(artifacts: &Path, split: &str) -> Result<EvalSet> {
+        let path = artifacts.join("corpus").join("tokens.bin");
+        let tf = TensorFile::read(&path)
+            .with_context(|| format!("{} — run `make artifacts` first", path.display()))?;
+        let tokens = tf.get(split)?.as_i32()?;
+        if tokens.is_empty() {
+            bail!("empty split {split:?}");
+        }
+        Ok(EvalSet { tokens })
+    }
+
+    /// Non-overlapping windows of length `seq`; `limit` caps the count
+    /// (0 = all).
+    pub fn windows(&self, seq: usize, limit: usize) -> Vec<Vec<i32>> {
+        let n = self.tokens.len() / seq;
+        let n = if limit == 0 { n } else { n.min(limit) };
+        (0..n).map(|i| self.tokens[i * seq..(i + 1) * seq].to_vec()).collect()
+    }
+
+    /// Windows as u32 (native gpt2 input).
+    pub fn windows_u32(&self, seq: usize, limit: usize) -> Vec<Vec<u32>> {
+        self.windows(seq, limit)
+            .into_iter()
+            .map(|w| w.into_iter().map(|t| t as u32).collect())
+            .collect()
+    }
+}
+
+/// Aggregate per-sequence (nll, count) pairs into perplexity.
+pub fn perplexity(nll_counts: &[(f32, f32)]) -> f32 {
+    let nll: f32 = nll_counts.iter().map(|(n, _)| n).sum();
+    let count: f32 = nll_counts.iter().map(|(_, c)| c).sum();
+    (nll / count.max(1.0)).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_non_overlapping() {
+        let set = EvalSet { tokens: (0..100).collect() };
+        let w = set.windows(16, 0);
+        assert_eq!(w.len(), 6);
+        assert_eq!(w[0][15], 15);
+        assert_eq!(w[1][0], 16);
+        let w2 = set.windows(16, 2);
+        assert_eq!(w2.len(), 2);
+    }
+
+    #[test]
+    fn ppl_aggregation() {
+        let ppl = perplexity(&[(10.0, 5.0), (10.0, 5.0)]);
+        assert!((ppl - (2.0f32).exp()).abs() < 1e-5);
+    }
+}

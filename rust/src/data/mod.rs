@@ -1,0 +1,9 @@
+//! Data substrates: deterministic PRNG, synthetic corpus, BPE tokenizer,
+//! tensor container — each the exact twin of its python counterpart
+//! (cross-validated in `tests/cross_language.rs`).
+
+pub mod bpe;
+pub mod corpus;
+pub mod eval_set;
+pub mod prng;
+pub mod tensors;

@@ -1,0 +1,120 @@
+//! splitmix64 PRNG — bit-for-bit twin of `python/compile/prng.py`.
+//! Golden values are pinned on both sides.
+
+/// splitmix64 stream (Vigna 2015).
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1) with 53 bits of entropy (top bits, same as py).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) via multiply-shift (identical to py twin).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    #[inline]
+    pub fn next_range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi >= lo);
+        lo + self.next_below(hi - lo + 1)
+    }
+}
+
+/// Hash a tuple of u64s — twin of `prng.mix` (one splitmix64
+/// finalization round per element, folded).
+pub fn mix(vals: &[u64]) -> u64 {
+    let mut h: u64 = 0x243F6A8885A308D3;
+    for v in vals {
+        h ^= v;
+        h = h.wrapping_add(0x9E3779B97F4A7C15);
+        h = (h ^ (h >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        h = (h ^ (h >> 27)).wrapping_mul(0x94D049BB133111EB);
+        h ^= h >> 31;
+    }
+    h
+}
+
+/// Bounded-Pareto Zipf sample over [0, n) — twin of `prng.zipf_index`.
+pub fn zipf_index(rng: &mut SplitMix64, n: usize, s: f64) -> usize {
+    let u = rng.next_f64();
+    let alpha = s.max(0.2);
+    let lo = 1.0f64;
+    let hi = n as f64;
+    let num = hi.powf(alpha) * lo.powf(alpha);
+    let den = u * lo.powf(alpha) + (1.0 - u) * hi.powf(alpha);
+    let x = (num / den).powf(1.0 / alpha);
+    (x as i64 - 1).clamp(0, n as i64 - 1) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values() {
+        // pinned against python/tests/test_corpus_bpe.py
+        let mut r = SplitMix64::new(0);
+        assert_eq!(r.next_u64(), 0xE220A8397B1DCDAF);
+        assert_eq!(r.next_u64(), 0x6E789E6AA1B965F4);
+        let mut r2 = SplitMix64::new(42);
+        assert_eq!(r2.next_u64(), 0xBDD732262FEB6E95);
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..1000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn next_below_bounds() {
+        let mut r = SplitMix64::new(9);
+        for n in [1u64, 2, 7, 1000, 1 << 40] {
+            for _ in 0..100 {
+                assert!(r.next_below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn mix_order_sensitive() {
+        assert_ne!(mix(&[1, 2, 3]), mix(&[3, 2, 1]));
+        assert_eq!(mix(&[1, 2, 3]), mix(&[1, 2, 3]));
+    }
+
+    #[test]
+    fn zipf_skewed() {
+        let mut r = SplitMix64::new(1);
+        let mut counts = [0u32; 100];
+        for _ in 0..20000 {
+            counts[zipf_index(&mut r, 100, 1.05)] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[50]);
+    }
+}

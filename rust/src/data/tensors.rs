@@ -1,0 +1,228 @@
+//! Flat tensor-container reader/writer — the rust twin of
+//! `python/compile/iohelpers.py` (format documented there).
+//!
+//! Used for model weights, goldens and calibration data. Self-contained
+//! (no external crates) so `quant`/`gpt2` stay testable without PJRT.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"MUXQTNSR";
+
+/// Element type of a stored tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U8,
+}
+
+impl DType {
+    pub fn code(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+            DType::U8 => 2,
+        }
+    }
+    pub fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::U8,
+            _ => bail!("unknown dtype code {c}"),
+        })
+    }
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::U8 => 1,
+        }
+    }
+}
+
+/// A dense host tensor (row-major).
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn from_f32(dims: Vec<usize>, vals: &[f32]) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor { dtype: DType::F32, dims, data }
+    }
+
+    pub fn from_i32(dims: Vec<usize>, vals: &[i32]) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor { dtype: DType::I32, dims, data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is {:?}, not F32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("tensor is {:?}, not I32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// An ordered (byte-sorted by name — the HLO input-order contract with
+/// `python/compile/aot.py`) collection of named tensors.
+#[derive(Debug, Default, Clone)]
+pub struct TensorFile {
+    pub tensors: BTreeMap<String, HostTensor>,
+}
+
+impl TensorFile {
+    pub fn read(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut buf = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?
+            .read_to_end(&mut buf)?;
+        Self::parse(&buf).with_context(|| format!("parse {}", path.display()))
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Self> {
+        if buf.len() < 16 || &buf[..8] != MAGIC {
+            bail!("bad magic");
+        }
+        let ver = u32::from_le_bytes(buf[8..12].try_into()?);
+        if ver != 1 {
+            bail!("unsupported version {ver}");
+        }
+        let count = u32::from_le_bytes(buf[12..16].try_into()?) as usize;
+        let mut off = 16usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let nlen = u16::from_le_bytes(buf[off..off + 2].try_into()?) as usize;
+            off += 2;
+            let name = std::str::from_utf8(&buf[off..off + nlen])?.to_string();
+            off += nlen;
+            let dtype = DType::from_code(buf[off])?;
+            let ndim = buf[off + 1] as usize;
+            off += 2;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(u32::from_le_bytes(buf[off..off + 4].try_into()?) as usize);
+                off += 4;
+            }
+            let n: usize = dims.iter().product();
+            let nbytes = n * dtype.size();
+            if off + nbytes > buf.len() {
+                bail!("truncated tensor {name}");
+            }
+            let data = buf[off..off + nbytes].to_vec();
+            off += nbytes;
+            tensors.insert(name, HostTensor { dtype, dims, data });
+        }
+        Ok(TensorFile { tensors })
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(MAGIC)?;
+        f.write_all(&1u32.to_le_bytes())?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u16).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&[t.dtype.code(), t.dims.len() as u8])?;
+            for d in &t.dims {
+                f.write_all(&(*d as u32).to_le_bytes())?;
+            }
+            f.write_all(&t.data)?;
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("tensor {name:?} not found"))
+    }
+
+    /// Names in byte-sorted order (BTreeMap iteration order).
+    pub fn sorted_names(&self) -> Vec<&str> {
+        self.tensors.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut tf = TensorFile::default();
+        tf.tensors.insert(
+            "b/x".into(),
+            HostTensor::from_f32(vec![2, 3], &[1.0, -2.5, 3.0, 0.0, 5.5, -6.0]),
+        );
+        tf.tensors
+            .insert("a/y".into(), HostTensor::from_i32(vec![4], &[1, -2, 3, -4]));
+        let dir = std::env::temp_dir().join("muxq_tensors_test.bin");
+        tf.write(&dir).unwrap();
+        let back = TensorFile::read(&dir).unwrap();
+        assert_eq!(back.sorted_names(), vec!["a/y", "b/x"]);
+        assert_eq!(back.get("b/x").unwrap().as_f32().unwrap()[1], -2.5);
+        assert_eq!(back.get("a/y").unwrap().as_i32().unwrap(), vec![1, -2, 3, -4]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(TensorFile::parse(b"NOTMAGIC00000000").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut tf = TensorFile::default();
+        tf.tensors
+            .insert("t".into(), HostTensor::from_f32(vec![8], &[0.0; 8]));
+        let p = std::env::temp_dir().join("muxq_trunc_test.bin");
+        tf.write(&p).unwrap();
+        let mut buf = std::fs::read(&p).unwrap();
+        buf.truncate(buf.len() - 5);
+        assert!(TensorFile::parse(&buf).is_err());
+    }
+}

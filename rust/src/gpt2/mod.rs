@@ -1,0 +1,18 @@
+//! Native f32 GPT-2 forward pass — the rust twin of
+//! `python/compile/model.py`.
+//!
+//! Loads `artifacts/weights/<model>.bin` and runs the same architecture
+//! (pre-LN blocks, Conv1D [in,out] projections, tanh-GELU, tied head),
+//! with each of the four projection sites optionally routed through a
+//! [`crate::quant::QuantSpec`] from the rust quantization engine.
+//!
+//! Roles: (a) baseline comparator + cross-check against the PJRT path
+//! (`tests/native_vs_runtime.rs`); (b) activation capture for Fig. 1;
+//! (c) workload for the native-engine benches where PJRT would hide the
+//! quantization cost being measured.
+
+mod model;
+mod quantized;
+
+pub use model::{Gpt2Config, Gpt2Model, ProjFn, SiteCapture, PROJ_SITES};
+pub use quantized::{IntMethod, QuantWeight, QuantizedGpt2};

@@ -1,0 +1,590 @@
+//! GPT-2 forward implementation (see mod.rs for the role of this module).
+
+use crate::data::tensors::TensorFile;
+use crate::quant::gemm::matmul_f32;
+use crate::quant::{MatF32, QuantSpec};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// The four quantized projection sites (paper §4.3), in block order.
+pub const PROJ_SITES: [&str; 4] = ["c_attn", "attn_proj", "c_fc", "mlp_proj"];
+
+/// Architecture hyper-parameters (twin of python `ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct Gpt2Config {
+    pub name: String,
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub n_ctx: usize,
+    pub vocab_size: usize,
+}
+
+impl Gpt2Config {
+    pub fn sim(name: &str) -> Result<Gpt2Config> {
+        let (n_layer, d_model, n_head) = match name {
+            "sim-small" => (4, 128, 4),
+            "sim-medium" => (6, 192, 6),
+            "sim-large" => (8, 256, 8),
+            _ => bail!("unknown sim model {name:?}"),
+        };
+        Ok(Gpt2Config {
+            name: name.into(),
+            n_layer,
+            d_model,
+            n_head,
+            n_ctx: 128,
+            vocab_size: 512,
+        })
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_head
+    }
+
+    pub fn d_ff(&self) -> usize {
+        4 * self.d_model
+    }
+}
+
+struct LayerNorm {
+    g: Vec<f32>,
+    b: Vec<f32>,
+}
+
+struct Linear {
+    w: MatF32, // [in, out] (HF Conv1D convention)
+    b: Vec<f32>,
+}
+
+struct Block {
+    ln_1: LayerNorm,
+    c_attn: Linear,
+    attn_proj: Linear,
+    ln_2: LayerNorm,
+    c_fc: Linear,
+    mlp_proj: Linear,
+}
+
+/// Per-(layer, site) channel abs-max capture (Fig. 1 data).
+pub type SiteCapture = BTreeMap<(usize, &'static str), Vec<f32>>;
+
+/// Projection-site override: (input activations, site name, layer index)
+/// -> projected output (weights + bias applied by the callee).
+pub type ProjFn<'a> = dyn FnMut(&MatF32, &'static str, usize) -> MatF32 + 'a;
+
+/// Loaded GPT-2 model.
+pub struct Gpt2Model {
+    pub cfg: Gpt2Config,
+    wte: MatF32, // [V, d]
+    wpe: MatF32, // [ctx, d]
+    ln_f: LayerNorm,
+    blocks: Vec<Block>,
+}
+
+impl Gpt2Model {
+    /// Load from the tensor container written by the python build.
+    pub fn load(cfg: Gpt2Config, weights: &TensorFile) -> Result<Gpt2Model> {
+        let mat = |name: &str| -> Result<MatF32> {
+            let t = weights.get(name)?;
+            if t.dims.len() != 2 {
+                bail!("{name} is not 2-D");
+            }
+            MatF32::from_vec(t.dims[0], t.dims[1], t.as_f32()?)
+        };
+        let vec = |name: &str| -> Result<Vec<f32>> { weights.get(name)?.as_f32() };
+        let ln = |prefix: &str| -> Result<LayerNorm> {
+            Ok(LayerNorm { g: vec(&format!("{prefix}/g"))?, b: vec(&format!("{prefix}/b"))? })
+        };
+        let lin = |prefix: &str| -> Result<Linear> {
+            Ok(Linear { w: mat(&format!("{prefix}/w"))?, b: vec(&format!("{prefix}/b"))? })
+        };
+        let mut blocks = Vec::with_capacity(cfg.n_layer);
+        for i in 0..cfg.n_layer {
+            let p = format!("block{i:02}");
+            blocks.push(Block {
+                ln_1: ln(&format!("{p}/ln_1"))?,
+                c_attn: lin(&format!("{p}/c_attn"))?,
+                attn_proj: lin(&format!("{p}/attn_proj"))?,
+                ln_2: ln(&format!("{p}/ln_2"))?,
+                c_fc: lin(&format!("{p}/c_fc"))?,
+                mlp_proj: lin(&format!("{p}/mlp_proj"))?,
+            });
+        }
+        let model = Gpt2Model {
+            wte: mat("wte")?,
+            wpe: mat("wpe")?,
+            ln_f: ln("ln_f")?,
+            blocks,
+            cfg,
+        };
+        if model.wte.rows != model.cfg.vocab_size || model.wte.cols != model.cfg.d_model {
+            bail!(
+                "wte shape {}x{} inconsistent with config {:?}",
+                model.wte.rows,
+                model.wte.cols,
+                model.cfg
+            );
+        }
+        Ok(model)
+    }
+
+    pub fn load_from_artifacts(name: &str) -> Result<Gpt2Model> {
+        let cfg = Gpt2Config::sim(name)?;
+        let path = crate::artifacts_dir().join("weights").join(format!("{name}.bin"));
+        let weights = TensorFile::read(&path)
+            .with_context(|| format!("load weights for {name} — run `make artifacts` first"))?;
+        Self::load(cfg, &weights)
+    }
+
+    /// Forward pass over one sequence batch. `tokens` is [B][S]; returns
+    /// logits [B*S, V]. `quant` applies to the four projection sites;
+    /// `capture` records per-site input abs-max per channel.
+    pub fn forward(
+        &self,
+        tokens: &[Vec<u32>],
+        quant: Option<&QuantSpec>,
+        capture: Option<&mut SiteCapture>,
+    ) -> Result<MatF32> {
+        self.forward_impl(tokens, quant, capture, None)
+    }
+
+    /// Forward with every projection site computed by `proj_fn(x, site,
+    /// layer)` — the hook the true-INT pipeline (`quantized.rs`) uses.
+    /// The callback is responsible for weights AND bias.
+    pub fn forward_with_proj(
+        &self,
+        tokens: &[Vec<u32>],
+        proj_fn: &mut ProjFn<'_>,
+    ) -> Result<MatF32> {
+        self.forward_impl(tokens, None, None, Some(proj_fn))
+    }
+
+    fn forward_impl(
+        &self,
+        tokens: &[Vec<u32>],
+        quant: Option<&QuantSpec>,
+        mut capture: Option<&mut SiteCapture>,
+        mut proj_fn: Option<&mut ProjFn<'_>>,
+    ) -> Result<MatF32> {
+        let b = tokens.len();
+        let s = tokens.first().map(|t| t.len()).unwrap_or(0);
+        if s == 0 || s > self.cfg.n_ctx {
+            bail!("sequence length {s} out of range (ctx {})", self.cfg.n_ctx);
+        }
+        let d = self.cfg.d_model;
+        // embeddings
+        let mut h = MatF32::zeros(b * s, d);
+        for (bi, seq) in tokens.iter().enumerate() {
+            if seq.len() != s {
+                bail!("ragged batch");
+            }
+            for (si, &tok) in seq.iter().enumerate() {
+                if tok as usize >= self.cfg.vocab_size {
+                    bail!("token {tok} out of vocab");
+                }
+                let row = h.row_mut(bi * s + si);
+                let e = self.wte.row(tok as usize);
+                let p = self.wpe.row(si);
+                for i in 0..d {
+                    row[i] = e[i] + p[i];
+                }
+            }
+        }
+
+        for (li, blk) in self.blocks.iter().enumerate() {
+            // ---- attention
+            let x = layer_norm(&h, &blk.ln_1);
+            if let Some(cap) = capture.as_deref_mut() {
+                cap.insert((li, "c_attn"), x.absmax_cols());
+            }
+            let qkv = match proj_fn.as_deref_mut() {
+                Some(f) => f(&x, "c_attn", li),
+                None => proj(&x, &blk.c_attn, quant),
+            }; // [b*s, 3d]
+            let att_out = self.attention(&qkv, b, s)?;
+            if let Some(cap) = capture.as_deref_mut() {
+                cap.insert((li, "attn_proj"), att_out.absmax_cols());
+            }
+            let att_proj = match proj_fn.as_deref_mut() {
+                Some(f) => f(&att_out, "attn_proj", li),
+                None => proj(&att_out, &blk.attn_proj, quant),
+            };
+            add_inplace(&mut h, &att_proj);
+
+            // ---- MLP
+            let x = layer_norm(&h, &blk.ln_2);
+            if let Some(cap) = capture.as_deref_mut() {
+                cap.insert((li, "c_fc"), x.absmax_cols());
+            }
+            let mut u = match proj_fn.as_deref_mut() {
+                Some(f) => f(&x, "c_fc", li),
+                None => proj(&x, &blk.c_fc, quant),
+            };
+            gelu_inplace(&mut u);
+            if let Some(cap) = capture.as_deref_mut() {
+                cap.insert((li, "mlp_proj"), u.absmax_cols());
+            }
+            let m = match proj_fn.as_deref_mut() {
+                Some(f) => f(&u, "mlp_proj", li),
+                None => proj(&u, &blk.mlp_proj, quant),
+            };
+            add_inplace(&mut h, &m);
+        }
+
+        let hf = layer_norm(&h, &self.ln_f);
+        // tied head: logits = h @ wte^T (never quantized, per the paper)
+        Ok(matmul_f32(&hf, &self.wte.transpose()))
+    }
+
+    fn attention(&self, qkv: &MatF32, b: usize, s: usize) -> Result<MatF32> {
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_head;
+        let dh = self.cfg.d_head();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut out = MatF32::zeros(b * s, d);
+        let mut att = vec![0.0f32; s];
+        for bi in 0..b {
+            for hd in 0..nh {
+                let off = hd * dh;
+                for qi in 0..s {
+                    let qrow = qkv.row(bi * s + qi);
+                    let q = &qrow[off..off + dh];
+                    // causal scores
+                    let mut max = f32::NEG_INFINITY;
+                    for ki in 0..=qi {
+                        let krow = qkv.row(bi * s + ki);
+                        let k = &krow[d + off..d + off + dh];
+                        let mut dot = 0.0f32;
+                        for i in 0..dh {
+                            dot += q[i] * k[i];
+                        }
+                        att[ki] = dot * scale;
+                        max = max.max(att[ki]);
+                    }
+                    let mut denom = 0.0f32;
+                    for a in att.iter_mut().take(qi + 1) {
+                        *a = (*a - max).exp();
+                        denom += *a;
+                    }
+                    let orow = out.row_mut(bi * s + qi);
+                    for ki in 0..=qi {
+                        let w = att[ki] / denom;
+                        let vrow = qkv.row(bi * s + ki);
+                        let v = &vrow[2 * d + off..2 * d + off + dh];
+                        for i in 0..dh {
+                            orow[off + i] += w * v[i];
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Per-sequence NLL sums + token counts (twin of python nll_per_seq).
+    pub fn nll_per_seq(
+        &self,
+        tokens: &[Vec<u32>],
+        quant: Option<&QuantSpec>,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let logits = self.forward(tokens, quant, None)?;
+        self.nll_from_logits(tokens, &logits)
+    }
+
+    /// Per-sequence NLL with a projection override (true-INT pipeline).
+    pub fn nll_per_seq_with_proj(
+        &self,
+        tokens: &[Vec<u32>],
+        proj_fn: &mut ProjFn<'_>,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let logits = self.forward_with_proj(tokens, proj_fn)?;
+        self.nll_from_logits(tokens, &logits)
+    }
+
+    /// Borrow the raw (w, b) pairs of the four projection sites per block
+    /// (c_attn, attn_proj, c_fc, mlp_proj) — used to build the
+    /// pre-quantized deployment model.
+    #[allow(clippy::type_complexity)]
+    pub fn blocks_raw(
+        &self,
+    ) -> Vec<(&MatF32, &[f32], &MatF32, &[f32], &MatF32, &[f32], &MatF32, &[f32])> {
+        self.blocks
+            .iter()
+            .map(|b| {
+                (
+                    &b.c_attn.w,
+                    b.c_attn.b.as_slice(),
+                    &b.attn_proj.w,
+                    b.attn_proj.b.as_slice(),
+                    &b.c_fc.w,
+                    b.c_fc.b.as_slice(),
+                    &b.mlp_proj.w,
+                    b.mlp_proj.b.as_slice(),
+                )
+            })
+            .collect()
+    }
+
+    /// Scale one ln_1 gain channel (test hook: creates activation
+    /// outliers at the c_attn input, NOT function-preserving).
+    pub fn scale_ln1_channel(&mut self, layer: usize, channel: usize, factor: f32) {
+        self.blocks[layer].ln_1.g[channel] *= factor;
+    }
+
+    /// Build a randomly-initialized model (tests, benches, demos without
+    /// artifacts). Deterministic in `seed`.
+    pub fn test_model(
+        n_layer: usize,
+        d_model: usize,
+        n_head: usize,
+        n_ctx: usize,
+        vocab_size: usize,
+        seed: u64,
+    ) -> Gpt2Model {
+        use crate::data::prng::SplitMix64;
+        let cfg = Gpt2Config {
+            name: format!("test-{n_layer}l-{d_model}d"),
+            n_layer,
+            d_model,
+            n_head,
+            n_ctx,
+            vocab_size,
+        };
+        let mut rng = SplitMix64::new(seed);
+        let mut randmat = |r: usize, c: usize, std: f32| {
+            MatF32::from_vec(
+                r,
+                c,
+                (0..r * c).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0 * std).collect(),
+            )
+            .unwrap()
+        };
+        let d = d_model;
+        let wte = randmat(vocab_size, d, 0.05);
+        let wpe = randmat(n_ctx, d, 0.02);
+        let mut blocks = Vec::with_capacity(n_layer);
+        for _ in 0..n_layer {
+            blocks.push(Block {
+                ln_1: LayerNorm { g: vec![1.0; d], b: vec![0.0; d] },
+                c_attn: Linear { w: randmat(d, 3 * d, 0.05), b: vec![0.0; 3 * d] },
+                attn_proj: Linear { w: randmat(d, d, 0.05), b: vec![0.0; d] },
+                ln_2: LayerNorm { g: vec![1.0; d], b: vec![0.0; d] },
+                c_fc: Linear { w: randmat(d, 4 * d, 0.05), b: vec![0.0; 4 * d] },
+                mlp_proj: Linear { w: randmat(4 * d, d, 0.05), b: vec![0.0; d] },
+            });
+        }
+        Gpt2Model {
+            cfg,
+            wte,
+            wpe,
+            ln_f: LayerNorm { g: vec![1.0; d], b: vec![0.0; d] },
+            blocks,
+        }
+    }
+
+    fn nll_from_logits(
+        &self,
+        tokens: &[Vec<u32>],
+        logits: &MatF32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let b = tokens.len();
+        let s = tokens.first().map(|t| t.len()).unwrap_or(0);
+        let v = self.cfg.vocab_size;
+        let mut nll = vec![0.0f32; b];
+        for bi in 0..b {
+            for si in 0..s - 1 {
+                let row = logits.row(bi * s + si);
+                let target = tokens[bi][si + 1] as usize;
+                // log-softmax at target
+                let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+                let lse: f32 = row.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
+                nll[bi] += lse - row[target];
+                debug_assert!(target < v);
+            }
+        }
+        Ok((nll, vec![(s - 1) as f32; b]))
+    }
+}
+
+fn layer_norm(x: &MatF32, ln: &LayerNorm) -> MatF32 {
+    let d = x.cols;
+    let mut out = MatF32::zeros(x.rows, d);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let mean: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        let orow = out.row_mut(r);
+        for i in 0..d {
+            orow[i] = (row[i] - mean) * inv * ln.g[i] + ln.b[i];
+        }
+    }
+    out
+}
+
+fn proj(x: &MatF32, lin: &Linear, quant: Option<&QuantSpec>) -> MatF32 {
+    let mut y = match quant {
+        None => matmul_f32(x, &lin.w),
+        Some(spec) => spec.matmul(x, &lin.w),
+    };
+    for r in 0..y.rows {
+        let row = y.row_mut(r);
+        for (v, b) in row.iter_mut().zip(&lin.b) {
+            *v += b;
+        }
+    }
+    y
+}
+
+fn add_inplace(h: &mut MatF32, delta: &MatF32) {
+    for (a, b) in h.data.iter_mut().zip(&delta.data) {
+        *a += b;
+    }
+}
+
+/// tanh-approximate GELU (the GPT-2 variant; twin of python `gelu`).
+fn gelu_inplace(x: &mut MatF32) {
+    for v in x.data.iter_mut() {
+        let t = 0.797_884_6 * (*v + 0.044715 * *v * *v * *v);
+        *v = 0.5 * *v * (1.0 + t.tanh());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tensors::{HostTensor, TensorFile};
+
+    /// Build a tiny random model directly as a TensorFile.
+    fn tiny_weights(cfg: &Gpt2Config, seed: u64) -> TensorFile {
+        let mut rng = crate::data::prng::SplitMix64::new(seed);
+        let mut tf = TensorFile::default();
+        let mut randmat = |name: &str, r: usize, c: usize, std: f32| {
+            let data: Vec<f32> =
+                (0..r * c).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0 * std).collect();
+            tf.tensors.insert(name.into(), HostTensor::from_f32(vec![r, c], &data));
+        };
+        let d = cfg.d_model;
+        randmat("wte", cfg.vocab_size, d, 0.05);
+        randmat("wpe", cfg.n_ctx, d, 0.02);
+        drop(randmat);
+        let mut vecs: Vec<(String, usize, f32)> =
+            vec![("ln_f/g".into(), d, 1.0), ("ln_f/b".into(), d, 0.0)];
+        for i in 0..cfg.n_layer {
+            let p = format!("block{i:02}");
+            vecs.push((format!("{p}/ln_1/g"), d, 1.0));
+            vecs.push((format!("{p}/ln_1/b"), d, 0.0));
+            vecs.push((format!("{p}/ln_2/g"), d, 1.0));
+            vecs.push((format!("{p}/ln_2/b"), d, 0.0));
+            vecs.push((format!("{p}/c_attn/b"), 3 * d, 0.0));
+            vecs.push((format!("{p}/attn_proj/b"), d, 0.0));
+            vecs.push((format!("{p}/c_fc/b"), cfg.d_ff(), 0.0));
+            vecs.push((format!("{p}/mlp_proj/b"), d, 0.0));
+        }
+        for (name, n, val) in vecs {
+            tf.tensors.insert(name, HostTensor::from_f32(vec![n], &vec![val; n]));
+        }
+        let mut rng2 = crate::data::prng::SplitMix64::new(seed + 1);
+        let mut randmat2 = |tf: &mut TensorFile, name: String, r: usize, c: usize| {
+            let data: Vec<f32> =
+                (0..r * c).map(|_| (rng2.next_f64() as f32 - 0.5) * 0.1).collect();
+            tf.tensors.insert(name, HostTensor::from_f32(vec![r, c], &data));
+        };
+        for i in 0..cfg.n_layer {
+            let p = format!("block{i:02}");
+            randmat2(&mut tf, format!("{p}/c_attn/w"), d, 3 * d);
+            randmat2(&mut tf, format!("{p}/attn_proj/w"), d, d);
+            randmat2(&mut tf, format!("{p}/c_fc/w"), d, cfg.d_ff());
+            randmat2(&mut tf, format!("{p}/mlp_proj/w"), cfg.d_ff(), d);
+        }
+        tf
+    }
+
+    fn tiny() -> (Gpt2Config, Gpt2Model) {
+        let cfg = Gpt2Config {
+            name: "tiny".into(),
+            n_layer: 2,
+            d_model: 16,
+            n_head: 2,
+            n_ctx: 12,
+            vocab_size: 32,
+        };
+        let w = tiny_weights(&cfg, 7);
+        let m = Gpt2Model::load(cfg.clone(), &w).unwrap();
+        (cfg, m)
+    }
+
+    fn toks(b: usize, s: usize, seed: u64, vocab: u32) -> Vec<Vec<u32>> {
+        let mut rng = crate::data::prng::SplitMix64::new(seed);
+        (0..b).map(|_| (0..s).map(|_| rng.next_below(vocab as u64) as u32).collect()).collect()
+    }
+
+    #[test]
+    fn forward_shape_and_finite() {
+        let (cfg, m) = tiny();
+        let t = toks(2, 8, 1, cfg.vocab_size as u32);
+        let logits = m.forward(&t, None, None).unwrap();
+        assert_eq!((logits.rows, logits.cols), (16, 32));
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causality() {
+        let (cfg, m) = tiny();
+        let mut t = toks(1, 8, 2, cfg.vocab_size as u32);
+        let a = m.forward(&t, None, None).unwrap();
+        t[0][7] = (t[0][7] + 1) % cfg.vocab_size as u32;
+        let b = m.forward(&t, None, None).unwrap();
+        for r in 0..7 {
+            for c in 0..cfg.vocab_size {
+                assert!((a.at(r, c) - b.at(r, c)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn nll_reasonable() {
+        let (cfg, m) = tiny();
+        let t = toks(2, 8, 3, cfg.vocab_size as u32);
+        let (nll, count) = m.nll_per_seq(&t, None).unwrap();
+        assert_eq!(count, vec![7.0, 7.0]);
+        // near-random tiny model: per-token nll ~ ln(32) = 3.47
+        for s in &nll {
+            let per_tok = s / 7.0;
+            assert!(per_tok > 1.0 && per_tok < 6.0, "per-token nll {per_tok}");
+        }
+    }
+
+    #[test]
+    fn quantized_forward_close_at_8bit() {
+        use crate::quant::{Method, QuantSpec};
+        let (cfg, m) = tiny();
+        let t = toks(2, 8, 4, cfg.vocab_size as u32);
+        let fp = m.forward(&t, None, None).unwrap();
+        let spec = QuantSpec::new(Method::Muxq, "per-vector", 8, 8).unwrap();
+        let q = m.forward(&t, Some(&spec), None).unwrap();
+        assert!(fp.mean_abs_diff(&q) < 0.05, "mae {}", fp.mean_abs_diff(&q));
+    }
+
+    #[test]
+    fn capture_collects_all_sites() {
+        let (cfg, m) = tiny();
+        let t = toks(1, 8, 5, cfg.vocab_size as u32);
+        let mut cap = SiteCapture::new();
+        m.forward(&t, None, Some(&mut cap)).unwrap();
+        assert_eq!(cap.len(), cfg.n_layer * 4);
+        assert_eq!(cap[&(0, "c_attn")].len(), cfg.d_model);
+        assert_eq!(cap[&(1, "mlp_proj")].len(), cfg.d_ff());
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        let (_cfg, m) = tiny();
+        assert!(m.forward(&[vec![0; 13]], None, None).is_err()); // > n_ctx
+        assert!(m.forward(&[vec![999; 4]], None, None).is_err()); // vocab
+        assert!(m
+            .forward(&[vec![0; 4], vec![0; 5]], None, None)
+            .is_err()); // ragged
+    }
+}

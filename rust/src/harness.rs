@@ -1,0 +1,86 @@
+//! Experiment harness: shared plumbing for the table/figure regenerators
+//! under `examples/` and `rust/benches/` (batched perplexity evaluation
+//! over compiled variants, paper-style table rendering).
+
+use crate::coordinator::variants::{VariantKey, VariantRegistry};
+use crate::data::eval_set::{perplexity, EvalSet};
+use anyhow::{bail, Result};
+
+/// Evaluate perplexity of one variant at given bit-widths over `windows`
+/// (batched through the compiled executable, padding the tail batch).
+pub fn eval_ppl(
+    registry: &VariantRegistry,
+    variant: &VariantKey,
+    ia_bits: f32,
+    w_bits: f32,
+    windows: &[Vec<i32>],
+) -> Result<f32> {
+    if windows.is_empty() {
+        bail!("no eval windows");
+    }
+    let compiled = registry.get(variant)?;
+    let (batch, seq) = (compiled.meta.batch, compiled.meta.seq);
+    let mut pairs = Vec::with_capacity(windows.len());
+    for chunk in windows.chunks(batch) {
+        let mut toks = Vec::with_capacity(batch * seq);
+        for w in chunk {
+            toks.extend_from_slice(w);
+        }
+        for _ in chunk.len()..batch {
+            toks.extend_from_slice(&windows[0]);
+        }
+        let out = compiled.run(&toks, ia_bits, w_bits)?;
+        let nll = &out[0].data;
+        let count = &out[1].data;
+        for i in 0..chunk.len() {
+            pairs.push((nll[i], count[i]));
+        }
+    }
+    Ok(perplexity(&pairs))
+}
+
+/// Load the standard eval windows for a model's compiled seq length.
+pub fn eval_windows(limit: usize) -> Result<Vec<Vec<i32>>> {
+    let eval = EvalSet::load(&crate::artifacts_dir(), "valid")?;
+    Ok(eval.windows(128, limit))
+}
+
+/// Number of windows used by the table regenerators. Full valid split by
+/// default; `MUXQ_EVAL_WINDOWS` overrides for quick runs.
+pub fn table_windows() -> usize {
+    std::env::var("MUXQ_EVAL_WINDOWS").ok().and_then(|v| v.parse().ok()).unwrap_or(32)
+}
+
+/// Render one perplexity cell, flagging blow-ups like the paper's prose
+/// ("perplexity rises sharply").
+pub fn fmt_ppl(p: f32) -> String {
+    if p.is_finite() {
+        format!("{p:>10.4}")
+    } else {
+        format!("{:>10}", "inf")
+    }
+}
+
+/// An ASCII bar for the figure regenerators.
+pub fn bar(value: f32, max: f32, width: usize) -> String {
+    let n = if max > 0.0 { ((value / max) * width as f32).round() as usize } else { 0 };
+    "#".repeat(n.min(width))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bar_scales() {
+        assert_eq!(bar(5.0, 10.0, 10).len(), 5);
+        assert_eq!(bar(20.0, 10.0, 10).len(), 10);
+        assert_eq!(bar(0.0, 10.0, 10).len(), 0);
+    }
+
+    #[test]
+    fn fmt_handles_inf() {
+        assert!(fmt_ppl(f32::INFINITY).contains("inf"));
+        assert!(fmt_ppl(25.1883).contains("25.1883"));
+    }
+}

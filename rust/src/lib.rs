@@ -1,0 +1,36 @@
+//! # MUXQ — Mixed-to-Uniform Precision Matrix Quantization
+//!
+//! Production reproduction of Lee, Kim & Kim (2026): activation-outlier
+//! handling for uniform low-precision INT quantization of LLMs, built as a
+//! three-layer rust + JAX + Pallas stack (see DESIGN.md).
+//!
+//! Layer map:
+//! * [`runtime`] — PJRT client; loads the AOT-compiled HLO artifacts.
+//! * [`coordinator`] — serving layer: router, dynamic batcher, workers.
+//! * [`quant`] — rust-native quantization engine (MUXQ, naive abs-max,
+//!   LLM.int8(), SmoothQuant) mirroring the python/jax reference.
+//! * [`gpt2`] — native f32 GPT-2 forward (baseline + Fig.1 capture).
+//! * [`npusim`] — systolic-array cost model (hardware-efficiency study).
+//! * [`data`] — corpus generator, BPE tokenizer, tensor container.
+//! * [`util`] — in-repo substrates: CLI parsing, bench harness,
+//!   mini-proptest, metrics, config (tokio/clap/criterion are unavailable
+//!   in the offline build image).
+
+pub mod coordinator;
+pub mod data;
+pub mod gpt2;
+pub mod harness;
+pub mod npusim;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Resolve the artifacts directory: `$MUXQ_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("MUXQ_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

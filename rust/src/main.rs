@@ -1,0 +1,222 @@
+//! `muxq` — the leader binary: serving launcher + operational tooling.
+//!
+//! Subcommands:
+//! * `muxq serve [--config serve.cfg] [--requests N]` — start the
+//!   coordinator and run a synthetic serving workload against it
+//!   (or idle-serve when `--requests 0`).
+//! * `muxq eval --model M --method muxq --granularity per-tensor
+//!    --ia-bits 8 --w-bits 8` — one-off perplexity evaluation.
+//! * `muxq variants` — list available compiled variants.
+//! * `muxq npusim` — print the hardware-efficiency study tables.
+
+use anyhow::{bail, Result};
+use muxq::coordinator::{Coordinator, CoordinatorConfig, ScoreRequest, VariantKey};
+use muxq::data::eval_set::{perplexity, EvalSet};
+use muxq::util::cli::Cli;
+use muxq::util::config::Config;
+use std::time::Instant;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().cloned().unwrap_or_else(|| "help".into());
+    let rest = if args.is_empty() { &[][..] } else { &args[1..] };
+    let result = match cmd.as_str() {
+        "serve" => cmd_serve(rest),
+        "eval" => cmd_eval(rest),
+        "variants" => cmd_variants(),
+        "npusim" => cmd_npusim(),
+        _ => {
+            println!(
+                "muxq — MUXQ quantized-LLM serving coordinator\n\n\
+                 usage: muxq <serve|eval|variants|npusim> [options]\n\
+                 run `muxq <cmd> --help` for per-command options"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let p = Cli::new("muxq serve", "start the coordinator + synthetic workload")
+        .opt("config", "", "INI config file ([server] section)")
+        .opt("model", "sim-small", "model to serve")
+        .opt("tag", "muxq-pt", "variant tag (e.g. muxq-pt, naive-pv, fp16-pt)")
+        .opt("requests", "64", "number of workload requests (0 = idle)")
+        .opt("ia-bits", "8", "activation bits")
+        .opt("w-bits", "8", "weight bits")
+        .opt("max-batch", "8", "dynamic batch size")
+        .opt("max-wait-ms", "5", "batch coalescing window")
+        .parse(args)?;
+
+    let mut ccfg = CoordinatorConfig::default();
+    let mut model = p.get("model").to_string();
+    let mut tag = p.get("tag").to_string();
+    if !p.get("config").is_empty() {
+        let cfg = Config::load(p.get("config"))?;
+        model = cfg.get_or("server", "model", &model).to_string();
+        tag = cfg.get_or("server", "tag", &tag).to_string();
+        ccfg.batcher.max_batch = cfg.get_usize("server", "max_batch", 8)?;
+        ccfg.batcher.max_wait =
+            std::time::Duration::from_millis(cfg.get_usize("server", "max_wait_ms", 5)? as u64);
+    } else {
+        ccfg.batcher.max_batch = p.get_usize("max-batch")?;
+        ccfg.batcher.max_wait =
+            std::time::Duration::from_millis(p.get_usize("max-wait-ms")? as u64);
+    }
+    let ia_bits = p.get_f64("ia-bits")? as f32;
+    let w_bits = p.get_f64("w-bits")? as f32;
+    let n_requests = p.get_usize("requests")?;
+
+    let artifacts = muxq::artifacts_dir();
+    let coord = Coordinator::start(&artifacts, ccfg)?;
+    let variant = VariantKey::eval(&model, &tag);
+    let meta = coord
+        .manifest()
+        .meta(&variant)
+        .ok_or_else(|| anyhow::anyhow!("variant {variant:?} not found; run `muxq variants`"))?
+        .clone();
+    println!("serving {model} [{tag}] batch={} seq={}", meta.batch, meta.seq);
+
+    if n_requests == 0 {
+        println!("idle-serving; ctrl-c to stop");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+
+    let seq = meta.seq;
+    let eval = EvalSet::load(&artifacts, "valid")?;
+    let windows = eval.windows(seq, n_requests);
+    let t0 = Instant::now();
+    let handles: Vec<_> = windows
+        .iter()
+        .cycle()
+        .take(n_requests)
+        .map(|w| {
+            coord.submit(ScoreRequest {
+                variant: variant.clone(),
+                tokens: w.clone(),
+                ia_bits,
+                w_bits,
+            })
+        })
+        .collect::<Result<_>>()?;
+    let results: Vec<_> = handles.into_iter().map(|h| h.wait()).collect::<Result<_>>()?;
+    let wall = t0.elapsed();
+    let pairs: Vec<(f32, f32)> = results.iter().map(|r| (r.nll, r.count)).collect();
+    let tokens: f32 = pairs.iter().map(|(_, c)| c).sum();
+    println!(
+        "\n{} requests in {:.2?}  ({:.1} req/s, {:.0} tok/s)  ppl={:.4}",
+        n_requests,
+        wall,
+        n_requests as f64 / wall.as_secs_f64(),
+        tokens as f64 / wall.as_secs_f64(),
+        perplexity(&pairs)
+    );
+    println!("\n{}", coord.metrics().render());
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_eval(args: &[String]) -> Result<()> {
+    let p = Cli::new("muxq eval", "one-off perplexity evaluation")
+        .opt("model", "sim-small", "model name")
+        .opt("method", "muxq", "fp16|naive|muxq|llmint8")
+        .opt("granularity", "per-tensor", "per-tensor|per-vector")
+        .opt("smooth", "false", "apply SmoothQuant migration (true|false)")
+        .opt("ia-bits", "8", "activation bits")
+        .opt("w-bits", "8", "weight bits")
+        .opt("windows", "16", "eval windows (0 = full valid split)")
+        .parse(args)?;
+    let g = if p.get("granularity") == "per-vector" { "pv" } else { "pt" };
+    let s = if p.get("smooth") == "true" { "-sq" } else { "" };
+    let tag = if p.get("method") == "fp16" {
+        "fp16-pt".to_string()
+    } else {
+        format!("{}-{g}{s}", p.get("method"))
+    };
+    let variant = VariantKey::eval(p.get("model"), &tag);
+
+    let registry = muxq::coordinator::VariantRegistry::open_default()?;
+    let Some(meta) = registry.meta(&variant) else {
+        bail!("variant {variant:?} not found; run `muxq variants`");
+    };
+    let (batch, seq) = (meta.batch, meta.seq);
+    let eval = EvalSet::load(&muxq::artifacts_dir(), "valid")?;
+    let windows = eval.windows(seq, p.get_usize("windows")?);
+    if windows.is_empty() {
+        bail!("no eval windows");
+    }
+    let compiled = registry.get(&variant)?;
+    let mut pairs = Vec::new();
+    let t0 = Instant::now();
+    for chunk in windows.chunks(batch) {
+        let mut toks = Vec::with_capacity(batch * seq);
+        for w in chunk {
+            toks.extend_from_slice(w);
+        }
+        for _ in chunk.len()..batch {
+            toks.extend_from_slice(&windows[0]); // pad
+        }
+        let out = compiled.run(
+            &toks,
+            p.get_f64("ia-bits")? as f32,
+            p.get_f64("w-bits")? as f32,
+        )?;
+        let nll = &out[0].data;
+        let count = &out[1].data;
+        for i in 0..chunk.len() {
+            pairs.push((nll[i], count[i]));
+        }
+    }
+    println!(
+        "{} [{}] ia={} w={}: ppl = {:.4}  ({} windows, {:.2?})",
+        p.get("model"),
+        tag,
+        p.get("ia-bits"),
+        p.get("w-bits"),
+        perplexity(&pairs),
+        pairs.len(),
+        t0.elapsed()
+    );
+    Ok(())
+}
+
+fn cmd_variants() -> Result<()> {
+    let manifest = muxq::coordinator::variants::Manifest::load(&muxq::artifacts_dir())?;
+    println!(
+        "{:<12} {:<8} {:<16} {:<10} {:<12} smooth",
+        "model", "kind", "tag", "method", "granularity"
+    );
+    for key in manifest.keys() {
+        let m = manifest.meta(&key).unwrap();
+        println!(
+            "{:<12} {:<8} {:<16} {:<10} {:<12} {}",
+            key.model, key.kind, key.tag, m.method, m.granularity, m.smooth
+        );
+    }
+    Ok(())
+}
+
+fn cmd_npusim() -> Result<()> {
+    use muxq::npusim::report::{compare, paper_geometries, render_table, sim_geometries};
+    use muxq::npusim::NpuConfig;
+    let cfg = NpuConfig::default();
+    println!("== NPU cost model: paper GPT-2 geometries (batch*seq=1024 tokens) ==");
+    let mut rows = Vec::new();
+    for (name, g) in paper_geometries() {
+        rows.extend(compare(&cfg, name, g, 8));
+    }
+    println!("{}", render_table(&rows));
+    println!("== sim models shipped in artifacts/ ==");
+    let mut rows = Vec::new();
+    for (name, g) in sim_geometries() {
+        rows.extend(compare(&cfg, name, g, 8));
+    }
+    println!("{}", render_table(&rows));
+    Ok(())
+}

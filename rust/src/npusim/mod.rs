@@ -1,0 +1,287 @@
+//! NPU cost model: a cycle-level systolic-array + DMA simulator.
+//!
+//! The paper's §4.5 *argues* (without measuring) that MUXQ's uniform INT8
+//! pipeline beats LLM.int8()'s mixed-precision decomposition on
+//! INT-oriented hardware. This module turns that argument into a
+//! reproducible experiment: it prices each method's per-layer GEMM plan on
+//! a parameterized accelerator and reports latency + energy.
+//!
+//! Model (deliberately simple, every term documented):
+//! * PE array `array_dim x array_dim`, output-stationary tiling: a tile
+//!   computes a `[T_a, T_a]` output block over the full K dimension;
+//!   pipeline cost per tile = `K + 2*array_dim` cycles (fill + drain).
+//! * INT8 MACs run 1/cycle/PE. INT4 runs `int4_speedup`x. FP16 runs at
+//!   `1/fp16_slowdown` (NPUs are INT-optimized; the paper's premise).
+//! * DMA: operands+result move HBM<->SRAM once per GEMM at `dram_gbps`;
+//!   compute and DMA overlap (latency = max, not sum).
+//! * Mixed-precision decomposition (LLM.int8()) pays a gather/scatter
+//!   pass over the activation matrix at `gather_bytes_per_cycle` (it is
+//!   not a streaming DMA pattern — the irregular-memory-access penalty
+//!   the paper cites) plus a pipeline flush between precision domains.
+//! * MUXQ pays the in-stream decompose (fused with quantization: free on
+//!   DMA-in), a *skinny* second GEMM over the r outlier channels and the
+//!   recombination add (`2^exp - 1` scaling folds into the dequant).
+
+pub mod gemm_plan;
+pub mod report;
+
+use crate::quant::Method;
+
+/// Accelerator parameters. Defaults model a mid-size edge NPU
+/// (128x128 INT8 array @ 1 GHz, 64 GB/s DRAM).
+#[derive(Debug, Clone)]
+pub struct NpuConfig {
+    pub array_dim: usize,
+    pub freq_ghz: f64,
+    pub dram_gbps: f64,
+    /// FP16 MAC throughput divisor vs INT8 (INT-oriented NPU premise).
+    pub fp16_slowdown: f64,
+    /// INT4 MAC throughput multiplier vs INT8.
+    pub int4_speedup: f64,
+    /// bytes/cycle for irregular gather/scatter (mixed-precision split).
+    pub gather_bytes_per_cycle: f64,
+    /// cycles to flush/refill the array between precision domains.
+    pub domain_switch_cycles: u64,
+    /// pJ per INT8 MAC (energy model; FP16 = 4x, SRAM/DRAM per-byte below)
+    pub pj_per_int8_mac: f64,
+    pub pj_per_fp16_mac: f64,
+    pub pj_per_dram_byte: f64,
+}
+
+impl Default for NpuConfig {
+    fn default() -> Self {
+        NpuConfig {
+            array_dim: 128,
+            freq_ghz: 1.0,
+            dram_gbps: 64.0,
+            fp16_slowdown: 4.0,
+            int4_speedup: 2.0,
+            gather_bytes_per_cycle: 16.0,
+            domain_switch_cycles: 2048,
+            pj_per_int8_mac: 0.2,
+            pj_per_fp16_mac: 0.8,
+            pj_per_dram_byte: 20.0,
+        }
+    }
+}
+
+/// Operand precision on the array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Int4,
+    Int8,
+    Fp16,
+}
+
+impl Precision {
+    pub fn bytes(self) -> f64 {
+        match self {
+            Precision::Int4 => 0.5,
+            Precision::Int8 => 1.0,
+            Precision::Fp16 => 2.0,
+        }
+    }
+}
+
+/// Cost of one dense GEMM `[m,k] @ [k,n]` at a precision.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Cost {
+    pub compute_cycles: f64,
+    pub dma_cycles: f64,
+    pub extra_cycles: f64,
+    pub energy_pj: f64,
+}
+
+impl Cost {
+    /// Latency with compute/DMA overlap.
+    pub fn cycles(&self) -> f64 {
+        self.compute_cycles.max(self.dma_cycles) + self.extra_cycles
+    }
+
+    pub fn latency_us(&self, cfg: &NpuConfig) -> f64 {
+        self.cycles() / (cfg.freq_ghz * 1e3)
+    }
+
+    pub fn add(&mut self, other: Cost) {
+        // sequential composition: both phases keep their internal overlap
+        self.extra_cycles += other.cycles();
+        self.energy_pj += other.energy_pj;
+    }
+}
+
+/// Price a dense GEMM on the array.
+pub fn gemm_cost(cfg: &NpuConfig, m: usize, k: usize, n: usize, prec: Precision) -> Cost {
+    let a = cfg.array_dim as f64;
+    let tiles_m = (m as f64 / a).ceil();
+    let tiles_n = (n as f64 / a).ceil();
+    let per_tile = k as f64 + 2.0 * a; // stream K + fill/drain
+    let slow = match prec {
+        Precision::Int8 => 1.0,
+        Precision::Int4 => 1.0 / cfg.int4_speedup,
+        Precision::Fp16 => cfg.fp16_slowdown,
+    };
+    let compute = tiles_m * tiles_n * per_tile * slow;
+
+    let op_bytes = (m * k + k * n) as f64 * prec.bytes() + (m * n) as f64 * 2.0; // out fp16
+    let bytes_per_cycle = cfg.dram_gbps * 1e9 / (cfg.freq_ghz * 1e9);
+    let dma = op_bytes / bytes_per_cycle;
+
+    let macs = (m * k * n) as f64;
+    let pj_mac = match prec {
+        Precision::Fp16 => cfg.pj_per_fp16_mac,
+        Precision::Int8 => cfg.pj_per_int8_mac,
+        Precision::Int4 => cfg.pj_per_int8_mac / 2.0,
+    };
+    Cost {
+        compute_cycles: compute,
+        dma_cycles: dma,
+        extra_cycles: 0.0,
+        energy_pj: macs * pj_mac + op_bytes * cfg.pj_per_dram_byte,
+    }
+}
+
+/// Price one projection layer `[t, k] @ [k, n]` for a method.
+/// `r` = number of outlier channels, `bits` = activation precision.
+pub fn layer_cost(
+    cfg: &NpuConfig,
+    method: Method,
+    t: usize,
+    k: usize,
+    n: usize,
+    r: usize,
+    bits: u32,
+) -> Cost {
+    let int_prec = if bits <= 4 { Precision::Int4 } else { Precision::Int8 };
+    match method {
+        Method::Fp16 => gemm_cost(cfg, t, k, n, Precision::Fp16),
+        Method::Naive => gemm_cost(cfg, t, k, n, int_prec),
+        Method::Muxq => {
+            // Body and Aux concatenate into ONE uniform-INT GEMM with
+            // inner dimension k + r:
+            //   Y = [Body | f*Aux] @ [W ; W_outlier_rows]
+            // (the (2^exp - 1) factor folds into Aux's dequant scale).
+            // Decompose fuses with the quantize-on-DMA-in pass, so the
+            // only cost over naive is streaming r extra channels — the
+            // "small additional computation" of the paper's conclusion.
+            gemm_cost(cfg, t, k + r, n, int_prec)
+        }
+        Method::LlmInt8 => {
+            // INT GEMM over normal channels + FP16 GEMM over outliers +
+            // irregular gather/scatter of the outlier slice + a precision
+            // domain switch.
+            let mut c = gemm_cost(cfg, t, k.saturating_sub(r).max(1), n, int_prec);
+            if r > 0 {
+                c.add(gemm_cost(cfg, t, r, n, Precision::Fp16));
+                let gather_bytes = (t * r) as f64 * 2.0 * 2.0; // gather + scatter, fp16
+                c.extra_cycles += gather_bytes / cfg.gather_bytes_per_cycle;
+                c.extra_cycles += cfg.domain_switch_cycles as f64;
+            }
+            c
+        }
+    }
+}
+
+/// End-to-end cost of a model's projection stack for one batch.
+/// Shapes: per block (c_attn [t,d,3d], attn_proj [t,d,d], c_fc [t,d,4d],
+/// mlp_proj [t,4d,d]); `r` outliers at the two post-LN sites.
+pub fn model_cost(
+    cfg: &NpuConfig,
+    method: Method,
+    n_layer: usize,
+    t: usize,
+    d: usize,
+    r: usize,
+    bits: u32,
+) -> Cost {
+    let mut total = Cost::default();
+    for _ in 0..n_layer {
+        total.add(layer_cost(cfg, method, t, d, 3 * d, r, bits)); // c_attn
+        total.add(layer_cost(cfg, method, t, d, d, 0, bits)); // attn_proj
+        total.add(layer_cost(cfg, method, t, d, 4 * d, r, bits)); // c_fc
+        total.add(layer_cost(cfg, method, t, 4 * d, d, 0, bits)); // mlp_proj
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T: usize = 1024;
+    const D: usize = 768;
+
+    #[test]
+    fn int8_beats_fp16_by_about_fp16_slowdown() {
+        let cfg = NpuConfig::default();
+        let fp = gemm_cost(&cfg, T, D, D, Precision::Fp16);
+        let i8 = gemm_cost(&cfg, T, D, D, Precision::Int8);
+        let ratio = fp.cycles() / i8.cycles();
+        // ">2x" is the paper's premise; with default params it's ~4x
+        // compute-bound, diluted by DMA overlap
+        assert!(ratio > 2.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn muxq_overhead_small_vs_naive() {
+        let cfg = NpuConfig::default();
+        let r = 8; // few outlier channels (the paper's premise)
+        let naive = model_cost(&cfg, Method::Naive, 12, T, D, r, 8);
+        let muxq = model_cost(&cfg, Method::Muxq, 12, T, D, r, 8);
+        let overhead = muxq.cycles() / naive.cycles() - 1.0;
+        assert!(overhead > 0.0);
+        assert!(overhead < 0.15, "muxq overhead {overhead}");
+    }
+
+    #[test]
+    fn muxq_faster_than_llmint8() {
+        let cfg = NpuConfig::default();
+        let r = 8;
+        let muxq = model_cost(&cfg, Method::Muxq, 12, T, D, r, 8);
+        let mixed = model_cost(&cfg, Method::LlmInt8, 12, T, D, r, 8);
+        assert!(
+            muxq.cycles() < mixed.cycles(),
+            "muxq {} vs llmint8 {}",
+            muxq.cycles(),
+            mixed.cycles()
+        );
+    }
+
+    #[test]
+    fn muxq_faster_than_fp16() {
+        let cfg = NpuConfig::default();
+        let muxq = model_cost(&cfg, Method::Muxq, 12, T, D, 8, 8);
+        let fp = model_cost(&cfg, Method::Fp16, 12, T, D, 0, 8);
+        assert!(muxq.cycles() < fp.cycles() / 1.5);
+    }
+
+    #[test]
+    fn int4_cheaper_than_int8() {
+        let cfg = NpuConfig::default();
+        let a = model_cost(&cfg, Method::Naive, 4, T, D, 0, 4);
+        let b = model_cost(&cfg, Method::Naive, 4, T, D, 0, 8);
+        assert!(a.cycles() < b.cycles());
+    }
+
+    #[test]
+    fn energy_ordering() {
+        let cfg = NpuConfig::default();
+        let r = 8;
+        let e_naive = model_cost(&cfg, Method::Naive, 12, T, D, r, 8).energy_pj;
+        let e_muxq = model_cost(&cfg, Method::Muxq, 12, T, D, r, 8).energy_pj;
+        let e_fp = model_cost(&cfg, Method::Fp16, 12, T, D, r, 8).energy_pj;
+        assert!(e_naive < e_muxq); // aux GEMM costs a bit
+        assert!(e_muxq < e_fp); // but INT stays well below FP16
+    }
+
+    #[test]
+    fn outlier_count_scales_gap() {
+        // more outlier channels -> llm.int8 pays more vs muxq
+        let cfg = NpuConfig::default();
+        let gap = |r| {
+            let m = model_cost(&cfg, Method::Muxq, 12, T, D, r, 8).cycles();
+            let l = model_cost(&cfg, Method::LlmInt8, 12, T, D, r, 8).cycles();
+            l / m
+        };
+        assert!(gap(32) > gap(4));
+    }
+}

@@ -1,0 +1,194 @@
+//! Symmetric abs-max quantization — the rust twin of
+//! `python/compile/kernels/ref.py` (cross-validated against
+//! `artifacts/goldens/quant.bin` in `tests/golden_quant.rs`).
+
+use super::matrix::{rint, MatF32, MatI8};
+
+/// Matches ref.py EPS: scales are floored so all-zero slices stay finite.
+pub const EPS: f32 = 1e-8;
+
+/// Quantization granularity (paper Fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Granularity {
+    /// one scale for the whole tensor
+    PerTensor,
+    /// one scale per row (per-token for activations)
+    PerRow,
+    /// one scale per column (per-output-channel for weights)
+    PerCol,
+}
+
+impl Granularity {
+    /// Parse the manifest/CLI spelling.
+    pub fn parse(s: &str) -> Option<(Granularity, Granularity)> {
+        // returns (activation, weight) granularities for a variant tag
+        match s {
+            "per-tensor" | "pt" => Some((Granularity::PerTensor, Granularity::PerTensor)),
+            "per-vector" | "pv" => Some((Granularity::PerRow, Granularity::PerCol)),
+            _ => None,
+        }
+    }
+}
+
+/// qmax = 2^(bits-1) - 1 (symmetric signed grid).
+#[inline]
+pub fn qmax_from_bits(bits: u32) -> f32 {
+    (1u32 << (bits - 1)) as f32 - 1.0
+}
+
+/// Per-slice scales for a matrix at the given granularity.
+#[derive(Debug, Clone)]
+pub enum Scales {
+    Tensor(f32),
+    Rows(Vec<f32>),
+    Cols(Vec<f32>),
+}
+
+impl Scales {
+    pub fn compute(x: &MatF32, qmax: f32, gran: Granularity) -> Scales {
+        let f = |m: f32| m.max(EPS) / qmax;
+        match gran {
+            Granularity::PerTensor => Scales::Tensor(f(x.absmax())),
+            Granularity::PerRow => Scales::Rows(x.absmax_rows().into_iter().map(f).collect()),
+            Granularity::PerCol => Scales::Cols(x.absmax_cols().into_iter().map(f).collect()),
+        }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        match self {
+            Scales::Tensor(s) => *s,
+            Scales::Rows(v) => v[r],
+            Scales::Cols(v) => v[c],
+        }
+    }
+}
+
+/// quantize -> dequantize in place semantics (returns a new matrix).
+pub fn fake_quant(x: &MatF32, scales: &Scales, qmax: f32) -> MatF32 {
+    let mut out = MatF32::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        for c in 0..x.cols {
+            let s = scales.at(r, c);
+            let q = rint(x.at(r, c) / s).clamp(-qmax, qmax);
+            *out.at_mut(r, c) = q * s;
+        }
+    }
+    out
+}
+
+/// One-call naive fake quant (compute scales + apply).
+pub fn fq_naive(x: &MatF32, qmax: f32, gran: Granularity) -> MatF32 {
+    let s = Scales::compute(x, qmax, gran);
+    fake_quant(x, &s, qmax)
+}
+
+/// Quantize to an i8 grid (true INT pipeline operand). qmax must be <= 127.
+pub fn quantize_i8(x: &MatF32, scales: &Scales, qmax: f32) -> MatI8 {
+    debug_assert!(qmax <= 127.0);
+    let mut out = MatI8::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        let base = r * x.cols;
+        for c in 0..x.cols {
+            let s = scales.at(r, c);
+            let q = rint(x.data[base + c] / s).clamp(-qmax, qmax);
+            out.data[base + c] = q as i8;
+        }
+    }
+    out
+}
+
+/// Mean absolute quantization error of naive fake quant (Fig. 3 metric).
+pub fn quant_error(x: &MatF32, qmax: f32, gran: Granularity) -> f32 {
+    fq_naive(x, qmax, gran).mean_abs_diff(x)
+}
+
+/// Signal-to-quantization-noise ratio in dB (10 log10 P_sig/P_noise).
+pub fn sqnr_db(x: &MatF32, y: &MatF32) -> f32 {
+    let sig: f64 = x.data.iter().map(|v| (*v as f64).powi(2)).sum();
+    let noise: f64 = x
+        .data
+        .iter()
+        .zip(&y.data)
+        .map(|(a, b)| ((*a - *b) as f64).powi(2))
+        .sum();
+    if noise == 0.0 {
+        return f32::INFINITY;
+    }
+    (10.0 * (sig / noise).log10()) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: usize, cols: usize, seed: u64) -> MatF32 {
+        // simple deterministic pseudo-values
+        let mut rng = crate::data::prng::SplitMix64::new(seed);
+        let data = (0..rows * cols)
+            .map(|_| (rng.next_f64() as f32 - 0.5) * 4.0)
+            .collect();
+        MatF32::from_vec(rows, cols, data).unwrap()
+    }
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(qmax_from_bits(8), 127.0);
+        assert_eq!(qmax_from_bits(4), 7.0);
+        assert_eq!(qmax_from_bits(2), 1.0);
+    }
+
+    #[test]
+    fn fake_quant_bounded_error() {
+        let x = mat(16, 16, 1);
+        let y = fq_naive(&x, 127.0, Granularity::PerTensor);
+        // max error is half a quantization step
+        let step = x.absmax() / 127.0;
+        assert!(x.max_abs_diff(&y) <= step / 2.0 + 1e-6);
+    }
+
+    #[test]
+    fn per_row_beats_per_tensor_with_row_outlier() {
+        let mut x = mat(8, 8, 2);
+        for c in 0..8 {
+            *x.at_mut(0, c) *= 50.0; // one hot row
+        }
+        let e_pt = quant_error(&x, 127.0, Granularity::PerTensor);
+        let e_pr = quant_error(&x, 127.0, Granularity::PerRow);
+        assert!(e_pr < e_pt);
+    }
+
+    #[test]
+    fn error_monotone_in_bits() {
+        let x = mat(32, 32, 3);
+        let mut prev = f32::INFINITY;
+        for bits in [4u32, 6, 8] {
+            let e = quant_error(&x, qmax_from_bits(bits), Granularity::PerTensor);
+            assert!(e < prev);
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn quantize_i8_in_range() {
+        let x = mat(8, 8, 4);
+        let s = Scales::compute(&x, 127.0, Granularity::PerTensor);
+        let q = quantize_i8(&x, &s, 127.0);
+        assert!(q.data.iter().all(|&v| (-127..=127).contains(&(v as i32))));
+    }
+
+    #[test]
+    fn zero_matrix_safe() {
+        let x = MatF32::zeros(4, 4);
+        let y = fq_naive(&x, 127.0, Granularity::PerRow);
+        assert!(y.data.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn sqnr_improves_with_bits() {
+        let x = mat(32, 32, 5);
+        let a = sqnr_db(&x, &fq_naive(&x, qmax_from_bits(4), Granularity::PerTensor));
+        let b = sqnr_db(&x, &fq_naive(&x, qmax_from_bits(8), Granularity::PerTensor));
+        assert!(b > a + 15.0, "expected ~24dB gain, got {a} -> {b}");
+    }
+}

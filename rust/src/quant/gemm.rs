@@ -1,0 +1,188 @@
+//! Blocked GEMM kernels: f32 reference and the i8xi8 -> i32 integer
+//! pipeline (the operation MUXQ keeps *uniform* on INT hardware).
+//!
+//! The i8 kernel is the rust hot path for the native engine benches; it is
+//! cache-blocked and accumulates in i32 exactly like an NPU MAC array
+//! would. Perf notes live in EXPERIMENTS.md §Perf.
+
+use super::absmax::{Granularity, Scales};
+use super::matrix::{MatF32, MatI32, MatI8};
+
+/// Cache block sizes for the f32 kernel (L1-friendly on typical x86).
+const BM: usize = 32;
+const BN: usize = 64;
+const BK: usize = 64;
+
+/// Reference f32 GEMM: C = A @ B. Blocked i-k-j loop order (row-major
+/// streaming on both operands).
+pub fn matmul_f32(a: &MatF32, b: &MatF32) -> MatF32 {
+    assert_eq!(a.cols, b.rows, "inner dims {}x{}", a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = MatF32::zeros(m, n);
+    for i0 in (0..m).step_by(BM) {
+        let i1 = (i0 + BM).min(m);
+        for k0 in (0..k).step_by(BK) {
+            let k1 = (k0 + BK).min(k);
+            for j0 in (0..n).step_by(BN) {
+                let j1 = (j0 + BN).min(n);
+                for i in i0..i1 {
+                    let arow = a.row(i);
+                    let crow = &mut c.data[i * n..(i + 1) * n];
+                    for kk in k0..k1 {
+                        let av = arow[kk];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b.data[kk * n..(kk + 1) * n];
+                        for j in j0..j1 {
+                            crow[j] += av * brow[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Integer GEMM: C_i32 = A_i8 @ B_i8 with i32 accumulation.
+pub fn matmul_i8(a: &MatI8, b: &MatI8) -> MatI32 {
+    assert_eq!(a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = MatI32::zeros(m, n);
+    for i0 in (0..m).step_by(BM) {
+        let i1 = (i0 + BM).min(m);
+        for k0 in (0..k).step_by(BK) {
+            let k1 = (k0 + BK).min(k);
+            for i in i0..i1 {
+                let arow = a.row(i);
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let av = arow[kk] as i32;
+                    if av == 0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * *bv as i32;
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Dequantize an integer GEMM result: C_f32[i,j] = acc[i,j] * sx(i) * sw(j).
+pub fn dequant(acc: &MatI32, sx: &Scales, sw: &Scales) -> MatF32 {
+    let mut out = MatF32::zeros(acc.rows, acc.cols);
+    for r in 0..acc.rows {
+        for c in 0..acc.cols {
+            let s = sx.at(r, 0) * sw.at(0, c);
+            *out.at_mut(r, c) = acc.data[r * acc.cols + c] as f32 * s;
+        }
+    }
+    out
+}
+
+/// Full quantize -> int matmul -> dequant pipeline (the rust twin of
+/// `quant_matmul_pallas`). Granularities: activation PerRow|PerTensor,
+/// weight PerCol|PerTensor.
+pub fn quant_matmul(
+    x: &MatF32,
+    w: &MatF32,
+    qmax: f32,
+    gx: Granularity,
+    gw: Granularity,
+) -> MatF32 {
+    let sx = Scales::compute(x, qmax, gx);
+    let sw = Scales::compute(w, qmax, gw);
+    let xq = super::absmax::quantize_i8(x, &sx, qmax);
+    let wq = super::absmax::quantize_i8(w, &sw, qmax);
+    let acc = matmul_i8(&xq, &wq);
+    dequant(&acc, &sx, &sw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::prng::SplitMix64;
+
+    fn mat(rows: usize, cols: usize, seed: u64) -> MatF32 {
+        let mut rng = SplitMix64::new(seed);
+        MatF32::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0).collect(),
+        )
+        .unwrap()
+    }
+
+    fn matmul_naive(a: &MatF32, b: &MatF32) -> MatF32 {
+        let mut c = MatF32::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0f64;
+                for k in 0..a.cols {
+                    acc += a.at(i, k) as f64 * b.at(k, j) as f64;
+                }
+                *c.at_mut(i, j) = acc as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (33, 65, 17), (64, 64, 64)] {
+            let a = mat(m, k, 1);
+            let b = mat(k, n, 2);
+            let c = matmul_f32(&a, &b);
+            let r = matmul_naive(&a, &b);
+            assert!(c.max_abs_diff(&r) < 1e-4, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn i8_matmul_exact() {
+        // small integer values: blocked i8 path must be exact vs f64
+        let mut a8 = MatI8::zeros(5, 9);
+        let mut b8 = MatI8::zeros(9, 4);
+        let mut rng = SplitMix64::new(3);
+        for v in a8.data.iter_mut() {
+            *v = (rng.next_below(255) as i32 - 127) as i8;
+        }
+        for v in b8.data.iter_mut() {
+            *v = (rng.next_below(255) as i32 - 127) as i8;
+        }
+        let c = matmul_i8(&a8, &b8);
+        for i in 0..5 {
+            for j in 0..4 {
+                let want: i32 = (0..9).map(|k| a8.row(i)[k] as i32 * b8.data[k * 4 + j] as i32).sum();
+                assert_eq!(c.data[i * 4 + j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn quant_matmul_close_to_fp() {
+        let x = mat(16, 32, 4);
+        let w = mat(32, 8, 5);
+        let exact = matmul_f32(&x, &w);
+        let q = quant_matmul(&x, &w, 127.0, Granularity::PerRow, Granularity::PerCol);
+        // int8 per-vector error on unit-scale data is small
+        assert!(q.mean_abs_diff(&exact) < 0.05, "mae {}", q.mean_abs_diff(&exact));
+    }
+
+    #[test]
+    fn quant_matmul_error_shrinks_with_bits() {
+        let x = mat(16, 32, 6);
+        let w = mat(32, 8, 7);
+        let exact = matmul_f32(&x, &w);
+        let e4 = quant_matmul(&x, &w, 7.0, Granularity::PerTensor, Granularity::PerTensor)
+            .mean_abs_diff(&exact);
+        let e8 = quant_matmul(&x, &w, 127.0, Granularity::PerTensor, Granularity::PerTensor)
+            .mean_abs_diff(&exact);
+        assert!(e8 < e4);
+    }
+}

@@ -1,0 +1,170 @@
+//! LLM.int8() baseline (Dettmers et al., 2022): mixed-precision
+//! decomposition — outlier channels stay FP16, the rest go INT8.
+//!
+//! This is the comparison point the paper positions MUXQ against: accurate
+//! but hardware-unfriendly (irregular gather/scatter + a second FP GEMM on
+//! the accelerator). The `npusim` module prices exactly that difference.
+
+use super::absmax::{fake_quant, fq_naive, Granularity, Scales};
+use super::gemm::{dequant, matmul_f32, matmul_i8};
+use super::matrix::MatF32;
+use super::muxq::{gather_outlier_rows, outlier_mask};
+
+/// LLM.int8() fake quantization of activations: outlier columns bit-exact
+/// FP, the rest abs-max fake-quantized with scales over non-outliers only.
+/// (python ref.fq_llmint8_act twin)
+pub fn fq_llmint8_act(x: &MatF32, qmax: f32, gran: Granularity, theta: f32) -> MatF32 {
+    let mask = outlier_mask(x, theta);
+    let mut x_norm = x.clone();
+    for r in 0..x.rows {
+        let row = x_norm.row_mut(r);
+        for (c, m) in mask.iter().enumerate() {
+            if *m {
+                row[c] = 0.0;
+            }
+        }
+    }
+    let s = Scales::compute(&x_norm, qmax, gran);
+    let mut out = fake_quant(&x_norm, &s, qmax);
+    for r in 0..x.rows {
+        let xr = x.row(r);
+        let or = out.row_mut(r);
+        for (c, m) in mask.iter().enumerate() {
+            if *m {
+                or[c] = xr[c];
+            }
+        }
+    }
+    out
+}
+
+/// LLM.int8() weight side: rows feeding outlier channels stay FP.
+pub fn fq_llmint8_weight(w: &MatF32, qmax: f32, gran: Granularity, mask: &[bool]) -> MatF32 {
+    let mut wq = fq_naive(w, qmax, gran);
+    for (r, m) in mask.iter().enumerate() {
+        if *m {
+            wq.row_mut(r).copy_from_slice(w.row(r));
+        }
+    }
+    wq
+}
+
+/// The mixed-precision matmul: INT8 GEMM over normal channels + FP GEMM
+/// over the outlier slice (the irregular part MUXQ eliminates).
+pub fn llmint8_matmul(
+    x: &MatF32,
+    w: &MatF32,
+    qmax: f32,
+    gx: Granularity,
+    gw: Granularity,
+    theta: f32,
+) -> MatF32 {
+    let mask = outlier_mask(x, theta);
+
+    // normal channels -> INT path (zero out outlier columns / rows)
+    let mut x_norm = x.clone();
+    for r in 0..x.rows {
+        let row = x_norm.row_mut(r);
+        for (c, m) in mask.iter().enumerate() {
+            if *m {
+                row[c] = 0.0;
+            }
+        }
+    }
+    let mut w_norm = w.clone();
+    for (r, m) in mask.iter().enumerate() {
+        if *m {
+            for v in w_norm.row_mut(r) {
+                *v = 0.0;
+            }
+        }
+    }
+    let sx = Scales::compute(&x_norm, qmax, gx);
+    let sw = Scales::compute(&w_norm, qmax, gw);
+    let xq = super::absmax::quantize_i8(&x_norm, &sx, qmax);
+    let wq = super::absmax::quantize_i8(&w_norm, &sw, qmax);
+    let mut y = dequant(&matmul_i8(&xq, &wq), &sx, &sw);
+
+    // outlier slice -> FP16 path (gathered, dense-but-skinny)
+    let idx: Vec<usize> = mask.iter().enumerate().filter(|(_, m)| **m).map(|(i, _)| i).collect();
+    if !idx.is_empty() {
+        let x_out = super::muxq::gather_outlier_cols(x, &mask, 1.0);
+        let w_out = gather_outlier_rows(w, &mask);
+        let y_fp = matmul_f32(&x_out, &w_out);
+        for (yv, fv) in y.data.iter_mut().zip(&y_fp.data) {
+            *yv += fv;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::prng::SplitMix64;
+
+    fn outlier_mat(rows: usize, cols: usize, seed: u64, out_cols: &[usize], scale: f32) -> MatF32 {
+        let mut rng = SplitMix64::new(seed);
+        let mut m = MatF32::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| (rng.next_f64() as f32 - 0.5) * 4.0).collect(),
+        )
+        .unwrap();
+        for r in 0..rows {
+            for &c in out_cols {
+                *m.at_mut(r, c) *= scale;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn outlier_columns_bit_exact() {
+        let x = outlier_mat(16, 16, 1, &[4, 11], 30.0);
+        let y = fq_llmint8_act(&x, 127.0, Granularity::PerTensor, 6.0);
+        for r in 0..16 {
+            assert_eq!(y.at(r, 4), x.at(r, 4));
+            assert_eq!(y.at(r, 11), x.at(r, 11));
+        }
+    }
+
+    #[test]
+    fn beats_naive_with_outliers() {
+        let x = outlier_mat(64, 64, 2, &[0, 9, 33], 25.0);
+        let e_int8 = fq_llmint8_act(&x, 127.0, Granularity::PerTensor, 6.0).mean_abs_diff(&x);
+        let e_naive =
+            super::super::absmax::fq_naive(&x, 127.0, Granularity::PerTensor).mean_abs_diff(&x);
+        assert!(e_int8 < e_naive);
+    }
+
+    #[test]
+    fn accuracy_order_llmint8_muxq_naive() {
+        // the Table 1 ordering at 6 bits per-tensor
+        use super::super::muxq::{fq_muxq, MuxqParams};
+        let x = outlier_mat(64, 64, 3, &[2, 17, 40, 55], 30.0);
+        let qmax = 31.0;
+        let e_naive =
+            super::super::absmax::fq_naive(&x, qmax, Granularity::PerTensor).mean_abs_diff(&x);
+        let e_muxq =
+            fq_muxq(&x, qmax, Granularity::PerTensor, &MuxqParams::default()).mean_abs_diff(&x);
+        let e_int8 = fq_llmint8_act(&x, qmax, Granularity::PerTensor, 6.0).mean_abs_diff(&x);
+        assert!(e_int8 <= e_muxq, "int8 {e_int8} muxq {e_muxq}");
+        assert!(e_muxq < e_naive, "muxq {e_muxq} naive {e_naive}");
+    }
+
+    #[test]
+    fn mixed_matmul_close_to_fp() {
+        let x = outlier_mat(32, 48, 4, &[5, 25], 25.0);
+        let mut rng = SplitMix64::new(5);
+        let w = MatF32::from_vec(
+            48,
+            16,
+            (0..48 * 16).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0).collect(),
+        )
+        .unwrap();
+        let exact = matmul_f32(&x, &w);
+        let y = llmint8_matmul(&x, &w, 127.0, Granularity::PerRow, Granularity::PerCol, 6.0);
+        assert!(y.mean_abs_diff(&exact) < 0.1, "mae {}", y.mean_abs_diff(&exact));
+    }
+}

@@ -1,0 +1,185 @@
+//! Dense row-major f32 / i8 / i32 matrices — the numeric substrate for the
+//! rust-native quantization engine.
+//!
+//! Deliberately minimal (no external linear-algebra crates in the offline
+//! image): just enough structure for the quantization transforms, the
+//! blocked GEMMs and the GPT-2 forward.
+
+use anyhow::{bail, Result};
+
+/// Row-major f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatF32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl MatF32 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatF32 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            bail!("shape {rows}x{cols} != {} elements", data.len());
+        }
+        Ok(MatF32 { rows, cols, data })
+    }
+
+    #[inline(always)]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline(always)]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline(always)]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline(always)]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Per-matrix absolute maximum.
+    pub fn absmax(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    /// Per-row absolute maxima (per-token granularity).
+    pub fn absmax_rows(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| self.row(r).iter().fold(0.0f32, |m, v| m.max(v.abs())))
+            .collect()
+    }
+
+    /// Per-column absolute maxima (per-channel granularity).
+    pub fn absmax_cols(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for (m, v) in out.iter_mut().zip(row) {
+                *m = m.max(v.abs());
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> MatF32 {
+        let mut t = MatF32::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                *t.at_mut(c, r) = self.at(r, c);
+            }
+        }
+        t
+    }
+
+    /// Mean absolute difference against another matrix of the same shape.
+    pub fn mean_abs_diff(&self, other: &MatF32) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let n = self.data.len().max(1);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / n as f32
+    }
+
+    pub fn max_abs_diff(&self, other: &MatF32) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+/// Row-major i8 matrix (quantized operand storage).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatI8 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i8>,
+}
+
+impl MatI8 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatI8 { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    #[inline(always)]
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+/// Row-major i32 matrix (integer accumulator).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatI32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i32>,
+}
+
+impl MatI32 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatI32 { rows, cols, data: vec![0; rows * cols] }
+    }
+}
+
+/// IEEE round-half-to-even for f32 — matches `jnp.round` / numpy `rint`.
+/// (`f32::round` rounds half *away from zero*, which diverges from the
+/// python oracle on exact .5 grid points.)
+#[inline(always)]
+pub fn rint(x: f32) -> f32 {
+    x.round_ties_even()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rint_half_to_even() {
+        assert_eq!(rint(0.5), 0.0);
+        assert_eq!(rint(1.5), 2.0);
+        assert_eq!(rint(2.5), 2.0);
+        assert_eq!(rint(-0.5), 0.0);
+        assert_eq!(rint(-1.5), -2.0);
+        assert_eq!(rint(3.2), 3.0);
+        assert_eq!(rint(-3.7), -4.0);
+    }
+
+    #[test]
+    fn absmax_variants() {
+        let m = MatF32::from_vec(2, 3, vec![1.0, -5.0, 2.0, -3.0, 4.0, 0.5]).unwrap();
+        assert_eq!(m.absmax(), 5.0);
+        assert_eq!(m.absmax_rows(), vec![5.0, 4.0]);
+        assert_eq!(m.absmax_cols(), vec![3.0, 5.0, 2.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = MatF32::from_vec(2, 3, (0..6).map(|v| v as f32).collect()).unwrap();
+        let t = m.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.at(2, 1), m.at(1, 2));
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn from_vec_shape_check() {
+        assert!(MatF32::from_vec(2, 2, vec![0.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! Unified method dispatch: one enum covering every scheme in the paper's
+//! evaluation, used by examples, benches and the coordinator's variant
+//! registry.
+
+use super::absmax::{fq_naive, Granularity};
+use super::gemm::{matmul_f32, quant_matmul};
+use super::llmint8::{fq_llmint8_act, llmint8_matmul};
+use super::matrix::MatF32;
+use super::muxq::{fq_muxq, muxq_matmul_int, MuxqParams};
+use anyhow::{bail, Result};
+
+/// Quantization method (Table 1 columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    Fp16,
+    Naive,
+    Muxq,
+    LlmInt8,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "fp16" => Method::Fp16,
+            "naive" => Method::Naive,
+            "muxq" => Method::Muxq,
+            "llmint8" | "llm.int8" | "llm.int8()" => Method::LlmInt8,
+            _ => bail!("unknown method {s:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Fp16 => "fp16",
+            Method::Naive => "naive",
+            Method::Muxq => "muxq",
+            Method::LlmInt8 => "llm.int8()",
+        }
+    }
+}
+
+/// A full quantization specification (method + granularity + bits + MUXQ
+/// hyper-parameters).
+#[derive(Debug, Clone, Copy)]
+pub struct QuantSpec {
+    pub method: Method,
+    pub act_gran: Granularity,
+    pub w_gran: Granularity,
+    pub ia_bits: u32,
+    pub w_bits: u32,
+    pub muxq: MuxqParams,
+}
+
+impl QuantSpec {
+    pub fn new(method: Method, granularity: &str, ia_bits: u32, w_bits: u32) -> Result<Self> {
+        let Some((act_gran, w_gran)) = Granularity::parse(granularity) else {
+            bail!("unknown granularity {granularity:?}");
+        };
+        Ok(QuantSpec { method, act_gran, w_gran, ia_bits, w_bits, muxq: MuxqParams::default() })
+    }
+
+    pub fn ia_qmax(&self) -> f32 {
+        super::absmax::qmax_from_bits(self.ia_bits)
+    }
+
+    pub fn w_qmax(&self) -> f32 {
+        super::absmax::qmax_from_bits(self.w_bits)
+    }
+
+    /// Fake-quantize activations (paper's evaluation pipeline).
+    pub fn fq_act(&self, x: &MatF32) -> MatF32 {
+        match self.method {
+            Method::Fp16 => x.clone(),
+            Method::Naive => fq_naive(x, self.ia_qmax(), self.act_gran),
+            Method::Muxq => fq_muxq(x, self.ia_qmax(), self.act_gran, &self.muxq),
+            Method::LlmInt8 => fq_llmint8_act(x, self.ia_qmax(), self.act_gran, self.muxq.theta),
+        }
+    }
+
+    /// Quantized matmul on the *true INT* path where the method allows it
+    /// (the paper's deployment story), FP/mixed elsewhere.
+    pub fn matmul(&self, x: &MatF32, w: &MatF32) -> MatF32 {
+        match self.method {
+            Method::Fp16 => matmul_f32(x, w),
+            Method::Naive => quant_matmul(x, w, self.ia_qmax(), self.act_gran, self.w_gran),
+            Method::Muxq => {
+                muxq_matmul_int(x, w, self.ia_qmax(), self.act_gran, self.w_gran, &self.muxq)
+            }
+            Method::LlmInt8 => llmint8_matmul(
+                x,
+                w,
+                self.ia_qmax(),
+                self.act_gran,
+                self.w_gran,
+                self.muxq.theta,
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::prng::SplitMix64;
+
+    fn outlier_mat(rows: usize, cols: usize, seed: u64) -> MatF32 {
+        let mut rng = SplitMix64::new(seed);
+        let mut m = MatF32::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| (rng.next_f64() as f32 - 0.5) * 4.0).collect(),
+        )
+        .unwrap();
+        for r in 0..rows {
+            *m.at_mut(r, 3) *= 25.0;
+        }
+        m
+    }
+
+    #[test]
+    fn parse_methods() {
+        assert_eq!(Method::parse("muxq").unwrap(), Method::Muxq);
+        assert_eq!(Method::parse("llm.int8()").unwrap(), Method::LlmInt8);
+        assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn spec_qmax() {
+        let s = QuantSpec::new(Method::Naive, "per-tensor", 8, 4).unwrap();
+        assert_eq!(s.ia_qmax(), 127.0);
+        assert_eq!(s.w_qmax(), 7.0);
+    }
+
+    #[test]
+    fn table1_error_ordering_all_methods() {
+        let x = outlier_mat(64, 64, 1);
+        let mk = |m| QuantSpec::new(m, "per-tensor", 6, 8).unwrap();
+        let e = |m: Method| mk(m).fq_act(&x).mean_abs_diff(&x);
+        assert_eq!(e(Method::Fp16), 0.0);
+        assert!(e(Method::LlmInt8) <= e(Method::Muxq));
+        assert!(e(Method::Muxq) < e(Method::Naive));
+    }
+
+    #[test]
+    fn matmul_dispatch_all() {
+        let x = outlier_mat(16, 32, 2);
+        let mut rng = SplitMix64::new(3);
+        let w = MatF32::from_vec(
+            32,
+            8,
+            (0..32 * 8).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0).collect(),
+        )
+        .unwrap();
+        let exact = matmul_f32(&x, &w);
+        for method in [Method::Fp16, Method::Naive, Method::Muxq, Method::LlmInt8] {
+            let y = QuantSpec::new(method, "per-vector", 8, 8).unwrap().matmul(&x, &w);
+            assert_eq!((y.rows, y.cols), (16, 8));
+            assert!(y.mean_abs_diff(&exact) < 0.2, "{method:?}");
+        }
+    }
+}

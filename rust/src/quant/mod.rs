@@ -1,0 +1,26 @@
+//! Rust-native quantization engine — the twin of the python/jax reference
+//! (`python/compile/kernels/ref.py`), cross-validated against
+//! `artifacts/goldens/quant.bin`.
+//!
+//! Modules:
+//! * [`matrix`] — dense f32/i8/i32 matrices + IEEE rint
+//! * [`absmax`] — symmetric abs-max quantization at all granularities
+//! * [`gemm`] — blocked f32 and i8→i32 GEMMs, quantize-compute-dequant
+//! * [`muxq`] — the paper's outlier decomposition + uniform-INT two-GEMM
+//! * [`llmint8`] — the mixed-precision baseline
+//! * [`smooth`] — SmoothQuant migration (composable with MUXQ)
+//! * [`method`] — unified method dispatch used by examples/benches
+
+pub mod absmax;
+pub mod gemm;
+pub mod group;
+pub mod llmint8;
+pub mod matrix;
+pub mod method;
+pub mod muxq;
+pub mod smooth;
+
+pub use absmax::{fq_naive, qmax_from_bits, Granularity, Scales};
+pub use matrix::{MatF32, MatI32, MatI8};
+pub use method::{Method, QuantSpec};
+pub use muxq::MuxqParams;

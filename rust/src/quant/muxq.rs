@@ -1,0 +1,305 @@
+//! MUXQ — the paper's contribution (§3): outlier-channel decomposition
+//! enabling *uniform* INT quantization.
+//!
+//! Rust twin of `ref.fq_muxq` / `quant.quant_linear_int` (python), used by
+//! the native engine, Fig.1/Fig.3 regenerators and the NPU-simulator
+//! workloads. Cross-validated against python goldens in
+//! `tests/golden_quant.rs`.
+
+use super::absmax::{fake_quant, Granularity, Scales};
+use super::gemm::{dequant, matmul_i8};
+use super::matrix::{MatF32, MatI8};
+
+/// MUXQ hyper-parameters (paper §3.3).
+#[derive(Debug, Clone, Copy)]
+pub struct MuxqParams {
+    /// outlier criterion: channel has any |x| > theta (LLM.int8() default 6)
+    pub theta: f32,
+    /// Body = X_outlier >> exp_factor (divide by 2^exp_factor)
+    pub exp_factor: u32,
+}
+
+impl Default for MuxqParams {
+    fn default() -> Self {
+        MuxqParams { theta: 6.0, exp_factor: 2 }
+    }
+}
+
+impl MuxqParams {
+    /// 2^exp − 1, the Aux recombination weight of eq. 6/7.
+    pub fn aux_weight(&self) -> f32 {
+        (1u32 << self.exp_factor) as f32 - 1.0
+    }
+
+    pub fn inv_shift(&self) -> f32 {
+        1.0 / (1u32 << self.exp_factor) as f32
+    }
+}
+
+/// Per-channel outlier mask: `mask[c] == true` iff any row has
+/// |x[r][c]| > theta.
+pub fn outlier_mask(x: &MatF32, theta: f32) -> Vec<bool> {
+    let mut mask = vec![false; x.cols];
+    for r in 0..x.rows {
+        let row = x.row(r);
+        for (m, v) in mask.iter_mut().zip(row) {
+            *m |= v.abs() > theta;
+        }
+    }
+    mask
+}
+
+/// Count of outlier channels (Aux GEMM width — the "low-rank" r).
+pub fn outlier_count(mask: &[bool]) -> usize {
+    mask.iter().filter(|m| **m).count()
+}
+
+/// Decompose X into (Body, Aux) per paper eqs. 4–5. Both are full-width;
+/// Aux is zero outside outlier columns (the *compact* Aux used by the INT
+/// pipeline is built by [`gather_outlier_cols`]).
+pub fn decompose(x: &MatF32, mask: &[bool], p: &MuxqParams) -> (MatF32, MatF32) {
+    assert_eq!(mask.len(), x.cols);
+    let inv = p.inv_shift();
+    let mut body = MatF32::zeros(x.rows, x.cols);
+    let mut aux = MatF32::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        let xr = x.row(r);
+        let br = &mut body.data[r * x.cols..(r + 1) * x.cols];
+        let ar = &mut aux.data[r * x.cols..(r + 1) * x.cols];
+        for c in 0..x.cols {
+            if mask[c] {
+                let v = xr[c] * inv;
+                br[c] = v;
+                ar[c] = v;
+            } else {
+                br[c] = xr[c];
+            }
+        }
+    }
+    (body, aux)
+}
+
+/// Exact reconstruction (paper eq. 6): X = Body + (2^exp − 1) · Aux.
+pub fn reconstruct(body: &MatF32, aux: &MatF32, p: &MuxqParams) -> MatF32 {
+    let f = p.aux_weight();
+    let mut out = body.clone();
+    for (o, a) in out.data.iter_mut().zip(&aux.data) {
+        *o += f * a;
+    }
+    out
+}
+
+/// MUXQ fake quantization of activations (python ref.fq_muxq twin).
+pub fn fq_muxq(x: &MatF32, qmax: f32, gran: Granularity, p: &MuxqParams) -> MatF32 {
+    let mask = outlier_mask(x, p.theta);
+    let (body, aux) = decompose(x, &mask, p);
+    let sb = Scales::compute(&body, qmax, gran);
+    let sa = Scales::compute(&aux, qmax, gran);
+    let body_q = fake_quant(&body, &sb, qmax);
+    let aux_q = fake_quant(&aux, &sa, qmax);
+    reconstruct(&body_q, &aux_q, p)
+}
+
+/// Gather the outlier columns of X (shifted) into a compact [rows, r]
+/// matrix — the skinny Aux operand of the second GEMM in eq. 7.
+pub fn gather_outlier_cols(x: &MatF32, mask: &[bool], inv: f32) -> MatF32 {
+    let idx: Vec<usize> = mask.iter().enumerate().filter(|(_, m)| **m).map(|(i, _)| i).collect();
+    let mut out = MatF32::zeros(x.rows, idx.len());
+    for r in 0..x.rows {
+        let xr = x.row(r);
+        for (j, &c) in idx.iter().enumerate() {
+            *out.at_mut(r, j) = xr[c] * inv;
+        }
+    }
+    out
+}
+
+/// Gather the matching weight rows into [r, n].
+pub fn gather_outlier_rows(w: &MatF32, mask: &[bool]) -> MatF32 {
+    let idx: Vec<usize> = mask.iter().enumerate().filter(|(_, m)| **m).map(|(i, _)| i).collect();
+    let mut out = MatF32::zeros(idx.len(), w.cols);
+    for (j, &r) in idx.iter().enumerate() {
+        out.row_mut(j).copy_from_slice(w.row(r));
+    }
+    out
+}
+
+/// The paper's uniform-INT two-GEMM pipeline (eq. 7):
+///
+///   Y = Body_q8 · W_q8 + (2^exp − 1) · Aux_q8 · W_outlier_rows_q8
+///
+/// with the *compact* Aux (rows × r). All operands INT8, all accumulation
+/// i32 — no FP16 on the compute path, unlike LLM.int8().
+pub fn muxq_matmul_int(
+    x: &MatF32,
+    w: &MatF32,
+    qmax: f32,
+    gx: Granularity,
+    gw: Granularity,
+    p: &MuxqParams,
+) -> MatF32 {
+    let mask = outlier_mask(x, p.theta);
+    let (body, _) = decompose(x, &mask, p);
+
+    // main GEMM over the full body
+    let sb = Scales::compute(&body, qmax, gx);
+    let sw = Scales::compute(w, qmax, gw);
+    let bq: MatI8 = super::absmax::quantize_i8(&body, &sb, qmax);
+    let wq: MatI8 = super::absmax::quantize_i8(w, &sw, qmax);
+    let mut y = dequant(&matmul_i8(&bq, &wq), &sb, &sw);
+
+    // skinny aux GEMM over outlier columns only
+    let r = outlier_count(&mask);
+    if r > 0 {
+        let aux = gather_outlier_cols(x, &mask, p.inv_shift());
+        let w_out = gather_outlier_rows(w, &mask);
+        let sa = Scales::compute(&aux, qmax, gx);
+        let swo = match gw {
+            // per-col weight scales must match the full-W scales so the
+            // dequant agrees with the fused fake-quant formulation
+            Granularity::PerCol => Scales::compute(w, qmax, Granularity::PerCol),
+            _ => Scales::compute(&w_out, qmax, gw),
+        };
+        let aq = super::absmax::quantize_i8(&aux, &sa, qmax);
+        let woq = super::absmax::quantize_i8(&w_out, &swo, qmax);
+        let ya = dequant(&matmul_i8(&aq, &woq), &sa, &swo);
+        let f = p.aux_weight();
+        for (yv, av) in y.data.iter_mut().zip(&ya.data) {
+            *yv += f * av;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::prng::SplitMix64;
+
+    fn outlier_mat(rows: usize, cols: usize, seed: u64, out_cols: &[usize], scale: f32) -> MatF32 {
+        let mut rng = SplitMix64::new(seed);
+        let mut m = MatF32::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| (rng.next_f64() as f32 - 0.5) * 4.0).collect(),
+        )
+        .unwrap();
+        for r in 0..rows {
+            for &c in out_cols {
+                *m.at_mut(r, c) *= scale;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn mask_detects_injected_outliers() {
+        let x = outlier_mat(32, 16, 1, &[3, 9], 25.0);
+        let mask = outlier_mask(&x, 6.0);
+        assert!(mask[3] && mask[9]);
+        assert!(outlier_count(&mask) >= 2);
+    }
+
+    #[test]
+    fn decompose_reconstruct_exact() {
+        let x = outlier_mat(16, 16, 2, &[0, 5], 30.0);
+        let p = MuxqParams::default();
+        let mask = outlier_mask(&x, p.theta);
+        let (body, aux) = decompose(&x, &mask, &p);
+        let rec = reconstruct(&body, &aux, &p);
+        assert!(rec.max_abs_diff(&x) < 1e-5);
+    }
+
+    #[test]
+    fn body_range_reduced() {
+        let x = outlier_mat(16, 16, 3, &[2], 40.0);
+        let p = MuxqParams::default();
+        let mask = outlier_mask(&x, p.theta);
+        let (body, _) = decompose(&x, &mask, &p);
+        assert!(body.absmax() <= x.absmax() / 4.0 + 1e-6);
+    }
+
+    #[test]
+    fn muxq_beats_naive_per_tensor() {
+        let x = outlier_mat(64, 64, 4, &[1, 17, 40], 25.0);
+        let p = MuxqParams::default();
+        let e_muxq = fq_muxq(&x, 127.0, Granularity::PerTensor, &p).mean_abs_diff(&x);
+        let e_naive =
+            super::super::absmax::fq_naive(&x, 127.0, Granularity::PerTensor).mean_abs_diff(&x);
+        assert!(e_muxq < e_naive, "muxq {e_muxq} vs naive {e_naive}");
+    }
+
+    #[test]
+    fn no_outliers_equals_naive() {
+        let mut rng = SplitMix64::new(5);
+        let x = MatF32::from_vec(
+            8,
+            8,
+            (0..64).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0).collect(),
+        )
+        .unwrap();
+        let p = MuxqParams::default();
+        let a = fq_muxq(&x, 127.0, Granularity::PerTensor, &p);
+        let b = super::super::absmax::fq_naive(&x, 127.0, Granularity::PerTensor);
+        assert!(a.max_abs_diff(&b) < 1e-7);
+    }
+
+    #[test]
+    fn int_two_gemm_close_to_fp() {
+        let x = outlier_mat(32, 48, 6, &[7, 20], 20.0);
+        let mut rng = SplitMix64::new(7);
+        let w = MatF32::from_vec(
+            48,
+            16,
+            (0..48 * 16).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0).collect(),
+        )
+        .unwrap();
+        let exact = super::super::gemm::matmul_f32(&x, &w);
+        let p = MuxqParams::default();
+        let y = muxq_matmul_int(&x, &w, 127.0, Granularity::PerRow, Granularity::PerCol, &p);
+        let y_naive =
+            super::super::gemm::quant_matmul(&x, &w, 127.0, Granularity::PerRow, Granularity::PerCol);
+        // per-row scales absorb outliers partially; muxq should still not
+        // be worse, and both should be near FP at 8 bits
+        assert!(y.mean_abs_diff(&exact) <= y_naive.mean_abs_diff(&exact) * 1.05);
+        assert!(y.mean_abs_diff(&exact) < 0.5);
+    }
+
+    #[test]
+    fn int_two_gemm_beats_naive_per_tensor_low_bits() {
+        let x = outlier_mat(32, 48, 8, &[3, 30], 30.0);
+        let mut rng = SplitMix64::new(9);
+        let w = MatF32::from_vec(
+            48,
+            16,
+            (0..48 * 16).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0).collect(),
+        )
+        .unwrap();
+        let exact = super::super::gemm::matmul_f32(&x, &w);
+        let qmax = 31.0; // 6-bit
+        let p = MuxqParams::default();
+        let y_muxq =
+            muxq_matmul_int(&x, &w, qmax, Granularity::PerTensor, Granularity::PerTensor, &p);
+        let y_naive = super::super::gemm::quant_matmul(
+            &x,
+            &w,
+            qmax,
+            Granularity::PerTensor,
+            Granularity::PerTensor,
+        );
+        assert!(
+            y_muxq.mean_abs_diff(&exact) < y_naive.mean_abs_diff(&exact),
+            "muxq {} naive {}",
+            y_muxq.mean_abs_diff(&exact),
+            y_naive.mean_abs_diff(&exact)
+        );
+    }
+
+    #[test]
+    fn exp_factor_one_simple_sum() {
+        // with exp=1 the recombination weight is exactly 1 (paper §3.3)
+        let p = MuxqParams { theta: 6.0, exp_factor: 1 };
+        assert_eq!(p.aux_weight(), 1.0);
+        assert_eq!(p.inv_shift(), 0.5);
+    }
+}

@@ -1,0 +1,113 @@
+//! SmoothQuant (Xiao et al., 2023) difficulty migration — the technique
+//! the paper names as *composable* with MUXQ (contribution #2).
+//!
+//! s_j = max|X_j|^alpha / max|W_j|^(1-alpha);  X' = X / s, W' = s ⊙ W.
+//! Function-preserving in FP, shifts quantization difficulty from
+//! activations into weights.
+
+use super::matrix::MatF32;
+
+pub const EPS: f32 = 1e-8;
+
+/// Migration scales from calibration activation abs-max (per input
+/// channel) and the weight matrix [K, N].
+pub fn smooth_scales(act_absmax: &[f32], w: &MatF32, alpha: f32) -> Vec<f32> {
+    assert_eq!(act_absmax.len(), w.rows);
+    let wmax: Vec<f32> = (0..w.rows)
+        .map(|r| w.row(r).iter().fold(0.0f32, |m, v| m.max(v.abs())))
+        .collect();
+    act_absmax
+        .iter()
+        .zip(&wmax)
+        .map(|(a, b)| {
+            let num = a.max(EPS).powf(alpha);
+            let den = b.max(EPS).powf(1.0 - alpha);
+            (num / den).max(EPS)
+        })
+        .collect()
+}
+
+/// Apply the migration: returns (X / s, s ⊙ W rows).
+pub fn migrate(x: &MatF32, w: &MatF32, s: &[f32]) -> (MatF32, MatF32) {
+    assert_eq!(s.len(), x.cols);
+    assert_eq!(s.len(), w.rows);
+    let mut xs = x.clone();
+    for r in 0..x.rows {
+        for (v, sc) in xs.row_mut(r).iter_mut().zip(s) {
+            *v /= sc;
+        }
+    }
+    let mut ws = w.clone();
+    for (r, sc) in s.iter().enumerate() {
+        for v in ws.row_mut(r) {
+            *v *= sc;
+        }
+    }
+    (xs, ws)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::prng::SplitMix64;
+    use crate::quant::gemm::matmul_f32;
+
+    fn mat(rows: usize, cols: usize, seed: u64) -> MatF32 {
+        let mut rng = SplitMix64::new(seed);
+        MatF32::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn function_preserving() {
+        let mut x = mat(16, 24, 1);
+        for r in 0..16 {
+            *x.at_mut(r, 5) *= 30.0;
+        }
+        let w = mat(24, 8, 2);
+        let s = smooth_scales(&x.absmax_cols(), &w, 0.5);
+        let (xs, ws) = migrate(&x, &w, &s);
+        let y0 = matmul_f32(&x, &w);
+        let y1 = matmul_f32(&xs, &ws);
+        assert!(y0.mean_abs_diff(&y1) < 1e-4);
+    }
+
+    #[test]
+    fn reduces_activation_range() {
+        let mut x = mat(16, 24, 3);
+        for r in 0..16 {
+            *x.at_mut(r, 2) *= 40.0;
+        }
+        let w = mat(24, 8, 4);
+        let s = smooth_scales(&x.absmax_cols(), &w, 0.5);
+        let (xs, _) = migrate(&x, &w, &s);
+        assert!(xs.absmax() < x.absmax());
+    }
+
+    #[test]
+    fn composes_with_muxq() {
+        // smoothed activations quantize better; muxq on top handles the
+        // residual outliers (the paper's composability claim)
+        use crate::quant::absmax::{fq_naive, Granularity};
+        use crate::quant::muxq::{fq_muxq, MuxqParams};
+        let mut x = mat(32, 32, 5);
+        for r in 0..32 {
+            *x.at_mut(r, 7) *= 50.0;
+            *x.at_mut(r, 19) *= 20.0;
+        }
+        let w = mat(32, 16, 6);
+        let s = smooth_scales(&x.absmax_cols(), &w, 0.5);
+        let (xs, _) = migrate(&x, &w, &s);
+        let qmax = 31.0;
+        let e_plain = fq_naive(&x, qmax, Granularity::PerTensor).mean_abs_diff(&x);
+        let rel = |e: f32, m: &MatF32| e / m.absmax();
+        let e_smooth_muxq =
+            fq_muxq(&xs, qmax, Granularity::PerTensor, &MuxqParams::default()).mean_abs_diff(&xs);
+        // compare *relative* errors since ranges differ after migration
+        assert!(rel(e_smooth_muxq, &xs) < rel(e_plain, &x));
+    }
+}

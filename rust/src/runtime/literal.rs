@@ -1,0 +1,51 @@
+//! Host <-> device literal conversion helpers.
+//!
+//! Keeps all `xla::Literal` construction in one place so the rest of the
+//! crate deals only in plain slices and `HostTensor`s.
+
+use crate::data::tensors::{DType, HostTensor};
+use anyhow::{bail, Result};
+
+/// f32 literal of the given shape.
+pub fn literal_f32(dims: &[usize], vals: &[f32]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != vals.len() {
+        bail!("shape {:?} != {} values", dims, vals.len());
+    }
+    let v = xla::Literal::vec1(vals);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(v.reshape(&dims_i64)?)
+}
+
+/// i32 literal of the given shape.
+pub fn literal_i32(dims: &[usize], vals: &[i32]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != vals.len() {
+        bail!("shape {:?} != {} values", dims, vals.len());
+    }
+    let v = xla::Literal::vec1(vals);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(v.reshape(&dims_i64)?)
+}
+
+/// 0-d f32 scalar literal (runtime bit-width inputs).
+pub fn literal_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read back an f32 literal into a host vec.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+impl HostTensor {
+    /// Convert to an `xla::Literal` (f32/i32 only — u8 tensors are
+    /// build-side metadata and never enter the request path).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self.dtype {
+            DType::F32 => literal_f32(&self.dims, &self.as_f32()?),
+            DType::I32 => literal_i32(&self.dims, &self.as_i32()?),
+            DType::U8 => bail!("u8 tensors are not executable inputs"),
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! PJRT runtime: load AOT-compiled HLO text, compile once, execute many.
+//!
+//! This is the only module that touches the `xla` crate. The interchange
+//! format is HLO *text* (see DESIGN.md / python/compile/aot.py): jax >= 0.5
+//! emits HloModuleProto with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects, while the text parser reassigns ids and round-trips
+//! cleanly.
+//!
+//! Thread-safety: `PjRtClient`/`PjRtLoadedExecutable` are internally
+//! ref-counted C++ objects; we confine execution to worker threads that
+//! each own a clone of the `Engine` handle. Compilation is serialized
+//! through the variant registry (`coordinator::variants`).
+
+mod literal;
+pub mod service;
+
+pub use literal::{literal_f32, literal_i32, literal_scalar_f32, to_vec_f32};
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Shared PJRT client handle.
+#[derive(Clone)]
+pub struct Engine {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine { client: Arc::new(client) })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Upload host data to a device buffer (weights are uploaded once
+    /// per variant and reused across requests — the hot path uses
+    /// `Executable::run_buffers`).
+    ///
+    /// Uses `BufferFromHostBuffer` with ImmutableOnlyDuringCall semantics
+    /// (synchronous copy). Do NOT switch to `buffer_from_host_literal`:
+    /// TFRT's `BufferFromHostLiteral` copies asynchronously and requires
+    /// the literal to outlive the transfer — dropping it races the copy
+    /// (observed: size-check aborts / SIGSEGV with garbage literal
+    /// metadata).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("upload f32 buffer to device")
+    }
+
+    /// i32 variant of [`Engine::upload_f32`].
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("upload i32 buffer to device")
+    }
+
+    /// Load an HLO-text module and compile it for this client.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Executable {
+            exe: Arc::new(exe),
+            name: path.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+        })
+    }
+}
+
+/// A compiled computation. Cheap to clone; `run` is callable from any
+/// thread.
+#[derive(Clone)]
+pub struct Executable {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with host literals; returns the decomposed output tuple
+    /// (aot.py lowers with return_tuple=True).
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("execute {}", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let parts = lit.to_tuple().context("decompose output tuple")?;
+        Ok(parts)
+    }
+
+    /// Execute with borrowed literals (avoids cloning cached weights).
+    pub fn run_refs(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<&xla::Literal>(args)
+            .with_context(|| format!("execute {}", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let parts = lit.to_tuple().context("decompose output tuple")?;
+        Ok(parts)
+    }
+
+    /// Execute with pre-uploaded device buffers (the zero-host-copy hot
+    /// path: weights stay on device across requests).
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .with_context(|| format!("execute_b {}", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let parts = lit.to_tuple().context("decompose output tuple")?;
+        Ok(parts)
+    }
+}

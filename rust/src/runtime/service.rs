@@ -1,0 +1,242 @@
+//! Process-wide PJRT runtime service.
+//!
+//! xla_extension 0.5.1's CPU plugin cannot tolerate multiple PjRtClients
+//! per process: destroying one corrupts global TFRT state and later
+//! literal uploads crash (observed: `literal.size_bytes() == b->size()`
+//! check failures / SIGSEGV). The xla crate's handles are additionally
+//! `!Send`.
+//!
+//! Both constraints are solved by confining ALL PJRT objects to one
+//! dedicated service thread, created once per process, never destroyed.
+//! Callers interact through a channel API with plain-data messages
+//! (paths, token vectors, f32 buffers), so every public handle here is
+//! `Send + Sync` and the coordinator's workers can share compiled
+//! executables freely. PJRT CPU executions are internally multi-threaded,
+//! so serializing *dispatch* costs nothing on this host.
+
+use super::{Engine, Executable};
+use crate::data::tensors::{DType, TensorFile};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Mutex, OnceLock};
+
+/// Handle to a compiled executable living on the service thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ExeId(u64);
+
+/// Handle to a set of device-resident weight buffers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WeightsId(u64);
+
+/// One output tensor, already copied to host.
+#[derive(Debug, Clone)]
+pub struct HostOutput {
+    pub data: Vec<f32>,
+}
+
+enum Cmd {
+    LoadHlo(PathBuf, mpsc::Sender<Result<ExeId>>),
+    UploadWeights(PathBuf, mpsc::Sender<Result<WeightsId>>),
+    /// run(exe, weights, tokens, [batch, seq], ia_bits, w_bits)
+    Run {
+        exe: ExeId,
+        weights: Option<WeightsId>,
+        tokens: Vec<i32>,
+        dims: (usize, usize),
+        ia_bits: f32,
+        w_bits: f32,
+        reply: mpsc::Sender<Result<Vec<HostOutput>>>,
+    },
+    Platform(mpsc::Sender<Result<String>>),
+}
+
+/// Client-side handle to the service (cheap to clone, Send + Sync).
+#[derive(Clone)]
+pub struct RuntimeService {
+    tx: mpsc::Sender<Cmd>,
+}
+
+// SAFETY: Sender<Cmd> is Send; Sync via the global mutex pattern below.
+static SERVICE: OnceLock<Mutex<RuntimeService>> = OnceLock::new();
+
+impl RuntimeService {
+    /// The process-wide instance (spawns the service thread on first use).
+    pub fn global() -> RuntimeService {
+        SERVICE
+            .get_or_init(|| {
+                let (tx, rx) = mpsc::channel::<Cmd>();
+                std::thread::Builder::new()
+                    .name("muxq-pjrt".into())
+                    // XLA compilation recurses deeply; the 2 MiB default
+                    // thread stack overflows (observed SIGSEGV), so give
+                    // the service thread a main-thread-sized stack.
+                    .stack_size(64 << 20)
+                    .spawn(move || service_loop(rx))
+                    .expect("spawn pjrt service thread");
+                Mutex::new(RuntimeService { tx })
+            })
+            .lock()
+            .unwrap()
+            .clone()
+    }
+
+    fn send(&self, cmd: Cmd) -> Result<()> {
+        self.tx.send(cmd).map_err(|_| anyhow!("pjrt service thread died"))
+    }
+
+    pub fn platform(&self) -> Result<String> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Cmd::Platform(tx))?;
+        rx.recv().context("pjrt service dropped reply")?
+    }
+
+    pub fn load_hlo(&self, path: impl Into<PathBuf>) -> Result<ExeId> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Cmd::LoadHlo(path.into(), tx))?;
+        rx.recv().context("pjrt service dropped reply")?
+    }
+
+    /// Upload every tensor of a container (byte-sorted order — the HLO
+    /// input contract) to device buffers, once.
+    pub fn upload_weights(&self, path: impl Into<PathBuf>) -> Result<WeightsId> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Cmd::UploadWeights(path.into(), tx))?;
+        rx.recv().context("pjrt service dropped reply")?
+    }
+
+    /// Execute: [weights..., tokens, ia_bits, w_bits] -> host outputs.
+    pub fn run(
+        &self,
+        exe: ExeId,
+        weights: Option<WeightsId>,
+        tokens: Vec<i32>,
+        dims: (usize, usize),
+        ia_bits: f32,
+        w_bits: f32,
+    ) -> Result<Vec<HostOutput>> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Cmd::Run { exe, weights, tokens, dims, ia_bits, w_bits, reply: tx })?;
+        rx.recv().context("pjrt service dropped reply")?
+    }
+}
+
+struct ServiceState {
+    engine: Engine,
+    exes: HashMap<u64, Executable>,
+    weights: HashMap<u64, Vec<xla::PjRtBuffer>>,
+    weight_files: HashMap<PathBuf, WeightsId>,
+    exe_files: HashMap<PathBuf, ExeId>,
+    next_id: u64,
+}
+
+fn service_loop(rx: mpsc::Receiver<Cmd>) {
+    let engine = match Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            // fail every request with a clear message
+            while let Ok(cmd) = rx.recv() {
+                let msg = format!("PJRT client failed to initialize: {e:#}");
+                match cmd {
+                    Cmd::LoadHlo(_, tx) => drop(tx.send(Err(anyhow!(msg)))),
+                    Cmd::UploadWeights(_, tx) => drop(tx.send(Err(anyhow!(msg)))),
+                    Cmd::Run { reply, .. } => drop(reply.send(Err(anyhow!(msg)))),
+                    Cmd::Platform(tx) => drop(tx.send(Err(anyhow!(msg)))),
+                }
+            }
+            return;
+        }
+    };
+    let mut st = ServiceState {
+        engine,
+        exes: HashMap::new(),
+        weights: HashMap::new(),
+        weight_files: HashMap::new(),
+        exe_files: HashMap::new(),
+        next_id: 1,
+    };
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Platform(tx) => {
+                let _ = tx.send(Ok(st.engine.platform_name()));
+            }
+            Cmd::LoadHlo(path, tx) => {
+                let result = if let Some(id) = st.exe_files.get(&path) {
+                    Ok(*id)
+                } else {
+                    st.engine.load_hlo(&path).map(|exe| {
+                        let id = ExeId(st.next_id);
+                        st.next_id += 1;
+                        st.exes.insert(id.0, exe);
+                        st.exe_files.insert(path.clone(), id);
+                        id
+                    })
+                };
+                let _ = tx.send(result);
+            }
+            Cmd::UploadWeights(path, tx) => {
+                let result = if let Some(id) = st.weight_files.get(&path) {
+                    Ok(*id)
+                } else {
+                    upload_file(&st.engine, &path).map(|bufs| {
+                        let id = WeightsId(st.next_id);
+                        st.next_id += 1;
+                        st.weights.insert(id.0, bufs);
+                        st.weight_files.insert(path.clone(), id);
+                        id
+                    })
+                };
+                let _ = tx.send(result);
+            }
+            Cmd::Run { exe, weights, tokens, dims, ia_bits, w_bits, reply } => {
+                let _ = reply.send(run_one(&st, exe, weights, &tokens, dims, ia_bits, w_bits));
+            }
+        }
+    }
+}
+
+fn upload_file(engine: &Engine, path: &std::path::Path) -> Result<Vec<xla::PjRtBuffer>> {
+    let tf = TensorFile::read(path)?;
+    let mut bufs = Vec::with_capacity(tf.tensors.len());
+    for name in tf.sorted_names() {
+        let t = tf.get(name)?;
+        let buf = match t.dtype {
+            DType::F32 => engine.upload_f32(&t.as_f32()?, &t.dims)?,
+            DType::I32 => engine.upload_i32(&t.as_i32()?, &t.dims)?,
+            DType::U8 => anyhow::bail!("u8 tensor {name} is not an executable input"),
+        };
+        bufs.push(buf);
+    }
+    Ok(bufs)
+}
+
+fn run_one(
+    st: &ServiceState,
+    exe: ExeId,
+    weights: Option<WeightsId>,
+    tokens: &[i32],
+    dims: (usize, usize),
+    ia_bits: f32,
+    w_bits: f32,
+) -> Result<Vec<HostOutput>> {
+    let exe = st.exes.get(&exe.0).with_context(|| format!("unknown exe {exe:?}"))?;
+    if tokens.len() != dims.0 * dims.1 {
+        return Err(anyhow!("tokens len {} != {}x{}", tokens.len(), dims.0, dims.1));
+    }
+    let tok_buf = st.engine.upload_i32(tokens, &[dims.0, dims.1])?;
+    let ia = st.engine.upload_f32(&[ia_bits], &[])?;
+    let w = st.engine.upload_f32(&[w_bits], &[])?;
+    let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
+    if let Some(wid) = weights {
+        let bufs = st.weights.get(&wid.0).with_context(|| format!("unknown weights {wid:?}"))?;
+        args.extend(bufs.iter());
+    }
+    args.push(&tok_buf);
+    args.push(&ia);
+    args.push(&w);
+    let outs = exe.run_buffers(&args)?;
+    outs.iter()
+        .map(|lit| Ok(HostOutput { data: super::to_vec_f32(lit)? }))
+        .collect()
+}

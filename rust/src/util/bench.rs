@@ -1,0 +1,162 @@
+//! Micro-benchmark harness (the offline image has no `criterion`).
+//!
+//! Methodology: warmup runs, then timed iterations until both a minimum
+//! iteration count and a minimum wall budget are met; reports mean /
+//! median / p95 / min plus derived throughput. Used by every target under
+//! `rust/benches/` (all declared `harness = false`).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: u32,
+    pub min_iters: u32,
+    pub min_time: Duration,
+    pub max_iters: u32,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            min_time: Duration::from_millis(300),
+            max_iters: 10_000,
+        }
+    }
+}
+
+/// Result statistics for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean.as_secs_f64()
+    }
+
+    /// Row formatted like `name  mean  median  p95  min  ops/s`.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10} {:>12.1}/s",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.median),
+            fmt_dur(self.p95),
+            fmt_dur(self.min),
+            self.per_sec()
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.1}us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark runner; collects rows and prints a criterion-like report.
+pub struct Bencher {
+    cfg: BenchConfig,
+    pub results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new(BenchConfig::default())
+    }
+}
+
+impl Bencher {
+    pub fn new(cfg: BenchConfig) -> Self {
+        // honor quick mode for CI: MUXQ_BENCH_QUICK=1
+        let cfg = if std::env::var_os("MUXQ_BENCH_QUICK").is_some() {
+            BenchConfig {
+                warmup_iters: 1,
+                min_iters: 3,
+                min_time: Duration::from_millis(30),
+                max_iters: 50,
+            }
+        } else {
+            cfg
+        };
+        Bencher { cfg, results: Vec::new() }
+    }
+
+    /// Time `f`, which must return something observable (guards against
+    /// dead-code elimination via `std::hint::black_box`).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchStats {
+        for _ in 0..self.cfg.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while (samples.len() < self.cfg.min_iters as usize
+            || start.elapsed() < self.cfg.min_time)
+            && samples.len() < self.cfg.max_iters as usize
+        {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed());
+        }
+        samples.sort();
+        let n = samples.len();
+        let mean = samples.iter().sum::<Duration>() / n as u32;
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: n as u32,
+            mean,
+            median: samples[n / 2],
+            p95: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+            min: samples[0],
+        };
+        println!("{}", stats.row());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn header(title: &str) {
+        println!("\n== {title} ==");
+        println!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10} {:>14}",
+            "case", "mean", "median", "p95", "min", "throughput"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_sane() {
+        std::env::set_var("MUXQ_BENCH_QUICK", "1");
+        let mut b = Bencher::default();
+        let s = b.bench("noop+sum", || (0..1000u64).sum::<u64>()).clone();
+        assert!(s.iters >= 3);
+        assert!(s.min <= s.median && s.median <= s.p95);
+        assert!(s.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_dur(Duration::from_nanos(10)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(10)).ends_with("us"));
+        assert!(fmt_dur(Duration::from_millis(10)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(10)).ends_with('s'));
+    }
+}

@@ -1,0 +1,206 @@
+//! Minimal CLI argument parser (the offline image has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positionals, with
+//! typed accessors and a generated `--help`.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct Spec {
+    key: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument parser.
+#[derive(Debug, Default)]
+pub struct Cli {
+    name: String,
+    about: String,
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(name: &str, about: &str) -> Self {
+        Cli { name: name.into(), about: about.into(), ..Default::default() }
+    }
+
+    /// Declare an option with a default value.
+    pub fn opt(mut self, key: &str, default: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            key: key.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a required option.
+    pub fn req(mut self, key: &str, help: &str) -> Self {
+        self.specs.push(Spec { key: key.into(), help: help.into(), default: None, is_flag: false });
+        self
+    }
+
+    /// Declare a boolean flag.
+    pub fn flag(mut self, key: &str, help: &str) -> Self {
+        self.specs.push(Spec { key: key.into(), help: help.into(), default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for spec in &self.specs {
+            let d = match (&spec.default, spec.is_flag) {
+                (_, true) => " (flag)".to_string(),
+                (Some(d), _) => format!(" [default: {d}]"),
+                (None, _) => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", spec.key, spec.help, d));
+        }
+        s
+    }
+
+    /// Parse a raw arg list (without argv[0]). Exits on `--help`.
+    pub fn parse(mut self, args: &[String]) -> Result<Parsed> {
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.key == key)
+                    .with_context(|| format!("unknown option --{key}\n{}", self.usage()))?
+                    .clone();
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        bail!("flag --{key} takes no value");
+                    }
+                    self.flags.insert(key, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i).with_context(|| format!("--{key} needs a value"))?.clone()
+                        }
+                    };
+                    self.values.insert(key, val);
+                }
+            } else {
+                self.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        // fill defaults, check required
+        for spec in &self.specs {
+            if spec.is_flag {
+                self.flags.entry(spec.key.clone()).or_insert(false);
+            } else if !self.values.contains_key(&spec.key) {
+                match &spec.default {
+                    Some(d) => {
+                        self.values.insert(spec.key.clone(), d.clone());
+                    }
+                    None => bail!("missing required --{}\n{}", spec.key, self.usage()),
+                }
+            }
+        }
+        Ok(Parsed { values: self.values, flags: self.flags, positionals: self.positionals })
+    }
+
+    /// Parse from the process environment.
+    pub fn parse_env(self) -> Result<Parsed> {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        self.parse(&args)
+    }
+}
+
+/// Parsed arguments with typed accessors.
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, key: &str) -> &str {
+        self.values.get(key).map(|s| s.as_str()).unwrap_or_else(|| panic!("undeclared option {key}"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.get(key).parse().with_context(|| format!("--{key} must be an integer"))
+    }
+
+    pub fn get_u32(&self, key: &str) -> Result<u32> {
+        self.get(key).parse().with_context(|| format!("--{key} must be an integer"))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64> {
+        self.get(key).parse().with_context(|| format!("--{key} must be a number"))
+    }
+
+    pub fn get_list(&self, key: &str) -> Vec<String> {
+        self.get(key).split(',').filter(|s| !s.is_empty()).map(|s| s.trim().to_string()).collect()
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        *self.flags.get(key).unwrap_or(&false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|v| v.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_mixed() {
+        let p = Cli::new("t", "test")
+            .opt("model", "sim-small", "model name")
+            .opt("bits", "8", "bits")
+            .flag("verbose", "chatty")
+            .parse(&args(&["--model", "sim-large", "--verbose", "pos1", "--bits=6"]))
+            .unwrap();
+        assert_eq!(p.get("model"), "sim-large");
+        assert_eq!(p.get_u32("bits").unwrap(), 6);
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positionals, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let p = Cli::new("t", "test").opt("x", "1", "x").parse(&args(&[])).unwrap();
+        assert_eq!(p.get("x"), "1");
+        let e = Cli::new("t", "test").req("y", "y").parse(&args(&[]));
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(Cli::new("t", "t").parse(&args(&["--nope", "v"])).is_err());
+    }
+
+    #[test]
+    fn list_accessor() {
+        let p = Cli::new("t", "t").opt("bits", "8,7,6", "sweep").parse(&args(&[])).unwrap();
+        assert_eq!(p.get_list("bits"), vec!["8", "7", "6"]);
+    }
+}

@@ -1,0 +1,129 @@
+//! INI-style config parser: `[section]` headers + `key = value` lines,
+//! `#`/`;` comments, typed accessors with defaults. Drives the launcher
+//! (`muxq serve --config serve.cfg`) so deployments don't need to pass
+//! a dozen CLI flags.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Parsed configuration: section -> key -> value.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split(['#', ';']).next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').with_context(|| {
+                    format!("line {}: unterminated section header", lineno + 1)
+                })?;
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                cfg.sections
+                    .entry(section.clone())
+                    .or_default()
+                    .insert(k.trim().to_string(), v.trim().to_string());
+            } else {
+                bail!("line {}: expected `key = value` or `[section]`, got {raw:?}", lineno + 1);
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read config {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str, default: usize) -> Result<usize> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("[{section}] {key} = {v:?} not integer")),
+        }
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("[{section}] {key} = {v:?} not number")),
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> Result<bool> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("[{section}] {key} = {v:?} not a bool"),
+        }
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# serving config
+[server]
+max_batch = 8
+max_wait_ms = 5     ; coalescing window
+model = sim-small
+
+[quant]
+method = muxq
+granularity = per-tensor
+smooth = false
+"#;
+
+    #[test]
+    fn parse_sections_and_values() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("server", "model"), Some("sim-small"));
+        assert_eq!(c.get_usize("server", "max_batch", 0).unwrap(), 8);
+        assert_eq!(c.get_bool("quant", "smooth", true).unwrap(), false);
+        assert_eq!(c.get_or("quant", "missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_usize("server", "max_wait_ms", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("not a kv line").is_err());
+        assert!(Config::parse("[unterminated").is_err());
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let c = Config::parse("[s]\nx = abc\n").unwrap();
+        assert!(c.get_usize("s", "x", 0).is_err());
+        assert!(c.get_bool("s", "x", false).is_err());
+    }
+}

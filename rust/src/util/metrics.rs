@@ -1,0 +1,202 @@
+//! Serving metrics: counters, gauges and latency histograms with
+//! percentile queries. Lock-free counters (atomics) + a mutex-guarded
+//! log-bucketed histogram; cheap enough for the request hot path.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-bucketed latency histogram: 4 buckets per octave from 1us to ~1.2h.
+/// Records are O(1); percentile queries scan the (fixed, small) bucket
+/// array.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Mutex<[u64; Self::N_BUCKETS]>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: Mutex::new([0; Self::N_BUCKETS]),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    const N_BUCKETS: usize = 128;
+    const BASE_NS: f64 = 1_000.0; // 1us
+
+    fn bucket_of(ns: u64) -> usize {
+        if (ns as f64) < Self::BASE_NS {
+            return 0;
+        }
+        // 4 buckets per octave
+        let idx = (4.0 * ((ns as f64) / Self::BASE_NS).log2()).floor() as usize;
+        idx.min(Self::N_BUCKETS - 1)
+    }
+
+    fn bucket_upper(idx: usize) -> Duration {
+        Duration::from_nanos((Self::BASE_NS * 2f64.powf((idx + 1) as f64 / 4.0)) as u64)
+    }
+
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos() as u64;
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+        let mut b = self.buckets.lock().unwrap();
+        b[Self::bucket_of(ns)] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed) / c)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns.load(Ordering::Relaxed))
+    }
+
+    /// Upper bound of the bucket containing the q-quantile (0 < q <= 1).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((c as f64) * q).ceil() as u64;
+        let b = self.buckets.lock().unwrap();
+        let mut acc = 0u64;
+        for (i, n) in b.iter().enumerate() {
+            acc += n;
+            if acc >= target {
+                return Self::bucket_upper(i);
+            }
+        }
+        self.max()
+    }
+}
+
+/// Named metrics registry shared across coordinator components.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.counters.lock().unwrap().entry(name.into()).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms.lock().unwrap().entry(name.into()).or_default().clone()
+    }
+
+    /// Human-readable dump (examples print this at exit).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter  {name:<32} {}\n", c.get()));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "latency  {name:<32} n={} mean={:?} p50={:?} p95={:?} p99={:?} max={:?}\n",
+                h.count(),
+                h.mean(),
+                h.quantile(0.50),
+                h.quantile(0.95),
+                h.quantile(0.99),
+                h.max()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_concurrent() {
+        let c = std::sync::Arc::new(Counter::default());
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::default();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        // p50 of a uniform 1..1000us should be around 500us (log buckets
+        // give the upper bucket edge)
+        assert!(p50 >= Duration::from_micros(400) && p50 <= Duration::from_micros(700), "{p50:?}");
+    }
+
+    #[test]
+    fn registry_shares_instances() {
+        let r = Registry::default();
+        r.counter("a").inc();
+        r.counter("a").inc();
+        assert_eq!(r.counter("a").get(), 2);
+        assert!(r.render().contains("counter"));
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+}

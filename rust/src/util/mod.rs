@@ -1,0 +1,20 @@
+//! In-repo tooling substrates. The offline build image ships only the
+//! `xla` crate and its dependencies — no tokio / clap / criterion /
+//! proptest — so the pieces a production launcher needs are implemented
+//! here (and tested like any other module):
+//!
+//! * [`cli`] — declarative argument parsing with `--help`
+//! * [`config`] — INI-style config files for the launcher
+//! * [`bench`] — micro-benchmark harness with warmup + percentiles
+//! * [`proptest`] — seeded property testing with shrinking
+//! * [`metrics`] — counters + log-bucketed latency histograms
+//! * [`threadpool`] — fixed worker pool with bounded queues (the
+//!   coordinator's execution substrate)
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod metrics;
+pub mod proptest;
+pub mod threadpool;

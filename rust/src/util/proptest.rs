@@ -1,0 +1,159 @@
+//! Mini property-testing framework (the offline image has no `proptest`).
+//!
+//! Deterministic (seeded splitmix64), with linear input shrinking on
+//! failure. Enough machinery for the coordinator/quant invariants:
+//!
+//! ```ignore
+//! prop(|g| {
+//!     let n = g.usize(1, 100);
+//!     let v = g.vec_f32(n, -10.0, 10.0);
+//!     prop_assert(invariant(&v), "invariant broke");
+//! });
+//! ```
+
+use crate::data::prng::SplitMix64;
+
+/// Number of cases per property (override with MUXQ_PROPTEST_CASES).
+pub fn default_cases() -> u32 {
+    std::env::var("MUXQ_PROPTEST_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(64)
+}
+
+/// Random-input generator handed to each property case.
+pub struct Gen {
+    rng: SplitMix64,
+    /// shrink level 0..=SHRINK_MAX: higher = smaller generated inputs
+    shrink: u32,
+    pub case: u32,
+}
+
+const SHRINK_MAX: u32 = 4;
+
+impl Gen {
+    fn new(seed: u64, case: u32, shrink: u32) -> Self {
+        Gen { rng: SplitMix64::new(seed ^ (case as u64).wrapping_mul(0x9E37)), shrink, case }
+    }
+
+    fn shrunk(&self, hi: u64, lo: u64) -> u64 {
+        // progressively bias ranges toward the minimum as shrink increases
+        if self.shrink == 0 || hi <= lo {
+            return hi;
+        }
+        let span = hi - lo;
+        lo + span / (1 << self.shrink.min(60))
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        let h = self.shrunk(hi as u64, lo as u64).max(lo as u64);
+        self.rng.next_range(lo as u64, h) as usize
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        let h = self.shrunk(hi, lo).max(lo);
+        self.rng.next_range(lo, h)
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.next_f64() as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32(lo, hi)).collect()
+    }
+
+    pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.next_below(items.len() as u64) as usize]
+    }
+}
+
+/// Outcome of one property case.
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run a property across `default_cases()` random cases; on failure, retry
+/// at increasing shrink levels to report the smallest failing case, then
+/// panic with the case seed for reproduction.
+pub fn prop(name: &str, f: impl Fn(&mut Gen) -> PropResult) {
+    prop_seeded(name, 0xC0FFEE, f)
+}
+
+pub fn prop_seeded(name: &str, seed: u64, f: impl Fn(&mut Gen) -> PropResult) {
+    let cases = default_cases();
+    for case in 0..cases {
+        let mut g = Gen::new(seed, case, 0);
+        if let Err(msg) = f(&mut g) {
+            // try to find a smaller failing input
+            let mut final_msg = msg;
+            let mut final_level = 0;
+            for level in 1..=SHRINK_MAX {
+                let mut g2 = Gen::new(seed, case, level);
+                if let Err(m2) = f(&mut g2) {
+                    final_msg = m2;
+                    final_level = level;
+                }
+            }
+            panic!(
+                "property {name:?} failed (case {case}, seed {seed:#x}, \
+                 shrink level {final_level}): {final_msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        prop("add commutes", |g| {
+            let a = g.u64(0, 1000);
+            let b = g.u64(0, 1000);
+            prop_assert(a + b == b + a, "commutativity")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always fails\"")]
+    fn failing_property_panics_with_context() {
+        prop("always fails", |g| {
+            let n = g.usize(1, 100);
+            prop_assert(n == 0, format!("n = {n}"))
+        });
+    }
+
+    #[test]
+    fn generators_in_range() {
+        prop("gen ranges", |g| {
+            let n = g.usize(5, 50);
+            let v = g.vec_f32(n, -2.0, 2.0);
+            prop_assert(v.len() == n, "len")?;
+            prop_assert(v.iter().all(|x| (-2.0..=2.0).contains(x)), "bounds")
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = |seed| {
+            let out = std::cell::RefCell::new(Vec::new());
+            prop_seeded("collect", seed, |g| {
+                out.borrow_mut().push(g.u64(0, 1 << 40));
+                Ok(())
+            });
+            out.into_inner()
+        };
+        assert_eq!(collect(1), collect(1));
+        assert_ne!(collect(1), collect(2));
+    }
+}

@@ -1,0 +1,202 @@
+//! Fixed-size worker pool over a bounded MPMC channel (no tokio in the
+//! offline image; the coordinator's request path is thread-based).
+//!
+//! Bounded submission gives natural backpressure: `submit` blocks when the
+//! queue is full, `try_submit` reports `QueueFull` so callers can shed
+//! load (the router's admission-control path).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    QueueFull,
+    Shutdown,
+}
+
+struct Shared {
+    queue: Mutex<State>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+struct State {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// Fixed worker pool with a bounded job queue.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    capacity: usize,
+}
+
+impl ThreadPool {
+    pub fn new(n_workers: usize, capacity: usize) -> Self {
+        assert!(n_workers > 0 && capacity > 0);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(State { jobs: VecDeque::new(), shutdown: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        });
+        let workers = (0..n_workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("muxq-worker-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers, capacity }
+    }
+
+    /// Blocking submit (backpressure: waits while the queue is full).
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) -> Result<(), SubmitError> {
+        let mut st = self.shared.queue.lock().unwrap();
+        loop {
+            if st.shutdown {
+                return Err(SubmitError::Shutdown);
+            }
+            if st.jobs.len() < self.capacity {
+                st.jobs.push_back(Box::new(job));
+                self.shared.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.shared.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking submit; `QueueFull` lets the caller shed load.
+    pub fn try_submit(&self, job: impl FnOnce() + Send + 'static) -> Result<(), SubmitError> {
+        let mut st = self.shared.queue.lock().unwrap();
+        if st.shutdown {
+            return Err(SubmitError::Shutdown);
+        }
+        if st.jobs.len() >= self.capacity {
+            return Err(SubmitError::QueueFull);
+        }
+        st.jobs.push_back(Box::new(job));
+        self.shared.not_empty.notify_one();
+        Ok(())
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.shared.queue.lock().unwrap().jobs.len()
+    }
+
+    /// Drain the queue and join all workers.
+    pub fn shutdown(mut self) {
+        {
+            let mut st = self.shared.queue.lock().unwrap();
+            st.shutdown = true;
+            self.shared.not_empty.notify_all();
+            self.shared.not_full.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        let mut st = self.shared.queue.lock().unwrap();
+        st.shutdown = true;
+        self.shared.not_empty.notify_all();
+        drop(st);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut st = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = st.jobs.pop_front() {
+                    shared.not_full.notify_one();
+                    break job;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.not_empty.wait(st).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4, 64);
+        let done = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let d = done.clone();
+            pool.submit(move || {
+                d.fetch_add(1, Ordering::SeqCst);
+            })
+            .unwrap();
+        }
+        pool.shutdown();
+        assert_eq!(done.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn try_submit_sheds_when_full() {
+        let pool = ThreadPool::new(1, 2);
+        let gate = Arc::new(Mutex::new(()));
+        let hold = gate.lock().unwrap();
+        // worker blocks on the first job
+        let g = gate.clone();
+        pool.submit(move || {
+            let _guard = g.lock().unwrap();
+        })
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(50)); // worker picks job 1
+        pool.try_submit(|| {}).unwrap();
+        pool.try_submit(|| {}).unwrap();
+        // queue (cap 2) now full while worker is blocked
+        assert_eq!(pool.try_submit(|| {}), Err(SubmitError::QueueFull));
+        drop(hold);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let pool = ThreadPool::new(2, 128);
+        let done = Arc::new(AtomicU64::new(0));
+        for _ in 0..50 {
+            let d = done.clone();
+            pool.submit(move || {
+                std::thread::sleep(Duration::from_micros(100));
+                d.fetch_add(1, Ordering::SeqCst);
+            })
+            .unwrap();
+        }
+        pool.shutdown();
+        assert_eq!(done.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn submit_after_shutdown_fails() {
+        let pool = ThreadPool::new(1, 4);
+        let shared = pool.shared.clone();
+        shared.queue.lock().unwrap().shutdown = true;
+        shared.not_empty.notify_all();
+        assert_eq!(pool.try_submit(|| {}), Err(SubmitError::Shutdown));
+    }
+}

@@ -1,0 +1,77 @@
+//! Cross-language determinism: the rust corpus/BPE twins must reproduce
+//! the python-built artifacts exactly (the request path re-tokenizes user
+//! text, so any divergence would corrupt serving results).
+
+use muxq::data::bpe::Bpe;
+use muxq::data::corpus::{CorpusConfig, CorpusGenerator};
+use muxq::data::eval_set::EvalSet;
+use muxq::data::tensors::TensorFile;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let root = muxq::artifacts_dir();
+    if root.join("corpus").join("tokenizer.bpe").exists() {
+        Some(root)
+    } else {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn corpus_generator_reproduces_python_train_split() {
+    let Some(root) = artifacts() else { return };
+    let want = std::fs::read_to_string(root.join("corpus").join("train.txt")).unwrap();
+    // regenerate just the first article's worth and compare the prefix
+    let gen = CorpusGenerator::new(CorpusConfig::default());
+    let got = gen.split("train", Some(1));
+    assert!(
+        want.starts_with(&got),
+        "rust corpus diverges from python:\n rust: {:?}\n py:   {:?}",
+        &got[..got.len().min(80)],
+        &want[..80]
+    );
+    assert!(got.len() > 200);
+}
+
+#[test]
+fn corpus_generator_reproduces_full_valid_split() {
+    let Some(root) = artifacts() else { return };
+    let want = std::fs::read_to_string(root.join("corpus").join("valid.txt")).unwrap();
+    let gen = CorpusGenerator::new(CorpusConfig::default());
+    let got = gen.split("valid", Some(12)); // 120 articles / 10
+    assert_eq!(got, want, "full valid split must match byte-for-byte");
+}
+
+#[test]
+fn bpe_encode_matches_python_token_cache() {
+    let Some(root) = artifacts() else { return };
+    let bpe = Bpe::load(root.join("corpus").join("tokenizer.bpe")).unwrap();
+    let valid_text = std::fs::read_to_string(root.join("corpus").join("valid.txt")).unwrap();
+    let got: Vec<i32> = bpe.encode(&valid_text).iter().map(|&t| t as i32).collect();
+    let tf = TensorFile::read(root.join("corpus").join("tokens.bin")).unwrap();
+    let want = tf.get("valid").unwrap().as_i32().unwrap();
+    assert_eq!(got.len(), want.len(), "token count mismatch");
+    assert_eq!(got, want, "token stream mismatch");
+}
+
+#[test]
+fn bpe_roundtrips_corpus() {
+    let Some(root) = artifacts() else { return };
+    let bpe = Bpe::load(root.join("corpus").join("tokenizer.bpe")).unwrap();
+    let text = std::fs::read_to_string(root.join("corpus").join("valid.txt")).unwrap();
+    let sample = &text[..text.len().min(5000)];
+    assert_eq!(bpe.decode(&bpe.encode(sample)), sample);
+}
+
+#[test]
+fn eval_set_windows_cover_valid_split() {
+    let Some(root) = artifacts() else { return };
+    let eval = EvalSet::load(&root, "valid").unwrap();
+    let w = eval.windows(128, 0);
+    assert!(w.len() >= 8, "valid split too small: {} windows", w.len());
+    assert!(w.iter().all(|x| x.len() == 128));
+    // tokens must be within the BPE vocab
+    let bpe = Bpe::load(root.join("corpus").join("tokenizer.bpe")).unwrap();
+    let vmax = bpe.vocab_size() as i32;
+    assert!(w.iter().flatten().all(|&t| t >= 0 && t < vmax));
+}

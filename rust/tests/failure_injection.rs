@@ -1,0 +1,133 @@
+//! Failure injection: corrupted/missing artifacts and malformed inputs
+//! must surface as clean errors, never panics or silent corruption.
+
+use muxq::coordinator::variants::Manifest;
+use muxq::data::bpe::Bpe;
+use muxq::data::tensors::{HostTensor, TensorFile};
+use muxq::gpt2::{Gpt2Config, Gpt2Model};
+use muxq::util::config::Config;
+use muxq::util::json::Json;
+use std::path::PathBuf;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("muxq_failinj_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn manifest_missing_is_clean_error() {
+    let d = tmpdir("nomanifest");
+    let err = Manifest::load(&d).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "actionable message: {msg}");
+}
+
+#[test]
+fn manifest_malformed_json_is_clean_error() {
+    let d = tmpdir("badjson");
+    std::fs::write(d.join("manifest.json"), "{not json").unwrap();
+    assert!(Manifest::load(&d).is_err());
+}
+
+#[test]
+fn manifest_missing_fields_is_clean_error() {
+    let d = tmpdir("missingfields");
+    std::fs::write(d.join("manifest.json"), r#"[{"model": "m"}]"#).unwrap();
+    let err = Manifest::load(&d).unwrap_err();
+    assert!(format!("{err:#}").contains("missing key"));
+}
+
+#[test]
+fn truncated_weights_rejected() {
+    let d = tmpdir("truncweights");
+    let mut tf = TensorFile::default();
+    tf.tensors.insert("wte".into(), HostTensor::from_f32(vec![8, 4], &[0.5; 32]));
+    let p = d.join("w.bin");
+    tf.write(&p).unwrap();
+    let mut bytes = std::fs::read(&p).unwrap();
+    bytes.truncate(bytes.len() - 7);
+    std::fs::write(&p, &bytes).unwrap();
+    assert!(TensorFile::read(&p).is_err());
+}
+
+#[test]
+fn gpt2_load_with_missing_tensors_is_clean_error() {
+    let mut tf = TensorFile::default();
+    tf.tensors.insert("wte".into(), HostTensor::from_f32(vec![512, 128], &vec![0.0; 512 * 128]));
+    // everything else missing
+    let cfg = Gpt2Config::sim("sim-small").unwrap();
+    let Err(err) = Gpt2Model::load(cfg, &tf) else { panic!("expected error") };
+    assert!(format!("{err:#}").contains("not found"));
+}
+
+#[test]
+fn gpt2_load_with_wrong_shape_is_clean_error() {
+    // build a full tiny weight set, then corrupt one shape
+    let cfg = Gpt2Config::sim("sim-small").unwrap();
+    let mut tf = TensorFile::default();
+    let d = cfg.d_model;
+    let fill = |dims: Vec<usize>| {
+        let n: usize = dims.iter().product();
+        HostTensor::from_f32(dims, &vec![0.01; n])
+    };
+    tf.tensors.insert("wte".into(), fill(vec![100, d])); // wrong vocab
+    tf.tensors.insert("wpe".into(), fill(vec![cfg.n_ctx, d]));
+    tf.tensors.insert("ln_f/g".into(), fill(vec![d]));
+    tf.tensors.insert("ln_f/b".into(), fill(vec![d]));
+    for i in 0..cfg.n_layer {
+        let p = format!("block{i:02}");
+        for (name, dims) in [
+            ("ln_1/g", vec![d]),
+            ("ln_1/b", vec![d]),
+            ("ln_2/g", vec![d]),
+            ("ln_2/b", vec![d]),
+            ("c_attn/w", vec![d, 3 * d]),
+            ("c_attn/b", vec![3 * d]),
+            ("attn_proj/w", vec![d, d]),
+            ("attn_proj/b", vec![d]),
+            ("c_fc/w", vec![d, cfg.d_ff()]),
+            ("c_fc/b", vec![cfg.d_ff()]),
+            ("mlp_proj/w", vec![cfg.d_ff(), d]),
+            ("mlp_proj/b", vec![d]),
+        ] {
+            tf.tensors.insert(format!("{p}/{name}"), fill(dims));
+        }
+    }
+    let Err(err) = Gpt2Model::load(cfg, &tf) else { panic!("expected error") };
+    assert!(format!("{err:#}").contains("inconsistent"));
+}
+
+#[test]
+fn bpe_malformed_merge_table_rejected() {
+    assert!(Bpe::load_str("abc def").is_err());
+    assert!(Bpe::load_str("12").is_err());
+    assert!(Bpe::load_str("999 0").is_err()); // future reference
+}
+
+#[test]
+fn config_partial_garbage_rejected() {
+    assert!(Config::parse("[ok]\nkey = v\nbroken line").is_err());
+}
+
+#[test]
+fn json_deep_nesting_ok_but_garbage_rejected() {
+    let deep = format!("{}1{}", "[".repeat(200), "]".repeat(200));
+    assert!(Json::parse(&deep).is_ok());
+    assert!(Json::parse(&"[".repeat(200)).is_err());
+}
+
+#[test]
+fn tensor_u8_not_executable_input() {
+    let t = HostTensor { dtype: muxq::data::tensors::DType::U8, dims: vec![4], data: vec![1, 2, 3, 4] };
+    assert!(t.to_literal().is_err());
+}
+
+#[test]
+fn host_tensor_dtype_mismatch_errors() {
+    let t = HostTensor::from_f32(vec![2], &[1.0, 2.0]);
+    assert!(t.as_i32().is_err());
+    let t2 = HostTensor::from_i32(vec![2], &[1, 2]);
+    assert!(t2.as_f32().is_err());
+}

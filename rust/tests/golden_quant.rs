@@ -1,0 +1,127 @@
+//! Cross-language oracle test: the rust quantization engine must
+//! reproduce the python/jax reference bit-for-bit (goldens produced by
+//! `python/compile/aot.py::stage_goldens`).
+
+use muxq::data::tensors::TensorFile;
+use muxq::quant::absmax::{fake_quant, Granularity, Scales};
+use muxq::quant::llmint8::fq_llmint8_act;
+use muxq::quant::muxq::{decompose, fq_muxq, outlier_mask, MuxqParams};
+use muxq::quant::smooth::smooth_scales;
+use muxq::quant::{gemm, MatF32};
+
+fn goldens() -> Option<TensorFile> {
+    let path = muxq::artifacts_dir().join("goldens").join("quant.bin");
+    if !path.exists() {
+        eprintln!("skipping: {} missing (run `make artifacts`)", path.display());
+        return None;
+    }
+    Some(TensorFile::read(path).unwrap())
+}
+
+fn mat(tf: &TensorFile, name: &str) -> MatF32 {
+    let t = tf.get(name).unwrap();
+    MatF32::from_vec(t.dims[0], t.dims[1], t.as_f32().unwrap()).unwrap()
+}
+
+fn assert_close(got: &MatF32, want: &MatF32, tol: f32, what: &str) {
+    assert_eq!((got.rows, got.cols), (want.rows, want.cols), "{what} shape");
+    let d = got.max_abs_diff(want);
+    assert!(d <= tol, "{what}: max abs diff {d} > {tol}");
+}
+
+#[test]
+fn naive_fake_quant_matches_python() {
+    let Some(tf) = goldens() else { return };
+    let x = mat(&tf, "x");
+    let w = mat(&tf, "w");
+    for (gran, gx, gw) in [
+        ("pt", Granularity::PerTensor, Granularity::PerTensor),
+        ("pv", Granularity::PerRow, Granularity::PerCol),
+    ] {
+        let sx = Scales::compute(&x, 127.0, gx);
+        let got = fake_quant(&x, &sx, 127.0);
+        assert_close(&got, &mat(&tf, &format!("fq_naive_x_{gran}")), 1e-6, "fq x");
+        let sw = Scales::compute(&w, 127.0, gw);
+        let got_w = fake_quant(&w, &sw, 127.0);
+        assert_close(&got_w, &mat(&tf, &format!("fq_naive_w_{gran}")), 1e-6, "fq w");
+    }
+}
+
+#[test]
+fn quant_matmul_matches_python() {
+    let Some(tf) = goldens() else { return };
+    let x = mat(&tf, "x");
+    let w = mat(&tf, "w");
+    for (gran, gx, gw) in [
+        ("pt", Granularity::PerTensor, Granularity::PerTensor),
+        ("pv", Granularity::PerRow, Granularity::PerCol),
+    ] {
+        let got = gemm::quant_matmul(&x, &w, 127.0, gx, gw);
+        // integer matmul is exact; dequant multiplication gives ~1e-5 rel
+        let want = mat(&tf, &format!("qmm_{gran}"));
+        let scale = want.absmax().max(1.0);
+        assert!(
+            got.max_abs_diff(&want) / scale < 1e-5,
+            "qmm_{gran} rel diff {}",
+            got.max_abs_diff(&want) / scale
+        );
+    }
+}
+
+#[test]
+fn outlier_mask_and_decompose_match_python() {
+    let Some(tf) = goldens() else { return };
+    let x = mat(&tf, "x");
+    let mask = outlier_mask(&x, 6.0);
+    let want_mask = mat(&tf, "outlier_mask");
+    for (c, m) in mask.iter().enumerate() {
+        assert_eq!(*m, want_mask.at(0, c) > 0.5, "mask[{c}]");
+    }
+    let p = MuxqParams { theta: 6.0, exp_factor: 2 };
+    let (body, aux) = decompose(&x, &mask, &p);
+    assert_close(&body, &mat(&tf, "muxq_body"), 1e-6, "body");
+    assert_close(&aux, &mat(&tf, "muxq_aux"), 1e-6, "aux");
+}
+
+#[test]
+fn muxq_fake_quant_matches_python() {
+    let Some(tf) = goldens() else { return };
+    let x = mat(&tf, "x");
+    let p = MuxqParams { theta: 6.0, exp_factor: 2 };
+    for (gran, g) in [("pt", Granularity::PerTensor), ("pv", Granularity::PerRow)] {
+        let got = fq_muxq(&x, 127.0, g, &p);
+        assert_close(&got, &mat(&tf, &format!("fq_muxq_x_{gran}")), 1e-5, "fq_muxq");
+    }
+}
+
+#[test]
+fn llmint8_fake_quant_matches_python() {
+    let Some(tf) = goldens() else { return };
+    let x = mat(&tf, "x");
+    for (gran, g) in [("pt", Granularity::PerTensor), ("pv", Granularity::PerRow)] {
+        let got = fq_llmint8_act(&x, 127.0, g, 6.0);
+        assert_close(&got, &mat(&tf, &format!("fq_llmint8_x_{gran}")), 1e-5, "fq_llmint8");
+    }
+}
+
+#[test]
+fn four_bit_matches_python() {
+    let Some(tf) = goldens() else { return };
+    let x = mat(&tf, "x");
+    let s = Scales::compute(&x, 7.0, Granularity::PerTensor);
+    let got = fake_quant(&x, &s, 7.0);
+    assert_close(&got, &mat(&tf, "fq_naive_x_pt_4b"), 1e-6, "4-bit");
+}
+
+#[test]
+fn smoothquant_scales_match_python() {
+    let Some(tf) = goldens() else { return };
+    let x = mat(&tf, "x");
+    let w = mat(&tf, "w");
+    let got = smooth_scales(&x.absmax_cols(), &w, 0.5);
+    let want = tf.get("smooth_s").unwrap().as_f32().unwrap();
+    for (i, (g, wv)) in got.iter().zip(&want).enumerate() {
+        let rel = (g - wv).abs() / wv.abs().max(1e-6);
+        assert!(rel < 1e-4, "smooth_s[{i}]: {g} vs {wv}");
+    }
+}

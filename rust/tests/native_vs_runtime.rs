@@ -1,0 +1,65 @@
+//! Native GPT-2 (pure rust f32) vs the PJRT path (jax-exported HLO):
+//! the same weights + tokens must give the same NLL — validating both
+//! implementations against each other.
+
+use muxq::coordinator::{VariantKey, VariantRegistry};
+use muxq::data::eval_set::EvalSet;
+use muxq::gpt2::Gpt2Model;
+
+#[test]
+fn native_forward_matches_pjrt_fp16_variant() {
+    let root = muxq::artifacts_dir();
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let model = Gpt2Model::load_from_artifacts("sim-small").unwrap();
+    let registry = VariantRegistry::open_default().unwrap();
+    let eval = EvalSet::load(&root, "valid").unwrap();
+
+    let key = VariantKey::eval("sim-small", "fp16-pt");
+    let compiled = registry.get(&key).unwrap();
+    let (batch, seq) = (compiled.meta.batch, compiled.meta.seq);
+    let windows = eval.windows(seq, batch);
+    let mut toks = Vec::new();
+    for w in &windows {
+        toks.extend_from_slice(w);
+    }
+    let out = compiled.run(&toks, 8.0, 8.0).unwrap();
+    let pjrt_nll = out[0].data.clone();
+
+    let windows_u32 = eval.windows_u32(seq, batch);
+    let (native_nll, counts) = model.nll_per_seq(&windows_u32, None).unwrap();
+    assert_eq!(counts[0], (seq - 1) as f32);
+
+    for (i, (n, p)) in native_nll.iter().zip(&pjrt_nll).enumerate() {
+        let rel = (n - p).abs() / p.abs().max(1.0);
+        assert!(
+            rel < 5e-3,
+            "seq {i}: native {n} vs pjrt {p} (rel {rel}) — implementations diverged"
+        );
+    }
+}
+
+#[test]
+fn native_quantized_tracks_pjrt_quantized() {
+    // the rust quant engine inside the native model should show the SAME
+    // ordering as the pallas path: muxq-pt < naive-pt in nll at 6 bits
+    let root = muxq::artifacts_dir();
+    if !root.join("manifest.json").exists() {
+        return;
+    }
+    use muxq::quant::{Method, QuantSpec};
+    let model = Gpt2Model::load_from_artifacts("sim-small").unwrap();
+    let eval = EvalSet::load(&root, "valid").unwrap();
+    let windows = eval.windows_u32(128, 4);
+
+    let nll = |spec: Option<QuantSpec>| -> f32 {
+        model.nll_per_seq(&windows, spec.as_ref()).unwrap().0.iter().sum()
+    };
+    let fp = nll(None);
+    let naive6 = nll(Some(QuantSpec::new(Method::Naive, "per-tensor", 6, 8).unwrap()));
+    let muxq6 = nll(Some(QuantSpec::new(Method::Muxq, "per-tensor", 6, 8).unwrap()));
+    assert!(naive6 > fp, "quantization must cost something");
+    assert!(muxq6 < naive6, "muxq must beat naive at 6 bits: {muxq6} vs {naive6}");
+}

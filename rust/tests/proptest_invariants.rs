@@ -1,0 +1,194 @@
+//! Property-based invariants (via the in-repo mini-proptest): the
+//! algebraic guarantees the paper's method rests on, plus coordinator
+//! state-machine invariants, across randomized inputs.
+
+use muxq::coordinator::batcher::{BatchKey, Batcher, BatcherConfig};
+use muxq::coordinator::request::{Pending, ScoreRequest};
+use muxq::coordinator::VariantKey;
+use muxq::quant::absmax::{fq_naive, qmax_from_bits, Granularity, Scales};
+use muxq::quant::muxq::{decompose, fq_muxq, outlier_mask, reconstruct, MuxqParams};
+use muxq::quant::{gemm, MatF32};
+use muxq::util::proptest::{prop, prop_assert, Gen};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+fn gen_matrix(g: &mut Gen, max_dim: usize) -> MatF32 {
+    let rows = g.usize(1, max_dim);
+    let cols = g.usize(1, max_dim);
+    let mut m = MatF32::from_vec(rows, cols, g.vec_f32(rows * cols, -4.0, 4.0)).unwrap();
+    // sometimes inject outlier columns
+    if g.bool() {
+        let n_out = g.usize(1, cols.min(4));
+        for _ in 0..n_out {
+            let c = g.usize(0, cols - 1);
+            let scale = g.f32(8.0, 64.0);
+            for r in 0..rows {
+                *m.at_mut(r, c) *= scale;
+            }
+        }
+    }
+    m
+}
+
+#[test]
+fn prop_muxq_reconstruction_is_exact() {
+    prop("muxq reconstruct == identity", |g| {
+        let x = gen_matrix(g, 48);
+        let exp = g.usize(1, 4) as u32;
+        let p = MuxqParams { theta: g.f32(1.0, 10.0), exp_factor: exp };
+        let mask = outlier_mask(&x, p.theta);
+        let (body, aux) = decompose(&x, &mask, &p);
+        let rec = reconstruct(&body, &aux, &p);
+        prop_assert(
+            rec.max_abs_diff(&x) <= 1e-4 * x.absmax().max(1.0),
+            format!("diff {}", rec.max_abs_diff(&x)),
+        )
+    });
+}
+
+#[test]
+fn prop_body_absmax_never_exceeds_input() {
+    prop("body range <= input range", |g| {
+        let x = gen_matrix(g, 48);
+        let p = MuxqParams { theta: 6.0, exp_factor: g.usize(1, 4) as u32 };
+        let mask = outlier_mask(&x, p.theta);
+        let (body, _) = decompose(&x, &mask, &p);
+        prop_assert(body.absmax() <= x.absmax() + 1e-6, "body grew")
+    });
+}
+
+#[test]
+fn prop_fake_quant_error_bounded_by_half_step() {
+    prop("fq error <= scale/2 per element", |g| {
+        let x = gen_matrix(g, 32);
+        let bits = *g.choice(&[4u32, 5, 6, 7, 8]);
+        let qmax = qmax_from_bits(bits);
+        let y = fq_naive(&x, qmax, Granularity::PerTensor);
+        let step = x.absmax().max(1e-8) / qmax;
+        prop_assert(
+            x.max_abs_diff(&y) <= step / 2.0 + 1e-5,
+            format!("err {} step {}", x.max_abs_diff(&y), step),
+        )
+    });
+}
+
+#[test]
+fn prop_muxq_never_worse_than_naive_per_tensor() {
+    prop("muxq <= naive + eps at per-tensor", |g| {
+        let x = gen_matrix(g, 48);
+        let bits = *g.choice(&[5u32, 6, 7, 8]);
+        let qmax = qmax_from_bits(bits);
+        let p = MuxqParams::default();
+        let e_m = fq_muxq(&x, qmax, Granularity::PerTensor, &p).mean_abs_diff(&x);
+        let e_n = fq_naive(&x, qmax, Granularity::PerTensor).mean_abs_diff(&x);
+        // without outliers they are identical; with outliers muxq wins.
+        // tiny epsilon for boundary cases where theta splits a column
+        prop_assert(e_m <= e_n * 1.02 + 1e-6, format!("muxq {e_m} naive {e_n}"))
+    });
+}
+
+#[test]
+fn prop_quant_matmul_scale_factoring_exact() {
+    prop("int pipeline == fq(x)@fq(w)", |g| {
+        let m = g.usize(1, 24);
+        let k = g.usize(1, 24);
+        let n = g.usize(1, 24);
+        let x = MatF32::from_vec(m, k, g.vec_f32(m * k, -4.0, 4.0)).unwrap();
+        let w = MatF32::from_vec(k, n, g.vec_f32(k * n, -2.0, 2.0)).unwrap();
+        let qmax = qmax_from_bits(*g.choice(&[4u32, 8]));
+        let got = gemm::quant_matmul(&x, &w, qmax, Granularity::PerRow, Granularity::PerCol);
+        let fx = fq_naive(&x, qmax, Granularity::PerRow);
+        let fw = fq_naive(&w, qmax, Granularity::PerCol);
+        let want = gemm::matmul_f32(&fx, &fw);
+        let tol = 1e-4 * want.absmax().max(1.0);
+        prop_assert(got.max_abs_diff(&want) <= tol, format!("diff {}", got.max_abs_diff(&want)))
+    });
+}
+
+#[test]
+fn prop_scales_positive_and_finite() {
+    prop("scales positive/finite incl. zero matrices", |g| {
+        let rows = g.usize(1, 16);
+        let cols = g.usize(1, 16);
+        let data = if g.bool() { vec![0.0; rows * cols] } else { g.vec_f32(rows * cols, -1.0, 1.0) };
+        let x = MatF32::from_vec(rows, cols, data).unwrap();
+        for gran in [Granularity::PerTensor, Granularity::PerRow, Granularity::PerCol] {
+            let s = Scales::compute(&x, 127.0, gran);
+            for r in 0..rows {
+                for c in 0..cols {
+                    let v = s.at(r, c);
+                    if !(v > 0.0 && v.is_finite()) {
+                        return Err(format!("scale {v} at ({r},{c})"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------ batcher
+fn mk_pending(variant: &VariantKey, seq: usize, ia_bits: f32) -> Pending {
+    let (tx, _rx) = mpsc::channel();
+    Pending {
+        req: ScoreRequest { variant: variant.clone(), tokens: vec![0; seq], ia_bits, w_bits: 8.0 },
+        submitted: Instant::now(),
+        tx,
+    }
+}
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    prop("batcher neither loses nor duplicates", |g| {
+        let max_batch = g.usize(1, 8);
+        let batcher = Batcher::new(BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_millis(0), // everything immediately due
+            max_queue: 10_000,
+        });
+        let variants = ["a", "b", "c"];
+        let n = g.usize(1, 60);
+        let mut pushed_per_key = std::collections::BTreeMap::new();
+        for _ in 0..n {
+            let v = VariantKey::eval("m", *g.choice(&variants));
+            let bits = *g.choice(&[6.0f32, 8.0]);
+            let key = BatchKey::of(&v, bits, 8.0);
+            batcher.push(key.clone(), mk_pending(&v, 4, bits)).unwrap();
+            *pushed_per_key.entry(key).or_insert(0usize) += 1;
+        }
+        let mut popped_per_key = std::collections::BTreeMap::new();
+        while batcher.queued() > 0 {
+            let batch = batcher.next_batch().unwrap();
+            prop_assert(batch.requests.len() <= max_batch, "batch too large")?;
+            prop_assert(!batch.requests.is_empty(), "empty batch")?;
+            // batch homogeneity: all requests share the key
+            for p in &batch.requests {
+                let k = BatchKey::of(&p.req.variant, p.req.ia_bits, p.req.w_bits);
+                prop_assert(k == batch.key, "mixed batch")?;
+            }
+            *popped_per_key.entry(batch.key.clone()).or_insert(0usize) += batch.requests.len();
+        }
+        prop_assert(pushed_per_key == popped_per_key, "conservation violated")
+    });
+}
+
+#[test]
+fn prop_batcher_respects_capacity() {
+    prop("admission control enforces max_queue", |g| {
+        let cap = g.usize(1, 16);
+        let batcher = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_secs(10),
+            max_queue: cap,
+        });
+        let v = VariantKey::eval("m", "t");
+        let key = BatchKey::of(&v, 8.0, 8.0);
+        let mut accepted = 0;
+        for _ in 0..cap + 5 {
+            if batcher.push(key.clone(), mk_pending(&v, 4, 8.0)).is_ok() {
+                accepted += 1;
+            }
+        }
+        prop_assert(accepted == cap, format!("accepted {accepted} != cap {cap}"))
+    });
+}

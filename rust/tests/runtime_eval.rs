@@ -1,0 +1,91 @@
+//! Runtime integration: every compiled eval variant of sim-small must
+//! reproduce the python-computed golden (nll, count) end to end through
+//! PJRT — validating HLO export, weight ordering, literal conversion and
+//! the per-seq aggregation contract in one shot.
+
+use muxq::coordinator::{VariantKey, VariantRegistry};
+use muxq::data::tensors::TensorFile;
+
+fn setup() -> Option<(VariantRegistry, TensorFile)> {
+    let root = muxq::artifacts_dir();
+    let gpath = root.join("goldens").join("eval_sim-small.bin");
+    if !gpath.exists() || !root.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    let registry = VariantRegistry::open_default().unwrap();
+    let goldens = TensorFile::read(gpath).unwrap();
+    Some((registry, goldens))
+}
+
+#[test]
+fn all_eval_variants_match_python_goldens() {
+    let Some((registry, goldens)) = setup() else { return };
+    let tokens = goldens.get("tokens").unwrap().as_i32().unwrap();
+    let mut checked = 0;
+    for key in registry.keys() {
+        if key.model != "sim-small" || key.kind != "eval" {
+            continue;
+        }
+        let gname = format!("nll/{}", key.tag);
+        let Ok(g) = goldens.get(&gname) else { continue };
+        let want = g.as_f32().unwrap(); // [sum_nll, count]
+        let compiled = registry.get(&key).unwrap();
+        let out = compiled.run(&tokens, 8.0, 8.0).unwrap();
+        let nll: f32 = out[0].data.iter().sum();
+        let count: f32 = out[1].data.iter().sum();
+        assert_eq!(count, want[1], "{}: count", key.tag);
+        // tolerance: XLA fusion reassociates reductions, and activations
+        // sitting exactly at the theta=6 outlier boundary can flip the
+        // dynamic mask between eager and compiled execution
+        let rel = (nll - want[0]).abs() / want[0].abs().max(1.0);
+        assert!(rel < 1e-3, "{}: nll {} vs golden {} (rel {rel})", key.tag, nll, want[0]);
+        checked += 1;
+    }
+    assert!(checked >= 7, "only {checked} variants checked");
+}
+
+#[test]
+fn bit_sweep_ordering_holds_through_runtime() {
+    // lower activation bits must not *improve* perplexity for naive, and
+    // muxq must beat naive per-tensor at 6 bits (Table 1's shape) — all
+    // through the compiled artifacts.
+    let Some((registry, goldens)) = setup() else { return };
+    let tokens = goldens.get("tokens").unwrap().as_i32().unwrap();
+    let nll_of = |tag: &str, ia: f32| -> f32 {
+        let key = VariantKey::eval("sim-small", tag);
+        let compiled = registry.get(&key).unwrap();
+        let out = compiled.run(&tokens, ia, 8.0).unwrap();
+        out[0].data.iter().sum()
+    };
+    let naive8 = nll_of("naive-pt", 8.0);
+    let naive6 = nll_of("naive-pt", 6.0);
+    let muxq6 = nll_of("muxq-pt", 6.0);
+    let fp16 = nll_of("fp16-pt", 8.0);
+    assert!(naive6 > naive8, "naive should degrade with fewer bits");
+    assert!(muxq6 < naive6, "muxq should beat naive at 6 bits per-tensor");
+    assert!(fp16 <= muxq6 * 1.01, "fp16 is the floor");
+}
+
+#[test]
+fn logits_variant_runs() {
+    let Some((registry, goldens)) = setup() else { return };
+    let tokens = goldens.get("tokens").unwrap().as_i32().unwrap();
+    let key = VariantKey::logits("sim-small", "muxq-pt");
+    if registry.meta(&key).is_none() {
+        return;
+    }
+    let compiled = registry.get(&key).unwrap();
+    let out = compiled.run(&tokens, 8.0, 8.0).unwrap();
+    let logits = out[0].data.clone();
+    assert_eq!(logits.len(), 8 * 128 * 512);
+    assert!(logits.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn invalid_token_shape_rejected() {
+    let Some((registry, _)) = setup() else { return };
+    let key = VariantKey::eval("sim-small", "fp16-pt");
+    let compiled = registry.get(&key).unwrap();
+    assert!(compiled.run(&[0i32; 17], 8.0, 8.0).is_err());
+}

@@ -1,0 +1,31 @@
+//! End-to-end bridge smoke test: tiny jax-exported eval graph, loaded and
+//! executed via PJRT, checked against the python-computed golden.
+//! Only runs when the /tmp fixtures exist (created by the build probe).
+use muxq::data::tensors::TensorFile;
+use muxq::runtime::{literal_i32, literal_scalar_f32, to_vec_f32, Engine};
+
+#[test]
+fn tiny_eval_roundtrip() {
+    let hlo = "/tmp/tiny_eval.hlo.txt";
+    if !std::path::Path::new(hlo).exists() {
+        eprintln!("skipping: {hlo} missing");
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load_hlo(hlo).unwrap();
+    let weights = TensorFile::read("/tmp/tiny_weights.bin").unwrap();
+    let mut args = Vec::new();
+    for name in weights.sorted_names() {
+        args.push(weights.get(name).unwrap().to_literal().unwrap());
+    }
+    let toks: Vec<i32> = (0..32).map(|i| i % 64).collect();
+    args.push(literal_i32(&[2, 16], &toks).unwrap());
+    args.push(literal_scalar_f32(8.0));
+    args.push(literal_scalar_f32(8.0));
+    let out = exe.run(&args).unwrap();
+    let nll = to_vec_f32(&out[0]).unwrap()[0];
+    let count = to_vec_f32(&out[1]).unwrap()[0];
+    println!("nll={nll} count={count}");
+    assert_eq!(count, 30.0);
+    assert!((nll - 124.39593).abs() < 0.05, "nll {nll} != 124.39593");
+}
