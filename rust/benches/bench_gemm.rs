@@ -1,12 +1,19 @@
-//! GEMM pipeline benchmarks: FP32 reference vs the true-INT pipelines of
-//! each method (the deployment-path cost the paper argues about, here on
-//! CPU; the NPU projection lives in bench_npusim / npu_latency).
-//! Run: `cargo bench --bench bench_gemm`.
+//! GEMM benchmarks: the packed parallel INT8 engine vs the seed kernel,
+//! thread scaling, the quantize-compute-dequant pipelines of each method,
+//! and end-to-end `nll_per_seq` throughput through the true-INT pipeline.
+//! (The NPU projection lives in bench_npusim / npu_latency.)
+//!
+//! Run: `cargo bench --bench bench_gemm`. Writes the perf-trajectory
+//! record to `$MUXQ_BENCH_JSON` (default `BENCH_gemm.json`); the CI
+//! smoke gate is rust/scripts/bench_check.sh.
 
 use muxq::data::prng::SplitMix64;
+use muxq::gpt2::{Gpt2Model, IntMethod, QuantizedGpt2};
 use muxq::quant::gemm::{matmul_f32, quant_matmul};
 use muxq::quant::llmint8::llmint8_matmul;
+use muxq::quant::matrix::{MatI32, MatI8};
 use muxq::quant::muxq::{muxq_matmul_int, MuxqParams};
+use muxq::quant::packed::{matmul_i8_packed_with, PackedMatI8, ParallelGemm};
 use muxq::quant::{Granularity, MatF32};
 use muxq::util::bench::Bencher;
 
@@ -26,10 +33,83 @@ fn mat(rows: usize, cols: usize, seed: u64, outliers: &[usize]) -> MatF32 {
     m
 }
 
+fn rand_i8(rows: usize, cols: usize, seed: u64) -> MatI8 {
+    let mut rng = SplitMix64::new(seed);
+    let mut m = MatI8::zeros(rows, cols);
+    for v in m.data.iter_mut() {
+        *v = (rng.next_below(255) as i32 - 127) as i8;
+    }
+    m
+}
+
+/// The seed repo's i8 kernel, verbatim (cache-blocked, zero-skip branch
+/// in the inner loop) — kept here as the before-side of the packed-engine
+/// comparison so the speedup stays measurable across PRs.
+fn seed_matmul_i8(a: &MatI8, b: &MatI8) -> MatI32 {
+    const BM: usize = 32;
+    const BK: usize = 64;
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = MatI32::zeros(m, n);
+    for i0 in (0..m).step_by(BM) {
+        let i1 = (i0 + BM).min(m);
+        for k0 in (0..k).step_by(BK) {
+            let k1 = (k0 + BK).min(k);
+            for i in i0..i1 {
+                let arow = a.row(i);
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let av = arow[kk] as i32;
+                    if av == 0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * *bv as i32;
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
 fn main() {
     let mut b = Bencher::default();
     let p = MuxqParams::default();
 
+    // ---- packed engine vs seed kernel (the perf-trajectory numbers) ----
+    let (gm, gk, gn) = (512usize, 768usize, 768usize);
+    Bencher::header(&format!("packed i8 GEMM vs seed kernel ({gm}x{gk}x{gn})"));
+    let xq = rand_i8(gm, gk, 11);
+    let wq = rand_i8(gk, gn, 12);
+    let seed_ms = b
+        .bench("seed_i8 (blocked, zero-skip branch)", || seed_matmul_i8(&xq, &wq))
+        .mean
+        .as_secs_f64()
+        * 1e3;
+    let packed = PackedMatI8::pack(&wq);
+    let mut per_thread_ms: Vec<(usize, f64)> = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let cfg = ParallelGemm { threads, min_parallel_macs: 0 };
+        let ms = b
+            .bench(&format!("packed_i8/{threads}t"), || matmul_i8_packed_with(&xq, &packed, cfg))
+            .mean
+            .as_secs_f64()
+            * 1e3;
+        per_thread_ms.push((threads, ms));
+    }
+    b.bench("pack_weights (once per weight, amortized)", || PackedMatI8::pack(&wq));
+    let packed_1t_ms = per_thread_ms[0].1;
+    let packed_4t_ms = per_thread_ms[2].1;
+    let gops_1t = 2.0 * (gm * gk * gn) as f64 / (packed_1t_ms / 1e3) / 1e9;
+    println!(
+        "\npacked vs seed (1 thread): {:.2}x   scaling 1t->4t: {:.2}x   {:.2} GOPS/thread",
+        seed_ms / packed_1t_ms,
+        packed_1t_ms / packed_4t_ms,
+        gops_1t
+    );
+
+    // ---- quantize-compute-dequant pipelines per method ----
     for (m, k, n, label) in [
         (256, 512, 512, "c_fc-like 256x512x512"),
         (1024, 256, 1024, "sim-large c_fc 1024x256x1024"),
@@ -64,4 +144,44 @@ fn main() {
         .mean
         .as_secs_f64();
     println!("\nmuxq INT pipeline overhead vs naive INT (first shape): {:.2}x", muxq / naive);
+
+    // ---- end-to-end: nll_per_seq through the zero-copy INT pipeline ----
+    let (nb, ns) = (4usize, 32usize);
+    let tokens: Vec<Vec<u32>> = {
+        let mut rng = SplitMix64::new(21);
+        (0..nb).map(|_| (0..ns).map(|_| rng.next_below(128) as u32).collect()).collect()
+    };
+    Bencher::header(&format!("end-to-end nll_per_seq (2L d=128, batch {nb}x{ns} tokens)"));
+    let mut e2e_tok_s: Vec<(&str, f64)> = Vec::new();
+    for (method, name) in [(IntMethod::Naive, "naive"), (IntMethod::Muxq, "muxq")] {
+        let q = QuantizedGpt2::new(
+            Gpt2Model::test_model(2, 128, 2, 64, 128, 7),
+            method,
+            8,
+            8,
+        );
+        let stats = b.bench(&format!("nll_per_seq/{name}"), || q.nll_per_seq(&tokens).unwrap());
+        let tok_s = (nb * ns) as f64 * stats.per_sec();
+        e2e_tok_s.push((name, tok_s));
+    }
+    for (name, tok_s) in &e2e_tok_s {
+        println!("nll_per_seq/{name}: {tok_s:.0} tokens/s");
+    }
+
+    // ---- perf-trajectory record ----
+    let json = format!(
+        "{{\n  \"bench\": \"bench_gemm\",\n  \"bootstrap\": false,\n  \"shape\": [{gm}, {gk}, {gn}],\n  \"seed_i8_ms\": {seed_ms:.4},\n  \"packed_1t_ms\": {:.4},\n  \"packed_2t_ms\": {:.4},\n  \"packed_4t_ms\": {:.4},\n  \"speedup_vs_seed_1t\": {:.3},\n  \"scaling_1t_to_4t\": {:.3},\n  \"gops_packed_1t\": {:.3},\n  \"e2e_naive_tok_per_s\": {:.1},\n  \"e2e_muxq_tok_per_s\": {:.1}\n}}\n",
+        per_thread_ms[0].1,
+        per_thread_ms[1].1,
+        per_thread_ms[2].1,
+        seed_ms / packed_1t_ms,
+        packed_1t_ms / packed_4t_ms,
+        gops_1t,
+        e2e_tok_s[0].1,
+        e2e_tok_s[1].1,
+    );
+    let path =
+        std::env::var("MUXQ_BENCH_JSON").unwrap_or_else(|_| "BENCH_gemm.json".to_string());
+    std::fs::write(&path, json).expect("write bench json");
+    println!("\nwrote {path}");
 }

@@ -1,8 +1,10 @@
 //! Micro-benchmarks of the rust-native quantization transforms — the L3
 //! hot-path components (quantize, decompose, methods at both
-//! granularities). Run: `cargo bench --bench bench_quant`.
+//! granularities) — plus end-to-end `nll_per_seq` throughput through the
+//! zero-copy true-INT pipeline. Run: `cargo bench --bench bench_quant`.
 
 use muxq::data::prng::SplitMix64;
+use muxq::gpt2::{Gpt2Model, IntMethod, QuantizedGpt2};
 use muxq::quant::muxq::{decompose, fq_muxq, outlier_mask, MuxqParams};
 use muxq::quant::{fq_naive, Granularity, MatF32, Method, QuantSpec, Scales};
 use muxq::util::bench::Bencher;
@@ -56,4 +58,18 @@ fn main() {
         "\nmuxq fake-quant overhead vs naive: {:.2}x",
         muxq.as_secs_f64() / naive.as_secs_f64()
     );
+
+    // end-to-end throughput of the deployed INT pipeline (pre-packed
+    // weights + fused decompose/quantize + packed parallel GEMMs)
+    let (nb, ns) = (4usize, 24usize);
+    let tokens: Vec<Vec<u32>> = {
+        let mut rng = SplitMix64::new(33);
+        (0..nb).map(|_| (0..ns).map(|_| rng.next_below(64) as u32).collect()).collect()
+    };
+    Bencher::header(&format!("end-to-end nll_per_seq (2L d=96, batch {nb}x{ns} tokens)"));
+    for (method, name) in [(IntMethod::Naive, "naive"), (IntMethod::Muxq, "muxq")] {
+        let q = QuantizedGpt2::new(Gpt2Model::test_model(2, 96, 2, 48, 64, 9), method, 8, 8);
+        let stats = b.bench(&format!("nll_per_seq/{name}"), || q.nll_per_seq(&tokens).unwrap());
+        println!("    -> {:.0} tokens/s", (nb * ns) as f64 * stats.per_sec());
+    }
 }

@@ -1,0 +1,62 @@
+#!/usr/bin/env bash
+# GEMM bench smoke gate: run bench_gemm in quick mode, refresh the
+# repo-root BENCH_gemm.json perf-trajectory record, and FAIL if packed
+# single-thread throughput regressed >20% vs the committed baseline.
+#
+# Usage: rust/scripts/bench_check.sh
+# The committed baseline may carry "bootstrap": true (no measured numbers
+# yet, e.g. first checkout on a new host class); the first real run then
+# records the baseline instead of gating.
+set -euo pipefail
+cd "$(dirname "$0")/../.."
+
+BASELINE=BENCH_gemm.json
+NEW=$(mktemp /tmp/bench_gemm.XXXXXX.json)
+trap 'rm -f "$NEW"' EXIT
+
+# the crate manifest may live at the repo root or beside the rust/ tree
+MANIFEST_ARGS=()
+if [ ! -f Cargo.toml ]; then
+    if [ -f rust/Cargo.toml ]; then
+        MANIFEST_ARGS=(--manifest-path rust/Cargo.toml)
+    else
+        echo "ERROR: no Cargo.toml at repo root or rust/ - cannot run the bench" >&2
+        exit 2
+    fi
+fi
+
+MUXQ_BENCH_QUICK=1 MUXQ_BENCH_JSON="$NEW" \
+    cargo bench "${MANIFEST_ARGS[@]}" --bench bench_gemm
+
+python3 - "$BASELINE" "$NEW" <<'EOF'
+import json, shutil, sys
+
+baseline_path, new_path = sys.argv[1], sys.argv[2]
+with open(new_path) as f:
+    new = json.load(f)
+
+try:
+    with open(baseline_path) as f:
+        base = json.load(f)
+except FileNotFoundError:
+    base = None
+
+if base is None or base.get("bootstrap"):
+    print(f"no measured baseline; recording this run as {baseline_path}")
+    shutil.copy(new_path, baseline_path)
+    sys.exit(0)
+
+old_ms, cur_ms = base["packed_1t_ms"], new["packed_1t_ms"]
+# >20% throughput regression == time ratio > 1/0.8
+if cur_ms > old_ms * 1.25:
+    print(f"FAIL: packed_1t {cur_ms:.3f}ms vs baseline {old_ms:.3f}ms "
+          f"(>{(cur_ms/old_ms - 1)*100:.0f}% slower)")
+    sys.exit(1)
+
+print(f"OK: packed_1t {cur_ms:.3f}ms vs baseline {old_ms:.3f}ms")
+# only advance the baseline on improvement — advancing on any pass would
+# let sub-threshold regressions ratchet the gate down indefinitely
+if cur_ms < old_ms:
+    print("new best; advancing baseline")
+    shutil.copy(new_path, baseline_path)
+EOF

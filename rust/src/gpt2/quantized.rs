@@ -1,23 +1,33 @@
-//! True-INT deployment pipeline: weights quantized ONCE to i8 at load
-//! time (per-out-channel scales), activations quantized per batch, all
-//! projections running as i8 x i8 -> i32 GEMMs.
+//! True-INT deployment pipeline: weights quantized AND packed once at
+//! load time (per-out-channel scales, K-major panel layout), activations
+//! quantized per batch, all projections running as i8 x i8 -> i32 GEMMs
+//! on the packed parallel engine.
 //!
 //! This is the pipeline the paper *argues for* but does not implement
 //! (§4.3 uses fake quantization; §4.5 leaves the INT pipeline to future
 //! work). Here it is, end to end, with MUXQ's two-GEMM outlier handling
 //! in real integer arithmetic — plus the memory accounting that
 //! motivates INT deployment in the first place.
+//!
+//! Zero-copy projection path: `proj_int` performs no weight gathering or
+//! re-packing per call (weights are packed once in [`QuantizedGpt2::new`];
+//! the MUXQ Aux GEMM reads its outlier rows straight out of the full
+//! packed layout via an index list), and the Body/Aux operands are
+//! quantized in a single fused pass over X into reusable scratch buffers
+//! — no intermediate f32 Body/Aux matrices are ever materialized.
 
 use super::model::Gpt2Model;
-use crate::quant::absmax::{quantize_i8, Granularity, Scales};
-use crate::quant::gemm::{dequant, matmul_i8};
-use crate::quant::matrix::{MatF32, MatI8};
-use crate::quant::muxq::{gather_outlier_cols, outlier_mask, MuxqParams};
+use crate::quant::absmax::{Granularity, Scales, EPS};
+use crate::quant::matrix::{rint, MatF32, MatI32, MatI8};
+use crate::quant::muxq::{outlier_mask_into, MuxqParams};
+use crate::quant::packed::{self, PackedMatI8, ParallelGemm};
 use anyhow::Result;
+use std::sync::Mutex;
 
-/// One weight matrix, pre-quantized.
+/// One weight matrix, pre-quantized and pre-packed.
 pub struct QuantWeight {
-    pub q: MatI8,
+    /// K-major packed panels — the layout the microkernel streams.
+    pub packed: PackedMatI8,
     pub scales: Scales, // PerCol
     pub bias: Vec<f32>,
 }
@@ -26,14 +36,20 @@ impl QuantWeight {
     pub fn from_f32(w: &MatF32, bias: &[f32], w_bits: u32) -> QuantWeight {
         let qmax = crate::quant::qmax_from_bits(w_bits);
         let scales = Scales::compute(w, qmax, Granularity::PerCol);
-        QuantWeight { q: quantize_i8(w, &scales, qmax), scales, bias: bias.to_vec() }
+        let q = crate::quant::absmax::quantize_i8(w, &scales, qmax);
+        QuantWeight { packed: PackedMatI8::pack(&q), scales, bias: bias.to_vec() }
     }
 
+    /// Deployed INT bytes. Counts the *padded* panel storage — the packed
+    /// layout rounds the output dim up to the panel width, and the
+    /// memory-saving claim must stay honest about that.
     pub fn bytes(&self) -> usize {
-        self.q.data.len() + match &self.scales {
-            Scales::Tensor(_) => 4,
-            Scales::Rows(v) | Scales::Cols(v) => v.len() * 4,
-        } + self.bias.len() * 4
+        self.packed.padded_bytes()
+            + match &self.scales {
+                Scales::Tensor(_) => 4,
+                Scales::Rows(v) | Scales::Cols(v) => v.len() * 4,
+            }
+            + self.bias.len() * 4
     }
 }
 
@@ -44,15 +60,52 @@ pub enum IntMethod {
     Muxq,
 }
 
-/// A GPT-2 whose four projection sites hold i8 weights. Built from (and
-/// borrowing the FP parts of) a loaded [`Gpt2Model`].
+/// Reusable per-projection buffers: on the steady-state path `proj_int`
+/// allocates only its output matrix — quantized operands, i32
+/// accumulators, scale vectors and the outlier mask/index lists are all
+/// resized in place.
+struct Scratch {
+    /// quantized Body (MUXQ) or plain activations (Naive)
+    xq: MatI8,
+    /// compact quantized Aux — outlier columns only, [m, r]
+    aux_q: MatI8,
+    /// body / aux GEMM accumulators
+    acc: MatI32,
+    acc_aux: MatI32,
+    /// per-row activation scales (body, aux)
+    sx: Vec<f32>,
+    sa: Vec<f32>,
+    mask: Vec<bool>,
+    idx: Vec<usize>,
+}
+
+impl Scratch {
+    fn new() -> Scratch {
+        Scratch {
+            xq: MatI8::zeros(0, 0),
+            aux_q: MatI8::zeros(0, 0),
+            acc: MatI32::zeros(0, 0),
+            acc_aux: MatI32::zeros(0, 0),
+            sx: Vec::new(),
+            sa: Vec::new(),
+            mask: Vec::new(),
+            idx: Vec::new(),
+        }
+    }
+}
+
+/// A GPT-2 whose four projection sites hold packed i8 weights. Built from
+/// (and borrowing the FP parts of) a loaded [`Gpt2Model`].
 pub struct QuantizedGpt2 {
     pub fp: Gpt2Model,
     pub method: IntMethod,
     pub ia_bits: u32,
     pub muxq: MuxqParams,
+    /// row-panel parallel GEMM config (sequential fallback for small shapes)
+    pub gemm: ParallelGemm,
     /// per block: [c_attn, attn_proj, c_fc, mlp_proj]
     weights: Vec<[QuantWeight; 4]>,
+    scratch: Mutex<Scratch>,
 }
 
 impl QuantizedGpt2 {
@@ -69,7 +122,15 @@ impl QuantizedGpt2 {
                 ]
             })
             .collect();
-        QuantizedGpt2 { fp, method, ia_bits, muxq: MuxqParams::default(), weights }
+        QuantizedGpt2 {
+            fp,
+            method,
+            ia_bits,
+            muxq: MuxqParams::default(),
+            gemm: ParallelGemm::global(),
+            weights,
+            scratch: Mutex::new(Scratch::new()),
+        }
     }
 
     /// INT weight bytes vs the FP32 original (the memory-saving claim).
@@ -79,49 +140,64 @@ impl QuantizedGpt2 {
             .weights
             .iter()
             .flatten()
-            .map(|w| w.q.data.len() * 4 + w.bias.len() * 4)
+            .map(|w| w.packed.logical_len() * 4 + w.bias.len() * 4)
             .sum();
         (int, fp)
     }
 
-    /// One projection through the INT pipeline.
+    /// One projection through the INT pipeline. Weights were packed at
+    /// construction; the only per-call allocation is the output matrix.
     fn proj_int(&self, x: &MatF32, qw: &QuantWeight) -> MatF32 {
         let qmax = crate::quant::qmax_from_bits(self.ia_bits);
-        let mut y = match self.method {
+        let mut guard = self.scratch.lock().unwrap();
+        let sc = &mut *guard;
+        match self.method {
             IntMethod::Naive => {
-                let sx = Scales::compute(x, qmax, Granularity::PerRow);
-                let xq = quantize_i8(x, &sx, qmax);
-                dequant(&matmul_i8(&xq, &qw.q), &sx, &qw.scales)
+                quantize_rows_into(x, qmax, &mut sc.xq, &mut sc.sx);
+                packed::matmul_i8_packed_into(&sc.xq, &qw.packed, &mut sc.acc, self.gemm);
+                dequant_bias(&sc.acc, &sc.sx, &qw.scales, None, &qw.bias)
             }
             IntMethod::Muxq => {
-                let mask = outlier_mask(x, self.muxq.theta);
-                let r = mask.iter().filter(|m| **m).count();
-                // Body GEMM (shifted outlier cols)
-                let (body, _) = crate::quant::muxq::decompose(x, &mask, &self.muxq);
-                let sb = Scales::compute(&body, qmax, Granularity::PerRow);
-                let bq = quantize_i8(&body, &sb, qmax);
-                let mut y = dequant(&matmul_i8(&bq, &qw.q), &sb, &qw.scales);
-                if r > 0 {
-                    // skinny Aux GEMM against the gathered i8 weight rows
-                    let aux = gather_outlier_cols(x, &mask, self.muxq.inv_shift());
-                    let w_rows_i8 = gather_i8_rows(&qw.q, &mask);
-                    let sa = Scales::compute(&aux, qmax, Granularity::PerRow);
-                    let aq = quantize_i8(&aux, &sa, qmax);
-                    let ya = dequant(&matmul_i8(&aq, &w_rows_i8), &sa, &qw.scales);
-                    let f = self.muxq.aux_weight();
-                    for (yv, av) in y.data.iter_mut().zip(&ya.data) {
-                        *yv += f * av;
-                    }
+                outlier_mask_into(x, self.muxq.theta, &mut sc.mask);
+                sc.idx.clear();
+                sc.idx.extend(
+                    sc.mask.iter().enumerate().filter(|(_, m)| **m).map(|(i, _)| i),
+                );
+                fused_decompose_quantize(
+                    x,
+                    &sc.mask,
+                    &sc.idx,
+                    self.muxq.inv_shift(),
+                    qmax,
+                    &mut sc.xq,
+                    &mut sc.sx,
+                    &mut sc.aux_q,
+                    &mut sc.sa,
+                );
+                // Body GEMM over the full (shifted-outlier) activations
+                packed::matmul_i8_packed_into(&sc.xq, &qw.packed, &mut sc.acc, self.gemm);
+                if sc.idx.is_empty() {
+                    dequant_bias(&sc.acc, &sc.sx, &qw.scales, None, &qw.bias)
+                } else {
+                    // skinny Aux GEMM straight against the packed full W,
+                    // contraction walking the outlier row indices
+                    packed::matmul_i8_rows_subset_into(
+                        &sc.aux_q,
+                        &qw.packed,
+                        &sc.idx,
+                        &mut sc.acc_aux,
+                        self.gemm,
+                    );
+                    dequant_bias(
+                        &sc.acc,
+                        &sc.sx,
+                        &qw.scales,
+                        Some((&sc.acc_aux, &sc.sa, self.muxq.aux_weight())),
+                        &qw.bias,
+                    )
                 }
-                y
-            }
-        };
-        for r in 0..y.rows {
-            for (v, b) in y.row_mut(r).iter_mut().zip(&qw.bias) {
-                *v += b;
             }
         }
-        y
     }
 
     /// Per-sequence NLL through the full INT pipeline.
@@ -138,14 +214,115 @@ impl QuantizedGpt2 {
     }
 }
 
-fn gather_i8_rows(w: &MatI8, mask: &[bool]) -> MatI8 {
-    let idx: Vec<usize> =
-        mask.iter().enumerate().filter(|(_, m)| **m).map(|(i, _)| i).collect();
-    let mut out = MatI8::zeros(idx.len(), w.cols);
-    for (j, &r) in idx.iter().enumerate() {
-        out.data[j * w.cols..(j + 1) * w.cols].copy_from_slice(w.row(r));
+/// Per-row abs-max quantization straight into reusable scratch — the twin
+/// of `Scales::compute(PerRow)` + `quantize_i8`, fused into one pass.
+fn quantize_rows_into(x: &MatF32, qmax: f32, xq: &mut MatI8, sx: &mut Vec<f32>) {
+    let (m, k) = (x.rows, x.cols);
+    xq.rows = m;
+    xq.cols = k;
+    xq.data.resize(m * k, 0);
+    sx.clear();
+    sx.resize(m, 0.0);
+    for r in 0..m {
+        let xr = x.row(r);
+        let amax = xr.iter().fold(0.0f32, |mx, v| mx.max(v.abs()));
+        let s = amax.max(EPS) / qmax;
+        sx[r] = s;
+        for (qv, v) in xq.data[r * k..(r + 1) * k].iter_mut().zip(xr) {
+            *qv = rint(v / s).clamp(-qmax, qmax) as i8;
+        }
     }
-    out
+}
+
+/// Fused MUXQ decompose + quantize: ONE pass over each row of X computes
+/// the Body and compact-Aux row abs-maxes, a second writes the quantized
+/// values straight into the i8 scratch. No f32 Body/Aux matrices exist.
+/// Bit-identical to decompose -> Scales::compute(PerRow) -> quantize_i8
+/// (|x·2^-e| == |x|·2^-e exactly: the shift is a power of two).
+#[allow(clippy::too_many_arguments)]
+fn fused_decompose_quantize(
+    x: &MatF32,
+    mask: &[bool],
+    idx: &[usize],
+    inv: f32,
+    qmax: f32,
+    body_q: &mut MatI8,
+    sb: &mut Vec<f32>,
+    aux_q: &mut MatI8,
+    sa: &mut Vec<f32>,
+) {
+    let (m, k, r) = (x.rows, x.cols, idx.len());
+    debug_assert_eq!(mask.len(), k);
+    body_q.rows = m;
+    body_q.cols = k;
+    body_q.data.resize(m * k, 0);
+    aux_q.rows = m;
+    aux_q.cols = r;
+    aux_q.data.resize(m * r, 0);
+    sb.clear();
+    sb.resize(m, 0.0);
+    sa.clear();
+    sa.resize(m, 0.0);
+    for row in 0..m {
+        let xr = x.row(row);
+        let mut bmax = 0.0f32;
+        let mut amax = 0.0f32;
+        for c in 0..k {
+            let v = xr[c].abs();
+            if mask[c] {
+                let shifted = v * inv;
+                bmax = bmax.max(shifted);
+                amax = amax.max(shifted);
+            } else {
+                bmax = bmax.max(v);
+            }
+        }
+        let sbv = bmax.max(EPS) / qmax;
+        let sav = amax.max(EPS) / qmax;
+        sb[row] = sbv;
+        sa[row] = sav;
+        for (c, bq) in body_q.data[row * k..(row + 1) * k].iter_mut().enumerate() {
+            let v = if mask[c] { xr[c] * inv } else { xr[c] };
+            *bq = rint(v / sbv).clamp(-qmax, qmax) as i8;
+        }
+        for (t, aq) in aux_q.data[row * r..(row + 1) * r].iter_mut().enumerate() {
+            *aq = rint(xr[idx[t]] * inv / sav).clamp(-qmax, qmax) as i8;
+        }
+    }
+}
+
+/// Dequantize the body accumulator — plus, for MUXQ, the recombination
+/// `f · Aux` term — and add the bias, all in one pass over the output.
+fn dequant_bias(
+    acc: &MatI32,
+    sx: &[f32],
+    sw: &Scales,
+    aux: Option<(&MatI32, &[f32], f32)>,
+    bias: &[f32],
+) -> MatF32 {
+    let (m, n) = (acc.rows, acc.cols);
+    let mut y = MatF32::zeros(m, n);
+    for r in 0..m {
+        let yrow = &mut y.data[r * n..(r + 1) * n];
+        let arow = &acc.data[r * n..(r + 1) * n];
+        match aux {
+            None => {
+                for j in 0..n {
+                    yrow[j] = arow[j] as f32 * (sx[r] * sw.at(0, j)) + bias[j];
+                }
+            }
+            Some((acc2, sa, f)) => {
+                let a2 = &acc2.data[r * n..(r + 1) * n];
+                for j in 0..n {
+                    let swj = sw.at(0, j);
+                    yrow[j] = arow[j] as f32 * (sx[r] * swj)
+                        + f * (a2[j] as f32 * (sa[r] * swj))
+                        + bias[j];
+                }
+            }
+        }
+    }
+    y
 }
 
 #[cfg(test)]
@@ -175,6 +352,33 @@ mod tests {
                 assert!(rel < 0.05, "{method:?}: fp {a} int {b}");
             }
         }
+    }
+
+    #[test]
+    fn weights_packed_once_at_construction() {
+        // pack_count is thread-local, so concurrent tests can't perturb it
+        let before = packed::pack_count();
+        let q = QuantizedGpt2::new(tiny(), IntMethod::Muxq, 8, 8);
+        let after_new = packed::pack_count();
+        assert_eq!(after_new - before, 2 * 4, "one pack per projection site");
+        let t = toks(2, 8, 1);
+        q.nll_per_seq(&t).unwrap();
+        assert_eq!(
+            packed::pack_count(),
+            after_new,
+            "proj_int must never gather or re-pack weights per call"
+        );
+    }
+
+    #[test]
+    fn weight_bytes_count_panel_padding() {
+        // 8x6 weight: 6 cols round up to 2 panels of 4 -> 64 padded bytes
+        let w = MatF32::from_vec(8, 6, (0..48).map(|v| v as f32 / 48.0).collect()).unwrap();
+        let qw = QuantWeight::from_f32(&w, &[0.0; 6], 8);
+        assert_eq!(qw.packed.padded_bytes(), 64);
+        assert_eq!(qw.packed.logical_len(), 48);
+        // padded panels + 6 per-col scales + 6 biases
+        assert_eq!(qw.bytes(), 64 + 6 * 4 + 6 * 4);
     }
 
     #[test]

@@ -22,6 +22,12 @@ pub struct Plan {
     pub gemms: Vec<PlannedGemm>,
     /// non-GEMM cycles (gather/scatter, domain switches, recombination)
     pub overhead_cycles: f64,
+    /// cycles spent rewriting weight operands into the array's panel
+    /// layout. 0 in [`Plan::build`]: the deployment pipeline packs
+    /// weights once at load time (`gpt2::quantized` / `quant::packed`),
+    /// so no per-call traversal cost remains. [`Plan::with_weight_repack`]
+    /// models the pre-packed-layout engine that re-packed per call.
+    pub pack_cycles: f64,
 }
 
 impl Plan {
@@ -45,11 +51,13 @@ impl Plan {
                 method,
                 gemms: vec![PlannedGemm { label: "fp16", m: t, k, n, prec: Precision::Fp16 }],
                 overhead_cycles: 0.0,
+                pack_cycles: 0.0,
             },
             Method::Naive => Plan {
                 method,
                 gemms: vec![PlannedGemm { label: "int", m: t, k, n, prec: int_prec }],
                 overhead_cycles: 0.0,
+                pack_cycles: 0.0,
             },
             Method::Muxq => {
                 // Preferred lowering: concat into one uniform GEMM
@@ -69,6 +77,7 @@ impl Plan {
                             prec: int_prec,
                         }],
                         overhead_cycles: 0.0,
+                        pack_cycles: 0.0,
                     }
                 } else {
                     Plan {
@@ -81,6 +90,7 @@ impl Plan {
                         // (t*n fused multiply-adds, 64 lanes, overlapped
                         // with the aux GEMM drain in practice)
                         overhead_cycles: (t * n) as f64 / 64.0,
+                        pack_cycles: 0.0,
                     }
                 }
             }
@@ -105,9 +115,20 @@ impl Plan {
                     overhead += gather_bytes / cfg.gather_bytes_per_cycle;
                     overhead += cfg.domain_switch_cycles as f64;
                 }
-                Plan { method, gemms, overhead_cycles: overhead }
+                Plan { method, gemms, overhead_cycles: overhead, pack_cycles: 0.0 }
             }
         }
+    }
+
+    /// Model a deployment that re-packs weight operands on every call —
+    /// what the rust engine did before `PackedMatI8`: each GEMM's [k, n]
+    /// weight matrix is rewritten once into the K-major panel layout
+    /// before the MAC array can stream it.
+    pub fn with_weight_repack(mut self, cfg: &NpuConfig) -> Plan {
+        let bytes: f64 =
+            self.gemms.iter().map(|g| (g.k * g.n) as f64 * g.prec.bytes()).sum();
+        self.pack_cycles += bytes / cfg.pack_bytes_per_cycle;
+        self
     }
 
     pub fn cost(&self, cfg: &NpuConfig) -> Cost {
@@ -115,7 +136,7 @@ impl Plan {
         for g in &self.gemms {
             total.add(gemm_cost(cfg, g.m, g.k, g.n, g.prec));
         }
-        total.extra_cycles += self.overhead_cycles;
+        total.extra_cycles += self.overhead_cycles + self.pack_cycles;
         total
     }
 
@@ -163,6 +184,21 @@ mod tests {
         let mixed = Plan::build(&cfg, Method::LlmInt8, 512, 768, 768, 12, 8, 2);
         assert!(muxq.non_uniform_fraction(&cfg) < 0.02);
         assert!(mixed.non_uniform_fraction(&cfg) > muxq.non_uniform_fraction(&cfg));
+    }
+
+    #[test]
+    fn prepacked_weights_beat_per_call_repack() {
+        // Plan::build assumes load-time packing (pack_cycles == 0); the
+        // per-call repack variant must cost strictly more, by exactly the
+        // panel-rewrite traversal of every weight operand.
+        let cfg = NpuConfig::default();
+        let plan = Plan::build(&cfg, Method::Muxq, 512, 768, 768, 12, 8, 2);
+        assert_eq!(plan.pack_cycles, 0.0, "deployment packs at load time");
+        let repack = plan.clone().with_weight_repack(&cfg);
+        let bytes: f64 = plan.gemms.iter().map(|g| (g.k * g.n) as f64).sum();
+        assert!(repack.pack_cycles > 0.0);
+        assert_eq!(repack.pack_cycles, bytes / cfg.pack_bytes_per_cycle);
+        assert!(repack.cost(&cfg).cycles() > plan.cost(&cfg).cycles());
     }
 
     #[test]

@@ -40,6 +40,10 @@ pub struct NpuConfig {
     pub int4_speedup: f64,
     /// bytes/cycle for irregular gather/scatter (mixed-precision split).
     pub gather_bytes_per_cycle: f64,
+    /// bytes/cycle for rewriting a weight operand into the panel layout
+    /// the MAC array streams (sequential read + strided write; only paid
+    /// when weights are NOT pre-packed at load time).
+    pub pack_bytes_per_cycle: f64,
     /// cycles to flush/refill the array between precision domains.
     pub domain_switch_cycles: u64,
     /// pJ per INT8 MAC (energy model; FP16 = 4x, SRAM/DRAM per-byte below)
@@ -57,6 +61,7 @@ impl Default for NpuConfig {
             fp16_slowdown: 4.0,
             int4_speedup: 2.0,
             gather_bytes_per_cycle: 16.0,
+            pack_bytes_per_cycle: 32.0,
             domain_switch_cycles: 2048,
             pj_per_int8_mac: 0.2,
             pj_per_fp16_mac: 0.8,

@@ -1,33 +1,69 @@
 //! Blocked GEMM kernels: f32 reference and the i8xi8 -> i32 integer
 //! pipeline (the operation MUXQ keeps *uniform* on INT hardware).
 //!
-//! The i8 kernel is the rust hot path for the native engine benches; it is
-//! cache-blocked and accumulates in i32 exactly like an NPU MAC array
-//! would. Perf notes live in EXPERIMENTS.md §Perf.
+//! The i8 hot path lives in [`super::packed`] (packed weight panels +
+//! register-tiled microkernel, row-panel parallel); [`matmul_i8`] routes
+//! there for any shape big enough to amortize the O(K·N) pack, keeping a
+//! cache-blocked dense fallback for tiny operands. The f32 kernel is the
+//! accuracy reference and parallelizes over row panels behind the same
+//! [`super::packed::ParallelGemm`] config. Perf notes live in
+//! EXPERIMENTS.md §Perf.
 
 use super::absmax::{Granularity, Scales};
 use super::matrix::{MatF32, MatI32, MatI8};
+use super::packed::{self, PackedMatI8, ParallelGemm};
 
-/// Cache block sizes for the f32 kernel (L1-friendly on typical x86).
-const BM: usize = 32;
-const BN: usize = 64;
-const BK: usize = 64;
+/// Cache block sizes for the blocked kernels (L1-friendly on typical x86).
+pub(crate) const BM: usize = 32;
+pub(crate) const BN: usize = 64;
+pub(crate) const BK: usize = 64;
+
+/// [`matmul_i8`] packs B on the fly and takes the packed engine only
+/// when BOTH hold: total work is above this many MACs (m·k·n), and m is
+/// at least [`PACK_ON_THE_FLY_MIN_M`]. The O(K·N) pack is amortized m
+/// times, so skinny (small-m) GEMMs would pay ~2x the memory traffic of
+/// the blocked fallback for no compute win.
+const PACK_ON_THE_FLY_MACS: usize = 1 << 17;
+const PACK_ON_THE_FLY_MIN_M: usize = 16;
 
 /// Reference f32 GEMM: C = A @ B. Blocked i-k-j loop order (row-major
-/// streaming on both operands).
+/// streaming on both operands), row-panel parallel for large shapes.
 pub fn matmul_f32(a: &MatF32, b: &MatF32) -> MatF32 {
     assert_eq!(a.cols, b.rows, "inner dims {}x{}", a.cols, b.rows);
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let mut c = MatF32::zeros(m, n);
-    for i0 in (0..m).step_by(BM) {
-        let i1 = (i0 + BM).min(m);
+    let cfg = ParallelGemm::global();
+    let threads = cfg.threads.min(m).max(1);
+    if threads == 1 || n == 0 || m * k * n < cfg.min_parallel_macs {
+        matmul_f32_rows(a, b, 0, m, &mut c.data);
+        return c;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, chunk) in c.data.chunks_mut(rows_per * n).enumerate() {
+            let row0 = t * rows_per;
+            let row1 = (row0 + rows_per).min(m);
+            s.spawn(move || matmul_f32_rows(a, b, row0, row1, chunk));
+        }
+    });
+    c
+}
+
+/// Blocked f32 kernel over output rows `[row0, row1)`. Keeps the
+/// zero-skip branch: f32 activations (embeddings, padded batches) carry
+/// real sparsity, unlike the dense i8 grid.
+fn matmul_f32_rows(a: &MatF32, b: &MatF32, row0: usize, row1: usize, c_rows: &mut [f32]) {
+    let (k, n) = (a.cols, b.cols);
+    debug_assert_eq!(c_rows.len(), (row1 - row0) * n);
+    for i0 in (row0..row1).step_by(BM) {
+        let i1 = (i0 + BM).min(row1);
         for k0 in (0..k).step_by(BK) {
             let k1 = (k0 + BK).min(k);
             for j0 in (0..n).step_by(BN) {
                 let j1 = (j0 + BN).min(n);
                 for i in i0..i1 {
                     let arow = a.row(i);
-                    let crow = &mut c.data[i * n..(i + 1) * n];
+                    let crow = &mut c_rows[(i - row0) * n..(i - row0 + 1) * n];
                     for kk in k0..k1 {
                         let av = arow[kk];
                         if av == 0.0 {
@@ -42,11 +78,25 @@ pub fn matmul_f32(a: &MatF32, b: &MatF32) -> MatF32 {
             }
         }
     }
-    c
 }
 
-/// Integer GEMM: C_i32 = A_i8 @ B_i8 with i32 accumulation.
+/// Integer GEMM: C_i32 = A_i8 @ B_i8 with i32 accumulation. Large shapes
+/// pack B on the fly and run the packed parallel engine; tiny shapes use
+/// the dense blocked fallback below.
 pub fn matmul_i8(a: &MatI8, b: &MatI8) -> MatI32 {
+    assert_eq!(a.cols, b.rows);
+    if a.rows >= PACK_ON_THE_FLY_MIN_M && a.rows * a.cols * b.cols >= PACK_ON_THE_FLY_MACS {
+        let bp = PackedMatI8::pack(b);
+        return packed::matmul_i8_packed(a, &bp);
+    }
+    matmul_i8_blocked(a, b)
+}
+
+/// Dense cache-blocked fallback kernel (small shapes; also the
+/// cross-check reference for the packed engine). The inner loop is
+/// branch-free: i8 activations are essentially never exactly zero, and a
+/// zero-skip branch per element defeats vectorization.
+pub fn matmul_i8_blocked(a: &MatI8, b: &MatI8) -> MatI32 {
     assert_eq!(a.cols, b.rows);
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let mut c = MatI32::zeros(m, n);
@@ -59,9 +109,6 @@ pub fn matmul_i8(a: &MatI8, b: &MatI8) -> MatI32 {
                 let crow = &mut c.data[i * n..(i + 1) * n];
                 for kk in k0..k1 {
                     let av = arow[kk] as i32;
-                    if av == 0 {
-                        continue;
-                    }
                     let brow = &b.data[kk * n..(kk + 1) * n];
                     for (cv, bv) in crow.iter_mut().zip(brow) {
                         *cv += av * *bv as i32;
@@ -162,6 +209,23 @@ mod tests {
                 assert_eq!(c.data[i * 4 + j], want);
             }
         }
+    }
+
+    #[test]
+    fn routed_packed_path_matches_blocked() {
+        // big enough to take the pack-on-the-fly route; cross-check
+        // against the dense blocked fallback
+        let mut rng = SplitMix64::new(9);
+        let mut a8 = MatI8::zeros(64, 80);
+        let mut b8 = MatI8::zeros(80, 48);
+        for v in a8.data.iter_mut().chain(b8.data.iter_mut()) {
+            *v = (rng.next_below(255) as i32 - 127) as i8;
+        }
+        assert!(64 >= super::PACK_ON_THE_FLY_MIN_M);
+        assert!(64 * 80 * 48 >= super::PACK_ON_THE_FLY_MACS);
+        let routed = matmul_i8(&a8, &b8);
+        let blocked = matmul_i8_blocked(&a8, &b8);
+        assert_eq!(routed.data, blocked.data);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! * [`matrix`] — dense f32/i8/i32 matrices + IEEE rint
 //! * [`absmax`] — symmetric abs-max quantization at all granularities
 //! * [`gemm`] — blocked f32 and i8→i32 GEMMs, quantize-compute-dequant
+//! * [`packed`] — packed-weight parallel INT8 engine (the i8 hot path)
 //! * [`muxq`] — the paper's outlier decomposition + uniform-INT two-GEMM
 //! * [`llmint8`] — the mixed-precision baseline
 //! * [`smooth`] — SmoothQuant migration (composable with MUXQ)
@@ -18,9 +19,11 @@ pub mod llmint8;
 pub mod matrix;
 pub mod method;
 pub mod muxq;
+pub mod packed;
 pub mod smooth;
 
 pub use absmax::{fq_naive, qmax_from_bits, Granularity, Scales};
 pub use matrix::{MatF32, MatI32, MatI8};
 pub use method::{Method, QuantSpec};
 pub use muxq::MuxqParams;
+pub use packed::{PackedMatI8, ParallelGemm};

@@ -39,14 +39,22 @@ impl MuxqParams {
 /// Per-channel outlier mask: `mask[c] == true` iff any row has
 /// |x[r][c]| > theta.
 pub fn outlier_mask(x: &MatF32, theta: f32) -> Vec<bool> {
-    let mut mask = vec![false; x.cols];
+    let mut mask = Vec::new();
+    outlier_mask_into(x, theta, &mut mask);
+    mask
+}
+
+/// Buffer-reusing twin of [`outlier_mask`] (the zero-allocation
+/// projection path in `gpt2::quantized` calls this per projection).
+pub fn outlier_mask_into(x: &MatF32, theta: f32, mask: &mut Vec<bool>) {
+    mask.clear();
+    mask.resize(x.cols, false);
     for r in 0..x.rows {
         let row = x.row(r);
         for (m, v) in mask.iter_mut().zip(row) {
             *m |= v.abs() > theta;
         }
     }
-    mask
 }
 
 /// Count of outlier channels (Aux GEMM width — the "low-rank" r).
@@ -156,8 +164,9 @@ pub fn muxq_matmul_int(
         let sa = Scales::compute(&aux, qmax, gx);
         let swo = match gw {
             // per-col weight scales must match the full-W scales so the
-            // dequant agrees with the fused fake-quant formulation
-            Granularity::PerCol => Scales::compute(w, qmax, Granularity::PerCol),
+            // dequant agrees with the fused fake-quant formulation; `sw`
+            // already holds exactly those — no second pass over W
+            Granularity::PerCol => sw.clone(),
             _ => Scales::compute(&w_out, qmax, gw),
         };
         let aq = super::absmax::quantize_i8(&aux, &sa, qmax);

@@ -1,0 +1,474 @@
+//! Packed, parallel INT8 GEMM engine — the hot path of the uniform-INT
+//! pipeline MUXQ argues for (paper §3, eq. 7).
+//!
+//! Production INT-GEMM stacks (GPTQ/mistralrs-style packed-weight
+//! kernels) pre-pack the weight operand ONCE into a layout the
+//! microkernel can stream, then tile the output over registers. The
+//! rust-native equivalent implemented here:
+//!
+//! * [`PackedMatI8`] — K-major column panels of width [`NR`], zero-padded
+//!   to the panel width, built by a one-time `pack()` (at model load for
+//!   the deployment pipeline; amortized against O(M·K·N) compute when
+//!   packing on the fly).
+//! * A register-tiled [`MR`]×[`NR`] microkernel holding a 4×4 block of
+//!   i32 accumulators, K unrolled by 4, **no zero-skip branch**: dense
+//!   i8 activations are essentially never exactly zero, and a
+//!   branch-per-element defeats autovectorization.
+//! * [`matmul_i8_rows_subset_into`] — the MUXQ Aux GEMM reads its
+//!   outlier weight rows *directly out of the full packed layout* via an
+//!   index list, so the skinny second GEMM of eq. 7 needs no per-call
+//!   weight gather or re-pack.
+//! * [`ParallelGemm`] — row-panel parallelism over scoped threads with a
+//!   sequential fallback for small shapes (thread spawn costs more than
+//!   the GEMM below ~2M MACs).
+//!
+//! Perf numbers live in EXPERIMENTS.md §Perf; `bench_gemm` regenerates
+//! them (BENCH_gemm.json, gated by rust/scripts/bench_check.sh).
+
+use super::matrix::{MatI32, MatI8};
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// Microkernel register tile: MR rows of A × NR columns of B.
+pub const MR: usize = 4;
+/// Panel width — one packed panel holds NR output columns, K-major.
+pub const NR: usize = 4;
+
+thread_local! {
+    static PACK_COUNT: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Number of [`PackedMatI8::pack`] calls made *by this thread*. Test
+/// hook: asserts weights are packed once at construction and never on
+/// the per-call projection path. Thread-local so concurrently running
+/// tests cannot perturb each other's counts.
+pub fn pack_count() -> usize {
+    PACK_COUNT.with(|c| c.get())
+}
+
+/// Weight matrix pre-packed into K-major column panels.
+///
+/// Layout: `ceil(cols / NR)` panels, each `rows * NR` bytes. Panel `p`
+/// stores columns `p*NR .. p*NR+NR` of B; within a panel the NR column
+/// values for each k are contiguous (`panel[k*NR + j]`), so the
+/// microkernel streams the panel front-to-back with unit stride. The
+/// last panel is zero-padded to full width — padding contributes zero to
+/// every accumulator, so no column-tail branch is needed in the kernel.
+#[derive(Debug, Clone)]
+pub struct PackedMatI8 {
+    /// K — the inner (contraction) dimension.
+    pub rows: usize,
+    /// N — the output dimension (logical, unpadded).
+    pub cols: usize,
+    data: Vec<i8>,
+}
+
+impl PackedMatI8 {
+    /// One-time packing pass: O(K·N), done at weight-load time in the
+    /// deployment pipeline.
+    pub fn pack(b: &MatI8) -> PackedMatI8 {
+        PACK_COUNT.with(|c| c.set(c.get() + 1));
+        let (k, n) = (b.rows, b.cols);
+        let panels = n.div_ceil(NR);
+        let mut data = vec![0i8; panels * k * NR];
+        for p in 0..panels {
+            let j0 = p * NR;
+            let jw = NR.min(n - j0);
+            let dst = &mut data[p * k * NR..(p + 1) * k * NR];
+            for kk in 0..k {
+                dst[kk * NR..kk * NR + jw]
+                    .copy_from_slice(&b.data[kk * n + j0..kk * n + j0 + jw]);
+            }
+        }
+        PackedMatI8 { rows: k, cols: n, data }
+    }
+
+    /// Number of column panels.
+    pub fn panels(&self) -> usize {
+        self.cols.div_ceil(NR)
+    }
+
+    /// Actual storage bytes, *including* panel padding — what the packed
+    /// layout really occupies in memory (the honest number for the
+    /// memory-saving claim).
+    pub fn padded_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Logical (unpadded) element count of the original matrix.
+    pub fn logical_len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    #[inline(always)]
+    fn panel(&self, p: usize) -> &[i8] {
+        &self.data[p * self.rows * NR..(p + 1) * self.rows * NR]
+    }
+}
+
+/// Row-panel parallelism config. `threads == 1` (or a shape below
+/// `min_parallel_macs`) takes the sequential path — spawning scoped
+/// threads costs more than a small GEMM.
+#[derive(Debug, Clone, Copy)]
+pub struct ParallelGemm {
+    /// Worker count. [`ParallelGemm::global`] resolves this from
+    /// `MUXQ_GEMM_THREADS` or the host's available parallelism;
+    /// `Default`/[`ParallelGemm::sequential`] stay at 1.
+    pub threads: usize,
+    /// Sequential below this many MACs (m·k·n).
+    pub min_parallel_macs: usize,
+}
+
+impl Default for ParallelGemm {
+    fn default() -> Self {
+        ParallelGemm { threads: 1, min_parallel_macs: 1 << 21 }
+    }
+}
+
+impl ParallelGemm {
+    /// Explicitly sequential (reference/fallback path).
+    pub fn sequential() -> ParallelGemm {
+        ParallelGemm::default()
+    }
+
+    /// The process-wide config, resolved once from the environment.
+    pub fn global() -> ParallelGemm {
+        static GLOBAL: OnceLock<ParallelGemm> = OnceLock::new();
+        *GLOBAL.get_or_init(ParallelGemm::from_env)
+    }
+
+    fn from_env() -> ParallelGemm {
+        let threads = std::env::var("MUXQ_GEMM_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+            .max(1);
+        ParallelGemm { threads, min_parallel_macs: 1 << 21 }
+    }
+}
+
+/// C = A_i8 @ B_packed with i32 accumulation, fresh output matrix.
+pub fn matmul_i8_packed(a: &MatI8, bp: &PackedMatI8) -> MatI32 {
+    matmul_i8_packed_with(a, bp, ParallelGemm::global())
+}
+
+/// Same, with an explicit parallelism config (bench/test hook).
+pub fn matmul_i8_packed_with(a: &MatI8, bp: &PackedMatI8, cfg: ParallelGemm) -> MatI32 {
+    let mut c = MatI32::zeros(a.rows, bp.cols);
+    matmul_i8_packed_into(a, bp, &mut c, cfg);
+    c
+}
+
+/// C = A_i8 @ B_packed written into a reusable accumulator (resized in
+/// place; every element is overwritten, so no zeroing pass is needed).
+pub fn matmul_i8_packed_into(a: &MatI8, bp: &PackedMatI8, c: &mut MatI32, cfg: ParallelGemm) {
+    assert_eq!(a.cols, bp.rows, "inner dims {}x{}", a.cols, bp.rows);
+    let (m, n) = (a.rows, bp.cols);
+    c.rows = m;
+    c.cols = n;
+    c.data.resize(m * n, 0);
+    run_row_parallel(m, n, a.cols, cfg, &mut c.data, &|row0, row1, chunk| {
+        gemm_rows(a, bp, row0, row1, chunk);
+    });
+}
+
+/// Skinny GEMM against a *row subset* of the packed weights:
+/// `C = A_compact @ B[idx, :]` where A_compact is `[m, r]` and `idx[t]`
+/// names the B row matched to A's column `t`. This is MUXQ's Aux GEMM
+/// (eq. 7): the outlier weight rows are read straight out of the full
+/// packed layout — zero-copy, no per-call gather/re-pack.
+pub fn matmul_i8_rows_subset_into(
+    a: &MatI8,
+    bp: &PackedMatI8,
+    idx: &[usize],
+    c: &mut MatI32,
+    cfg: ParallelGemm,
+) {
+    assert_eq!(a.cols, idx.len(), "compact A width vs index list");
+    debug_assert!(idx.iter().all(|&k| k < bp.rows));
+    let (m, n) = (a.rows, bp.cols);
+    c.rows = m;
+    c.cols = n;
+    c.data.resize(m * n, 0);
+    run_row_parallel(m, n, idx.len(), cfg, &mut c.data, &|row0, row1, chunk| {
+        gemm_rows_subset(a, bp, idx, row0, row1, chunk);
+    });
+}
+
+/// Split output rows into near-equal chunks and run `body(row0, row1,
+/// chunk)` on scoped threads; sequential when the shape is small.
+fn run_row_parallel(
+    m: usize,
+    n: usize,
+    k: usize,
+    cfg: ParallelGemm,
+    data: &mut [i32],
+    body: &(dyn Fn(usize, usize, &mut [i32]) + Sync),
+) {
+    let threads = cfg.threads.min(m).max(1);
+    if threads == 1 || n == 0 || m * k * n < cfg.min_parallel_macs {
+        body(0, m, data);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, chunk) in data.chunks_mut(rows_per * n).enumerate() {
+            let row0 = t * rows_per;
+            let row1 = (row0 + rows_per).min(m);
+            s.spawn(move || body(row0, row1, chunk));
+        }
+    });
+}
+
+/// Compute output rows `[row0, row1)` into `c_rows` (len `(row1-row0)*n`).
+/// Each (row-tile, panel) pair streams the FULL K dimension once, so
+/// every output element is written exactly once (store, not accumulate).
+fn gemm_rows(a: &MatI8, bp: &PackedMatI8, row0: usize, row1: usize, c_rows: &mut [i32]) {
+    let k = a.cols;
+    let n = bp.cols;
+    debug_assert_eq!(c_rows.len(), (row1 - row0) * n);
+    for p in 0..bp.panels() {
+        let j0 = p * NR;
+        let jw = NR.min(n - j0);
+        let panel = &bp.panel(p)[..k * NR];
+        let mut i = row0;
+        while i + MR <= row1 {
+            let rows = [a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3)];
+            let mut acc = [[0i32; NR]; MR];
+            micro_mr(k, rows, panel, &mut acc);
+            for (di, accr) in acc.iter().enumerate() {
+                c_rows[(i - row0 + di) * n + j0..][..jw].copy_from_slice(&accr[..jw]);
+            }
+            i += MR;
+        }
+        while i < row1 {
+            let mut acc = [0i32; NR];
+            micro_1(k, a.row(i), panel, &mut acc);
+            c_rows[(i - row0) * n + j0..][..jw].copy_from_slice(&acc[..jw]);
+            i += 1;
+        }
+    }
+}
+
+/// Row-subset twin of [`gemm_rows`]: the contraction walks `idx` instead
+/// of `0..k`, jumping to `panel[idx[t]*NR]` for the weight values.
+fn gemm_rows_subset(
+    a: &MatI8,
+    bp: &PackedMatI8,
+    idx: &[usize],
+    row0: usize,
+    row1: usize,
+    c_rows: &mut [i32],
+) {
+    let n = bp.cols;
+    debug_assert_eq!(c_rows.len(), (row1 - row0) * n);
+    for p in 0..bp.panels() {
+        let j0 = p * NR;
+        let jw = NR.min(n - j0);
+        let panel = bp.panel(p);
+        let mut i = row0;
+        while i + MR <= row1 {
+            let rows = [a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3)];
+            let mut acc = [[0i32; NR]; MR];
+            micro_mr_idx(idx, rows, panel, &mut acc);
+            for (di, accr) in acc.iter().enumerate() {
+                c_rows[(i - row0 + di) * n + j0..][..jw].copy_from_slice(&accr[..jw]);
+            }
+            i += MR;
+        }
+        while i < row1 {
+            let mut acc = [0i32; NR];
+            micro_1_idx(idx, a.row(i), panel, &mut acc);
+            c_rows[(i - row0) * n + j0..][..jw].copy_from_slice(&acc[..jw]);
+            i += 1;
+        }
+    }
+}
+
+/// One contraction step of the MR×NR tile at position `kk`.
+#[inline(always)]
+fn micro_step(kk: usize, a: [&[i8]; MR], panel: &[i8], acc: &mut [[i32; NR]; MR]) {
+    let b = &panel[kk * NR..kk * NR + NR];
+    for i in 0..MR {
+        let av = a[i][kk] as i32;
+        for j in 0..NR {
+            acc[i][j] += av * b[j] as i32;
+        }
+    }
+}
+
+/// MR×NR register-tiled microkernel: 16 i32 accumulators live across the
+/// whole K loop, K unrolled by 4, branch-free dense MACs.
+#[inline(always)]
+fn micro_mr(k: usize, a: [&[i8]; MR], panel: &[i8], acc: &mut [[i32; NR]; MR]) {
+    let mut kk = 0;
+    while kk + 4 <= k {
+        micro_step(kk, a, panel, acc);
+        micro_step(kk + 1, a, panel, acc);
+        micro_step(kk + 2, a, panel, acc);
+        micro_step(kk + 3, a, panel, acc);
+        kk += 4;
+    }
+    while kk < k {
+        micro_step(kk, a, panel, acc);
+        kk += 1;
+    }
+}
+
+/// 1×NR tail microkernel for the M remainder rows.
+#[inline(always)]
+fn micro_1(k: usize, a: &[i8], panel: &[i8], acc: &mut [i32; NR]) {
+    for kk in 0..k {
+        let av = a[kk] as i32;
+        let b = &panel[kk * NR..kk * NR + NR];
+        for j in 0..NR {
+            acc[j] += av * b[j] as i32;
+        }
+    }
+}
+
+/// MR×NR microkernel over an index-mapped contraction (Aux GEMM).
+#[inline(always)]
+fn micro_mr_idx(idx: &[usize], a: [&[i8]; MR], panel: &[i8], acc: &mut [[i32; NR]; MR]) {
+    for (t, &krow) in idx.iter().enumerate() {
+        let b = &panel[krow * NR..krow * NR + NR];
+        for i in 0..MR {
+            let av = a[i][t] as i32;
+            for j in 0..NR {
+                acc[i][j] += av * b[j] as i32;
+            }
+        }
+    }
+}
+
+/// 1×NR index-mapped tail microkernel.
+#[inline(always)]
+fn micro_1_idx(idx: &[usize], a: &[i8], panel: &[i8], acc: &mut [i32; NR]) {
+    for (t, &krow) in idx.iter().enumerate() {
+        let av = a[t] as i32;
+        let b = &panel[krow * NR..krow * NR + NR];
+        for j in 0..NR {
+            acc[j] += av * b[j] as i32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::prng::SplitMix64;
+
+    fn rand_i8(rows: usize, cols: usize, seed: u64) -> MatI8 {
+        let mut rng = SplitMix64::new(seed);
+        let mut m = MatI8::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = (rng.next_below(255) as i32 - 127) as i8;
+        }
+        m
+    }
+
+    fn matmul_naive(a: &MatI8, b: &MatI8) -> MatI32 {
+        let mut c = MatI32::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0i32;
+                for k in 0..a.cols {
+                    acc += a.row(i)[k] as i32 * b.data[k * b.cols + j] as i32;
+                }
+                c.data[i * b.cols + j] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn pack_layout_golden() {
+        // 2x3 (one padded panel): [b00 b01 b02 0 | b10 b11 b12 0]
+        let mut b = MatI8::zeros(2, 3);
+        b.data.copy_from_slice(&[1, 2, 3, 4, 5, 6]);
+        let p = PackedMatI8::pack(&b);
+        assert_eq!(p.panels(), 1);
+        assert_eq!(p.padded_bytes(), 2 * NR);
+        assert_eq!(p.logical_len(), 6);
+        assert_eq!(p.panel(0), &[1, 2, 3, 0, 4, 5, 6, 0]);
+    }
+
+    #[test]
+    fn packed_matches_naive_ragged_shapes() {
+        // 1x1x1, primes, and dims straddling MR/NR panel boundaries
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (2, 3, 5),
+            (7, 11, 13),
+            (4, 4, 4),
+            (5, 4, 9),
+            (6, 65, 7),
+            (33, 17, 12),
+            (8, 8, 3),
+        ] {
+            let a = rand_i8(m, k, m as u64 * 31 + n as u64);
+            let b = rand_i8(k, n, k as u64 * 37 + 1);
+            let bp = PackedMatI8::pack(&b);
+            let got = matmul_i8_packed_with(&a, &bp, ParallelGemm::sequential());
+            let want = matmul_naive(&a, &b);
+            assert_eq!(got.data, want.data, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn parallel_bit_exact_vs_sequential() {
+        let a = rand_i8(37, 29, 1);
+        let b = rand_i8(29, 23, 2);
+        let bp = PackedMatI8::pack(&b);
+        let seq = matmul_i8_packed_with(&a, &bp, ParallelGemm::sequential());
+        for threads in [2usize, 3, 4, 8] {
+            let cfg = ParallelGemm { threads, min_parallel_macs: 0 };
+            let par = matmul_i8_packed_with(&a, &bp, cfg);
+            assert_eq!(par.data, seq.data, "{threads} threads");
+            assert_eq!((par.rows, par.cols), (37, 23));
+        }
+    }
+
+    #[test]
+    fn rows_subset_equals_explicit_gather() {
+        let a = rand_i8(9, 3, 3); // compact [m, r] with r = 3
+        let b = rand_i8(15, 10, 4);
+        let idx = [2usize, 7, 14];
+        let bp = PackedMatI8::pack(&b);
+        let mut got = MatI32::zeros(0, 0);
+        matmul_i8_rows_subset_into(&a, &bp, &idx, &mut got, ParallelGemm::sequential());
+        // reference: gather the rows, then dense naive
+        let mut gathered = MatI8::zeros(3, 10);
+        for (t, &r) in idx.iter().enumerate() {
+            gathered.data[t * 10..(t + 1) * 10].copy_from_slice(b.row(r));
+        }
+        let want = matmul_naive(&a, &gathered);
+        assert_eq!(got.data, want.data);
+        // and in parallel
+        let mut par = MatI32::zeros(0, 0);
+        let cfg = ParallelGemm { threads: 3, min_parallel_macs: 0 };
+        matmul_i8_rows_subset_into(&a, &bp, &idx, &mut par, cfg);
+        assert_eq!(par.data, want.data);
+    }
+
+    #[test]
+    fn into_reuses_and_resizes_scratch() {
+        let mut c = MatI32::zeros(64, 64); // oversized scratch
+        let a = rand_i8(3, 5, 5);
+        let b = rand_i8(5, 6, 6);
+        let bp = PackedMatI8::pack(&b);
+        matmul_i8_packed_into(&a, &bp, &mut c, ParallelGemm::sequential());
+        assert_eq!((c.rows, c.cols, c.data.len()), (3, 6, 18));
+        assert_eq!(c.data, matmul_naive(&a, &b).data);
+    }
+
+    #[test]
+    fn pack_count_is_per_thread() {
+        let before = pack_count();
+        let _ = PackedMatI8::pack(&rand_i8(2, 2, 7));
+        let _ = PackedMatI8::pack(&rand_i8(2, 2, 8));
+        assert_eq!(pack_count(), before + 2);
+    }
+}

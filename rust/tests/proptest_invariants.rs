@@ -5,8 +5,15 @@
 use muxq::coordinator::batcher::{BatchKey, Batcher, BatcherConfig};
 use muxq::coordinator::request::{Pending, ScoreRequest};
 use muxq::coordinator::VariantKey;
-use muxq::quant::absmax::{fq_naive, qmax_from_bits, Granularity, Scales};
-use muxq::quant::muxq::{decompose, fq_muxq, outlier_mask, reconstruct, MuxqParams};
+use muxq::quant::absmax::{fq_naive, qmax_from_bits, quantize_i8, Granularity, Scales};
+use muxq::quant::matrix::{MatI32, MatI8};
+use muxq::quant::muxq::{
+    decompose, fq_muxq, gather_outlier_cols, gather_outlier_rows, muxq_matmul_int,
+    outlier_count, outlier_mask, reconstruct, MuxqParams,
+};
+use muxq::quant::packed::{
+    matmul_i8_packed_with, matmul_i8_rows_subset_into, PackedMatI8, ParallelGemm,
+};
 use muxq::quant::{gemm, MatF32};
 use muxq::util::proptest::{prop, prop_assert, Gen};
 use std::sync::mpsc;
@@ -124,6 +131,186 @@ fn prop_scales_positive_and_finite() {
             }
         }
         Ok(())
+    });
+}
+
+// ------------------------------------------------- packed INT8 engine
+
+fn gen_i8(g: &mut Gen, rows: usize, cols: usize) -> MatI8 {
+    let mut m = MatI8::zeros(rows, cols);
+    for v in m.data.iter_mut() {
+        *v = (g.usize(0, 254) as i32 - 127) as i8;
+    }
+    m
+}
+
+/// The ground-truth naive triple loop (exact in i32 for i8 operands).
+fn matmul_i8_triple(a: &MatI8, b: &MatI8) -> MatI32 {
+    let mut c = MatI32::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut acc = 0i32;
+            for k in 0..a.cols {
+                acc += a.row(i)[k] as i32 * b.data[k * b.cols + j] as i32;
+            }
+            c.data[i * b.cols + j] = acc;
+        }
+    }
+    c
+}
+
+#[test]
+fn prop_packed_matmul_bit_exact_vs_triple_loop() {
+    prop("packed/parallel i8 GEMM == naive triple loop", |g| {
+        let m = g.usize(1, 40);
+        let k = g.usize(1, 40);
+        let n = g.usize(1, 40);
+        let a = gen_i8(g, m, k);
+        let b = gen_i8(g, k, n);
+        let want = matmul_i8_triple(&a, &b);
+        let bp = PackedMatI8::pack(&b);
+        let seq = matmul_i8_packed_with(&a, &bp, ParallelGemm::sequential());
+        prop_assert(seq.data == want.data, format!("sequential {m}x{k}x{n}"))?;
+        let threads = g.usize(2, 6);
+        let par =
+            matmul_i8_packed_with(&a, &bp, ParallelGemm { threads, min_parallel_macs: 0 });
+        prop_assert(par.data == want.data, format!("{threads} threads {m}x{k}x{n}"))
+    });
+}
+
+#[test]
+fn packed_matmul_exact_on_panel_boundary_shapes() {
+    // 1x1x1, prime dims, and dims straddling the MR/NR panel boundaries
+    for &(m, k, n) in &[
+        (1, 1, 1),
+        (2, 3, 5),
+        (7, 11, 13),
+        (3, 4, 4),
+        (4, 4, 5),
+        (5, 9, 3),
+        (6, 65, 7),
+        (33, 17, 12),
+        (9, 8, 8),
+    ] {
+        let mut rng = muxq::data::prng::SplitMix64::new((m * 1000 + k * 100 + n) as u64);
+        let mut a = MatI8::zeros(m, k);
+        let mut b = MatI8::zeros(k, n);
+        for v in a.data.iter_mut().chain(b.data.iter_mut()) {
+            *v = (rng.next_below(255) as i32 - 127) as i8;
+        }
+        let want = matmul_i8_triple(&a, &b);
+        let bp = PackedMatI8::pack(&b);
+        for cfg in [
+            ParallelGemm::sequential(),
+            ParallelGemm { threads: 3, min_parallel_macs: 0 },
+        ] {
+            let got = matmul_i8_packed_with(&a, &bp, cfg);
+            assert_eq!(got.data, want.data, "{m}x{k}x{n} ({} threads)", cfg.threads);
+        }
+        // the routed public entry must agree too (blocked or packed path)
+        let routed = gemm::matmul_i8(&a, &b);
+        assert_eq!(routed.data, want.data, "routed {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn prop_routed_matmul_i8_bit_exact() {
+    // dims large enough to sometimes cross the pack-on-the-fly threshold,
+    // so both the blocked fallback and the packed route are exercised
+    prop("matmul_i8 routing == naive triple loop", |g| {
+        let m = g.usize(1, 48);
+        let k = g.usize(1, 64);
+        let n = g.usize(1, 48);
+        let a = gen_i8(g, m, k);
+        let b = gen_i8(g, k, n);
+        let got = gemm::matmul_i8(&a, &b);
+        let want = matmul_i8_triple(&a, &b);
+        prop_assert(got.data == want.data, format!("{m}x{k}x{n}"))
+    });
+}
+
+#[test]
+fn prop_rows_subset_kernel_equals_explicit_gather() {
+    prop("idx-mapped aux GEMM == gather + dense GEMM", |g| {
+        let m = g.usize(1, 24);
+        let kb = g.usize(1, 32);
+        let n = g.usize(1, 24);
+        let b = gen_i8(g, kb, n);
+        // random strictly-increasing row subset (the outlier index list)
+        let mut idx = Vec::new();
+        for row in 0..kb {
+            if g.bool() {
+                idx.push(row);
+            }
+        }
+        let a = gen_i8(g, m, idx.len());
+        let bp = PackedMatI8::pack(&b);
+        let mut got = MatI32::zeros(0, 0);
+        matmul_i8_rows_subset_into(&a, &bp, &idx, &mut got, ParallelGemm::sequential());
+        let mut gathered = MatI8::zeros(idx.len(), n);
+        for (t, &row) in idx.iter().enumerate() {
+            gathered.data[t * n..(t + 1) * n].copy_from_slice(b.row(row));
+        }
+        let want = matmul_i8_triple(&a, &gathered);
+        prop_assert(got.data == want.data, format!("m={m} r={} n={n}", idx.len()))
+    });
+}
+
+/// Literal transcription of the seed `muxq_matmul_int` (full gather of
+/// outlier weight rows, full-W per-col scale recomputation and all) —
+/// the before-side oracle guarding the zero-copy refactor.
+fn muxq_matmul_int_seed_reference(
+    x: &MatF32,
+    w: &MatF32,
+    qmax: f32,
+    gx: Granularity,
+    gw: Granularity,
+    p: &MuxqParams,
+) -> MatF32 {
+    let mask = outlier_mask(x, p.theta);
+    let (body, _) = decompose(x, &mask, p);
+    let sb = Scales::compute(&body, qmax, gx);
+    let sw = Scales::compute(w, qmax, gw);
+    let bq = quantize_i8(&body, &sb, qmax);
+    let wq = quantize_i8(w, &sw, qmax);
+    let mut y = gemm::dequant(&matmul_i8_triple(&bq, &wq), &sb, &sw);
+    let r = outlier_count(&mask);
+    if r > 0 {
+        let aux = gather_outlier_cols(x, &mask, p.inv_shift());
+        let w_out = gather_outlier_rows(w, &mask);
+        let sa = Scales::compute(&aux, qmax, gx);
+        let swo = match gw {
+            Granularity::PerCol => Scales::compute(w, qmax, Granularity::PerCol),
+            _ => Scales::compute(&w_out, qmax, gw),
+        };
+        let aq = quantize_i8(&aux, &sa, qmax);
+        let woq = quantize_i8(&w_out, &swo, qmax);
+        let ya = gemm::dequant(&matmul_i8_triple(&aq, &woq), &sa, &swo);
+        let f = p.aux_weight();
+        for (yv, av) in y.data.iter_mut().zip(&ya.data) {
+            *yv += f * av;
+        }
+    }
+    y
+}
+
+#[test]
+fn prop_muxq_matmul_int_unchanged_by_refactor() {
+    prop("muxq_matmul_int == seed reference", |g| {
+        let x = gen_matrix(g, 40);
+        let n = g.usize(1, 24);
+        let w = MatF32::from_vec(x.cols, n, g.vec_f32(x.cols * n, -2.0, 2.0)).unwrap();
+        let qmax = qmax_from_bits(*g.choice(&[5u32, 8]));
+        let p = MuxqParams { theta: 6.0, exp_factor: g.usize(1, 3) as u32 };
+        let gx = *g.choice(&[Granularity::PerRow, Granularity::PerTensor]);
+        let gw = *g.choice(&[Granularity::PerCol, Granularity::PerTensor]);
+        let got = muxq_matmul_int(&x, &w, qmax, gx, gw, &p);
+        let want = muxq_matmul_int_seed_reference(&x, &w, qmax, gx, gw, &p);
+        let tol = 1e-6 * want.absmax().max(1.0);
+        prop_assert(
+            got.max_abs_diff(&want) <= tol,
+            format!("diff {} tol {tol}", got.max_abs_diff(&want)),
+        )
     });
 }
 
