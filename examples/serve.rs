@@ -1,4 +1,5 @@
-//! End-to-end serving driver (the repo's E2E validation, see DESIGN.md):
+//! End-to-end serving driver (the repo's E2E validation; dataflow in
+//! DESIGN.md §5):
 //! starts the coordinator over the AOT artifacts, generates a realistic
 //! scoring workload from the synthetic corpus, drives it through the
 //! dynamic batcher from concurrent client threads, and reports perplexity

@@ -1,11 +1,13 @@
-//! GEMM benchmarks: the packed parallel INT8 engine vs the seed kernel,
+//! GEMM benchmarks: the microkernel generations (i16 pair-accumulation
+//! vs PR-1 wide-i32 vs seed kernel) across the register-tile grid,
 //! thread scaling, the quantize-compute-dequant pipelines of each method,
 //! and end-to-end `nll_per_seq` throughput through the true-INT pipeline.
 //! (The NPU projection lives in bench_npusim / npu_latency.)
 //!
 //! Run: `cargo bench --bench bench_gemm`. Writes the perf-trajectory
 //! record to `$MUXQ_BENCH_JSON` (default `BENCH_gemm.json`); the CI
-//! smoke gate is rust/scripts/bench_check.sh.
+//! smoke gate is rust/scripts/bench_check.sh (doc/test hygiene:
+//! rust/scripts/ci_check.sh).
 
 use muxq::data::prng::SplitMix64;
 use muxq::gpt2::{Gpt2Model, IntMethod, QuantizedGpt2};
@@ -13,7 +15,9 @@ use muxq::quant::gemm::{matmul_f32, quant_matmul};
 use muxq::quant::llmint8::llmint8_matmul;
 use muxq::quant::matrix::{MatI32, MatI8};
 use muxq::quant::muxq::{muxq_matmul_int, MuxqParams};
-use muxq::quant::packed::{matmul_i8_packed_with, PackedMatI8, ParallelGemm};
+use muxq::quant::packed::{
+    matmul_i8_packed_kernel_into, matmul_i8_packed_with, Kernel, PackedMatI8, ParallelGemm,
+};
 use muxq::quant::{Granularity, MatF32};
 use muxq::util::bench::Bencher;
 
@@ -109,6 +113,45 @@ fn main() {
         gops_1t
     );
 
+    // ---- microkernel generations across the register-tile grid ----
+    // pair_i16 = the i16 pair-accumulation kernel (PR 2, two MACs/lane),
+    // wide_i32 = the PR-1 scheme (one MAC/lane); wide_i32 at 4x4 is the
+    // PR-1 packed engine verbatim, the before-side of this comparison.
+    Bencher::header(&format!("microkernel tile grid ({gm}x{gk}x{gn}, 1 thread)"));
+    let seq = ParallelGemm::sequential();
+    let mut acc = MatI32::zeros(0, 0);
+    let mut grid: Vec<(usize, usize, f64, f64)> = Vec::new();
+    for &(mr, nr) in &[(4usize, 4usize), (4, 8), (8, 4), (8, 8)] {
+        let bp = PackedMatI8::pack_with(&wq, nr);
+        let pair_ms = b
+            .bench(&format!("pair_i16/{mr}x{nr}"), || {
+                matmul_i8_packed_kernel_into(&xq, &bp, &mut acc, seq, Kernel::PairI16, mr);
+                acc.data[0]
+            })
+            .mean
+            .as_secs_f64()
+            * 1e3;
+        let wide_ms = b
+            .bench(&format!("wide_i32/{mr}x{nr}"), || {
+                matmul_i8_packed_kernel_into(&xq, &bp, &mut acc, seq, Kernel::WideI32, mr);
+                acc.data[0]
+            })
+            .mean
+            .as_secs_f64()
+            * 1e3;
+        grid.push((mr, nr, pair_ms, wide_ms));
+    }
+    let wide44_ms = grid[0].3;
+    let (best_mr, best_nr, pair_best_ms) = grid
+        .iter()
+        .map(|&(mr, nr, p, _)| (mr, nr, p))
+        .fold((4, 4, f64::INFINITY), |best, cur| if cur.2 < best.2 { cur } else { best });
+    println!(
+        "\nbest pair tile {best_mr}x{best_nr}: {pair_best_ms:.2}ms \
+         ({:.2}x vs PR-1 wide_i32 4x4 at {wide44_ms:.2}ms)",
+        wide44_ms / pair_best_ms
+    );
+
     // ---- quantize-compute-dequant pipelines per method ----
     for (m, k, n, label) in [
         (256, 512, 512, "c_fc-like 256x512x512"),
@@ -169,14 +212,18 @@ fn main() {
     }
 
     // ---- perf-trajectory record ----
+    // packed_*_ms track the auto-routed engine (tile-selected pair
+    // kernel); wide44_1t_ms pins the PR-1 comparator so the
+    // pair-vs-wide trajectory stays measurable across PRs.
     let json = format!(
-        "{{\n  \"bench\": \"bench_gemm\",\n  \"bootstrap\": false,\n  \"shape\": [{gm}, {gk}, {gn}],\n  \"seed_i8_ms\": {seed_ms:.4},\n  \"packed_1t_ms\": {:.4},\n  \"packed_2t_ms\": {:.4},\n  \"packed_4t_ms\": {:.4},\n  \"speedup_vs_seed_1t\": {:.3},\n  \"scaling_1t_to_4t\": {:.3},\n  \"gops_packed_1t\": {:.3},\n  \"e2e_naive_tok_per_s\": {:.1},\n  \"e2e_muxq_tok_per_s\": {:.1}\n}}\n",
+        "{{\n  \"bench\": \"bench_gemm\",\n  \"bootstrap\": false,\n  \"shape\": [{gm}, {gk}, {gn}],\n  \"seed_i8_ms\": {seed_ms:.4},\n  \"packed_1t_ms\": {:.4},\n  \"packed_2t_ms\": {:.4},\n  \"packed_4t_ms\": {:.4},\n  \"speedup_vs_seed_1t\": {:.3},\n  \"scaling_1t_to_4t\": {:.3},\n  \"gops_packed_1t\": {:.3},\n  \"pair_best_ms\": {pair_best_ms:.4},\n  \"pair_best_tile\": \"{best_mr}x{best_nr}\",\n  \"wide44_1t_ms\": {wide44_ms:.4},\n  \"pair_vs_wide44\": {:.3},\n  \"e2e_naive_tok_per_s\": {:.1},\n  \"e2e_muxq_tok_per_s\": {:.1}\n}}\n",
         per_thread_ms[0].1,
         per_thread_ms[1].1,
         per_thread_ms[2].1,
         seed_ms / packed_1t_ms,
         packed_1t_ms / packed_4t_ms,
         gops_1t,
+        wide44_ms / pair_best_ms,
         e2e_tok_s[0].1,
         e2e_tok_s[1].1,
     );

@@ -6,7 +6,8 @@
 # Usage: rust/scripts/bench_check.sh
 # The committed baseline may carry "bootstrap": true (no measured numbers
 # yet, e.g. first checkout on a new host class); the first real run then
-# records the baseline instead of gating.
+# records the baseline instead of gating. The full CI gate (build + tests
+# + rustdoc link hygiene + this smoke) is rust/scripts/ci_check.sh.
 set -euo pipefail
 cd "$(dirname "$0")/../.."
 

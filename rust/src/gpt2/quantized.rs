@@ -10,11 +10,14 @@
 //! motivates INT deployment in the first place.
 //!
 //! Zero-copy projection path: `proj_int` performs no weight gathering or
-//! re-packing per call (weights are packed once in [`QuantizedGpt2::new`];
-//! the MUXQ Aux GEMM reads its outlier rows straight out of the full
-//! packed layout via an index list), and the Body/Aux operands are
-//! quantized in a single fused pass over X into reusable scratch buffers
-//! — no intermediate f32 Body/Aux matrices are ever materialized.
+//! re-packing per call (weights are packed once in [`QuantizedGpt2::new`]
+//! with the tile-selected panel width; the MUXQ Aux GEMM reads its
+//! outlier rows straight out of the full packed layout via an index
+//! list), and the Body/Aux operands are quantized in a single fused pass
+//! over X into reusable scratch buffers — no intermediate f32 Body/Aux
+//! matrices are ever materialized. Both GEMMs run the i16
+//! pair-accumulation microkernel (quantized operands never contain -128,
+//! so the pair path is always taken — see `quant::packed`).
 
 use super::model::Gpt2Model;
 use crate::quant::absmax::{Granularity, Scales, EPS};

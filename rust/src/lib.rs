@@ -2,7 +2,8 @@
 //!
 //! Production reproduction of Lee, Kim & Kim (2026): activation-outlier
 //! handling for uniform low-precision INT quantization of LLMs, built as a
-//! three-layer rust + JAX + Pallas stack (see DESIGN.md).
+//! three-layer rust + JAX + Pallas stack (see DESIGN.md §1; the sim-scale
+//! model stand-ins are DESIGN.md §2).
 //!
 //! Layer map:
 //! * [`runtime`] — PJRT client; loads the AOT-compiled HLO artifacts.

@@ -1,6 +1,13 @@
 //! GEMM execution plans: the per-method breakdown of which GEMMs run at
 //! which precision — used by the report generator and the exp_factor
 //! ablation (recombination cost appears when 2^exp − 1 != 1, paper §3.3).
+//!
+//! Plans price through [`gemm_cost`](super::gemm_cost), so they inherit
+//! the widened-MAC datapath model: `NpuConfig::acc_width_bits == 16`
+//! (the default) retires two i8 MACs per lane per cycle, matching the
+//! rust engine's i16 pair-accumulation microkernel.
+//! [`Plan::widened_mac_speedup`] quantifies what the pairing buys one
+//! plan end to end.
 
 use super::{gemm_cost, Cost, NpuConfig, Precision};
 use crate::quant::Method;
@@ -131,6 +138,20 @@ impl Plan {
         self
     }
 
+    /// End-to-end latency ratio of this plan on a 32-bit-lane (one MAC
+    /// per cycle) datapath vs the i16 pair-accumulation datapath, same
+    /// config otherwise. In [1, 2]: compute-bound INT plans approach 2x;
+    /// DMA-bound plans, fixed overheads and FP16 work dilute the ratio
+    /// toward — and for pure-FP16 plans exactly to — 1.
+    pub fn widened_mac_speedup(&self, cfg: &NpuConfig) -> f64 {
+        let wide = self.cost(&cfg.clone().with_acc_width(32)).cycles();
+        let pair = self.cost(&cfg.clone().with_acc_width(16)).cycles();
+        if pair == 0.0 {
+            return 1.0;
+        }
+        wide / pair
+    }
+
     pub fn cost(&self, cfg: &NpuConfig) -> Cost {
         let mut total = Cost::default();
         for g in &self.gemms {
@@ -199,6 +220,22 @@ mod tests {
         assert!(repack.pack_cycles > 0.0);
         assert_eq!(repack.pack_cycles, bytes / cfg.pack_bytes_per_cycle);
         assert!(repack.cost(&cfg).cycles() > plan.cost(&cfg).cycles());
+    }
+
+    #[test]
+    fn widened_mac_datapath_tracks_pair_kernel() {
+        let cfg = NpuConfig::default();
+        // compute-bound INT plan: pairing buys a real speedup, capped at 2x
+        let muxq = Plan::build(&cfg, Method::Muxq, 4096, 4096, 4096, 16, 8, 2);
+        let s = muxq.widened_mac_speedup(&cfg);
+        assert!(s > 1.2 && s <= 2.0 + 1e-9, "speedup {s}");
+        // a pure-FP16 plan is untouched by the INT accumulator width
+        let fp = Plan::build(&cfg, Method::Fp16, 4096, 4096, 4096, 0, 8, 1);
+        assert!((fp.widened_mac_speedup(&cfg) - 1.0).abs() < 1e-9);
+        // LLM.int8() keeps an FP16 leg, so its benefit must be smaller
+        // than the uniform-INT plan's
+        let mixed = Plan::build(&cfg, Method::LlmInt8, 4096, 4096, 4096, 16, 8, 2);
+        assert!(mixed.widened_mac_speedup(&cfg) < s);
     }
 
     #[test]

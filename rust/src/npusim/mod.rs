@@ -10,8 +10,14 @@
 //! * PE array `array_dim x array_dim`, output-stationary tiling: a tile
 //!   computes a `[T_a, T_a]` output block over the full K dimension;
 //!   pipeline cost per tile = `K + 2*array_dim` cycles (fill + drain).
-//! * INT8 MACs run 1/cycle/PE. INT4 runs `int4_speedup`x. FP16 runs at
-//!   `1/fp16_slowdown` (NPUs are INT-optimized; the paper's premise).
+//! * The INT datapath retires [`NpuConfig::int_macs_per_cycle`] MACs per
+//!   PE per cycle as a function of the accumulator lane width
+//!   (`acc_width_bits`): 32-bit lanes do one i8 MAC/cycle; 16-bit
+//!   pair-accumulation lanes (the default, matching
+//!   `quant::packed`'s i16 pair microkernel) do two. INT4 additionally
+//!   runs `int4_speedup`x. FP16 runs at `1/fp16_slowdown` (NPUs are
+//!   INT-optimized; the paper's premise) and is unaffected by the INT
+//!   accumulator width.
 //! * DMA: operands+result move HBM<->SRAM once per GEMM at `dram_gbps`;
 //!   compute and DMA overlap (latency = max, not sum).
 //! * Mixed-precision decomposition (LLM.int8()) pays a gather/scatter
@@ -46,6 +52,12 @@ pub struct NpuConfig {
     pub pack_bytes_per_cycle: f64,
     /// cycles to flush/refill the array between precision domains.
     pub domain_switch_cycles: u64,
+    /// INT accumulator lane width in bits. 32 models one i8 MAC per lane
+    /// per cycle; 16 models i16 pair accumulation — two i8 MACs per lane
+    /// before the i32 widening step, the datapath of
+    /// `quant::packed`'s pair microkernel (and of `pmaddwd`-class
+    /// SIMD / NPU MAC trees).
+    pub acc_width_bits: u32,
     /// pJ per INT8 MAC (energy model; FP16 = 4x, SRAM/DRAM per-byte below)
     pub pj_per_int8_mac: f64,
     pub pj_per_fp16_mac: f64,
@@ -63,10 +75,32 @@ impl Default for NpuConfig {
             gather_bytes_per_cycle: 16.0,
             pack_bytes_per_cycle: 32.0,
             domain_switch_cycles: 2048,
+            acc_width_bits: 16,
             pj_per_int8_mac: 0.2,
             pj_per_fp16_mac: 0.8,
             pj_per_dram_byte: 20.0,
         }
+    }
+}
+
+impl NpuConfig {
+    /// INT MACs retired per PE per cycle as a function of accumulator
+    /// lane width: i16 pair accumulation doubles per-lane throughput.
+    /// Energy per MAC is unchanged — the same multiplies happen, only
+    /// the widening cadence differs.
+    pub fn int_macs_per_cycle(&self) -> f64 {
+        if self.acc_width_bits == 16 {
+            2.0
+        } else {
+            1.0
+        }
+    }
+
+    /// Builder-style accumulator-width override (32 models the PR-1
+    /// wide-i32 datapath, 16 the pair-accumulation default).
+    pub fn with_acc_width(mut self, bits: u32) -> Self {
+        self.acc_width_bits = bits;
+        self
     }
 }
 
@@ -120,9 +154,10 @@ pub fn gemm_cost(cfg: &NpuConfig, m: usize, k: usize, n: usize, prec: Precision)
     let tiles_m = (m as f64 / a).ceil();
     let tiles_n = (n as f64 / a).ceil();
     let per_tile = k as f64 + 2.0 * a; // stream K + fill/drain
+    // pair accumulation widens the INT datapath; FP16 lanes don't pair
     let slow = match prec {
-        Precision::Int8 => 1.0,
-        Precision::Int4 => 1.0 / cfg.int4_speedup,
+        Precision::Int8 => 1.0 / cfg.int_macs_per_cycle(),
+        Precision::Int4 => 1.0 / (cfg.int4_speedup * cfg.int_macs_per_cycle()),
         Precision::Fp16 => cfg.fp16_slowdown,
     };
     let compute = tiles_m * tiles_n * per_tile * slow;
@@ -257,6 +292,32 @@ mod tests {
         let muxq = model_cost(&cfg, Method::Muxq, 12, T, D, 8, 8);
         let fp = model_cost(&cfg, Method::Fp16, 12, T, D, 0, 8);
         assert!(muxq.cycles() < fp.cycles() / 1.5);
+    }
+
+    #[test]
+    fn pair_accumulation_halves_int8_compute() {
+        // compute-bound shape: the i16 pair datapath (default) must show
+        // exactly 2x the MAC throughput of 32-bit lanes, and the latency
+        // win must survive the DMA overlap
+        let pair = NpuConfig::default();
+        let wide = NpuConfig::default().with_acc_width(32);
+        assert_eq!(pair.int_macs_per_cycle(), 2.0);
+        assert_eq!(wide.int_macs_per_cycle(), 1.0);
+        let cp = gemm_cost(&pair, 4096, 4096, 4096, Precision::Int8);
+        let cw = gemm_cost(&wide, 4096, 4096, 4096, Precision::Int8);
+        assert!((cw.compute_cycles / cp.compute_cycles - 2.0).abs() < 1e-9);
+        assert!(cp.cycles() < cw.cycles());
+        // energy is unchanged: same MACs, different widening cadence
+        assert_eq!(cp.energy_pj, cw.energy_pj);
+    }
+
+    #[test]
+    fn fp16_unaffected_by_int_accumulator_width() {
+        let pair = NpuConfig::default();
+        let wide = NpuConfig::default().with_acc_width(32);
+        let a = gemm_cost(&pair, T, D, D, Precision::Fp16);
+        let b = gemm_cost(&wide, T, D, D, Precision::Fp16);
+        assert_eq!(a.compute_cycles, b.compute_cycles);
     }
 
     #[test]

@@ -23,8 +23,8 @@ pub(crate) const BK: usize = 64;
 /// at least [`PACK_ON_THE_FLY_MIN_M`]. The O(K·N) pack is amortized m
 /// times, so skinny (small-m) GEMMs would pay ~2x the memory traffic of
 /// the blocked fallback for no compute win.
-const PACK_ON_THE_FLY_MACS: usize = 1 << 17;
-const PACK_ON_THE_FLY_MIN_M: usize = 16;
+pub(crate) const PACK_ON_THE_FLY_MACS: usize = 1 << 17;
+pub(crate) const PACK_ON_THE_FLY_MIN_M: usize = 16;
 
 /// Reference f32 GEMM: C = A @ B. Blocked i-k-j loop order (row-major
 /// streaming on both operands), row-panel parallel for large shapes.

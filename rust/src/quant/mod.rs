@@ -1,16 +1,31 @@
 //! Rust-native quantization engine — the twin of the python/jax reference
 //! (`python/compile/kernels/ref.py`), cross-validated against
-//! `artifacts/goldens/quant.bin`.
+//! `artifacts/goldens/quant.bin`. Architecture context: DESIGN.md §3–§4.
 //!
 //! Modules:
 //! * [`matrix`] — dense f32/i8/i32 matrices + IEEE rint
 //! * [`absmax`] — symmetric abs-max quantization at all granularities
 //! * [`gemm`] — blocked f32 and i8→i32 GEMMs, quantize-compute-dequant
-//! * [`packed`] — packed-weight parallel INT8 engine (the i8 hot path)
+//! * [`packed`] — packed-weight parallel INT8 engine (the i8 hot path:
+//!   i16 pair-accumulation microkernel, shape-aware MR×NR tiles)
 //! * [`muxq`] — the paper's outlier decomposition + uniform-INT two-GEMM
 //! * [`llmint8`] — the mixed-precision baseline
+//! * [`group`] — per-group scales (the overhead the paper declines to pay)
 //! * [`smooth`] — SmoothQuant migration (composable with MUXQ)
 //! * [`method`] — unified method dispatch used by examples/benches
+//!
+//! # Which method routes through which kernel
+//!
+//! | method | INT pipeline | kernels on the hot path |
+//! |---|---|---|
+//! | naive abs-max | [`gemm::quant_matmul`] | [`gemm::matmul_i8`] → packed engine for large shapes (pack-on-the-fly), cache-blocked fallback for tiny ones |
+//! | MUXQ | [`muxq::muxq_matmul_int`] | Body: [`packed::matmul_i8_packed_into`]; Aux: [`packed::matmul_i8_rows_subset_into`] reading outlier rows out of the ONE packed W (per-col weight scales; other granularities gather + [`gemm::matmul_i8`]) |
+//! | LLM.int8() | [`llmint8::llmint8_matmul`] | normal channels [`gemm::matmul_i8`], outlier columns [`gemm::matmul_f32`] (the FP16 stand-in) + gather/scatter |
+//! | SmoothQuant | transform only | rescales X and W, then any of the above runs unchanged |
+//! | per-group | fake-quant only | no INT GEMM route — scale storage/rescale overhead is the point under test |
+//!
+//! The deployment path ([`crate::gpt2::QuantizedGpt2::nll_per_seq`])
+//! uses the same packed kernels with weights packed once at load time.
 
 pub mod absmax;
 pub mod gemm;

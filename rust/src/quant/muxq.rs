@@ -8,7 +8,8 @@
 
 use super::absmax::{fake_quant, Granularity, Scales};
 use super::gemm::{dequant, matmul_i8};
-use super::matrix::{MatF32, MatI8};
+use super::matrix::{MatF32, MatI32, MatI8};
+use super::packed::{self, PackedMatI8, ParallelGemm};
 
 /// MUXQ hyper-parameters (paper §3.3).
 #[derive(Debug, Clone, Copy)]
@@ -138,6 +139,19 @@ pub fn gather_outlier_rows(w: &MatF32, mask: &[bool]) -> MatF32 {
 ///
 /// with the *compact* Aux (rows × r). All operands INT8, all accumulation
 /// i32 — no FP16 on the compute path, unlike LLM.int8().
+///
+/// Per-col weight scales (the deployment granularity) on shapes big
+/// enough to amortize an on-the-fly pack take the zero-copy route
+/// `QuantizedGpt2::proj_int` pioneered: W is quantized and packed
+/// ONCE, the body GEMM streams the packed panels, and the Aux GEMM reads
+/// its outlier rows straight out of the same packed layout via
+/// [`packed::matmul_i8_rows_subset_into`] — no per-call gather of weight
+/// rows, no second quantization pass over W. This is bit-exact to the
+/// gather formulation because per-col quantization is elementwise in the
+/// column scale: quantizing full W and reading subset rows equals
+/// gathering subset rows and quantizing with the same (full-W) scales.
+/// Per-tensor weight scales keep the gather path — there the subset's
+/// abs-max defines its own scale, so the operands genuinely differ.
 pub fn muxq_matmul_int(
     x: &MatF32,
     w: &MatF32,
@@ -154,24 +168,60 @@ pub fn muxq_matmul_int(
     let sw = Scales::compute(w, qmax, gw);
     let bq: MatI8 = super::absmax::quantize_i8(&body, &sb, qmax);
     let wq: MatI8 = super::absmax::quantize_i8(w, &sw, qmax);
-    let mut y = dequant(&matmul_i8(&bq, &wq), &sb, &sw);
-
-    // skinny aux GEMM over outlier columns only
     let r = outlier_count(&mask);
+
+    // the zero-copy route packs W on the fly, so it must clear the same
+    // amortization bar as matmul_i8's packed routing: enough body MACs
+    // (and rows) that the O(K·N) pack is noise. Below the bar the gather
+    // path wins on traffic — and for PerCol both paths are bit-exact, so
+    // the threshold never changes results.
+    let use_packed = r > 0
+        && gw == Granularity::PerCol
+        && bq.rows >= super::gemm::PACK_ON_THE_FLY_MIN_M
+        && bq.rows * bq.cols * wq.cols >= super::gemm::PACK_ON_THE_FLY_MACS;
+
+    // body GEMM; the packed layout is kept so the aux GEMM below can
+    // read its outlier rows straight out of it (one pack, two GEMMs)
+    let (mut y, wp) = if use_packed {
+        let wp = PackedMatI8::pack(&wq);
+        let mut acc = MatI32::zeros(0, 0);
+        packed::matmul_i8_packed_into(&bq, &wp, &mut acc, ParallelGemm::global());
+        (dequant(&acc, &sb, &sw), Some(wp))
+    } else {
+        (dequant(&matmul_i8(&bq, &wq), &sb, &sw), None)
+    };
+
+    // skinny aux GEMM over outlier columns only; shared quantize /
+    // dequant / recombination, only the GEMM strategy branches
     if r > 0 {
         let aux = gather_outlier_cols(x, &mask, p.inv_shift());
-        let w_out = gather_outlier_rows(w, &mask);
         let sa = Scales::compute(&aux, qmax, gx);
-        let swo = match gw {
-            // per-col weight scales must match the full-W scales so the
-            // dequant agrees with the fused fake-quant formulation; `sw`
-            // already holds exactly those — no second pass over W
-            Granularity::PerCol => sw.clone(),
-            _ => Scales::compute(&w_out, qmax, gw),
-        };
         let aq = super::absmax::quantize_i8(&aux, &sa, qmax);
-        let woq = super::absmax::quantize_i8(&w_out, &swo, qmax);
-        let ya = dequant(&matmul_i8(&aq, &woq), &sa, &swo);
+        let (acc_aux, swo) = match &wp {
+            // zero-copy: outlier rows read out of the packed full W by
+            // index; full-W per-col scales ARE the subset scales
+            Some(wp) => {
+                let idx: Vec<usize> =
+                    mask.iter().enumerate().filter(|(_, m)| **m).map(|(i, _)| i).collect();
+                let mut acc = MatI32::zeros(0, 0);
+                packed::matmul_i8_rows_subset_into(&aq, wp, &idx, &mut acc, ParallelGemm::global());
+                (acc, sw.clone())
+            }
+            // gather path: small PerCol shapes below the amortization
+            // bar, and non-PerCol granularities (whose subset re-derives
+            // its own scales — for PerCol the full-W scales must be kept
+            // so the dequant agrees with the fused fake-quant form)
+            None => {
+                let w_out = gather_outlier_rows(w, &mask);
+                let swo = match gw {
+                    Granularity::PerCol => sw.clone(),
+                    _ => Scales::compute(&w_out, qmax, gw),
+                };
+                let woq = super::absmax::quantize_i8(&w_out, &swo, qmax);
+                (matmul_i8(&aq, &woq), swo)
+            }
+        };
+        let ya = dequant(&acc_aux, &sa, &swo);
         let f = p.aux_weight();
         for (yv, av) in y.data.iter_mut().zip(&ya.data) {
             *yv += f * av;

@@ -1,37 +1,65 @@
 //! Packed, parallel INT8 GEMM engine — the hot path of the uniform-INT
-//! pipeline MUXQ argues for (paper §3, eq. 7).
+//! pipeline MUXQ argues for (paper §3, eq. 7). Layout details and the
+//! panel diagrams live in DESIGN.md §4.
 //!
 //! Production INT-GEMM stacks (GPTQ/mistralrs-style packed-weight
 //! kernels) pre-pack the weight operand ONCE into a layout the
 //! microkernel can stream, then tile the output over registers. The
 //! rust-native equivalent implemented here:
 //!
-//! * [`PackedMatI8`] — K-major column panels of width [`NR`], zero-padded
-//!   to the panel width, built by a one-time `pack()` (at model load for
-//!   the deployment pipeline; amortized against O(M·K·N) compute when
-//!   packing on the fly).
-//! * A register-tiled [`MR`]×[`NR`] microkernel holding a 4×4 block of
-//!   i32 accumulators, K unrolled by 4, **no zero-skip branch**: dense
-//!   i8 activations are essentially never exactly zero, and a
-//!   branch-per-element defeats autovectorization.
+//! * [`PackedMatI8`] — K-major column panels of a tile-selected width
+//!   ([`TileConfig`]), zero-padded to the panel width AND to an even K
+//!   (`k_pad`), so a k-pair is one contiguous `2·NR` block the pair
+//!   microkernel streams branch-free. Built by a one-time `pack()` (at
+//!   model load for the deployment pipeline; amortized against O(M·K·N)
+//!   compute when packing on the fly).
+//! * An **i16 pair-accumulation microkernel** ([`Kernel::PairI16`], the
+//!   default): each lane multiplies two i8×i8 products into i16 and adds
+//!   the pair in i16 *before* widening into the i32 accumulator — two
+//!   MACs per lane per widening step, the scalar twin of `pmaddwd`-style
+//!   SIMD pair accumulation.
+//!
+//!   No-overflow proof: an i8×i8 product is bounded by 128·128 = 16384,
+//!   so each product always fits i16 (the multiply must widen i8→i16
+//!   first — widening-before-add). The pair sum is bounded by
+//!   2·127·127 = 32258 < `i16::MAX` when operands stay in [-127, 127]
+//!   (symmetric quantization clamps to ±qmax ≤ 127 and never emits
+//!   -128), and by 128·127·2 = 32512 < `i16::MAX` whenever just ONE side
+//!   of each product avoids -128. [`PackedMatI8::pack`] therefore scans
+//!   B once: if any weight value is -128 the engine falls back to the
+//!   [`Kernel::WideI32`] path, making the pair kernel bit-exact for
+//!   every reachable input. (The only unrepresentable pair sum,
+//!   (-128·-128)+(-128·-128) = 32768, requires -128 on BOTH sides of
+//!   both products.)
+//! * A **shape-aware tile selector** ([`TileConfig`]): the register tile
+//!   MR×NR is chosen from (M, N, K) and an L1 size hint instead of the
+//!   old hard-coded 4×4 — NR is fixed at pack time (it is baked into the
+//!   panel layout), MR per call. `MUXQ_TILE=MRxNR` (e.g. `8x4`) and
+//!   `MUXQ_L1_BYTES` override the heuristics.
 //! * [`matmul_i8_rows_subset_into`] — the MUXQ Aux GEMM reads its
 //!   outlier weight rows *directly out of the full packed layout* via an
 //!   index list, so the skinny second GEMM of eq. 7 needs no per-call
-//!   weight gather or re-pack.
+//!   weight gather or re-pack. The contraction walks the index list in
+//!   pairs, so it pair-accumulates too (odd-length lists take one scalar
+//!   tail step).
 //! * [`ParallelGemm`] — row-panel parallelism over scoped threads with a
 //!   sequential fallback for small shapes (thread spawn costs more than
 //!   the GEMM below ~2M MACs).
 //!
+//! i32 accumulation is exact for K up to 2^31 / 128^2 ≈ 131k — far above
+//! any model dimension here; `debug_assert`s guard the operand shapes.
+//!
 //! Perf numbers live in EXPERIMENTS.md §Perf; `bench_gemm` regenerates
-//! them (BENCH_gemm.json, gated by rust/scripts/bench_check.sh).
+//! them (BENCH_gemm.json, gated by rust/scripts/bench_check.sh, doc and
+//! test hygiene by rust/scripts/ci_check.sh).
 
 use super::matrix::{MatI32, MatI8};
 use std::cell::Cell;
 use std::sync::OnceLock;
 
-/// Microkernel register tile: MR rows of A × NR columns of B.
+/// Portable default register-tile rows (the selector may widen to 8).
 pub const MR: usize = 4;
-/// Panel width — one packed panel holds NR output columns, K-major.
+/// Portable default panel width (the selector may widen to 8).
 pub const NR: usize = 4;
 
 thread_local! {
@@ -46,51 +74,191 @@ pub fn pack_count() -> usize {
     PACK_COUNT.with(|c| c.get())
 }
 
+/// Microkernel register tile: `mr` output rows × `nr` output columns.
+///
+/// `nr` is a *layout* parameter — it fixes the packed panel width, so it
+/// is chosen at pack time from (K, N) and the L1 hint. `mr` only shapes
+/// the per-call register block and is chosen from M at GEMM time. Both
+/// are restricted to {4, 8} (the set the const-generic microkernels are
+/// instantiated for).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileConfig {
+    pub mr: usize,
+    pub nr: usize,
+}
+
+impl TileConfig {
+    /// Parse an `MRxNR` override string (e.g. `"8x4"`). Both factors
+    /// must be 4 or 8; anything else is rejected.
+    pub fn parse(s: &str) -> Option<TileConfig> {
+        let (m, n) = s.trim().split_once(|c| c == 'x' || c == 'X')?;
+        let mr: usize = m.trim().parse().ok()?;
+        let nr: usize = n.trim().parse().ok()?;
+        if (mr == 4 || mr == 8) && (nr == 4 || nr == 8) {
+            Some(TileConfig { mr, nr })
+        } else {
+            None
+        }
+    }
+
+    /// The `MUXQ_TILE` override, read once per process. Invalid values
+    /// are ignored (the heuristics apply).
+    fn env_override() -> Option<TileConfig> {
+        static OVERRIDE: OnceLock<Option<TileConfig>> = OnceLock::new();
+        *OVERRIDE
+            .get_or_init(|| std::env::var("MUXQ_TILE").ok().and_then(|s| TileConfig::parse(&s)))
+    }
+
+    /// L1 data-cache size hint in bytes: `MUXQ_L1_BYTES` or a 32 KiB
+    /// default (the common x86/ARM per-core L1d).
+    fn l1_bytes() -> usize {
+        static L1: OnceLock<usize> = OnceLock::new();
+        *L1.get_or_init(|| {
+            std::env::var("MUXQ_L1_BYTES")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(32 * 1024)
+        })
+    }
+
+    /// Panel width for packing a `[k, n]` weight matrix. Wide (8) panels
+    /// amortize the A-side loads over more output columns. The loop is
+    /// row-tile-outer with a full panel sweep inside, so one microkernel
+    /// call streams exactly one B panel (`k_pad · nr` bytes) against one
+    /// interleaved A tile (`k_pad · mr` bytes): bounding the panel by
+    /// half the L1 budget leaves the other half for the A tile (mr ≤ 8 =
+    /// nr's cap), keeping the whole K traversal in cache. Narrow outputs
+    /// (n < 8) would waste the extra width on padding.
+    pub fn nr_for(k: usize, n: usize) -> usize {
+        if let Some(t) = Self::env_override() {
+            return t.nr;
+        }
+        let k_pad = k + (k & 1);
+        if n >= 8 && k_pad * 8 <= Self::l1_bytes() / 2 {
+            8
+        } else {
+            NR
+        }
+    }
+
+    /// Register-tile rows for an `m`-row GEMM: 8 when a full 8-row tile
+    /// exists (more accumulators per B-panel load), else the portable 4.
+    pub fn mr_for(m: usize) -> usize {
+        if let Some(t) = Self::env_override() {
+            return t.mr;
+        }
+        if m >= 8 {
+            8
+        } else {
+            MR
+        }
+    }
+}
+
+/// Microkernel accumulation scheme.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// Pick [`Kernel::PairI16`] unless the packed B contains -128 (the
+    /// one value that can overflow the i16 pair sum — see module docs).
+    Auto,
+    /// i16 pair accumulation: two i8 MACs per lane per i32 widening.
+    /// Callers forcing this must guarantee the packed B holds no -128.
+    PairI16,
+    /// One i8 MAC per lane, widened straight into i32 (the PR-1 scheme;
+    /// the exact-for-all-inputs fallback and the bench comparator).
+    WideI32,
+}
+
+impl Kernel {
+    fn use_pair(self, bp: &PackedMatI8) -> bool {
+        match self {
+            Kernel::Auto => !bp.has_neg128,
+            Kernel::PairI16 => {
+                debug_assert!(
+                    !bp.has_neg128,
+                    "pair-i16 exactness requires weight values in [-127, 127]"
+                );
+                true
+            }
+            Kernel::WideI32 => false,
+        }
+    }
+}
+
 /// Weight matrix pre-packed into K-major column panels.
 ///
-/// Layout: `ceil(cols / NR)` panels, each `rows * NR` bytes. Panel `p`
-/// stores columns `p*NR .. p*NR+NR` of B; within a panel the NR column
-/// values for each k are contiguous (`panel[k*NR + j]`), so the
-/// microkernel streams the panel front-to-back with unit stride. The
-/// last panel is zero-padded to full width — padding contributes zero to
-/// every accumulator, so no column-tail branch is needed in the kernel.
+/// Layout: `ceil(cols / nr)` panels, each `k_pad * nr` bytes where
+/// `k_pad` rounds K up to even. Panel `p` stores columns
+/// `p*nr .. p*nr+nr` of B; within a panel the nr column values for each
+/// k are contiguous (`panel[k*nr + j]`), so the microkernel streams the
+/// panel front-to-back with unit stride and a k-pair is one contiguous
+/// `2·nr` block. The last panel is zero-padded to full width and odd K
+/// gets one zero row — padding contributes zero to every accumulator, so
+/// neither a column-tail nor a K-tail branch is needed in the kernel.
 #[derive(Debug, Clone)]
 pub struct PackedMatI8 {
-    /// K — the inner (contraction) dimension.
+    /// K — the inner (contraction) dimension (logical, unpadded).
     pub rows: usize,
     /// N — the output dimension (logical, unpadded).
     pub cols: usize,
+    nr: usize,
+    k_pad: usize,
+    has_neg128: bool,
     data: Vec<i8>,
 }
 
 impl PackedMatI8 {
-    /// One-time packing pass: O(K·N), done at weight-load time in the
-    /// deployment pipeline.
+    /// One-time packing pass with the tile-selected panel width: O(K·N),
+    /// done at weight-load time in the deployment pipeline.
     pub fn pack(b: &MatI8) -> PackedMatI8 {
+        Self::pack_with(b, TileConfig::nr_for(b.rows, b.cols))
+    }
+
+    /// Pack with an explicit panel width (bench/test hook; `nr` must be
+    /// 4 or 8).
+    pub fn pack_with(b: &MatI8, nr: usize) -> PackedMatI8 {
+        assert!(nr == 4 || nr == 8, "unsupported panel width {nr}");
         PACK_COUNT.with(|c| c.set(c.get() + 1));
         let (k, n) = (b.rows, b.cols);
-        let panels = n.div_ceil(NR);
-        let mut data = vec![0i8; panels * k * NR];
+        let k_pad = k + (k & 1);
+        let panels = n.div_ceil(nr);
+        let mut data = vec![0i8; panels * k_pad * nr];
+        // the -128 scan (pair-kernel eligibility) rides the copy pass:
+        // every element of B is copied exactly once across the panels
+        let mut has_neg128 = false;
         for p in 0..panels {
-            let j0 = p * NR;
-            let jw = NR.min(n - j0);
-            let dst = &mut data[p * k * NR..(p + 1) * k * NR];
+            let j0 = p * nr;
+            let jw = nr.min(n - j0);
+            let dst = &mut data[p * k_pad * nr..(p + 1) * k_pad * nr];
             for kk in 0..k {
-                dst[kk * NR..kk * NR + jw]
-                    .copy_from_slice(&b.data[kk * n + j0..kk * n + j0 + jw]);
+                let src = &b.data[kk * n + j0..kk * n + j0 + jw];
+                dst[kk * nr..kk * nr + jw].copy_from_slice(src);
+                has_neg128 |= src.contains(&i8::MIN);
             }
         }
-        PackedMatI8 { rows: k, cols: n, data }
+        PackedMatI8 { rows: k, cols: n, nr, k_pad, has_neg128, data }
+    }
+
+    /// Panel width this matrix was packed with.
+    pub fn nr(&self) -> usize {
+        self.nr
+    }
+
+    /// Whether any packed value is -128 (forces the [`Kernel::WideI32`]
+    /// path under [`Kernel::Auto`] — see the module-level overflow
+    /// proof). Never true for symmetric-quantized weights.
+    pub fn has_neg128(&self) -> bool {
+        self.has_neg128
     }
 
     /// Number of column panels.
     pub fn panels(&self) -> usize {
-        self.cols.div_ceil(NR)
+        self.cols.div_ceil(self.nr)
     }
 
-    /// Actual storage bytes, *including* panel padding — what the packed
-    /// layout really occupies in memory (the honest number for the
-    /// memory-saving claim).
+    /// Actual storage bytes, *including* panel and K-pair padding — what
+    /// the packed layout really occupies in memory (the honest number
+    /// for the memory-saving claim).
     pub fn padded_bytes(&self) -> usize {
         self.data.len()
     }
@@ -102,7 +270,7 @@ impl PackedMatI8 {
 
     #[inline(always)]
     fn panel(&self, p: usize) -> &[i8] {
-        &self.data[p * self.rows * NR..(p + 1) * self.rows * NR]
+        &self.data[p * self.k_pad * self.nr..(p + 1) * self.k_pad * self.nr]
     }
 }
 
@@ -163,14 +331,32 @@ pub fn matmul_i8_packed_with(a: &MatI8, bp: &PackedMatI8, cfg: ParallelGemm) -> 
 
 /// C = A_i8 @ B_packed written into a reusable accumulator (resized in
 /// place; every element is overwritten, so no zeroing pass is needed).
+/// Kernel and register tile are auto-selected ([`Kernel::Auto`],
+/// [`TileConfig::mr_for`]).
 pub fn matmul_i8_packed_into(a: &MatI8, bp: &PackedMatI8, c: &mut MatI32, cfg: ParallelGemm) {
+    matmul_i8_packed_kernel_into(a, bp, c, cfg, Kernel::Auto, TileConfig::mr_for(a.rows));
+}
+
+/// Full-control variant: explicit accumulation [`Kernel`] and register
+/// tile rows `mr` ∈ {4, 8} (the tile-grid bench and the bit-exactness
+/// proptests drive every combination through this).
+pub fn matmul_i8_packed_kernel_into(
+    a: &MatI8,
+    bp: &PackedMatI8,
+    c: &mut MatI32,
+    cfg: ParallelGemm,
+    kernel: Kernel,
+    mr: usize,
+) {
     assert_eq!(a.cols, bp.rows, "inner dims {}x{}", a.cols, bp.rows);
+    assert!(mr == 4 || mr == 8, "unsupported register tile rows {mr}");
     let (m, n) = (a.rows, bp.cols);
+    let pair = kernel.use_pair(bp);
     c.rows = m;
     c.cols = n;
     c.data.resize(m * n, 0);
     run_row_parallel(m, n, a.cols, cfg, &mut c.data, &|row0, row1, chunk| {
-        gemm_rows(a, bp, row0, row1, chunk);
+        gemm_rows(a, bp, None, pair, mr, row0, row1, chunk);
     });
 }
 
@@ -178,7 +364,8 @@ pub fn matmul_i8_packed_into(a: &MatI8, bp: &PackedMatI8, c: &mut MatI32, cfg: P
 /// `C = A_compact @ B[idx, :]` where A_compact is `[m, r]` and `idx[t]`
 /// names the B row matched to A's column `t`. This is MUXQ's Aux GEMM
 /// (eq. 7): the outlier weight rows are read straight out of the full
-/// packed layout — zero-copy, no per-call gather/re-pack.
+/// packed layout — zero-copy, no per-call gather/re-pack. The index list
+/// is walked in pairs, so this path pair-accumulates too.
 pub fn matmul_i8_rows_subset_into(
     a: &MatI8,
     bp: &PackedMatI8,
@@ -189,11 +376,13 @@ pub fn matmul_i8_rows_subset_into(
     assert_eq!(a.cols, idx.len(), "compact A width vs index list");
     debug_assert!(idx.iter().all(|&k| k < bp.rows));
     let (m, n) = (a.rows, bp.cols);
+    let pair = Kernel::Auto.use_pair(bp);
+    let mr = TileConfig::mr_for(m);
     c.rows = m;
     c.cols = n;
     c.data.resize(m * n, 0);
     run_row_parallel(m, n, idx.len(), cfg, &mut c.data, &|row0, row1, chunk| {
-        gemm_rows_subset(a, bp, idx, row0, row1, chunk);
+        gemm_rows(a, bp, Some(idx), pair, mr, row0, row1, chunk);
     });
 }
 
@@ -223,134 +412,237 @@ fn run_row_parallel(
 }
 
 /// Compute output rows `[row0, row1)` into `c_rows` (len `(row1-row0)*n`).
-/// Each (row-tile, panel) pair streams the FULL K dimension once, so
-/// every output element is written exactly once (store, not accumulate).
-fn gemm_rows(a: &MatI8, bp: &PackedMatI8, row0: usize, row1: usize, c_rows: &mut [i32]) {
-    let k = a.cols;
-    let n = bp.cols;
-    debug_assert_eq!(c_rows.len(), (row1 - row0) * n);
-    for p in 0..bp.panels() {
-        let j0 = p * NR;
-        let jw = NR.min(n - j0);
-        let panel = &bp.panel(p)[..k * NR];
-        let mut i = row0;
-        while i + MR <= row1 {
-            let rows = [a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3)];
-            let mut acc = [[0i32; NR]; MR];
-            micro_mr(k, rows, panel, &mut acc);
-            for (di, accr) in acc.iter().enumerate() {
-                c_rows[(i - row0 + di) * n + j0..][..jw].copy_from_slice(&accr[..jw]);
-            }
-            i += MR;
-        }
-        while i < row1 {
-            let mut acc = [0i32; NR];
-            micro_1(k, a.row(i), panel, &mut acc);
-            c_rows[(i - row0) * n + j0..][..jw].copy_from_slice(&acc[..jw]);
-            i += 1;
-        }
-    }
-}
-
-/// Row-subset twin of [`gemm_rows`]: the contraction walks `idx` instead
-/// of `0..k`, jumping to `panel[idx[t]*NR]` for the weight values.
-fn gemm_rows_subset(
+/// One driver for both the dense GEMM (`idx == None`, contraction over
+/// `0..k`) and the Aux rows-subset GEMM (`idx == Some`, contraction
+/// walking the index list). Register tiles cascade 8 → 4 → 1 rows (the
+/// 8-row tier only when `mr == 8`), all through the same const-generic
+/// microkernels (a 1-row tile is just `M = 1`) — so a parallel chunk or
+/// tail shorter than `mr` still gets the widest tile that fits instead
+/// of falling straight to the scalar row path. Each (row-tile, panel)
+/// pair streams the FULL contraction once, so every output element is
+/// written exactly once (store, not accumulate).
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows(
     a: &MatI8,
     bp: &PackedMatI8,
-    idx: &[usize],
+    idx: Option<&[usize]>,
+    pair: bool,
+    mr: usize,
     row0: usize,
     row1: usize,
     c_rows: &mut [i32],
 ) {
-    let n = bp.cols;
-    debug_assert_eq!(c_rows.len(), (row1 - row0) * n);
-    for p in 0..bp.panels() {
-        let j0 = p * NR;
-        let jw = NR.min(n - j0);
-        let panel = bp.panel(p);
-        let mut i = row0;
-        while i + MR <= row1 {
-            let rows = [a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3)];
-            let mut acc = [[0i32; NR]; MR];
-            micro_mr_idx(idx, rows, panel, &mut acc);
+    debug_assert_eq!(c_rows.len(), (row1 - row0) * bp.cols);
+    let mut abuf = Vec::new();
+    let mut i = row0;
+    if mr == 8 {
+        i = if bp.nr == 8 {
+            tiles::<8, 8>(a, bp, idx, pair, i, row1, row0, c_rows, &mut abuf)
+        } else {
+            tiles::<8, 4>(a, bp, idx, pair, i, row1, row0, c_rows, &mut abuf)
+        };
+    }
+    i = if bp.nr == 8 {
+        tiles::<4, 8>(a, bp, idx, pair, i, row1, row0, c_rows, &mut abuf)
+    } else {
+        tiles::<4, 4>(a, bp, idx, pair, i, row1, row0, c_rows, &mut abuf)
+    };
+    if bp.nr == 8 {
+        tiles::<1, 8>(a, bp, idx, pair, i, row1, row0, c_rows, &mut abuf);
+    } else {
+        tiles::<1, 4>(a, bp, idx, pair, i, row1, row0, c_rows, &mut abuf);
+    }
+}
+
+/// Process full `M`-row tiles from `start` while they fit below `row1`;
+/// returns the first unprocessed row. The pair path re-packs the A tile
+/// into a K-major interleaved panel (`abuf[kk*M + i] = a[i][kk]`) so
+/// both operands stream pair blocks with unit stride; dense contractions
+/// pad it to `k_pad` (the zero pad row absorbs odd K), subset
+/// contractions are exactly `idx.len()` wide (odd lists take a scalar
+/// tail step inside the microkernel instead). The wide path reads A rows
+/// directly (the PR-1 scheme).
+#[allow(clippy::too_many_arguments)]
+fn tiles<const M: usize, const N: usize>(
+    a: &MatI8,
+    bp: &PackedMatI8,
+    idx: Option<&[usize]>,
+    pair: bool,
+    start: usize,
+    row1: usize,
+    row0: usize,
+    c_rows: &mut [i32],
+    abuf: &mut Vec<i8>,
+) -> usize {
+    debug_assert_eq!(N, bp.nr);
+    let (k, n) = (a.cols, bp.cols);
+    if pair {
+        // zero-filled; the dense K-pad row (odd k) is never rewritten
+        let awidth = if idx.is_some() { k } else { bp.k_pad };
+        abuf.clear();
+        abuf.resize(awidth * M, 0);
+    }
+    let mut i = start;
+    while i + M <= row1 {
+        if pair {
+            // interleave: abuf[kk*M + di] = a[i+di][kk]
+            for di in 0..M {
+                let ar = a.row(i + di);
+                for (kk, &v) in ar.iter().enumerate() {
+                    abuf[kk * M + di] = v;
+                }
+            }
+        }
+        for p in 0..bp.panels() {
+            let j0 = p * N;
+            let jw = N.min(n - j0);
+            let panel = bp.panel(p);
+            let mut acc = [[0i32; N]; M];
+            match (idx, pair) {
+                (None, true) => micro_pair::<M, N>(bp.k_pad / 2, abuf, panel, &mut acc),
+                (Some(ix), true) => micro_pair_idx::<M, N>(ix, abuf, panel, &mut acc),
+                (None, false) => {
+                    let rows: [&[i8]; M] = std::array::from_fn(|di| a.row(i + di));
+                    micro_wide::<M, N>(k, &rows, panel, &mut acc);
+                }
+                (Some(ix), false) => {
+                    let rows: [&[i8]; M] = std::array::from_fn(|di| a.row(i + di));
+                    micro_wide_idx::<M, N>(ix, &rows, panel, &mut acc);
+                }
+            }
             for (di, accr) in acc.iter().enumerate() {
                 c_rows[(i - row0 + di) * n + j0..][..jw].copy_from_slice(&accr[..jw]);
             }
-            i += MR;
         }
-        while i < row1 {
-            let mut acc = [0i32; NR];
-            micro_1_idx(idx, a.row(i), panel, &mut acc);
-            c_rows[(i - row0) * n + j0..][..jw].copy_from_slice(&acc[..jw]);
-            i += 1;
+        i += M;
+    }
+    i
+}
+
+/// i16 pair-accumulation microkernel: `kp` K-pairs, both operands
+/// pair-interleaved (A: `2·M` block per pair, B panel: `2·N` block per
+/// pair). Each i8×i8 product widens to i16 (|p| ≤ 16384 always fits);
+/// the pair adds in i16 — bounded by 32512 < `i16::MAX` because the
+/// dispatcher guarantees B holds no -128 — and widens into i32 once per
+/// pair: two MACs per lane per widening step.
+#[inline(always)]
+fn micro_pair<const M: usize, const N: usize>(
+    kp: usize,
+    apanel: &[i8],
+    panel: &[i8],
+    acc: &mut [[i32; N]; M],
+) {
+    for t in 0..kp {
+        let ab = &apanel[2 * t * M..2 * t * M + 2 * M];
+        let bb = &panel[2 * t * N..2 * t * N + 2 * N];
+        for i in 0..M {
+            let a_lo = ab[i] as i16;
+            let a_hi = ab[M + i] as i16;
+            for j in 0..N {
+                let p = a_lo * bb[j] as i16;
+                let q = a_hi * bb[N + j] as i16;
+                acc[i][j] += (p + q) as i32;
+            }
         }
     }
 }
 
-/// One contraction step of the MR×NR tile at position `kk`.
+/// One contraction step of the M×N tile at position `kk` (wide-i32).
 #[inline(always)]
-fn micro_step(kk: usize, a: [&[i8]; MR], panel: &[i8], acc: &mut [[i32; NR]; MR]) {
-    let b = &panel[kk * NR..kk * NR + NR];
-    for i in 0..MR {
+fn wide_step<const M: usize, const N: usize>(
+    kk: usize,
+    a: &[&[i8]; M],
+    panel: &[i8],
+    acc: &mut [[i32; N]; M],
+) {
+    let b = &panel[kk * N..kk * N + N];
+    for i in 0..M {
         let av = a[i][kk] as i32;
-        for j in 0..NR {
+        for j in 0..N {
             acc[i][j] += av * b[j] as i32;
         }
     }
 }
 
-/// MR×NR register-tiled microkernel: 16 i32 accumulators live across the
-/// whole K loop, K unrolled by 4, branch-free dense MACs.
+/// Wide-i32 microkernel (the PR-1 scheme): M×N i32 accumulators live
+/// across the whole K loop, K unrolled by 4, branch-free dense MACs, one
+/// MAC per lane per step. Exact for every i8 input (kept as the -128
+/// fallback and the pair-kernel comparator).
 #[inline(always)]
-fn micro_mr(k: usize, a: [&[i8]; MR], panel: &[i8], acc: &mut [[i32; NR]; MR]) {
+fn micro_wide<const M: usize, const N: usize>(
+    k: usize,
+    a: &[&[i8]; M],
+    panel: &[i8],
+    acc: &mut [[i32; N]; M],
+) {
     let mut kk = 0;
     while kk + 4 <= k {
-        micro_step(kk, a, panel, acc);
-        micro_step(kk + 1, a, panel, acc);
-        micro_step(kk + 2, a, panel, acc);
-        micro_step(kk + 3, a, panel, acc);
+        wide_step::<M, N>(kk, a, panel, acc);
+        wide_step::<M, N>(kk + 1, a, panel, acc);
+        wide_step::<M, N>(kk + 2, a, panel, acc);
+        wide_step::<M, N>(kk + 3, a, panel, acc);
         kk += 4;
     }
     while kk < k {
-        micro_step(kk, a, panel, acc);
+        wide_step::<M, N>(kk, a, panel, acc);
         kk += 1;
     }
 }
 
-/// 1×NR tail microkernel for the M remainder rows.
+/// Index-mapped pair microkernel (Aux GEMM): the contraction walks `idx`
+/// two entries at a time — the pair's B rows come from arbitrary panel
+/// offsets, the A pair stays contiguous in the interleaved tile. An
+/// odd-length list takes one scalar (wide-i32) tail step.
 #[inline(always)]
-fn micro_1(k: usize, a: &[i8], panel: &[i8], acc: &mut [i32; NR]) {
-    for kk in 0..k {
-        let av = a[kk] as i32;
-        let b = &panel[kk * NR..kk * NR + NR];
-        for j in 0..NR {
-            acc[j] += av * b[j] as i32;
+fn micro_pair_idx<const M: usize, const N: usize>(
+    idx: &[usize],
+    apanel: &[i8],
+    panel: &[i8],
+    acc: &mut [[i32; N]; M],
+) {
+    let pairs = idx.len() / 2;
+    for t in 0..pairs {
+        let b0 = &panel[idx[2 * t] * N..idx[2 * t] * N + N];
+        let b1 = &panel[idx[2 * t + 1] * N..idx[2 * t + 1] * N + N];
+        let ab = &apanel[2 * t * M..2 * t * M + 2 * M];
+        for i in 0..M {
+            let a_lo = ab[i] as i16;
+            let a_hi = ab[M + i] as i16;
+            for j in 0..N {
+                let p = a_lo * b0[j] as i16;
+                let q = a_hi * b1[j] as i16;
+                acc[i][j] += (p + q) as i32;
+            }
         }
     }
-}
-
-/// MR×NR microkernel over an index-mapped contraction (Aux GEMM).
-#[inline(always)]
-fn micro_mr_idx(idx: &[usize], a: [&[i8]; MR], panel: &[i8], acc: &mut [[i32; NR]; MR]) {
-    for (t, &krow) in idx.iter().enumerate() {
-        let b = &panel[krow * NR..krow * NR + NR];
-        for i in 0..MR {
-            let av = a[i][t] as i32;
-            for j in 0..NR {
+    if idx.len() % 2 == 1 {
+        let t = idx.len() - 1;
+        let b = &panel[idx[t] * N..idx[t] * N + N];
+        let ab = &apanel[t * M..t * M + M];
+        for i in 0..M {
+            let av = ab[i] as i32;
+            for j in 0..N {
                 acc[i][j] += av * b[j] as i32;
             }
         }
     }
 }
 
-/// 1×NR index-mapped tail microkernel.
+/// Index-mapped wide-i32 microkernel (Aux GEMM fallback path).
 #[inline(always)]
-fn micro_1_idx(idx: &[usize], a: &[i8], panel: &[i8], acc: &mut [i32; NR]) {
+fn micro_wide_idx<const M: usize, const N: usize>(
+    idx: &[usize],
+    a: &[&[i8]; M],
+    panel: &[i8],
+    acc: &mut [[i32; N]; M],
+) {
     for (t, &krow) in idx.iter().enumerate() {
-        let av = a[t] as i32;
-        let b = &panel[krow * NR..krow * NR + NR];
-        for j in 0..NR {
-            acc[j] += av * b[j] as i32;
+        let b = &panel[krow * N..krow * N + N];
+        for i in 0..M {
+            let av = a[i][t] as i32;
+            for j in 0..N {
+                acc[i][j] += av * b[j] as i32;
+            }
         }
     }
 }
@@ -385,19 +677,50 @@ mod tests {
 
     #[test]
     fn pack_layout_golden() {
-        // 2x3 (one padded panel): [b00 b01 b02 0 | b10 b11 b12 0]
+        // 2x3 (one padded panel, even K): [b00 b01 b02 0 | b10 b11 b12 0]
         let mut b = MatI8::zeros(2, 3);
         b.data.copy_from_slice(&[1, 2, 3, 4, 5, 6]);
-        let p = PackedMatI8::pack(&b);
+        let p = PackedMatI8::pack_with(&b, 4);
         assert_eq!(p.panels(), 1);
-        assert_eq!(p.padded_bytes(), 2 * NR);
+        assert_eq!(p.padded_bytes(), 2 * 4);
         assert_eq!(p.logical_len(), 6);
         assert_eq!(p.panel(0), &[1, 2, 3, 0, 4, 5, 6, 0]);
+        assert!(!p.has_neg128());
+    }
+
+    #[test]
+    fn pack_layout_odd_k_pair_padded() {
+        // 3x3: odd K rounds up to k_pad = 4 with one zero row per panel,
+        // so the pair kernel needs no K-tail branch
+        let mut b = MatI8::zeros(3, 3);
+        b.data.copy_from_slice(&[1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        let p = PackedMatI8::pack_with(&b, 4);
+        assert_eq!(p.panels(), 1);
+        assert_eq!(p.padded_bytes(), 4 * 4);
+        assert_eq!(p.panel(0), &[1, 2, 3, 0, 4, 5, 6, 0, 7, 8, 9, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn tile_parse_and_heuristics() {
+        assert_eq!(TileConfig::parse("8x4"), Some(TileConfig { mr: 8, nr: 4 }));
+        assert_eq!(TileConfig::parse(" 4X8 "), Some(TileConfig { mr: 4, nr: 8 }));
+        assert_eq!(TileConfig::parse("6x4"), None);
+        assert_eq!(TileConfig::parse("8"), None);
+        assert_eq!(TileConfig::parse("8x16"), None);
+        // heuristics (no env override in the test environment): narrow
+        // outputs stay at the portable width, wide outputs widen, a K
+        // deep enough to blow the L1 panel budget narrows again
+        assert_eq!(TileConfig::nr_for(768, 4), 4);
+        assert_eq!(TileConfig::nr_for(768, 768), 8);
+        assert_eq!(TileConfig::nr_for(1 << 20, 768), 4);
+        assert_eq!(TileConfig::mr_for(4), 4);
+        assert_eq!(TileConfig::mr_for(512), 8);
     }
 
     #[test]
     fn packed_matches_naive_ragged_shapes() {
-        // 1x1x1, primes, and dims straddling MR/NR panel boundaries
+        // 1x1x1, primes, odd K, and dims straddling MR/NR panel
+        // boundaries — via the auto-selected (pair) kernel and tile
         for &(m, k, n) in &[
             (1, 1, 1),
             (2, 3, 5),
@@ -407,6 +730,7 @@ mod tests {
             (6, 65, 7),
             (33, 17, 12),
             (8, 8, 3),
+            (9, 7, 10),
         ] {
             let a = rand_i8(m, k, m as u64 * 31 + n as u64);
             let b = rand_i8(k, n, k as u64 * 37 + 1);
@@ -415,6 +739,58 @@ mod tests {
             let want = matmul_naive(&a, &b);
             assert_eq!(got.data, want.data, "{m}x{k}x{n}");
         }
+    }
+
+    #[test]
+    fn pair_and_wide_kernels_bit_exact_across_tile_grid() {
+        // every (kernel, mr, nr) combination against the naive loop,
+        // on shapes with odd K and ragged M/N tails
+        for &(m, k, n) in &[(5, 9, 11), (8, 16, 8), (13, 31, 17), (1, 3, 1)] {
+            let a = rand_i8(m, k, 100 + m as u64);
+            let b = rand_i8(k, n, 200 + n as u64);
+            let want = matmul_naive(&a, &b);
+            for nr in [4usize, 8] {
+                let bp = PackedMatI8::pack_with(&b, nr);
+                for mr in [4usize, 8] {
+                    for kernel in [Kernel::PairI16, Kernel::WideI32, Kernel::Auto] {
+                        let mut c = MatI32::zeros(0, 0);
+                        matmul_i8_packed_kernel_into(
+                            &a,
+                            &bp,
+                            &mut c,
+                            ParallelGemm::sequential(),
+                            kernel,
+                            mr,
+                        );
+                        assert_eq!(
+                            c.data, want.data,
+                            "{m}x{k}x{n} {kernel:?} tile {mr}x{nr}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn neg128_weights_fall_back_to_wide_and_stay_exact() {
+        // all-(-128) operands: the i16 pair sum would wrap at +32768, so
+        // Auto must route to the wide kernel and match the naive loop
+        let mut a = MatI8::zeros(4, 6);
+        let mut b = MatI8::zeros(6, 5);
+        a.data.iter_mut().for_each(|v| *v = i8::MIN);
+        b.data.iter_mut().for_each(|v| *v = i8::MIN);
+        let bp = PackedMatI8::pack(&b);
+        assert!(bp.has_neg128());
+        let got = matmul_i8_packed_with(&a, &bp, ParallelGemm::sequential());
+        assert_eq!(got.data, matmul_naive(&a, &b).data);
+        // and -128 on the A side alone is safe for the pair kernel:
+        // |(-128)·b| ≤ 128·127, pair sum ≤ 32512 < i16::MAX
+        let b7 = rand_i8(6, 5, 7);
+        let bp7 = PackedMatI8::pack(&b7);
+        assert!(!bp7.has_neg128());
+        let got7 = matmul_i8_packed_with(&a, &bp7, ParallelGemm::sequential());
+        assert_eq!(got7.data, matmul_naive(&a, &b7).data);
     }
 
     #[test]
@@ -433,24 +809,27 @@ mod tests {
 
     #[test]
     fn rows_subset_equals_explicit_gather() {
-        let a = rand_i8(9, 3, 3); // compact [m, r] with r = 3
         let b = rand_i8(15, 10, 4);
-        let idx = [2usize, 7, 14];
-        let bp = PackedMatI8::pack(&b);
-        let mut got = MatI32::zeros(0, 0);
-        matmul_i8_rows_subset_into(&a, &bp, &idx, &mut got, ParallelGemm::sequential());
-        // reference: gather the rows, then dense naive
-        let mut gathered = MatI8::zeros(3, 10);
-        for (t, &r) in idx.iter().enumerate() {
-            gathered.data[t * 10..(t + 1) * 10].copy_from_slice(b.row(r));
+        for idx in [&[2usize, 7, 14][..], &[0, 3, 6, 11][..], &[5][..]] {
+            let a = rand_i8(9, idx.len(), 3); // compact [m, r]
+            for nr in [4usize, 8] {
+                let bp = PackedMatI8::pack_with(&b, nr);
+                let mut got = MatI32::zeros(0, 0);
+                matmul_i8_rows_subset_into(&a, &bp, idx, &mut got, ParallelGemm::sequential());
+                // reference: gather the rows, then dense naive
+                let mut gathered = MatI8::zeros(idx.len(), 10);
+                for (t, &r) in idx.iter().enumerate() {
+                    gathered.data[t * 10..(t + 1) * 10].copy_from_slice(b.row(r));
+                }
+                let want = matmul_naive(&a, &gathered);
+                assert_eq!(got.data, want.data, "idx {idx:?} nr {nr}");
+                // and in parallel
+                let mut par = MatI32::zeros(0, 0);
+                let cfg = ParallelGemm { threads: 3, min_parallel_macs: 0 };
+                matmul_i8_rows_subset_into(&a, &bp, idx, &mut par, cfg);
+                assert_eq!(par.data, want.data, "parallel idx {idx:?} nr {nr}");
+            }
         }
-        let want = matmul_naive(&a, &gathered);
-        assert_eq!(got.data, want.data);
-        // and in parallel
-        let mut par = MatI32::zeros(0, 0);
-        let cfg = ParallelGemm { threads: 3, min_parallel_macs: 0 };
-        matmul_i8_rows_subset_into(&a, &bp, &idx, &mut par, cfg);
-        assert_eq!(par.data, want.data);
     }
 
     #[test]

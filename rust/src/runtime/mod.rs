@@ -1,7 +1,7 @@
 //! PJRT runtime: load AOT-compiled HLO text, compile once, execute many.
 //!
 //! This is the only module that touches the `xla` crate. The interchange
-//! format is HLO *text* (see DESIGN.md / python/compile/aot.py): jax >= 0.5
+//! format is HLO *text* (see DESIGN.md §6 / python/compile/aot.py): jax >= 0.5
 //! emits HloModuleProto with 64-bit instruction ids that xla_extension
 //! 0.5.1 rejects, while the text parser reassigns ids and round-trips
 //! cleanly.

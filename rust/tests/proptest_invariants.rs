@@ -12,7 +12,8 @@ use muxq::quant::muxq::{
     outlier_count, outlier_mask, reconstruct, MuxqParams,
 };
 use muxq::quant::packed::{
-    matmul_i8_packed_with, matmul_i8_rows_subset_into, PackedMatI8, ParallelGemm,
+    matmul_i8_packed_kernel_into, matmul_i8_packed_with, matmul_i8_rows_subset_into, Kernel,
+    PackedMatI8, ParallelGemm,
 };
 use muxq::quant::{gemm, MatF32};
 use muxq::util::proptest::{prop, prop_assert, Gen};
@@ -214,6 +215,72 @@ fn packed_matmul_exact_on_panel_boundary_shapes() {
 }
 
 #[test]
+fn prop_pair_accum_bit_exact_vs_triple_loop() {
+    // the i16 pair-accumulation microkernel vs the naive triple loop,
+    // across random shapes (odd and even K), every register tile and
+    // both explicit kernels — the overflow-bound pin: if the pair sum
+    // could wrap, integer equality would fail
+    prop("pair-accum i8 GEMM == naive triple loop", |g| {
+        let m = g.usize(1, 40);
+        let k = g.usize(1, 48);
+        let n = g.usize(1, 40);
+        let a = gen_i8(g, m, k);
+        let b = gen_i8(g, k, n);
+        let want = matmul_i8_triple(&a, &b);
+        let nr = *g.choice(&[4usize, 8]);
+        let mr = *g.choice(&[4usize, 8]);
+        let bp = PackedMatI8::pack_with(&b, nr);
+        for kernel in [Kernel::PairI16, Kernel::WideI32] {
+            let mut c = MatI32::zeros(0, 0);
+            matmul_i8_packed_kernel_into(&a, &bp, &mut c, ParallelGemm::sequential(), kernel, mr);
+            prop_assert(
+                c.data == want.data,
+                format!("{m}x{k}x{n} {kernel:?} tile {mr}x{nr}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pair_accum_exact_on_ragged_shape_families() {
+    // three ragged families, deterministically: (a) odd K — the pair
+    // loop's zero-padded K row; (b) K smaller than one unroll/panel —
+    // degenerate contractions; (c) M/N straddling every tile boundary
+    let families: [&[(usize, usize, usize)]; 3] = [
+        &[(4, 1, 4), (8, 3, 8), (5, 7, 9), (16, 65, 16), (6, 129, 10)], // odd K
+        &[(1, 1, 1), (2, 2, 3), (9, 2, 7), (12, 4, 5)],                 // tiny K
+        &[(3, 8, 5), (7, 16, 11), (9, 10, 13), (17, 12, 15)],           // M/N tails
+    ];
+    for (fi, family) in families.iter().enumerate() {
+        for &(m, k, n) in family.iter() {
+            let mut rng = muxq::data::prng::SplitMix64::new((fi * 7919 + m * 131 + k * 17 + n) as u64);
+            let mut a = MatI8::zeros(m, k);
+            let mut b = MatI8::zeros(k, n);
+            for v in a.data.iter_mut().chain(b.data.iter_mut()) {
+                *v = (rng.next_below(255) as i32 - 127) as i8;
+            }
+            let want = matmul_i8_triple(&a, &b);
+            for nr in [4usize, 8] {
+                let bp = PackedMatI8::pack_with(&b, nr);
+                for mr in [4usize, 8] {
+                    let mut c = MatI32::zeros(0, 0);
+                    matmul_i8_packed_kernel_into(
+                        &a,
+                        &bp,
+                        &mut c,
+                        ParallelGemm::sequential(),
+                        Kernel::PairI16,
+                        mr,
+                    );
+                    assert_eq!(c.data, want.data, "family {fi} {m}x{k}x{n} tile {mr}x{nr}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_routed_matmul_i8_bit_exact() {
     // dims large enough to sometimes cross the pack-on-the-fly threshold,
     // so both the blocked fallback and the packed route are exercised
@@ -312,6 +379,60 @@ fn prop_muxq_matmul_int_unchanged_by_refactor() {
             format!("diff {} tol {tol}", got.max_abs_diff(&want)),
         )
     });
+}
+
+#[test]
+fn rerouted_muxq_percol_bit_exact_with_scattered_outliers() {
+    // the PerCol zero-copy reroute (pack W once, aux reads outlier rows
+    // out of the packed layout) must be BIT-exact vs the seed-reference
+    // gather formulation: integer GEMMs are exact and the dequant /
+    // recombination run the identical f32 op sequence. Exercise
+    // deliberately non-contiguous outlier index sets, including
+    // odd-cardinality ones (the pair kernel's index-tail step). The
+    // 32x36x120 shape clears the pack-amortization bar (m >= 16,
+    // m*k*n >= 2^17), so the packed route — not the gather fallback —
+    // is what runs.
+    let p = MuxqParams::default();
+    for (seed, out_cols) in [
+        (11u64, &[0usize, 5, 6, 19][..]),    // first column + a run + a stray
+        (12, &[3, 17, 18, 22, 29][..]),      // odd cardinality
+        (13, &[35][..]),                     // single outlier, last column
+        (14, &[1, 2, 3, 4, 5, 6, 7, 8][..]), // dense block
+    ] {
+        let mut rng = muxq::data::prng::SplitMix64::new(seed);
+        let mut x = MatF32::from_vec(
+            32,
+            36,
+            (0..32 * 36).map(|_| (rng.next_f64() as f32 - 0.5) * 4.0).collect(),
+        )
+        .unwrap();
+        for r in 0..x.rows {
+            for &c in out_cols {
+                *x.at_mut(r, c) *= 20.0;
+            }
+        }
+        let w = MatF32::from_vec(
+            36,
+            120,
+            (0..36 * 120).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0).collect(),
+        )
+        .unwrap();
+        let mask = outlier_mask(&x, p.theta);
+        for &c in out_cols {
+            assert!(mask[c], "outlier injection failed at col {c}");
+        }
+        let got =
+            muxq_matmul_int(&x, &w, 127.0, Granularity::PerRow, Granularity::PerCol, &p);
+        let want = muxq_matmul_int_seed_reference(
+            &x,
+            &w,
+            127.0,
+            Granularity::PerRow,
+            Granularity::PerCol,
+            &p,
+        );
+        assert_eq!(got.data, want.data, "seed {seed}: reroute must be bit-exact");
+    }
 }
 
 // ------------------------------------------------------------ batcher
