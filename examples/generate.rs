@@ -1,72 +1,172 @@
-//! Text generation through the quantized serving path: greedy decode via
-//! the `logits` variants — demonstrates that the INT8 MUXQ model still
-//! produces coherent corpus-like text while naive INT quantization (at
-//! low bits) degenerates.
+//! Text generation on the incremental-decode session API
+//! (`gpt2::session`): prefill the prompt ONCE at its TRUE length, then
+//! O(context) decode steps through the per-layer KV caches — replacing
+//! the old fixed-shape path that re-ran the full O(S²) forward for every
+//! token and left-padded short prompts with token 0 (attention attended
+//! over the pad positions, skewing short-prompt logits; sessions take
+//! the true prompt length, so that bug is gone by construction).
+//!
+//! By default each variant's text is replayed against its full-forward
+//! oracle (the pre-refactor O(S²) algorithm, minus the pad bug): the
+//! session path must produce IDENTICAL tokens while paying per-token
+//! cost that does not grow with the number of generated tokens.
 //!
 //!     cargo run --release --example generate
-//!     cargo run --release --example generate -- --ia-bits 6 --steps 48
+//!     cargo run --release --example generate -- --method muxq --steps 48
+//!     cargo run --release --example generate -- --no-check
 
 use anyhow::Result;
-use muxq::coordinator::{VariantKey, VariantRegistry};
 use muxq::data::bpe::Bpe;
+use muxq::gpt2::{argmax, DecodeSession, Gpt2Model, IntMethod, QuantizedGpt2, WrapPolicy};
 use muxq::util::cli::Cli;
+use std::time::Instant;
+
+/// Greedy decode through a session; returns (tokens, prefill_ms,
+/// first-half ms/token, second-half ms/token).
+fn generate_session(
+    sess: &mut DecodeSession<'_>,
+    prompt: &[u32],
+    steps: usize,
+) -> Result<(Vec<u32>, f64, f64, f64)> {
+    let t0 = Instant::now();
+    let logits = sess.prefill(prompt)?;
+    let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let mut out = Vec::with_capacity(steps);
+    let mut next = argmax(&logits);
+    let mut half_ms = [0.0f64; 2];
+    let half = steps.div_ceil(2).max(1);
+    for i in 0..steps {
+        out.push(next);
+        if i + 1 == steps {
+            break;
+        }
+        let t = Instant::now();
+        let logits = sess.decode_step(next)?;
+        half_ms[i / half] += t.elapsed().as_secs_f64() * 1e3;
+        next = argmax(&logits);
+    }
+    let first = half_ms[0] / half.min(steps.saturating_sub(1)).max(1) as f64;
+    let second = half_ms[1] / steps.saturating_sub(1 + half).max(1) as f64;
+    Ok((out, prefill_ms, first, second))
+}
+
+/// The pre-refactor algorithm (full forward per token, O(S²) total) at
+/// the session's semantics — the oracle the session must match
+/// bit-for-bit while the context fits `n_ctx`.
+fn generate_full_oracle(
+    fp: &Gpt2Model,
+    int: Option<&QuantizedGpt2>,
+    prompt: &[u32],
+    steps: usize,
+) -> Result<(Vec<u32>, f64)> {
+    let mut ctx = prompt.to_vec();
+    let mut out = Vec::with_capacity(steps);
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        let logits = match int {
+            None => fp.forward(&[ctx.clone()], None, None)?,
+            Some(q) => q.forward_logits_session(&[ctx.clone()])?,
+        };
+        let next = argmax(logits.row(ctx.len() - 1));
+        out.push(next);
+        ctx.push(next);
+    }
+    let per_tok_ms = t0.elapsed().as_secs_f64() * 1e3 / steps.max(1) as f64;
+    Ok((out, per_tok_ms))
+}
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let p = Cli::new("generate", "greedy decode through quantized variants")
-        .opt("model", "sim-small", "model")
+    let p = Cli::new("generate", "greedy decode on the KV-cache session API")
+        .opt("model", "sim-small", "model (artifacts; falls back to a seeded test model)")
         .opt("prompt", "= Kamiro =\n\n", "prompt text")
         .opt("steps", "32", "tokens to generate")
-        .opt("ia-bits", "8", "activation bits")
+        .opt("ia-bits", "8", "activation bits for the INT variants")
+        .opt("method", "all", "fp32 | naive | muxq | all")
+        .flag("no-check", "skip the full-forward oracle replay")
         .parse(&args)?;
+    let steps = p.get_usize("steps")?;
+    let ia_bits = p.get_f64("ia-bits")? as u32;
+    let method = p.get("method").to_string();
+    if !["all", "fp32", "naive", "muxq"].contains(&method.as_str()) {
+        anyhow::bail!("unknown --method {method:?} (expected fp32 | naive | muxq | all)");
+    }
+    let check = !p.flag("no-check");
 
     let artifacts = muxq::artifacts_dir();
-    let bpe = Bpe::load(artifacts.join("corpus").join("tokenizer.bpe"))?;
-    let registry = VariantRegistry::open_default()?;
-    let model = p.get("model");
-    let steps = p.get_usize("steps")?;
-    let ia_bits = p.get_f64("ia-bits")? as f32;
-
-    for tag in ["fp16-pt", "muxq-pt"] {
-        let key = VariantKey::logits(model, tag);
-        let Some(meta) = registry.meta(&key) else {
-            println!("(no logits variant {tag}, skipping)");
-            continue;
-        };
-        let (batch, seq) = (meta.batch, meta.seq);
-        let vocab = bpe.vocab_size();
-        let compiled = registry.get(&key)?;
-
-        let mut ids: Vec<i32> = bpe.encode(p.get("prompt")).iter().map(|&t| t as i32).collect();
-        for _ in 0..steps {
-            // right-align the context into a fixed [batch, seq] block
-            // (rows 1.. are padding copies of row 0)
-            let ctx: Vec<i32> = if ids.len() >= seq {
-                ids[ids.len() - seq..].to_vec()
-            } else {
-                let mut c = vec![0i32; seq - ids.len()];
-                c.extend_from_slice(&ids);
-                c
-            };
-            let pos = ids.len().min(seq) - 1; // last real position
-            let mut block = Vec::with_capacity(batch * seq);
-            for _ in 0..batch {
-                block.extend_from_slice(&ctx);
-            }
-            let out = compiled.run(&block, ia_bits, 8.0)?;
-            let logits = &out[0].data; // [B,S,V]
-            let row = &logits[pos * vocab..(pos + 1) * vocab];
-            let next = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.total_cmp(b.1))
-                .map(|(i, _)| i as i32)
-                .unwrap();
-            ids.push(next);
+    let (fp, bpe) = match Gpt2Model::load_from_artifacts(p.get("model")) {
+        Ok(m) => (m, Bpe::load(artifacts.join("corpus").join("tokenizer.bpe")).ok()),
+        Err(e) => {
+            println!("(no artifacts: {e:#}; using a seeded test model, token-id output)\n");
+            (Gpt2Model::test_model(4, 128, 4, 128, 512, 7), None)
         }
-        let text = bpe.decode(&ids.iter().map(|&t| t as u32).collect::<Vec<_>>());
-        println!("--- {model} [{tag}] ia_bits={ia_bits} ---");
-        println!("{text}\n");
+    };
+    let vocab = fp.cfg.vocab_size as u32;
+    let prompt: Vec<u32> = match &bpe {
+        Some(b) => b.encode(p.get("prompt")),
+        None => p.get("prompt").bytes().map(|b| b as u32 % vocab).collect(),
+    };
+    println!(
+        "model {} (ctx {}), prompt {} tokens, {steps} steps\n",
+        fp.cfg.name, fp.cfg.n_ctx, prompt.len()
+    );
+
+    let variants: Vec<(&str, Option<IntMethod>)> = vec![
+        ("fp32", None),
+        ("naive-int8", Some(IntMethod::Naive)),
+        ("muxq-int8", Some(IntMethod::Muxq)),
+    ];
+    for (name, im) in variants {
+        let selected = method == "all"
+            || match im {
+                None => method == "fp32",
+                Some(IntMethod::Naive) => method == "naive",
+                Some(IntMethod::Muxq) => method == "muxq",
+            };
+        if !selected {
+            continue;
+        }
+        // the quantized model must outlive the session borrowing it
+        let q = im.map(|m| QuantizedGpt2::new(fp.clone(), m, ia_bits, 8));
+        let mut sess = match &q {
+            None => fp.session(WrapPolicy::default()),
+            Some(qq) => qq.session(WrapPolicy::default()),
+        };
+        let (tokens, prefill_ms, first_ms, second_ms) =
+            generate_session(&mut sess, &prompt, steps)?;
+        println!("--- {name} (ia_bits {ia_bits}) ---");
+        println!(
+            "prefill {prefill_ms:.2}ms   decode {first_ms:.3}ms/tok (first half) \
+             {second_ms:.3}ms/tok (second half)   re-prefills {}",
+            sess.state.prefills().saturating_sub(1)
+        );
+        match &bpe {
+            Some(b) => {
+                let mut text: Vec<u32> = prompt.clone();
+                text.extend_from_slice(&tokens);
+                println!("{}", b.decode(&text));
+            }
+            None => println!("tokens: {tokens:?}"),
+        }
+        if check {
+            // oracle comparison only while the context fits n_ctx (past
+            // that the oracle itself cannot run in one forward)
+            let oracle_steps = steps.min(fp.cfg.n_ctx.saturating_sub(prompt.len().min(fp.cfg.n_ctx)));
+            if oracle_steps > 0 {
+                let (want, full_ms) =
+                    generate_full_oracle(&fp, q.as_ref(), &prompt, oracle_steps)?;
+                assert_eq!(
+                    &tokens[..oracle_steps],
+                    &want[..],
+                    "{name}: session decode diverged from the full-forward oracle"
+                );
+                println!(
+                    "oracle replay: first {oracle_steps} tokens identical \u{2713}  \
+                     (full forward paid {full_ms:.3}ms/tok and grows with length)"
+                );
+            }
+        }
+        println!();
     }
     Ok(())
 }

@@ -1,7 +1,10 @@
 //! GEMM benchmarks: the microkernel generations (i16 pair-accumulation
 //! vs PR-1 wide-i32 vs seed kernel) across the register-tile grid,
-//! thread scaling, the quantize-compute-dequant pipelines of each method,
-//! and end-to-end `nll_per_seq` throughput through the true-INT pipeline.
+//! thread scaling, the skinny-M decode GEMV vs the tile cascade, the
+//! quantize-compute-dequant pipelines of each method, end-to-end
+//! `nll_per_seq` throughput through the true-INT pipeline, and
+//! incremental decode tokens/s through the KV-cache session API
+//! (`decode_tok_s` — the latency-bound serving number).
 //! (The NPU projection lives in bench_npusim / npu_latency.)
 //!
 //! Run: `cargo bench --bench bench_gemm`. Writes the perf-trajectory
@@ -10,13 +13,14 @@
 //! rust/scripts/ci_check.sh).
 
 use muxq::data::prng::SplitMix64;
-use muxq::gpt2::{Gpt2Model, IntMethod, QuantizedGpt2};
+use muxq::gpt2::{argmax, Gpt2Model, IntMethod, QuantizedGpt2, WrapPolicy};
 use muxq::quant::gemm::{matmul_f32, quant_matmul};
 use muxq::quant::llmint8::llmint8_matmul;
 use muxq::quant::matrix::{MatI32, MatI8};
 use muxq::quant::muxq::{muxq_matmul_int, MuxqParams};
 use muxq::quant::packed::{
-    matmul_i8_packed_kernel_into, matmul_i8_packed_with, Kernel, PackedMatI8, ParallelGemm,
+    matmul_i8_gemv_into, matmul_i8_packed_kernel_into, matmul_i8_packed_with, Kernel,
+    PackedMatI8, ParallelGemm,
 };
 use muxq::quant::{Granularity, MatF32};
 use muxq::util::bench::Bencher;
@@ -152,6 +156,39 @@ fn main() {
         wide44_ms / pair_best_ms
     );
 
+    // ---- skinny-M decode GEMV vs the register-tile cascade ----
+    // the per-token decode projection is M=1 against a pre-packed weight;
+    // the GEMV path drops the A-interleave copy and tile dispatch the
+    // cascade pays per call
+    Bencher::header(&format!("skinny-M decode path ({gk}x{gn} packed weight, 1 thread)"));
+    let bp_dec = PackedMatI8::pack(&wq);
+    let mut gemv_m1_us = 0.0f64;
+    let mut gemv_vs_cascade_m1 = 0.0f64;
+    for m in [1usize, 4] {
+        let xs = rand_i8(m, gk, 40 + m as u64);
+        let cas_us = b
+            .bench(&format!("tile_cascade/m={m}"), || {
+                matmul_i8_packed_kernel_into(&xs, &bp_dec, &mut acc, seq, Kernel::Auto, 4);
+                acc.data[0]
+            })
+            .mean
+            .as_secs_f64()
+            * 1e6;
+        let gemv_us = b
+            .bench(&format!("gemv/m={m}"), || {
+                matmul_i8_gemv_into(&xs, &bp_dec, &mut acc, Kernel::Auto);
+                acc.data[0]
+            })
+            .mean
+            .as_secs_f64()
+            * 1e6;
+        if m == 1 {
+            gemv_m1_us = gemv_us;
+            gemv_vs_cascade_m1 = cas_us / gemv_us;
+        }
+    }
+    println!("\ngemv m=1: {gemv_m1_us:.1}us ({gemv_vs_cascade_m1:.2}x vs tile cascade)");
+
     // ---- quantize-compute-dequant pipelines per method ----
     for (m, k, n, label) in [
         (256, 512, 512, "c_fc-like 256x512x512"),
@@ -211,12 +248,59 @@ fn main() {
         println!("nll_per_seq/{name}: {tok_s:.0} tokens/s");
     }
 
+    // ---- incremental decode tokens/s (session API) ----
+    // steady-state single-session decode through the KV cache (Slide
+    // policy: fixed window, no re-prefill spikes inside the timing
+    // loop), against the O(S^2)-per-token full re-forward the old
+    // generate path paid. Decode cost is per-STEP, independent of how
+    // many tokens were already generated.
+    Bencher::header("incremental decode (2L d=128 n_ctx=64, 16-token prompt)");
+    let prompt: Vec<u32> = {
+        let mut rng = SplitMix64::new(31);
+        (0..16).map(|_| rng.next_below(128) as u32).collect()
+    };
+    let mut decode_tok_s = [0.0f64; 2]; // [fp32, muxq]
+    for (slot, label, int) in [(0usize, "fp32", None), (1, "muxq", Some(IntMethod::Muxq))] {
+        let fp = Gpt2Model::test_model(2, 128, 2, 64, 128, 7);
+        let q = int.map(|m| QuantizedGpt2::new(fp.clone(), m, 8, 8));
+        let mut sess = match &q {
+            None => fp.session(WrapPolicy::Slide),
+            Some(qq) => qq.session(WrapPolicy::Slide),
+        };
+        let mut next = argmax(&sess.prefill(&prompt).unwrap());
+        let stats = b.bench(&format!("decode_step/{label}"), || {
+            let l = sess.decode_step(next).unwrap();
+            next = argmax(&l);
+            next
+        });
+        decode_tok_s[slot] = stats.per_sec();
+    }
+    // the pre-refactor comparator: one token costs a FULL forward over
+    // the whole 32-token context (and grows as the context grows)
+    let fp_full = Gpt2Model::test_model(2, 128, 2, 64, 128, 7);
+    let q_full = QuantizedGpt2::new(fp_full.clone(), IntMethod::Muxq, 8, 8);
+    let ctx32: Vec<Vec<u32>> = {
+        let mut rng = SplitMix64::new(32);
+        vec![(0..32).map(|_| rng.next_below(128) as u32).collect()]
+    };
+    let full_stats =
+        b.bench("full_forward_per_token/muxq (S=32)", || {
+            q_full.forward_logits_session(&ctx32).unwrap().data[0]
+        });
+    let full_tok_s = full_stats.per_sec();
+    let decode_vs_full = decode_tok_s[1] / full_tok_s;
+    println!(
+        "\ndecode fp32 {:.0} tok/s   muxq {:.0} tok/s   vs full re-forward {:.0} tok/s \
+         ({decode_vs_full:.1}x, growing with S)",
+        decode_tok_s[0], decode_tok_s[1], full_tok_s
+    );
+
     // ---- perf-trajectory record ----
     // packed_*_ms track the auto-routed engine (tile-selected pair
     // kernel); wide44_1t_ms pins the PR-1 comparator so the
     // pair-vs-wide trajectory stays measurable across PRs.
     let json = format!(
-        "{{\n  \"bench\": \"bench_gemm\",\n  \"bootstrap\": false,\n  \"shape\": [{gm}, {gk}, {gn}],\n  \"seed_i8_ms\": {seed_ms:.4},\n  \"packed_1t_ms\": {:.4},\n  \"packed_2t_ms\": {:.4},\n  \"packed_4t_ms\": {:.4},\n  \"speedup_vs_seed_1t\": {:.3},\n  \"scaling_1t_to_4t\": {:.3},\n  \"gops_packed_1t\": {:.3},\n  \"pair_best_ms\": {pair_best_ms:.4},\n  \"pair_best_tile\": \"{best_mr}x{best_nr}\",\n  \"wide44_1t_ms\": {wide44_ms:.4},\n  \"pair_vs_wide44\": {:.3},\n  \"e2e_naive_tok_per_s\": {:.1},\n  \"e2e_muxq_tok_per_s\": {:.1}\n}}\n",
+        "{{\n  \"bench\": \"bench_gemm\",\n  \"bootstrap\": false,\n  \"shape\": [{gm}, {gk}, {gn}],\n  \"seed_i8_ms\": {seed_ms:.4},\n  \"packed_1t_ms\": {:.4},\n  \"packed_2t_ms\": {:.4},\n  \"packed_4t_ms\": {:.4},\n  \"speedup_vs_seed_1t\": {:.3},\n  \"scaling_1t_to_4t\": {:.3},\n  \"gops_packed_1t\": {:.3},\n  \"pair_best_ms\": {pair_best_ms:.4},\n  \"pair_best_tile\": \"{best_mr}x{best_nr}\",\n  \"wide44_1t_ms\": {wide44_ms:.4},\n  \"pair_vs_wide44\": {:.3},\n  \"gemv_m1_us\": {gemv_m1_us:.2},\n  \"gemv_vs_cascade_m1\": {gemv_vs_cascade_m1:.3},\n  \"e2e_naive_tok_per_s\": {:.1},\n  \"e2e_muxq_tok_per_s\": {:.1},\n  \"decode_tok_s_fp\": {:.1},\n  \"decode_tok_s\": {:.1},\n  \"full_forward_tok_s\": {full_tok_s:.1},\n  \"decode_vs_full_speedup\": {decode_vs_full:.2}\n}}\n",
         per_thread_ms[0].1,
         per_thread_ms[1].1,
         per_thread_ms[2].1,
@@ -226,6 +310,8 @@ fn main() {
         wide44_ms / pair_best_ms,
         e2e_tok_s[0].1,
         e2e_tok_s[1].1,
+        decode_tok_s[0],
+        decode_tok_s[1],
     );
     let path =
         std::env::var("MUXQ_BENCH_JSON").unwrap_or_else(|_| "BENCH_gemm.json".to_string());

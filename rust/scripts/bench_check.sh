@@ -55,9 +55,28 @@ if cur_ms > old_ms * 1.25:
     sys.exit(1)
 
 print(f"OK: packed_1t {cur_ms:.3f}ms vs baseline {old_ms:.3f}ms")
+
+# decode throughput gate (tokens/s: HIGHER is better). Baselines recorded
+# before the decode subsystem existed lack the field - skip until the
+# first post-decode baseline lands.
+old_tok = base.get("decode_tok_s")
+new_tok = new.get("decode_tok_s")
+if old_tok is not None and new_tok is not None:
+    if new_tok < old_tok * 0.8:
+        print(f"FAIL: decode_tok_s {new_tok:.0f} vs baseline {old_tok:.0f} "
+              f"(>{(1 - new_tok/old_tok)*100:.0f}% slower)")
+        sys.exit(1)
+    print(f"OK: decode_tok_s {new_tok:.0f} vs baseline {old_tok:.0f}")
+
 # only advance the baseline on improvement — advancing on any pass would
-# let sub-threshold regressions ratchet the gate down indefinitely
-if cur_ms < old_ms:
+# let sub-threshold regressions ratchet the gate down indefinitely. The
+# copy replaces the WHOLE file, so every gated metric must be no worse
+# (else a packed win would smuggle in a sub-threshold decode regression
+# as the new decode baseline).
+decode_no_worse = old_tok is None or new_tok is None or new_tok >= old_tok
+if cur_ms < old_ms and decode_no_worse:
     print("new best; advancing baseline")
     shutil.copy(new_path, baseline_path)
+elif cur_ms < old_ms:
+    print("packed improved but decode_tok_s did not; keeping old baseline")
 EOF

@@ -40,6 +40,17 @@ cargo build --release "${MANIFEST_ARGS[@]}"
 echo "== cargo test -q"
 cargo test -q "${MANIFEST_ARGS[@]}"
 
+echo "== cargo clippy --all-targets (-D warnings)"
+# deliberate idioms of the kernel code, allowed rather than rewritten:
+# index-heavy loops (readability of the tile math) and the microkernel
+# signatures that thread many operands
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets "${MANIFEST_ARGS[@]}" -- -D warnings \
+        -A clippy::needless_range_loop -A clippy::too_many_arguments
+else
+    echo "WARN: clippy not installed on this host; skipping lint gate" >&2
+fi
+
 echo "== cargo doc --no-deps (-D warnings: broken intra-doc links fail)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps "${MANIFEST_ARGS[@]}"
 

@@ -1,12 +1,20 @@
-//! Dynamic batcher: coalesces single-sequence scoring requests into the
-//! fixed-shape batches the compiled variants expect (vLLM-style
-//! max-batch / max-wait policy).
+//! Dynamic batching for both serving planes:
 //!
-//! Batch compatibility: a batch shares (variant, ia_bits, w_bits) because
-//! bit-widths are per-execution scalars. Underfull batches are padded by
-//! repeating the first row; padded rows are dropped on the way out.
+//! * [`Batcher`] — coalesces one-shot scoring requests into the
+//!   fixed-shape batches the compiled variants expect (vLLM-style
+//!   max-batch / max-wait policy). Batch compatibility: a batch shares
+//!   (variant, ia_bits, w_bits) because bit-widths are per-execution
+//!   scalars. Underfull batches are padded by repeating the first row;
+//!   padded rows are dropped on the way out.
+//! * [`DecodeQueue`] — the admission side of *continuous token-level
+//!   batching* for generation: requests wait here only until the decode
+//!   scheduler (`coordinator::generation`) has a free session slot. The
+//!   actual batching is continuous — live sessions coalesce into one
+//!   skinny decode GEMM per step, and new sessions are prefill-admitted
+//!   *between* steps, never queued behind an in-flight batch — so there
+//!   is no max-wait knob, only backpressure ([`AdmitError::QueueFull`]).
 
-use super::request::Pending;
+use super::request::{Pending, PendingGen};
 use super::variants::VariantKey;
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Condvar, Mutex};
@@ -165,6 +173,93 @@ impl Batcher {
     }
 }
 
+/// Outcome of a [`DecodeQueue::pop`].
+pub enum DecodePop {
+    /// a request to prefill-admit
+    Req(PendingGen),
+    /// nothing queued (non-blocking pop, or spurious wake)
+    Empty,
+    /// queue shut down and fully drained
+    Shutdown,
+}
+
+/// Admission queue for generation sessions (see module docs). `push` is
+/// called by the generation server's submit path; `pop` by the decode
+/// scheduler — blocking when it has no live sessions to advance,
+/// non-blocking between decode steps.
+pub struct DecodeQueue {
+    max_queue: usize,
+    state: Mutex<GenState>,
+    nonempty: Condvar,
+}
+
+struct GenState {
+    queue: VecDeque<PendingGen>,
+    shutdown: bool,
+}
+
+impl DecodeQueue {
+    pub fn new(max_queue: usize) -> DecodeQueue {
+        DecodeQueue {
+            max_queue,
+            state: Mutex::new(GenState { queue: VecDeque::new(), shutdown: false }),
+            nonempty: Condvar::new(),
+        }
+    }
+
+    pub fn push(&self, p: PendingGen) -> Result<(), AdmitError> {
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown {
+            return Err(AdmitError::Shutdown);
+        }
+        if st.queue.len() >= self.max_queue {
+            return Err(AdmitError::QueueFull);
+        }
+        st.queue.push_back(p);
+        self.nonempty.notify_one();
+        Ok(())
+    }
+
+    pub fn queued(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    pub fn shutdown(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.shutdown = true;
+        self.nonempty.notify_all();
+    }
+
+    /// Next request to admit. `block == false` (the between-steps probe)
+    /// returns immediately; `block == true` (no live sessions) waits for
+    /// work or shutdown. Shutdown reports immediately — decode shutdown
+    /// stops at the next step boundary; the scheduler fails whatever is
+    /// still queued via [`DecodeQueue::drain_remaining`] rather than
+    /// paying a prefill per doomed request.
+    pub fn pop(&self, block: bool) -> DecodePop {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.shutdown {
+                return DecodePop::Shutdown;
+            }
+            if let Some(p) = st.queue.pop_front() {
+                return DecodePop::Req(p);
+            }
+            if !block {
+                return DecodePop::Empty;
+            }
+            st = self.nonempty.wait(st).unwrap();
+        }
+    }
+
+    /// Take every request still queued (used by the scheduler after
+    /// shutdown to send each a terminal event).
+    pub fn drain_remaining(&self) -> Vec<PendingGen> {
+        let mut st = self.state.lock().unwrap();
+        st.queue.drain(..).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -250,6 +345,61 @@ mod tests {
         b.push(key(), p1).unwrap();
         b.push(key(), p2).unwrap();
         assert_eq!(b.push(key(), p3), Err(AdmitError::QueueFull));
+    }
+
+    fn pending_gen() -> (PendingGen, mpsc::Receiver<crate::coordinator::request::TokenEvent>) {
+        use crate::coordinator::request::GenerateRequest;
+        let (tx, rx) = mpsc::channel();
+        (
+            PendingGen {
+                req: GenerateRequest { prompt: vec![1, 2, 3], max_new_tokens: 4 },
+                submitted: Instant::now(),
+                tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn decode_queue_fifo_and_backpressure() {
+        let q = DecodeQueue::new(2);
+        let (p1, _r1) = pending_gen();
+        let (p2, _r2) = pending_gen();
+        let (p3, _r3) = pending_gen();
+        q.push(p1).unwrap();
+        q.push(p2).unwrap();
+        assert!(matches!(q.push(p3), Err(AdmitError::QueueFull)));
+        assert_eq!(q.queued(), 2);
+        assert!(matches!(q.pop(false), DecodePop::Req(_)));
+        assert!(matches!(q.pop(false), DecodePop::Req(_)));
+        assert!(matches!(q.pop(false), DecodePop::Empty));
+    }
+
+    #[test]
+    fn decode_queue_shutdown_is_immediate() {
+        let q = DecodeQueue::new(8);
+        let (p, _r) = pending_gen();
+        q.push(p).unwrap();
+        q.shutdown();
+        let (p2, _r2) = pending_gen();
+        assert!(matches!(q.push(p2), Err(AdmitError::Shutdown)));
+        // shutdown wins over queued work (no prefill for doomed requests);
+        // the leftover is recovered explicitly for terminal events
+        assert!(matches!(q.pop(true), DecodePop::Shutdown));
+        assert_eq!(q.drain_remaining().len(), 1);
+        assert_eq!(q.queued(), 0);
+        assert!(matches!(q.pop(false), DecodePop::Shutdown));
+    }
+
+    #[test]
+    fn decode_queue_blocking_pop_wakes_on_push() {
+        let q = std::sync::Arc::new(DecodeQueue::new(8));
+        let q2 = q.clone();
+        let waiter = std::thread::spawn(move || matches!(q2.pop(true), DecodePop::Req(_)));
+        std::thread::sleep(Duration::from_millis(20));
+        let (p, _r) = pending_gen();
+        q.push(p).unwrap();
+        assert!(waiter.join().unwrap());
     }
 
     #[test]

@@ -1,0 +1,524 @@
+//! Token-level generation serving: continuous batching over the native
+//! incremental-decode engine (`gpt2::session`).
+//!
+//! ```text
+//! client ──submit──> GenerationServer (admission, backpressure)
+//!    ──> DecodeQueue ──> decode scheduler (one thread, owns the model):
+//!          loop {
+//!            admit new sessions while slots free (PREFILL, between steps)
+//!            decode_step_batch over ALL live sessions   <- ONE skinny GEMM
+//!            per session: argmax -> stream TokenEvent, retire at budget
+//!          }
+//! ```
+//!
+//! This is the latency-bound regime the paper's uniform-INT argument
+//! targets: per-step projections are M=G skinny GEMMs (M=1..4 routes to
+//! the packed engine's GEMV path) and memory-bound — see
+//! `npusim::decode_cost`. Because the session projection is
+//! row-independent (`gpt2::quantized`), coalescing G sessions into one
+//! GEMM returns per-session logits bit-identical to stepping each alone:
+//! continuous batching changes throughput, never results.
+//!
+//! Contrast with the scoring plane (`scheduler`): scoring coalesces
+//! one-shot fixed-shape requests and runs them on compiled PJRT
+//! variants; generation holds stateful sessions over the native packed
+//! INT engine and interleaves prefill admission with decode steps.
+
+use super::batcher::{AdmitError, DecodePop, DecodeQueue};
+use super::request::{FinishReason, GenerateHandle, GenerateRequest, PendingGen, TokenEvent};
+use crate::gpt2::session::{argmax, decode_step_batch, SessionModel, SessionState, WrapPolicy};
+use crate::gpt2::{Gpt2Model, QuantizedGpt2};
+use crate::util::metrics::Registry;
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// The model a generation server decodes with (owned; the scheduler
+/// thread is the only toucher, sessions borrow it there).
+pub enum GenBackend {
+    Fp(Gpt2Model),
+    Int(QuantizedGpt2),
+}
+
+impl GenBackend {
+    fn session_model(&self) -> SessionModel<'_> {
+        match self {
+            GenBackend::Fp(m) => SessionModel::Fp(m),
+            GenBackend::Int(q) => SessionModel::Int(q),
+        }
+    }
+
+    pub fn gpt(&self) -> &Gpt2Model {
+        match self {
+            GenBackend::Fp(m) => m,
+            GenBackend::Int(q) => &q.fp,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GenerationConfig {
+    /// live-session cap == the decode batch width ceiling
+    pub max_live: usize,
+    /// admission backpressure: max requests waiting for a slot
+    pub max_queue: usize,
+    /// server-side ceiling on tokens per request (requests asking for 0
+    /// get exactly this)
+    pub max_new_tokens: usize,
+    /// context-overflow policy for every session
+    pub wrap: WrapPolicy,
+}
+
+impl Default for GenerationConfig {
+    fn default() -> Self {
+        GenerationConfig {
+            max_live: 8,
+            max_queue: 256,
+            max_new_tokens: 128,
+            wrap: WrapPolicy::Reprefill { keep: 0 },
+        }
+    }
+}
+
+/// Point-in-time statistics snapshot.
+#[derive(Debug, Clone)]
+pub struct GenerationStats {
+    pub submitted: u64,
+    pub rejected: u64,
+    /// requests that reached their token budget
+    pub completed: u64,
+    /// requests whose client dropped the handle mid-stream (observable
+    /// only here — the dropped receiver can't be sent a terminal event)
+    pub cancelled: u64,
+    /// requests cut by shutdown (queued or live)
+    pub shutdown_cut: u64,
+    /// prefills that failed admission (bad prompt) — their streams ended
+    /// with `TokenEvent::Error`
+    pub admit_errors: u64,
+    /// coalesced decode steps that failed (poisoning their sessions)
+    pub decode_errors: u64,
+    pub tokens_generated: u64,
+    pub decode_batches: u64,
+    /// session-rows across all decode batches (fill = rows / batches)
+    pub decode_rows: u64,
+    /// prefill passes (admissions + wrap re-prefills)
+    pub prefills: u64,
+    /// prompts longer than n_ctx, truncated at admission
+    pub prompts_truncated: u64,
+    pub queued_now: usize,
+}
+
+impl GenerationStats {
+    /// Mean live sessions per decode step — how full the continuous
+    /// batch ran.
+    pub fn batch_fill(&self) -> f64 {
+        if self.decode_batches == 0 {
+            return 0.0;
+        }
+        self.decode_rows as f64 / self.decode_batches as f64
+    }
+}
+
+/// One live session inside the scheduler.
+struct Live {
+    state: SessionState,
+    /// last emitted token == the next decode input
+    next: u32,
+    produced: usize,
+    budget: usize,
+    /// session prefill passes already reflected in the metrics registry
+    /// (wrap re-prefills happen inside decode steps; the delta is
+    /// harvested after each step)
+    prefills_seen: u64,
+    tx: mpsc::Sender<TokenEvent>,
+    t0: Instant,
+}
+
+/// The generation server: spawn with [`GenerationServer::start`], feed
+/// it [`GenerateRequest`]s, read streamed tokens off the returned
+/// [`GenerateHandle`]s. One server per deployed model/method (the
+/// scoring coordinator's multi-variant registry is the other plane).
+pub struct GenerationServer {
+    queue: Arc<DecodeQueue>,
+    metrics: Arc<Registry>,
+    running: Arc<AtomicBool>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl GenerationServer {
+    pub fn start(backend: GenBackend, cfg: GenerationConfig) -> GenerationServer {
+        // a zero-width batch could never admit, so the scheduler would
+        // never reach the queue (or see its shutdown) — clamp like
+        // max_queue below
+        let cfg = GenerationConfig { max_live: cfg.max_live.max(1), ..cfg };
+        let queue = Arc::new(DecodeQueue::new(cfg.max_queue.max(1)));
+        let metrics = Arc::new(Registry::default());
+        let running = Arc::new(AtomicBool::new(true));
+        let worker = {
+            let queue = queue.clone();
+            let metrics = metrics.clone();
+            std::thread::Builder::new()
+                .name("muxq-decode".into())
+                .spawn(move || scheduler_loop(backend, cfg, queue, metrics))
+                .expect("spawn decode scheduler")
+        };
+        GenerationServer { queue, metrics, running, worker: Some(worker) }
+    }
+
+    /// Submit a generation request; returns the token stream handle.
+    pub fn submit(&self, req: GenerateRequest) -> Result<GenerateHandle> {
+        self.metrics.counter("submitted").inc();
+        if !self.running.load(Ordering::SeqCst) {
+            self.metrics.counter("rejected").inc();
+            return Err(anyhow!("generation server is shut down"));
+        }
+        if req.prompt.is_empty() {
+            self.metrics.counter("rejected").inc();
+            return Err(anyhow!("empty prompt"));
+        }
+        let (tx, rx) = mpsc::channel();
+        match self.queue.push(PendingGen { req, submitted: Instant::now(), tx }) {
+            Ok(()) => Ok(GenerateHandle { rx }),
+            Err(AdmitError::QueueFull) => {
+                self.metrics.counter("rejected").inc();
+                Err(anyhow!("generation queue full (backpressure)"))
+            }
+            Err(AdmitError::Shutdown) => {
+                self.metrics.counter("rejected").inc();
+                Err(anyhow!("generation server is shut down"))
+            }
+        }
+    }
+
+    /// Convenience: submit + drain the stream.
+    pub fn generate(&self, req: GenerateRequest) -> Result<Vec<u32>> {
+        self.submit(req)?.collect_tokens()
+    }
+
+    pub fn metrics(&self) -> &Arc<Registry> {
+        &self.metrics
+    }
+
+    pub fn stats(&self) -> GenerationStats {
+        let c = |name: &str| self.metrics.counter(name).get();
+        GenerationStats {
+            submitted: c("submitted"),
+            rejected: c("rejected"),
+            completed: c("completed"),
+            cancelled: c("cancelled"),
+            shutdown_cut: c("shutdown_cut"),
+            admit_errors: c("admit_errors"),
+            decode_errors: c("decode_errors"),
+            tokens_generated: c("tokens_generated"),
+            decode_batches: c("decode_batches"),
+            decode_rows: c("decode_rows"),
+            prefills: c("prefills"),
+            prompts_truncated: c("prompts_truncated"),
+            queued_now: self.queue.queued(),
+        }
+    }
+
+    /// Stop admitting, cut live sessions at the next step boundary
+    /// (their streams end with `FinishReason::Shutdown`), join the
+    /// scheduler.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.running.store(false, Ordering::SeqCst);
+        self.queue.shutdown();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for GenerationServer {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn scheduler_loop(
+    backend: GenBackend,
+    cfg: GenerationConfig,
+    queue: Arc<DecodeQueue>,
+    metrics: Arc<Registry>,
+) {
+    let sm = backend.session_model();
+    let mut live: Vec<Live> = Vec::new();
+    let mut draining = false;
+    loop {
+        // ---- admission: prefill new sessions between decode steps
+        while !draining && live.len() < cfg.max_live {
+            match queue.pop(live.is_empty()) {
+                DecodePop::Req(p) => admit(sm, &cfg, &metrics, p, &mut live),
+                DecodePop::Empty => break,
+                DecodePop::Shutdown => draining = true,
+            }
+        }
+        if draining {
+            for p in queue.drain_remaining() {
+                metrics.counter("shutdown_cut").inc();
+                let _ = p.tx.send(TokenEvent::Done {
+                    reason: FinishReason::Shutdown,
+                    generated: 0,
+                    latency: p.submitted.elapsed(),
+                });
+            }
+            for l in live.drain(..) {
+                metrics.counter("shutdown_cut").inc();
+                let _ = l.tx.send(TokenEvent::Done {
+                    reason: FinishReason::Shutdown,
+                    generated: l.produced,
+                    latency: l.t0.elapsed(),
+                });
+            }
+            return;
+        }
+        if live.is_empty() {
+            continue; // next admission pop blocks until work or shutdown
+        }
+
+        // ---- one coalesced decode step over every live session
+        let tokens: Vec<u32> = live.iter().map(|l| l.next).collect();
+        let step = {
+            let mut refs: Vec<&mut SessionState> =
+                live.iter_mut().map(|l| &mut l.state).collect();
+            decode_step_batch(sm, &mut refs, &tokens)
+        };
+        match step {
+            Ok(logits) => {
+                metrics.counter("decode_batches").inc();
+                metrics.counter("decode_rows").add(live.len() as u64);
+                let mut keep = Vec::with_capacity(live.len());
+                for (gi, mut l) in live.drain(..).enumerate() {
+                    // harvest wrap re-prefills performed inside this step
+                    let p = l.state.prefills();
+                    if p > l.prefills_seen {
+                        metrics.counter("prefills").add(p - l.prefills_seen);
+                        l.prefills_seen = p;
+                    }
+                    let next = argmax(logits.row(gi));
+                    l.produced += 1;
+                    metrics.counter("tokens_generated").inc();
+                    if l.tx.send(TokenEvent::Token { index: l.produced - 1, token: next }).is_err()
+                    {
+                        // client dropped the handle: cancel the session
+                        metrics.counter("cancelled").inc();
+                        continue;
+                    }
+                    if l.produced >= l.budget {
+                        metrics.counter("completed").inc();
+                        let _ = l.tx.send(TokenEvent::Done {
+                            reason: FinishReason::MaxTokens,
+                            generated: l.produced,
+                            latency: l.t0.elapsed(),
+                        });
+                        continue;
+                    }
+                    l.next = next;
+                    keep.push(l);
+                }
+                live = keep;
+            }
+            Err(e) => {
+                // a failed step poisons every coalesced session equally
+                metrics.counter("decode_errors").inc();
+                for l in live.drain(..) {
+                    let _ = l.tx.send(TokenEvent::Error(format!("decode step failed: {e:#}")));
+                }
+            }
+        }
+    }
+}
+
+fn admit(
+    sm: SessionModel<'_>,
+    cfg: &GenerationConfig,
+    metrics: &Registry,
+    p: PendingGen,
+    live: &mut Vec<Live>,
+) {
+    let gcfg = &sm.gpt().cfg;
+    let asked = if p.req.max_new_tokens == 0 {
+        cfg.max_new_tokens
+    } else {
+        p.req.max_new_tokens.min(cfg.max_new_tokens)
+    };
+    let budget = asked.max(1);
+    if p.req.prompt.len() > gcfg.n_ctx {
+        metrics.counter("prompts_truncated").inc();
+    }
+    let mut state = SessionState::new(gcfg, cfg.wrap);
+    match state.prefill(sm, &p.req.prompt) {
+        Ok(logits) => {
+            metrics.counter("prefills").inc();
+            let first = argmax(&logits);
+            metrics.counter("tokens_generated").inc();
+            if p.tx.send(TokenEvent::Token { index: 0, token: first }).is_err() {
+                metrics.counter("cancelled").inc();
+                return;
+            }
+            if budget == 1 {
+                metrics.counter("completed").inc();
+                let _ = p.tx.send(TokenEvent::Done {
+                    reason: FinishReason::MaxTokens,
+                    generated: 1,
+                    latency: p.submitted.elapsed(),
+                });
+                return;
+            }
+            live.push(Live {
+                prefills_seen: state.prefills(),
+                state,
+                next: first,
+                produced: 1,
+                budget,
+                tx: p.tx,
+                t0: p.submitted,
+            });
+        }
+        Err(e) => {
+            // bad prompt (e.g. out-of-vocab token): fail just this stream
+            metrics.counter("admit_errors").inc();
+            let _ = p.tx.send(TokenEvent::Error(format!("prefill failed: {e:#}")));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpt2::{IntMethod, WrapPolicy};
+
+    fn tiny() -> Gpt2Model {
+        Gpt2Model::test_model(2, 16, 2, 12, 32, 7)
+    }
+
+    fn toks(n: usize, seed: u64) -> Vec<u32> {
+        let mut rng = crate::data::prng::SplitMix64::new(seed);
+        (0..n).map(|_| rng.next_below(32) as u32).collect()
+    }
+
+    fn req(prompt: Vec<u32>, n: usize) -> GenerateRequest {
+        GenerateRequest { prompt, max_new_tokens: n }
+    }
+
+    #[test]
+    fn served_tokens_bit_exact_vs_solo_session() {
+        // the server interleaves prefill admissions with batched decode;
+        // every stream must still equal a solo greedy session
+        let q = QuantizedGpt2::new(tiny(), IntMethod::Muxq, 8, 8);
+        let prompts = [toks(3, 1), toks(6, 2), toks(4, 3)];
+        let mut want = Vec::new();
+        for p in &prompts {
+            let mut s = q.session(WrapPolicy::default());
+            want.push(s.generate_greedy(p, 6).unwrap());
+        }
+        let srv = GenerationServer::start(
+            GenBackend::Int(QuantizedGpt2::new(tiny(), IntMethod::Muxq, 8, 8)),
+            GenerationConfig { max_live: 2, ..Default::default() }, // forces interleaving
+        );
+        let handles: Vec<_> =
+            prompts.iter().map(|p| srv.submit(req(p.clone(), 6)).unwrap()).collect();
+        for (h, w) in handles.into_iter().zip(&want) {
+            assert_eq!(&h.collect_tokens().unwrap(), w);
+        }
+        let st = srv.stats();
+        assert_eq!(st.completed, 3);
+        assert_eq!(st.tokens_generated, 18);
+        assert!(st.decode_batches > 0 && st.batch_fill() >= 1.0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn streams_are_ordered_and_terminated() {
+        let srv = GenerationServer::start(
+            GenBackend::Fp(tiny()),
+            GenerationConfig { max_new_tokens: 4, ..Default::default() },
+        );
+        let h = srv.submit(req(toks(5, 9), 0)).unwrap(); // 0 = server default
+        let mut idx = 0;
+        let mut done = false;
+        while let Some(ev) = h.recv() {
+            match ev {
+                TokenEvent::Token { index, .. } => {
+                    assert_eq!(index, idx);
+                    idx += 1;
+                }
+                TokenEvent::Done { reason, generated, .. } => {
+                    assert_eq!(reason, FinishReason::MaxTokens);
+                    assert_eq!(generated, 4);
+                    done = true;
+                }
+                TokenEvent::Error(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert!(done && idx == 4);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn bad_prompt_fails_only_its_stream() {
+        let srv = GenerationServer::start(GenBackend::Fp(tiny()), GenerationConfig::default());
+        assert!(srv.submit(req(vec![], 4)).is_err(), "empty prompt rejected at submit");
+        let bad = srv.submit(req(vec![999], 4)).unwrap(); // out of vocab
+        let good = srv.submit(req(toks(4, 4), 3)).unwrap();
+        assert!(bad.collect_tokens().is_err());
+        assert_eq!(good.collect_tokens().unwrap().len(), 3);
+        let st = srv.stats();
+        assert_eq!(st.submitted, 3);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn long_prompts_truncate_and_generation_survives_wrap() {
+        let srv = GenerationServer::start(GenBackend::Fp(tiny()), GenerationConfig::default());
+        // prompt longer than n_ctx=12, budget far past the window
+        let h = srv.submit(req(toks(40, 5), 30)).unwrap();
+        assert_eq!(h.collect_tokens().unwrap().len(), 30);
+        let st = srv.stats();
+        assert_eq!(st.prompts_truncated, 1);
+        assert!(st.prefills > 1, "wrap re-prefills counted");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shutdown_cuts_live_sessions_with_reason() {
+        let srv = GenerationServer::start(
+            GenBackend::Fp(tiny()),
+            GenerationConfig { max_new_tokens: 100_000, ..Default::default() },
+        );
+        let h = srv.submit(req(toks(4, 6), 0)).unwrap();
+        // let it produce a few tokens, then pull the plug
+        let first = h.recv();
+        assert!(matches!(first, Some(TokenEvent::Token { index: 0, .. })));
+        srv.shutdown();
+        let mut saw_shutdown = false;
+        while let Some(ev) = h.recv() {
+            if let TokenEvent::Done { reason, .. } = ev {
+                assert_eq!(reason, FinishReason::Shutdown);
+                saw_shutdown = true;
+            }
+        }
+        assert!(saw_shutdown);
+    }
+
+    #[test]
+    fn submit_after_shutdown_rejected() {
+        let srv = GenerationServer::start(GenBackend::Fp(tiny()), GenerationConfig::default());
+        let queue = srv.queue.clone();
+        srv.shutdown();
+        let (tx, _rx) = mpsc::channel();
+        let p = PendingGen {
+            req: req(vec![1], 1),
+            submitted: Instant::now(),
+            tx,
+        };
+        assert!(matches!(queue.push(p), Err(AdmitError::Shutdown)));
+    }
+}

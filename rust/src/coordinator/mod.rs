@@ -1,7 +1,8 @@
 //! L3 — the serving coordinator (rust owns the request path; python never
-//! runs after `make artifacts`).
+//! runs after `make artifacts`). Two serving planes share the admission
+//! machinery:
 //!
-//! Dataflow:
+//! **Scoring** (one-shot, fixed-shape, PJRT):
 //!
 //! ```text
 //! client ──submit──> Coordinator (admission) ──> Batcher (coalesce by
@@ -10,18 +11,34 @@
 //!    per-sequence (nll, count) ──> ResponseHandle
 //! ```
 //!
+//! **Generation** (stateful, token-level, native INT engine):
+//!
+//! ```text
+//! client ──submit──> GenerationServer (admission) ──> DecodeQueue ──>
+//!    decode scheduler (continuous batching: prefill-admit between steps,
+//!    ONE skinny GEMM per step across all live KV-cache sessions) ──>
+//!    streamed TokenEvents ──> GenerateHandle
+//! ```
+//!
 //! * [`variants`] — manifest discovery, lazy compile, device-resident
 //!   weights shared across variants of a model.
-//! * [`batcher`] — dynamic batching with padding + admission control.
-//! * [`request`] — request/response/handle types.
-//! * [`scheduler`] — worker threads executing ready batches.
+//! * [`batcher`] — dynamic batching ([`batcher::Batcher`]) + decode
+//!   admission ([`batcher::DecodeQueue`]).
+//! * [`request`] — request/response/handle types for both planes.
+//! * [`scheduler`] — worker threads executing ready scoring batches.
+//! * [`generation`] — the continuous-batching decode scheduler.
 
 pub mod batcher;
+pub mod generation;
 pub mod request;
 pub mod scheduler;
 pub mod variants;
 
 pub use batcher::{AdmitError, BatcherConfig};
-pub use request::{ResponseHandle, ScoreRequest, ScoreResponse};
+pub use generation::{GenBackend, GenerationConfig, GenerationServer, GenerationStats};
+pub use request::{
+    FinishReason, GenerateHandle, GenerateRequest, ResponseHandle, ScoreRequest, ScoreResponse,
+    TokenEvent,
+};
 pub use scheduler::{Coordinator, CoordinatorConfig, CoordinatorStats};
 pub use variants::{VariantKey, VariantRegistry};

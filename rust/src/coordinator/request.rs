@@ -1,8 +1,11 @@
-//! Request/response types for the serving layer.
+//! Request/response types for the serving layer: one-shot scoring
+//! (`ScoreRequest` → `ScoreResponse`) and streamed token generation
+//! (`GenerateRequest` → a stream of [`TokenEvent`]s through a
+//! [`GenerateHandle`]).
 
 use super::variants::VariantKey;
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// A scoring request: one token sequence to evaluate under a variant at
 /// given bit-widths. Sequences shorter than the compiled `seq` are
@@ -28,7 +31,13 @@ pub struct ScoreResponse {
 }
 
 impl ScoreResponse {
+    /// Perplexity `exp(nll / count)`. An empty window (`count == 0`)
+    /// carries no evidence; report infinite perplexity rather than the
+    /// NaN that `0/0` would silently propagate into aggregate stats.
     pub fn ppl(&self) -> f32 {
+        if self.count <= 0.0 {
+            return f32::INFINITY;
+        }
         (self.nll / self.count).exp()
     }
 }
@@ -52,6 +61,76 @@ pub struct Pending {
     pub tx: mpsc::Sender<anyhow::Result<ScoreResponse>>,
 }
 
+/// A generation request: prefill the prompt, then stream greedy-decoded
+/// tokens. Prompts longer than the model context keep their last
+/// `n_ctx` tokens (recorded in the server stats); the prompt is
+/// processed at its TRUE length — no padding rows.
+#[derive(Debug, Clone)]
+pub struct GenerateRequest {
+    pub prompt: Vec<u32>,
+    /// generation stops after this many tokens (clamped to the server's
+    /// configured ceiling; 0 means "use the server default")
+    pub max_new_tokens: usize,
+}
+
+/// Why a generation stream ended. (Client-side cancellation — dropping
+/// the [`GenerateHandle`] — has no variant: the dropped receiver can't
+/// observe one; it surfaces in the server's `cancelled` stat instead.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// produced `max_new_tokens`
+    MaxTokens,
+    /// server shut down before the budget was reached
+    Shutdown,
+}
+
+/// One event on a generation stream. Tokens arrive strictly in order
+/// (`index` 0, 1, …), terminated by exactly one `Done` or `Error`.
+#[derive(Debug, Clone)]
+pub enum TokenEvent {
+    Token { index: usize, token: u32 },
+    Done { reason: FinishReason, generated: usize, latency: Duration },
+    Error(String),
+}
+
+/// Streaming receiver for one generation request. Dropping it mid-stream
+/// cancels the session at the next decode step.
+pub struct GenerateHandle {
+    pub(crate) rx: mpsc::Receiver<TokenEvent>,
+}
+
+impl GenerateHandle {
+    /// Next event, blocking; `None` once the stream is closed.
+    pub fn recv(&self) -> Option<TokenEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Drain the stream to completion, returning the generated tokens.
+    /// Errors if the stream ended with [`TokenEvent::Error`] or closed
+    /// without a terminal event.
+    pub fn collect_tokens(self) -> anyhow::Result<Vec<u32>> {
+        let mut out = Vec::new();
+        while let Some(ev) = self.recv() {
+            match ev {
+                TokenEvent::Token { index, token } => {
+                    debug_assert_eq!(index, out.len(), "out-of-order token stream");
+                    out.push(token);
+                }
+                TokenEvent::Done { .. } => return Ok(out),
+                TokenEvent::Error(e) => anyhow::bail!("generation failed: {e}"),
+            }
+        }
+        anyhow::bail!("generation stream closed without a terminal event")
+    }
+}
+
+/// A generation request in flight through the decode queue.
+pub struct PendingGen {
+    pub req: GenerateRequest,
+    pub submitted: Instant,
+    pub tx: mpsc::Sender<TokenEvent>,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -60,5 +139,42 @@ mod tests {
     fn ppl_math() {
         let r = ScoreResponse { nll: 254.0, count: 127.0, latency: Default::default() };
         assert!((r.ppl() - (2.0f32).exp()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn ppl_empty_window_is_infinite_not_nan() {
+        let r = ScoreResponse { nll: 0.0, count: 0.0, latency: Default::default() };
+        assert_eq!(r.ppl(), f32::INFINITY);
+        assert!(!r.ppl().is_nan());
+        // and it no longer poisons aggregates the way NaN would
+        let worst = [r.ppl(), 12.0f32].iter().fold(0.0f32, |m, &v| m.max(v));
+        assert_eq!(worst, f32::INFINITY);
+    }
+
+    #[test]
+    fn generate_handle_collects_in_order() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(TokenEvent::Token { index: 0, token: 7 }).unwrap();
+        tx.send(TokenEvent::Token { index: 1, token: 9 }).unwrap();
+        tx.send(TokenEvent::Done {
+            reason: FinishReason::MaxTokens,
+            generated: 2,
+            latency: Duration::from_millis(1),
+        })
+        .unwrap();
+        let h = GenerateHandle { rx };
+        assert_eq!(h.collect_tokens().unwrap(), vec![7, 9]);
+    }
+
+    #[test]
+    fn generate_handle_surfaces_errors() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(TokenEvent::Error("boom".into())).unwrap();
+        let h = GenerateHandle { rx };
+        assert!(h.collect_tokens().is_err());
+        // a dropped sender without a terminal event is also an error
+        let (tx2, rx2) = mpsc::channel::<TokenEvent>();
+        drop(tx2);
+        assert!(GenerateHandle { rx: rx2 }.collect_tokens().is_err());
     }
 }

@@ -9,10 +9,16 @@
 //! Roles: (a) baseline comparator + cross-check against the PJRT path
 //! (`tests/native_vs_runtime.rs`); (b) activation capture for Fig. 1;
 //! (c) workload for the native-engine benches where PJRT would hide the
-//! quantization cost being measured.
+//! quantization cost being measured; (d) the incremental-decode engine
+//! behind token-level generation serving ([`session`],
+//! `coordinator::generation`): per-layer [`KvCache`]s split the forward
+//! into prefill + decode steps, with skinny per-token projections routed
+//! through the packed engine's GEMV path.
 
 mod model;
 mod quantized;
+pub mod session;
 
-pub use model::{Gpt2Config, Gpt2Model, ProjFn, SiteCapture, PROJ_SITES};
+pub use model::{Gpt2Config, Gpt2Model, KvCache, ProjFn, SiteCapture, PROJ_SITES};
 pub use quantized::{IntMethod, QuantWeight, QuantizedGpt2};
+pub use session::{argmax, decode_step_batch, DecodeSession, SessionModel, SessionState, WrapPolicy};

@@ -1,10 +1,28 @@
 //! GPT-2 forward implementation (see mod.rs for the role of this module).
+//!
+//! Two forward shapes share one set of per-row primitives (`layer_norm`,
+//! `proj`, `attend_row`, `gelu_inplace`):
+//!
+//! * [`Gpt2Model::forward`] — the fixed-shape batch pass ([B][S] in, all
+//!   logits out), used for scoring and calibration.
+//! * the incremental pair [`Gpt2Model::forward_session`] (append S new
+//!   rows — prefill) / [`Gpt2Model::decode_step_sessions`] (one token for
+//!   G live sessions — decode) around per-layer [`KvCache`]s, used by
+//!   `gpt2::session` for O(context) per-token generation instead of the
+//!   O(context²) full re-forward per token.
+//!
+//! Because every shared primitive is row-independent (each output row
+//! depends only on its own input row), the incremental path is
+//! *bit-exact* against the batch pass over the same prefix — the oracle
+//! property `tests/decode_session.rs` pins across ragged prompt lengths
+//! and cache states.
 
 use crate::data::tensors::TensorFile;
 use crate::quant::gemm::matmul_f32;
 use crate::quant::{MatF32, QuantSpec};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
+use std::sync::OnceLock;
 
 /// The four quantized projection sites (paper §4.3), in block order.
 pub const PROJ_SITES: [&str; 4] = ["c_attn", "attn_proj", "c_fc", "mlp_proj"];
@@ -47,16 +65,19 @@ impl Gpt2Config {
     }
 }
 
+#[derive(Clone)]
 struct LayerNorm {
     g: Vec<f32>,
     b: Vec<f32>,
 }
 
+#[derive(Clone)]
 struct Linear {
     w: MatF32, // [in, out] (HF Conv1D convention)
     b: Vec<f32>,
 }
 
+#[derive(Clone)]
 struct Block {
     ln_1: LayerNorm,
     c_attn: Linear,
@@ -73,6 +94,85 @@ pub type SiteCapture = BTreeMap<(usize, &'static str), Vec<f32>>;
 /// -> projected output (weights + bias applied by the callee).
 pub type ProjFn<'a> = dyn FnMut(&MatF32, &'static str, usize) -> MatF32 + 'a;
 
+/// Per-layer key/value cache for incremental decode, ring-buffered to a
+/// fixed capacity (`n_ctx` in every real use). K and V rows are stored
+/// d_model wide — all heads concatenated, the exact slices the qkv
+/// projection produces — so a cache row is a straight copy of the
+/// projection output and decode attention reads it back bit-identical.
+///
+/// `push` appends; once the buffer is full it overwrites the *oldest*
+/// row (ring advance). Whether that ever happens is the session layer's
+/// decision (`gpt2::session::WrapPolicy`): the exactness-preserving
+/// policy re-prefills before the ring wraps, the sliding policy lets it
+/// wrap. Logical index 0 always names the oldest live row.
+pub struct KvCache {
+    k: MatF32, // [cap, d_model]
+    v: MatF32,
+    start: usize,
+    len: usize,
+}
+
+impl KvCache {
+    pub fn new(cap: usize, d_model: usize) -> KvCache {
+        assert!(cap > 0, "zero-capacity kv cache");
+        KvCache { k: MatF32::zeros(cap, d_model), v: MatF32::zeros(cap, d_model), start: 0, len: 0 }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.k.rows
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn clear(&mut self) {
+        self.start = 0;
+        self.len = 0;
+    }
+
+    #[inline(always)]
+    fn slot(&self, logical: usize) -> usize {
+        debug_assert!(logical < self.len);
+        (self.start + logical) % self.cap()
+    }
+
+    /// K row at logical index (0 = oldest live entry).
+    #[inline(always)]
+    pub fn k_row(&self, logical: usize) -> &[f32] {
+        self.k.row(self.slot(logical))
+    }
+
+    /// V row at logical index (0 = oldest live entry).
+    #[inline(always)]
+    pub fn v_row(&self, logical: usize) -> &[f32] {
+        self.v.row(self.slot(logical))
+    }
+
+    /// Append one K/V row pair; when full, overwrite the oldest entry
+    /// instead (ring advance). Returns whether an eviction happened.
+    pub fn push(&mut self, k_row: &[f32], v_row: &[f32]) -> bool {
+        let cap = self.cap();
+        if self.len == cap {
+            let slot = self.start;
+            self.k.row_mut(slot).copy_from_slice(k_row);
+            self.v.row_mut(slot).copy_from_slice(v_row);
+            self.start = (self.start + 1) % cap;
+            true
+        } else {
+            let slot = (self.start + self.len) % cap;
+            self.k.row_mut(slot).copy_from_slice(k_row);
+            self.v.row_mut(slot).copy_from_slice(v_row);
+            self.len += 1;
+            false
+        }
+    }
+}
+
 /// Loaded GPT-2 model.
 pub struct Gpt2Model {
     pub cfg: Gpt2Config,
@@ -80,6 +180,24 @@ pub struct Gpt2Model {
     wpe: MatF32, // [ctx, d]
     ln_f: LayerNorm,
     blocks: Vec<Block>,
+    /// tied head transpose [d, V], built on first use — the decode path
+    /// hits the head every token and must not re-transpose wte each time
+    wte_t: OnceLock<MatF32>,
+}
+
+impl Clone for Gpt2Model {
+    /// Deep copy of the weights (the lazy head transpose restarts empty)
+    /// — lets one loaded model back several quantized deployments.
+    fn clone(&self) -> Gpt2Model {
+        Gpt2Model {
+            cfg: self.cfg.clone(),
+            wte: self.wte.clone(),
+            wpe: self.wpe.clone(),
+            ln_f: self.ln_f.clone(),
+            blocks: self.blocks.clone(),
+            wte_t: OnceLock::new(),
+        }
+    }
 }
 
 impl Gpt2Model {
@@ -117,6 +235,7 @@ impl Gpt2Model {
             ln_f: ln("ln_f")?,
             blocks,
             cfg,
+            wte_t: OnceLock::new(),
         };
         if model.wte.rows != model.cfg.vocab_size || model.wte.cols != model.cfg.d_model {
             bail!(
@@ -234,7 +353,12 @@ impl Gpt2Model {
 
         let hf = layer_norm(&h, &self.ln_f);
         // tied head: logits = h @ wte^T (never quantized, per the paper)
-        Ok(matmul_f32(&hf, &self.wte.transpose()))
+        Ok(matmul_f32(&hf, self.head_t()))
+    }
+
+    /// Transposed tied head, built lazily and cached.
+    fn head_t(&self) -> &MatF32 {
+        self.wte_t.get_or_init(|| self.wte.transpose())
     }
 
     fn attention(&self, qkv: &MatF32, b: usize, s: usize) -> Result<MatF32> {
@@ -243,43 +367,266 @@ impl Gpt2Model {
         let dh = self.cfg.d_head();
         let scale = 1.0 / (dh as f32).sqrt();
         let mut out = MatF32::zeros(b * s, d);
-        let mut att = vec![0.0f32; s];
+        let mut att: Vec<f32> = Vec::new();
         for bi in 0..b {
-            for hd in 0..nh {
-                let off = hd * dh;
-                for qi in 0..s {
-                    let qrow = qkv.row(bi * s + qi);
-                    let q = &qrow[off..off + dh];
-                    // causal scores
-                    let mut max = f32::NEG_INFINITY;
-                    for ki in 0..=qi {
-                        let krow = qkv.row(bi * s + ki);
-                        let k = &krow[d + off..d + off + dh];
-                        let mut dot = 0.0f32;
-                        for i in 0..dh {
-                            dot += q[i] * k[i];
-                        }
-                        att[ki] = dot * scale;
-                        max = max.max(att[ki]);
-                    }
-                    let mut denom = 0.0f32;
-                    for a in att.iter_mut().take(qi + 1) {
-                        *a = (*a - max).exp();
-                        denom += *a;
-                    }
-                    let orow = out.row_mut(bi * s + qi);
-                    for ki in 0..=qi {
-                        let w = att[ki] / denom;
-                        let vrow = qkv.row(bi * s + ki);
-                        let v = &vrow[2 * d + off..2 * d + off + dh];
-                        for i in 0..dh {
-                            orow[off + i] += w * v[i];
-                        }
-                    }
-                }
+            for qi in 0..s {
+                let qrow = qkv.row(bi * s + qi);
+                attend_row(
+                    nh,
+                    dh,
+                    scale,
+                    qi + 1,
+                    &qrow[..d],
+                    |ki| &qkv.row(bi * s + ki)[d..2 * d],
+                    |ki| &qkv.row(bi * s + ki)[2 * d..3 * d],
+                    &mut att,
+                    out.row_mut(bi * s + qi),
+                );
             }
         }
         Ok(out)
+    }
+
+    /// Incremental forward (the prefill half of the decode split):
+    /// append `tokens` — assigned absolute positions `pos0..pos0+s` — to
+    /// the per-layer `caches` and return the logits of the NEW rows only
+    /// (`[s, vocab]`). The session layer calls this once over the whole
+    /// prompt at its *true* length (no padding rows, so attention never
+    /// attends over pad positions); the wrap re-prefill uses the
+    /// logits-free twin [`Gpt2Model::forward_session_no_logits`].
+    ///
+    /// Caches must have room for every new row — ring eviction mid-call
+    /// would silently change which keys the earlier new rows saw, so it
+    /// is refused here and handled above (`gpt2::session::WrapPolicy`).
+    ///
+    /// With a row-independent projection (plain f32, or the quantized
+    /// session projection), the result is bit-identical to the matching
+    /// rows of [`Gpt2Model::forward`] over the same prefix.
+    pub fn forward_session(
+        &self,
+        tokens: &[u32],
+        pos0: usize,
+        caches: &mut [KvCache],
+        proj_fn: Option<&mut ProjFn<'_>>,
+    ) -> Result<MatF32> {
+        Ok(self.forward_session_impl(tokens, pos0, caches, proj_fn, true)?.unwrap())
+    }
+
+    /// [`Gpt2Model::forward_session`] for callers that only want the KV
+    /// side effects (the wrap re-prefill, which discards logits): skips
+    /// the final layer-norm and the tied-head GEMM — at real model
+    /// scale the head (`keep × d × V`) is the single largest matmul in
+    /// the pass, pure waste when the result is dropped.
+    pub fn forward_session_no_logits(
+        &self,
+        tokens: &[u32],
+        pos0: usize,
+        caches: &mut [KvCache],
+        proj_fn: Option<&mut ProjFn<'_>>,
+    ) -> Result<()> {
+        self.forward_session_impl(tokens, pos0, caches, proj_fn, false)?;
+        Ok(())
+    }
+
+    fn forward_session_impl(
+        &self,
+        tokens: &[u32],
+        pos0: usize,
+        caches: &mut [KvCache],
+        mut proj_fn: Option<&mut ProjFn<'_>>,
+        want_logits: bool,
+    ) -> Result<Option<MatF32>> {
+        let s = tokens.len();
+        let d = self.cfg.d_model;
+        if s == 0 || pos0 + s > self.cfg.n_ctx {
+            bail!("session extend [{pos0}, {}) out of range (ctx {})", pos0 + s, self.cfg.n_ctx);
+        }
+        if caches.len() != self.cfg.n_layer {
+            bail!("{} kv caches for {} layers", caches.len(), self.cfg.n_layer);
+        }
+        let base = caches[0].len();
+        for c in caches.iter() {
+            if c.len() != base {
+                bail!("per-layer kv caches out of sync ({} vs {base})", c.len());
+            }
+            if base + s > c.cap() {
+                bail!(
+                    "kv cache overflow: {base} + {s} > {} — wrap is the session layer's job",
+                    c.cap()
+                );
+            }
+        }
+        let mut h = MatF32::zeros(s, d);
+        for (si, &tok) in tokens.iter().enumerate() {
+            if tok as usize >= self.cfg.vocab_size {
+                bail!("token {tok} out of vocab");
+            }
+            let row = h.row_mut(si);
+            let e = self.wte.row(tok as usize);
+            let p = self.wpe.row(pos0 + si);
+            for i in 0..d {
+                row[i] = e[i] + p[i];
+            }
+        }
+        let nh = self.cfg.n_head;
+        let dh = self.cfg.d_head();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut att: Vec<f32> = Vec::new();
+        for (li, blk) in self.blocks.iter().enumerate() {
+            // ---- attention
+            let x = layer_norm(&h, &blk.ln_1);
+            let qkv = match proj_fn.as_deref_mut() {
+                Some(f) => f(&x, "c_attn", li),
+                None => proj(&x, &blk.c_attn, None),
+            };
+            let cache = &mut caches[li];
+            for si in 0..s {
+                let row = qkv.row(si);
+                cache.push(&row[d..2 * d], &row[2 * d..3 * d]);
+            }
+            let cache = &caches[li];
+            let mut att_out = MatF32::zeros(s, d);
+            for si in 0..s {
+                let qrow = qkv.row(si);
+                attend_row(
+                    nh,
+                    dh,
+                    scale,
+                    base + si + 1,
+                    &qrow[..d],
+                    |ki| cache.k_row(ki),
+                    |ki| cache.v_row(ki),
+                    &mut att,
+                    att_out.row_mut(si),
+                );
+            }
+            let att_proj = match proj_fn.as_deref_mut() {
+                Some(f) => f(&att_out, "attn_proj", li),
+                None => proj(&att_out, &blk.attn_proj, None),
+            };
+            add_inplace(&mut h, &att_proj);
+
+            // ---- MLP
+            let x = layer_norm(&h, &blk.ln_2);
+            let mut u = match proj_fn.as_deref_mut() {
+                Some(f) => f(&x, "c_fc", li),
+                None => proj(&x, &blk.c_fc, None),
+            };
+            gelu_inplace(&mut u);
+            let m = match proj_fn.as_deref_mut() {
+                Some(f) => f(&u, "mlp_proj", li),
+                None => proj(&u, &blk.mlp_proj, None),
+            };
+            add_inplace(&mut h, &m);
+        }
+        if !want_logits {
+            return Ok(None);
+        }
+        let hf = layer_norm(&h, &self.ln_f);
+        Ok(Some(matmul_f32(&hf, self.head_t())))
+    }
+
+    /// One decode step for G independent sessions, coalesced: the four
+    /// projection sites each run as ONE skinny `[G, ·]` GEMM (small G
+    /// routes to the packed engine's GEMV path) while attention stays
+    /// per-session against its own cache. `tokens[g]` / `positions[g]` /
+    /// `caches[g]` describe session g; returns logits `[G, vocab]`.
+    ///
+    /// With row-independent projections each session's logits row is
+    /// bit-identical to stepping that session alone — continuous
+    /// batching is transparent to clients. Unlike
+    /// [`Gpt2Model::forward_session`] this path permits ring eviction: a
+    /// full cache drops its oldest entry as the new token lands (the
+    /// Slide wrap policy).
+    pub fn decode_step_sessions(
+        &self,
+        tokens: &[u32],
+        positions: &[usize],
+        caches: &mut [&mut [KvCache]],
+        mut proj_fn: Option<&mut ProjFn<'_>>,
+    ) -> Result<MatF32> {
+        let g = tokens.len();
+        let d = self.cfg.d_model;
+        if g == 0 || positions.len() != g || caches.len() != g {
+            bail!("decode step: {g} tokens, {} positions, {} cache sets", positions.len(), caches.len());
+        }
+        for (gi, cs) in caches.iter().enumerate() {
+            if cs.len() != self.cfg.n_layer {
+                bail!("session {gi}: {} kv caches for {} layers", cs.len(), self.cfg.n_layer);
+            }
+            if positions[gi] >= self.cfg.n_ctx {
+                bail!("session {gi}: position {} out of range (ctx {})", positions[gi], self.cfg.n_ctx);
+            }
+            if tokens[gi] as usize >= self.cfg.vocab_size {
+                bail!("session {gi}: token {} out of vocab", tokens[gi]);
+            }
+        }
+        let mut h = MatF32::zeros(g, d);
+        for gi in 0..g {
+            let row = h.row_mut(gi);
+            let e = self.wte.row(tokens[gi] as usize);
+            let p = self.wpe.row(positions[gi]);
+            for i in 0..d {
+                row[i] = e[i] + p[i];
+            }
+        }
+        let nh = self.cfg.n_head;
+        let dh = self.cfg.d_head();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut att: Vec<f32> = Vec::new();
+        for (li, blk) in self.blocks.iter().enumerate() {
+            // ---- attention
+            let x = layer_norm(&h, &blk.ln_1);
+            let qkv = match proj_fn.as_deref_mut() {
+                Some(f) => f(&x, "c_attn", li),
+                None => proj(&x, &blk.c_attn, None),
+            };
+            let mut att_out = MatF32::zeros(g, d);
+            for gi in 0..g {
+                let row = qkv.row(gi);
+                let cache = &mut caches[gi][li];
+                cache.push(&row[d..2 * d], &row[2 * d..3 * d]);
+                let cache = &caches[gi][li];
+                attend_row(
+                    nh,
+                    dh,
+                    scale,
+                    cache.len(),
+                    &row[..d],
+                    |ki| cache.k_row(ki),
+                    |ki| cache.v_row(ki),
+                    &mut att,
+                    att_out.row_mut(gi),
+                );
+            }
+            let att_proj = match proj_fn.as_deref_mut() {
+                Some(f) => f(&att_out, "attn_proj", li),
+                None => proj(&att_out, &blk.attn_proj, None),
+            };
+            add_inplace(&mut h, &att_proj);
+
+            // ---- MLP
+            let x = layer_norm(&h, &blk.ln_2);
+            let mut u = match proj_fn.as_deref_mut() {
+                Some(f) => f(&x, "c_fc", li),
+                None => proj(&x, &blk.c_fc, None),
+            };
+            gelu_inplace(&mut u);
+            let m = match proj_fn.as_deref_mut() {
+                Some(f) => f(&u, "mlp_proj", li),
+                None => proj(&u, &blk.mlp_proj, None),
+            };
+            add_inplace(&mut h, &m);
+        }
+        let hf = layer_norm(&h, &self.ln_f);
+        Ok(matmul_f32(&hf, self.head_t()))
+    }
+
+    /// Fresh per-layer caches sized `[n_ctx, d_model]` for one session.
+    pub fn new_kv_caches(&self) -> Vec<KvCache> {
+        (0..self.cfg.n_layer)
+            .map(|_| KvCache::new(self.cfg.n_ctx, self.cfg.d_model))
+            .collect()
     }
 
     /// Per-sequence NLL sums + token counts (twin of python nll_per_seq).
@@ -380,6 +727,7 @@ impl Gpt2Model {
             wpe,
             ln_f: LayerNorm { g: vec![1.0; d], b: vec![0.0; d] },
             blocks,
+            wte_t: OnceLock::new(),
         }
     }
 
@@ -404,6 +752,58 @@ impl Gpt2Model {
             }
         }
         Ok((nll, vec![(s - 1) as f32; b]))
+    }
+}
+
+/// Causal attention for ONE query row over `n_keys` past key/value rows,
+/// all heads, accumulated into `orow` (zeroed, d_model wide). The single
+/// primitive both forward shapes share: the batch pass reads K/V straight
+/// out of the qkv matrix, the incremental pass out of a [`KvCache`] —
+/// byte-for-byte copies of the same projection rows, so the two paths
+/// produce bit-identical outputs. `att` is a reusable score buffer.
+#[allow(clippy::too_many_arguments)]
+fn attend_row<'a, K, V>(
+    nh: usize,
+    dh: usize,
+    scale: f32,
+    n_keys: usize,
+    q: &[f32],
+    k_at: K,
+    v_at: V,
+    att: &mut Vec<f32>,
+    orow: &mut [f32],
+) where
+    K: Fn(usize) -> &'a [f32],
+    V: Fn(usize) -> &'a [f32],
+{
+    if att.len() < n_keys {
+        att.resize(n_keys, 0.0);
+    }
+    for hd in 0..nh {
+        let off = hd * dh;
+        let qh = &q[off..off + dh];
+        let mut max = f32::NEG_INFINITY;
+        for ki in 0..n_keys {
+            let k = &k_at(ki)[off..off + dh];
+            let mut dot = 0.0f32;
+            for i in 0..dh {
+                dot += qh[i] * k[i];
+            }
+            att[ki] = dot * scale;
+            max = max.max(att[ki]);
+        }
+        let mut denom = 0.0f32;
+        for a in att.iter_mut().take(n_keys) {
+            *a = (*a - max).exp();
+            denom += *a;
+        }
+        for ki in 0..n_keys {
+            let w = att[ki] / denom;
+            let v = &v_at(ki)[off..off + dh];
+            for i in 0..dh {
+                orow[off + i] += w * v[i];
+            }
+        }
     }
 }
 
@@ -576,6 +976,108 @@ mod tests {
         assert_eq!(cap.len(), cfg.n_layer * 4);
         assert_eq!(cap[&(0, "c_attn")].len(), cfg.d_model);
         assert_eq!(cap[&(1, "mlp_proj")].len(), cfg.d_ff());
+    }
+
+    #[test]
+    fn kv_cache_ring_wraps_to_oldest() {
+        let mut c = KvCache::new(3, 2);
+        assert!(c.is_empty() && c.cap() == 3);
+        for t in 0..3 {
+            let evicted = c.push(&[t as f32, 0.0], &[0.0, t as f32]);
+            assert!(!evicted);
+        }
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.k_row(0), &[0.0, 0.0]);
+        // full: pushes overwrite the oldest, logical 0 advances
+        assert!(c.push(&[3.0, 0.0], &[0.0, 3.0]));
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.k_row(0), &[1.0, 0.0]);
+        assert_eq!(c.k_row(2), &[3.0, 0.0]);
+        assert_eq!(c.v_row(2), &[0.0, 3.0]);
+        assert!(c.push(&[4.0, 0.0], &[0.0, 4.0]));
+        assert_eq!(c.k_row(0), &[2.0, 0.0]);
+        c.clear();
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn forward_session_bit_exact_vs_forward() {
+        // prefill 5 then decode 3 one at a time; every logits row must be
+        // bit-identical to the batch forward over the same prefix
+        let (cfg, m) = tiny();
+        let t = toks(1, 8, 11, cfg.vocab_size as u32)[0].clone();
+        let mut caches = m.new_kv_caches();
+        let pre = m.forward_session(&t[..5], 0, &mut caches, None).unwrap();
+        let full5 = m.forward(&[t[..5].to_vec()], None, None).unwrap();
+        assert_eq!(pre.data, full5.data, "prefill rows");
+        for step in 5..8 {
+            let one = m.forward_session(&t[step..step + 1], step, &mut caches, None).unwrap();
+            let full = m.forward(&[t[..step + 1].to_vec()], None, None).unwrap();
+            assert_eq!(one.data, full.row(step).to_vec(), "decode step at {step}");
+        }
+    }
+
+    #[test]
+    fn decode_step_sessions_matches_solo_steps() {
+        let (cfg, m) = tiny();
+        let a = toks(1, 4, 21, cfg.vocab_size as u32)[0].clone();
+        let b = toks(1, 6, 22, cfg.vocab_size as u32)[0].clone();
+        // solo: two independent sessions stepped alone
+        let mut ca = m.new_kv_caches();
+        let mut cb = m.new_kv_caches();
+        m.forward_session(&a, 0, &mut ca, None).unwrap();
+        m.forward_session(&b, 0, &mut cb, None).unwrap();
+        let la = m
+            .decode_step_sessions(&[9], &[a.len()], &mut [&mut ca], None)
+            .unwrap();
+        let lb = m
+            .decode_step_sessions(&[3], &[b.len()], &mut [&mut cb], None)
+            .unwrap();
+        // batched: same two sessions coalesced into one step
+        let mut ca2 = m.new_kv_caches();
+        let mut cb2 = m.new_kv_caches();
+        m.forward_session(&a, 0, &mut ca2, None).unwrap();
+        m.forward_session(&b, 0, &mut cb2, None).unwrap();
+        let both = m
+            .decode_step_sessions(
+                &[9, 3],
+                &[a.len(), b.len()],
+                &mut [&mut ca2, &mut cb2],
+                None,
+            )
+            .unwrap();
+        assert_eq!(both.row(0), &la.data[..]);
+        assert_eq!(both.row(1), &lb.data[..]);
+    }
+
+    #[test]
+    fn no_logits_extend_fills_caches_identically() {
+        // the wrap re-prefill skips the head GEMM; the caches it leaves
+        // behind must be indistinguishable from the logits path's
+        let (cfg, m) = tiny();
+        let t = toks(1, 6, 31, cfg.vocab_size as u32)[0].clone();
+        let mut c1 = m.new_kv_caches();
+        let mut c2 = m.new_kv_caches();
+        m.forward_session(&t, 0, &mut c1, None).unwrap();
+        m.forward_session_no_logits(&t, 0, &mut c2, None).unwrap();
+        let a = m.decode_step_sessions(&[1], &[6], &mut [&mut c1], None).unwrap();
+        let b = m.decode_step_sessions(&[1], &[6], &mut [&mut c2], None).unwrap();
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn forward_session_rejects_overflow_and_bad_tokens() {
+        let (cfg, m) = tiny();
+        let mut caches = m.new_kv_caches();
+        assert!(m.forward_session(&[], 0, &mut caches, None).is_err());
+        assert!(m.forward_session(&[999], 0, &mut caches, None).is_err());
+        let long: Vec<u32> = vec![0; cfg.n_ctx + 1];
+        assert!(m.forward_session(&long, 0, &mut caches, None).is_err());
+        // fill to capacity, then one more must refuse (no silent eviction
+        // on the prefill path)
+        let fill: Vec<u32> = vec![1; cfg.n_ctx];
+        m.forward_session(&fill, 0, &mut caches, None).unwrap();
+        assert!(m.forward_session(&[1], 0, &mut caches, None).is_err());
     }
 
     #[test]

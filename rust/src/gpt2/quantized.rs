@@ -18,6 +18,21 @@
 //! matrices are ever materialized. Both GEMMs run the i16
 //! pair-accumulation microkernel (quantized operands never contain -128,
 //! so the pair path is always taken — see `quant::packed`).
+//!
+//! Session (incremental-decode) projection: the batch MUXQ path computes
+//! ONE outlier mask over all rows of a projection call — a batching
+//! artifact that makes results depend on which rows happen to share a
+//! call. Decode sessions need *row independence* (a decode step must
+//! match the same token scored inside a prefill, and a coalesced
+//! multi-session step must match stepping each session alone), so
+//! `proj_session` gives every row its own mask via the single-row fused
+//! decompose+quantize (`proj_int_rowwise`): mask, Body/Aux scales and
+//! both GEMVs all come from that row only. This is also the natural M=1
+//! semantics of the paper's decomposition — at decode there IS only one
+//! row. [`QuantizedGpt2::forward_logits_session`] is the full-forward
+//! oracle with identical semantics, which `tests/decode_session.rs`
+//! pins bit-exact against the incremental path. Naive per-row abs-max is
+//! row-independent already, so its session path IS the batch path.
 
 use super::model::Gpt2Model;
 use crate::quant::absmax::{Granularity, Scales, EPS};
@@ -80,6 +95,8 @@ struct Scratch {
     sa: Vec<f32>,
     mask: Vec<bool>,
     idx: Vec<usize>,
+    /// single-row f32 view for the row-wise session projection
+    xrow: MatF32,
 }
 
 impl Scratch {
@@ -93,6 +110,7 @@ impl Scratch {
             sa: Vec::new(),
             mask: Vec::new(),
             idx: Vec::new(),
+            xrow: MatF32::zeros(0, 0),
         }
     }
 }
@@ -203,16 +221,89 @@ impl QuantizedGpt2 {
         }
     }
 
+    /// One projection with *row-independent* semantics — the session
+    /// (incremental decode) path, also the semantics of the oracle
+    /// [`QuantizedGpt2::forward_logits_session`]. Naive per-row abs-max
+    /// is row-independent already; MUXQ switches to per-row outlier
+    /// masks (see the module docs).
+    pub(crate) fn proj_session(&self, x: &MatF32, site: &str, li: usize) -> MatF32 {
+        let qw = &self.weights[li][Self::site_index(site)];
+        match self.method {
+            IntMethod::Naive => self.proj_int(x, qw),
+            IntMethod::Muxq => self.proj_int_rowwise(x, qw),
+        }
+    }
+
+    /// Row-wise MUXQ projection: every row of X gets its own outlier
+    /// mask, its own fused decompose+quantize pass, and its own Body GEMV
+    /// + Aux rows-subset GEMV against the (shared, load-time-packed)
+    /// weights. M=1 operands route through the packed engine's GEMV path
+    /// — no tile-cascade overhead on the decode hot loop.
+    fn proj_int_rowwise(&self, x: &MatF32, qw: &QuantWeight) -> MatF32 {
+        let qmax = crate::quant::qmax_from_bits(self.ia_bits);
+        let (m, k) = (x.rows, x.cols);
+        let n = qw.packed.cols;
+        let mut y = MatF32::zeros(m, n);
+        let mut guard = self.scratch.lock().unwrap();
+        let sc = &mut *guard;
+        sc.xrow.rows = 1;
+        sc.xrow.cols = k;
+        sc.xrow.data.resize(k, 0.0);
+        for r in 0..m {
+            sc.xrow.data.copy_from_slice(x.row(r));
+            outlier_mask_into(&sc.xrow, self.muxq.theta, &mut sc.mask);
+            sc.idx.clear();
+            sc.idx
+                .extend(sc.mask.iter().enumerate().filter(|(_, m)| **m).map(|(i, _)| i));
+            fused_decompose_quantize(
+                &sc.xrow,
+                &sc.mask,
+                &sc.idx,
+                self.muxq.inv_shift(),
+                qmax,
+                &mut sc.xq,
+                &mut sc.sx,
+                &mut sc.aux_q,
+                &mut sc.sa,
+            );
+            packed::matmul_i8_packed_into(&sc.xq, &qw.packed, &mut sc.acc, self.gemm);
+            let aux = if sc.idx.is_empty() {
+                None
+            } else {
+                packed::matmul_i8_rows_subset_into(
+                    &sc.aux_q,
+                    &qw.packed,
+                    &sc.idx,
+                    &mut sc.acc_aux,
+                    self.gemm,
+                );
+                Some((&sc.acc_aux.data[..n], sc.sa[0], self.muxq.aux_weight()))
+            };
+            dequant_bias_row(&sc.acc.data[..n], sc.sx[0], &qw.scales, aux, &qw.bias, y.row_mut(r));
+        }
+        y
+    }
+
+    /// Full-forward logits under the *session* projection semantics —
+    /// the bit-exactness oracle for incremental decode (see module docs).
+    pub fn forward_logits_session(&self, tokens: &[Vec<u32>]) -> Result<MatF32> {
+        self.fp
+            .forward_with_proj(tokens, &mut |x, site, li| self.proj_session(x, site, li))
+    }
+
+    fn site_index(site: &str) -> usize {
+        match site {
+            "c_attn" => 0,
+            "attn_proj" => 1,
+            "c_fc" => 2,
+            _ => 3,
+        }
+    }
+
     /// Per-sequence NLL through the full INT pipeline.
     pub fn nll_per_seq(&self, tokens: &[Vec<u32>]) -> Result<(Vec<f32>, Vec<f32>)> {
         self.fp.nll_per_seq_with_proj(tokens, &mut |x, site, li| {
-            let idx = match site {
-                "c_attn" => 0,
-                "attn_proj" => 1,
-                "c_fc" => 2,
-                _ => 3,
-            };
-            self.proj_int(x, &self.weights[li][idx])
+            self.proj_int(x, &self.weights[li][Self::site_index(site)])
         })
     }
 }
@@ -308,24 +399,39 @@ fn dequant_bias(
     for r in 0..m {
         let yrow = &mut y.data[r * n..(r + 1) * n];
         let arow = &acc.data[r * n..(r + 1) * n];
-        match aux {
-            None => {
-                for j in 0..n {
-                    yrow[j] = arow[j] as f32 * (sx[r] * sw.at(0, j)) + bias[j];
-                }
+        let aux_row =
+            aux.map(|(acc2, sa, f)| (&acc2.data[r * n..(r + 1) * n], sa[r], f));
+        dequant_bias_row(arow, sx[r], sw, aux_row, bias, yrow);
+    }
+    y
+}
+
+/// One output row of [`dequant_bias`] — shared by the batch path and the
+/// row-wise session path, so the two are arithmetic-for-arithmetic
+/// identical (the decode bit-exactness oracle depends on this).
+fn dequant_bias_row(
+    arow: &[i32],
+    sxr: f32,
+    sw: &Scales,
+    aux: Option<(&[i32], f32, f32)>,
+    bias: &[f32],
+    yrow: &mut [f32],
+) {
+    let n = arow.len();
+    match aux {
+        None => {
+            for j in 0..n {
+                yrow[j] = arow[j] as f32 * (sxr * sw.at(0, j)) + bias[j];
             }
-            Some((acc2, sa, f)) => {
-                let a2 = &acc2.data[r * n..(r + 1) * n];
-                for j in 0..n {
-                    let swj = sw.at(0, j);
-                    yrow[j] = arow[j] as f32 * (sx[r] * swj)
-                        + f * (a2[j] as f32 * (sa[r] * swj))
-                        + bias[j];
-                }
+        }
+        Some((a2, sar, f)) => {
+            for j in 0..n {
+                let swj = sw.at(0, j);
+                yrow[j] =
+                    arow[j] as f32 * (sxr * swj) + f * (a2[j] as f32 * (sar * swj)) + bias[j];
             }
         }
     }
-    y
 }
 
 #[cfg(test)]
@@ -402,6 +508,66 @@ mod tests {
         assert!(ratio_small > 2.5, "ratio {ratio_small}");
         assert!(ratio_big > ratio_small, "dilution should shrink with d");
         assert!(ratio_big > 3.7 && ratio_big <= 4.0, "ratio {ratio_big}");
+    }
+
+    #[test]
+    fn rowwise_muxq_equals_batch_on_single_row() {
+        // for a 1-row input the batch mask IS the row mask, so the batch
+        // and row-wise projections must agree bit-for-bit
+        let q = QuantizedGpt2::new(tiny(), IntMethod::Muxq, 8, 8);
+        let d = q.fp.cfg.d_model;
+        let mut rng = crate::data::prng::SplitMix64::new(31);
+        let mut x = MatF32::from_vec(
+            1,
+            d,
+            (0..d).map(|_| (rng.next_f64() as f32 - 0.5) * 4.0).collect(),
+        )
+        .unwrap();
+        *x.at_mut(0, 3) = 21.0; // force an outlier channel
+        let qw = &q.weights[0][0];
+        let batch = q.proj_int(&x, qw);
+        let rowwise = q.proj_int_rowwise(&x, qw);
+        assert_eq!(batch.data, rowwise.data);
+    }
+
+    #[test]
+    fn rowwise_muxq_masks_rows_independently() {
+        // two rows, only one carrying an outlier: the row-wise path must
+        // differ from the batch path (whose shared mask leaks the outlier
+        // channel into the clean row) yet stay close to it in value
+        let q = QuantizedGpt2::new(tiny(), IntMethod::Muxq, 8, 8);
+        let d = q.fp.cfg.d_model;
+        let mut rng = crate::data::prng::SplitMix64::new(33);
+        let mut x = MatF32::from_vec(
+            2,
+            d,
+            (0..2 * d).map(|_| (rng.next_f64() as f32 - 0.5) * 4.0).collect(),
+        )
+        .unwrap();
+        *x.at_mut(0, 5) = 30.0;
+        let qw = &q.weights[0][0];
+        let batch = q.proj_int(&x, qw);
+        let rowwise = q.proj_int_rowwise(&x, qw);
+        assert!(batch.mean_abs_diff(&rowwise) < 0.1, "paths diverged wildly");
+        // row 0 (the outlier row) has the same mask either way
+        assert_eq!(&batch.data[..batch.cols], &rowwise.data[..rowwise.cols]);
+    }
+
+    #[test]
+    fn session_oracle_close_to_fp_at_8bit() {
+        let fp = tiny();
+        let t = toks(2, 8, 5);
+        let fp_logits = fp.forward(&t, None, None).unwrap();
+        for method in [IntMethod::Naive, IntMethod::Muxq] {
+            let q = QuantizedGpt2::new(tiny(), method, 8, 8);
+            let s_logits = q.forward_logits_session(&t).unwrap();
+            assert_eq!((s_logits.rows, s_logits.cols), (fp_logits.rows, fp_logits.cols));
+            assert!(
+                fp_logits.mean_abs_diff(&s_logits) < 0.25,
+                "{method:?} mae {}",
+                fp_logits.mean_abs_diff(&s_logits)
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,451 @@
+//! Decode sessions: the stateful layer between the incremental model
+//! forward (`model.rs`: [`KvCache`], `forward_session`,
+//! `decode_step_sessions`) and the serving coordinator
+//! (`coordinator::generation`). One [`DecodeSession`] owns one
+//! sequence's per-layer caches, its live token window and its position
+//! counter; [`decode_step_batch`] advances many sessions in one fused
+//! skinny GEMM step (continuous batching) with per-session results
+//! bit-identical to stepping each alone.
+//!
+//! # Context-overflow (wrap) policies
+//!
+//! GPT-2's absolute position embeddings mean a ring cache cannot keep
+//! attending exactly once generation passes `n_ctx` — cached K/V were
+//! computed under their admission positions. Two policies:
+//!
+//! * [`WrapPolicy::Reprefill`] (default): when the cache fills, drop the
+//!   oldest tokens and re-prefill the kept window with fresh positions.
+//!   Logits stay **bit-exact** against a full forward over the session's
+//!   live window at every step — the oracle property the proptests pin —
+//!   at the amortized cost of one O(keep²) prefill per `n_ctx - keep`
+//!   generated tokens (still O(context) per token).
+//! * [`WrapPolicy::Slide`]: StreamingLLM-style infinite generation — the
+//!   ring overwrites the oldest entry in place and new tokens clamp to
+//!   the last position index. O(1) per step forever, but approximate:
+//!   kept K/V retain their admission-time positions (and were computed
+//!   attending over context that has since been evicted), so there is no
+//!   full-forward oracle past the wrap; the ring mechanics themselves
+//!   are pinned against a deque reference in `tests/decode_session.rs`.
+
+use super::model::{Gpt2Config, Gpt2Model, KvCache};
+use super::quantized::QuantizedGpt2;
+use crate::quant::MatF32;
+use anyhow::{bail, Result};
+
+/// What to do when a session's context window is full (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WrapPolicy {
+    /// Drop the oldest tokens and re-prefill the last `keep` with fresh
+    /// positions (exact; `keep == 0` means 3/4 of `n_ctx`).
+    Reprefill { keep: usize },
+    /// Ring-overwrite the oldest entry, clamp positions at `n_ctx - 1`
+    /// (approximate, O(1) per step).
+    Slide,
+}
+
+impl Default for WrapPolicy {
+    fn default() -> Self {
+        WrapPolicy::Reprefill { keep: 0 }
+    }
+}
+
+impl WrapPolicy {
+    fn keep_for(self, n_ctx: usize) -> usize {
+        match self {
+            WrapPolicy::Reprefill { keep: 0 } => (n_ctx * 3 / 4).max(1),
+            WrapPolicy::Reprefill { keep } => keep.min(n_ctx - 1).max(1),
+            WrapPolicy::Slide => n_ctx,
+        }
+    }
+}
+
+/// The model a session runs against: plain f32, or the true-INT pipeline
+/// through its row-independent session projection.
+#[derive(Clone, Copy)]
+pub enum SessionModel<'m> {
+    Fp(&'m Gpt2Model),
+    Int(&'m QuantizedGpt2),
+}
+
+impl<'m> SessionModel<'m> {
+    pub fn gpt(&self) -> &'m Gpt2Model {
+        match *self {
+            SessionModel::Fp(m) => m,
+            SessionModel::Int(q) => &q.fp,
+        }
+    }
+
+    fn extend(&self, tokens: &[u32], pos0: usize, caches: &mut [KvCache]) -> Result<MatF32> {
+        match self {
+            SessionModel::Fp(m) => m.forward_session(tokens, pos0, caches, None),
+            SessionModel::Int(q) => {
+                let mut f = |x: &MatF32, site: &'static str, li: usize| q.proj_session(x, site, li);
+                q.fp.forward_session(tokens, pos0, caches, Some(&mut f))
+            }
+        }
+    }
+
+    /// `extend` without computing logits — the wrap re-prefill discards
+    /// them, and the tied-head GEMM they cost is the biggest in the pass.
+    fn extend_quiet(&self, tokens: &[u32], pos0: usize, caches: &mut [KvCache]) -> Result<()> {
+        match self {
+            SessionModel::Fp(m) => m.forward_session_no_logits(tokens, pos0, caches, None),
+            SessionModel::Int(q) => {
+                let mut f = |x: &MatF32, site: &'static str, li: usize| q.proj_session(x, site, li);
+                q.fp.forward_session_no_logits(tokens, pos0, caches, Some(&mut f))
+            }
+        }
+    }
+
+    fn step(
+        &self,
+        tokens: &[u32],
+        positions: &[usize],
+        caches: &mut [&mut [KvCache]],
+    ) -> Result<MatF32> {
+        match self {
+            SessionModel::Fp(m) => m.decode_step_sessions(tokens, positions, caches, None),
+            SessionModel::Int(q) => {
+                let mut f = |x: &MatF32, site: &'static str, li: usize| q.proj_session(x, site, li);
+                q.fp.decode_step_sessions(tokens, positions, caches, Some(&mut f))
+            }
+        }
+    }
+}
+
+/// Per-sequence decode state, model-borrowing-free so a serving loop can
+/// own many of these alongside the model (see [`DecodeSession`] for the
+/// ergonomic borrowed wrapper).
+pub struct SessionState {
+    caches: Vec<KvCache>,
+    /// tokens whose K/V are live, oldest first (== the effective context)
+    window: Vec<u32>,
+    wrap: WrapPolicy,
+    /// prefill passes run (1 after `prefill`, +1 per Reprefill wrap)
+    prefills: u64,
+}
+
+impl SessionState {
+    pub fn new(cfg: &Gpt2Config, wrap: WrapPolicy) -> SessionState {
+        SessionState {
+            caches: (0..cfg.n_layer).map(|_| KvCache::new(cfg.n_ctx, cfg.d_model)).collect(),
+            window: Vec::new(),
+            wrap,
+            prefills: 0,
+        }
+    }
+
+    /// The live context: every token whose K/V the next step attends to.
+    /// After a `decode_step` the stepped token is included, so under the
+    /// (default, exact) Reprefill policy the returned logits are always a
+    /// full forward of exactly `window()`.
+    pub fn window(&self) -> &[u32] {
+        &self.window
+    }
+
+    pub fn context_len(&self) -> usize {
+        self.window.len()
+    }
+
+    pub fn prefills(&self) -> u64 {
+        self.prefills
+    }
+
+    /// Process the prompt at its TRUE length (no padding rows — the old
+    /// fixed-shape generate path left-padded with token 0 and attended
+    /// over the pads, skewing short-prompt logits). Prompts longer than
+    /// `n_ctx` keep their last `n_ctx` tokens. Returns the last row's
+    /// logits (the next-token distribution).
+    pub fn prefill(&mut self, m: SessionModel<'_>, prompt: &[u32]) -> Result<Vec<f32>> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        let n_ctx = m.gpt().cfg.n_ctx;
+        let used = &prompt[prompt.len().saturating_sub(n_ctx)..];
+        for c in &mut self.caches {
+            c.clear();
+        }
+        self.window.clear();
+        let logits = m.extend(used, 0, &mut self.caches)?;
+        self.window.extend_from_slice(used);
+        self.prefills += 1;
+        Ok(logits.row(logits.rows - 1).to_vec())
+    }
+
+    /// Append one token and return its next-token logits — O(context)
+    /// work, unlike re-running the full forward. Must follow `prefill`.
+    pub fn decode_step(&mut self, m: SessionModel<'_>, token: u32) -> Result<Vec<f32>> {
+        if self.window.is_empty() {
+            bail!("decode_step before prefill");
+        }
+        self.ensure_room(m)?;
+        let pos = self.next_pos(m.gpt().cfg.n_ctx);
+        let logits = m.step(&[token], &[pos], &mut [self.caches.as_mut_slice()])?;
+        self.note(m.gpt().cfg.n_ctx, token);
+        Ok(logits.data)
+    }
+
+    fn next_pos(&self, n_ctx: usize) -> usize {
+        self.window.len().min(n_ctx - 1)
+    }
+
+    fn note(&mut self, n_ctx: usize, token: u32) {
+        self.window.push(token);
+        if self.window.len() > n_ctx {
+            // Slide evicted the oldest K/V in the ring; mirror it here
+            self.window.remove(0);
+        }
+    }
+
+    /// Apply the wrap policy if the cache is full (called before a step).
+    fn ensure_room(&mut self, m: SessionModel<'_>) -> Result<()> {
+        let n_ctx = m.gpt().cfg.n_ctx;
+        if self.window.len() < n_ctx {
+            return Ok(());
+        }
+        match self.wrap {
+            WrapPolicy::Slide => Ok(()), // the ring overwrites in place
+            WrapPolicy::Reprefill { .. } => {
+                let keep = self.wrap.keep_for(n_ctx);
+                self.window.drain(..self.window.len() - keep);
+                for c in &mut self.caches {
+                    c.clear();
+                }
+                // logits of the kept window are not needed — the caller
+                // is about to decode the NEXT token
+                m.extend_quiet(&self.window, 0, &mut self.caches)?;
+                self.prefills += 1;
+                Ok(())
+            }
+        }
+    }
+}
+
+/// One decode step for many live sessions, coalesced into a single
+/// skinny-GEMM batch (`tokens[i]` feeds `sessions[i]`). Wrap policies
+/// are applied per session first, then all projections run as `[G, ·]`
+/// GEMMs. Returns logits `[G, vocab]`; each row is bit-identical to
+/// `sessions[i].decode_step(m, tokens[i])` run alone.
+pub fn decode_step_batch(
+    m: SessionModel<'_>,
+    sessions: &mut [&mut SessionState],
+    tokens: &[u32],
+) -> Result<MatF32> {
+    if sessions.is_empty() || sessions.len() != tokens.len() {
+        bail!("{} sessions vs {} tokens", sessions.len(), tokens.len());
+    }
+    if sessions.iter().any(|s| s.window.is_empty()) {
+        bail!("decode_step_batch before prefill");
+    }
+    for s in sessions.iter_mut() {
+        s.ensure_room(m)?;
+    }
+    let n_ctx = m.gpt().cfg.n_ctx;
+    let positions: Vec<usize> = sessions.iter().map(|s| s.next_pos(n_ctx)).collect();
+    let mut cache_refs: Vec<&mut [KvCache]> =
+        sessions.iter_mut().map(|s| s.caches.as_mut_slice()).collect();
+    let logits = m.step(tokens, &positions, &mut cache_refs)?;
+    drop(cache_refs);
+    for (s, &t) in sessions.iter_mut().zip(tokens) {
+        s.note(n_ctx, t);
+    }
+    Ok(logits)
+}
+
+/// Ergonomic single-session wrapper binding a [`SessionState`] to its
+/// model — the API `examples/generate.rs` uses.
+pub struct DecodeSession<'m> {
+    model: SessionModel<'m>,
+    pub state: SessionState,
+}
+
+impl<'m> DecodeSession<'m> {
+    pub fn new(model: SessionModel<'m>, wrap: WrapPolicy) -> DecodeSession<'m> {
+        DecodeSession { state: SessionState::new(&model.gpt().cfg, wrap), model }
+    }
+
+    pub fn prefill(&mut self, prompt: &[u32]) -> Result<Vec<f32>> {
+        self.state.prefill(self.model, prompt)
+    }
+
+    pub fn decode_step(&mut self, token: u32) -> Result<Vec<f32>> {
+        self.state.decode_step(self.model, token)
+    }
+
+    /// Prefill + greedy-decode `steps` tokens; returns the generated ids.
+    pub fn generate_greedy(&mut self, prompt: &[u32], steps: usize) -> Result<Vec<u32>> {
+        let mut out = Vec::with_capacity(steps);
+        if steps == 0 {
+            self.prefill(prompt)?;
+            return Ok(out);
+        }
+        let mut next = argmax(&self.prefill(prompt)?);
+        for i in 0..steps {
+            out.push(next);
+            if i + 1 < steps {
+                next = argmax(&self.decode_step(next)?);
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Gpt2Model {
+    /// Open an incremental-decode session over this model.
+    pub fn session(&self, wrap: WrapPolicy) -> DecodeSession<'_> {
+        DecodeSession::new(SessionModel::Fp(self), wrap)
+    }
+}
+
+impl QuantizedGpt2 {
+    /// Open an incremental-decode session through the true-INT pipeline
+    /// (row-independent session projection — see `quantized.rs` docs).
+    pub fn session(&self, wrap: WrapPolicy) -> DecodeSession<'_> {
+        DecodeSession::new(SessionModel::Int(self), wrap)
+    }
+}
+
+/// Greedy sampling: index of the maximum logit (ties resolve to the
+/// highest index — the `max_by`/`total_cmp` convention every caller in
+/// this repo shares, so identical logits always yield identical tokens).
+pub fn argmax(logits: &[f32]) -> u32 {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i as u32)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpt2::IntMethod;
+
+    fn tiny() -> Gpt2Model {
+        Gpt2Model::test_model(2, 16, 2, 12, 32, 7)
+    }
+
+    fn toks(n: usize, seed: u64) -> Vec<u32> {
+        let mut rng = crate::data::prng::SplitMix64::new(seed);
+        (0..n).map(|_| rng.next_below(32) as u32).collect()
+    }
+
+    #[test]
+    fn session_matches_full_forward_fp() {
+        let m = tiny();
+        let prompt = toks(5, 1);
+        let mut s = m.session(WrapPolicy::default());
+        let mut logits = s.prefill(&prompt).unwrap();
+        let mut ctx = prompt.clone();
+        for step in 0..4u32 {
+            let full = m.forward(&[ctx.clone()], None, None).unwrap();
+            assert_eq!(logits, full.row(ctx.len() - 1).to_vec(), "step {step}");
+            let next = argmax(&logits);
+            logits = s.decode_step(next).unwrap();
+            ctx.push(next);
+        }
+    }
+
+    #[test]
+    fn session_matches_oracle_int_muxq() {
+        let q = QuantizedGpt2::new(tiny(), IntMethod::Muxq, 8, 8);
+        let prompt = toks(6, 2);
+        let mut s = q.session(WrapPolicy::default());
+        let mut logits = s.prefill(&prompt).unwrap();
+        let mut ctx = prompt.clone();
+        for _ in 0..3 {
+            let oracle = q.forward_logits_session(&[ctx.clone()]).unwrap();
+            assert_eq!(logits, oracle.row(ctx.len() - 1).to_vec());
+            let next = argmax(&logits);
+            logits = s.decode_step(next).unwrap();
+            ctx.push(next);
+        }
+    }
+
+    #[test]
+    fn reprefill_wrap_stays_exact_past_n_ctx() {
+        // n_ctx = 12; generate far past it — every step's logits must be
+        // a full forward of the session's live window
+        let m = tiny();
+        let mut s = m.session(WrapPolicy::default());
+        let mut logits = s.prefill(&toks(8, 3)).unwrap();
+        for _ in 0..20 {
+            let next = argmax(&logits);
+            logits = s.decode_step(next).unwrap();
+            let win = s.state.window().to_vec();
+            assert!(win.len() <= 12);
+            let full = m.forward(&[win.clone()], None, None).unwrap();
+            assert_eq!(logits, full.row(win.len() - 1).to_vec());
+        }
+        assert!(s.state.prefills() > 1, "wrap must have re-prefilled");
+    }
+
+    #[test]
+    fn slide_wrap_keeps_ring_at_n_ctx() {
+        let m = tiny();
+        let mut s = m.session(WrapPolicy::Slide);
+        let mut logits = s.prefill(&toks(12, 4)).unwrap(); // full from the start
+        for _ in 0..10 {
+            let next = argmax(&logits);
+            logits = s.decode_step(next).unwrap();
+            assert_eq!(s.state.context_len(), 12);
+            assert!(logits.iter().all(|v| v.is_finite()));
+        }
+        assert_eq!(s.state.prefills(), 1, "slide never re-prefills");
+    }
+
+    #[test]
+    fn batched_decode_bit_exact_vs_solo() {
+        let q = QuantizedGpt2::new(tiny(), IntMethod::Muxq, 8, 8);
+        let m = SessionModel::Int(&q);
+        let prompts = [toks(3, 5), toks(7, 6), toks(5, 7)];
+        // solo runs
+        let mut solo_logits = Vec::new();
+        for p in &prompts {
+            let mut s = SessionState::new(&q.fp.cfg, WrapPolicy::default());
+            let first = argmax(&s.prefill(m, p).unwrap());
+            solo_logits.push(s.decode_step(m, first).unwrap());
+        }
+        // batched run over the same three sessions
+        let mut states: Vec<SessionState> =
+            prompts.iter().map(|_| SessionState::new(&q.fp.cfg, WrapPolicy::default())).collect();
+        let mut tokens = Vec::new();
+        for (st, p) in states.iter_mut().zip(&prompts) {
+            tokens.push(argmax(&st.prefill(m, p).unwrap()));
+        }
+        let mut refs: Vec<&mut SessionState> = states.iter_mut().collect();
+        let batch = decode_step_batch(m, &mut refs, &tokens).unwrap();
+        for (i, solo) in solo_logits.iter().enumerate() {
+            assert_eq!(batch.row(i), &solo[..], "session {i}");
+        }
+    }
+
+    #[test]
+    fn long_prompt_truncates_to_n_ctx() {
+        let m = tiny();
+        let mut s = m.session(WrapPolicy::default());
+        let long = toks(30, 8);
+        s.prefill(&long).unwrap();
+        assert_eq!(s.state.context_len(), 12);
+        assert_eq!(s.state.window(), &long[18..]);
+    }
+
+    #[test]
+    fn misuse_is_rejected() {
+        let m = tiny();
+        let mut s = m.session(WrapPolicy::default());
+        assert!(s.decode_step(0).is_err(), "step before prefill");
+        assert!(s.prefill(&[]).is_err(), "empty prompt");
+        let mut a = SessionState::new(&m.cfg, WrapPolicy::default());
+        a.prefill(SessionModel::Fp(&m), &[1, 2]).unwrap();
+        let mut refs = [&mut a];
+        assert!(decode_step_batch(SessionModel::Fp(&m), &mut refs, &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn argmax_last_max_wins() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 2);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+    }
+}

@@ -7,10 +7,12 @@
 //!
 //! Layer map:
 //! * [`runtime`] — PJRT client; loads the AOT-compiled HLO artifacts.
-//! * [`coordinator`] — serving layer: router, dynamic batcher, workers.
+//! * [`coordinator`] — serving layer: router, dynamic batcher, workers
+//!   (scoring) + continuous-batching token generation (`generation`).
 //! * [`quant`] — rust-native quantization engine (MUXQ, naive abs-max,
 //!   LLM.int8(), SmoothQuant) mirroring the python/jax reference.
-//! * [`gpt2`] — native f32 GPT-2 forward (baseline + Fig.1 capture).
+//! * [`gpt2`] — native f32 GPT-2 forward + KV-cache incremental decode
+//!   (baseline, Fig.1 capture, and the generation engine).
 //! * [`npusim`] — systolic-array cost model (hardware-efficiency study).
 //! * [`data`] — corpus generator, BPE tokenizer, tensor container.
 //! * [`util`] — in-repo substrates: CLI parsing, bench harness,

@@ -127,6 +127,51 @@ impl Plan {
         }
     }
 
+    /// The autoregressive decode-step plan: the same lowering as
+    /// [`Plan::build`] at `t = 1` — one token's activations against the
+    /// full `[k, n]` weight. At M=1 the array streams the whole weight
+    /// matrix to retire only `k·n` MACs, so DMA dominates compute by
+    /// roughly the arithmetic-intensity deficit (`array utilization ~
+    /// 1/array_dim`): decode latency is **bytes-dominated**, the regime
+    /// where the INT8-vs-FP16 operand-size halving buys latency directly
+    /// (the rust engine's GEMV path is the kernel-level twin).
+    pub fn decode_step(
+        cfg: &NpuConfig,
+        method: Method,
+        k: usize,
+        n: usize,
+        r: usize,
+        bits: u32,
+        exp_factor: u32,
+    ) -> Plan {
+        Self::build(cfg, method, 1, k, n, r, bits, exp_factor)
+    }
+
+    /// (compute, dma) cycle totals across the plan's GEMMs — the split
+    /// [`Plan::cost`] folds away via sequential composition.
+    pub fn compute_dma_split(&self, cfg: &NpuConfig) -> (f64, f64) {
+        self.gemms.iter().fold((0.0, 0.0), |(c, d), g| {
+            let gc = gemm_cost(cfg, g.m, g.k, g.n, g.prec);
+            (c + gc.compute_cycles, d + gc.dma_cycles)
+        })
+    }
+
+    /// Whether DMA traffic (not MACs) bounds this plan's latency — true
+    /// for every decode-step plan on realistic configs.
+    pub fn is_memory_bound(&self, cfg: &NpuConfig) -> bool {
+        let (compute, dma) = self.compute_dma_split(cfg);
+        dma > compute
+    }
+
+    /// Bytes moved per execution of this plan (operands + results; at
+    /// M=1 the `k·n` weight stream dominates).
+    pub fn bytes_per_step(&self) -> f64 {
+        self.gemms
+            .iter()
+            .map(|g| (g.m * g.k + g.k * g.n) as f64 * g.prec.bytes() + (g.m * g.n) as f64 * 2.0)
+            .sum()
+    }
+
     /// Model a deployment that re-packs weight operands on every call —
     /// what the rust engine did before `PackedMatI8`: each GEMM's [k, n]
     /// weight matrix is rewritten once into the K-major panel layout
@@ -236,6 +281,50 @@ mod tests {
         // than the uniform-INT plan's
         let mixed = Plan::build(&cfg, Method::LlmInt8, 4096, 4096, 4096, 16, 8, 2);
         assert!(mixed.widened_mac_speedup(&cfg) < s);
+    }
+
+    #[test]
+    fn decode_step_int_is_memory_bound_fp16_is_not() {
+        // M=1 INT: the whole weight streams to retire only k·n MACs —
+        // DMA dominates. FP16 decode on the INT-oriented NPU stays
+        // compute-bound (4x-slow FP16 MACs never reach the bandwidth
+        // roof) — the roofline version of the paper's INT8 premise.
+        let cfg = NpuConfig::default();
+        for method in [Method::Naive, Method::Muxq] {
+            let p = Plan::decode_step(&cfg, method, 768, 2304, 12, 8, 2);
+            let (compute, dma) = p.compute_dma_split(&cfg);
+            assert!(p.is_memory_bound(&cfg), "{method:?}: compute {compute} dma {dma}");
+        }
+        let fp = Plan::decode_step(&cfg, Method::Fp16, 768, 2304, 0, 16, 1);
+        assert!(!fp.is_memory_bound(&cfg), "fp16 decode is MAC-bound here");
+        // and a large-batch INT plan is compute-bound: decode is special
+        let batch = Plan::build(&cfg, Method::Muxq, 4096, 4096, 4096, 12, 8, 2);
+        assert!(!batch.is_memory_bound(&cfg), "big-batch plan must be compute-bound");
+    }
+
+    #[test]
+    fn decode_latency_is_bytes_dominated() {
+        // for the INT decode plan, latency IS the byte stream: cycles ==
+        // dma == bytes / bandwidth, with compute fully hidden under it
+        let cfg = NpuConfig::default();
+        let p = Plan::decode_step(&cfg, Method::Naive, 768, 2304, 0, 8, 1);
+        let (compute, dma) = p.compute_dma_split(&cfg);
+        assert!(dma > 2.0 * compute, "compute {compute} vs dma {dma}");
+        let bytes_per_cycle = cfg.dram_gbps * 1e9 / (cfg.freq_ghz * 1e9);
+        assert!((dma - p.bytes_per_step() / bytes_per_cycle).abs() < 1e-6);
+        assert_eq!(p.cost(&cfg).cycles(), dma, "latency == byte-stream time");
+    }
+
+    #[test]
+    fn decode_muxq_overhead_tiny_and_beats_llmint8() {
+        let cfg = NpuConfig::default();
+        let r = 8;
+        let naive = Plan::decode_step(&cfg, Method::Naive, 768, 2304, r, 8, 1);
+        let muxq = Plan::decode_step(&cfg, Method::Muxq, 768, 2304, r, 8, 1);
+        let mixed = Plan::decode_step(&cfg, Method::LlmInt8, 768, 2304, r, 8, 1);
+        let overhead = muxq.cost(&cfg).cycles() / naive.cost(&cfg).cycles() - 1.0;
+        assert!(overhead >= 0.0 && overhead < 0.05, "muxq decode overhead {overhead}");
+        assert!(muxq.cost(&cfg).cycles() < mixed.cost(&cfg).cycles());
     }
 
     #[test]

@@ -243,6 +243,42 @@ pub fn model_cost(
     total
 }
 
+/// Cost of ONE autoregressive decode step (t = 1) through a model's
+/// projection stack — the latency-bound serving regime
+/// (`coordinator::generation`). At t=1 every projection is memory-bound
+/// (see [`gemm_plan::Plan::decode_step`]): latency ≈ weight bytes /
+/// bandwidth, which is exactly why uniform INT8 — half of FP16's bytes —
+/// wins decode latency even where it ties on MACs, and why LLM.int8()'s
+/// FP16 outlier leg hurts most here.
+pub fn decode_cost(
+    cfg: &NpuConfig,
+    method: Method,
+    n_layer: usize,
+    d: usize,
+    r: usize,
+    bits: u32,
+) -> Cost {
+    model_cost(cfg, method, n_layer, 1, d, r, bits)
+}
+
+/// Simulated steady-state decode throughput (tokens/s) implied by
+/// [`decode_cost`]. (KV-cache attention traffic is outside the model,
+/// consistent with [`model_cost`] pricing projections only.)
+pub fn decode_tok_per_s(
+    cfg: &NpuConfig,
+    method: Method,
+    n_layer: usize,
+    d: usize,
+    r: usize,
+    bits: u32,
+) -> f64 {
+    let us = decode_cost(cfg, method, n_layer, d, r, bits).latency_us(cfg);
+    if us <= 0.0 {
+        return 0.0;
+    }
+    1e6 / us
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -326,6 +362,23 @@ mod tests {
         let a = model_cost(&cfg, Method::Naive, 4, T, D, 0, 4);
         let b = model_cost(&cfg, Method::Naive, 4, T, D, 0, 8);
         assert!(a.cycles() < b.cycles());
+    }
+
+    #[test]
+    fn decode_tok_per_s_ordering() {
+        // steady-state decode throughput: uniform INT8 (muxq) pays only
+        // the r extra channels vs naive, and beats both the mixed
+        // pipeline and fp16 — at decode the gap is byte-driven
+        let cfg = NpuConfig::default();
+        let r = 8;
+        let tps = |m| decode_tok_per_s(&cfg, m, 12, D, r, 8);
+        let (naive, muxq, mixed, fp) =
+            (tps(Method::Naive), tps(Method::Muxq), tps(Method::LlmInt8), tps(Method::Fp16));
+        assert!(naive > 0.0 && muxq > 0.0);
+        assert!(naive >= muxq, "naive {naive} vs muxq {muxq}");
+        assert!(muxq / naive > 0.95, "muxq decode overhead must be tiny");
+        assert!(muxq > mixed, "muxq {muxq} vs llmint8 {mixed}");
+        assert!(muxq > fp, "muxq {muxq} vs fp16 {fp}");
     }
 
     #[test]

@@ -23,9 +23,12 @@
 //! | LLM.int8() | [`llmint8::llmint8_matmul`] | normal channels [`gemm::matmul_i8`], outlier columns [`gemm::matmul_f32`] (the FP16 stand-in) + gather/scatter |
 //! | SmoothQuant | transform only | rescales X and W, then any of the above runs unchanged |
 //! | per-group | fake-quant only | no INT GEMM route — scale storage/rescale overhead is the point under test |
+//! | any, M ≤ [`packed::TileConfig::gemv_max_m`] (decode steps) | same entry points | [`packed::matmul_i8_gemv_into`] / the rows-subset GEMV twin — A row streamed in place, no tile cascade, pair accumulation kept; auto-routed inside both `_into` entries |
 //!
 //! The deployment path ([`crate::gpt2::QuantizedGpt2::nll_per_seq`])
-//! uses the same packed kernels with weights packed once at load time.
+//! uses the same packed kernels with weights packed once at load time;
+//! the incremental-decode path (`crate::gpt2::session`) runs its
+//! per-token projections through the skinny GEMV route.
 
 pub mod absmax;
 pub mod gemm;

@@ -42,6 +42,16 @@
 //!   weight gather or re-pack. The contraction walks the index list in
 //!   pairs, so it pair-accumulates too (odd-length lists take one scalar
 //!   tail step).
+//! * A **skinny-M GEMV path** ([`matmul_i8_gemv_into`], routed
+//!   automatically for M ≤ [`TileConfig::gemv_max_m`]): autoregressive
+//!   decode issues M=1 projections every token, where the register-tile
+//!   cascade's per-call costs (A-tile interleave copy, tile dispatch,
+//!   row-panel thread setup) are comparable to the whole contraction.
+//!   The GEMV kernels stream each A row *in place* (no interleave
+//!   buffer, no threads) against the same packed panels, keeping the
+//!   i16 pair accumulation — so decode reuses the exact packed weights
+//!   and overflow proof of the batch path. Both the dense and the
+//!   rows-subset (Aux) contractions have GEMV twins.
 //! * [`ParallelGemm`] — row-panel parallelism over scoped threads with a
 //!   sequential fallback for small shapes (thread spawn costs more than
 //!   the GEMM below ~2M MACs).
@@ -152,6 +162,22 @@ impl TileConfig {
         } else {
             MR
         }
+    }
+
+    /// Largest M routed to the GEMV path (`MUXQ_GEMV_M` override, default
+    /// 4; 0 disables the route). Above this the register-tile cascade
+    /// amortizes its A-interleave and dispatch costs; at decode widths it
+    /// does not.
+    pub fn gemv_max_m() -> usize {
+        static GEMV_M: OnceLock<usize> = OnceLock::new();
+        *GEMV_M.get_or_init(|| {
+            std::env::var("MUXQ_GEMV_M").ok().and_then(|v| v.parse().ok()).unwrap_or(4)
+        })
+    }
+
+    /// Whether an `m`-row GEMM takes the skinny GEMV route.
+    pub fn use_gemv(m: usize) -> bool {
+        m <= Self::gemv_max_m()
     }
 }
 
@@ -332,8 +358,14 @@ pub fn matmul_i8_packed_with(a: &MatI8, bp: &PackedMatI8, cfg: ParallelGemm) -> 
 /// C = A_i8 @ B_packed written into a reusable accumulator (resized in
 /// place; every element is overwritten, so no zeroing pass is needed).
 /// Kernel and register tile are auto-selected ([`Kernel::Auto`],
-/// [`TileConfig::mr_for`]).
+/// [`TileConfig::mr_for`]); skinny shapes (M ≤
+/// [`TileConfig::gemv_max_m`], the decode regime) skip the tile cascade
+/// and take the GEMV path.
 pub fn matmul_i8_packed_into(a: &MatI8, bp: &PackedMatI8, c: &mut MatI32, cfg: ParallelGemm) {
+    if TileConfig::use_gemv(a.rows) {
+        matmul_i8_gemv_into(a, bp, c, Kernel::Auto);
+        return;
+    }
     matmul_i8_packed_kernel_into(a, bp, c, cfg, Kernel::Auto, TileConfig::mr_for(a.rows));
 }
 
@@ -377,13 +409,37 @@ pub fn matmul_i8_rows_subset_into(
     debug_assert!(idx.iter().all(|&k| k < bp.rows));
     let (m, n) = (a.rows, bp.cols);
     let pair = Kernel::Auto.use_pair(bp);
-    let mr = TileConfig::mr_for(m);
     c.rows = m;
     c.cols = n;
     c.data.resize(m * n, 0);
+    if TileConfig::use_gemv(m) {
+        // skinny Aux route (single decode rows): walk the index list
+        // straight off the A row, no interleave, no threads
+        gemv_dispatch(a, bp, Some(idx), pair, &mut c.data);
+        return;
+    }
+    let mr = TileConfig::mr_for(m);
     run_row_parallel(m, n, idx.len(), cfg, &mut c.data, &|row0, row1, chunk| {
         gemm_rows(a, bp, Some(idx), pair, mr, row0, row1, chunk);
     });
+}
+
+/// Skinny-M GEMV against the packed panels: `C = A @ B_packed` with the
+/// A rows streamed in place — no A-tile interleave buffer, no tile
+/// cascade, no thread setup. The per-call overheads the register-tiled
+/// path amortizes over many output rows are exactly what an M=1 decode
+/// projection cannot amortize. Pair accumulation (and the -128 fallback
+/// dispatch) match the batch path, so results are bit-identical to it.
+/// `a.rows` may be anything, but the route is intended for (and
+/// auto-selected at) M ≤ [`TileConfig::gemv_max_m`].
+pub fn matmul_i8_gemv_into(a: &MatI8, bp: &PackedMatI8, c: &mut MatI32, kernel: Kernel) {
+    assert_eq!(a.cols, bp.rows, "inner dims {}x{}", a.cols, bp.rows);
+    let (m, n) = (a.rows, bp.cols);
+    let pair = kernel.use_pair(bp);
+    c.rows = m;
+    c.cols = n;
+    c.data.resize(m * n, 0);
+    gemv_dispatch(a, bp, None, pair, &mut c.data);
 }
 
 /// Split output rows into near-equal chunks and run `body(row0, row1,
@@ -517,6 +573,97 @@ fn tiles<const M: usize, const N: usize>(
         i += M;
     }
     i
+}
+
+/// GEMV driver: panel-outer / row-inner, so one B panel stays hot in L1
+/// across the (few) A rows; each output element is written exactly once.
+/// Monomorphizes on the packed panel width.
+fn gemv_dispatch(a: &MatI8, bp: &PackedMatI8, idx: Option<&[usize]>, pair: bool, c: &mut [i32]) {
+    if bp.nr == 8 {
+        gemv_panels::<8>(a, bp, idx, pair, c);
+    } else {
+        gemv_panels::<4>(a, bp, idx, pair, c);
+    }
+}
+
+fn gemv_panels<const N: usize>(
+    a: &MatI8,
+    bp: &PackedMatI8,
+    idx: Option<&[usize]>,
+    pair: bool,
+    c: &mut [i32],
+) {
+    debug_assert_eq!(N, bp.nr);
+    let n = bp.cols;
+    for p in 0..bp.panels() {
+        let j0 = p * N;
+        let jw = N.min(n - j0);
+        let panel = bp.panel(p);
+        for i in 0..a.rows {
+            let arow = a.row(i);
+            let mut acc = [[0i32; N]; 1];
+            match (idx, pair) {
+                (None, true) => gemv_pair::<N>(arow, panel, &mut acc[0]),
+                (Some(ix), true) => gemv_pair_idx::<N>(arow, ix, panel, &mut acc[0]),
+                // the wide fallback is the existing 1-row microkernels
+                (None, false) => micro_wide::<1, N>(arow.len(), &[arow], panel, &mut acc),
+                (Some(ix), false) => micro_wide_idx::<1, N>(ix, &[arow], panel, &mut acc),
+            }
+            c[i * n + j0..][..jw].copy_from_slice(&acc[0][..jw]);
+        }
+    }
+}
+
+/// Dense GEMV pair step: A row read in place, two k's per i32 widening.
+/// Odd K takes one scalar tail step against the last real B row (the
+/// packed zero-pad row is never touched, so the A row needs no padding).
+#[inline(always)]
+fn gemv_pair<const N: usize>(arow: &[i8], panel: &[i8], acc: &mut [i32; N]) {
+    let k = arow.len();
+    for t in 0..k / 2 {
+        let a_lo = arow[2 * t] as i16;
+        let a_hi = arow[2 * t + 1] as i16;
+        let bb = &panel[2 * t * N..2 * t * N + 2 * N];
+        for j in 0..N {
+            let p = a_lo * bb[j] as i16;
+            let q = a_hi * bb[N + j] as i16;
+            acc[j] += (p + q) as i32;
+        }
+    }
+    if k % 2 == 1 {
+        let av = arow[k - 1] as i32;
+        let b = &panel[(k - 1) * N..(k - 1) * N + N];
+        for j in 0..N {
+            acc[j] += av * b[j] as i32;
+        }
+    }
+}
+
+/// Rows-subset GEMV pair step (Aux GEMM at decode): the contraction
+/// walks `idx` two entries at a time, B rows from arbitrary panel
+/// offsets, the A pair contiguous in the row itself.
+#[inline(always)]
+fn gemv_pair_idx<const N: usize>(arow: &[i8], idx: &[usize], panel: &[i8], acc: &mut [i32; N]) {
+    let pairs = idx.len() / 2;
+    for t in 0..pairs {
+        let a_lo = arow[2 * t] as i16;
+        let a_hi = arow[2 * t + 1] as i16;
+        let b0 = &panel[idx[2 * t] * N..idx[2 * t] * N + N];
+        let b1 = &panel[idx[2 * t + 1] * N..idx[2 * t + 1] * N + N];
+        for j in 0..N {
+            let p = a_lo * b0[j] as i16;
+            let q = a_hi * b1[j] as i16;
+            acc[j] += (p + q) as i32;
+        }
+    }
+    if idx.len() % 2 == 1 {
+        let t = idx.len() - 1;
+        let av = arow[t] as i32;
+        let b = &panel[idx[t] * N..idx[t] * N + N];
+        for j in 0..N {
+            acc[j] += av * b[j] as i32;
+        }
+    }
 }
 
 /// i16 pair-accumulation microkernel: `kp` K-pairs, both operands
@@ -828,6 +975,90 @@ mod tests {
                 let cfg = ParallelGemm { threads: 3, min_parallel_macs: 0 };
                 matmul_i8_rows_subset_into(&a, &bp, idx, &mut par, cfg);
                 assert_eq!(par.data, want.data, "parallel idx {idx:?} nr {nr}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_matches_naive_skinny_shapes() {
+        // the decode regime: M in 1..=4, odd/even K, ragged N tails,
+        // both panel widths, explicit pair and wide kernels
+        for &(m, k, n) in &[(1, 1, 1), (1, 7, 5), (1, 64, 48), (2, 9, 11), (3, 16, 4), (4, 33, 13)]
+        {
+            let a = rand_i8(m, k, 300 + m as u64 * 7 + k as u64);
+            let b = rand_i8(k, n, 400 + n as u64);
+            let want = matmul_naive(&a, &b);
+            for nr in [4usize, 8] {
+                let bp = PackedMatI8::pack_with(&b, nr);
+                for kernel in [Kernel::PairI16, Kernel::WideI32, Kernel::Auto] {
+                    let mut c = MatI32::zeros(0, 0);
+                    matmul_i8_gemv_into(&a, &bp, &mut c, kernel);
+                    assert_eq!(c.data, want.data, "{m}x{k}x{n} {kernel:?} nr {nr}");
+                    assert_eq!((c.rows, c.cols), (m, n));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_neg128_weights_fall_back_to_wide() {
+        let a = rand_i8(1, 10, 1);
+        let mut b = MatI8::zeros(10, 6);
+        b.data.iter_mut().for_each(|v| *v = i8::MIN);
+        let bp = PackedMatI8::pack(&b);
+        assert!(bp.has_neg128());
+        let mut c = MatI32::zeros(0, 0);
+        matmul_i8_gemv_into(&a, &bp, &mut c, Kernel::Auto);
+        assert_eq!(c.data, matmul_naive(&a, &b).data);
+    }
+
+    #[test]
+    fn skinny_auto_route_matches_tile_cascade() {
+        // matmul_i8_packed_into routes M <= gemv_max_m through the GEMV
+        // path; results must be bit-identical to the explicit-tile path
+        assert_eq!(TileConfig::gemv_max_m(), 4);
+        assert!(TileConfig::use_gemv(1) && TileConfig::use_gemv(4));
+        assert!(!TileConfig::use_gemv(5));
+        for m in 1..=4usize {
+            let a = rand_i8(m, 31, 500 + m as u64);
+            let b = rand_i8(31, 17, 600);
+            let bp = PackedMatI8::pack(&b);
+            let mut via_auto = MatI32::zeros(0, 0);
+            matmul_i8_packed_into(&a, &bp, &mut via_auto, ParallelGemm::sequential());
+            let mut via_tiles = MatI32::zeros(0, 0);
+            matmul_i8_packed_kernel_into(
+                &a,
+                &bp,
+                &mut via_tiles,
+                ParallelGemm::sequential(),
+                Kernel::Auto,
+                4,
+            );
+            assert_eq!(via_auto.data, via_tiles.data, "m = {m}");
+        }
+    }
+
+    #[test]
+    fn gemv_rows_subset_matches_gather() {
+        // Aux-GEMM decode shape: single row against scattered weight rows
+        let b = rand_i8(21, 9, 8);
+        for idx in [&[0usize][..], &[3, 7][..], &[1, 4, 9, 16, 20][..]] {
+            for m in 1..=4usize {
+                let a = rand_i8(m, idx.len(), 9 + m as u64);
+                for nr in [4usize, 8] {
+                    let bp = PackedMatI8::pack_with(&b, nr);
+                    let mut got = MatI32::zeros(0, 0);
+                    matmul_i8_rows_subset_into(&a, &bp, idx, &mut got, ParallelGemm::sequential());
+                    let mut gathered = MatI8::zeros(idx.len(), 9);
+                    for (t, &r) in idx.iter().enumerate() {
+                        gathered.data[t * 9..(t + 1) * 9].copy_from_slice(b.row(r));
+                    }
+                    assert_eq!(
+                        got.data,
+                        matmul_naive(&a, &gathered).data,
+                        "m {m} idx {idx:?} nr {nr}"
+                    );
+                }
             }
         }
     }

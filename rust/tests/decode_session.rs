@@ -1,0 +1,243 @@
+//! Decode-subsystem oracles: the incremental KV-cache path must be
+//! BIT-EXACT against a full forward over the same prefix — across ragged
+//! prompt lengths, decode depths, cache wrap at `n_ctx`, continuous
+//! (multi-session) batching, and both true-INT variants. If any of the
+//! ring indexing, position bookkeeping, skinny-GEMV routing or row-wise
+//! quantization semantics drifted from the batch path, integer GEMM
+//! exactness plus shared f32 primitives would surface it here as an
+//! inequality, not an epsilon.
+
+use muxq::gpt2::{
+    argmax, decode_step_batch, Gpt2Model, IntMethod, KvCache, QuantizedGpt2, SessionModel,
+    SessionState, WrapPolicy,
+};
+use muxq::util::proptest::{prop, prop_assert, Gen, PropResult};
+use std::collections::VecDeque;
+
+/// Small random model: 1–3 layers, d_head 4–8, n_ctx 8–16, vocab 32.
+fn model_for(g: &mut Gen) -> Gpt2Model {
+    let n_layer = g.usize(1, 3);
+    let n_head = *g.choice(&[1usize, 2, 4]);
+    let d_model = n_head * g.usize(4, 8);
+    let n_ctx = g.usize(8, 16);
+    Gpt2Model::test_model(n_layer, d_model, n_head, n_ctx, 32, g.u64(1, 1 << 30))
+}
+
+fn prompt_for(g: &mut Gen, len: usize) -> Vec<u32> {
+    (0..len).map(|_| g.usize(0, 31) as u32).collect()
+}
+
+fn err_str<T>(r: anyhow::Result<T>) -> Result<T, String> {
+    r.map_err(|e| format!("{e:#}"))
+}
+
+#[test]
+fn prop_fp_decode_bit_exact_vs_full_forward() {
+    prop("fp prefill+decode == full forward", |g| {
+        let m = model_for(g);
+        let n_ctx = m.cfg.n_ctx;
+        let plen = g.usize(1, n_ctx - 1);
+        let steps = g.usize(1, n_ctx - plen);
+        let prompt = prompt_for(g, plen);
+        let mut s = m.session(WrapPolicy::default());
+        let mut logits = err_str(s.prefill(&prompt))?;
+        // prefill returns the last prompt row's logits
+        let mut ctx = prompt.clone();
+        for step in 0..=steps {
+            let full = err_str(m.forward(&[ctx.clone()], None, None))?;
+            prop_assert(
+                logits[..] == *full.row(ctx.len() - 1),
+                format!("len {} step {step}: incremental != full forward", ctx.len()),
+            )?;
+            if step == steps {
+                break;
+            }
+            let next = argmax(&logits);
+            logits = err_str(s.decode_step(next))?;
+            ctx.push(next);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_int_decode_bit_exact_vs_session_oracle() {
+    // both IntMethods; sometimes with an injected outlier channel so the
+    // MUXQ per-row masks are genuinely non-empty
+    prop("int prefill+decode == rowwise full-forward oracle", |g| {
+        let method = if g.bool() { IntMethod::Muxq } else { IntMethod::Naive };
+        let mut fp = model_for(g);
+        if g.bool() {
+            let ch = g.usize(0, fp.cfg.d_model - 1);
+            fp.scale_ln1_channel(0, ch, g.f32(8.0, 20.0));
+        }
+        let ia_bits = *g.choice(&[5u32, 8]);
+        let q = QuantizedGpt2::new(fp, method, ia_bits, 8);
+        let n_ctx = q.fp.cfg.n_ctx;
+        let plen = g.usize(1, n_ctx - 1);
+        let steps = g.usize(1, (n_ctx - plen).min(4));
+        let prompt = prompt_for(g, plen);
+        let mut s = q.session(WrapPolicy::default());
+        let mut logits = err_str(s.prefill(&prompt))?;
+        let mut ctx = prompt.clone();
+        for step in 0..=steps {
+            let oracle = err_str(q.forward_logits_session(&[ctx.clone()]))?;
+            prop_assert(
+                logits[..] == *oracle.row(ctx.len() - 1),
+                format!("{method:?} ia{ia_bits} len {} step {step}", ctx.len()),
+            )?;
+            if step == steps {
+                break;
+            }
+            let next = argmax(&logits);
+            logits = err_str(s.decode_step(next))?;
+            ctx.push(next);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wrap_reprefill_exact_past_n_ctx() {
+    // generate well past the context window: under the Reprefill policy
+    // every step's logits must still equal a full forward over the
+    // session's live window — wrap costs latency, never exactness
+    prop("reprefill wrap == full forward over live window", |g| {
+        let m = model_for(g);
+        let n_ctx = m.cfg.n_ctx;
+        let keep = g.usize(0, n_ctx - 1); // 0 = policy default (3/4 n_ctx)
+        let plen = g.usize(1, n_ctx);
+        let steps = n_ctx + g.usize(1, 6); // guaranteed to wrap
+        let mut s = m.session(WrapPolicy::Reprefill { keep });
+        let mut logits = err_str(s.prefill(&prompt_for(g, plen)))?;
+        for step in 0..steps {
+            let next = argmax(&logits);
+            logits = err_str(s.decode_step(next))?;
+            let win = s.state.window().to_vec();
+            prop_assert(win.len() <= n_ctx, format!("window {} > n_ctx", win.len()))?;
+            let full = err_str(m.forward(&[win.clone()], None, None))?;
+            prop_assert(
+                logits[..] == *full.row(win.len() - 1),
+                format!("keep {keep} step {step} window {}", win.len()),
+            )?;
+        }
+        prop_assert(s.state.prefills() > 1, "must have re-prefilled")
+    });
+}
+
+#[test]
+fn prop_continuous_batch_bit_exact_vs_solo() {
+    // G sessions with ragged prompts advanced by coalesced decode steps:
+    // every logits row must equal the same session stepped alone — the
+    // invariant that makes the generation server's continuous batching
+    // transparent to clients
+    prop("coalesced decode == solo decode", |g| {
+        let use_int = g.bool();
+        let fp = model_for(g);
+        let cfg = fp.cfg.clone();
+        let q;
+        let sm = if use_int {
+            q = QuantizedGpt2::new(fp, IntMethod::Muxq, 8, 8);
+            SessionModel::Int(&q)
+        } else {
+            q = QuantizedGpt2::new(fp, IntMethod::Naive, 8, 8); // fp lives inside
+            SessionModel::Fp(&q.fp)
+        };
+        let n = g.usize(2, 4);
+        let prompts: Vec<Vec<u32>> = (0..n)
+            .map(|_| {
+                let len = g.usize(1, cfg.n_ctx / 2);
+                prompt_for(g, len)
+            })
+            .collect();
+        let steps = g.usize(1, 3);
+        // solo reference
+        let mut solo: Vec<Vec<Vec<f32>>> = Vec::new();
+        for p in &prompts {
+            let mut st = SessionState::new(&cfg, WrapPolicy::default());
+            let mut tok = argmax(&err_str(st.prefill(sm, p))?);
+            let mut rows = Vec::new();
+            for _ in 0..steps {
+                let l = err_str(st.decode_step(sm, tok))?;
+                tok = argmax(&l);
+                rows.push(l);
+            }
+            solo.push(rows);
+        }
+        // coalesced
+        let mut states: Vec<SessionState> =
+            prompts.iter().map(|_| SessionState::new(&cfg, WrapPolicy::default())).collect();
+        let mut tokens: Vec<u32> = Vec::new();
+        for (st, p) in states.iter_mut().zip(&prompts) {
+            tokens.push(argmax(&err_str(st.prefill(sm, p))?));
+        }
+        for step in 0..steps {
+            let mut refs: Vec<&mut SessionState> = states.iter_mut().collect();
+            let batch = err_str(decode_step_batch(sm, &mut refs, &tokens))?;
+            for (i, rows) in solo.iter().enumerate() {
+                prop_assert(
+                    *batch.row(i) == rows[step][..],
+                    format!("int={use_int} session {i} step {step}"),
+                )?;
+            }
+            tokens = (0..n).map(|i| argmax(batch.row(i))).collect();
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kv_ring_matches_deque_reference() {
+    // the ring buffer against a straightforward VecDeque model: logical
+    // order, eviction reporting and wrap-around indexing
+    prop("kv ring == deque reference", |g| {
+        let cap = g.usize(1, 8);
+        let d = g.usize(1, 4);
+        let mut ring = KvCache::new(cap, d);
+        let mut reference: VecDeque<(Vec<f32>, Vec<f32>)> = VecDeque::new();
+        let pushes = g.usize(1, 3 * cap);
+        for _ in 0..pushes {
+            let k = g.vec_f32(d, -1.0, 1.0);
+            let v = g.vec_f32(d, -1.0, 1.0);
+            let evicted = ring.push(&k, &v);
+            reference.push_back((k, v));
+            let should_evict = reference.len() > cap;
+            if should_evict {
+                reference.pop_front();
+            }
+            prop_assert(evicted == should_evict, "eviction report")?;
+            prop_assert(ring.len() == reference.len(), "length")?;
+            check_ring(&ring, &reference)?;
+        }
+        ring.clear();
+        prop_assert(ring.is_empty(), "clear")
+    });
+}
+
+fn check_ring(ring: &KvCache, reference: &VecDeque<(Vec<f32>, Vec<f32>)>) -> PropResult {
+    for (j, (rk, rv)) in reference.iter().enumerate() {
+        prop_assert(
+            ring.k_row(j) == &rk[..] && ring.v_row(j) == &rv[..],
+            format!("logical row {j} mismatch"),
+        )?;
+    }
+    Ok(())
+}
+
+#[test]
+fn slide_policy_survives_long_generation() {
+    // Slide is documented approximate (positions clamp after wrap), so
+    // there is no full-forward oracle — pin the operational contract:
+    // fixed memory, finite logits, O(1) steps forever, no re-prefills
+    let m = Gpt2Model::test_model(2, 16, 2, 10, 32, 99);
+    let mut s = m.session(WrapPolicy::Slide);
+    let mut logits = s.prefill(&[1, 2, 3, 4, 5, 6, 7]).unwrap();
+    for step in 0..40 {
+        let next = argmax(&logits);
+        logits = s.decode_step(next).unwrap();
+        assert!(s.state.context_len() <= 10, "step {step}");
+        assert!(logits.iter().all(|v| v.is_finite()), "step {step}");
+    }
+    assert_eq!(s.state.prefills(), 1);
+    assert_eq!(s.state.context_len(), 10);
+}

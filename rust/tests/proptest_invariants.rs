@@ -12,8 +12,8 @@ use muxq::quant::muxq::{
     outlier_count, outlier_mask, reconstruct, MuxqParams,
 };
 use muxq::quant::packed::{
-    matmul_i8_packed_kernel_into, matmul_i8_packed_with, matmul_i8_rows_subset_into, Kernel,
-    PackedMatI8, ParallelGemm,
+    matmul_i8_gemv_into, matmul_i8_packed_kernel_into, matmul_i8_packed_with,
+    matmul_i8_rows_subset_into, Kernel, PackedMatI8, ParallelGemm,
 };
 use muxq::quant::{gemm, MatF32};
 use muxq::util::proptest::{prop, prop_assert, Gen};
@@ -239,6 +239,49 @@ fn prop_pair_accum_bit_exact_vs_triple_loop() {
             )?;
         }
         Ok(())
+    });
+}
+
+#[test]
+fn prop_gemv_bit_exact_vs_triple_loop() {
+    // the skinny-M decode path (no A interleave, no tile cascade) vs the
+    // naive triple loop: random M <= 4, odd/even K, ragged N, both panel
+    // widths, occasional -128-laden B (forcing the wide fallback), plus
+    // the rows-subset (Aux) GEMV against a random index list
+    prop("skinny-M GEMV == naive triple loop", |g| {
+        let m = g.usize(1, 4);
+        let k = g.usize(1, 48);
+        let n = g.usize(1, 24);
+        let a = gen_i8(g, m, k);
+        let mut b = gen_i8(g, k, n);
+        if g.bool() {
+            let r = g.usize(0, b.data.len() - 1);
+            b.data[r] = i8::MIN; // wide-fallback territory
+        }
+        let nr = *g.choice(&[4usize, 8]);
+        let bp = PackedMatI8::pack_with(&b, nr);
+        let want = matmul_i8_triple(&a, &b);
+        let mut c = MatI32::zeros(0, 0);
+        matmul_i8_gemv_into(&a, &bp, &mut c, Kernel::Auto);
+        prop_assert(c.data == want.data, format!("gemv {m}x{k}x{n} nr {nr}"))?;
+        // auto-routed entry (takes the GEMV route for M <= 4)
+        let routed = matmul_i8_packed_with(&a, &bp, ParallelGemm::sequential());
+        prop_assert(routed.data == want.data, format!("routed {m}x{k}x{n}"))?;
+        // rows-subset GEMV: compact A against scattered B rows
+        let big_rows = g.usize(1, 20);
+        let big = gen_i8(g, big_rows, n);
+        let r = g.usize(1, big.rows.min(8));
+        let idx: Vec<usize> = (0..r).map(|_| g.usize(0, big.rows - 1)).collect();
+        let ac = gen_i8(g, m, r);
+        let bigp = PackedMatI8::pack_with(&big, nr);
+        let mut got = MatI32::zeros(0, 0);
+        matmul_i8_rows_subset_into(&ac, &bigp, &idx, &mut got, ParallelGemm::sequential());
+        let mut gathered = MatI8::zeros(r, n);
+        for (t, &row) in idx.iter().enumerate() {
+            gathered.data[t * n..(t + 1) * n].copy_from_slice(big.row(row));
+        }
+        let want_aux = matmul_i8_triple(&ac, &gathered);
+        prop_assert(got.data == want_aux.data, format!("subset gemv m {m} r {r} nr {nr}"))
     });
 }
 
