@@ -15,7 +15,7 @@ use muxq::harness::{eval_ppl, eval_windows, table_windows};
 use muxq::npusim::gemm_plan::Plan;
 use muxq::npusim::NpuConfig;
 use muxq::quant::muxq::{fq_muxq, MuxqParams};
-use muxq::quant::{Granularity, MatF32, Method};
+use muxq::quant::{EngineSpec, Granularity, MatF32, Method};
 
 fn main() -> Result<()> {
     // ---- matrix-level error sweep (pure rust engine)
@@ -45,8 +45,13 @@ fn main() -> Result<()> {
             let windows = eval_windows(table_windows())?;
             println!("\nmodel-level: sim-small per-tensor perplexity (IA=6, W=8)");
             println!("{:>10} {:>12}", "exp", "ppl");
-            for (exp, tag) in [(1, "muxq-pt-e1"), (2, "muxq-pt"), (3, "muxq-pt-e3")] {
-                let key = VariantKey::eval("sim-small", tag);
+            for exp in [1u32, 2, 3] {
+                // the canonical tag spells exp_factor itself (-e suffix
+                // for non-default values) — no hand-kept tag list
+                let spec = EngineSpec::muxq()
+                    .with_granularity(Granularity::PerTensor, Granularity::PerTensor)
+                    .with_muxq(MuxqParams { theta: 6.0, exp_factor: exp });
+                let key = VariantKey::eval("sim-small", &spec.tag());
                 if registry.meta(&key).is_none() {
                     continue;
                 }

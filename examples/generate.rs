@@ -1,30 +1,37 @@
 //! Text generation on the incremental-decode session API
-//! (`gpt2::session`): prefill the prompt ONCE at its TRUE length, then
-//! O(context) decode steps through the per-layer KV caches — replacing
-//! the old fixed-shape path that re-ran the full O(S²) forward for every
-//! token and left-padded short prompts with token 0 (attention attended
-//! over the pad positions, skewing short-prompt logits; sessions take
-//! the true prompt length, so that bug is gone by construction).
+//! (`gpt2::session`): prefill the prompt ONCE at its TRUE length (head
+//! GEMM for the last row only), then O(context) decode steps through the
+//! per-layer KV caches — replacing the old fixed-shape path that re-ran
+//! the full O(S²) forward for every token.
+//!
+//! Every deployed method goes through the one `QuantLinear` operator API
+//! (`EngineSpec::parse` of `--method`), so fp32, naive, MUXQ and
+//! LLM.int8() — plus `-sq` smoothed compositions — all decode here.
 //!
 //! By default each variant's text is replayed against its full-forward
 //! oracle (the pre-refactor O(S²) algorithm, minus the pad bug): the
 //! session path must produce IDENTICAL tokens while paying per-token
-//! cost that does not grow with the number of generated tokens.
+//! cost that does not grow with the number of generated tokens. (The
+//! oracle replay is greedy-only; sampled runs check seed replay
+//! instead.)
 //!
 //!     cargo run --release --example generate
-//!     cargo run --release --example generate -- --method muxq --steps 48
+//!     cargo run --release --example generate -- --method muxq-pv --steps 48
+//!     cargo run --release --example generate -- --temperature 0.9 --top-k 40 --seed 7
 //!     cargo run --release --example generate -- --no-check
 
 use anyhow::Result;
 use muxq::data::bpe::Bpe;
-use muxq::gpt2::{argmax, DecodeSession, Gpt2Model, IntMethod, QuantizedGpt2, WrapPolicy};
+use muxq::gpt2::{DecodeSession, Gpt2Model, QuantizedGpt2, Sampler, WrapPolicy};
+use muxq::quant::EngineSpec;
 use muxq::util::cli::Cli;
 use std::time::Instant;
 
-/// Greedy decode through a session; returns (tokens, prefill_ms,
+/// Decode through a session; returns (tokens, prefill_ms,
 /// first-half ms/token, second-half ms/token).
 fn generate_session(
     sess: &mut DecodeSession<'_>,
+    sampler: &mut Sampler,
     prompt: &[u32],
     steps: usize,
 ) -> Result<(Vec<u32>, f64, f64, f64)> {
@@ -32,7 +39,7 @@ fn generate_session(
     let logits = sess.prefill(prompt)?;
     let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
     let mut out = Vec::with_capacity(steps);
-    let mut next = argmax(&logits);
+    let mut next = sampler.sample(&logits);
     let mut half_ms = [0.0f64; 2];
     let half = steps.div_ceil(2).max(1);
     for i in 0..steps {
@@ -43,7 +50,7 @@ fn generate_session(
         let t = Instant::now();
         let logits = sess.decode_step(next)?;
         half_ms[i / half] += t.elapsed().as_secs_f64() * 1e3;
-        next = argmax(&logits);
+        next = sampler.sample(&logits);
     }
     let first = half_ms[0] / half.min(steps.saturating_sub(1)).max(1) as f64;
     let second = half_ms[1] / steps.saturating_sub(1 + half).max(1) as f64;
@@ -51,7 +58,7 @@ fn generate_session(
 }
 
 /// The pre-refactor algorithm (full forward per token, O(S²) total) at
-/// the session's semantics — the oracle the session must match
+/// the session's semantics — the greedy oracle the session must match
 /// bit-for-bit while the context fits `n_ctx`.
 fn generate_full_oracle(
     fp: &Gpt2Model,
@@ -67,7 +74,7 @@ fn generate_full_oracle(
             None => fp.forward(&[ctx.clone()], None, None)?,
             Some(q) => q.forward_logits_session(&[ctx.clone()])?,
         };
-        let next = argmax(logits.row(ctx.len() - 1));
+        let next = muxq::gpt2::argmax(logits.row(ctx.len() - 1));
         out.push(next);
         ctx.push(next);
     }
@@ -77,21 +84,27 @@ fn generate_full_oracle(
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let p = Cli::new("generate", "greedy decode on the KV-cache session API")
+    let p = Cli::new("generate", "token generation on the KV-cache session API")
         .opt("model", "sim-small", "model (artifacts; falls back to a seeded test model)")
         .opt("prompt", "= Kamiro =\n\n", "prompt text")
         .opt("steps", "32", "tokens to generate")
         .opt("ia-bits", "8", "activation bits for the INT variants")
-        .opt("method", "all", "fp32 | naive | muxq | all")
+        .opt("method", "all", "fp32 | an EngineSpec tag (naive-pv, muxq-pv, llmint8-pv, muxq-pv-sq, ...) | all")
+        .opt("temperature", "0", "softmax temperature (0 = greedy)")
+        .opt("top-k", "0", "sample among the k best logits (0 = all)")
+        .opt("seed", "0", "sampling seed (replayable streams)")
         .flag("no-check", "skip the full-forward oracle replay")
         .parse(&args)?;
     let steps = p.get_usize("steps")?;
     let ia_bits = p.get_f64("ia-bits")? as u32;
     let method = p.get("method").to_string();
-    if !["all", "fp32", "naive", "muxq"].contains(&method.as_str()) {
-        anyhow::bail!("unknown --method {method:?} (expected fp32 | naive | muxq | all)");
-    }
+    let temperature = p.get_f64("temperature")? as f32;
+    let top_k = p.get_usize("top-k")?;
+    let seed = p.get_usize("seed")? as u64;
     let check = !p.flag("no-check");
+    // let the Sampler define degeneracy (T <= 0 OR top-k == 1), so a
+    // run that decodes greedily always gets the real oracle replay
+    let greedy = Sampler::new(temperature, top_k, seed).is_greedy();
 
     let artifacts = muxq::artifacts_dir();
     let (fp, bpe) = match Gpt2Model::load_from_artifacts(p.get("model")) {
@@ -107,33 +120,42 @@ fn main() -> Result<()> {
         None => p.get("prompt").bytes().map(|b| b as u32 % vocab).collect(),
     };
     println!(
-        "model {} (ctx {}), prompt {} tokens, {steps} steps\n",
-        fp.cfg.name, fp.cfg.n_ctx, prompt.len()
+        "model {} (ctx {}), prompt {} tokens, {steps} steps, {}\n",
+        fp.cfg.name,
+        fp.cfg.n_ctx,
+        prompt.len(),
+        if greedy {
+            "greedy".to_string()
+        } else {
+            format!("T={temperature} top-k={top_k} seed={seed}")
+        }
     );
 
-    let variants: Vec<(&str, Option<IntMethod>)> = vec![
-        ("fp32", None),
-        ("naive-int8", Some(IntMethod::Naive)),
-        ("muxq-int8", Some(IntMethod::Muxq)),
-    ];
-    for (name, im) in variants {
-        let selected = method == "all"
-            || match im {
-                None => method == "fp32",
-                Some(IntMethod::Naive) => method == "naive",
-                Some(IntMethod::Muxq) => method == "muxq",
-            };
-        if !selected {
-            continue;
-        }
+    // every variant is an EngineSpec tag; "fp32" is the raw f32 model
+    let variants: Vec<String> = if method == "all" {
+        vec!["fp32".into(), "naive-pv".into(), "muxq-pv".into(), "llmint8-pv".into()]
+    } else {
+        vec![method.clone()]
+    };
+    for name in &variants {
         // the quantized model must outlive the session borrowing it
-        let q = im.map(|m| QuantizedGpt2::new(fp.clone(), m, ia_bits, 8));
+        let q = if name == "fp32" {
+            None
+        } else {
+            let spec = EngineSpec::parse(name)?.with_bits(ia_bits, 8);
+            Some(QuantizedGpt2::new(fp.clone(), spec))
+        };
         let mut sess = match &q {
             None => fp.session(WrapPolicy::default()),
             Some(qq) => qq.session(WrapPolicy::default()),
         };
+        let mut sampler = if greedy {
+            Sampler::greedy()
+        } else {
+            Sampler::new(temperature, top_k, seed)
+        };
         let (tokens, prefill_ms, first_ms, second_ms) =
-            generate_session(&mut sess, &prompt, steps)?;
+            generate_session(&mut sess, &mut sampler, &prompt, steps)?;
         println!("--- {name} (ia_bits {ia_bits}) ---");
         println!(
             "prefill {prefill_ms:.2}ms   decode {first_ms:.3}ms/tok (first half) \
@@ -148,10 +170,11 @@ fn main() -> Result<()> {
             }
             None => println!("tokens: {tokens:?}"),
         }
-        if check {
+        if check && greedy {
             // oracle comparison only while the context fits n_ctx (past
             // that the oracle itself cannot run in one forward)
-            let oracle_steps = steps.min(fp.cfg.n_ctx.saturating_sub(prompt.len().min(fp.cfg.n_ctx)));
+            let oracle_steps =
+                steps.min(fp.cfg.n_ctx.saturating_sub(prompt.len().min(fp.cfg.n_ctx)));
             if oracle_steps > 0 {
                 let (want, full_ms) =
                     generate_full_oracle(&fp, q.as_ref(), &prompt, oracle_steps)?;
@@ -165,6 +188,16 @@ fn main() -> Result<()> {
                      (full forward paid {full_ms:.3}ms/tok and grows with length)"
                 );
             }
+        } else if check {
+            // sampled runs: the stream must replay exactly from its seed
+            let mut sess2 = match &q {
+                None => fp.session(WrapPolicy::default()),
+                Some(qq) => qq.session(WrapPolicy::default()),
+            };
+            let replay =
+                sess2.generate(&prompt, steps, &mut Sampler::new(temperature, top_k, seed))?;
+            assert_eq!(tokens, replay, "{name}: sampled stream failed to replay from its seed");
+            println!("seed replay: {steps} sampled tokens identical \u{2713}");
         }
         println!();
     }

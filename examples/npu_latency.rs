@@ -5,10 +5,11 @@
 //!     cargo run --release --example npu_latency
 
 use anyhow::Result;
+use muxq::gpt2::{Gpt2Model, QuantizedGpt2};
 use muxq::npusim::gemm_plan::Plan;
 use muxq::npusim::report::{compare, paper_geometries, render_table, sim_geometries};
 use muxq::npusim::NpuConfig;
-use muxq::quant::Method;
+use muxq::quant::{EngineSpec, Method};
 
 fn main() -> Result<()> {
     let cfg = NpuConfig::default();
@@ -69,5 +70,22 @@ fn main() -> Result<()> {
          to the FP16 outlier GEMM + gather/scatter + pipeline domain switches.",
         NpuConfig::default().fp16_slowdown
     );
+
+    // ---- object-level pricing: the SAME deployed operators that serve
+    // tokens (QuantLinear::plan) price one decode step per method
+    println!("\n== deployed-model decode step (sim-small shapes, r=6, via QuantLinear::plan) ==");
+    println!("{:<12} {:>12} {:>14}", "spec", "cycles", "sim tok/s");
+    let fp = Gpt2Model::test_model(4, 128, 4, 128, 512, 7);
+    for spec in [EngineSpec::naive(), EngineSpec::muxq(), EngineSpec::llmint8()] {
+        let q = QuantizedGpt2::new(fp.clone(), spec);
+        let cost = q.decode_cost_sim(&cfg, 6);
+        let us = cost.latency_us(&cfg);
+        println!(
+            "{:<12} {:>12.0} {:>14.0}",
+            spec.tag(),
+            cost.cycles(),
+            if us > 0.0 { 1e6 / us } else { 0.0 }
+        );
+    }
     Ok(())
 }

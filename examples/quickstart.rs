@@ -8,6 +8,7 @@ use muxq::coordinator::{VariantKey, VariantRegistry};
 use muxq::data::bpe::Bpe;
 use muxq::data::eval_set::EvalSet;
 use muxq::harness::eval_ppl;
+use muxq::quant::{EngineSpec, Granularity};
 
 fn main() -> Result<()> {
     let artifacts = muxq::artifacts_dir();
@@ -28,13 +29,16 @@ fn main() -> Result<()> {
     let eval = EvalSet::load(&artifacts, "valid")?;
     let windows = eval.windows(128, 8);
     println!("\nperplexity on {} validation windows (sim-small):", windows.len());
-    for (label, tag, ia, w) in [
-        ("FP16 reference     ", "fp16-pt", 8.0, 8.0),
-        ("naive INT8/tensor  ", "naive-pt", 8.0, 8.0),
-        ("MUXQ  INT8/tensor  ", "muxq-pt", 8.0, 8.0),
-        ("MUXQ  INT6 acts    ", "muxq-pt", 6.0, 8.0),
+    // canonical variant tags come from EngineSpec — one spelling,
+    // shared with the manifest and the deployed pipeline
+    let pt = |s: EngineSpec| s.with_granularity(Granularity::PerTensor, Granularity::PerTensor);
+    for (label, spec, ia, w) in [
+        ("FP16 reference     ", pt(EngineSpec::fp16()), 8.0, 8.0),
+        ("naive INT8/tensor  ", pt(EngineSpec::naive()), 8.0, 8.0),
+        ("MUXQ  INT8/tensor  ", pt(EngineSpec::muxq()), 8.0, 8.0),
+        ("MUXQ  INT6 acts    ", pt(EngineSpec::muxq()), 6.0, 8.0),
     ] {
-        let key = VariantKey::eval("sim-small", tag);
+        let key = VariantKey::eval("sim-small", &spec.tag());
         let ppl = eval_ppl(&registry, &key, ia, w, &windows)?;
         println!("  {label} ppl = {ppl:.4}");
     }

@@ -11,6 +11,7 @@
 use anyhow::Result;
 use muxq::coordinator::{Coordinator, CoordinatorConfig, ScoreRequest, VariantKey};
 use muxq::data::eval_set::{perplexity, EvalSet};
+use muxq::quant::{EngineSpec, Granularity};
 use muxq::util::cli::Cli;
 use std::sync::Arc;
 use std::time::Instant;
@@ -44,8 +45,19 @@ fn main() -> Result<()> {
         "variant", "ppl", "req/s", "tok/s", "p50", "p95", "batchfill"
     );
 
-    for tag in ["fp16-pt", "naive-pt", "muxq-pt", "llmint8-pt", "muxq-pv"] {
-        let variant = VariantKey::eval(&model, tag);
+    // canonical tags via EngineSpec (no ad-hoc strings — the same
+    // spelling the manifest round-trips)
+    let pt = |s: EngineSpec| s.with_granularity(Granularity::PerTensor, Granularity::PerTensor);
+    let specs = [
+        pt(EngineSpec::fp16()),
+        pt(EngineSpec::naive()),
+        pt(EngineSpec::muxq()),
+        pt(EngineSpec::llmint8()),
+        EngineSpec::muxq(),
+    ];
+    for spec in specs {
+        let tag = spec.tag();
+        let variant = VariantKey::eval(&model, &tag);
         if coord.manifest().meta(&variant).is_none() {
             continue;
         }

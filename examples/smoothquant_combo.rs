@@ -9,7 +9,7 @@ use muxq::coordinator::{VariantKey, VariantRegistry};
 use muxq::harness::{eval_ppl, eval_windows, table_windows};
 use muxq::quant::muxq::{fq_muxq, MuxqParams};
 use muxq::quant::smooth::{migrate, smooth_scales};
-use muxq::quant::{fq_naive, Granularity, MatF32};
+use muxq::quant::{fq_naive, EngineSpec, Granularity, MatF32, QuantLinear};
 
 fn main() -> Result<()> {
     // ---- matrix level
@@ -39,20 +39,45 @@ fn main() -> Result<()> {
     println!("  muxq                 : {:.6}", rel(fq_muxq(&x, qmax, Granularity::PerTensor, &p).mean_abs_diff(&x), &x));
     println!("  smoothquant + muxq   : {:.6}", rel(fq_muxq(&xs, qmax, Granularity::PerTensor, &p).mean_abs_diff(&xs), &xs));
 
+    // ---- deployed operator level: the same composition through the
+    // QuantLinear API — migration folded in at pack time, projections on
+    // the packed INT engine (what the generation server actually runs)
+    let exact = muxq::quant::gemm::matmul_f32(&x, &w);
+    let bias = vec![0.0f32; w.cols];
+    let amax = x.absmax_cols();
+    let plain = EngineSpec::muxq().with_bits(6, 8).pack(&w, &bias).forward(&x);
+    let combo = EngineSpec::muxq()
+        .with_bits(6, 8)
+        .with_smooth(0.5)
+        .pack_calibrated(&w, &bias, Some(&amax))
+        .forward(&x);
+    println!("\ndeployed-operator MAE vs exact FP (6-bit activations, packed INT engine):");
+    println!("  {:<21}: {:.6}", EngineSpec::muxq().with_bits(6, 8).tag(), plain.mean_abs_diff(&exact));
+    println!(
+        "  {:<21}: {:.6}",
+        EngineSpec::muxq().with_bits(6, 8).with_smooth(0.5).tag(),
+        combo.mean_abs_diff(&exact)
+    );
+
     // ---- model level (AOT -sq variants bake the calibrated migration)
     match VariantRegistry::open_default() {
         Ok(registry) => {
             let windows = eval_windows(table_windows())?;
             println!("\nmodel-level perplexity, sim-small per-tensor:");
             println!("{:<24} {:>10} {:>10}", "variant", "IA=8", "IA=6");
-            for (label, tag) in [
-                ("naive", "naive-pt"),
-                ("naive + smoothquant", "naive-pt-sq"),
-                ("muxq", "muxq-pt"),
-                ("muxq + smoothquant", "muxq-pt-sq"),
-                ("fp16", "fp16-pt"),
+            // smoothing is spelled on the spec (`with_smooth` -> the
+            // canonical `-sq` tag), not as a hand-written string
+            let pt = |s: EngineSpec| {
+                s.with_granularity(Granularity::PerTensor, Granularity::PerTensor)
+            };
+            for (label, spec) in [
+                ("naive", pt(EngineSpec::naive())),
+                ("naive + smoothquant", pt(EngineSpec::naive()).with_smooth(0.5)),
+                ("muxq", pt(EngineSpec::muxq())),
+                ("muxq + smoothquant", pt(EngineSpec::muxq()).with_smooth(0.5)),
+                ("fp16", pt(EngineSpec::fp16())),
             ] {
-                let key = VariantKey::eval("sim-small", tag);
+                let key = VariantKey::eval("sim-small", &spec.tag());
                 if registry.meta(&key).is_none() {
                     continue;
                 }

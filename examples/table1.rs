@@ -13,6 +13,7 @@
 use anyhow::Result;
 use muxq::coordinator::{VariantKey, VariantRegistry};
 use muxq::harness::{eval_ppl, eval_windows, fmt_ppl, table_windows};
+use muxq::quant::{EngineSpec, Granularity, Method};
 
 fn main() -> Result<()> {
     let registry = VariantRegistry::open_default()?;
@@ -32,18 +33,28 @@ fn main() -> Result<()> {
     ];
 
     for (model, gran, bit_rows) in rows {
-        let g = if gran == "per-vector" { "pv" } else { "pt" };
+        // canonical tags from EngineSpec — the same spelling the
+        // manifest validates and the deployed pipeline uses
+        let spec_at = |m: Method| {
+            let (a, w) = Granularity::parse(gran).expect("table granularity");
+            EngineSpec::new(m).with_granularity(a, w)
+        };
         let fp16 = eval_ppl(
             &registry,
-            &VariantKey::eval(model, "fp16-pt"),
+            &VariantKey::eval(
+                model,
+                &EngineSpec::fp16()
+                    .with_granularity(Granularity::PerTensor, Granularity::PerTensor)
+                    .tag(),
+            ),
             8.0,
             8.0,
             &windows,
         )?;
         for (ia, w) in bit_rows {
             let mut cells = Vec::new();
-            for method in ["naive", "muxq", "llmint8"] {
-                let key = VariantKey::eval(model, &format!("{method}-{g}"));
+            for method in [Method::Naive, Method::Muxq, Method::LlmInt8] {
+                let key = VariantKey::eval(model, &spec_at(method).tag());
                 cells.push(eval_ppl(&registry, &key, ia as f32, w as f32, &windows)?);
             }
             println!(

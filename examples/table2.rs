@@ -7,6 +7,7 @@
 use anyhow::Result;
 use muxq::coordinator::{VariantKey, VariantRegistry};
 use muxq::harness::{eval_ppl, eval_windows, fmt_ppl, table_windows};
+use muxq::quant::{EngineSpec, Granularity, Method};
 
 fn main() -> Result<()> {
     let registry = VariantRegistry::open_default()?;
@@ -17,11 +18,16 @@ fn main() -> Result<()> {
         "{:>3} {:>3} | {:>10} {:>10} {:>10} {:>10}",
         "IA", "W", "naive", "MUXQ", "llm.int8()", "fp16"
     );
-    let fp16 = eval_ppl(&registry, &VariantKey::eval("sim-small", "fp16-pt"), 8.0, 8.0, &windows)?;
+    let fp16_tag = EngineSpec::fp16()
+        .with_granularity(Granularity::PerTensor, Granularity::PerTensor)
+        .tag();
+    let fp16 =
+        eval_ppl(&registry, &VariantKey::eval("sim-small", &fp16_tag), 8.0, 8.0, &windows)?;
     for w_bits in [5u32, 4] {
         let mut cells = Vec::new();
-        for method in ["naive", "muxq", "llmint8"] {
-            let key = VariantKey::eval("sim-small", &format!("{method}-pv"));
+        for method in [Method::Naive, Method::Muxq, Method::LlmInt8] {
+            // per-vector is EngineSpec's deployment default
+            let key = VariantKey::eval("sim-small", &EngineSpec::new(method).tag());
             cells.push(eval_ppl(&registry, &key, 8.0, w_bits as f32, &windows)?);
         }
         println!(

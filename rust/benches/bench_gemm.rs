@@ -13,7 +13,8 @@
 //! rust/scripts/ci_check.sh).
 
 use muxq::data::prng::SplitMix64;
-use muxq::gpt2::{argmax, Gpt2Model, IntMethod, QuantizedGpt2, WrapPolicy};
+use muxq::gpt2::{argmax, Gpt2Model, QuantizedGpt2, WrapPolicy};
+use muxq::quant::EngineSpec;
 use muxq::quant::gemm::{matmul_f32, quant_matmul};
 use muxq::quant::llmint8::llmint8_matmul;
 use muxq::quant::matrix::{MatI32, MatI8};
@@ -233,13 +234,8 @@ fn main() {
     };
     Bencher::header(&format!("end-to-end nll_per_seq (2L d=128, batch {nb}x{ns} tokens)"));
     let mut e2e_tok_s: Vec<(&str, f64)> = Vec::new();
-    for (method, name) in [(IntMethod::Naive, "naive"), (IntMethod::Muxq, "muxq")] {
-        let q = QuantizedGpt2::new(
-            Gpt2Model::test_model(2, 128, 2, 64, 128, 7),
-            method,
-            8,
-            8,
-        );
+    for (spec, name) in [(EngineSpec::naive(), "naive"), (EngineSpec::muxq(), "muxq")] {
+        let q = QuantizedGpt2::new(Gpt2Model::test_model(2, 128, 2, 64, 128, 7), spec);
         let stats = b.bench(&format!("nll_per_seq/{name}"), || q.nll_per_seq(&tokens).unwrap());
         let tok_s = (nb * ns) as f64 * stats.per_sec();
         e2e_tok_s.push((name, tok_s));
@@ -259,10 +255,16 @@ fn main() {
         let mut rng = SplitMix64::new(31);
         (0..16).map(|_| rng.next_below(128) as u32).collect()
     };
-    let mut decode_tok_s = [0.0f64; 2]; // [fp32, muxq]
-    for (slot, label, int) in [(0usize, "fp32", None), (1, "muxq", Some(IntMethod::Muxq))] {
+    // per-method decode throughput through the SAME operator API the
+    // generation server runs — llm.int8() now has a deployed number too
+    let mut decode_tok_s = [0.0f64; 3]; // [fp32, muxq, llmint8]
+    for (slot, label, spec) in [
+        (0usize, "fp32", None),
+        (1, "muxq", Some(EngineSpec::muxq())),
+        (2, "llmint8", Some(EngineSpec::llmint8())),
+    ] {
         let fp = Gpt2Model::test_model(2, 128, 2, 64, 128, 7);
-        let q = int.map(|m| QuantizedGpt2::new(fp.clone(), m, 8, 8));
+        let q = spec.map(|s| QuantizedGpt2::new(fp.clone(), s));
         let mut sess = match &q {
             None => fp.session(WrapPolicy::Slide),
             Some(qq) => qq.session(WrapPolicy::Slide),
@@ -278,7 +280,7 @@ fn main() {
     // the pre-refactor comparator: one token costs a FULL forward over
     // the whole 32-token context (and grows as the context grows)
     let fp_full = Gpt2Model::test_model(2, 128, 2, 64, 128, 7);
-    let q_full = QuantizedGpt2::new(fp_full.clone(), IntMethod::Muxq, 8, 8);
+    let q_full = QuantizedGpt2::new(fp_full.clone(), EngineSpec::muxq());
     let ctx32: Vec<Vec<u32>> = {
         let mut rng = SplitMix64::new(32);
         vec![(0..32).map(|_| rng.next_below(128) as u32).collect()]
@@ -290,9 +292,9 @@ fn main() {
     let full_tok_s = full_stats.per_sec();
     let decode_vs_full = decode_tok_s[1] / full_tok_s;
     println!(
-        "\ndecode fp32 {:.0} tok/s   muxq {:.0} tok/s   vs full re-forward {:.0} tok/s \
-         ({decode_vs_full:.1}x, growing with S)",
-        decode_tok_s[0], decode_tok_s[1], full_tok_s
+        "\ndecode fp32 {:.0} tok/s   muxq {:.0} tok/s   llmint8 {:.0} tok/s   \
+         vs full re-forward {:.0} tok/s ({decode_vs_full:.1}x, growing with S)",
+        decode_tok_s[0], decode_tok_s[1], decode_tok_s[2], full_tok_s
     );
 
     // ---- perf-trajectory record ----
@@ -300,7 +302,7 @@ fn main() {
     // kernel); wide44_1t_ms pins the PR-1 comparator so the
     // pair-vs-wide trajectory stays measurable across PRs.
     let json = format!(
-        "{{\n  \"bench\": \"bench_gemm\",\n  \"bootstrap\": false,\n  \"shape\": [{gm}, {gk}, {gn}],\n  \"seed_i8_ms\": {seed_ms:.4},\n  \"packed_1t_ms\": {:.4},\n  \"packed_2t_ms\": {:.4},\n  \"packed_4t_ms\": {:.4},\n  \"speedup_vs_seed_1t\": {:.3},\n  \"scaling_1t_to_4t\": {:.3},\n  \"gops_packed_1t\": {:.3},\n  \"pair_best_ms\": {pair_best_ms:.4},\n  \"pair_best_tile\": \"{best_mr}x{best_nr}\",\n  \"wide44_1t_ms\": {wide44_ms:.4},\n  \"pair_vs_wide44\": {:.3},\n  \"gemv_m1_us\": {gemv_m1_us:.2},\n  \"gemv_vs_cascade_m1\": {gemv_vs_cascade_m1:.3},\n  \"e2e_naive_tok_per_s\": {:.1},\n  \"e2e_muxq_tok_per_s\": {:.1},\n  \"decode_tok_s_fp\": {:.1},\n  \"decode_tok_s\": {:.1},\n  \"full_forward_tok_s\": {full_tok_s:.1},\n  \"decode_vs_full_speedup\": {decode_vs_full:.2}\n}}\n",
+        "{{\n  \"bench\": \"bench_gemm\",\n  \"bootstrap\": false,\n  \"shape\": [{gm}, {gk}, {gn}],\n  \"seed_i8_ms\": {seed_ms:.4},\n  \"packed_1t_ms\": {:.4},\n  \"packed_2t_ms\": {:.4},\n  \"packed_4t_ms\": {:.4},\n  \"speedup_vs_seed_1t\": {:.3},\n  \"scaling_1t_to_4t\": {:.3},\n  \"gops_packed_1t\": {:.3},\n  \"pair_best_ms\": {pair_best_ms:.4},\n  \"pair_best_tile\": \"{best_mr}x{best_nr}\",\n  \"wide44_1t_ms\": {wide44_ms:.4},\n  \"pair_vs_wide44\": {:.3},\n  \"gemv_m1_us\": {gemv_m1_us:.2},\n  \"gemv_vs_cascade_m1\": {gemv_vs_cascade_m1:.3},\n  \"e2e_naive_tok_per_s\": {:.1},\n  \"e2e_muxq_tok_per_s\": {:.1},\n  \"decode_tok_s_fp\": {:.1},\n  \"decode_tok_s\": {:.1},\n  \"decode_tok_s_llmint8\": {:.1},\n  \"full_forward_tok_s\": {full_tok_s:.1},\n  \"decode_vs_full_speedup\": {decode_vs_full:.2}\n}}\n",
         per_thread_ms[0].1,
         per_thread_ms[1].1,
         per_thread_ms[2].1,
@@ -312,6 +314,7 @@ fn main() {
         e2e_tok_s[1].1,
         decode_tok_s[0],
         decode_tok_s[1],
+        decode_tok_s[2],
     );
     let path =
         std::env::var("MUXQ_BENCH_JSON").unwrap_or_else(|_| "BENCH_gemm.json".to_string());

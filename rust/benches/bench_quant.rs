@@ -4,9 +4,9 @@
 //! zero-copy true-INT pipeline. Run: `cargo bench --bench bench_quant`.
 
 use muxq::data::prng::SplitMix64;
-use muxq::gpt2::{Gpt2Model, IntMethod, QuantizedGpt2};
+use muxq::gpt2::{Gpt2Model, QuantizedGpt2};
 use muxq::quant::muxq::{decompose, fq_muxq, outlier_mask, MuxqParams};
-use muxq::quant::{fq_naive, Granularity, MatF32, Method, QuantSpec, Scales};
+use muxq::quant::{fq_naive, EngineSpec, Granularity, MatF32, Method, QuantSpec, Scales};
 use muxq::util::bench::Bencher;
 
 fn outlier_mat(rows: usize, cols: usize, seed: u64) -> MatF32 {
@@ -67,9 +67,10 @@ fn main() {
         (0..nb).map(|_| (0..ns).map(|_| rng.next_below(64) as u32).collect()).collect()
     };
     Bencher::header(&format!("end-to-end nll_per_seq (2L d=96, batch {nb}x{ns} tokens)"));
-    for (method, name) in [(IntMethod::Naive, "naive"), (IntMethod::Muxq, "muxq")] {
-        let q = QuantizedGpt2::new(Gpt2Model::test_model(2, 96, 2, 48, 64, 9), method, 8, 8);
-        let stats = b.bench(&format!("nll_per_seq/{name}"), || q.nll_per_seq(&tokens).unwrap());
+    for spec in [EngineSpec::naive(), EngineSpec::muxq(), EngineSpec::llmint8()] {
+        let q = QuantizedGpt2::new(Gpt2Model::test_model(2, 96, 2, 48, 64, 9), spec);
+        let stats =
+            b.bench(&format!("nll_per_seq/{}", spec.tag()), || q.nll_per_seq(&tokens).unwrap());
         println!("    -> {:.0} tokens/s", (nb * ns) as f64 * stats.per_sec());
     }
 }

@@ -37,6 +37,11 @@ fi
 echo "== cargo build --release"
 cargo build --release "${MANIFEST_ARGS[@]}"
 
+echo "== cargo build --release --examples"
+# examples only build on demand otherwise — two PRs of API churn reached
+# main with broken examples before this gate existed
+cargo build --release --examples "${MANIFEST_ARGS[@]}"
+
 echo "== cargo test -q"
 cargo test -q "${MANIFEST_ARGS[@]}"
 

@@ -352,7 +352,7 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         (
             PendingGen {
-                req: GenerateRequest { prompt: vec![1, 2, 3], max_new_tokens: 4 },
+                req: GenerateRequest::greedy(vec![1, 2, 3], 4),
                 submitted: Instant::now(),
                 tx,
             },

@@ -7,7 +7,8 @@
 //!          loop {
 //!            admit new sessions while slots free (PREFILL, between steps)
 //!            decode_step_batch over ALL live sessions   <- ONE skinny GEMM
-//!            per session: argmax -> stream TokenEvent, retire at budget
+//!            per session: sample (greedy/temperature/top-k) -> stream
+//!            TokenEvent, retire at budget
 //!          }
 //! ```
 //!
@@ -26,7 +27,7 @@
 
 use super::batcher::{AdmitError, DecodePop, DecodeQueue};
 use super::request::{FinishReason, GenerateHandle, GenerateRequest, PendingGen, TokenEvent};
-use crate::gpt2::session::{argmax, decode_step_batch, SessionModel, SessionState, WrapPolicy};
+use crate::gpt2::session::{decode_step_batch, Sampler, SessionModel, SessionState, WrapPolicy};
 use crate::gpt2::{Gpt2Model, QuantizedGpt2};
 use crate::util::metrics::Registry;
 use anyhow::{anyhow, Result};
@@ -124,6 +125,9 @@ impl GenerationStats {
 /// One live session inside the scheduler.
 struct Live {
     state: SessionState,
+    /// this request's token selector (greedy or seeded sampling) —
+    /// per-session state, so coalescing never couples streams
+    sampler: Sampler,
     /// last emitted token == the next decode input
     next: u32,
     produced: usize,
@@ -302,7 +306,7 @@ fn scheduler_loop(
                         metrics.counter("prefills").add(p - l.prefills_seen);
                         l.prefills_seen = p;
                     }
-                    let next = argmax(logits.row(gi));
+                    let next = l.sampler.sample(logits.row(gi));
                     l.produced += 1;
                     metrics.counter("tokens_generated").inc();
                     if l.tx.send(TokenEvent::Token { index: l.produced - 1, token: next }).is_err()
@@ -354,10 +358,11 @@ fn admit(
         metrics.counter("prompts_truncated").inc();
     }
     let mut state = SessionState::new(gcfg, cfg.wrap);
+    let mut sampler = p.req.sampler();
     match state.prefill(sm, &p.req.prompt) {
         Ok(logits) => {
             metrics.counter("prefills").inc();
-            let first = argmax(&logits);
+            let first = sampler.sample(&logits);
             metrics.counter("tokens_generated").inc();
             if p.tx.send(TokenEvent::Token { index: 0, token: first }).is_err() {
                 metrics.counter("cancelled").inc();
@@ -375,6 +380,7 @@ fn admit(
             live.push(Live {
                 prefills_seen: state.prefills(),
                 state,
+                sampler,
                 next: first,
                 produced: 1,
                 budget,
@@ -393,7 +399,8 @@ fn admit(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gpt2::{IntMethod, WrapPolicy};
+    use crate::gpt2::{Sampler, WrapPolicy};
+    use crate::quant::EngineSpec;
 
     fn tiny() -> Gpt2Model {
         Gpt2Model::test_model(2, 16, 2, 12, 32, 7)
@@ -405,14 +412,14 @@ mod tests {
     }
 
     fn req(prompt: Vec<u32>, n: usize) -> GenerateRequest {
-        GenerateRequest { prompt, max_new_tokens: n }
+        GenerateRequest::greedy(prompt, n)
     }
 
     #[test]
     fn served_tokens_bit_exact_vs_solo_session() {
         // the server interleaves prefill admissions with batched decode;
         // every stream must still equal a solo greedy session
-        let q = QuantizedGpt2::new(tiny(), IntMethod::Muxq, 8, 8);
+        let q = QuantizedGpt2::new(tiny(), EngineSpec::muxq());
         let prompts = [toks(3, 1), toks(6, 2), toks(4, 3)];
         let mut want = Vec::new();
         for p in &prompts {
@@ -420,7 +427,7 @@ mod tests {
             want.push(s.generate_greedy(p, 6).unwrap());
         }
         let srv = GenerationServer::start(
-            GenBackend::Int(QuantizedGpt2::new(tiny(), IntMethod::Muxq, 8, 8)),
+            GenBackend::Int(QuantizedGpt2::new(tiny(), EngineSpec::muxq())),
             GenerationConfig { max_live: 2, ..Default::default() }, // forces interleaving
         );
         let handles: Vec<_> =
@@ -433,6 +440,60 @@ mod tests {
         assert_eq!(st.tokens_generated, 18);
         assert!(st.decode_batches > 0 && st.batch_fill() >= 1.0);
         srv.shutdown();
+    }
+
+    #[test]
+    fn llmint8_model_serves_tokens_end_to_end() {
+        // the redesign's payoff: a method the deployed pipeline could
+        // never run before generates tokens through the full serving
+        // stack — and matches its own solo session exactly
+        let q = QuantizedGpt2::new(tiny(), EngineSpec::llmint8());
+        let prompts = [toks(4, 31), toks(6, 32)];
+        let mut want = Vec::new();
+        for p in &prompts {
+            let mut s = q.session(WrapPolicy::default());
+            want.push(s.generate_greedy(p, 5).unwrap());
+        }
+        let srv = GenerationServer::start(
+            GenBackend::Int(QuantizedGpt2::new(tiny(), EngineSpec::llmint8())),
+            GenerationConfig::default(),
+        );
+        let handles: Vec<_> =
+            prompts.iter().map(|p| srv.submit(req(p.clone(), 5)).unwrap()).collect();
+        for (h, w) in handles.into_iter().zip(&want) {
+            assert_eq!(&h.collect_tokens().unwrap(), w);
+        }
+        assert_eq!(srv.stats().completed, 2);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn sampled_streams_are_seed_reproducible() {
+        // temperature/top-k through the server: same seed -> identical
+        // stream (across separate servers), equal to a solo sampled
+        // session; different seed -> (here) a different stream
+        let prompt = toks(5, 41);
+        let solo = {
+            let q = QuantizedGpt2::new(tiny(), EngineSpec::muxq());
+            let mut s = q.session(WrapPolicy::default());
+            s.generate(&prompt, 8, &mut Sampler::new(1.2, 8, 99)).unwrap()
+        };
+        let served = |seed: u64| {
+            let srv = GenerationServer::start(
+                GenBackend::Int(QuantizedGpt2::new(tiny(), EngineSpec::muxq())),
+                GenerationConfig::default(),
+            );
+            let out = srv
+                .submit(GenerateRequest::sampled(prompt.clone(), 8, 1.2, 8, seed))
+                .unwrap()
+                .collect_tokens()
+                .unwrap();
+            srv.shutdown();
+            out
+        };
+        assert_eq!(served(99), solo, "served sampling == solo session sampling");
+        assert_eq!(served(99), served(99), "same seed replays");
+        assert_ne!(served(99), served(100), "seed changes the stream");
     }
 
     #[test]

@@ -61,16 +61,48 @@ pub struct Pending {
     pub tx: mpsc::Sender<anyhow::Result<ScoreResponse>>,
 }
 
-/// A generation request: prefill the prompt, then stream greedy-decoded
-/// tokens. Prompts longer than the model context keep their last
-/// `n_ctx` tokens (recorded in the server stats); the prompt is
-/// processed at its TRUE length — no padding rows.
+/// A generation request: prefill the prompt, then stream decoded tokens
+/// — greedy by default, seeded temperature / top-k sampling on request.
+/// Prompts longer than the model context keep their last `n_ctx` tokens
+/// (recorded in the server stats); the prompt is processed at its TRUE
+/// length — no padding rows.
 #[derive(Debug, Clone)]
 pub struct GenerateRequest {
     pub prompt: Vec<u32>,
     /// generation stops after this many tokens (clamped to the server's
     /// configured ceiling; 0 means "use the server default")
     pub max_new_tokens: usize,
+    /// softmax temperature; `0.0` (the default) means greedy argmax
+    pub temperature: f32,
+    /// sample only among the k highest logits; `0` means all
+    pub top_k: usize,
+    /// sampling seed — (seed, prompt, model) fully determines the
+    /// stream, so sampled generations are replayable
+    pub seed: u64,
+}
+
+impl GenerateRequest {
+    /// Greedy request (the default serving mode).
+    pub fn greedy(prompt: Vec<u32>, max_new_tokens: usize) -> GenerateRequest {
+        GenerateRequest { prompt, max_new_tokens, temperature: 0.0, top_k: 0, seed: 0 }
+    }
+
+    /// Seeded temperature / top-k sampling request.
+    pub fn sampled(
+        prompt: Vec<u32>,
+        max_new_tokens: usize,
+        temperature: f32,
+        top_k: usize,
+        seed: u64,
+    ) -> GenerateRequest {
+        GenerateRequest { prompt, max_new_tokens, temperature, top_k, seed }
+    }
+
+    /// The per-session sampler this request asks for (`Sampler` itself
+    /// degrades to greedy argmax when the parameters are degenerate).
+    pub fn sampler(&self) -> crate::gpt2::Sampler {
+        crate::gpt2::Sampler::new(self.temperature, self.top_k, self.seed)
+    }
 }
 
 /// Why a generation stream ended. (Client-side cancellation — dropping
@@ -149,6 +181,19 @@ mod tests {
         // and it no longer poisons aggregates the way NaN would
         let worst = [r.ppl(), 12.0f32].iter().fold(0.0f32, |m, &v| m.max(v));
         assert_eq!(worst, f32::INFINITY);
+    }
+
+    #[test]
+    fn request_sampler_mapping() {
+        let g = GenerateRequest::greedy(vec![1, 2], 4);
+        assert!(g.sampler().is_greedy());
+        let s = GenerateRequest::sampled(vec![1, 2], 4, 0.9, 40, 7);
+        let sm = s.sampler();
+        assert!(!sm.is_greedy());
+        assert_eq!((sm.temperature, sm.top_k), (0.9, 40));
+        // zero temperature always degrades to greedy, whatever the rest says
+        let z = GenerateRequest::sampled(vec![1], 1, 0.0, 40, 7);
+        assert!(z.sampler().is_greedy());
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! service thread (see `runtime::service` for why that confinement is
 //! mandatory with xla_extension 0.5.1).
 
+use crate::quant::EngineSpec;
 use crate::runtime::service::{ExeId, RuntimeService, WeightsId};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -48,6 +49,14 @@ pub struct VariantMeta {
     pub weights_file: String,
 }
 
+impl VariantMeta {
+    /// The engine spec this variant's tag names — the canonical,
+    /// parse-don't-match spelling ([`EngineSpec::tag`] round-trips it).
+    pub fn spec(&self) -> Result<EngineSpec> {
+        EngineSpec::parse(&self.key.tag)
+    }
+}
+
 /// Parsed `manifest.json` — engine-independent.
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
@@ -78,6 +87,33 @@ impl Manifest {
                 seq: e.get("seq")?.as_usize()?,
                 weights_file: e.get("weights")?.as_str()?.to_string(),
             };
+            // the tag is the canonical spelling (EngineSpec round-trip);
+            // the manifest's redundant method/granularity/smooth/exp
+            // fields must agree with it — drift here used to surface as
+            // silently-wrong table columns, now it fails the load
+            let spec = meta
+                .spec()
+                .with_context(|| format!("manifest tag {:?} is not canonical", key.tag))?;
+            if spec.tag() != key.tag {
+                bail!("manifest tag {:?} does not round-trip (got {:?})", key.tag, spec.tag());
+            }
+            if spec.method.tag_name() != meta.method
+                || crate::quant::Granularity::parse(&meta.granularity)
+                    != Some((spec.act_gran, spec.w_gran))
+                || spec.smooth_alpha.is_some() != meta.smooth
+                || (spec.method == crate::quant::Method::Muxq
+                    && spec.muxq.exp_factor != meta.exp_factor)
+            {
+                bail!(
+                    "manifest entry {:?} drifted from its tag: method {:?} granularity {:?} \
+                     smooth {} exp {}",
+                    key.tag,
+                    meta.method,
+                    meta.granularity,
+                    meta.smooth,
+                    meta.exp_factor
+                );
+            }
             entries.insert(key, meta);
         }
         Ok(Manifest { entries })

@@ -14,11 +14,19 @@
 //! `coordinator::generation`): per-layer [`KvCache`]s split the forward
 //! into prefill + decode steps, with skinny per-token projections routed
 //! through the packed engine's GEMV path.
+//!
+//! The deployed (true-INT) pipeline is [`QuantizedGpt2`]: one
+//! [`crate::quant::QuantLinear`] operator per projection site, built by
+//! an [`crate::quant::EngineSpec`] — every method the paper evaluates
+//! (naive, MUXQ, LLM.int8(), SmoothQuant compositions) deploys through
+//! the same object shape, end to end into the generation server.
 
 mod model;
 mod quantized;
 pub mod session;
 
 pub use model::{Gpt2Config, Gpt2Model, KvCache, ProjFn, SiteCapture, PROJ_SITES};
-pub use quantized::{IntMethod, QuantWeight, QuantizedGpt2};
-pub use session::{argmax, decode_step_batch, DecodeSession, SessionModel, SessionState, WrapPolicy};
+pub use quantized::QuantizedGpt2;
+pub use session::{
+    argmax, decode_step_batch, DecodeSession, Sampler, SessionModel, SessionState, WrapPolicy,
+};

@@ -94,6 +94,16 @@ pub type SiteCapture = BTreeMap<(usize, &'static str), Vec<f32>>;
 /// -> projected output (weights + bias applied by the callee).
 pub type ProjFn<'a> = dyn FnMut(&MatF32, &'static str, usize) -> MatF32 + 'a;
 
+/// Which logits a session extend computes: all new rows (scoring /
+/// oracle), only the last row (prompt prefill — the tied-head GEMM over
+/// the other rows is pure waste), or none (wrap re-prefill).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum LogitsMode {
+    All,
+    LastRow,
+    None,
+}
+
 /// Per-layer key/value cache for incremental decode, ring-buffered to a
 /// fixed capacity (`n_ctx` in every real use). K and V rows are stored
 /// d_model wide — all heads concatenated, the exact slices the qkv
@@ -409,7 +419,7 @@ impl Gpt2Model {
         caches: &mut [KvCache],
         proj_fn: Option<&mut ProjFn<'_>>,
     ) -> Result<MatF32> {
-        Ok(self.forward_session_impl(tokens, pos0, caches, proj_fn, true)?.unwrap())
+        Ok(self.forward_session_impl(tokens, pos0, caches, proj_fn, LogitsMode::All)?.unwrap())
     }
 
     /// [`Gpt2Model::forward_session`] for callers that only want the KV
@@ -424,8 +434,29 @@ impl Gpt2Model {
         caches: &mut [KvCache],
         proj_fn: Option<&mut ProjFn<'_>>,
     ) -> Result<()> {
-        self.forward_session_impl(tokens, pos0, caches, proj_fn, false)?;
+        self.forward_session_impl(tokens, pos0, caches, proj_fn, LogitsMode::None)?;
         Ok(())
+    }
+
+    /// [`Gpt2Model::forward_session`] computing the HEAD for the last
+    /// row only — the prompt-prefill case, where only the final row's
+    /// logits (the next-token distribution) are ever read. The blocks
+    /// still process every row (their K/V must land in the caches), but
+    /// the final layer-norm + tied-head GEMM shrink from `[s, d]·[d, V]`
+    /// to `[1, d]·[d, V]` — at real vocab sizes the single largest
+    /// matmul of a prefill, cut by the prompt length. Bit-exact against
+    /// the last row of [`Gpt2Model::forward_session`]: both primitives
+    /// are row-independent.
+    pub fn forward_session_last_logits(
+        &self,
+        tokens: &[u32],
+        pos0: usize,
+        caches: &mut [KvCache],
+        proj_fn: Option<&mut ProjFn<'_>>,
+    ) -> Result<Vec<f32>> {
+        let out =
+            self.forward_session_impl(tokens, pos0, caches, proj_fn, LogitsMode::LastRow)?;
+        Ok(out.unwrap().data)
     }
 
     fn forward_session_impl(
@@ -434,7 +465,7 @@ impl Gpt2Model {
         pos0: usize,
         caches: &mut [KvCache],
         mut proj_fn: Option<&mut ProjFn<'_>>,
-        want_logits: bool,
+        logits: LogitsMode,
     ) -> Result<Option<MatF32>> {
         let s = tokens.len();
         let d = self.cfg.d_model;
@@ -519,11 +550,20 @@ impl Gpt2Model {
             };
             add_inplace(&mut h, &m);
         }
-        if !want_logits {
-            return Ok(None);
+        match logits {
+            LogitsMode::None => Ok(None),
+            LogitsMode::All => {
+                let hf = layer_norm(&h, &self.ln_f);
+                Ok(Some(matmul_f32(&hf, self.head_t())))
+            }
+            LogitsMode::LastRow => {
+                // row-independent primitives: norming + heading only the
+                // last row is bit-identical to slicing the full result
+                let last = MatF32::from_vec(1, d, h.row(s - 1).to_vec())?;
+                let hf = layer_norm(&last, &self.ln_f);
+                Ok(Some(matmul_f32(&hf, self.head_t())))
+            }
         }
-        let hf = layer_norm(&h, &self.ln_f);
-        Ok(Some(matmul_f32(&hf, self.head_t())))
     }
 
     /// One decode step for G independent sessions, coalesced: the four
@@ -824,9 +864,12 @@ fn layer_norm(x: &MatF32, ln: &LayerNorm) -> MatF32 {
 }
 
 fn proj(x: &MatF32, lin: &Linear, quant: Option<&QuantSpec>) -> MatF32 {
+    // the quantized eval path projects through the one operator trait
+    // (`EngineSpec::matmul` → `QuantLinear`) — the dispatch that used to
+    // be `QuantSpec::matmul`'s private match
     let mut y = match quant {
         None => matmul_f32(x, &lin.w),
-        Some(spec) => spec.matmul(x, &lin.w),
+        Some(spec) => spec.engine().matmul(x, &lin.w),
     };
     for r in 0..y.rows {
         let row = y.row_mut(r);
@@ -1048,6 +1091,23 @@ mod tests {
             .unwrap();
         assert_eq!(both.row(0), &la.data[..]);
         assert_eq!(both.row(1), &lb.data[..]);
+    }
+
+    #[test]
+    fn last_row_head_bit_exact_and_caches_identical() {
+        // the prefill head shortcut: logits must equal the last row of
+        // the all-rows pass, and the caches it leaves must be
+        // indistinguishable
+        let (cfg, m) = tiny();
+        let t = toks(1, 7, 41, cfg.vocab_size as u32)[0].clone();
+        let mut c1 = m.new_kv_caches();
+        let mut c2 = m.new_kv_caches();
+        let all = m.forward_session(&t, 0, &mut c1, None).unwrap();
+        let last = m.forward_session_last_logits(&t, 0, &mut c2, None).unwrap();
+        assert_eq!(last, all.row(t.len() - 1).to_vec());
+        let a = m.decode_step_sessions(&[1], &[7], &mut [&mut c1], None).unwrap();
+        let b = m.decode_step_sessions(&[1], &[7], &mut [&mut c2], None).unwrap();
+        assert_eq!(a.data, b.data);
     }
 
     #[test]

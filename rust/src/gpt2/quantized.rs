@@ -1,287 +1,142 @@
-//! True-INT deployment pipeline: weights quantized AND packed once at
-//! load time (per-out-channel scales, K-major panel layout), activations
-//! quantized per batch, all projections running as i8 x i8 -> i32 GEMMs
-//! on the packed parallel engine.
+//! True-INT deployment pipeline over the unified operator API: each of
+//! the four projection sites per block holds ONE boxed
+//! [`QuantLinear`](crate::quant::QuantLinear) — weights quantized AND
+//! packed once at load time by [`EngineSpec::pack`], activations handled
+//! per call behind the operator (reusable scratch; the only steady-state
+//! per-call allocation is the output matrix).
 //!
 //! This is the pipeline the paper *argues for* but does not implement
 //! (§4.3 uses fake quantization; §4.5 leaves the INT pipeline to future
-//! work). Here it is, end to end, with MUXQ's two-GEMM outlier handling
-//! in real integer arithmetic — plus the memory accounting that
-//! motivates INT deployment in the first place.
+//! work). Because the projection is a trait object, every method the
+//! paper evaluates deploys end to end — naive, MUXQ, LLM.int8() (with
+//! its resident-FP outlier leg and the memory bill that comes with it),
+//! each optionally composed with SmoothQuant — and all of them reach the
+//! KV-cache sessions and the `GenerationServer` unchanged.
 //!
-//! Zero-copy projection path: `proj_int` performs no weight gathering or
-//! re-packing per call (weights are packed once in [`QuantizedGpt2::new`]
-//! with the tile-selected panel width; the MUXQ Aux GEMM reads its
-//! outlier rows straight out of the full packed layout via an index
-//! list), and the Body/Aux operands are quantized in a single fused pass
-//! over X into reusable scratch buffers — no intermediate f32 Body/Aux
-//! matrices are ever materialized. Both GEMMs run the i16
-//! pair-accumulation microkernel (quantized operands never contain -128,
-//! so the pair path is always taken — see `quant::packed`).
-//!
-//! Session (incremental-decode) projection: the batch MUXQ path computes
-//! ONE outlier mask over all rows of a projection call — a batching
-//! artifact that makes results depend on which rows happen to share a
-//! call. Decode sessions need *row independence* (a decode step must
-//! match the same token scored inside a prefill, and a coalesced
-//! multi-session step must match stepping each session alone), so
-//! `proj_session` gives every row its own mask via the single-row fused
-//! decompose+quantize (`proj_int_rowwise`): mask, Body/Aux scales and
-//! both GEMVs all come from that row only. This is also the natural M=1
-//! semantics of the paper's decomposition — at decode there IS only one
-//! row. [`QuantizedGpt2::forward_logits_session`] is the full-forward
-//! oracle with identical semantics, which `tests/decode_session.rs`
-//! pins bit-exact against the incremental path. Naive per-row abs-max is
-//! row-independent already, so its session path IS the batch path.
+//! Session (incremental-decode) projection: batch-masked methods (MUXQ,
+//! LLM.int8()) compute ONE outlier mask over all rows of a projection
+//! call — a batching artifact that makes results depend on which rows
+//! happen to share a call. Decode sessions need *row independence* (a
+//! decode step must match the same token scored inside a prefill, and a
+//! coalesced multi-session step must match stepping each session alone),
+//! so [`QuantizedGpt2::proj_session`] gives every row its own mask via
+//! the operators' `forward_row_into` (single-row fused quantize + GEMV
+//! against the shared load-time-packed weights). Methods whose batch
+//! path is already row-independent (`row_independent()` — naive per-row,
+//! fp) keep the coalesced batch GEMM.
+//! [`QuantizedGpt2::forward_logits_session`] is the full-forward oracle
+//! with identical semantics, which `tests/decode_session.rs` pins
+//! bit-exact against the incremental path.
 
-use super::model::Gpt2Model;
-use crate::quant::absmax::{Granularity, Scales, EPS};
-use crate::quant::matrix::{rint, MatF32, MatI32, MatI8};
-use crate::quant::muxq::{outlier_mask_into, MuxqParams};
-use crate::quant::packed::{self, PackedMatI8, ParallelGemm};
+use super::model::{Gpt2Model, SiteCapture, PROJ_SITES};
+use crate::npusim::gemm_plan::Plan;
+use crate::npusim::{Cost, NpuConfig};
+use crate::quant::linear::{EngineSpec, QuantLinear};
+use crate::quant::matrix::MatF32;
 use anyhow::Result;
-use std::sync::Mutex;
 
-/// One weight matrix, pre-quantized and pre-packed.
-pub struct QuantWeight {
-    /// K-major packed panels — the layout the microkernel streams.
-    pub packed: PackedMatI8,
-    pub scales: Scales, // PerCol
-    pub bias: Vec<f32>,
-}
-
-impl QuantWeight {
-    pub fn from_f32(w: &MatF32, bias: &[f32], w_bits: u32) -> QuantWeight {
-        let qmax = crate::quant::qmax_from_bits(w_bits);
-        let scales = Scales::compute(w, qmax, Granularity::PerCol);
-        let q = crate::quant::absmax::quantize_i8(w, &scales, qmax);
-        QuantWeight { packed: PackedMatI8::pack(&q), scales, bias: bias.to_vec() }
-    }
-
-    /// Deployed INT bytes. Counts the *padded* panel storage — the packed
-    /// layout rounds the output dim up to the panel width, and the
-    /// memory-saving claim must stay honest about that.
-    pub fn bytes(&self) -> usize {
-        self.packed.padded_bytes()
-            + match &self.scales {
-                Scales::Tensor(_) => 4,
-                Scales::Rows(v) | Scales::Cols(v) => v.len() * 4,
-            }
-            + self.bias.len() * 4
-    }
-}
-
-/// MUXQ execution mode for the INT pipeline.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum IntMethod {
-    Naive,
-    Muxq,
-}
-
-/// Reusable per-projection buffers: on the steady-state path `proj_int`
-/// allocates only its output matrix — quantized operands, i32
-/// accumulators, scale vectors and the outlier mask/index lists are all
-/// resized in place.
-struct Scratch {
-    /// quantized Body (MUXQ) or plain activations (Naive)
-    xq: MatI8,
-    /// compact quantized Aux — outlier columns only, [m, r]
-    aux_q: MatI8,
-    /// body / aux GEMM accumulators
-    acc: MatI32,
-    acc_aux: MatI32,
-    /// per-row activation scales (body, aux)
-    sx: Vec<f32>,
-    sa: Vec<f32>,
-    mask: Vec<bool>,
-    idx: Vec<usize>,
-    /// single-row f32 view for the row-wise session projection
-    xrow: MatF32,
-}
-
-impl Scratch {
-    fn new() -> Scratch {
-        Scratch {
-            xq: MatI8::zeros(0, 0),
-            aux_q: MatI8::zeros(0, 0),
-            acc: MatI32::zeros(0, 0),
-            acc_aux: MatI32::zeros(0, 0),
-            sx: Vec::new(),
-            sa: Vec::new(),
-            mask: Vec::new(),
-            idx: Vec::new(),
-            xrow: MatF32::zeros(0, 0),
-        }
-    }
-}
-
-/// A GPT-2 whose four projection sites hold packed i8 weights. Built from
-/// (and borrowing the FP parts of) a loaded [`Gpt2Model`].
+/// A GPT-2 whose four projection sites per block hold deployed
+/// [`QuantLinear`] operators. Built from (and owning the FP parts of) a
+/// loaded [`Gpt2Model`].
 pub struct QuantizedGpt2 {
     pub fp: Gpt2Model,
-    pub method: IntMethod,
-    pub ia_bits: u32,
-    pub muxq: MuxqParams,
-    /// row-panel parallel GEMM config (sequential fallback for small shapes)
-    pub gemm: ParallelGemm,
+    pub spec: EngineSpec,
     /// per block: [c_attn, attn_proj, c_fc, mlp_proj]
-    weights: Vec<[QuantWeight; 4]>,
-    scratch: Mutex<Scratch>,
+    weights: Vec<[Box<dyn QuantLinear>; 4]>,
+}
+
+fn pack_site(
+    spec: &EngineSpec,
+    cap: Option<&SiteCapture>,
+    li: usize,
+    si: usize,
+    w: &MatF32,
+    bias: &[f32],
+) -> Box<dyn QuantLinear> {
+    let amax = cap
+        .and_then(|c| c.get(&(li, PROJ_SITES[si])))
+        .map(|v| v.as_slice());
+    spec.pack_calibrated(w, bias, amax)
 }
 
 impl QuantizedGpt2 {
-    pub fn new(fp: Gpt2Model, method: IntMethod, ia_bits: u32, w_bits: u32) -> QuantizedGpt2 {
+    /// Deploy `fp` under `spec`, packing every projection weight once.
+    /// Smoothed specs fall back to weight-only equalization here; use
+    /// [`QuantizedGpt2::new_calibrated`] to feed measured activation
+    /// ranges into the migration.
+    pub fn new(fp: Gpt2Model, spec: EngineSpec) -> QuantizedGpt2 {
+        Self::build(fp, spec, None)
+    }
+
+    /// Deploy with SmoothQuant calibration: one FP forward over
+    /// `calib_tokens` captures each site's per-channel activation
+    /// abs-max, which feeds the migration scales at pack time.
+    pub fn new_calibrated(
+        fp: Gpt2Model,
+        spec: EngineSpec,
+        calib_tokens: &[Vec<u32>],
+    ) -> Result<QuantizedGpt2> {
+        let mut cap = SiteCapture::new();
+        fp.forward(calib_tokens, None, Some(&mut cap))?;
+        Ok(Self::build(fp, spec, Some(cap)))
+    }
+
+    fn build(fp: Gpt2Model, spec: EngineSpec, cap: Option<SiteCapture>) -> QuantizedGpt2 {
+        let cap = cap.as_ref();
         let weights = fp
             .blocks_raw()
             .iter()
-            .map(|b| {
+            .enumerate()
+            .map(|(li, b)| {
                 [
-                    QuantWeight::from_f32(&b.0, &b.1, w_bits),
-                    QuantWeight::from_f32(&b.2, &b.3, w_bits),
-                    QuantWeight::from_f32(&b.4, &b.5, w_bits),
-                    QuantWeight::from_f32(&b.6, &b.7, w_bits),
+                    pack_site(&spec, cap, li, 0, b.0, b.1),
+                    pack_site(&spec, cap, li, 1, b.2, b.3),
+                    pack_site(&spec, cap, li, 2, b.4, b.5),
+                    pack_site(&spec, cap, li, 3, b.6, b.7),
                 ]
             })
             .collect();
-        QuantizedGpt2 {
-            fp,
-            method,
-            ia_bits,
-            muxq: MuxqParams::default(),
-            gemm: ParallelGemm::global(),
-            weights,
-            scratch: Mutex::new(Scratch::new()),
-        }
+        QuantizedGpt2 { fp, spec, weights }
     }
 
-    /// INT weight bytes vs the FP32 original (the memory-saving claim).
+    /// The deployed operator at one projection site.
+    pub fn op(&self, site: &str, li: usize) -> &dyn QuantLinear {
+        &*self.weights[li][Self::site_index(site)]
+    }
+
+    /// INT weight bytes vs the FP32 original (the memory-saving claim —
+    /// LLM.int8()'s resident FP copy is charged by its operator).
     pub fn weight_bytes(&self) -> (usize, usize) {
         let int: usize = self.weights.iter().flatten().map(|w| w.bytes()).sum();
         let fp: usize = self
             .weights
             .iter()
             .flatten()
-            .map(|w| w.packed.logical_len() * 4 + w.bias.len() * 4)
+            .map(|w| {
+                let (k, n) = w.shape();
+                k * n * 4 + n * 4
+            })
             .sum();
         (int, fp)
     }
 
-    /// One projection through the INT pipeline. Weights were packed at
-    /// construction; the only per-call allocation is the output matrix.
-    fn proj_int(&self, x: &MatF32, qw: &QuantWeight) -> MatF32 {
-        let qmax = crate::quant::qmax_from_bits(self.ia_bits);
-        let mut guard = self.scratch.lock().unwrap();
-        let sc = &mut *guard;
-        match self.method {
-            IntMethod::Naive => {
-                quantize_rows_into(x, qmax, &mut sc.xq, &mut sc.sx);
-                packed::matmul_i8_packed_into(&sc.xq, &qw.packed, &mut sc.acc, self.gemm);
-                dequant_bias(&sc.acc, &sc.sx, &qw.scales, None, &qw.bias)
-            }
-            IntMethod::Muxq => {
-                outlier_mask_into(x, self.muxq.theta, &mut sc.mask);
-                sc.idx.clear();
-                sc.idx.extend(
-                    sc.mask.iter().enumerate().filter(|(_, m)| **m).map(|(i, _)| i),
-                );
-                fused_decompose_quantize(
-                    x,
-                    &sc.mask,
-                    &sc.idx,
-                    self.muxq.inv_shift(),
-                    qmax,
-                    &mut sc.xq,
-                    &mut sc.sx,
-                    &mut sc.aux_q,
-                    &mut sc.sa,
-                );
-                // Body GEMM over the full (shifted-outlier) activations
-                packed::matmul_i8_packed_into(&sc.xq, &qw.packed, &mut sc.acc, self.gemm);
-                if sc.idx.is_empty() {
-                    dequant_bias(&sc.acc, &sc.sx, &qw.scales, None, &qw.bias)
-                } else {
-                    // skinny Aux GEMM straight against the packed full W,
-                    // contraction walking the outlier row indices
-                    packed::matmul_i8_rows_subset_into(
-                        &sc.aux_q,
-                        &qw.packed,
-                        &sc.idx,
-                        &mut sc.acc_aux,
-                        self.gemm,
-                    );
-                    dequant_bias(
-                        &sc.acc,
-                        &sc.sx,
-                        &qw.scales,
-                        Some((&sc.acc_aux, &sc.sa, self.muxq.aux_weight())),
-                        &qw.bias,
-                    )
-                }
-            }
-        }
-    }
-
     /// One projection with *row-independent* semantics — the session
     /// (incremental decode) path, also the semantics of the oracle
-    /// [`QuantizedGpt2::forward_logits_session`]. Naive per-row abs-max
-    /// is row-independent already; MUXQ switches to per-row outlier
-    /// masks (see the module docs).
+    /// [`QuantizedGpt2::forward_logits_session`]. Operators whose batch
+    /// path is row-independent keep the coalesced GEMM; batch-masked
+    /// operators project row by row (per-row masks, GEMV route).
     pub(crate) fn proj_session(&self, x: &MatF32, site: &str, li: usize) -> MatF32 {
-        let qw = &self.weights[li][Self::site_index(site)];
-        match self.method {
-            IntMethod::Naive => self.proj_int(x, qw),
-            IntMethod::Muxq => self.proj_int_rowwise(x, qw),
+        let op = self.op(site, li);
+        if op.row_independent() {
+            op.forward(x)
+        } else {
+            let (_, n) = op.shape();
+            let mut y = MatF32::zeros(x.rows, n);
+            for r in 0..x.rows {
+                op.forward_row_into(x.row(r), y.row_mut(r));
+            }
+            y
         }
-    }
-
-    /// Row-wise MUXQ projection: every row of X gets its own outlier
-    /// mask, its own fused decompose+quantize pass, and its own Body GEMV
-    /// + Aux rows-subset GEMV against the (shared, load-time-packed)
-    /// weights. M=1 operands route through the packed engine's GEMV path
-    /// — no tile-cascade overhead on the decode hot loop.
-    fn proj_int_rowwise(&self, x: &MatF32, qw: &QuantWeight) -> MatF32 {
-        let qmax = crate::quant::qmax_from_bits(self.ia_bits);
-        let (m, k) = (x.rows, x.cols);
-        let n = qw.packed.cols;
-        let mut y = MatF32::zeros(m, n);
-        let mut guard = self.scratch.lock().unwrap();
-        let sc = &mut *guard;
-        sc.xrow.rows = 1;
-        sc.xrow.cols = k;
-        sc.xrow.data.resize(k, 0.0);
-        for r in 0..m {
-            sc.xrow.data.copy_from_slice(x.row(r));
-            outlier_mask_into(&sc.xrow, self.muxq.theta, &mut sc.mask);
-            sc.idx.clear();
-            sc.idx
-                .extend(sc.mask.iter().enumerate().filter(|(_, m)| **m).map(|(i, _)| i));
-            fused_decompose_quantize(
-                &sc.xrow,
-                &sc.mask,
-                &sc.idx,
-                self.muxq.inv_shift(),
-                qmax,
-                &mut sc.xq,
-                &mut sc.sx,
-                &mut sc.aux_q,
-                &mut sc.sa,
-            );
-            packed::matmul_i8_packed_into(&sc.xq, &qw.packed, &mut sc.acc, self.gemm);
-            let aux = if sc.idx.is_empty() {
-                None
-            } else {
-                packed::matmul_i8_rows_subset_into(
-                    &sc.aux_q,
-                    &qw.packed,
-                    &sc.idx,
-                    &mut sc.acc_aux,
-                    self.gemm,
-                );
-                Some((&sc.acc_aux.data[..n], sc.sa[0], self.muxq.aux_weight()))
-            };
-            dequant_bias_row(&sc.acc.data[..n], sc.sx[0], &qw.scales, aux, &qw.bias, y.row_mut(r));
-        }
-        y
     }
 
     /// Full-forward logits under the *session* projection semantics —
@@ -300,143 +155,42 @@ impl QuantizedGpt2 {
         }
     }
 
-    /// Per-sequence NLL through the full INT pipeline.
+    /// Per-sequence NLL through the full INT pipeline (batch semantics).
     pub fn nll_per_seq(&self, tokens: &[Vec<u32>]) -> Result<(Vec<f32>, Vec<f32>)> {
-        self.fp.nll_per_seq_with_proj(tokens, &mut |x, site, li| {
-            self.proj_int(x, &self.weights[li][Self::site_index(site)])
-        })
+        self.fp
+            .nll_per_seq_with_proj(tokens, &mut |x, site, li| self.op(site, li).forward(x))
     }
-}
 
-/// Per-row abs-max quantization straight into reusable scratch — the twin
-/// of `Scales::compute(PerRow)` + `quantize_i8`, fused into one pass.
-fn quantize_rows_into(x: &MatF32, qmax: f32, xq: &mut MatI8, sx: &mut Vec<f32>) {
-    let (m, k) = (x.rows, x.cols);
-    xq.rows = m;
-    xq.cols = k;
-    xq.data.resize(m * k, 0);
-    sx.clear();
-    sx.resize(m, 0.0);
-    for r in 0..m {
-        let xr = x.row(r);
-        let amax = xr.iter().fold(0.0f32, |mx, v| mx.max(v.abs()));
-        let s = amax.max(EPS) / qmax;
-        sx[r] = s;
-        for (qv, v) in xq.data[r * k..(r + 1) * k].iter_mut().zip(xr) {
-            *qv = rint(v / s).clamp(-qmax, qmax) as i8;
-        }
-    }
-}
-
-/// Fused MUXQ decompose + quantize: ONE pass over each row of X computes
-/// the Body and compact-Aux row abs-maxes, a second writes the quantized
-/// values straight into the i8 scratch. No f32 Body/Aux matrices exist.
-/// Bit-identical to decompose -> Scales::compute(PerRow) -> quantize_i8
-/// (|x·2^-e| == |x|·2^-e exactly: the shift is a power of two).
-#[allow(clippy::too_many_arguments)]
-fn fused_decompose_quantize(
-    x: &MatF32,
-    mask: &[bool],
-    idx: &[usize],
-    inv: f32,
-    qmax: f32,
-    body_q: &mut MatI8,
-    sb: &mut Vec<f32>,
-    aux_q: &mut MatI8,
-    sa: &mut Vec<f32>,
-) {
-    let (m, k, r) = (x.rows, x.cols, idx.len());
-    debug_assert_eq!(mask.len(), k);
-    body_q.rows = m;
-    body_q.cols = k;
-    body_q.data.resize(m * k, 0);
-    aux_q.rows = m;
-    aux_q.cols = r;
-    aux_q.data.resize(m * r, 0);
-    sb.clear();
-    sb.resize(m, 0.0);
-    sa.clear();
-    sa.resize(m, 0.0);
-    for row in 0..m {
-        let xr = x.row(row);
-        let mut bmax = 0.0f32;
-        let mut amax = 0.0f32;
-        for c in 0..k {
-            let v = xr[c].abs();
-            if mask[c] {
-                let shifted = v * inv;
-                bmax = bmax.max(shifted);
-                amax = amax.max(shifted);
-            } else {
-                bmax = bmax.max(v);
+    /// Per-site npusim decode plans (M = 1) across every block, with `r`
+    /// live outlier channels at the two post-LN sites (c_attn, c_fc) and
+    /// none at the residual projections — the same site split
+    /// `npusim::model_cost` prices. Simulated-hardware pricing now flows
+    /// from the very operators that serve traffic.
+    pub fn decode_plans(&self, cfg: &NpuConfig, r: usize) -> Vec<Plan> {
+        let mut plans = Vec::with_capacity(self.weights.len() * 4);
+        for site_ops in &self.weights {
+            for (si, ri) in [(0usize, r), (1, 0), (2, r), (3, 0)] {
+                plans.push(site_ops[si].plan(cfg, 1, ri));
             }
         }
-        let sbv = bmax.max(EPS) / qmax;
-        let sav = amax.max(EPS) / qmax;
-        sb[row] = sbv;
-        sa[row] = sav;
-        for (c, bq) in body_q.data[row * k..(row + 1) * k].iter_mut().enumerate() {
-            let v = if mask[c] { xr[c] * inv } else { xr[c] };
-            *bq = rint(v / sbv).clamp(-qmax, qmax) as i8;
-        }
-        for (t, aq) in aux_q.data[row * r..(row + 1) * r].iter_mut().enumerate() {
-            *aq = rint(xr[idx[t]] * inv / sav).clamp(-qmax, qmax) as i8;
-        }
+        plans
     }
-}
 
-/// Dequantize the body accumulator — plus, for MUXQ, the recombination
-/// `f · Aux` term — and add the bias, all in one pass over the output.
-fn dequant_bias(
-    acc: &MatI32,
-    sx: &[f32],
-    sw: &Scales,
-    aux: Option<(&MatI32, &[f32], f32)>,
-    bias: &[f32],
-) -> MatF32 {
-    let (m, n) = (acc.rows, acc.cols);
-    let mut y = MatF32::zeros(m, n);
-    for r in 0..m {
-        let yrow = &mut y.data[r * n..(r + 1) * n];
-        let arow = &acc.data[r * n..(r + 1) * n];
-        let aux_row =
-            aux.map(|(acc2, sa, f)| (&acc2.data[r * n..(r + 1) * n], sa[r], f));
-        dequant_bias_row(arow, sx[r], sw, aux_row, bias, yrow);
-    }
-    y
-}
-
-/// One output row of [`dequant_bias`] — shared by the batch path and the
-/// row-wise session path, so the two are arithmetic-for-arithmetic
-/// identical (the decode bit-exactness oracle depends on this).
-fn dequant_bias_row(
-    arow: &[i32],
-    sxr: f32,
-    sw: &Scales,
-    aux: Option<(&[i32], f32, f32)>,
-    bias: &[f32],
-    yrow: &mut [f32],
-) {
-    let n = arow.len();
-    match aux {
-        None => {
-            for j in 0..n {
-                yrow[j] = arow[j] as f32 * (sxr * sw.at(0, j)) + bias[j];
-            }
+    /// Simulated cost of ONE autoregressive decode step through every
+    /// projection of the deployed model (sequential composition).
+    pub fn decode_cost_sim(&self, cfg: &NpuConfig, r: usize) -> Cost {
+        let mut total = Cost::default();
+        for p in self.decode_plans(cfg, r) {
+            total.add(p.cost(cfg));
         }
-        Some((a2, sar, f)) => {
-            for j in 0..n {
-                let swj = sw.at(0, j);
-                yrow[j] =
-                    arow[j] as f32 * (sxr * swj) + f * (a2[j] as f32 * (sar * swj)) + bias[j];
-            }
-        }
+        total
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::packed;
 
     fn tiny() -> Gpt2Model {
         Gpt2Model::test_model(2, 16, 2, 12, 32, 7)
@@ -448,26 +202,39 @@ mod tests {
     }
 
     #[test]
-    fn int_pipeline_close_to_fp_at_8bit() {
+    fn int_pipeline_close_to_fp_at_8bit_all_methods() {
         let fp = tiny();
         let t = toks(2, 8, 1);
         let (fp_nll, _) = fp.nll_per_seq(&t, None).unwrap();
-        for method in [IntMethod::Naive, IntMethod::Muxq] {
-            let q = QuantizedGpt2::new(tiny(), method, 8, 8);
+        for spec in [EngineSpec::naive(), EngineSpec::muxq(), EngineSpec::llmint8()] {
+            let q = QuantizedGpt2::new(tiny(), spec);
             let (q_nll, counts) = q.nll_per_seq(&t).unwrap();
             assert_eq!(counts[0], 7.0);
             for (a, b) in fp_nll.iter().zip(&q_nll) {
                 let rel = (a - b).abs() / a.abs().max(1.0);
-                assert!(rel < 0.05, "{method:?}: fp {a} int {b}");
+                assert!(rel < 0.05, "{}: fp {a} int {b}", spec.tag());
             }
         }
+    }
+
+    #[test]
+    fn fp16_operator_deployment_is_bit_exact_vs_fp_forward() {
+        // the Fp32Linear operator runs the same GEMM + bias arithmetic
+        // as the model's own projection — deploying under fp16-pv must
+        // change nothing at all
+        let fp = tiny();
+        let t = toks(2, 8, 3);
+        let (want, _) = fp.nll_per_seq(&t, None).unwrap();
+        let q = QuantizedGpt2::new(tiny(), EngineSpec::fp16());
+        let (got, _) = q.nll_per_seq(&t).unwrap();
+        assert_eq!(want, got);
     }
 
     #[test]
     fn weights_packed_once_at_construction() {
         // pack_count is thread-local, so concurrent tests can't perturb it
         let before = packed::pack_count();
-        let q = QuantizedGpt2::new(tiny(), IntMethod::Muxq, 8, 8);
+        let q = QuantizedGpt2::new(tiny(), EngineSpec::muxq());
         let after_new = packed::pack_count();
         assert_eq!(after_new - before, 2 * 4, "one pack per projection site");
         let t = toks(2, 8, 1);
@@ -475,33 +242,20 @@ mod tests {
         assert_eq!(
             packed::pack_count(),
             after_new,
-            "proj_int must never gather or re-pack weights per call"
+            "projections must never gather or re-pack weights per call"
         );
-    }
-
-    #[test]
-    fn weight_bytes_count_panel_padding() {
-        // 8x6 weight: 6 cols round up to 2 panels of 4 -> 64 padded bytes
-        let w = MatF32::from_vec(8, 6, (0..48).map(|v| v as f32 / 48.0).collect()).unwrap();
-        let qw = QuantWeight::from_f32(&w, &[0.0; 6], 8);
-        assert_eq!(qw.packed.padded_bytes(), 64);
-        assert_eq!(qw.packed.logical_len(), 48);
-        // padded panels + 6 per-col scales + 6 biases
-        assert_eq!(qw.bytes(), 64 + 6 * 4 + 6 * 4);
     }
 
     #[test]
     fn weight_memory_saving_approaches_4x() {
         // per-out-channel scales + f32 biases dilute the 4x ideal; the
         // dilution shrinks as d grows
-        let small = QuantizedGpt2::new(tiny(), IntMethod::Naive, 8, 8);
+        let small = QuantizedGpt2::new(tiny(), EngineSpec::naive());
         let (int_s, fp_s) = small.weight_bytes();
         let ratio_small = fp_s as f64 / int_s as f64;
         let big = QuantizedGpt2::new(
             Gpt2Model::test_model(2, 128, 2, 12, 32, 7),
-            IntMethod::Naive,
-            8,
-            8,
+            EngineSpec::naive(),
         );
         let (int_b, fp_b) = big.weight_bytes();
         let ratio_big = fp_b as f64 / int_b as f64;
@@ -511,10 +265,22 @@ mod tests {
     }
 
     #[test]
+    fn llmint8_deployment_pays_for_its_fp_copy() {
+        let muxq = QuantizedGpt2::new(tiny(), EngineSpec::muxq());
+        let mixed = QuantizedGpt2::new(tiny(), EngineSpec::llmint8());
+        let (muxq_bytes, fp_bytes) = muxq.weight_bytes();
+        let (mixed_bytes, _) = mixed.weight_bytes();
+        assert!(mixed_bytes > muxq_bytes, "resident FP copy must be charged");
+        assert!(mixed_bytes < fp_bytes, "int8 + fp16 copy still beats pure f32");
+        let ratio = fp_bytes as f64 / mixed_bytes as f64;
+        assert!(ratio < 2.0, "llm.int8() cannot approach the 4x saving: {ratio}");
+    }
+
+    #[test]
     fn rowwise_muxq_equals_batch_on_single_row() {
         // for a 1-row input the batch mask IS the row mask, so the batch
         // and row-wise projections must agree bit-for-bit
-        let q = QuantizedGpt2::new(tiny(), IntMethod::Muxq, 8, 8);
+        let q = QuantizedGpt2::new(tiny(), EngineSpec::muxq());
         let d = q.fp.cfg.d_model;
         let mut rng = crate::data::prng::SplitMix64::new(31);
         let mut x = MatF32::from_vec(
@@ -524,9 +290,9 @@ mod tests {
         )
         .unwrap();
         *x.at_mut(0, 3) = 21.0; // force an outlier channel
-        let qw = &q.weights[0][0];
-        let batch = q.proj_int(&x, qw);
-        let rowwise = q.proj_int_rowwise(&x, qw);
+        let op = q.op("c_attn", 0);
+        let batch = op.forward(&x);
+        let rowwise = q.proj_session(&x, "c_attn", 0);
         assert_eq!(batch.data, rowwise.data);
     }
 
@@ -535,7 +301,7 @@ mod tests {
         // two rows, only one carrying an outlier: the row-wise path must
         // differ from the batch path (whose shared mask leaks the outlier
         // channel into the clean row) yet stay close to it in value
-        let q = QuantizedGpt2::new(tiny(), IntMethod::Muxq, 8, 8);
+        let q = QuantizedGpt2::new(tiny(), EngineSpec::muxq());
         let d = q.fp.cfg.d_model;
         let mut rng = crate::data::prng::SplitMix64::new(33);
         let mut x = MatF32::from_vec(
@@ -545,9 +311,9 @@ mod tests {
         )
         .unwrap();
         *x.at_mut(0, 5) = 30.0;
-        let qw = &q.weights[0][0];
-        let batch = q.proj_int(&x, qw);
-        let rowwise = q.proj_int_rowwise(&x, qw);
+        let op = q.op("c_attn", 0);
+        let batch = op.forward(&x);
+        let rowwise = q.proj_session(&x, "c_attn", 0);
         assert!(batch.mean_abs_diff(&rowwise) < 0.1, "paths diverged wildly");
         // row 0 (the outlier row) has the same mask either way
         assert_eq!(&batch.data[..batch.cols], &rowwise.data[..rowwise.cols]);
@@ -558,13 +324,14 @@ mod tests {
         let fp = tiny();
         let t = toks(2, 8, 5);
         let fp_logits = fp.forward(&t, None, None).unwrap();
-        for method in [IntMethod::Naive, IntMethod::Muxq] {
-            let q = QuantizedGpt2::new(tiny(), method, 8, 8);
+        for spec in [EngineSpec::naive(), EngineSpec::muxq(), EngineSpec::llmint8()] {
+            let q = QuantizedGpt2::new(tiny(), spec);
             let s_logits = q.forward_logits_session(&t).unwrap();
             assert_eq!((s_logits.rows, s_logits.cols), (fp_logits.rows, fp_logits.cols));
             assert!(
                 fp_logits.mean_abs_diff(&s_logits) < 0.25,
-                "{method:?} mae {}",
+                "{} mae {}",
+                spec.tag(),
                 fp_logits.mean_abs_diff(&s_logits)
             );
         }
@@ -582,8 +349,8 @@ mod tests {
         fp_ref.scale_ln1_channel(0, 3, 14.0);
         let t = toks(2, 10, 2);
         let (ref_nll, _) = fp_ref.nll_per_seq(&t, None).unwrap();
-        let naive = QuantizedGpt2::new(fp_a, IntMethod::Naive, 5, 8);
-        let muxq = QuantizedGpt2::new(fp_b, IntMethod::Muxq, 5, 8);
+        let naive = QuantizedGpt2::new(fp_a, EngineSpec::naive().with_bits(5, 8));
+        let muxq = QuantizedGpt2::new(fp_b, EngineSpec::muxq().with_bits(5, 8));
         let (n_nll, _) = naive.nll_per_seq(&t).unwrap();
         let (m_nll, _) = muxq.nll_per_seq(&t).unwrap();
         let err = |v: &[f32]| -> f32 {
@@ -596,5 +363,37 @@ mod tests {
             err(&m_nll),
             err(&n_nll)
         );
+    }
+
+    #[test]
+    fn smooth_calibrated_deployment_runs_and_stays_close() {
+        let fp = tiny();
+        let calib = toks(2, 8, 9);
+        let t = toks(2, 8, 10);
+        let (fp_nll, _) = fp.nll_per_seq(&t, None).unwrap();
+        let q = QuantizedGpt2::new_calibrated(tiny(), EngineSpec::muxq().with_smooth(0.5), &calib)
+            .unwrap();
+        assert_eq!(q.spec.tag(), "muxq-pv-sq");
+        let (q_nll, _) = q.nll_per_seq(&t).unwrap();
+        for (a, b) in fp_nll.iter().zip(&q_nll) {
+            let rel = (a - b).abs() / a.abs().max(1.0);
+            assert!(rel < 0.05, "fp {a} smooth-int {b}");
+        }
+    }
+
+    #[test]
+    fn decode_plans_price_the_deployed_model() {
+        let cfg = NpuConfig::default();
+        let muxq = QuantizedGpt2::new(tiny(), EngineSpec::muxq());
+        let mixed = QuantizedGpt2::new(tiny(), EngineSpec::llmint8());
+        let plans = muxq.decode_plans(&cfg, 4);
+        assert_eq!(plans.len(), 2 * 4, "one plan per site per block");
+        assert!(plans.iter().all(|p| p.gemms.iter().all(|g| g.m == 1)), "decode is M=1");
+        // uniform INT decode beats the mixed-precision pipeline on the
+        // simulated NPU — the paper's §4.5 argument, priced through the
+        // SAME operators that serve tokens
+        let cm = muxq.decode_cost_sim(&cfg, 4).cycles();
+        let cx = mixed.decode_cost_sim(&cfg, 4).cycles();
+        assert!(cm < cx, "muxq {cm} vs llm.int8() {cx}");
     }
 }

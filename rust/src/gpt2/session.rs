@@ -7,6 +7,15 @@
 //! skinny GEMM step (continuous batching) with per-session results
 //! bit-identical to stepping each alone.
 //!
+//! The model behind a session is either the plain f32 forward or ANY
+//! deployed [`QuantizedGpt2`] — the operator API (`quant::linear`) means
+//! naive, MUXQ, LLM.int8() and their SmoothQuant compositions all decode
+//! through the same code path here.
+//!
+//! Token selection is a [`Sampler`]: greedy argmax by default, or
+//! seeded temperature / top-k sampling (`SplitMix64`-driven, so a (seed,
+//! prompt, model) triple reproduces its stream exactly).
+//!
 //! # Context-overflow (wrap) policies
 //!
 //! GPT-2's absolute position embeddings mean a ring cache cannot keep
@@ -29,6 +38,7 @@
 
 use super::model::{Gpt2Config, Gpt2Model, KvCache};
 use super::quantized::QuantizedGpt2;
+use crate::data::prng::SplitMix64;
 use crate::quant::MatF32;
 use anyhow::{bail, Result};
 
@@ -59,8 +69,9 @@ impl WrapPolicy {
     }
 }
 
-/// The model a session runs against: plain f32, or the true-INT pipeline
-/// through its row-independent session projection.
+/// The model a session runs against: plain f32, or a deployed
+/// [`QuantizedGpt2`] (any method) through its row-independent session
+/// projection.
 #[derive(Clone, Copy)]
 pub enum SessionModel<'m> {
     Fp(&'m Gpt2Model),
@@ -75,12 +86,16 @@ impl<'m> SessionModel<'m> {
         }
     }
 
-    fn extend(&self, tokens: &[u32], pos0: usize, caches: &mut [KvCache]) -> Result<MatF32> {
+    /// Prefill-shaped extend: all rows land in the caches, only the LAST
+    /// row's logits are computed (the next-token distribution — the only
+    /// row a prefill ever reads; the all-rows head GEMM the old path
+    /// paid grows with prompt length for no benefit).
+    fn extend_last(&self, tokens: &[u32], pos0: usize, caches: &mut [KvCache]) -> Result<Vec<f32>> {
         match self {
-            SessionModel::Fp(m) => m.forward_session(tokens, pos0, caches, None),
+            SessionModel::Fp(m) => m.forward_session_last_logits(tokens, pos0, caches, None),
             SessionModel::Int(q) => {
                 let mut f = |x: &MatF32, site: &'static str, li: usize| q.proj_session(x, site, li);
-                q.fp.forward_session(tokens, pos0, caches, Some(&mut f))
+                q.fp.forward_session_last_logits(tokens, pos0, caches, Some(&mut f))
             }
         }
     }
@@ -110,6 +125,97 @@ impl<'m> SessionModel<'m> {
                 q.fp.decode_step_sessions(tokens, positions, caches, Some(&mut f))
             }
         }
+    }
+}
+
+// --------------------------------------------------------------- sampling
+
+/// Token selection over a logits row: greedy argmax, or seeded
+/// temperature / top-k sampling. Deterministic — the internal
+/// `SplitMix64` stream makes (seed, logits sequence) → tokens a pure
+/// function, so sampled generations are replayable and the server can be
+/// tested bit-for-bit against solo sessions.
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    /// softmax temperature; `<= 0` means greedy argmax
+    pub temperature: f32,
+    /// keep only the k highest logits before sampling; `0` = all
+    pub top_k: usize,
+    rng: SplitMix64,
+    /// reusable candidate-index / weight buffers — this runs once per
+    /// decoded token on the serving hot path, so no per-call allocation
+    /// and no full-vocab sort (top-k is a partial selection)
+    order: Vec<usize>,
+    weights: Vec<f32>,
+}
+
+impl Sampler {
+    /// Greedy argmax (the default serving mode; no randomness consumed).
+    pub fn greedy() -> Sampler {
+        Sampler::new(0.0, 0, 0)
+    }
+
+    /// Seeded temperature / top-k sampler.
+    pub fn new(temperature: f32, top_k: usize, seed: u64) -> Sampler {
+        Sampler {
+            temperature,
+            top_k,
+            rng: SplitMix64::new(seed),
+            order: Vec::new(),
+            weights: Vec::new(),
+        }
+    }
+
+    /// Greedy when the parameters make sampling degenerate: zero
+    /// temperature, or a top-k of exactly one.
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0 || self.top_k == 1
+    }
+
+    /// Pick the next token for one logits row. Greedy consumes no
+    /// randomness (ties resolve like [`argmax`]); otherwise one uniform
+    /// draw over the temperature-softmaxed top-k candidates. O(V) per
+    /// call (`select_nth` for the top-k cut, no sort), zero steady-state
+    /// allocation.
+    pub fn sample(&mut self, logits: &[f32]) -> u32 {
+        if self.is_greedy() {
+            return argmax(logits);
+        }
+        let v = logits.len();
+        let k = if self.top_k == 0 { v } else { self.top_k.min(v) };
+        self.order.clear();
+        self.order.extend(0..v);
+        if k < v {
+            // partial selection: top-k candidates land (unordered) in
+            // the first k slots
+            let _ = self
+                .order
+                .select_nth_unstable_by(k - 1, |&a, &b| logits[b].total_cmp(&logits[a]));
+            self.order.truncate(k);
+        }
+        // temperature softmax with max-subtraction for stability (the
+        // global max is always among the candidates)
+        let max =
+            self.order.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+        let inv_t = 1.0 / self.temperature;
+        self.weights.clear();
+        self.weights.extend(self.order.iter().map(|&i| ((logits[i] - max) * inv_t).exp()));
+        let total: f32 = self.weights.iter().sum();
+        let mut u = self.rng.next_f64() as f32 * total;
+        for (w, &i) in self.weights.iter().zip(&self.order) {
+            u -= w;
+            if u <= 0.0 {
+                return i as u32;
+            }
+        }
+        // numerical tail: fall back to the last candidate
+        self.order[k - 1] as u32
+    }
+}
+
+impl Default for Sampler {
+    fn default() -> Self {
+        Sampler::greedy()
     }
 }
 
@@ -155,7 +261,9 @@ impl SessionState {
     /// fixed-shape generate path left-padded with token 0 and attended
     /// over the pads, skewing short-prompt logits). Prompts longer than
     /// `n_ctx` keep their last `n_ctx` tokens. Returns the last row's
-    /// logits (the next-token distribution).
+    /// logits (the next-token distribution) — the head GEMM runs for
+    /// that row ONLY (`forward_session_last_logits`), cutting prefill
+    /// cost by the prompt length at real vocab sizes.
     pub fn prefill(&mut self, m: SessionModel<'_>, prompt: &[u32]) -> Result<Vec<f32>> {
         if prompt.is_empty() {
             bail!("empty prompt");
@@ -166,10 +274,10 @@ impl SessionState {
             c.clear();
         }
         self.window.clear();
-        let logits = m.extend(used, 0, &mut self.caches)?;
+        let logits = m.extend_last(used, 0, &mut self.caches)?;
         self.window.extend_from_slice(used);
         self.prefills += 1;
-        Ok(logits.row(logits.rows - 1).to_vec())
+        Ok(logits)
     }
 
     /// Append one token and return its next-token logits — O(context)
@@ -272,21 +380,33 @@ impl<'m> DecodeSession<'m> {
         self.state.decode_step(self.model, token)
     }
 
-    /// Prefill + greedy-decode `steps` tokens; returns the generated ids.
-    pub fn generate_greedy(&mut self, prompt: &[u32], steps: usize) -> Result<Vec<u32>> {
+    /// Prefill + decode `steps` tokens, selecting each with `sampler`;
+    /// returns the generated ids. With a greedy sampler this IS
+    /// [`DecodeSession::generate_greedy`].
+    pub fn generate(
+        &mut self,
+        prompt: &[u32],
+        steps: usize,
+        sampler: &mut Sampler,
+    ) -> Result<Vec<u32>> {
         let mut out = Vec::with_capacity(steps);
         if steps == 0 {
             self.prefill(prompt)?;
             return Ok(out);
         }
-        let mut next = argmax(&self.prefill(prompt)?);
+        let mut next = sampler.sample(&self.prefill(prompt)?);
         for i in 0..steps {
             out.push(next);
             if i + 1 < steps {
-                next = argmax(&self.decode_step(next)?);
+                next = sampler.sample(&self.decode_step(next)?);
             }
         }
         Ok(out)
+    }
+
+    /// Prefill + greedy-decode `steps` tokens; returns the generated ids.
+    pub fn generate_greedy(&mut self, prompt: &[u32], steps: usize) -> Result<Vec<u32>> {
+        self.generate(prompt, steps, &mut Sampler::greedy())
     }
 }
 
@@ -320,7 +440,7 @@ pub fn argmax(logits: &[f32]) -> u32 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gpt2::IntMethod;
+    use crate::quant::EngineSpec;
 
     fn tiny() -> Gpt2Model {
         Gpt2Model::test_model(2, 16, 2, 12, 32, 7)
@@ -349,8 +469,27 @@ mod tests {
 
     #[test]
     fn session_matches_oracle_int_muxq() {
-        let q = QuantizedGpt2::new(tiny(), IntMethod::Muxq, 8, 8);
+        let q = QuantizedGpt2::new(tiny(), EngineSpec::muxq());
         let prompt = toks(6, 2);
+        let mut s = q.session(WrapPolicy::default());
+        let mut logits = s.prefill(&prompt).unwrap();
+        let mut ctx = prompt.clone();
+        for _ in 0..3 {
+            let oracle = q.forward_logits_session(&[ctx.clone()]).unwrap();
+            assert_eq!(logits, oracle.row(ctx.len() - 1).to_vec());
+            let next = argmax(&logits);
+            logits = s.decode_step(next).unwrap();
+            ctx.push(next);
+        }
+    }
+
+    #[test]
+    fn session_matches_oracle_int_llmint8() {
+        // the new deployed operator reaches the session layer unchanged:
+        // incremental decode must equal the row-independent full-forward
+        // oracle bit for bit
+        let q = QuantizedGpt2::new(tiny(), EngineSpec::llmint8());
+        let prompt = toks(6, 12);
         let mut s = q.session(WrapPolicy::default());
         let mut logits = s.prefill(&prompt).unwrap();
         let mut ctx = prompt.clone();
@@ -397,7 +536,7 @@ mod tests {
 
     #[test]
     fn batched_decode_bit_exact_vs_solo() {
-        let q = QuantizedGpt2::new(tiny(), IntMethod::Muxq, 8, 8);
+        let q = QuantizedGpt2::new(tiny(), EngineSpec::muxq());
         let m = SessionModel::Int(&q);
         let prompts = [toks(3, 5), toks(7, 6), toks(5, 7)];
         // solo runs
@@ -447,5 +586,71 @@ mod tests {
     fn argmax_last_max_wins() {
         assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 2);
         assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+    }
+
+    #[test]
+    fn greedy_sampler_is_argmax_and_consumes_no_rng() {
+        let logits = [0.1f32, 2.5, -1.0, 2.5];
+        let mut s = Sampler::greedy();
+        assert!(s.is_greedy());
+        for _ in 0..3 {
+            assert_eq!(s.sample(&logits), argmax(&logits));
+        }
+        // top_k == 1 degenerates to greedy too
+        let mut s1 = Sampler::new(1.0, 1, 42);
+        assert!(s1.is_greedy());
+        assert_eq!(s1.sample(&logits), argmax(&logits));
+    }
+
+    #[test]
+    fn sampler_is_seed_deterministic_and_in_top_k() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+        let draw = |seed: u64| -> Vec<u32> {
+            let mut s = Sampler::new(0.8, 4, seed);
+            (0..20).map(|_| s.sample(&logits)).collect()
+        };
+        assert_eq!(draw(7), draw(7), "same seed, same stream");
+        assert_ne!(draw(7), draw(8), "different seed, different stream");
+        // every draw lands in the true top-4
+        let mut order: Vec<usize> = (0..logits.len()).collect();
+        order.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]));
+        let top4: Vec<u32> = order[..4].iter().map(|&i| i as u32).collect();
+        for t in draw(7) {
+            assert!(top4.contains(&t), "{t} outside top-k");
+        }
+    }
+
+    #[test]
+    fn sampler_temperature_sharpens_toward_argmax() {
+        // at tiny temperature the softmax collapses onto the max logit
+        let logits = [0.0f32, 1.0, 5.0, 2.0];
+        let mut s = Sampler::new(0.05, 0, 11);
+        for _ in 0..50 {
+            assert_eq!(s.sample(&logits), 2);
+        }
+        // at high temperature other tokens appear
+        let mut hot = Sampler::new(50.0, 0, 13);
+        let draws: Vec<u32> = (0..200).map(|_| hot.sample(&logits)).collect();
+        assert!(draws.iter().any(|&t| t != 2), "high T must diversify");
+    }
+
+    #[test]
+    fn sampled_generation_reproducible_and_session_exact() {
+        // a sampled generation replays exactly given the same seed, and
+        // its tokens stay a valid decode (session == oracle property is
+        // decoupled from HOW the next token is chosen)
+        let m = tiny();
+        let prompt = toks(5, 21);
+        let gen = |seed: u64| {
+            let mut s = m.session(WrapPolicy::default());
+            s.generate(&prompt, 8, &mut Sampler::new(0.9, 5, seed)).unwrap()
+        };
+        assert_eq!(gen(3), gen(3));
+        // greedy generate == generate_greedy
+        let mut s1 = m.session(WrapPolicy::default());
+        let mut s2 = m.session(WrapPolicy::default());
+        let a = s1.generate(&prompt, 6, &mut Sampler::greedy()).unwrap();
+        let b = s2.generate_greedy(&prompt, 6).unwrap();
+        assert_eq!(a, b);
     }
 }

@@ -1,0 +1,1204 @@
+//! The unified linear-operator API: ONE pluggable projection trait from
+//! the packed kernels up to the generation server.
+//!
+//! Before this module the repo carried two disjoint method type systems:
+//! the fake-quant evaluation dispatch (`Method`/`QuantSpec`) and a
+//! hard-wired `IntMethod { Naive, Muxq }` inside the deployed pipeline —
+//! so LLM.int8() and SmoothQuant-composed MUXQ, both central to the
+//! paper's Table 1 comparison, could never reach the packed engine, the
+//! KV-cache sessions or the `GenerationServer`. Now every method is an
+//! object implementing [`QuantLinear`]:
+//!
+//! * **pack once** — [`EngineSpec::pack`] quantizes + packs the weight at
+//!   load time (the zero-copy story of `gpt2::quantized` is preserved:
+//!   per-method scratch lives *behind* the operator, the only steady-state
+//!   per-call allocation is the output matrix);
+//! * **`forward_into`** — the batch GEMM path (one outlier mask per call
+//!   where the method has one — the batching semantics);
+//! * **`forward_row_into`** — the row-independent session/GEMV path (one
+//!   mask per row; M=1 operands auto-route to the packed engine's GEMV
+//!   kernels), the semantics decode bit-exactness is built on;
+//! * **`bytes`** — honest deployed-memory accounting (LLM.int8() pays for
+//!   its resident FP copy, the cost MUXQ's uniform-INT design removes);
+//! * **`plan`** — the npusim execution plan of one call, so simulated
+//!   hardware pricing flows from the same object that runs on the host.
+//!
+//! [`EngineSpec`] is the builder that owns method, bits, granularity,
+//! [`MuxqParams`] and the optional SmoothQuant composition, replacing both
+//! the old `QuantSpec::matmul` dispatch and `IntMethod`. Its canonical
+//! `tag()` / [`EngineSpec::parse`] round-trip is the single spelling of a
+//! variant ("muxq-pt-sq", "naive-pv", "muxq-pt-e1", …) shared with the
+//! python build's manifest (`python/compile/config.py QuantConfig.tag`).
+//!
+//! Bit-exactness contract: the Naive and MUXQ operators reproduce the
+//! pre-redesign `QuantizedGpt2::proj_int` / `proj_session` arithmetic
+//! bit for bit (pinned by `tests/quant_linear.rs` against independently
+//! reconstructed oracles); new capabilities (LLM.int8() deployment,
+//! SmoothQuant composition, per-tensor deployment) are tolerance-tested
+//! against their fake-quant oracles.
+
+use super::absmax::{Granularity, Scales, EPS};
+use super::gemm::matmul_f32;
+use super::matrix::{rint, MatF32, MatI32, MatI8};
+use super::method::Method;
+use super::muxq::{outlier_mask_into, MuxqParams};
+use super::packed::{self, PackedMatI8, ParallelGemm};
+use crate::npusim::gemm_plan::Plan;
+use crate::npusim::NpuConfig;
+use anyhow::{bail, Result};
+use std::fmt;
+use std::sync::Mutex;
+
+// ---------------------------------------------------------------- spec
+
+/// Full specification of a deployable linear-operator engine: which
+/// method, at which bit-widths and granularities, with which MUXQ
+/// hyper-parameters, optionally composed with SmoothQuant. The builder
+/// half of the [`QuantLinear`] API — `spec.pack(w, bias)` yields the
+/// operator object.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineSpec {
+    pub method: Method,
+    /// activation granularity (PerRow = per-token, the deployment default)
+    pub act_gran: Granularity,
+    /// weight granularity (PerCol = per-out-channel, the deployment default)
+    pub w_gran: Granularity,
+    pub ia_bits: u32,
+    pub w_bits: u32,
+    /// outlier threshold + exponent shift (also LLM.int8()'s theta)
+    pub muxq: MuxqParams,
+    /// SmoothQuant migration strength; `None` = no smoothing
+    pub smooth_alpha: Option<f32>,
+}
+
+impl EngineSpec {
+    /// Deployment defaults: per-token activations, per-out-channel
+    /// weights, 8/8 bits, default MUXQ params, no smoothing.
+    pub fn new(method: Method) -> EngineSpec {
+        EngineSpec {
+            method,
+            act_gran: Granularity::PerRow,
+            w_gran: Granularity::PerCol,
+            ia_bits: 8,
+            w_bits: 8,
+            muxq: MuxqParams::default(),
+            smooth_alpha: None,
+        }
+    }
+
+    pub fn fp16() -> EngineSpec {
+        EngineSpec::new(Method::Fp16)
+    }
+
+    pub fn naive() -> EngineSpec {
+        EngineSpec::new(Method::Naive)
+    }
+
+    pub fn muxq() -> EngineSpec {
+        EngineSpec::new(Method::Muxq)
+    }
+
+    pub fn llmint8() -> EngineSpec {
+        EngineSpec::new(Method::LlmInt8)
+    }
+
+    pub fn with_bits(mut self, ia_bits: u32, w_bits: u32) -> EngineSpec {
+        self.ia_bits = ia_bits;
+        self.w_bits = w_bits;
+        self
+    }
+
+    pub fn with_granularity(mut self, act: Granularity, w: Granularity) -> EngineSpec {
+        self.act_gran = act;
+        self.w_gran = w;
+        self
+    }
+
+    pub fn with_muxq(mut self, p: MuxqParams) -> EngineSpec {
+        self.muxq = p;
+        self
+    }
+
+    /// Compose with SmoothQuant difficulty migration (paper contribution
+    /// #2): at pack time the weight rows are scaled by `s` and every
+    /// incoming activation is divided by `s` before quantization.
+    pub fn with_smooth(mut self, alpha: f32) -> EngineSpec {
+        self.smooth_alpha = Some(alpha);
+        self
+    }
+
+    pub fn ia_qmax(&self) -> f32 {
+        super::absmax::qmax_from_bits(self.ia_bits)
+    }
+
+    pub fn w_qmax(&self) -> f32 {
+        super::absmax::qmax_from_bits(self.w_bits)
+    }
+
+    /// The canonical variant tag — the ONE spelling shared by the python
+    /// build manifest, the coordinator registry, and every example:
+    /// `{method}-{pt|pv}[-sq][-e{exp}]` (the `-e` suffix only for MUXQ
+    /// with a non-default `exp_factor`). Bit-widths are deliberately not
+    /// part of the tag: they are runtime inputs of the compiled variants.
+    pub fn tag(&self) -> String {
+        let g = match (self.act_gran, self.w_gran) {
+            (Granularity::PerTensor, Granularity::PerTensor) => "pt",
+            _ => "pv",
+        };
+        let s = if self.smooth_alpha.is_some() { "-sq" } else { "" };
+        let e = if self.method == Method::Muxq && self.muxq.exp_factor != 2 {
+            format!("-e{}", self.muxq.exp_factor)
+        } else {
+            String::new()
+        };
+        format!("{}-{g}{s}{e}", self.method.tag_name())
+    }
+
+    /// Parse a canonical tag back into a spec (bits default to 8/8, the
+    /// smooth alpha to 0.5 — neither is encoded in tags). Inverse of
+    /// [`EngineSpec::tag`]; `parse(t).tag() == t` for every well-formed
+    /// tag, which is what keeps manifest and examples drift-free.
+    pub fn parse(tag: &str) -> Result<EngineSpec> {
+        let mut parts = tag.split('-');
+        let Some(m) = parts.next() else { bail!("empty variant tag") };
+        let method = Method::parse(m)?;
+        let Some(g) = parts.next() else { bail!("variant tag {tag:?} missing granularity") };
+        let Some((act_gran, w_gran)) = Granularity::parse(g) else {
+            bail!("variant tag {tag:?}: unknown granularity {g:?}");
+        };
+        let mut spec = EngineSpec::new(method).with_granularity(act_gran, w_gran);
+        for p in parts {
+            if p == "sq" {
+                spec.smooth_alpha = Some(0.5);
+            } else if let Some(e) = p.strip_prefix('e') {
+                let exp: u32 = e
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("variant tag {tag:?}: bad exp suffix {p:?}"))?;
+                if method != Method::Muxq {
+                    bail!("variant tag {tag:?}: -e suffix is MUXQ-only");
+                }
+                spec.muxq.exp_factor = exp;
+            } else {
+                bail!("variant tag {tag:?}: unknown suffix {p:?}");
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Build the operator for one weight matrix `w [k, n]` + bias,
+    /// quantizing and packing ONCE (load time). Smoothing, when
+    /// configured, uses unit calibration (weight-only equalization);
+    /// real deployments calibrate — see [`EngineSpec::pack_calibrated`].
+    pub fn pack(&self, w: &MatF32, bias: &[f32]) -> Box<dyn QuantLinear> {
+        self.pack_calibrated(w, bias, None)
+    }
+
+    /// [`EngineSpec::pack`] with a per-input-channel activation abs-max
+    /// from calibration (len `k`) feeding the SmoothQuant scales
+    /// `s_j = amax_j^alpha / wmax_j^(1-alpha)`. Ignored when the spec has
+    /// no smoothing.
+    pub fn pack_calibrated(
+        &self,
+        w: &MatF32,
+        bias: &[f32],
+        act_absmax: Option<&[f32]>,
+    ) -> Box<dyn QuantLinear> {
+        assert_eq!(bias.len(), w.cols, "bias length vs output dim");
+        // the SmoothQuant pre-transform: scale weight rows by s at pack
+        // time, remember s to divide activations at call time. Applied
+        // identically by every method (that is the composability claim).
+        let (w_eff, smooth_s): (std::borrow::Cow<'_, MatF32>, Option<Vec<f32>>) =
+            match self.smooth_alpha {
+                None => (std::borrow::Cow::Borrowed(w), None),
+                Some(alpha) => {
+                    let ones = vec![1.0f32; w.rows];
+                    let amax = act_absmax.unwrap_or(&ones);
+                    let s = super::smooth::smooth_scales(amax, w, alpha);
+                    let mut ws = w.clone();
+                    for (r, sc) in s.iter().enumerate() {
+                        for v in ws.row_mut(r) {
+                            *v *= sc;
+                        }
+                    }
+                    (std::borrow::Cow::Owned(ws), Some(s))
+                }
+            };
+        let w_eff: &MatF32 = &w_eff;
+        match self.method {
+            Method::Fp16 => Box::new(Fp32Linear {
+                spec: *self,
+                w: w_eff.clone(),
+                bias: bias.to_vec(),
+                smooth_s,
+            }),
+            Method::Naive => Box::new(NaiveLinear {
+                spec: *self,
+                qw: PackedWeight::quantize(w_eff, self.w_qmax(), self.w_gran, bias),
+                smooth_s,
+                scratch: Mutex::new(IntScratch::new()),
+            }),
+            Method::Muxq => Box::new(MuxqLinear {
+                spec: *self,
+                qw: PackedWeight::quantize(w_eff, self.w_qmax(), self.w_gran, bias),
+                smooth_s,
+                scratch: Mutex::new(IntScratch::new()),
+            }),
+            Method::LlmInt8 => Box::new(LlmInt8Linear {
+                spec: *self,
+                qw: PackedWeight::quantize(w_eff, self.w_qmax(), self.w_gran, bias),
+                w_fp: w_eff.clone(),
+                smooth_s,
+                scratch: Mutex::new(IntScratch::new()),
+            }),
+        }
+    }
+
+    /// One-shot projection for the fake-quant evaluation path
+    /// (`Gpt2Model::forward` with a `QuantSpec`): build the operator,
+    /// run it, drop it. The dispatch that used to live in
+    /// `QuantSpec::matmul` now IS this trait. FP16 skips the pack (no
+    /// weight copy on the reference path).
+    pub fn matmul(&self, x: &MatF32, w: &MatF32) -> MatF32 {
+        if self.method == Method::Fp16 && self.smooth_alpha.is_none() {
+            return matmul_f32(x, w);
+        }
+        self.pack(w, &vec![0.0f32; w.cols]).forward(x)
+    }
+}
+
+impl fmt::Display for EngineSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.tag())
+    }
+}
+
+// ---------------------------------------------------------------- trait
+
+/// One deployed linear operator: a weight matrix quantized + packed at
+/// load time behind a method-specific projection. Object-safe so model
+/// layers hold `Box<dyn QuantLinear>` — the extension point for new
+/// schemes (ResQ-style low-rank residuals, OutlierTune-style channel
+/// variants) without touching the model or serving layers.
+pub trait QuantLinear: Send + Sync {
+    /// The spec this operator was built from.
+    fn spec(&self) -> &EngineSpec;
+
+    /// Logical weight shape `(k, n)`.
+    fn shape(&self) -> (usize, usize);
+
+    /// Deployed weight bytes (packed panels + scales + bias + any
+    /// resident FP copy the method needs — the honest memory claim).
+    fn bytes(&self) -> usize;
+
+    /// Whether the batch path already treats rows independently (no
+    /// cross-row state like a shared outlier mask). When true the
+    /// session layer may batch rows through [`QuantLinear::forward_into`]
+    /// without changing results.
+    fn row_independent(&self) -> bool;
+
+    /// Batch projection `y = x @ W + bias` (`y` resized in place; every
+    /// element overwritten). Batch semantics: methods with an outlier
+    /// mask compute ONE mask over all rows of the call.
+    fn forward_into(&self, x: &MatF32, y: &mut MatF32);
+
+    /// Row-independent projection of ONE row (the session / decode
+    /// path): any outlier mask comes from this row alone, and M=1
+    /// operands route through the packed engine's GEMV kernels. For a
+    /// 1-row input this must agree with [`QuantLinear::forward_into`]
+    /// bit for bit (a single row IS its own batch).
+    fn forward_row_into(&self, x: &[f32], y: &mut [f32]);
+
+    /// The npusim execution plan of one `m`-row call with `r` live
+    /// outlier channels — simulated-hardware pricing derived from the
+    /// same object that runs on the host.
+    fn plan(&self, cfg: &NpuConfig, m: usize, r: usize) -> Plan {
+        let (k, n) = self.shape();
+        let s = self.spec();
+        Plan::build(cfg, s.method, m, k, n, r, s.ia_bits, s.muxq.exp_factor)
+    }
+
+    /// Allocating convenience wrapper over [`QuantLinear::forward_into`].
+    fn forward(&self, x: &MatF32) -> MatF32 {
+        let mut y = MatF32::zeros(0, 0);
+        self.forward_into(x, &mut y);
+        y
+    }
+}
+
+// ------------------------------------------------------- shared pieces
+
+/// One weight matrix, pre-quantized and pre-packed (K-major panels) —
+/// the INT methods' shared weight half.
+pub struct PackedWeight {
+    pub packed: PackedMatI8,
+    pub scales: Scales,
+    pub bias: Vec<f32>,
+}
+
+impl PackedWeight {
+    pub fn quantize(w: &MatF32, qmax: f32, gran: Granularity, bias: &[f32]) -> PackedWeight {
+        let scales = Scales::compute(w, qmax, gran);
+        let q = super::absmax::quantize_i8(w, &scales, qmax);
+        PackedWeight { packed: PackedMatI8::pack(&q), scales, bias: bias.to_vec() }
+    }
+
+    /// Packed panels + scale vector + f32 bias.
+    pub fn bytes(&self) -> usize {
+        self.packed.padded_bytes()
+            + match &self.scales {
+                Scales::Tensor(_) => 4,
+                Scales::Rows(v) | Scales::Cols(v) => v.len() * 4,
+            }
+            + self.bias.len() * 4
+    }
+}
+
+/// Reusable per-operator buffers: on the steady-state path the only
+/// per-call allocation is the caller's output matrix — quantized
+/// operands, accumulators, scale vectors, masks/index lists and the
+/// smoothed-activation copy are all resized in place.
+struct IntScratch {
+    /// smoothed activations (only touched when the spec smooths)
+    xs: MatF32,
+    /// single-row staging for the row path
+    xrow: MatF32,
+    /// quantized activations (Body for MUXQ, masked-normal for LLM.int8())
+    xq: MatI8,
+    /// compact quantized Aux — outlier columns only, [m, r]
+    aux_q: MatI8,
+    acc: MatI32,
+    acc_aux: MatI32,
+    /// per-row activation scales (body, aux)
+    sx: Vec<f32>,
+    sa: Vec<f32>,
+    mask: Vec<bool>,
+    idx: Vec<usize>,
+}
+
+impl IntScratch {
+    fn new() -> IntScratch {
+        IntScratch {
+            xs: MatF32::zeros(0, 0),
+            xrow: MatF32::zeros(0, 0),
+            xq: MatI8::zeros(0, 0),
+            aux_q: MatI8::zeros(0, 0),
+            acc: MatI32::zeros(0, 0),
+            acc_aux: MatI32::zeros(0, 0),
+            sx: Vec::new(),
+            sa: Vec::new(),
+            mask: Vec::new(),
+            idx: Vec::new(),
+        }
+    }
+
+    /// Stage one activation row (applying the smooth divide) into the
+    /// reusable single-row buffer — the shared `forward_row_into`
+    /// preamble of every INT operator. ONE implementation on purpose:
+    /// this is the seam the decode bit-exactness oracles stand on.
+    fn stage_row(&mut self, x: &[f32], smooth_s: &Option<Vec<f32>>) {
+        self.xrow.rows = 1;
+        self.xrow.cols = x.len();
+        self.xrow.data.resize(x.len(), 0.0);
+        self.xrow.data.copy_from_slice(x);
+        if let Some(s) = smooth_s {
+            for (v, sv) in self.xrow.data.iter_mut().zip(s) {
+                *v /= sv;
+            }
+        }
+    }
+}
+
+/// Divide activations by the smooth scales into `buf` (matching
+/// `smooth::migrate`'s X side bit for bit), or pass `x` through
+/// untouched when the operator is not smoothed.
+fn smoothed<'a>(x: &'a MatF32, s: &Option<Vec<f32>>, buf: &'a mut MatF32) -> &'a MatF32 {
+    let Some(s) = s else { return x };
+    buf.rows = x.rows;
+    buf.cols = x.cols;
+    buf.data.resize(x.rows * x.cols, 0.0);
+    for ((bv, xv), sc) in
+        buf.data.iter_mut().zip(&x.data).zip(s.iter().cycle().take(x.rows * x.cols))
+    {
+        *bv = xv / sc;
+    }
+    buf
+}
+
+/// Per-row abs-max quantization straight into reusable scratch (the
+/// per-token path), or one shared tensor scale when `gran` is
+/// per-tensor (the scale is still materialized per row so the shared
+/// dequant path stays branch-free). Bit-identical to
+/// `Scales::compute` + `quantize_i8`.
+fn quantize_rows_into(
+    x: &MatF32,
+    qmax: f32,
+    gran: Granularity,
+    xq: &mut MatI8,
+    sx: &mut Vec<f32>,
+) {
+    let (m, k) = (x.rows, x.cols);
+    xq.rows = m;
+    xq.cols = k;
+    xq.data.resize(m * k, 0);
+    sx.clear();
+    sx.resize(m, 0.0);
+    for r in 0..m {
+        sx[r] = x.row(r).iter().fold(0.0f32, |mx, v| mx.max(v.abs()));
+    }
+    if gran == Granularity::PerTensor {
+        let g = sx.iter().fold(0.0f32, |a, &b| a.max(b));
+        sx.iter_mut().for_each(|v| *v = g);
+    }
+    for s in sx.iter_mut() {
+        *s = s.max(EPS) / qmax;
+    }
+    for r in 0..m {
+        let s = sx[r];
+        for (qv, v) in xq.data[r * k..(r + 1) * k].iter_mut().zip(x.row(r)) {
+            *qv = rint(v / s).clamp(-qmax, qmax) as i8;
+        }
+    }
+}
+
+/// Fused MUXQ decompose + quantize: one pass over each row computes the
+/// Body and compact-Aux abs-maxes, a second writes the quantized values
+/// straight into i8 scratch — no f32 Body/Aux matrices ever exist.
+/// Bit-identical to decompose → `Scales::compute` → `quantize_i8` at
+/// both granularities (|x·2^-e| == |x|·2^-e exactly: the shift is a
+/// power of two; per-tensor just reduces the row maxes once more).
+#[allow(clippy::too_many_arguments)]
+fn fused_decompose_quantize(
+    x: &MatF32,
+    mask: &[bool],
+    idx: &[usize],
+    inv: f32,
+    qmax: f32,
+    gran: Granularity,
+    body_q: &mut MatI8,
+    sb: &mut Vec<f32>,
+    aux_q: &mut MatI8,
+    sa: &mut Vec<f32>,
+) {
+    let (m, k, r) = (x.rows, x.cols, idx.len());
+    debug_assert_eq!(mask.len(), k);
+    body_q.rows = m;
+    body_q.cols = k;
+    body_q.data.resize(m * k, 0);
+    aux_q.rows = m;
+    aux_q.cols = r;
+    aux_q.data.resize(m * r, 0);
+    sb.clear();
+    sb.resize(m, 0.0);
+    sa.clear();
+    sa.resize(m, 0.0);
+    for row in 0..m {
+        let xr = x.row(row);
+        let mut bmax = 0.0f32;
+        let mut amax = 0.0f32;
+        for c in 0..k {
+            let v = xr[c].abs();
+            if mask[c] {
+                let shifted = v * inv;
+                bmax = bmax.max(shifted);
+                amax = amax.max(shifted);
+            } else {
+                bmax = bmax.max(v);
+            }
+        }
+        sb[row] = bmax;
+        sa[row] = amax;
+    }
+    if gran == Granularity::PerTensor {
+        let gb = sb.iter().fold(0.0f32, |a, &b| a.max(b));
+        let ga = sa.iter().fold(0.0f32, |a, &b| a.max(b));
+        sb.iter_mut().for_each(|v| *v = gb);
+        sa.iter_mut().for_each(|v| *v = ga);
+    }
+    for v in sb.iter_mut() {
+        *v = v.max(EPS) / qmax;
+    }
+    for v in sa.iter_mut() {
+        *v = v.max(EPS) / qmax;
+    }
+    for row in 0..m {
+        let xr = x.row(row);
+        let sbv = sb[row];
+        let sav = sa[row];
+        for (c, bq) in body_q.data[row * k..(row + 1) * k].iter_mut().enumerate() {
+            let v = if mask[c] { xr[c] * inv } else { xr[c] };
+            *bq = rint(v / sbv).clamp(-qmax, qmax) as i8;
+        }
+        for (t, aq) in aux_q.data[row * r..(row + 1) * r].iter_mut().enumerate() {
+            *aq = rint(xr[idx[t]] * inv / sav).clamp(-qmax, qmax) as i8;
+        }
+    }
+}
+
+/// Dequantize the body accumulator — plus, for MUXQ, the recombination
+/// `f · Aux` term — and add the bias, one pass over the output, resized
+/// in place.
+fn dequant_bias_into(
+    acc: &MatI32,
+    sx: &[f32],
+    sw: &Scales,
+    aux: Option<(&MatI32, &[f32], f32)>,
+    bias: &[f32],
+    y: &mut MatF32,
+) {
+    let (m, n) = (acc.rows, acc.cols);
+    y.rows = m;
+    y.cols = n;
+    y.data.resize(m * n, 0.0);
+    for r in 0..m {
+        let yrow = &mut y.data[r * n..(r + 1) * n];
+        let arow = &acc.data[r * n..(r + 1) * n];
+        let aux_row = aux.map(|(acc2, sa, f)| (&acc2.data[r * n..(r + 1) * n], sa[r], f));
+        dequant_bias_row(arow, sx[r], sw, aux_row, bias, yrow);
+    }
+}
+
+/// One output row of [`dequant_bias_into`] — shared by the batch path
+/// and the row-wise session path, so the two are
+/// arithmetic-for-arithmetic identical (the decode bit-exactness oracle
+/// depends on this).
+pub(crate) fn dequant_bias_row(
+    arow: &[i32],
+    sxr: f32,
+    sw: &Scales,
+    aux: Option<(&[i32], f32, f32)>,
+    bias: &[f32],
+    yrow: &mut [f32],
+) {
+    let n = arow.len();
+    match aux {
+        None => {
+            for j in 0..n {
+                yrow[j] = arow[j] as f32 * (sxr * sw.at(0, j)) + bias[j];
+            }
+        }
+        Some((a2, sar, f)) => {
+            for j in 0..n {
+                let swj = sw.at(0, j);
+                yrow[j] =
+                    arow[j] as f32 * (sxr * swj) + f * (a2[j] as f32 * (sar * swj)) + bias[j];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------- fp32 (fp16)
+
+/// The FP reference operator (f32 standing in for FP16, as everywhere in
+/// this repo): no quantization, plain GEMM + bias. Gives the fp16 rows
+/// of Tables 1–2 the same object shape as the INT methods.
+pub struct Fp32Linear {
+    spec: EngineSpec,
+    w: MatF32,
+    bias: Vec<f32>,
+    smooth_s: Option<Vec<f32>>,
+}
+
+impl QuantLinear for Fp32Linear {
+    fn spec(&self) -> &EngineSpec {
+        &self.spec
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.w.rows, self.w.cols)
+    }
+
+    fn bytes(&self) -> usize {
+        self.w.data.len() * 4 + self.bias.len() * 4
+    }
+
+    fn row_independent(&self) -> bool {
+        true
+    }
+
+    fn forward_into(&self, x: &MatF32, y: &mut MatF32) {
+        // smoothing is function-preserving in FP: X/s @ s⊙W == X @ W up
+        // to rounding; applied anyway so the FP operator is the faithful
+        // reference for its smoothed INT siblings
+        let mut buf = MatF32::zeros(0, 0);
+        let xs = smoothed(x, &self.smooth_s, &mut buf);
+        *y = matmul_f32(xs, &self.w);
+        for r in 0..y.rows {
+            for (v, b) in y.row_mut(r).iter_mut().zip(&self.bias) {
+                *v += b;
+            }
+        }
+    }
+
+    fn forward_row_into(&self, x: &[f32], y: &mut [f32]) {
+        let (k, n) = self.shape();
+        debug_assert_eq!(x.len(), k);
+        debug_assert_eq!(y.len(), n);
+        // k-ascending accumulation with the bias added LAST — the same
+        // float summation order as the batch kernel (`matmul_f32` plus
+        // the bias pass), so a 1-row batch and the row path agree bit
+        // for bit. The zero-skip matches `matmul_f32_rows` too.
+        y.fill(0.0);
+        for (c, &xv) in x.iter().enumerate() {
+            let xv = match &self.smooth_s {
+                Some(s) => xv / s[c],
+                None => xv,
+            };
+            if xv == 0.0 {
+                continue;
+            }
+            for (yv, wv) in y.iter_mut().zip(self.w.row(c)) {
+                *yv += xv * wv;
+            }
+        }
+        for (yv, b) in y.iter_mut().zip(&self.bias) {
+            *yv += b;
+        }
+    }
+}
+
+// ---------------------------------------------------------------- naive
+
+/// Naive abs-max: quantize activations per row (or tensor), one packed
+/// INT8 GEMM, dequantize + bias. Row-independent by construction.
+pub struct NaiveLinear {
+    spec: EngineSpec,
+    qw: PackedWeight,
+    smooth_s: Option<Vec<f32>>,
+    scratch: Mutex<IntScratch>,
+}
+
+impl NaiveLinear {
+    fn project(&self, x: &MatF32, y: &mut MatF32) {
+        let qmax = self.spec.ia_qmax();
+        let mut guard = self.scratch.lock().unwrap();
+        let sc = &mut *guard;
+        let xs = smoothed(x, &self.smooth_s, &mut sc.xs);
+        quantize_rows_into(xs, qmax, self.spec.act_gran, &mut sc.xq, &mut sc.sx);
+        packed::matmul_i8_packed_into(&sc.xq, &self.qw.packed, &mut sc.acc, ParallelGemm::global());
+        dequant_bias_into(&sc.acc, &sc.sx, &self.qw.scales, None, &self.qw.bias, y);
+    }
+}
+
+impl QuantLinear for NaiveLinear {
+    fn spec(&self) -> &EngineSpec {
+        &self.spec
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.qw.packed.rows, self.qw.packed.cols)
+    }
+
+    fn bytes(&self) -> usize {
+        self.qw.bytes() + self.smooth_s.as_ref().map_or(0, |s| s.len() * 4)
+    }
+
+    fn row_independent(&self) -> bool {
+        // per-tensor activation scales couple rows through the shared
+        // abs-max; per-row scales do not
+        self.spec.act_gran == Granularity::PerRow
+    }
+
+    fn forward_into(&self, x: &MatF32, y: &mut MatF32) {
+        self.project(x, y);
+    }
+
+    fn forward_row_into(&self, x: &[f32], y: &mut [f32]) {
+        let (k, n) = self.shape();
+        debug_assert_eq!(x.len(), k);
+        debug_assert_eq!(y.len(), n);
+        let qmax = self.spec.ia_qmax();
+        let mut guard = self.scratch.lock().unwrap();
+        let sc = &mut *guard;
+        sc.stage_row(x, &self.smooth_s);
+        quantize_rows_into(&sc.xrow, qmax, Granularity::PerRow, &mut sc.xq, &mut sc.sx);
+        packed::matmul_i8_packed_into(&sc.xq, &self.qw.packed, &mut sc.acc, ParallelGemm::global());
+        dequant_bias_row(&sc.acc.data[..n], sc.sx[0], &self.qw.scales, None, &self.qw.bias, y);
+    }
+}
+
+// ----------------------------------------------------------------- muxq
+
+/// MUXQ (the paper): outlier decomposition into Body + compact Aux, both
+/// uniform INT8, recombined as `Body + (2^exp − 1)·Aux`. The Aux GEMM
+/// reads its outlier rows straight out of the ONE packed weight via the
+/// rows-subset kernel — zero gather, zero re-pack (DESIGN.md §4).
+pub struct MuxqLinear {
+    spec: EngineSpec,
+    qw: PackedWeight,
+    smooth_s: Option<Vec<f32>>,
+    scratch: Mutex<IntScratch>,
+}
+
+impl MuxqLinear {
+    /// The shared projection body; `sc.mask` is already computed over
+    /// `xs` — callers differ only in mask scope (whole batch vs one row).
+    fn project_masked(&self, xs: &MatF32, sc: &mut IntScratch, y_row0: &mut [f32]) {
+        let qmax = self.spec.ia_qmax();
+        let n = self.qw.packed.cols;
+        sc.idx.clear();
+        sc.idx.extend(sc.mask.iter().enumerate().filter(|(_, m)| **m).map(|(i, _)| i));
+        fused_decompose_quantize(
+            xs,
+            &sc.mask,
+            &sc.idx,
+            self.spec.muxq.inv_shift(),
+            qmax,
+            self.spec.act_gran,
+            &mut sc.xq,
+            &mut sc.sx,
+            &mut sc.aux_q,
+            &mut sc.sa,
+        );
+        packed::matmul_i8_packed_into(&sc.xq, &self.qw.packed, &mut sc.acc, ParallelGemm::global());
+        if sc.idx.is_empty() {
+            for r in 0..xs.rows {
+                dequant_bias_row(
+                    &sc.acc.data[r * n..(r + 1) * n],
+                    sc.sx[r],
+                    &self.qw.scales,
+                    None,
+                    &self.qw.bias,
+                    &mut y_row0[r * n..(r + 1) * n],
+                );
+            }
+        } else {
+            packed::matmul_i8_rows_subset_into(
+                &sc.aux_q,
+                &self.qw.packed,
+                &sc.idx,
+                &mut sc.acc_aux,
+                ParallelGemm::global(),
+            );
+            let f = self.spec.muxq.aux_weight();
+            for r in 0..xs.rows {
+                dequant_bias_row(
+                    &sc.acc.data[r * n..(r + 1) * n],
+                    sc.sx[r],
+                    &self.qw.scales,
+                    Some((&sc.acc_aux.data[r * n..(r + 1) * n], sc.sa[r], f)),
+                    &self.qw.bias,
+                    &mut y_row0[r * n..(r + 1) * n],
+                );
+            }
+        }
+    }
+}
+
+impl QuantLinear for MuxqLinear {
+    fn spec(&self) -> &EngineSpec {
+        &self.spec
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.qw.packed.rows, self.qw.packed.cols)
+    }
+
+    fn bytes(&self) -> usize {
+        self.qw.bytes() + self.smooth_s.as_ref().map_or(0, |s| s.len() * 4)
+    }
+
+    fn row_independent(&self) -> bool {
+        // the batch path computes ONE outlier mask over all rows of a
+        // call — a batching artifact the session layer must not inherit
+        false
+    }
+
+    fn forward_into(&self, x: &MatF32, y: &mut MatF32) {
+        let n = self.qw.packed.cols;
+        let mut guard = self.scratch.lock().unwrap();
+        let sc = &mut *guard;
+        y.rows = x.rows;
+        y.cols = n;
+        y.data.resize(x.rows * n, 0.0);
+        if self.smooth_s.is_some() {
+            // move the smoothed copy out of the scratch so the rest of
+            // the struct can be borrowed mutably alongside it (put back
+            // after; the placeholder is 0-element — no allocation)
+            smoothed(x, &self.smooth_s, &mut sc.xs);
+            let xs = std::mem::replace(&mut sc.xs, MatF32::zeros(0, 0));
+            outlier_mask_into(&xs, self.spec.muxq.theta, &mut sc.mask);
+            self.project_masked(&xs, sc, &mut y.data);
+            sc.xs = xs;
+        } else {
+            outlier_mask_into(x, self.spec.muxq.theta, &mut sc.mask);
+            self.project_masked(x, sc, &mut y.data);
+        }
+    }
+
+    fn forward_row_into(&self, x: &[f32], y: &mut [f32]) {
+        let (k, n) = self.shape();
+        debug_assert_eq!(x.len(), k);
+        debug_assert_eq!(y.len(), n);
+        let mut guard = self.scratch.lock().unwrap();
+        let sc = &mut *guard;
+        sc.stage_row(x, &self.smooth_s);
+        outlier_mask_into(&sc.xrow, self.spec.muxq.theta, &mut sc.mask);
+        let xrow = std::mem::replace(&mut sc.xrow, MatF32::zeros(0, 0));
+        self.project_masked(&xrow, sc, y);
+        sc.xrow = xrow;
+    }
+}
+
+// ------------------------------------------------------------- llm.int8
+
+/// Deployed LLM.int8() (Dettmers et al., 2022): outlier channels stay FP
+/// (f32 standing in for FP16), normal channels run through the packed
+/// INT8 engine. The operator must keep an FP copy of the weights
+/// resident — the mask is a *runtime* property of the activations, so no
+/// load-time quantization can cover the outlier rows. `bytes()` charges
+/// that copy at 2 bytes/element (the FP16 it stands in for): deployed
+/// LLM.int8() forfeits most of the INT memory saving, exactly the
+/// hardware-unfriendliness the paper's uniform-INT design removes.
+pub struct LlmInt8Linear {
+    spec: EngineSpec,
+    qw: PackedWeight,
+    /// resident FP weights for the outlier leg (fp16 stand-in)
+    w_fp: MatF32,
+    smooth_s: Option<Vec<f32>>,
+    scratch: Mutex<IntScratch>,
+}
+
+impl LlmInt8Linear {
+    /// Quantize with outlier columns zeroed, scales over the normal
+    /// channels only (the fq_llmint8_act discipline).
+    fn quantize_masked(&self, xs: &MatF32, sc: &mut IntScratch) {
+        let qmax = self.spec.ia_qmax();
+        let (m, k) = (xs.rows, xs.cols);
+        sc.xq.rows = m;
+        sc.xq.cols = k;
+        sc.xq.data.resize(m * k, 0);
+        sc.sx.clear();
+        sc.sx.resize(m, 0.0);
+        for r in 0..m {
+            let xr = xs.row(r);
+            let mut amax = 0.0f32;
+            for c in 0..k {
+                if !sc.mask[c] {
+                    amax = amax.max(xr[c].abs());
+                }
+            }
+            sc.sx[r] = amax;
+        }
+        if self.spec.act_gran == Granularity::PerTensor {
+            let g = sc.sx.iter().fold(0.0f32, |a, &b| a.max(b));
+            sc.sx.iter_mut().for_each(|v| *v = g);
+        }
+        for v in sc.sx.iter_mut() {
+            *v = v.max(EPS) / qmax;
+        }
+        for r in 0..m {
+            let xr = xs.row(r);
+            let s = sc.sx[r];
+            for (c, qv) in sc.xq.data[r * k..(r + 1) * k].iter_mut().enumerate() {
+                *qv = if sc.mask[c] { 0 } else { rint(xr[c] / s).clamp(-qmax, qmax) as i8 };
+            }
+        }
+    }
+
+    /// INT leg + FP outlier leg over rows of `xs`, writing `y` rows.
+    fn project(&self, xs: &MatF32, sc: &mut IntScratch, y: &mut [f32]) {
+        let n = self.qw.packed.cols;
+        sc.idx.clear();
+        sc.idx.extend(sc.mask.iter().enumerate().filter(|(_, m)| **m).map(|(i, _)| i));
+        self.quantize_masked(xs, sc);
+        packed::matmul_i8_packed_into(&sc.xq, &self.qw.packed, &mut sc.acc, ParallelGemm::global());
+        for r in 0..xs.rows {
+            dequant_bias_row(
+                &sc.acc.data[r * n..(r + 1) * n],
+                sc.sx[r],
+                &self.qw.scales,
+                None,
+                &self.qw.bias,
+                &mut y[r * n..(r + 1) * n],
+            );
+        }
+        // FP outlier leg: dense-but-skinny gathered GEMM, accumulated
+        // on top (the irregular mixed-precision part MUXQ eliminates)
+        for r in 0..xs.rows {
+            let xr = xs.row(r);
+            let yrow = &mut y[r * n..(r + 1) * n];
+            for &c in &sc.idx {
+                let xv = xr[c];
+                if xv == 0.0 {
+                    continue;
+                }
+                for (yv, wv) in yrow.iter_mut().zip(self.w_fp.row(c)) {
+                    *yv += xv * wv;
+                }
+            }
+        }
+    }
+}
+
+impl QuantLinear for LlmInt8Linear {
+    fn spec(&self) -> &EngineSpec {
+        &self.spec
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.qw.packed.rows, self.qw.packed.cols)
+    }
+
+    fn bytes(&self) -> usize {
+        // fp16 stand-in for the resident FP copy: 2 bytes per element
+        self.qw.bytes()
+            + self.w_fp.data.len() * 2
+            + self.smooth_s.as_ref().map_or(0, |s| s.len() * 4)
+    }
+
+    fn row_independent(&self) -> bool {
+        false // shared batch mask, like MUXQ
+    }
+
+    fn forward_into(&self, x: &MatF32, y: &mut MatF32) {
+        let n = self.qw.packed.cols;
+        let mut guard = self.scratch.lock().unwrap();
+        let sc = &mut *guard;
+        y.rows = x.rows;
+        y.cols = n;
+        y.data.resize(x.rows * n, 0.0);
+        if self.smooth_s.is_some() {
+            smoothed(x, &self.smooth_s, &mut sc.xs);
+            let xs = std::mem::replace(&mut sc.xs, MatF32::zeros(0, 0));
+            outlier_mask_into(&xs, self.spec.muxq.theta, &mut sc.mask);
+            self.project(&xs, sc, &mut y.data);
+            sc.xs = xs;
+        } else {
+            outlier_mask_into(x, self.spec.muxq.theta, &mut sc.mask);
+            self.project(x, sc, &mut y.data);
+        }
+    }
+
+    fn forward_row_into(&self, x: &[f32], y: &mut [f32]) {
+        let (k, n) = self.shape();
+        debug_assert_eq!(x.len(), k);
+        debug_assert_eq!(y.len(), n);
+        let mut guard = self.scratch.lock().unwrap();
+        let sc = &mut *guard;
+        sc.stage_row(x, &self.smooth_s);
+        outlier_mask_into(&sc.xrow, self.spec.muxq.theta, &mut sc.mask);
+        let xrow = std::mem::replace(&mut sc.xrow, MatF32::zeros(0, 0));
+        self.project(&xrow, sc, y);
+        sc.xrow = xrow;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::prng::SplitMix64;
+    use crate::quant::gemm::quant_matmul;
+    use crate::quant::llmint8::llmint8_matmul;
+    use crate::quant::muxq::muxq_matmul_int;
+
+    fn mat(rows: usize, cols: usize, seed: u64, out_cols: &[usize], scale: f32) -> MatF32 {
+        let mut rng = SplitMix64::new(seed);
+        let mut m = MatF32::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| (rng.next_f64() as f32 - 0.5) * 4.0).collect(),
+        )
+        .unwrap();
+        for r in 0..rows {
+            for &c in out_cols {
+                *m.at_mut(r, c) *= scale;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn tag_round_trips() {
+        for tag in [
+            "fp16-pt", "naive-pv", "naive-pt", "muxq-pv", "muxq-pt", "llmint8-pv",
+            "llmint8-pt", "muxq-pt-sq", "naive-pt-sq", "muxq-pt-e1", "muxq-pt-e3",
+            "muxq-pt-sq-e3",
+        ] {
+            let spec = EngineSpec::parse(tag).unwrap();
+            assert_eq!(spec.tag(), tag, "round trip");
+            assert_eq!(format!("{spec}"), tag, "Display == tag");
+        }
+        assert!(EngineSpec::parse("frob-pt").is_err());
+        assert!(EngineSpec::parse("muxq-pg").is_err());
+        assert!(EngineSpec::parse("naive-pt-e3").is_err(), "-e is muxq-only");
+        assert!(EngineSpec::parse("muxq-pt-zz").is_err());
+    }
+
+    #[test]
+    fn builder_defaults_are_deployment_grade() {
+        let s = EngineSpec::muxq();
+        assert_eq!(s.act_gran, Granularity::PerRow);
+        assert_eq!(s.w_gran, Granularity::PerCol);
+        assert_eq!((s.ia_bits, s.w_bits), (8, 8));
+        assert_eq!(s.tag(), "muxq-pv");
+        let s = EngineSpec::naive().with_bits(6, 8).with_granularity(
+            Granularity::PerTensor,
+            Granularity::PerTensor,
+        );
+        assert_eq!(s.ia_qmax(), 31.0);
+        assert_eq!(s.tag(), "naive-pt");
+    }
+
+    #[test]
+    fn naive_operator_matches_quant_matmul_bitwise() {
+        // same scales, same quantized grid, integer-exact GEMM: the
+        // operator must equal the legacy pipeline bit for bit (zero bias)
+        let x = mat(12, 40, 1, &[], 1.0);
+        let w = mat(40, 24, 2, &[], 1.0);
+        for (ag, wg) in [
+            (Granularity::PerRow, Granularity::PerCol),
+            (Granularity::PerTensor, Granularity::PerTensor),
+        ] {
+            let op = EngineSpec::naive().with_granularity(ag, wg).pack(&w, &vec![0.0; 24]);
+            let y = op.forward(&x);
+            let want = quant_matmul(&x, &w, 127.0, ag, wg);
+            assert_eq!(y.data, want.data, "{ag:?}/{wg:?}");
+        }
+    }
+
+    #[test]
+    fn muxq_operator_matches_legacy_int_pipeline_per_vector() {
+        // per-vector (the deployment granularity): identical mask, fused
+        // quantization and one-packed-W aux path → bit-exact vs
+        // muxq_matmul_int
+        let x = mat(16, 48, 3, &[5, 20], 25.0);
+        let w = mat(48, 16, 4, &[], 1.0);
+        let op = EngineSpec::muxq().pack(&w, &vec![0.0; 16]);
+        let y = op.forward(&x);
+        let want = muxq_matmul_int(
+            &x,
+            &w,
+            127.0,
+            Granularity::PerRow,
+            Granularity::PerCol,
+            &MuxqParams::default(),
+        );
+        assert_eq!(y.data, want.data);
+    }
+
+    #[test]
+    fn llmint8_operator_tracks_fake_quant_oracle() {
+        // deployed llm.int8() packs W once with full-W scales; the oracle
+        // re-quantizes W per call with outlier rows zeroed — tolerance,
+        // not bit-exactness, is the contract
+        let x = mat(24, 48, 5, &[7, 30], 25.0);
+        let w = mat(48, 16, 6, &[], 1.0);
+        let op = EngineSpec::llmint8().pack(&w, &vec![0.0; 16]);
+        let y = op.forward(&x);
+        let oracle =
+            llmint8_matmul(&x, &w, 127.0, Granularity::PerRow, Granularity::PerCol, 6.0);
+        let exact = matmul_f32(&x, &w);
+        assert!(y.mean_abs_diff(&oracle) < 0.05, "mae {}", y.mean_abs_diff(&oracle));
+        assert!(y.mean_abs_diff(&exact) < 0.1, "vs fp mae {}", y.mean_abs_diff(&exact));
+    }
+
+    #[test]
+    fn single_row_batch_equals_row_path_all_methods() {
+        // a 1-row batch IS its own mask scope, so forward_into and
+        // forward_row_into must agree bit for bit — the seam the session
+        // layer's bit-exactness oracle rests on
+        let x = mat(1, 32, 7, &[3], 30.0);
+        let w = mat(32, 12, 8, &[], 1.0);
+        let bias: Vec<f32> = (0..12).map(|i| i as f32 * 0.1).collect();
+        for spec in [
+            EngineSpec::fp16(),
+            EngineSpec::naive(),
+            EngineSpec::muxq(),
+            EngineSpec::llmint8(),
+            EngineSpec::muxq().with_smooth(0.5),
+        ] {
+            let op = spec.pack(&w, &bias);
+            let batch = op.forward(&x);
+            let mut row = vec![0.0f32; 12];
+            op.forward_row_into(x.row(0), &mut row);
+            assert_eq!(batch.data, row, "{}", spec.tag());
+        }
+    }
+
+    #[test]
+    fn smooth_composition_is_function_preserving_shape() {
+        // smoothing moves difficulty, it must not move the answer: the
+        // smoothed INT operator stays close to FP, and beats the
+        // unsmoothed one on hostile activations at low bits
+        let mut x = mat(32, 32, 9, &[], 1.0);
+        for r in 0..32 {
+            *x.at_mut(r, 7) *= 40.0;
+        }
+        let w = mat(32, 16, 10, &[], 1.0);
+        let exact = matmul_f32(&x, &w);
+        let amax = x.absmax_cols();
+        let plain = EngineSpec::naive()
+            .with_bits(6, 8)
+            .pack(&w, &vec![0.0; 16])
+            .forward(&x);
+        let smooth = EngineSpec::naive()
+            .with_bits(6, 8)
+            .with_smooth(0.5)
+            .pack_calibrated(&w, &vec![0.0; 16], Some(&amax))
+            .forward(&x);
+        assert!(
+            smooth.mean_abs_diff(&exact) < plain.mean_abs_diff(&exact),
+            "smooth {} plain {}",
+            smooth.mean_abs_diff(&exact),
+            plain.mean_abs_diff(&exact)
+        );
+    }
+
+    #[test]
+    fn bytes_accounting_ranks_methods() {
+        let w = mat(64, 64, 11, &[], 1.0);
+        let bias = vec![0.0f32; 64];
+        let fp = EngineSpec::fp16().pack(&w, &bias).bytes();
+        let naive = EngineSpec::naive().pack(&w, &bias).bytes();
+        let muxq = EngineSpec::muxq().pack(&w, &bias).bytes();
+        let mixed = EngineSpec::llmint8().pack(&w, &bias).bytes();
+        assert!(naive < fp, "INT8 beats f32 storage");
+        assert_eq!(naive, muxq, "MUXQ stores exactly one packed W");
+        assert!(mixed > naive, "llm.int8() pays for its resident FP copy");
+        assert!(mixed < fp, "but the int+fp16 pair still beats pure f32");
+    }
+
+    #[test]
+    fn plan_prices_through_the_operator() {
+        // decode-shaped weight (big enough that the M=1 weight stream,
+        // not the array fill/drain, dominates): the INT plan must be
+        // DMA-bound and uniform-INT MUXQ must beat mixed precision
+        let cfg = NpuConfig::default();
+        let w = mat(256, 1024, 12, &[], 1.0);
+        let bias = vec![0.0f32; 1024];
+        let muxq = EngineSpec::muxq().pack(&w, &bias);
+        let mixed = EngineSpec::llmint8().pack(&w, &bias);
+        let pm = muxq.plan(&cfg, 1, 8);
+        let px = mixed.plan(&cfg, 1, 8);
+        assert_eq!(pm.method, Method::Muxq);
+        assert!(
+            pm.cost(&cfg).cycles() < px.cost(&cfg).cycles(),
+            "uniform INT decode beats mixed precision"
+        );
+        // decode plans are memory-bound — the regime the serving layer
+        // lives in (npusim::decode_cost is the aggregate twin)
+        assert!(pm.is_memory_bound(&cfg));
+    }
+
+    #[test]
+    fn spec_matmul_is_the_one_dispatch() {
+        // the eval path (QuantSpec::matmul's replacement): every method
+        // runs through the same trait objects, and on an outlier-bearing
+        // input the outlier-aware methods beat naive — the Table 1 shape
+        let x = mat(16, 32, 13, &[3], 25.0);
+        let w = mat(32, 8, 14, &[], 1.0);
+        let exact = matmul_f32(&x, &w);
+        let mae = |spec: EngineSpec| {
+            let y = spec.matmul(&x, &w);
+            assert_eq!((y.rows, y.cols), (16, 8));
+            y.mean_abs_diff(&exact)
+        };
+        assert_eq!(mae(EngineSpec::fp16()), 0.0);
+        let naive = mae(EngineSpec::naive());
+        let muxq = mae(EngineSpec::muxq());
+        let mixed = mae(EngineSpec::llmint8());
+        assert!(naive < 0.5, "naive pays for the outlier row scales: {naive}");
+        assert!(muxq < 0.2 && muxq < naive, "muxq {muxq} vs naive {naive}");
+        assert!(mixed < 0.2 && mixed < naive, "llm.int8() {mixed} vs naive {naive}");
+    }
+}

@@ -1,12 +1,19 @@
-//! Unified method dispatch: one enum covering every scheme in the paper's
-//! evaluation, used by examples, benches and the coordinator's variant
-//! registry.
+//! Method naming + the fake-quant evaluation spec.
+//!
+//! [`Method`] is the paper's column axis (Table 1); [`QuantSpec`] carries
+//! the fake-quantization evaluation parameters (the paper's §4.3
+//! pipeline). Projection DISPATCH no longer lives here: the one pluggable
+//! route from a (method, bits, granularity) point to kernels is
+//! [`super::linear::EngineSpec`] → [`super::linear::QuantLinear`] — the
+//! `QuantSpec::matmul` match this module used to own is
+//! `EngineSpec::matmul` now, and `QuantSpec::engine()` is the bridge the
+//! model's fake-quant forward path crosses.
 
 use super::absmax::{fq_naive, Granularity};
-use super::gemm::{matmul_f32, quant_matmul};
-use super::llmint8::{fq_llmint8_act, llmint8_matmul};
+use super::linear::EngineSpec;
+use super::llmint8::fq_llmint8_act;
 use super::matrix::MatF32;
-use super::muxq::{fq_muxq, muxq_matmul_int, MuxqParams};
+use super::muxq::{fq_muxq, MuxqParams};
 use anyhow::{bail, Result};
 
 /// Quantization method (Table 1 columns).
@@ -29,6 +36,7 @@ impl Method {
         })
     }
 
+    /// Human-facing name (tables, reports).
     pub fn name(&self) -> &'static str {
         match self {
             Method::Fp16 => "fp16",
@@ -37,10 +45,24 @@ impl Method {
             Method::LlmInt8 => "llm.int8()",
         }
     }
+
+    /// The spelling used inside variant tags and the build manifest
+    /// (`python/compile/config.py` uses the same strings) — parseable by
+    /// [`Method::parse`], unlike the display name `"llm.int8()"`.
+    pub fn tag_name(&self) -> &'static str {
+        match self {
+            Method::Fp16 => "fp16",
+            Method::Naive => "naive",
+            Method::Muxq => "muxq",
+            Method::LlmInt8 => "llmint8",
+        }
+    }
 }
 
-/// A full quantization specification (method + granularity + bits + MUXQ
-/// hyper-parameters).
+/// A full fake-quantization specification (method + granularity + bits +
+/// MUXQ hyper-parameters) — the paper's evaluation pipeline. For the
+/// deployed (true-INT, pack-once) pipeline use
+/// [`EngineSpec`](super::linear::EngineSpec) directly.
 #[derive(Debug, Clone, Copy)]
 pub struct QuantSpec {
     pub method: Method,
@@ -67,6 +89,16 @@ impl QuantSpec {
         super::absmax::qmax_from_bits(self.w_bits)
     }
 
+    /// The deployable engine spec at this evaluation point — the bridge
+    /// from the fake-quant eval world into the one projection trait
+    /// (`Gpt2Model::forward`'s quantized path projects through this).
+    pub fn engine(&self) -> EngineSpec {
+        EngineSpec::new(self.method)
+            .with_granularity(self.act_gran, self.w_gran)
+            .with_bits(self.ia_bits, self.w_bits)
+            .with_muxq(self.muxq)
+    }
+
     /// Fake-quantize activations (paper's evaluation pipeline).
     pub fn fq_act(&self, x: &MatF32) -> MatF32 {
         match self.method {
@@ -76,32 +108,13 @@ impl QuantSpec {
             Method::LlmInt8 => fq_llmint8_act(x, self.ia_qmax(), self.act_gran, self.muxq.theta),
         }
     }
-
-    /// Quantized matmul on the *true INT* path where the method allows it
-    /// (the paper's deployment story), FP/mixed elsewhere.
-    pub fn matmul(&self, x: &MatF32, w: &MatF32) -> MatF32 {
-        match self.method {
-            Method::Fp16 => matmul_f32(x, w),
-            Method::Naive => quant_matmul(x, w, self.ia_qmax(), self.act_gran, self.w_gran),
-            Method::Muxq => {
-                muxq_matmul_int(x, w, self.ia_qmax(), self.act_gran, self.w_gran, &self.muxq)
-            }
-            Method::LlmInt8 => llmint8_matmul(
-                x,
-                w,
-                self.ia_qmax(),
-                self.act_gran,
-                self.w_gran,
-                self.muxq.theta,
-            ),
-        }
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::prng::SplitMix64;
+    use crate::quant::gemm::matmul_f32;
 
     fn outlier_mat(rows: usize, cols: usize, seed: u64) -> MatF32 {
         let mut rng = SplitMix64::new(seed);
@@ -121,7 +134,12 @@ mod tests {
     fn parse_methods() {
         assert_eq!(Method::parse("muxq").unwrap(), Method::Muxq);
         assert_eq!(Method::parse("llm.int8()").unwrap(), Method::LlmInt8);
+        assert_eq!(Method::parse("llmint8").unwrap(), Method::LlmInt8);
         assert!(Method::parse("nope").is_err());
+        // the tag spelling always round-trips through parse
+        for m in [Method::Fp16, Method::Naive, Method::Muxq, Method::LlmInt8] {
+            assert_eq!(Method::parse(m.tag_name()).unwrap(), m);
+        }
     }
 
     #[test]
@@ -142,7 +160,20 @@ mod tests {
     }
 
     #[test]
-    fn matmul_dispatch_all() {
+    fn engine_bridge_carries_the_eval_point() {
+        let s = QuantSpec::new(Method::Muxq, "per-vector", 6, 8).unwrap();
+        let e = s.engine();
+        assert_eq!(e.method, Method::Muxq);
+        assert_eq!((e.ia_bits, e.w_bits), (6, 8));
+        assert_eq!(e.act_gran, Granularity::PerRow);
+        assert_eq!(e.w_gran, Granularity::PerCol);
+        assert_eq!(e.tag(), "muxq-pv");
+    }
+
+    #[test]
+    fn matmul_dispatch_all_through_engine() {
+        // the one dispatch: every method's projection runs through the
+        // QuantLinear trait and lands near FP at 8 bits
         let x = outlier_mat(16, 32, 2);
         let mut rng = SplitMix64::new(3);
         let w = MatF32::from_vec(
@@ -153,7 +184,7 @@ mod tests {
         .unwrap();
         let exact = matmul_f32(&x, &w);
         for method in [Method::Fp16, Method::Naive, Method::Muxq, Method::LlmInt8] {
-            let y = QuantSpec::new(method, "per-vector", 8, 8).unwrap().matmul(&x, &w);
+            let y = QuantSpec::new(method, "per-vector", 8, 8).unwrap().engine().matmul(&x, &w);
             assert_eq!((y.rows, y.cols), (16, 8));
             assert!(y.mean_abs_diff(&exact) < 0.2, "{method:?}");
         }

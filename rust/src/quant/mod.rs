@@ -1,6 +1,7 @@
 //! Rust-native quantization engine — the twin of the python/jax reference
 //! (`python/compile/kernels/ref.py`), cross-validated against
-//! `artifacts/goldens/quant.bin`. Architecture context: DESIGN.md §3–§4.
+//! `artifacts/goldens/quant.bin`. Architecture context: DESIGN.md §3–§4;
+//! the operator API that fronts all of it is DESIGN.md §3a.
 //!
 //! Modules:
 //! * [`matrix`] — dense f32/i8/i32 matrices + IEEE rint
@@ -8,31 +9,48 @@
 //! * [`gemm`] — blocked f32 and i8→i32 GEMMs, quantize-compute-dequant
 //! * [`packed`] — packed-weight parallel INT8 engine (the i8 hot path:
 //!   i16 pair-accumulation microkernel, shape-aware MR×NR tiles)
+//! * [`linear`] — **the unified operator API**: [`QuantLinear`] trait +
+//!   [`EngineSpec`] builder, one pluggable projection object per method
+//!   from the packed kernels up to the generation server
 //! * [`muxq`] — the paper's outlier decomposition + uniform-INT two-GEMM
 //! * [`llmint8`] — the mixed-precision baseline
 //! * [`group`] — per-group scales (the overhead the paper declines to pay)
 //! * [`smooth`] — SmoothQuant migration (composable with MUXQ)
-//! * [`method`] — unified method dispatch used by examples/benches
+//! * [`method`] — method naming + the fake-quant evaluation spec
 //!
-//! # Which method routes through which kernel
+//! # Which trait impl routes through which kernel
 //!
-//! | method | INT pipeline | kernels on the hot path |
+//! Every deployed projection is a [`linear::QuantLinear`] object built by
+//! [`linear::EngineSpec::pack`] — weights quantized AND packed once at
+//! load time. `forward_into` is the batch path, `forward_row_into` the
+//! row-independent session path; both auto-route M ≤
+//! [`packed::TileConfig::gemv_max_m`] (the decode regime) to the GEMV
+//! kernels.
+//!
+//! | trait impl (spec tag) | batch `forward_into` | kernels on the hot path |
 //! |---|---|---|
-//! | naive abs-max | [`gemm::quant_matmul`] | [`gemm::matmul_i8`] → packed engine for large shapes (pack-on-the-fly), cache-blocked fallback for tiny ones |
-//! | MUXQ | [`muxq::muxq_matmul_int`] | Body: [`packed::matmul_i8_packed_into`]; Aux: [`packed::matmul_i8_rows_subset_into`] reading outlier rows out of the ONE packed W (per-col weight scales; other granularities gather + [`gemm::matmul_i8`]) |
-//! | LLM.int8() | [`llmint8::llmint8_matmul`] | normal channels [`gemm::matmul_i8`], outlier columns [`gemm::matmul_f32`] (the FP16 stand-in) + gather/scatter |
-//! | SmoothQuant | transform only | rescales X and W, then any of the above runs unchanged |
-//! | per-group | fake-quant only | no INT GEMM route — scale storage/rescale overhead is the point under test |
-//! | any, M ≤ [`packed::TileConfig::gemv_max_m`] (decode steps) | same entry points | [`packed::matmul_i8_gemv_into`] / the rows-subset GEMV twin — A row streamed in place, no tile cascade, pair accumulation kept; auto-routed inside both `_into` entries |
+//! | `Fp32Linear` (`fp16-*`) | plain GEMM + bias | [`gemm::matmul_f32`] (f32 stands in for FP16) |
+//! | `NaiveLinear` (`naive-*`) | per-row/tensor abs-max quantize → one INT GEMM | [`packed::matmul_i8_packed_into`] |
+//! | `MuxqLinear` (`muxq-*`) | fused decompose+quantize → Body GEMM + skinny Aux | Body: [`packed::matmul_i8_packed_into`]; Aux: [`packed::matmul_i8_rows_subset_into`] reading outlier rows out of the ONE packed W |
+//! | `LlmInt8Linear` (`llmint8-*`) | masked quantize → INT GEMM + resident-FP outlier leg | normal channels [`packed::matmul_i8_packed_into`]; outlier columns a gathered f32 accumulation over the operator's resident FP copy |
+//! | any, smoothed (`*-sq`) | X/s pre-divide, s⊙W folded in at pack time | same kernels as the unsmoothed impl — composition is a pre-transform, not a route |
 //!
-//! The deployment path ([`crate::gpt2::QuantizedGpt2::nll_per_seq`])
-//! uses the same packed kernels with weights packed once at load time;
-//! the incremental-decode path (`crate::gpt2::session`) runs its
-//! per-token projections through the skinny GEMV route.
+//! Outside the operator API: [`gemm::quant_matmul`] /
+//! [`muxq::muxq_matmul_int`] / [`llmint8::llmint8_matmul`] remain as the
+//! self-contained (quantize-W-per-call) reference pipelines the
+//! equivalence tests pin the operators against, and [`group`] stays
+//! fake-quant only (no INT route — the scale-storage overhead is the
+//! point under test).
+//!
+//! The deployment path ([`crate::gpt2::QuantizedGpt2`]) holds one boxed
+//! operator per projection site; the incremental-decode path
+//! (`crate::gpt2::session`) and the `GenerationServer` run the same
+//! objects through `forward_row_into`.
 
 pub mod absmax;
 pub mod gemm;
 pub mod group;
+pub mod linear;
 pub mod llmint8;
 pub mod matrix;
 pub mod method;
@@ -41,6 +59,7 @@ pub mod packed;
 pub mod smooth;
 
 pub use absmax::{fq_naive, qmax_from_bits, Granularity, Scales};
+pub use linear::{EngineSpec, QuantLinear};
 pub use matrix::{MatF32, MatI32, MatI8};
 pub use method::{Method, QuantSpec};
 pub use muxq::MuxqParams;

@@ -8,9 +8,10 @@
 //! inequality, not an epsilon.
 
 use muxq::gpt2::{
-    argmax, decode_step_batch, Gpt2Model, IntMethod, KvCache, QuantizedGpt2, SessionModel,
-    SessionState, WrapPolicy,
+    argmax, decode_step_batch, Gpt2Model, KvCache, QuantizedGpt2, SessionModel, SessionState,
+    WrapPolicy,
 };
+use muxq::quant::EngineSpec;
 use muxq::util::proptest::{prop, prop_assert, Gen, PropResult};
 use std::collections::VecDeque;
 
@@ -62,17 +63,18 @@ fn prop_fp_decode_bit_exact_vs_full_forward() {
 
 #[test]
 fn prop_int_decode_bit_exact_vs_session_oracle() {
-    // both IntMethods; sometimes with an injected outlier channel so the
-    // MUXQ per-row masks are genuinely non-empty
+    // every deployed operator — naive, MUXQ and the new LLM.int8() —
+    // sometimes with an injected outlier channel so the per-row masks
+    // are genuinely non-empty
     prop("int prefill+decode == rowwise full-forward oracle", |g| {
-        let method = if g.bool() { IntMethod::Muxq } else { IntMethod::Naive };
+        let spec = *g.choice(&[EngineSpec::naive(), EngineSpec::muxq(), EngineSpec::llmint8()]);
         let mut fp = model_for(g);
         if g.bool() {
             let ch = g.usize(0, fp.cfg.d_model - 1);
             fp.scale_ln1_channel(0, ch, g.f32(8.0, 20.0));
         }
         let ia_bits = *g.choice(&[5u32, 8]);
-        let q = QuantizedGpt2::new(fp, method, ia_bits, 8);
+        let q = QuantizedGpt2::new(fp, spec.with_bits(ia_bits, 8));
         let n_ctx = q.fp.cfg.n_ctx;
         let plen = g.usize(1, n_ctx - 1);
         let steps = g.usize(1, (n_ctx - plen).min(4));
@@ -84,7 +86,7 @@ fn prop_int_decode_bit_exact_vs_session_oracle() {
             let oracle = err_str(q.forward_logits_session(&[ctx.clone()]))?;
             prop_assert(
                 logits[..] == *oracle.row(ctx.len() - 1),
-                format!("{method:?} ia{ia_bits} len {} step {step}", ctx.len()),
+                format!("{} ia{ia_bits} len {} step {step}", q.spec.tag(), ctx.len()),
             )?;
             if step == steps {
                 break;
@@ -137,10 +139,11 @@ fn prop_continuous_batch_bit_exact_vs_solo() {
         let cfg = fp.cfg.clone();
         let q;
         let sm = if use_int {
-            q = QuantizedGpt2::new(fp, IntMethod::Muxq, 8, 8);
+            let spec = *g.choice(&[EngineSpec::muxq(), EngineSpec::llmint8()]);
+            q = QuantizedGpt2::new(fp, spec);
             SessionModel::Int(&q)
         } else {
-            q = QuantizedGpt2::new(fp, IntMethod::Naive, 8, 8); // fp lives inside
+            q = QuantizedGpt2::new(fp, EngineSpec::naive()); // fp lives inside
             SessionModel::Fp(&q.fp)
         };
         let n = g.usize(2, 4);

@@ -39,6 +39,41 @@ fn manifest_missing_fields_is_clean_error() {
     assert!(format!("{err:#}").contains("missing key"));
 }
 
+fn manifest_entry(tag: &str, method: &str, gran: &str, smooth: bool, exp: u32) -> String {
+    format!(
+        r#"[{{"model": "sim-small", "kind": "eval", "tag": "{tag}",
+             "method": "{method}", "granularity": "{gran}", "smooth": {smooth},
+             "exp_factor": {exp}, "file": "f.hlo.txt", "batch": 8, "seq": 128,
+             "weights": "weights/sim-small.bin"}}]"#
+    )
+}
+
+#[test]
+fn manifest_tag_field_drift_is_rejected() {
+    // the tag is canonical (EngineSpec round-trip); redundant fields
+    // that disagree with it must fail the load, not silently mislabel
+    // table columns
+    let d = tmpdir("tagdrift");
+    let ok = manifest_entry("muxq-pt-sq", "muxq", "per-tensor", true, 2);
+    std::fs::write(d.join("manifest.json"), ok).unwrap();
+    let m = Manifest::load(&d).unwrap();
+    assert_eq!(m.entries.len(), 1);
+    let meta = m.entries.values().next().unwrap();
+    assert_eq!(meta.spec().unwrap().tag(), "muxq-pt-sq");
+
+    for (name, bad) in [
+        ("method", manifest_entry("muxq-pt-sq", "naive", "per-tensor", true, 2)),
+        ("granularity", manifest_entry("muxq-pt-sq", "muxq", "per-vector", true, 2)),
+        ("smooth", manifest_entry("muxq-pt-sq", "muxq", "per-tensor", false, 2)),
+        ("exp", manifest_entry("muxq-pt-e3", "muxq", "per-tensor", false, 2)),
+        ("unparseable tag", manifest_entry("muxq-huh", "muxq", "per-tensor", false, 2)),
+    ] {
+        let d = tmpdir(&format!("tagdrift_{}", name.replace(' ', "_")));
+        std::fs::write(d.join("manifest.json"), bad).unwrap();
+        assert!(Manifest::load(&d).is_err(), "{name} drift must fail the load");
+    }
+}
+
 #[test]
 fn truncated_weights_rejected() {
     let d = tmpdir("truncweights");
