@@ -29,7 +29,10 @@ fn main() -> Result<()> {
     let max = absmax.iter().cloned().fold(0.0f32, f32::max);
     let n_out = absmax.iter().filter(|&&v| v > THETA).count();
     println!("Fig. 1 (left): per-channel |x|max at {model} {site}");
-    println!("channels: {}   outlier channels (theta={THETA}): {n_out}   max: {max:.1}\n", absmax.len());
+    println!(
+        "channels: {}   outlier channels (theta={THETA}): {n_out}   max: {max:.1}\n",
+        absmax.len()
+    );
     print_profile(&absmax, max);
 
     // ---- right panel: the same activations after MUXQ decomposition

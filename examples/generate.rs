@@ -89,7 +89,11 @@ fn main() -> Result<()> {
         .opt("prompt", "= Kamiro =\n\n", "prompt text")
         .opt("steps", "32", "tokens to generate")
         .opt("ia-bits", "8", "activation bits for the INT variants")
-        .opt("method", "all", "fp32 | an EngineSpec tag (naive-pv, muxq-pv, llmint8-pv, muxq-pv-sq, ...) | all")
+        .opt(
+            "method",
+            "all",
+            "fp32 | an EngineSpec tag (naive-pv, muxq-pv, llmint8-pv, muxq-pv-sq, ...) | all",
+        )
         .opt("temperature", "0", "softmax temperature (0 = greedy)")
         .opt("top-k", "0", "sample among the k best logits (0 = all)")
         .opt("seed", "0", "sampling seed (replayable streams)")

@@ -1,0 +1,39 @@
+//! Print the GEMM kernel the runtime dispatcher resolves on THIS host —
+//! the one-line provenance every CI log carries (`rust/scripts/
+//! ci_check.sh` runs this right after the build), so a green matrix leg
+//! states which of the dispatcher's branches it actually exercised.
+//!
+//!     cargo run --release --example kernel_dispatch
+//!     MUXQ_FORCE_KERNEL=scalar cargo run --release --example kernel_dispatch
+
+use muxq::npusim::NpuConfig;
+use muxq::quant::packed::TileConfig;
+use muxq::quant::simd;
+
+fn main() {
+    let caps = simd::host_caps();
+    let dispatch = simd::dispatch();
+    println!(
+        "host caps: avx2={} neon={} neon_dot={}",
+        caps.avx2, caps.neon, caps.neon_dot
+    );
+    println!(
+        "forced:    MUXQ_FORCE_KERNEL={}",
+        std::env::var("MUXQ_FORCE_KERNEL").unwrap_or_else(|_| "(unset)".to_string())
+    );
+    println!("dispatch:  {}", dispatch.name());
+    // the per-arch tile table this dispatch selects (deep-K column is
+    // where the SIMD and scalar tables disagree)
+    println!(
+        "tiles:     nr(768,768)={} nr(deep-K)={} mr(512)={} gemv_max_m={}",
+        TileConfig::nr_for(768, 768),
+        TileConfig::nr_for(1 << 20, 768),
+        TileConfig::mr_for(512),
+        TileConfig::gemv_max_m()
+    );
+    // the npusim datapath this kernel generation is priced at
+    println!(
+        "npusim:    int_macs_per_cycle={}",
+        NpuConfig::for_kernel(dispatch).int_macs_per_cycle()
+    );
+}

@@ -34,10 +34,22 @@ fn main() -> Result<()> {
     let p = MuxqParams::default();
     let rel = |e: f32, m: &MatF32| e / m.absmax();
     println!("matrix-level relative MAE at 6-bit per-tensor activations:\n");
-    println!("  naive                : {:.6}", rel(fq_naive(&x, qmax, Granularity::PerTensor).mean_abs_diff(&x), &x));
-    println!("  smoothquant          : {:.6}", rel(fq_naive(&xs, qmax, Granularity::PerTensor).mean_abs_diff(&xs), &xs));
-    println!("  muxq                 : {:.6}", rel(fq_muxq(&x, qmax, Granularity::PerTensor, &p).mean_abs_diff(&x), &x));
-    println!("  smoothquant + muxq   : {:.6}", rel(fq_muxq(&xs, qmax, Granularity::PerTensor, &p).mean_abs_diff(&xs), &xs));
+    println!(
+        "  naive                : {:.6}",
+        rel(fq_naive(&x, qmax, Granularity::PerTensor).mean_abs_diff(&x), &x)
+    );
+    println!(
+        "  smoothquant          : {:.6}",
+        rel(fq_naive(&xs, qmax, Granularity::PerTensor).mean_abs_diff(&xs), &xs)
+    );
+    println!(
+        "  muxq                 : {:.6}",
+        rel(fq_muxq(&x, qmax, Granularity::PerTensor, &p).mean_abs_diff(&x), &x)
+    );
+    println!(
+        "  smoothquant + muxq   : {:.6}",
+        rel(fq_muxq(&xs, qmax, Granularity::PerTensor, &p).mean_abs_diff(&xs), &xs)
+    );
 
     // ---- deployed operator level: the same composition through the
     // QuantLinear API — migration folded in at pack time, projections on
@@ -52,7 +64,11 @@ fn main() -> Result<()> {
         .pack_calibrated(&w, &bias, Some(&amax))
         .forward(&x);
     println!("\ndeployed-operator MAE vs exact FP (6-bit activations, packed INT engine):");
-    println!("  {:<21}: {:.6}", EngineSpec::muxq().with_bits(6, 8).tag(), plain.mean_abs_diff(&exact));
+    println!(
+        "  {:<21}: {:.6}",
+        EngineSpec::muxq().with_bits(6, 8).tag(),
+        plain.mean_abs_diff(&exact)
+    );
     println!(
         "  {:<21}: {:.6}",
         EngineSpec::muxq().with_bits(6, 8).with_smooth(0.5).tag(),

@@ -1,5 +1,6 @@
-//! GEMM benchmarks: the microkernel generations (i16 pair-accumulation
-//! vs PR-1 wide-i32 vs seed kernel) across the register-tile grid,
+//! GEMM benchmarks: the microkernel generations (per-arch SIMD vs i16
+//! pair-accumulation vs PR-1 wide-i32 vs seed kernel) across the
+//! register-tile grid, the runtime kernel dispatch resolution,
 //! thread scaling, the skinny-M decode GEMV vs the tile cascade, the
 //! quantize-compute-dequant pipelines of each method, end-to-end
 //! `nll_per_seq` throughput through the true-INT pipeline, and
@@ -23,6 +24,7 @@ use muxq::quant::packed::{
     matmul_i8_gemv_into, matmul_i8_packed_kernel_into, matmul_i8_packed_with, Kernel,
     PackedMatI8, ParallelGemm,
 };
+use muxq::quant::simd;
 use muxq::quant::{Granularity, MatF32};
 use muxq::util::bench::Bencher;
 
@@ -190,6 +192,54 @@ fn main() {
     }
     println!("\ngemv m=1: {gemv_m1_us:.1}us ({gemv_vs_cascade_m1:.2}x vs tile cascade)");
 
+    // ---- kernel dispatch: per-arch SIMD vs the scalar generations ----
+    // the runtime dispatcher's resolution for this host, then the SIMD
+    // kernels (AVX2 pmaddwd / NEON sdot-smlal) explicitly forced across
+    // the tile grid against the best scalar pair tile — the
+    // autovectorization-vs-intrinsics gap the ROADMAP item called out
+    let dispatch = simd::dispatch();
+    let caps = simd::host_caps();
+    Bencher::header(&format!(
+        "kernel dispatch ({gm}x{gk}x{gn}, 1 thread) — resolved: {} \
+         (caps: avx2={} neon={} neon_dot={})",
+        dispatch.name(),
+        caps.avx2,
+        caps.neon,
+        caps.neon_dot
+    ));
+    let mut simd_best: Option<(usize, usize, f64)> = None;
+    if simd::host_simd().is_some() {
+        for &(mr, nr) in &[(4usize, 4usize), (4, 8), (8, 4), (8, 8)] {
+            let bp = PackedMatI8::pack_with(&wq, nr);
+            let ms = b
+                .bench(&format!("simd/{mr}x{nr}"), || {
+                    matmul_i8_packed_kernel_into(&xq, &bp, &mut acc, seq, Kernel::Simd, mr);
+                    acc.data[0]
+                })
+                .mean
+                .as_secs_f64()
+                * 1e3;
+            if simd_best.is_none_or(|(_, _, best)| ms < best) {
+                simd_best = Some((mr, nr, ms));
+            }
+        }
+        // the decode shape through the SIMD GEMV kernels
+        let bp_g = PackedMatI8::pack(&wq);
+        let x1 = rand_i8(1, gk, 41);
+        b.bench("simd_gemv/m=1", || {
+            matmul_i8_gemv_into(&x1, &bp_g, &mut acc, Kernel::Simd);
+            acc.data[0]
+        });
+        let (bm, bn, bms) = simd_best.unwrap();
+        println!(
+            "\nbest simd tile {bm}x{bn}: {bms:.2}ms ({:.2}x vs best scalar pair at \
+             {pair_best_ms:.2}ms)",
+            pair_best_ms / bms
+        );
+    } else {
+        println!("no SIMD kernel on this host; simd_* JSON fields stay null");
+    }
+
     // ---- quantize-compute-dequant pipelines per method ----
     for (m, k, n, label) in [
         (256, 512, 512, "c_fc-like 256x512x512"),
@@ -298,11 +348,22 @@ fn main() {
     );
 
     // ---- perf-trajectory record ----
-    // packed_*_ms track the auto-routed engine (tile-selected pair
-    // kernel); wide44_1t_ms pins the PR-1 comparator so the
-    // pair-vs-wide trajectory stays measurable across PRs.
+    // packed_*_ms track the auto-routed engine (dispatch-selected
+    // kernel + tile); wide44_1t_ms pins the PR-1 comparator so the
+    // pair-vs-wide trajectory stays measurable across PRs, and the
+    // simd_* fields pin intrinsics-vs-autovectorized-pair (null on
+    // hosts without a SIMD kernel).
+    let (simd_best_ms_s, simd_best_tile_s, simd_vs_pair_s) = match simd_best {
+        Some((bm, bn, bms)) => (
+            format!("{bms:.4}"),
+            format!("\"{bm}x{bn}\""),
+            format!("{:.3}", pair_best_ms / bms),
+        ),
+        None => ("null".to_string(), "null".to_string(), "null".to_string()),
+    };
     let json = format!(
-        "{{\n  \"bench\": \"bench_gemm\",\n  \"bootstrap\": false,\n  \"shape\": [{gm}, {gk}, {gn}],\n  \"seed_i8_ms\": {seed_ms:.4},\n  \"packed_1t_ms\": {:.4},\n  \"packed_2t_ms\": {:.4},\n  \"packed_4t_ms\": {:.4},\n  \"speedup_vs_seed_1t\": {:.3},\n  \"scaling_1t_to_4t\": {:.3},\n  \"gops_packed_1t\": {:.3},\n  \"pair_best_ms\": {pair_best_ms:.4},\n  \"pair_best_tile\": \"{best_mr}x{best_nr}\",\n  \"wide44_1t_ms\": {wide44_ms:.4},\n  \"pair_vs_wide44\": {:.3},\n  \"gemv_m1_us\": {gemv_m1_us:.2},\n  \"gemv_vs_cascade_m1\": {gemv_vs_cascade_m1:.3},\n  \"e2e_naive_tok_per_s\": {:.1},\n  \"e2e_muxq_tok_per_s\": {:.1},\n  \"decode_tok_s_fp\": {:.1},\n  \"decode_tok_s\": {:.1},\n  \"decode_tok_s_llmint8\": {:.1},\n  \"full_forward_tok_s\": {full_tok_s:.1},\n  \"decode_vs_full_speedup\": {decode_vs_full:.2}\n}}\n",
+        "{{\n  \"bench\": \"bench_gemm\",\n  \"bootstrap\": false,\n  \"shape\": [{gm}, {gk}, {gn}],\n  \"dispatch_kernel\": \"{}\",\n  \"seed_i8_ms\": {seed_ms:.4},\n  \"packed_1t_ms\": {:.4},\n  \"packed_2t_ms\": {:.4},\n  \"packed_4t_ms\": {:.4},\n  \"speedup_vs_seed_1t\": {:.3},\n  \"scaling_1t_to_4t\": {:.3},\n  \"gops_packed_1t\": {:.3},\n  \"pair_best_ms\": {pair_best_ms:.4},\n  \"pair_best_tile\": \"{best_mr}x{best_nr}\",\n  \"wide44_1t_ms\": {wide44_ms:.4},\n  \"pair_vs_wide44\": {:.3},\n  \"simd_best_ms\": {simd_best_ms_s},\n  \"simd_best_tile\": {simd_best_tile_s},\n  \"simd_vs_pair\": {simd_vs_pair_s},\n  \"gemv_m1_us\": {gemv_m1_us:.2},\n  \"gemv_vs_cascade_m1\": {gemv_vs_cascade_m1:.3},\n  \"e2e_naive_tok_per_s\": {:.1},\n  \"e2e_muxq_tok_per_s\": {:.1},\n  \"decode_tok_s_fp\": {:.1},\n  \"decode_tok_s\": {:.1},\n  \"decode_tok_s_llmint8\": {:.1},\n  \"full_forward_tok_s\": {full_tok_s:.1},\n  \"decode_vs_full_speedup\": {decode_vs_full:.2}\n}}\n",
+        dispatch.name(),
         per_thread_ms[0].1,
         per_thread_ms[1].1,
         per_thread_ms[2].1,

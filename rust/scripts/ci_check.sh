@@ -1,5 +1,9 @@
 #!/usr/bin/env bash
-# Repo CI gate: release build, test suite, rustdoc hygiene, bench smoke.
+# Repo CI gate: format check, release build, kernel-dispatch echo, test
+# suite, clippy, rustdoc hygiene, bench smoke. Run by every leg of the
+# .github/workflows/ci.yml matrix ({x86_64, arm64} x MUXQ_FORCE_KERNEL
+# in {unset, scalar, avx2|neon}) so each dispatcher branch builds and
+# tests on real hardware.
 #
 # The rustdoc step runs with -D warnings so broken intra-doc links are
 # BUILD ERRORS — the repo cited a DESIGN.md for two PRs before the file
@@ -23,6 +27,16 @@ for doc in DESIGN.md EXPERIMENTS.md ROADMAP.md; do
     fi
 done
 
+# fail fast with a useful message when there is no toolchain at all —
+# previously the first `cargo` invocation died with a bare
+# "command not found" deep in the log
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ERROR: no rust toolchain on PATH (cargo not found)." >&2
+    echo "       Install one (https://rustup.rs) or run inside the toolchain" >&2
+    echo "       container; only the toolchain-free doc gates ran." >&2
+    exit 2
+fi
+
 # the crate manifest may live at the repo root or beside the rust/ tree
 MANIFEST_ARGS=()
 if [ ! -f Cargo.toml ]; then
@@ -34,6 +48,15 @@ if [ ! -f Cargo.toml ]; then
     fi
 fi
 
+echo "== cargo fmt --check"
+# formatting is the first cargo gate: cheapest to run, cheapest to fix
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt "${MANIFEST_ARGS[@]}" --check \
+        || { echo "FAIL: run 'cargo fmt' and re-commit" >&2; exit 1; }
+else
+    echo "WARN: rustfmt not installed on this host; skipping format gate" >&2
+fi
+
 echo "== cargo build --release"
 cargo build --release "${MANIFEST_ARGS[@]}"
 
@@ -41,6 +64,11 @@ echo "== cargo build --release --examples"
 # examples only build on demand otherwise — two PRs of API churn reached
 # main with broken examples before this gate existed
 cargo build --release --examples "${MANIFEST_ARGS[@]}"
+
+echo "== kernel dispatch"
+# echo the resolved GEMM kernel so every CI log states which of the
+# dispatcher's branches (scalar / pair / avx2 / neon) this run exercised
+cargo run --release "${MANIFEST_ARGS[@]}" --example kernel_dispatch
 
 echo "== cargo test -q"
 cargo test -q "${MANIFEST_ARGS[@]}"

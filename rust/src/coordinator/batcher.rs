@@ -266,7 +266,9 @@ mod tests {
     use crate::coordinator::request::ScoreRequest;
     use std::sync::mpsc;
 
-    fn pending(variant: &VariantKey) -> (Pending, mpsc::Receiver<anyhow::Result<super::super::request::ScoreResponse>>) {
+    fn pending(
+        variant: &VariantKey,
+    ) -> (Pending, mpsc::Receiver<anyhow::Result<super::super::request::ScoreResponse>>) {
         let (tx, rx) = mpsc::channel();
         (
             Pending {

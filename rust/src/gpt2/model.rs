@@ -588,14 +588,22 @@ impl Gpt2Model {
         let g = tokens.len();
         let d = self.cfg.d_model;
         if g == 0 || positions.len() != g || caches.len() != g {
-            bail!("decode step: {g} tokens, {} positions, {} cache sets", positions.len(), caches.len());
+            bail!(
+                "decode step: {g} tokens, {} positions, {} cache sets",
+                positions.len(),
+                caches.len()
+            );
         }
         for (gi, cs) in caches.iter().enumerate() {
             if cs.len() != self.cfg.n_layer {
                 bail!("session {gi}: {} kv caches for {} layers", cs.len(), self.cfg.n_layer);
             }
             if positions[gi] >= self.cfg.n_ctx {
-                bail!("session {gi}: position {} out of range (ctx {})", positions[gi], self.cfg.n_ctx);
+                bail!(
+                    "session {gi}: position {} out of range (ctx {})",
+                    positions[gi],
+                    self.cfg.n_ctx
+                );
             }
             if tokens[gi] as usize >= self.cfg.vocab_size {
                 bail!("session {gi}: token {} out of vocab", tokens[gi]);

@@ -58,6 +58,13 @@ pub struct NpuConfig {
     /// `quant::packed`'s pair microkernel (and of `pmaddwd`-class
     /// SIMD / NPU MAC trees).
     pub acc_width_bits: u32,
+    /// Hardware dot-product unit width: `Some(d)` models a d-way i8 dot
+    /// summed directly into an i32 lane per cycle (`sdot`/VNNI-class
+    /// MAC trees: d = 4; `pmaddwd`-class pair units: d = 2), overriding
+    /// the accumulator-width derivation above. `None` (the default)
+    /// keeps the legacy `acc_width_bits` model. [`NpuConfig::for_kernel`]
+    /// maps each runtime-dispatched host kernel onto this knob.
+    pub dot_width: Option<u32>,
     /// pJ per INT8 MAC (energy model; FP16 = 4x, SRAM/DRAM per-byte below)
     pub pj_per_int8_mac: f64,
     pub pj_per_fp16_mac: f64,
@@ -76,6 +83,7 @@ impl Default for NpuConfig {
             pack_bytes_per_cycle: 32.0,
             domain_switch_cycles: 2048,
             acc_width_bits: 16,
+            dot_width: None,
             pj_per_int8_mac: 0.2,
             pj_per_fp16_mac: 0.8,
             pj_per_dram_byte: 20.0,
@@ -84,23 +92,55 @@ impl Default for NpuConfig {
 }
 
 impl NpuConfig {
-    /// INT MACs retired per PE per cycle as a function of accumulator
-    /// lane width: i16 pair accumulation doubles per-lane throughput.
-    /// Energy per MAC is unchanged — the same multiplies happen, only
-    /// the widening cadence differs.
+    /// INT MACs retired per PE per cycle: the explicit dot-unit width
+    /// when one is modeled, else derived from the accumulator lane
+    /// width (i16 pair accumulation doubles per-lane throughput).
+    /// Energy per MAC is unchanged in every case — the same multiplies
+    /// happen, only the widening cadence differs.
     pub fn int_macs_per_cycle(&self) -> f64 {
-        if self.acc_width_bits == 16 {
-            2.0
-        } else {
-            1.0
+        match self.dot_width {
+            Some(d) => d as f64,
+            None => {
+                if self.acc_width_bits == 16 {
+                    2.0
+                } else {
+                    1.0
+                }
+            }
         }
     }
 
     /// Builder-style accumulator-width override (32 models the PR-1
-    /// wide-i32 datapath, 16 the pair-accumulation default).
+    /// wide-i32 datapath, 16 the pair-accumulation default). Clears any
+    /// dot-unit override so the chosen width actually governs.
     pub fn with_acc_width(mut self, bits: u32) -> Self {
         self.acc_width_bits = bits;
+        self.dot_width = None;
         self
+    }
+
+    /// Builder-style dot-unit width (4 = `sdot`/VNNI-class quad MACs,
+    /// 2 = `pmaddwd`-class pair MACs).
+    pub fn with_dot_width(mut self, d: u32) -> Self {
+        self.dot_width = Some(d);
+        self
+    }
+
+    /// The config whose INT datapath mirrors a runtime-dispatched host
+    /// kernel (`quant::simd::dispatch`): per-arch widened-MAC lanes, so
+    /// simulated latencies track the kernel generation actually
+    /// deployed. DMA, energy and array geometry stay at the defaults —
+    /// only the MAC cadence differs across kernels. (NEON is modeled at
+    /// `sdot` width; ARMv8.0 hosts that fall back to `smlal` pairs run
+    /// at the `pair` cadence instead.)
+    pub fn for_kernel(k: crate::quant::simd::DispatchKernel) -> NpuConfig {
+        use crate::quant::simd::DispatchKernel as K;
+        match k {
+            K::Scalar => NpuConfig::default().with_acc_width(32),
+            K::Pair => NpuConfig::default(), // i16 pair lanes: 2 MACs/cycle
+            K::Avx2 => NpuConfig::default().with_dot_width(2), // pmaddwd pairs
+            K::Neon => NpuConfig::default().with_dot_width(4), // sdot quads
+        }
     }
 }
 
@@ -345,6 +385,39 @@ mod tests {
         assert!(cp.cycles() < cw.cycles());
         // energy is unchanged: same MACs, different widening cadence
         assert_eq!(cp.energy_pj, cw.energy_pj);
+    }
+
+    #[test]
+    fn dot_width_models_sdot_class_quad_macs() {
+        // a 4-way dot unit halves INT compute again vs the pair lanes,
+        // at identical energy (same multiplies, different cadence)
+        let pair = NpuConfig::default();
+        let quad = NpuConfig::default().with_dot_width(4);
+        assert_eq!(quad.int_macs_per_cycle(), 4.0);
+        let cp = gemm_cost(&pair, 4096, 4096, 4096, Precision::Int8);
+        let cq = gemm_cost(&quad, 4096, 4096, 4096, Precision::Int8);
+        assert!((cp.compute_cycles / cq.compute_cycles - 2.0).abs() < 1e-9);
+        assert_eq!(cp.energy_pj, cq.energy_pj);
+        // with_acc_width clears the dot override so the width governs
+        assert_eq!(quad.with_acc_width(32).int_macs_per_cycle(), 1.0);
+    }
+
+    #[test]
+    fn for_kernel_maps_dispatch_onto_mac_cadence() {
+        use crate::quant::simd::DispatchKernel as K;
+        assert_eq!(NpuConfig::for_kernel(K::Scalar).int_macs_per_cycle(), 1.0);
+        assert_eq!(NpuConfig::for_kernel(K::Pair).int_macs_per_cycle(), 2.0);
+        assert_eq!(NpuConfig::for_kernel(K::Avx2).int_macs_per_cycle(), 2.0);
+        assert_eq!(NpuConfig::for_kernel(K::Neon).int_macs_per_cycle(), 4.0);
+        // compute-bound ordering follows the cadence; the memory-bound
+        // decode regime is kernel-agnostic (bytes don't change)
+        let c = |k| gemm_cost(&NpuConfig::for_kernel(k), 4096, 4096, 4096, Precision::Int8)
+            .compute_cycles;
+        assert!(c(K::Neon) < c(K::Avx2));
+        assert_eq!(c(K::Avx2), c(K::Pair));
+        assert!(c(K::Avx2) < c(K::Scalar));
+        let d = |k| decode_cost(&NpuConfig::for_kernel(k), Method::Muxq, 12, D, 8, 8).cycles();
+        assert_eq!(d(K::Neon), d(K::Scalar), "M=1 decode is bytes-bound on every kernel");
     }
 
     #[test]

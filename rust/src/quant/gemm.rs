@@ -120,6 +120,45 @@ pub fn matmul_i8_blocked(a: &MatI8, b: &MatI8) -> MatI32 {
     c
 }
 
+/// Gathered-rows f32 accumulation: `y[i][j] += Σ_t x[i][idx[t]] · w[idx[t]][j]`
+/// — the FP outlier leg of deployed LLM.int8() (`quant::linear::LlmInt8Linear`),
+/// where `idx` names the outlier channels and `w` is the operator's
+/// resident FP copy. Blocked over the index list (four gathered weight
+/// rows per step, so the j-loop carries four independent FMAs and
+/// vectorizes) instead of the one-row-at-a-time scalar loop it replaces;
+/// `y` is `m·n` and accumulated in place on top of the INT leg.
+///
+/// Each output row's accumulation order depends only on `idx`, never on
+/// the batch size — the row path and a coalesced batch stay equal, the
+/// seam the decode oracles stand on.
+pub fn matmul_f32_rows_gathered_acc(x: &MatF32, idx: &[usize], w: &MatF32, y: &mut [f32]) {
+    let n = w.cols;
+    debug_assert_eq!(y.len(), x.rows * n);
+    debug_assert!(idx.iter().all(|&c| c < w.rows && c < x.cols));
+    for i in 0..x.rows {
+        let xr = x.row(i);
+        let yrow = &mut y[i * n..(i + 1) * n];
+        let mut t = 0;
+        while t + 4 <= idx.len() {
+            let (c0, c1, c2, c3) = (idx[t], idx[t + 1], idx[t + 2], idx[t + 3]);
+            let (x0, x1, x2, x3) = (xr[c0], xr[c1], xr[c2], xr[c3]);
+            let (w0, w1, w2, w3) = (w.row(c0), w.row(c1), w.row(c2), w.row(c3));
+            for j in 0..n {
+                yrow[j] += x0 * w0[j] + x1 * w1[j] + x2 * w2[j] + x3 * w3[j];
+            }
+            t += 4;
+        }
+        while t < idx.len() {
+            let c = idx[t];
+            let xv = xr[c];
+            for (yv, wv) in yrow.iter_mut().zip(w.row(c)) {
+                *yv += xv * wv;
+            }
+            t += 1;
+        }
+    }
+}
+
 /// Dequantize an integer GEMM result: C_f32[i,j] = acc[i,j] * sx(i) * sw(j).
 pub fn dequant(acc: &MatI32, sx: &Scales, sw: &Scales) -> MatF32 {
     let mut out = MatF32::zeros(acc.rows, acc.cols);
@@ -205,7 +244,8 @@ mod tests {
         let c = matmul_i8(&a8, &b8);
         for i in 0..5 {
             for j in 0..4 {
-                let want: i32 = (0..9).map(|k| a8.row(i)[k] as i32 * b8.data[k * 4 + j] as i32).sum();
+                let want: i32 =
+                    (0..9).map(|k| a8.row(i)[k] as i32 * b8.data[k * 4 + j] as i32).sum();
                 assert_eq!(c.data[i * 4 + j], want);
             }
         }
@@ -226,6 +266,63 @@ mod tests {
         let routed = matmul_i8(&a8, &b8);
         let blocked = matmul_i8_blocked(&a8, &b8);
         assert_eq!(routed.data, blocked.data);
+    }
+
+    #[test]
+    fn gathered_rows_acc_exact_on_integer_valued_data() {
+        // small-integer f32 values make every partial sum exact, so the
+        // blocked (4-rows-per-step) accumulation must equal the naive
+        // gather bit for bit regardless of summation order — across
+        // index lists hitting every tail length (0..4)
+        let mut rng = SplitMix64::new(11);
+        let x = MatF32::from_vec(
+            3,
+            12,
+            (0..36).map(|_| (rng.next_below(17) as f32) - 8.0).collect(),
+        )
+        .unwrap();
+        let w = MatF32::from_vec(
+            12,
+            7,
+            (0..84).map(|_| (rng.next_below(17) as f32) - 8.0).collect(),
+        )
+        .unwrap();
+        for idx in [
+            &[][..],
+            &[5][..],
+            &[0, 11][..],
+            &[2, 4, 6][..],
+            &[1, 3, 5, 7][..],
+            &[0, 2, 4, 6, 8, 10, 11][..],
+        ] {
+            let mut y = vec![1.0f32; 3 * 7]; // nonzero: the leg ACCUMULATES
+            matmul_f32_rows_gathered_acc(&x, idx, &w, &mut y);
+            for i in 0..3 {
+                for j in 0..7 {
+                    let want: f32 =
+                        1.0 + idx.iter().map(|&c| x.at(i, c) * w.at(c, j)).sum::<f32>();
+                    assert_eq!(y[i * 7 + j], want, "i {i} j {j} idx {idx:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gathered_rows_acc_row_order_is_batch_invariant() {
+        // per-row results must not depend on how many rows share the
+        // call — the llm.int8() batch path and the decode row path run
+        // the same kernel and must agree bit for bit
+        let x = mat(5, 16, 21);
+        let w = mat(16, 9, 22);
+        let idx = [3usize, 7, 9, 12, 15];
+        let mut batch = vec![0.0f32; 5 * 9];
+        matmul_f32_rows_gathered_acc(&x, &idx, &w, &mut batch);
+        for r in 0..5 {
+            let row = MatF32::from_vec(1, 16, x.row(r).to_vec()).unwrap();
+            let mut solo = vec![0.0f32; 9];
+            matmul_f32_rows_gathered_acc(&row, &idx, &w, &mut solo);
+            assert_eq!(&batch[r * 9..(r + 1) * 9], solo.as_slice(), "row {r}");
+        }
     }
 
     #[test]

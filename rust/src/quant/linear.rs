@@ -317,6 +317,15 @@ pub trait QuantLinear: Send + Sync {
         Plan::build(cfg, s.method, m, k, n, r, s.ia_bits, s.muxq.exp_factor)
     }
 
+    /// [`QuantLinear::plan`] priced on the NPU config that mirrors the
+    /// kernel the runtime dispatcher resolved on THIS host
+    /// ([`NpuConfig::for_kernel`]): scalar 1, `pmaddwd`-pair 2 or `sdot`
+    /// 4 MACs per lane per cycle — so simulated latencies track the
+    /// datapath the deployed operators actually run.
+    fn host_plan(&self, m: usize, r: usize) -> Plan {
+        self.plan(&NpuConfig::for_kernel(super::simd::dispatch()), m, r)
+    }
+
     /// Allocating convenience wrapper over [`QuantLinear::forward_into`].
     fn forward(&self, x: &MatF32) -> MatF32 {
         let mut y = MatF32::zeros(0, 0);
@@ -912,21 +921,11 @@ impl LlmInt8Linear {
                 &mut y[r * n..(r + 1) * n],
             );
         }
-        // FP outlier leg: dense-but-skinny gathered GEMM, accumulated
-        // on top (the irregular mixed-precision part MUXQ eliminates)
-        for r in 0..xs.rows {
-            let xr = xs.row(r);
-            let yrow = &mut y[r * n..(r + 1) * n];
-            for &c in &sc.idx {
-                let xv = xr[c];
-                if xv == 0.0 {
-                    continue;
-                }
-                for (yv, wv) in yrow.iter_mut().zip(self.w_fp.row(c)) {
-                    *yv += xv * wv;
-                }
-            }
-        }
+        // FP outlier leg: blocked gathered-rows accumulation on top of
+        // the INT leg (the irregular mixed-precision part MUXQ
+        // eliminates) — a real kernel, so decode_tok_s_llmint8 measures
+        // deployed code rather than a scalar stopgap
+        super::gemm::matmul_f32_rows_gathered_acc(xs, &sc.idx, &self.w_fp, &mut y[..xs.rows * n]);
     }
 }
 
@@ -1178,6 +1177,24 @@ mod tests {
         // decode plans are memory-bound — the regime the serving layer
         // lives in (npusim::decode_cost is the aggregate twin)
         assert!(pm.is_memory_bound(&cfg));
+    }
+
+    #[test]
+    fn host_plan_prices_the_dispatched_datapath() {
+        // host_plan must price on NpuConfig::for_kernel(dispatch()):
+        // never slower than the scalar-lane config (dispatch retires
+        // >= 1 MAC/lane/cycle), identical DMA bytes, and equal to an
+        // explicit plan() against the same config
+        let w = mat(256, 1024, 30, &[], 1.0);
+        let op = EngineSpec::muxq().pack(&w, &vec![0.0f32; 1024]);
+        let host_cfg = NpuConfig::for_kernel(crate::quant::simd::dispatch());
+        let scalar_cfg = NpuConfig::for_kernel(crate::quant::simd::DispatchKernel::Scalar);
+        let hp = op.host_plan(64, 8);
+        let explicit = op.plan(&host_cfg, 64, 8);
+        assert_eq!(hp.cost(&host_cfg).cycles(), explicit.cost(&host_cfg).cycles());
+        assert!(
+            hp.cost(&host_cfg).cycles() <= op.plan(&scalar_cfg, 64, 8).cost(&scalar_cfg).cycles()
+        );
     }
 
     #[test]

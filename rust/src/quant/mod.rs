@@ -9,6 +9,9 @@
 //! * [`gemm`] — blocked f32 and i8→i32 GEMMs, quantize-compute-dequant
 //! * [`packed`] — packed-weight parallel INT8 engine (the i8 hot path:
 //!   i16 pair-accumulation microkernel, shape-aware MR×NR tiles)
+//! * [`simd`] — per-arch SIMD microkernels (AVX2 `pmaddwd` / NEON
+//!   `sdot`-`smlal`) + the one-time runtime dispatcher
+//!   (`MUXQ_FORCE_KERNEL` override) the packed engine routes through
 //! * [`linear`] — **the unified operator API**: [`QuantLinear`] trait +
 //!   [`EngineSpec`] builder, one pluggable projection object per method
 //!   from the packed kernels up to the generation server
@@ -32,8 +35,19 @@
 //! | `Fp32Linear` (`fp16-*`) | plain GEMM + bias | [`gemm::matmul_f32`] (f32 stands in for FP16) |
 //! | `NaiveLinear` (`naive-*`) | per-row/tensor abs-max quantize → one INT GEMM | [`packed::matmul_i8_packed_into`] |
 //! | `MuxqLinear` (`muxq-*`) | fused decompose+quantize → Body GEMM + skinny Aux | Body: [`packed::matmul_i8_packed_into`]; Aux: [`packed::matmul_i8_rows_subset_into`] reading outlier rows out of the ONE packed W |
-//! | `LlmInt8Linear` (`llmint8-*`) | masked quantize → INT GEMM + resident-FP outlier leg | normal channels [`packed::matmul_i8_packed_into`]; outlier columns a gathered f32 accumulation over the operator's resident FP copy |
+//! | `LlmInt8Linear` (`llmint8-*`) | masked quantize → INT GEMM + resident-FP outlier leg | normal channels [`packed::matmul_i8_packed_into`]; outlier columns [`gemm::matmul_f32_rows_gathered_acc`] (blocked gathered-rows accumulation) over the operator's resident FP copy |
 //! | any, smoothed (`*-sq`) | X/s pre-divide, s⊙W folded in at pack time | same kernels as the unsmoothed impl — composition is a pre-transform, not a route |
+//!
+//! Inside the packed engine every INT contraction above (dense tile,
+//! rows-subset Aux, skinny-M GEMV) resolves its microkernel through the
+//! one-time [`simd::dispatch`]:
+//!
+//! | dispatch (`MUXQ_FORCE_KERNEL`) | microkernel | MACs/lane/step |
+//! |---|---|---|
+//! | `avx2` (x86-64 default) | `simd/avx2.rs`: `pmaddwd` i16 pairs, i32 pair sums | 2 |
+//! | `neon` (aarch64 default) | `simd/neon.rs`: `sdot` quads (`dotprod` hosts) or `smlal` pairs | 4 / 2 |
+//! | `pair` (portable default) | scalar i16 pair kernel (−128-in-B → wide fallback) | 2 |
+//! | `scalar` | scalar wide-i32 (the PR-1 scheme, exact ∀ inputs) | 1 |
 //!
 //! Outside the operator API: [`gemm::quant_matmul`] /
 //! [`muxq::muxq_matmul_int`] / [`llmint8::llmint8_matmul`] remain as the
@@ -56,6 +70,7 @@ pub mod matrix;
 pub mod method;
 pub mod muxq;
 pub mod packed;
+pub mod simd;
 pub mod smooth;
 
 pub use absmax::{fq_naive, qmax_from_bits, Granularity, Scales};

@@ -316,8 +316,13 @@ mod tests {
         let exact = super::super::gemm::matmul_f32(&x, &w);
         let p = MuxqParams::default();
         let y = muxq_matmul_int(&x, &w, 127.0, Granularity::PerRow, Granularity::PerCol, &p);
-        let y_naive =
-            super::super::gemm::quant_matmul(&x, &w, 127.0, Granularity::PerRow, Granularity::PerCol);
+        let y_naive = super::super::gemm::quant_matmul(
+            &x,
+            &w,
+            127.0,
+            Granularity::PerRow,
+            Granularity::PerCol,
+        );
         // per-row scales absorb outliers partially; muxq should still not
         // be worse, and both should be near FP at 8 bits
         assert!(y.mean_abs_diff(&exact) <= y_naive.mean_abs_diff(&exact) * 1.05);

@@ -55,6 +55,16 @@
 //! * [`ParallelGemm`] — row-panel parallelism over scoped threads with a
 //!   sequential fallback for small shapes (thread spawn costs more than
 //!   the GEMM below ~2M MACs).
+//! * **Per-arch SIMD routing** ([`super::simd`]): on hosts with AVX2
+//!   (x86-64) or NEON (aarch64) the dense, rows-subset and GEMV
+//!   contractions run explicit intrinsic kernels (`pmaddwd` pairs /
+//!   `sdot` quads) instead of the scalar pair kernel — resolved once at
+//!   startup, overridable with `MUXQ_FORCE_KERNEL={scalar,pair,avx2,
+//!   neon}`. The SIMD kernels form their pair/quad sums in i32, so they
+//!   are exact for every i8 input — the −128 fallback below applies
+//!   only to the scalar pair route. [`TileConfig`] carries per-arch
+//!   tile tables (SIMD keeps 8-wide panels at any K depth; the scalar
+//!   table narrows under the L1 bound).
 //!
 //! i32 accumulation is exact for K up to 2^31 / 128^2 ≈ 131k — far above
 //! any model dimension here; `debug_assert`s guard the operand shapes.
@@ -64,6 +74,7 @@
 //! test hygiene by rust/scripts/ci_check.sh).
 
 use super::matrix::{MatI32, MatI8};
+use super::simd::{self, DispatchKernel};
 use std::cell::Cell;
 use std::sync::OnceLock;
 
@@ -131,17 +142,27 @@ impl TileConfig {
         })
     }
 
-    /// Panel width for packing a `[k, n]` weight matrix. Wide (8) panels
-    /// amortize the A-side loads over more output columns. The loop is
-    /// row-tile-outer with a full panel sweep inside, so one microkernel
-    /// call streams exactly one B panel (`k_pad · nr` bytes) against one
-    /// interleaved A tile (`k_pad · mr` bytes): bounding the panel by
-    /// half the L1 budget leaves the other half for the A tile (mr ≤ 8 =
-    /// nr's cap), keeping the whole K traversal in cache. Narrow outputs
-    /// (n < 8) would waste the extra width on padding.
+    /// Panel width for packing a `[k, n]` weight matrix — the per-arch
+    /// tile table (`MUXQ_TILE` still wins over every table).
+    ///
+    /// * **scalar / pair** rows: wide (8) panels amortize the A-side
+    ///   loads over more output columns, but one microkernel call
+    ///   streams one B panel (`k_pad · nr` bytes) against one
+    ///   interleaved A tile (`k_pad · mr` bytes), so the panel is
+    ///   bounded by half the L1 budget (the other half feeds the A
+    ///   tile) and deep-K shapes narrow back to 4.
+    /// * **avx2 / neon** rows: 8 output columns are exactly one ymm of
+    ///   i32 lanes (AVX2) / two NEON q-accumulators — a 4-wide panel
+    ///   would idle half the multiplier lanes. The SIMD kernels read A
+    ///   as register broadcasts (no interleaved A tile competing for
+    ///   L1), so the panel stays 8-wide at ANY K depth; only genuinely
+    ///   narrow outputs (n < 8) drop to 4.
     pub fn nr_for(k: usize, n: usize) -> usize {
         if let Some(t) = Self::env_override() {
             return t.nr;
+        }
+        if simd::dispatch().is_simd() {
+            return if n >= 8 { 8 } else { NR };
         }
         let k_pad = k + (k & 1);
         if n >= 8 && k_pad * 8 <= Self::l1_bytes() / 2 {
@@ -184,29 +205,66 @@ impl TileConfig {
 /// Microkernel accumulation scheme.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Kernel {
-    /// Pick [`Kernel::PairI16`] unless the packed B contains -128 (the
-    /// one value that can overflow the i16 pair sum — see module docs).
+    /// Honor the process-wide [`simd::dispatch`]: the host's SIMD kernel
+    /// where one exists (or is forced), else the scalar pair kernel —
+    /// which falls back to [`Kernel::WideI32`] when the packed B
+    /// contains -128 (the one value that can overflow the i16 pair sum —
+    /// see module docs; the SIMD kernels sum pairs/quads in i32 and need
+    /// no such fallback).
     Auto,
-    /// i16 pair accumulation: two i8 MACs per lane per i32 widening.
-    /// Callers forcing this must guarantee the packed B holds no -128.
+    /// Scalar i16 pair accumulation: two i8 MACs per lane per i32
+    /// widening. Callers forcing this must guarantee the packed B holds
+    /// no -128.
     PairI16,
     /// One i8 MAC per lane, widened straight into i32 (the PR-1 scheme;
     /// the exact-for-all-inputs fallback and the bench comparator).
     WideI32,
+    /// The host's SIMD kernel (AVX2 `pmaddwd` / NEON `sdot`-`smlal`),
+    /// regardless of `MUXQ_FORCE_KERNEL` — the bench/test hook that
+    /// keeps the SIMD path selectable while the env steers `Auto`.
+    /// Panics (cleanly) on hosts with no SIMD kernel; gate on
+    /// [`simd::host_simd`].
+    Simd,
+}
+
+/// Resolved microkernel family for one GEMM call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Route {
+    Simd,
+    Pair,
+    Wide,
 }
 
 impl Kernel {
-    fn use_pair(self, bp: &PackedMatI8) -> bool {
+    fn route(self, bp: &PackedMatI8) -> Route {
         match self {
-            Kernel::Auto => !bp.has_neg128,
+            Kernel::Auto => match simd::dispatch() {
+                DispatchKernel::Avx2 | DispatchKernel::Neon => Route::Simd,
+                DispatchKernel::Scalar => Route::Wide,
+                DispatchKernel::Pair => {
+                    if bp.has_neg128 {
+                        Route::Wide
+                    } else {
+                        Route::Pair
+                    }
+                }
+            },
             Kernel::PairI16 => {
                 debug_assert!(
                     !bp.has_neg128,
                     "pair-i16 exactness requires weight values in [-127, 127]"
                 );
-                true
+                Route::Pair
             }
-            Kernel::WideI32 => false,
+            Kernel::WideI32 => Route::Wide,
+            Kernel::Simd => {
+                assert!(
+                    simd::host_simd().is_some(),
+                    "Kernel::Simd requested but this host has no SIMD kernel \
+                     (need x86-64 AVX2 or aarch64 NEON)"
+                );
+                Route::Simd
+            }
         }
     }
 }
@@ -383,12 +441,12 @@ pub fn matmul_i8_packed_kernel_into(
     assert_eq!(a.cols, bp.rows, "inner dims {}x{}", a.cols, bp.rows);
     assert!(mr == 4 || mr == 8, "unsupported register tile rows {mr}");
     let (m, n) = (a.rows, bp.cols);
-    let pair = kernel.use_pair(bp);
+    let route = kernel.route(bp);
     c.rows = m;
     c.cols = n;
     c.data.resize(m * n, 0);
     run_row_parallel(m, n, a.cols, cfg, &mut c.data, &|row0, row1, chunk| {
-        gemm_rows(a, bp, None, pair, mr, row0, row1, chunk);
+        gemm_rows(a, bp, None, route, mr, row0, row1, chunk);
     });
 }
 
@@ -408,19 +466,19 @@ pub fn matmul_i8_rows_subset_into(
     assert_eq!(a.cols, idx.len(), "compact A width vs index list");
     debug_assert!(idx.iter().all(|&k| k < bp.rows));
     let (m, n) = (a.rows, bp.cols);
-    let pair = Kernel::Auto.use_pair(bp);
+    let route = Kernel::Auto.route(bp);
     c.rows = m;
     c.cols = n;
     c.data.resize(m * n, 0);
     if TileConfig::use_gemv(m) {
         // skinny Aux route (single decode rows): walk the index list
         // straight off the A row, no interleave, no threads
-        gemv_dispatch(a, bp, Some(idx), pair, &mut c.data);
+        gemv_dispatch(a, bp, Some(idx), route, &mut c.data);
         return;
     }
     let mr = TileConfig::mr_for(m);
     run_row_parallel(m, n, idx.len(), cfg, &mut c.data, &|row0, row1, chunk| {
-        gemm_rows(a, bp, Some(idx), pair, mr, row0, row1, chunk);
+        gemm_rows(a, bp, Some(idx), route, mr, row0, row1, chunk);
     });
 }
 
@@ -435,11 +493,11 @@ pub fn matmul_i8_rows_subset_into(
 pub fn matmul_i8_gemv_into(a: &MatI8, bp: &PackedMatI8, c: &mut MatI32, kernel: Kernel) {
     assert_eq!(a.cols, bp.rows, "inner dims {}x{}", a.cols, bp.rows);
     let (m, n) = (a.rows, bp.cols);
-    let pair = kernel.use_pair(bp);
+    let route = kernel.route(bp);
     c.rows = m;
     c.cols = n;
     c.data.resize(m * n, 0);
-    gemv_dispatch(a, bp, None, pair, &mut c.data);
+    gemv_dispatch(a, bp, None, route, &mut c.data);
 }
 
 /// Split output rows into near-equal chunks and run `body(row0, row1,
@@ -482,7 +540,7 @@ fn gemm_rows(
     a: &MatI8,
     bp: &PackedMatI8,
     idx: Option<&[usize]>,
-    pair: bool,
+    route: Route,
     mr: usize,
     row0: usize,
     row1: usize,
@@ -493,20 +551,20 @@ fn gemm_rows(
     let mut i = row0;
     if mr == 8 {
         i = if bp.nr == 8 {
-            tiles::<8, 8>(a, bp, idx, pair, i, row1, row0, c_rows, &mut abuf)
+            tiles::<8, 8>(a, bp, idx, route, i, row1, row0, c_rows, &mut abuf)
         } else {
-            tiles::<8, 4>(a, bp, idx, pair, i, row1, row0, c_rows, &mut abuf)
+            tiles::<8, 4>(a, bp, idx, route, i, row1, row0, c_rows, &mut abuf)
         };
     }
     i = if bp.nr == 8 {
-        tiles::<4, 8>(a, bp, idx, pair, i, row1, row0, c_rows, &mut abuf)
+        tiles::<4, 8>(a, bp, idx, route, i, row1, row0, c_rows, &mut abuf)
     } else {
-        tiles::<4, 4>(a, bp, idx, pair, i, row1, row0, c_rows, &mut abuf)
+        tiles::<4, 4>(a, bp, idx, route, i, row1, row0, c_rows, &mut abuf)
     };
     if bp.nr == 8 {
-        tiles::<1, 8>(a, bp, idx, pair, i, row1, row0, c_rows, &mut abuf);
+        tiles::<1, 8>(a, bp, idx, route, i, row1, row0, c_rows, &mut abuf);
     } else {
-        tiles::<1, 4>(a, bp, idx, pair, i, row1, row0, c_rows, &mut abuf);
+        tiles::<1, 4>(a, bp, idx, route, i, row1, row0, c_rows, &mut abuf);
     }
 }
 
@@ -517,13 +575,16 @@ fn gemm_rows(
 /// pad it to `k_pad` (the zero pad row absorbs odd K), subset
 /// contractions are exactly `idx.len()` wide (odd lists take a scalar
 /// tail step inside the microkernel instead). The wide path reads A rows
-/// directly (the PR-1 scheme).
+/// directly (the PR-1 scheme), and so does the SIMD path — its A pairs /
+/// quads are adjacent in the row itself and broadcast into registers, so
+/// the interleave copy is skipped entirely (odd tails are scalar steps
+/// inside the SIMD kernels; the packed zero-pad row is never read).
 #[allow(clippy::too_many_arguments)]
 fn tiles<const M: usize, const N: usize>(
     a: &MatI8,
     bp: &PackedMatI8,
     idx: Option<&[usize]>,
-    pair: bool,
+    route: Route,
     start: usize,
     row1: usize,
     row0: usize,
@@ -532,7 +593,7 @@ fn tiles<const M: usize, const N: usize>(
 ) -> usize {
     debug_assert_eq!(N, bp.nr);
     let (k, n) = (a.cols, bp.cols);
-    if pair {
+    if route == Route::Pair {
         // zero-filled; the dense K-pad row (odd k) is never rewritten
         let awidth = if idx.is_some() { k } else { bp.k_pad };
         abuf.clear();
@@ -540,7 +601,7 @@ fn tiles<const M: usize, const N: usize>(
     }
     let mut i = start;
     while i + M <= row1 {
-        if pair {
+        if route == Route::Pair {
             // interleave: abuf[kk*M + di] = a[i+di][kk]
             for di in 0..M {
                 let ar = a.row(i + di);
@@ -554,16 +615,24 @@ fn tiles<const M: usize, const N: usize>(
             let jw = N.min(n - j0);
             let panel = bp.panel(p);
             let mut acc = [[0i32; N]; M];
-            match (idx, pair) {
-                (None, true) => micro_pair::<M, N>(bp.k_pad / 2, abuf, panel, &mut acc),
-                (Some(ix), true) => micro_pair_idx::<M, N>(ix, abuf, panel, &mut acc),
-                (None, false) => {
+            match (idx, route) {
+                (None, Route::Pair) => micro_pair::<M, N>(bp.k_pad / 2, abuf, panel, &mut acc),
+                (Some(ix), Route::Pair) => micro_pair_idx::<M, N>(ix, abuf, panel, &mut acc),
+                (None, Route::Wide) => {
                     let rows: [&[i8]; M] = std::array::from_fn(|di| a.row(i + di));
                     micro_wide::<M, N>(k, &rows, panel, &mut acc);
                 }
-                (Some(ix), false) => {
+                (Some(ix), Route::Wide) => {
                     let rows: [&[i8]; M] = std::array::from_fn(|di| a.row(i + di));
                     micro_wide_idx::<M, N>(ix, &rows, panel, &mut acc);
+                }
+                (None, Route::Simd) => {
+                    let rows: [&[i8]; M] = std::array::from_fn(|di| a.row(i + di));
+                    simd::micro_dense::<M, N>(k, &rows, panel, &mut acc);
+                }
+                (Some(ix), Route::Simd) => {
+                    let rows: [&[i8]; M] = std::array::from_fn(|di| a.row(i + di));
+                    simd::micro_idx::<M, N>(ix, &rows, panel, &mut acc);
                 }
             }
             for (di, accr) in acc.iter().enumerate() {
@@ -578,11 +647,11 @@ fn tiles<const M: usize, const N: usize>(
 /// GEMV driver: panel-outer / row-inner, so one B panel stays hot in L1
 /// across the (few) A rows; each output element is written exactly once.
 /// Monomorphizes on the packed panel width.
-fn gemv_dispatch(a: &MatI8, bp: &PackedMatI8, idx: Option<&[usize]>, pair: bool, c: &mut [i32]) {
+fn gemv_dispatch(a: &MatI8, bp: &PackedMatI8, idx: Option<&[usize]>, route: Route, c: &mut [i32]) {
     if bp.nr == 8 {
-        gemv_panels::<8>(a, bp, idx, pair, c);
+        gemv_panels::<8>(a, bp, idx, route, c);
     } else {
-        gemv_panels::<4>(a, bp, idx, pair, c);
+        gemv_panels::<4>(a, bp, idx, route, c);
     }
 }
 
@@ -590,7 +659,7 @@ fn gemv_panels<const N: usize>(
     a: &MatI8,
     bp: &PackedMatI8,
     idx: Option<&[usize]>,
-    pair: bool,
+    route: Route,
     c: &mut [i32],
 ) {
     debug_assert_eq!(N, bp.nr);
@@ -602,12 +671,18 @@ fn gemv_panels<const N: usize>(
         for i in 0..a.rows {
             let arow = a.row(i);
             let mut acc = [[0i32; N]; 1];
-            match (idx, pair) {
-                (None, true) => gemv_pair::<N>(arow, panel, &mut acc[0]),
-                (Some(ix), true) => gemv_pair_idx::<N>(arow, ix, panel, &mut acc[0]),
+            match (idx, route) {
+                (None, Route::Pair) => gemv_pair::<N>(arow, panel, &mut acc[0]),
+                (Some(ix), Route::Pair) => gemv_pair_idx::<N>(arow, ix, panel, &mut acc[0]),
                 // the wide fallback is the existing 1-row microkernels
-                (None, false) => micro_wide::<1, N>(arow.len(), &[arow], panel, &mut acc),
-                (Some(ix), false) => micro_wide_idx::<1, N>(ix, &[arow], panel, &mut acc),
+                (None, Route::Wide) => micro_wide::<1, N>(arow.len(), &[arow], panel, &mut acc),
+                (Some(ix), Route::Wide) => micro_wide_idx::<1, N>(ix, &[arow], panel, &mut acc),
+                // SIMD GEMV = the 1-row instances of the SIMD kernels:
+                // the A row streams in place, same as the scalar twins
+                (None, Route::Simd) => {
+                    simd::micro_dense::<1, N>(arow.len(), &[arow], panel, &mut acc)
+                }
+                (Some(ix), Route::Simd) => simd::micro_idx::<1, N>(ix, &[arow], panel, &mut acc),
             }
             c[i * n + j0..][..jw].copy_from_slice(&acc[0][..jw]);
         }
@@ -714,9 +789,10 @@ fn wide_step<const M: usize, const N: usize>(
 /// Wide-i32 microkernel (the PR-1 scheme): M×N i32 accumulators live
 /// across the whole K loop, K unrolled by 4, branch-free dense MACs, one
 /// MAC per lane per step. Exact for every i8 input (kept as the -128
-/// fallback and the pair-kernel comparator).
+/// fallback and the pair-kernel comparator; also the portable fallback
+/// behind `super::simd`'s wrappers on arches with no SIMD kernel).
 #[inline(always)]
-fn micro_wide<const M: usize, const N: usize>(
+pub(crate) fn micro_wide<const M: usize, const N: usize>(
     k: usize,
     a: &[&[i8]; M],
     panel: &[i8],
@@ -777,7 +853,7 @@ fn micro_pair_idx<const M: usize, const N: usize>(
 
 /// Index-mapped wide-i32 microkernel (Aux GEMM fallback path).
 #[inline(always)]
-fn micro_wide_idx<const M: usize, const N: usize>(
+pub(crate) fn micro_wide_idx<const M: usize, const N: usize>(
     idx: &[usize],
     a: &[&[i8]; M],
     panel: &[i8],
@@ -854,12 +930,19 @@ mod tests {
         assert_eq!(TileConfig::parse("6x4"), None);
         assert_eq!(TileConfig::parse("8"), None);
         assert_eq!(TileConfig::parse("8x16"), None);
-        // heuristics (no env override in the test environment): narrow
-        // outputs stay at the portable width, wide outputs widen, a K
-        // deep enough to blow the L1 panel budget narrows again
+        // per-arch tables (no MUXQ_TILE override in the test env):
+        // narrow outputs stay at the portable width on every arch and
+        // wide outputs widen; at L1-blowing K the scalar rows narrow
+        // back to 4 while the SIMD rows keep full-width panels (the A
+        // side is register broadcasts, not an interleaved L1 tile)
         assert_eq!(TileConfig::nr_for(768, 4), 4);
         assert_eq!(TileConfig::nr_for(768, 768), 8);
-        assert_eq!(TileConfig::nr_for(1 << 20, 768), 4);
+        let deep = TileConfig::nr_for(1 << 20, 768);
+        if simd::dispatch().is_simd() {
+            assert_eq!(deep, 8, "SIMD table keeps wide panels at deep K");
+        } else {
+            assert_eq!(deep, 4, "scalar table narrows at deep K");
+        }
         assert_eq!(TileConfig::mr_for(4), 4);
         assert_eq!(TileConfig::mr_for(512), 8);
     }
@@ -888,8 +971,18 @@ mod tests {
         }
     }
 
+    /// Every explicitly selectable kernel on this host (Simd only where
+    /// the host has one — `Kernel::Simd` is a clean panic elsewhere).
+    fn selectable_kernels() -> Vec<Kernel> {
+        let mut ks = vec![Kernel::PairI16, Kernel::WideI32, Kernel::Auto];
+        if simd::host_simd().is_some() {
+            ks.push(Kernel::Simd);
+        }
+        ks
+    }
+
     #[test]
-    fn pair_and_wide_kernels_bit_exact_across_tile_grid() {
+    fn pair_wide_and_simd_kernels_bit_exact_across_tile_grid() {
         // every (kernel, mr, nr) combination against the naive loop,
         // on shapes with odd K and ragged M/N tails
         for &(m, k, n) in &[(5, 9, 11), (8, 16, 8), (13, 31, 17), (1, 3, 1)] {
@@ -899,7 +992,7 @@ mod tests {
             for nr in [4usize, 8] {
                 let bp = PackedMatI8::pack_with(&b, nr);
                 for mr in [4usize, 8] {
-                    for kernel in [Kernel::PairI16, Kernel::WideI32, Kernel::Auto] {
+                    for kernel in selectable_kernels() {
                         let mut c = MatI32::zeros(0, 0);
                         matmul_i8_packed_kernel_into(
                             &a,
@@ -917,6 +1010,71 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn simd_kernel_exact_even_with_neg128_weights() {
+        // the SIMD kernels form pair/quad sums in i32, so unlike the
+        // scalar pair kernel they need no −128 fallback: the all-(−128)
+        // corner must be bit-exact through the explicit Simd selection,
+        // dense AND rows-subset, GEMV and tiled
+        if simd::host_simd().is_none() {
+            return; // no SIMD on this host; routing covered elsewhere
+        }
+        let mut a = MatI8::zeros(5, 7);
+        let mut b = MatI8::zeros(7, 9);
+        a.data.iter_mut().for_each(|v| *v = i8::MIN);
+        b.data.iter_mut().for_each(|v| *v = i8::MIN);
+        let want = matmul_naive(&a, &b);
+        for nr in [4usize, 8] {
+            let bp = PackedMatI8::pack_with(&b, nr);
+            assert!(bp.has_neg128());
+            for mr in [4usize, 8] {
+                let mut c = MatI32::zeros(0, 0);
+                matmul_i8_packed_kernel_into(
+                    &a,
+                    &bp,
+                    &mut c,
+                    ParallelGemm::sequential(),
+                    Kernel::Simd,
+                    mr,
+                );
+                assert_eq!(c.data, want.data, "tile {mr}x{nr}");
+            }
+            let mut g = MatI32::zeros(0, 0);
+            matmul_i8_gemv_into(&a, &bp, &mut g, Kernel::Simd);
+            assert_eq!(g.data, want.data, "gemv nr {nr}");
+        }
+    }
+
+    #[test]
+    fn auto_route_honors_dispatch() {
+        // whatever MUXQ_FORCE_KERNEL this suite runs under, Auto must
+        // resolve consistently with the process-wide dispatch — and a
+        // −128-laden B may only downgrade the scalar pair route
+        let clean = PackedMatI8::pack(&rand_i8(6, 5, 77));
+        assert!(!clean.has_neg128());
+        let mut hot = MatI8::zeros(6, 5);
+        hot.data[3] = i8::MIN;
+        let hotp = PackedMatI8::pack(&hot);
+        assert!(hotp.has_neg128());
+        match simd::dispatch() {
+            DispatchKernel::Avx2 | DispatchKernel::Neon => {
+                assert_eq!(Kernel::Auto.route(&clean), Route::Simd);
+                assert_eq!(Kernel::Auto.route(&hotp), Route::Simd);
+            }
+            DispatchKernel::Pair => {
+                assert_eq!(Kernel::Auto.route(&clean), Route::Pair);
+                assert_eq!(Kernel::Auto.route(&hotp), Route::Wide);
+            }
+            DispatchKernel::Scalar => {
+                assert_eq!(Kernel::Auto.route(&clean), Route::Wide);
+                assert_eq!(Kernel::Auto.route(&hotp), Route::Wide);
+            }
+        }
+        // explicit selections ignore the env
+        assert_eq!(Kernel::WideI32.route(&clean), Route::Wide);
+        assert_eq!(Kernel::PairI16.route(&clean), Route::Pair);
     }
 
     #[test]
@@ -990,7 +1148,7 @@ mod tests {
             let want = matmul_naive(&a, &b);
             for nr in [4usize, 8] {
                 let bp = PackedMatI8::pack_with(&b, nr);
-                for kernel in [Kernel::PairI16, Kernel::WideI32, Kernel::Auto] {
+                for kernel in selectable_kernels() {
                     let mut c = MatI32::zeros(0, 0);
                     matmul_i8_gemv_into(&a, &bp, &mut c, kernel);
                     assert_eq!(c.data, want.data, "{m}x{k}x{n} {kernel:?} nr {nr}");

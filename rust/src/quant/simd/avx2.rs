@@ -1,0 +1,171 @@
+//! x86-64 AVX2 microkernels: `pmaddwd`-class pair accumulation against
+//! the K-major packed panels of `super::super::packed`.
+//!
+//! Scheme (per k-pair, per panel): the two B rows of the pair are
+//! byte-interleaved (`punpcklbw` / `pshufb`) so column `j`'s pair
+//! `[b(k,j), b(k+1,j)]` sits in adjacent i16 lanes after sign extension
+//! (`pmovsxbw`); one `pmaddwd` against a broadcast A pair
+//! `[a(2t), a(2t+1)]` then retires two i8 MACs per i32 lane:
+//!
+//! ```text
+//!   b16  = sx16[ b(k,0) b(k+1,0) b(k,1) b(k+1,1) … b(k,N-1) b(k+1,N-1) ]
+//!   av   = set1_epi32( a(2t+1):a(2t) )                 (i16 pair per lane)
+//!   acc += madd_epi16(av, b16)   // lane j: a_lo·b(k,j) + a_hi·b(k+1,j)
+//! ```
+//!
+//! Exactness: operands are sign-extended i8 (|v| ≤ 128), so each i16
+//! product is bounded by 16384 and `pmaddwd`'s pairwise sum — formed in
+//! i32 — by 32768: no overflow for ANY i8 input, including the
+//! all-(−128) corner that overflows the scalar i16 pair kernel. The
+//! u8×i8 `maddubs` variant was rejected precisely because its i16
+//! saturation breaks this bit-exactness contract.
+//!
+//! The A operand is read directly from the activation rows (the pair
+//! `a[2t], a[2t+1]` is adjacent in the row), so the SIMD path skips the
+//! scalar pair kernel's A-interleave copy entirely. Odd K and odd
+//! index-list tails take one scalar wide-i32 step; packed zero-pad rows
+//! are never read.
+//!
+//! Safety: every `unsafe fn` here requires AVX2; `super::micro_dense` /
+//! `super::micro_idx` check `host_caps().avx2` before entering.
+
+use super::tail_step;
+use std::arch::x86_64::*;
+
+/// The A pair `[lo, hi]` as one i32: two sign-extended i16 halves,
+/// little-endian lane order (lo in the even `pmaddwd` lane).
+#[inline(always)]
+fn pair_dw(lo: i8, hi: i8) -> i32 {
+    (((hi as i16 as u16 as u32) << 16) | (lo as i16 as u16 as u32)) as i32
+}
+
+/// Interleave two 8-byte B rows and sign-extend to 16 i16 lanes.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn interleave8(r0: *const i8, r1: *const i8) -> __m256i {
+    unsafe {
+        let b0 = _mm_loadl_epi64(r0 as *const __m128i);
+        let b1 = _mm_loadl_epi64(r1 as *const __m128i);
+        _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(b0, b1))
+    }
+}
+
+/// Interleave two 4-byte B rows (packed into one u64) and sign-extend
+/// to 8 i16 lanes.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn interleave4(w0: u32, w1: u32) -> __m128i {
+    unsafe {
+        // bytes: [r0c0 r0c1 r0c2 r0c3 r1c0 r1c1 r1c2 r1c3] → interleaved
+        let b = _mm_set_epi64x(0, (w0 as u64 | ((w1 as u64) << 32)) as i64);
+        let shuf = _mm_set_epi8(-1, -1, -1, -1, -1, -1, -1, -1, 7, 3, 6, 2, 5, 1, 4, 0);
+        _mm_cvtepi8_epi16(_mm_shuffle_epi8(b, shuf))
+    }
+}
+
+/// Dense microkernel: `acc[i][j] += Σ_{kk<k} a[i][kk] · panel[kk·N + j]`.
+///
+/// # Safety
+/// Requires AVX2 on the host. `panel` must hold at least `k` rows of
+/// `N` bytes; every `a[i]` at least `k` elements.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn micro_dense<const M: usize, const N: usize>(
+    k: usize,
+    a: &[&[i8]; M],
+    panel: &[i8],
+    acc: &mut [[i32; N]; M],
+) {
+    debug_assert!(N == 4 || N == 8);
+    debug_assert!(panel.len() >= k * N);
+    let bp = panel.as_ptr();
+    let accp = acc as *mut _ as *mut i32;
+    unsafe {
+        if N == 8 {
+            let mut vacc = [_mm256_setzero_si256(); M];
+            for t in 0..k / 2 {
+                let b16 = interleave8(bp.add(2 * t * 8), bp.add((2 * t + 1) * 8));
+                for (i, va) in vacc.iter_mut().enumerate() {
+                    let av = _mm256_set1_epi32(pair_dw(a[i][2 * t], a[i][2 * t + 1]));
+                    *va = _mm256_add_epi32(*va, _mm256_madd_epi16(av, b16));
+                }
+            }
+            for (i, va) in vacc.iter().enumerate() {
+                let p = accp.add(i * 8) as *mut __m256i;
+                _mm256_storeu_si256(p, _mm256_add_epi32(_mm256_loadu_si256(p as *const _), *va));
+            }
+        } else {
+            let mut vacc = [_mm_setzero_si128(); M];
+            for t in 0..k / 2 {
+                let w0 = (bp.add(2 * t * 4) as *const u32).read_unaligned();
+                let w1 = (bp.add((2 * t + 1) * 4) as *const u32).read_unaligned();
+                let b16 = interleave4(w0, w1);
+                for (i, va) in vacc.iter_mut().enumerate() {
+                    let av = _mm_set1_epi32(pair_dw(a[i][2 * t], a[i][2 * t + 1]));
+                    *va = _mm_add_epi32(*va, _mm_madd_epi16(av, b16));
+                }
+            }
+            for (i, va) in vacc.iter().enumerate() {
+                let p = accp.add(i * 4) as *mut __m128i;
+                _mm_storeu_si128(p, _mm_add_epi32(_mm_loadu_si128(p as *const _), *va));
+            }
+        }
+        if k % 2 == 1 {
+            tail_step::<M, N>(k - 1, k - 1, a, bp, accp);
+        }
+    }
+}
+
+/// Rows-subset (Aux) microkernel: contraction walks `idx`, B rows read
+/// from arbitrary panel offsets.
+///
+/// # Safety
+/// Requires AVX2 on the host. Every `idx[t]` must be a valid panel row;
+/// every `a[i]` at least `idx.len()` elements.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn micro_idx<const M: usize, const N: usize>(
+    idx: &[usize],
+    a: &[&[i8]; M],
+    panel: &[i8],
+    acc: &mut [[i32; N]; M],
+) {
+    debug_assert!(N == 4 || N == 8);
+    let bp = panel.as_ptr();
+    let accp = acc as *mut _ as *mut i32;
+    unsafe {
+        if N == 8 {
+            let mut vacc = [_mm256_setzero_si256(); M];
+            for t in 0..idx.len() / 2 {
+                let b16 = interleave8(bp.add(idx[2 * t] * 8), bp.add(idx[2 * t + 1] * 8));
+                for (i, va) in vacc.iter_mut().enumerate() {
+                    let av = _mm256_set1_epi32(pair_dw(a[i][2 * t], a[i][2 * t + 1]));
+                    *va = _mm256_add_epi32(*va, _mm256_madd_epi16(av, b16));
+                }
+            }
+            for (i, va) in vacc.iter().enumerate() {
+                let p = accp.add(i * 8) as *mut __m256i;
+                _mm256_storeu_si256(p, _mm256_add_epi32(_mm256_loadu_si256(p as *const _), *va));
+            }
+        } else {
+            let mut vacc = [_mm_setzero_si128(); M];
+            for t in 0..idx.len() / 2 {
+                let w0 = (bp.add(idx[2 * t] * 4) as *const u32).read_unaligned();
+                let w1 = (bp.add(idx[2 * t + 1] * 4) as *const u32).read_unaligned();
+                let b16 = interleave4(w0, w1);
+                for (i, va) in vacc.iter_mut().enumerate() {
+                    let av = _mm_set1_epi32(pair_dw(a[i][2 * t], a[i][2 * t + 1]));
+                    *va = _mm_add_epi32(*va, _mm_madd_epi16(av, b16));
+                }
+            }
+            for (i, va) in vacc.iter().enumerate() {
+                let p = accp.add(i * 4) as *mut __m128i;
+                _mm_storeu_si128(p, _mm_add_epi32(_mm_loadu_si128(p as *const _), *va));
+            }
+        }
+        if idx.len() % 2 == 1 {
+            let t = idx.len() - 1;
+            tail_step::<M, N>(t, idx[t], a, bp, accp);
+        }
+    }
+}
+
+// odd-K / odd-index scalar tails: `super::tail_step` (shared with NEON).

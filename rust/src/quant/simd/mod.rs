@@ -1,0 +1,460 @@
+//! Per-arch SIMD microkernels behind one-time runtime dispatch — the
+//! "hardware-friendly" half of MUXQ's pitch made literal. The paper's
+//! argument (and FineQ/DuQuant's measurements) is that a *uniform* INT8
+//! compute path wins only when the kernel actually exploits the integer
+//! datapath; until this module the engine leaned on autovectorization of
+//! the scalar pair kernel (`super::packed`). Now every hot contraction —
+//! the dense MR×NR microkernel, the rows-subset Aux kernel, and the
+//! skinny-M GEMV path — has explicit per-arch twins:
+//!
+//! * **x86-64 AVX2** (`avx2.rs`): `pmaddwd`-class pair accumulation. Each
+//!   k-pair of a B panel is byte-interleaved and sign-extended to i16;
+//!   `_mm256_madd_epi16` against a broadcast A pair retires two i8 MACs
+//!   per lane with the pair sum formed *in i32* — so unlike the scalar
+//!   i16 pair kernel the SIMD path is exact for **every** i8 input,
+//!   including the `(-128)·(-128)+(-128)·(-128)` corner that forces the
+//!   scalar pair kernel's wide fallback. (`_mm256_maddubs_epi16`'s
+//!   u8×i8 form was rejected: its i16 saturation breaks bit-exactness.)
+//! * **aarch64 NEON** (`neon.rs`): `sdot` quad accumulation when the
+//!   `dotprod` extension is present (4 i8 MACs per i32 lane; B panels
+//!   are quad-transposed in registers with `tbl`), `smlal` widening pair
+//!   accumulation otherwise. Both form sums in i32 — exact for every i8
+//!   input, same as AVX2.
+//!
+//! # Dispatch
+//!
+//! [`dispatch`] resolves ONCE per process (cached in a `OnceLock`):
+//! `MUXQ_FORCE_KERNEL={scalar,pair,avx2,neon}` if set — unknown values
+//! warn and fall back to `scalar`; a kernel the host cannot run is a
+//! clean panic, never UB — otherwise the best kernel the host supports
+//! (`is_x86_feature_detected!("avx2")` / aarch64 NEON baseline). The
+//! resolved kernel steers [`super::packed::Kernel::Auto`] routing and
+//! the per-arch [`super::packed::TileConfig`] tile tables; explicit
+//! `Kernel::{PairI16,WideI32,Simd}` requests bypass the env so every
+//! path stays independently selectable under test (the CI matrix runs
+//! the whole suite under each forced kernel on both architectures).
+//!
+//! Exactness contract: every kernel here is pinned bit-exact against
+//! the scalar pair kernel and the wide-i32 oracle by proptests
+//! (`tests/proptest_invariants.rs`) across the full tile grid, ragged
+//! shapes, and the −128 corner.
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2;
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon;
+
+use std::sync::OnceLock;
+
+/// Which microkernel family the runtime dispatcher resolved. The names
+/// are the `MUXQ_FORCE_KERNEL` spellings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchKernel {
+    /// Scalar wide-i32 (one MAC per lane per widening; exact for all
+    /// inputs — the PR-1 scheme and the universal fallback).
+    Scalar,
+    /// Scalar i16 pair accumulation (two MACs per lane, autovectorized;
+    /// −128-in-B routes to the wide kernel — the PR-2 default).
+    Pair,
+    /// AVX2 `pmaddwd` pair path (x86-64 only).
+    Avx2,
+    /// NEON `sdot`/`smlal` path (aarch64 only).
+    Neon,
+}
+
+impl DispatchKernel {
+    /// The canonical spelling (round-trips through [`DispatchKernel::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            DispatchKernel::Scalar => "scalar",
+            DispatchKernel::Pair => "pair",
+            DispatchKernel::Avx2 => "avx2",
+            DispatchKernel::Neon => "neon",
+        }
+    }
+
+    /// Parse a `MUXQ_FORCE_KERNEL` value (trimmed, case-insensitive).
+    pub fn parse(s: &str) -> Option<DispatchKernel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(DispatchKernel::Scalar),
+            "pair" => Some(DispatchKernel::Pair),
+            "avx2" => Some(DispatchKernel::Avx2),
+            "neon" => Some(DispatchKernel::Neon),
+            _ => None,
+        }
+    }
+
+    /// Whether this kernel runs explicit SIMD intrinsics (vs scalar code).
+    pub fn is_simd(self) -> bool {
+        matches!(self, DispatchKernel::Avx2 | DispatchKernel::Neon)
+    }
+}
+
+/// What the host can actually run (probed once, see [`host_caps`]).
+#[derive(Debug, Clone, Copy)]
+pub struct HostCaps {
+    /// x86-64 with AVX2.
+    pub avx2: bool,
+    /// aarch64 NEON (baseline on every aarch64 target).
+    pub neon: bool,
+    /// aarch64 `dotprod` extension (`sdot`) — selects the quad kernel
+    /// inside the NEON path; without it NEON uses `smlal` pairs.
+    pub neon_dot: bool,
+}
+
+/// Probe the host ISA once (cached; the probes themselves are cheap but
+/// the kernels consult this per GEMM call).
+pub fn host_caps() -> HostCaps {
+    static CAPS: OnceLock<HostCaps> = OnceLock::new();
+    *CAPS.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            HostCaps { avx2: is_x86_feature_detected!("avx2"), neon: false, neon_dot: false }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            HostCaps {
+                avx2: false,
+                neon: true,
+                neon_dot: std::arch::is_aarch64_feature_detected!("dotprod"),
+            }
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            HostCaps { avx2: false, neon: false, neon_dot: false }
+        }
+    })
+}
+
+/// The SIMD kernel this host supports, independent of any env override
+/// (the `Kernel::Simd` explicit-selection hook checks this).
+pub fn host_simd() -> Option<DispatchKernel> {
+    let caps = host_caps();
+    if caps.avx2 {
+        Some(DispatchKernel::Avx2)
+    } else if caps.neon {
+        Some(DispatchKernel::Neon)
+    } else {
+        None
+    }
+}
+
+/// Best kernel for a host: its SIMD ISA when present, else the portable
+/// scalar pair kernel (the pre-SIMD default).
+pub fn auto_kernel(caps: &HostCaps) -> DispatchKernel {
+    if caps.avx2 {
+        DispatchKernel::Avx2
+    } else if caps.neon {
+        DispatchKernel::Neon
+    } else {
+        DispatchKernel::Pair
+    }
+}
+
+/// Validate a forced kernel against host capabilities. `Err` carries the
+/// message the dispatcher panics with — a *clean* error: forcing `neon`
+/// on x86 must never reach the intrinsics.
+pub fn resolve(choice: DispatchKernel, caps: &HostCaps) -> Result<DispatchKernel, String> {
+    match choice {
+        DispatchKernel::Scalar | DispatchKernel::Pair => Ok(choice),
+        DispatchKernel::Avx2 if caps.avx2 => Ok(choice),
+        DispatchKernel::Neon if caps.neon => Ok(choice),
+        other => Err(format!(
+            "kernel {:?} is not supported on this host (caps: avx2={} neon={})",
+            other.name(),
+            caps.avx2,
+            caps.neon
+        )),
+    }
+}
+
+/// How a raw `MUXQ_FORCE_KERNEL` env value parses. Pure (no env read, no
+/// caching) so the dispatcher's edge cases are unit-testable without
+/// mutating process state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EnvChoice {
+    /// Variable absent or empty/whitespace (CI matrices export `""` for
+    /// the default leg) — auto-select for the host.
+    Unset,
+    /// A recognized kernel name.
+    Forced(DispatchKernel),
+    /// Anything else — warn and fall back to scalar.
+    Unknown(String),
+}
+
+/// Classify an env value ([`EnvChoice`] docs for the cases).
+pub fn env_choice(value: Option<&str>) -> EnvChoice {
+    match value {
+        None => EnvChoice::Unset,
+        Some(v) if v.trim().is_empty() => EnvChoice::Unset,
+        Some(v) => match DispatchKernel::parse(v) {
+            Some(k) => EnvChoice::Forced(k),
+            None => EnvChoice::Unknown(v.to_string()),
+        },
+    }
+}
+
+/// The process-wide kernel dispatch, resolved once: `MUXQ_FORCE_KERNEL`
+/// override (unknown → warn + scalar; unsupported-on-host → clean
+/// panic), else [`auto_kernel`].
+pub fn dispatch() -> DispatchKernel {
+    static DISPATCH: OnceLock<DispatchKernel> = OnceLock::new();
+    *DISPATCH.get_or_init(|| {
+        let caps = host_caps();
+        match env_choice(std::env::var("MUXQ_FORCE_KERNEL").ok().as_deref()) {
+            EnvChoice::Unset => auto_kernel(&caps),
+            EnvChoice::Forced(k) => match resolve(k, &caps) {
+                Ok(k) => k,
+                Err(e) => panic!("MUXQ_FORCE_KERNEL: {e}"),
+            },
+            EnvChoice::Unknown(v) => {
+                eprintln!(
+                    "WARN: MUXQ_FORCE_KERNEL={v:?} is not one of \
+                     scalar|pair|avx2|neon; falling back to scalar"
+                );
+                DispatchKernel::Scalar
+            }
+        }
+    })
+}
+
+// ------------------------------------------------------ kernel wrappers
+//
+// Safe entry points for `packed.rs`. Contract: callers route here only
+// when `host_simd()` is `Some` (the dispatcher / `Kernel::Simd` assert
+// it), so the `unsafe` target-feature calls are sound; a contract
+// violation on a SIMD-less arch falls back to the portable scalar loop
+// rather than UB.
+
+/// Dense microkernel: `acc[i][j] += Σ_kk a[i][kk] · panel[kk·N + j]`
+/// over `k` contraction steps (accumulating — like the scalar twins).
+#[inline]
+#[allow(unused_variables, unreachable_code)]
+pub(crate) fn micro_dense<const M: usize, const N: usize>(
+    k: usize,
+    a: &[&[i8]; M],
+    panel: &[i8],
+    acc: &mut [[i32; N]; M],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if host_caps().avx2 {
+        // SAFETY: AVX2 presence just checked.
+        unsafe { avx2::micro_dense::<M, N>(k, a, panel, acc) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { neon::micro_dense::<M, N>(k, a, panel, acc) };
+        return;
+    }
+    portable_dense::<M, N>(k, a, panel, acc);
+}
+
+/// Rows-subset (Aux) microkernel: contraction walks `idx`, B rows read
+/// from arbitrary panel offsets (`panel[idx[t]·N ..]`).
+#[inline]
+#[allow(unused_variables, unreachable_code)]
+pub(crate) fn micro_idx<const M: usize, const N: usize>(
+    idx: &[usize],
+    a: &[&[i8]; M],
+    panel: &[i8],
+    acc: &mut [[i32; N]; M],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if host_caps().avx2 {
+        // SAFETY: AVX2 presence just checked.
+        unsafe { avx2::micro_idx::<M, N>(idx, a, panel, acc) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { neon::micro_idx::<M, N>(idx, a, panel, acc) };
+        return;
+    }
+    portable_idx::<M, N>(idx, a, panel, acc);
+}
+
+/// Portable fallback (non-x86/aarch64 hosts where the dispatcher never
+/// selects SIMD; reachable only on contract violation): delegate to the
+/// ONE wide-i32 implementation in `packed.rs` — no second copy of the
+/// contraction math to keep in sync.
+fn portable_dense<const M: usize, const N: usize>(
+    k: usize,
+    a: &[&[i8]; M],
+    panel: &[i8],
+    acc: &mut [[i32; N]; M],
+) {
+    super::packed::micro_wide::<M, N>(k, a, panel, acc);
+}
+
+fn portable_idx<const M: usize, const N: usize>(
+    idx: &[usize],
+    a: &[&[i8]; M],
+    panel: &[i8],
+    acc: &mut [[i32; N]; M],
+) {
+    super::packed::micro_wide_idx::<M, N>(idx, a, panel, acc);
+}
+
+/// One scalar wide-i32 contraction step — the shared odd-K / odd-index
+/// tail of the AVX2 and NEON kernels (`at` indexes A, `krow` the packed
+/// panel row): `acc[i][j] += a[i][at] · panel_row[krow][j]`.
+///
+/// # Safety
+/// `accp` must point at `M·N` writable i32s and `bp` at a panel with at
+/// least `krow + 1` rows of `N` bytes; every `a[i]` needs `at + 1`
+/// elements (callers pass in-bounds kernel state).
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+pub(crate) unsafe fn tail_step<const M: usize, const N: usize>(
+    at: usize,
+    krow: usize,
+    a: &[&[i8]; M],
+    bp: *const i8,
+    accp: *mut i32,
+) {
+    unsafe {
+        for i in 0..M {
+            let av = a[i][at] as i32;
+            for j in 0..N {
+                *accp.add(i * N + j) += av * *bp.add(krow * N + j) as i32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip_through_parse() {
+        use DispatchKernel::{Avx2, Neon, Pair, Scalar};
+        for k in [Scalar, Pair, Avx2, Neon] {
+            assert_eq!(DispatchKernel::parse(k.name()), Some(k));
+        }
+        // trimming + case folding (env values come from YAML and shells)
+        assert_eq!(DispatchKernel::parse(" AVX2 "), Some(DispatchKernel::Avx2));
+        assert_eq!(DispatchKernel::parse("Scalar"), Some(DispatchKernel::Scalar));
+        assert_eq!(DispatchKernel::parse("sse2"), None);
+        assert_eq!(DispatchKernel::parse("pairi16"), None);
+    }
+
+    #[test]
+    fn env_choice_classification() {
+        // absent and empty both mean "auto" — CI matrices export an
+        // empty string for the default leg
+        assert_eq!(env_choice(None), EnvChoice::Unset);
+        assert_eq!(env_choice(Some("")), EnvChoice::Unset);
+        assert_eq!(env_choice(Some("  ")), EnvChoice::Unset);
+        assert_eq!(env_choice(Some("neon")), EnvChoice::Forced(DispatchKernel::Neon));
+        assert_eq!(env_choice(Some("PAIR")), EnvChoice::Forced(DispatchKernel::Pair));
+        assert_eq!(env_choice(Some("frobnicate")), EnvChoice::Unknown("frobnicate".into()));
+    }
+
+    #[test]
+    fn resolve_rejects_unsupported_kernels_cleanly() {
+        // scalar kernels resolve anywhere
+        let none = HostCaps { avx2: false, neon: false, neon_dot: false };
+        assert_eq!(resolve(DispatchKernel::Scalar, &none), Ok(DispatchKernel::Scalar));
+        assert_eq!(resolve(DispatchKernel::Pair, &none), Ok(DispatchKernel::Pair));
+        // SIMD kernels only where the caps say so — and the rejection is
+        // a value, not UB: the dispatcher turns it into a clean panic
+        assert!(resolve(DispatchKernel::Avx2, &none).unwrap_err().contains("avx2"));
+        assert!(resolve(DispatchKernel::Neon, &none).unwrap_err().contains("neon"));
+        let x86 = HostCaps { avx2: true, neon: false, neon_dot: false };
+        assert_eq!(resolve(DispatchKernel::Avx2, &x86), Ok(DispatchKernel::Avx2));
+        assert!(resolve(DispatchKernel::Neon, &x86).is_err());
+        let arm = HostCaps { avx2: false, neon: true, neon_dot: true };
+        assert_eq!(resolve(DispatchKernel::Neon, &arm), Ok(DispatchKernel::Neon));
+        assert!(resolve(DispatchKernel::Avx2, &arm).is_err());
+    }
+
+    #[test]
+    fn auto_kernel_prefers_host_simd() {
+        let none = HostCaps { avx2: false, neon: false, neon_dot: false };
+        assert_eq!(auto_kernel(&none), DispatchKernel::Pair);
+        let x86 = HostCaps { avx2: true, neon: false, neon_dot: false };
+        assert_eq!(auto_kernel(&x86), DispatchKernel::Avx2);
+        let arm = HostCaps { avx2: false, neon: true, neon_dot: false };
+        assert_eq!(auto_kernel(&arm), DispatchKernel::Neon);
+    }
+
+    #[test]
+    fn host_probe_is_arch_consistent() {
+        let caps = host_caps();
+        // avx2 and neon are mutually exclusive by construction
+        assert!(!(caps.avx2 && caps.neon));
+        #[cfg(target_arch = "aarch64")]
+        assert!(caps.neon, "NEON is baseline on aarch64");
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        assert_eq!(host_simd(), None);
+        match host_simd() {
+            Some(k) => assert!(k.is_simd() && resolve(k, &caps).is_ok()),
+            None => assert!(!caps.avx2 && !caps.neon),
+        }
+        // the process-wide dispatch always resolves to something the
+        // host can run (whatever env this test suite runs under)
+        assert!(resolve(dispatch(), &caps).is_ok());
+    }
+
+    #[test]
+    fn forcing_foreign_simd_panics_cleanly() {
+        // the dispatcher's unsupported-kernel path: pick a SIMD kernel
+        // this host cannot run and check the failure is a clean panic
+        // with the env var named (not UB, not a silent fallback)
+        let caps = host_caps();
+        let foreign =
+            if caps.avx2 || !caps.neon { DispatchKernel::Neon } else { DispatchKernel::Avx2 };
+        assert!(resolve(foreign, &caps).is_err());
+        let err = std::panic::catch_unwind(|| {
+            // same expression dispatch() evaluates on a forced env value
+            match resolve(foreign, &caps) {
+                Ok(k) => k,
+                Err(e) => panic!("MUXQ_FORCE_KERNEL: {e}"),
+            }
+        })
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("MUXQ_FORCE_KERNEL"), "panic message {msg:?}");
+        assert!(msg.contains("not supported on this host"), "panic message {msg:?}");
+    }
+
+    #[test]
+    fn portable_fallback_matches_triple_loop() {
+        // the contract-violation fallback is itself exact (and on
+        // x86/aarch64 hosts this doubles as a smoke test that the SIMD
+        // wrappers agree with it — the proptests do the heavy pinning)
+        let k = 13;
+        let a_rows: Vec<Vec<i8>> = (0..4)
+            .map(|i| (0..k).map(|t| ((i * 31 + t * 7) % 255) as i8).collect())
+            .collect();
+        let panel: Vec<i8> =
+            (0..(k + 1) * 4).map(|t| (((t * 13 + 5) % 251) as i32 - 125) as i8).collect();
+        let a: [&[i8]; 4] = std::array::from_fn(|i| a_rows[i].as_slice());
+        let mut want = [[0i32; 4]; 4];
+        for kk in 0..k {
+            for i in 0..4 {
+                for j in 0..4 {
+                    want[i][j] += a[i][kk] as i32 * panel[kk * 4 + j] as i32;
+                }
+            }
+        }
+        let mut got = [[0i32; 4]; 4];
+        portable_dense::<4, 4>(k, &a, &panel, &mut got);
+        assert_eq!(got, want);
+        let mut via_wrapper = [[0i32; 4]; 4];
+        micro_dense::<4, 4>(k, &a, &panel, &mut via_wrapper);
+        assert_eq!(via_wrapper, want);
+        // idx twin: identity index list == dense
+        let idx: Vec<usize> = (0..k).collect();
+        let mut got_idx = [[0i32; 4]; 4];
+        portable_idx::<4, 4>(&idx, &a, &panel, &mut got_idx);
+        assert_eq!(got_idx, want);
+        let mut via_idx = [[0i32; 4]; 4];
+        micro_idx::<4, 4>(&idx, &a, &panel, &mut via_idx);
+        assert_eq!(via_idx, want);
+    }
+}

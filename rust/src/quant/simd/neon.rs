@@ -1,0 +1,328 @@
+//! aarch64 NEON microkernels: `sdot` quad accumulation (ARMv8.2
+//! `dotprod`) with an `smlal` widening-pair fallback, against the
+//! K-major packed panels of `super::super::packed`.
+//!
+//! `sdot` path (per K-quad, per panel): `vdotq_s32` retires FOUR i8
+//! MACs per i32 lane, but wants each lane's four bytes to be the four
+//! K-values of ONE output column — a 4×N transpose of the panel's
+//! row-major quad. The transpose happens in registers with `tbl`
+//! (constant index vectors, 1–2 lookups per quad), amortized over the
+//! tile's M rows:
+//!
+//! ```text
+//!   rows k..k+4 of the panel (N=8): 32 contiguous bytes
+//!   q0 = tbl2[ 0 8 16 24 | 1 9 17 25 | 2 10 18 26 | 3 11 19 27 ]
+//!   q1 = tbl2[ 4 12 20 28 | … ]          (column quads j=0..4 / 4..8)
+//!   ab = dup32( a[4t..4t+4] )            (A quad broadcast per row)
+//!   acc.s[j] += q·ab                     (vdotq_s32: 4 MACs/lane)
+//! ```
+//!
+//! `smlal` path (no `dotprod`): the two B rows of a k-pair are widened
+//! to i16 (`sshll`) and `vmlal_s16` accumulates each against a
+//! broadcast A element — the pair structure of the scalar kernel, with
+//! the sums formed in i32.
+//!
+//! Exactness: both paths widen products into i32 accumulators
+//! (`sdot`'s 4-way sum and `smlal`'s widening MAC are architecturally
+//! exact), so like the AVX2 twin they are bit-exact for EVERY i8 input
+//! including −128 — no wide-i32 fallback needed. K and index-list
+//! tails (k mod 4 / mod 2) take scalar steps; packed zero-pad rows are
+//! never read.
+//!
+//! Safety: NEON is baseline on aarch64; the `sdot` functions
+//! additionally require `dotprod`, which `micro_dense`/`micro_idx`
+//! check via the cached [`super::host_caps`] probe.
+
+use super::tail_step;
+use std::arch::aarch64::*;
+
+/// tbl indices: column quads j=0..4 of a row-major 4×8 byte block.
+const TBL8_LO: [u8; 16] = [0, 8, 16, 24, 1, 9, 17, 25, 2, 10, 18, 26, 3, 11, 19, 27];
+/// tbl indices: column quads j=4..8 of a row-major 4×8 byte block.
+const TBL8_HI: [u8; 16] = [4, 12, 20, 28, 5, 13, 21, 29, 6, 14, 22, 30, 7, 15, 23, 31];
+/// tbl indices: column quads of a row-major 4×4 byte block.
+const TBL4: [u8; 16] = [0, 4, 8, 12, 1, 5, 9, 13, 2, 6, 10, 14, 3, 7, 11, 15];
+
+/// Dense microkernel: `acc[i][j] += Σ_{kk<k} a[i][kk] · panel[kk·N + j]`.
+///
+/// # Safety
+/// aarch64/NEON only. `panel` must hold at least `k` rows of `N` bytes;
+/// every `a[i]` at least `k` elements.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn micro_dense<const M: usize, const N: usize>(
+    k: usize,
+    a: &[&[i8]; M],
+    panel: &[i8],
+    acc: &mut [[i32; N]; M],
+) {
+    debug_assert!(N == 4 || N == 8);
+    debug_assert!(panel.len() >= k * N);
+    unsafe {
+        if super::host_caps().neon_dot {
+            dense_dot::<M, N>(k, a, panel, acc);
+        } else {
+            dense_mlal::<M, N>(k, a, panel, acc);
+        }
+    }
+}
+
+/// Rows-subset (Aux) microkernel: contraction walks `idx`, B rows read
+/// from arbitrary panel offsets.
+///
+/// # Safety
+/// aarch64/NEON only. Every `idx[t]` must be a valid panel row; every
+/// `a[i]` at least `idx.len()` elements.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn micro_idx<const M: usize, const N: usize>(
+    idx: &[usize],
+    a: &[&[i8]; M],
+    panel: &[i8],
+    acc: &mut [[i32; N]; M],
+) {
+    debug_assert!(N == 4 || N == 8);
+    unsafe {
+        if super::host_caps().neon_dot {
+            idx_dot::<M, N>(idx, a, panel, acc);
+        } else {
+            idx_mlal::<M, N>(idx, a, panel, acc);
+        }
+    }
+}
+
+/// Broadcast the A quad `a[at..at+4]` across all four i32 lanes.
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn a_quad(a: &[i8], at: usize) -> int8x16_t {
+    unsafe {
+        let w = (a.as_ptr().add(at) as *const u32).read_unaligned();
+        vreinterpretq_s8_u32(vdupq_n_u32(w))
+    }
+}
+
+/// Transpose a gathered 4×8 block (two combined row pairs) into column
+/// quads for the two output half-registers.
+#[target_feature(enable = "neon,dotprod")]
+#[inline]
+unsafe fn quads8(r01: int8x16_t, r23: int8x16_t) -> (int8x16_t, int8x16_t) {
+    unsafe {
+        let tb = int8x16x2_t(r01, r23);
+        (vqtbl2q_s8(tb, vld1q_u8(TBL8_LO.as_ptr())), vqtbl2q_s8(tb, vld1q_u8(TBL8_HI.as_ptr())))
+    }
+}
+
+#[target_feature(enable = "neon,dotprod")]
+unsafe fn dense_dot<const M: usize, const N: usize>(
+    k: usize,
+    a: &[&[i8]; M],
+    panel: &[i8],
+    acc: &mut [[i32; N]; M],
+) {
+    let bp = panel.as_ptr();
+    let accp = acc as *mut _ as *mut i32;
+    unsafe {
+        if N == 8 {
+            let mut acc0 = [vdupq_n_s32(0); M];
+            let mut acc1 = [vdupq_n_s32(0); M];
+            for t in 0..k / 4 {
+                let (q0, q1) =
+                    quads8(vld1q_s8(bp.add(4 * t * 8)), vld1q_s8(bp.add(4 * t * 8 + 16)));
+                for i in 0..M {
+                    let ab = a_quad(a[i], 4 * t);
+                    acc0[i] = vdotq_s32(acc0[i], q0, ab);
+                    acc1[i] = vdotq_s32(acc1[i], q1, ab);
+                }
+            }
+            store8::<M>(accp, &acc0, &acc1);
+        } else {
+            let tq = vld1q_u8(TBL4.as_ptr());
+            let mut vacc = [vdupq_n_s32(0); M];
+            for t in 0..k / 4 {
+                let q = vqtbl1q_s8(vld1q_s8(bp.add(4 * t * 4)), tq);
+                for i in 0..M {
+                    vacc[i] = vdotq_s32(vacc[i], q, a_quad(a[i], 4 * t));
+                }
+            }
+            store4::<M>(accp, &vacc);
+        }
+        for kk in (k - k % 4)..k {
+            tail_step::<M, N>(kk, kk, a, bp, accp);
+        }
+    }
+}
+
+#[target_feature(enable = "neon,dotprod")]
+unsafe fn idx_dot<const M: usize, const N: usize>(
+    idx: &[usize],
+    a: &[&[i8]; M],
+    panel: &[i8],
+    acc: &mut [[i32; N]; M],
+) {
+    let bp = panel.as_ptr();
+    let accp = acc as *mut _ as *mut i32;
+    let r = idx.len();
+    unsafe {
+        if N == 8 {
+            let mut acc0 = [vdupq_n_s32(0); M];
+            let mut acc1 = [vdupq_n_s32(0); M];
+            for t in 0..r / 4 {
+                let r01 = vcombine_s8(
+                    vld1_s8(bp.add(idx[4 * t] * 8)),
+                    vld1_s8(bp.add(idx[4 * t + 1] * 8)),
+                );
+                let r23 = vcombine_s8(
+                    vld1_s8(bp.add(idx[4 * t + 2] * 8)),
+                    vld1_s8(bp.add(idx[4 * t + 3] * 8)),
+                );
+                let (q0, q1) = quads8(r01, r23);
+                for i in 0..M {
+                    let ab = a_quad(a[i], 4 * t);
+                    acc0[i] = vdotq_s32(acc0[i], q0, ab);
+                    acc1[i] = vdotq_s32(acc1[i], q1, ab);
+                }
+            }
+            store8::<M>(accp, &acc0, &acc1);
+        } else {
+            let tq = vld1q_u8(TBL4.as_ptr());
+            let mut vacc = [vdupq_n_s32(0); M];
+            for t in 0..r / 4 {
+                let rows: [u32; 4] = [
+                    (bp.add(idx[4 * t] * 4) as *const u32).read_unaligned(),
+                    (bp.add(idx[4 * t + 1] * 4) as *const u32).read_unaligned(),
+                    (bp.add(idx[4 * t + 2] * 4) as *const u32).read_unaligned(),
+                    (bp.add(idx[4 * t + 3] * 4) as *const u32).read_unaligned(),
+                ];
+                let q = vqtbl1q_s8(vld1q_s8(rows.as_ptr() as *const i8), tq);
+                for i in 0..M {
+                    vacc[i] = vdotq_s32(vacc[i], q, a_quad(a[i], 4 * t));
+                }
+            }
+            store4::<M>(accp, &vacc);
+        }
+        for t in (r - r % 4)..r {
+            tail_step::<M, N>(t, idx[t], a, bp, accp);
+        }
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dense_mlal<const M: usize, const N: usize>(
+    k: usize,
+    a: &[&[i8]; M],
+    panel: &[i8],
+    acc: &mut [[i32; N]; M],
+) {
+    let bp = panel.as_ptr();
+    let accp = acc as *mut _ as *mut i32;
+    unsafe {
+        if N == 8 {
+            let mut acc0 = [vdupq_n_s32(0); M];
+            let mut acc1 = [vdupq_n_s32(0); M];
+            for t in 0..k / 2 {
+                let b0 = vmovl_s8(vld1_s8(bp.add(2 * t * 8)));
+                let b1 = vmovl_s8(vld1_s8(bp.add((2 * t + 1) * 8)));
+                for i in 0..M {
+                    let lo = vdup_n_s16(a[i][2 * t] as i16);
+                    let hi = vdup_n_s16(a[i][2 * t + 1] as i16);
+                    acc0[i] = vmlal_s16(acc0[i], vget_low_s16(b0), lo);
+                    acc1[i] = vmlal_s16(acc1[i], vget_high_s16(b0), lo);
+                    acc0[i] = vmlal_s16(acc0[i], vget_low_s16(b1), hi);
+                    acc1[i] = vmlal_s16(acc1[i], vget_high_s16(b1), hi);
+                }
+            }
+            store8::<M>(accp, &acc0, &acc1);
+        } else {
+            let mut vacc = [vdupq_n_s32(0); M];
+            for t in 0..k / 2 {
+                let w0 = (bp.add(2 * t * 4) as *const u32).read_unaligned();
+                let w1 = (bp.add((2 * t + 1) * 4) as *const u32).read_unaligned();
+                let b0 = vget_low_s16(vmovl_s8(vcreate_s8(w0 as u64)));
+                let b1 = vget_low_s16(vmovl_s8(vcreate_s8(w1 as u64)));
+                for i in 0..M {
+                    vacc[i] = vmlal_s16(vacc[i], b0, vdup_n_s16(a[i][2 * t] as i16));
+                    vacc[i] = vmlal_s16(vacc[i], b1, vdup_n_s16(a[i][2 * t + 1] as i16));
+                }
+            }
+            store4::<M>(accp, &vacc);
+        }
+        if k % 2 == 1 {
+            tail_step::<M, N>(k - 1, k - 1, a, bp, accp);
+        }
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn idx_mlal<const M: usize, const N: usize>(
+    idx: &[usize],
+    a: &[&[i8]; M],
+    panel: &[i8],
+    acc: &mut [[i32; N]; M],
+) {
+    let bp = panel.as_ptr();
+    let accp = acc as *mut _ as *mut i32;
+    let r = idx.len();
+    unsafe {
+        if N == 8 {
+            let mut acc0 = [vdupq_n_s32(0); M];
+            let mut acc1 = [vdupq_n_s32(0); M];
+            for t in 0..r / 2 {
+                let b0 = vmovl_s8(vld1_s8(bp.add(idx[2 * t] * 8)));
+                let b1 = vmovl_s8(vld1_s8(bp.add(idx[2 * t + 1] * 8)));
+                for i in 0..M {
+                    let lo = vdup_n_s16(a[i][2 * t] as i16);
+                    let hi = vdup_n_s16(a[i][2 * t + 1] as i16);
+                    acc0[i] = vmlal_s16(acc0[i], vget_low_s16(b0), lo);
+                    acc1[i] = vmlal_s16(acc1[i], vget_high_s16(b0), lo);
+                    acc0[i] = vmlal_s16(acc0[i], vget_low_s16(b1), hi);
+                    acc1[i] = vmlal_s16(acc1[i], vget_high_s16(b1), hi);
+                }
+            }
+            store8::<M>(accp, &acc0, &acc1);
+        } else {
+            let mut vacc = [vdupq_n_s32(0); M];
+            for t in 0..r / 2 {
+                let w0 = (bp.add(idx[2 * t] * 4) as *const u32).read_unaligned();
+                let w1 = (bp.add(idx[2 * t + 1] * 4) as *const u32).read_unaligned();
+                let b0 = vget_low_s16(vmovl_s8(vcreate_s8(w0 as u64)));
+                let b1 = vget_low_s16(vmovl_s8(vcreate_s8(w1 as u64)));
+                for i in 0..M {
+                    vacc[i] = vmlal_s16(vacc[i], b0, vdup_n_s16(a[i][2 * t] as i16));
+                    vacc[i] = vmlal_s16(vacc[i], b1, vdup_n_s16(a[i][2 * t + 1] as i16));
+                }
+            }
+            store4::<M>(accp, &vacc);
+        }
+        if r % 2 == 1 {
+            let t = r - 1;
+            tail_step::<M, N>(t, idx[t], a, bp, accp);
+        }
+    }
+}
+
+/// Accumulate the vector accumulators into the caller's `acc` rows
+/// (N = 8: two i32x4 halves per row).
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn store8<const M: usize>(accp: *mut i32, acc0: &[int32x4_t; M], acc1: &[int32x4_t; M]) {
+    unsafe {
+        for i in 0..M {
+            let p0 = accp.add(i * 8);
+            vst1q_s32(p0, vaddq_s32(vld1q_s32(p0), acc0[i]));
+            let p1 = accp.add(i * 8 + 4);
+            vst1q_s32(p1, vaddq_s32(vld1q_s32(p1), acc1[i]));
+        }
+    }
+}
+
+/// Accumulate the vector accumulators into the caller's `acc` rows (N = 4).
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn store4<const M: usize>(accp: *mut i32, vacc: &[int32x4_t; M]) {
+    unsafe {
+        for i in 0..M {
+            let p = accp.add(i * 4);
+            vst1q_s32(p, vaddq_s32(vld1q_s32(p), vacc[i]));
+        }
+    }
+}
+
+// K / index scalar tails: `super::tail_step` (shared with AVX2).

@@ -139,7 +139,10 @@ pub struct Parsed {
 
 impl Parsed {
     pub fn get(&self, key: &str) -> &str {
-        self.values.get(key).map(|s| s.as_str()).unwrap_or_else(|| panic!("undeclared option {key}"))
+        self.values
+            .get(key)
+            .map(|s| s.as_str())
+            .unwrap_or_else(|| panic!("undeclared option {key}"))
     }
 
     pub fn get_usize(&self, key: &str) -> Result<usize> {

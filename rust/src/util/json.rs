@@ -117,8 +117,11 @@ impl<'a> Parser<'a> {
 
     fn number(&mut self) -> Result<Json> {
         let start = self.pos;
-        while matches!(self.peek(), Some(c) if c == b'-' || c == b'+' || c == b'.' || c == b'e' || c == b'E' || c.is_ascii_digit())
-        {
+        while matches!(
+            self.peek(),
+            Some(c) if c == b'-' || c == b'+' || c == b'.' || c == b'e' || c == b'E'
+                || c.is_ascii_digit()
+        ) {
             self.pos += 1;
         }
         let s = std::str::from_utf8(&self.bytes[start..self.pos])?;

@@ -155,7 +155,11 @@ fn json_deep_nesting_ok_but_garbage_rejected() {
 
 #[test]
 fn tensor_u8_not_executable_input() {
-    let t = HostTensor { dtype: muxq::data::tensors::DType::U8, dims: vec![4], data: vec![1, 2, 3, 4] };
+    let t = HostTensor {
+        dtype: muxq::data::tensors::DType::U8,
+        dims: vec![4],
+        data: vec![1, 2, 3, 4],
+    };
     assert!(t.to_literal().is_err());
 }
 

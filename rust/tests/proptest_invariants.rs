@@ -15,6 +15,7 @@ use muxq::quant::packed::{
     matmul_i8_gemv_into, matmul_i8_packed_kernel_into, matmul_i8_packed_with,
     matmul_i8_rows_subset_into, Kernel, PackedMatI8, ParallelGemm,
 };
+use muxq::quant::simd;
 use muxq::quant::{gemm, MatF32};
 use muxq::util::proptest::{prop, prop_assert, Gen};
 use std::sync::mpsc;
@@ -118,7 +119,8 @@ fn prop_scales_positive_and_finite() {
     prop("scales positive/finite incl. zero matrices", |g| {
         let rows = g.usize(1, 16);
         let cols = g.usize(1, 16);
-        let data = if g.bool() { vec![0.0; rows * cols] } else { g.vec_f32(rows * cols, -1.0, 1.0) };
+        let data =
+            if g.bool() { vec![0.0; rows * cols] } else { g.vec_f32(rows * cols, -1.0, 1.0) };
         let x = MatF32::from_vec(rows, cols, data).unwrap();
         for gran in [Granularity::PerTensor, Granularity::PerRow, Granularity::PerCol] {
             let s = Scales::compute(&x, 127.0, gran);
@@ -297,7 +299,8 @@ fn pair_accum_exact_on_ragged_shape_families() {
     ];
     for (fi, family) in families.iter().enumerate() {
         for &(m, k, n) in family.iter() {
-            let mut rng = muxq::data::prng::SplitMix64::new((fi * 7919 + m * 131 + k * 17 + n) as u64);
+            let mut rng =
+                muxq::data::prng::SplitMix64::new((fi * 7919 + m * 131 + k * 17 + n) as u64);
             let mut a = MatI8::zeros(m, k);
             let mut b = MatI8::zeros(k, n);
             for v in a.data.iter_mut().chain(b.data.iter_mut()) {
@@ -317,6 +320,132 @@ fn pair_accum_exact_on_ragged_shape_families() {
                         mr,
                     );
                     assert_eq!(c.data, want.data, "family {fi} {m}x{k}x{n} tile {mr}x{nr}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_simd_kernels_bit_exact_vs_scalar_oracles() {
+    // the per-arch SIMD kernels (AVX2 pmaddwd / NEON sdot-smlal) vs the
+    // naive triple loop AND the scalar kernels, across random ragged
+    // shapes, the full register-tile grid, and −128-laden B operands —
+    // the corner the scalar pair kernel must dodge, which the SIMD
+    // kernels (i32 pair/quad sums) must survive bit-exactly. On hosts
+    // without a SIMD kernel there is nothing to pin (the CI matrix runs
+    // this on x86-64 AND arm64, so both SIMD paths are exercised).
+    if simd::host_simd().is_none() {
+        return;
+    }
+    prop("simd i8 GEMM == scalar oracles", |g| {
+        let m = g.usize(1, 40);
+        let k = g.usize(1, 48);
+        let n = g.usize(1, 40);
+        let a = gen_i8(g, m, k);
+        let mut b = gen_i8(g, k, n);
+        if g.bool() {
+            // −128 corner: scatter a few true minimums into B
+            for _ in 0..g.usize(1, 4) {
+                let at = g.usize(0, b.data.len() - 1);
+                b.data[at] = i8::MIN;
+            }
+        }
+        let want = matmul_i8_triple(&a, &b);
+        let nr = *g.choice(&[4usize, 8]);
+        let mr = *g.choice(&[4usize, 8]);
+        let bp = PackedMatI8::pack_with(&b, nr);
+        let mut c = MatI32::zeros(0, 0);
+        matmul_i8_packed_kernel_into(&a, &bp, &mut c, ParallelGemm::sequential(), Kernel::Simd, mr);
+        prop_assert(c.data == want.data, format!("simd {m}x{k}x{n} tile {mr}x{nr}"))?;
+        // the wide-i32 oracle through the same packed layout agrees too
+        let mut w = MatI32::zeros(0, 0);
+        matmul_i8_packed_kernel_into(
+            &a,
+            &bp,
+            &mut w,
+            ParallelGemm::sequential(),
+            Kernel::WideI32,
+            mr,
+        );
+        prop_assert(c.data == w.data, format!("simd vs wide {m}x{k}x{n}"))?;
+        // ... and vs the scalar pair kernel where it is eligible
+        if !bp.has_neg128() {
+            let mut p = MatI32::zeros(0, 0);
+            matmul_i8_packed_kernel_into(
+                &a,
+                &bp,
+                &mut p,
+                ParallelGemm::sequential(),
+                Kernel::PairI16,
+                mr,
+            );
+            prop_assert(c.data == p.data, format!("simd vs pair {m}x{k}x{n}"))?;
+        }
+        // SIMD GEMV (the decode path: 1-row instances of the kernels)
+        let mut gv = MatI32::zeros(0, 0);
+        matmul_i8_gemv_into(&a, &bp, &mut gv, Kernel::Simd);
+        prop_assert(gv.data == want.data, format!("simd gemv {m}x{k}x{n}"))?;
+        // rows-subset (Aux) through whatever Auto resolves under the
+        // current env, pinned against the explicit gather
+        let r = g.usize(1, k.min(8));
+        let idx: Vec<usize> = (0..r).map(|_| g.usize(0, k - 1)).collect();
+        let ac = gen_i8(g, m, r);
+        let mut got = MatI32::zeros(0, 0);
+        matmul_i8_rows_subset_into(&ac, &bp, &idx, &mut got, ParallelGemm::sequential());
+        let mut gathered = MatI8::zeros(r, n);
+        for (t, &row) in idx.iter().enumerate() {
+            gathered.data[t * n..(t + 1) * n].copy_from_slice(b.row(row));
+        }
+        let want_aux = matmul_i8_triple(&ac, &gathered);
+        prop_assert(got.data == want_aux.data, format!("subset m {m} r {r} nr {nr}"))
+    });
+}
+
+#[test]
+fn simd_exact_on_ragged_shape_families_full_tile_grid() {
+    // the deterministic twin of the pair-kernel family test: odd K (the
+    // quad/pair tails), tiny K (degenerate contractions), M/N straddling
+    // every tile boundary — every (mr, nr) combination through the
+    // explicit SIMD kernel, plus the all-(−128) worst case per shape
+    if simd::host_simd().is_none() {
+        return;
+    }
+    let families: [&[(usize, usize, usize)]; 3] = [
+        &[(4, 1, 4), (8, 3, 8), (5, 7, 9), (16, 65, 16), (6, 129, 10)], // odd K
+        &[(1, 1, 1), (2, 2, 3), (9, 2, 7), (12, 4, 5)],                 // tiny K
+        &[(3, 8, 5), (7, 16, 11), (9, 10, 13), (17, 12, 15)],           // M/N tails
+    ];
+    for (fi, family) in families.iter().enumerate() {
+        for &(m, k, n) in family.iter() {
+            let mut rng =
+                muxq::data::prng::SplitMix64::new((fi * 7919 + m * 131 + k * 17 + n) as u64);
+            let mut a = MatI8::zeros(m, k);
+            let mut b = MatI8::zeros(k, n);
+            for v in a.data.iter_mut().chain(b.data.iter_mut()) {
+                *v = (rng.next_below(255) as i32 - 127) as i8;
+            }
+            let mut b_min = MatI8::zeros(k, n);
+            b_min.data.iter_mut().for_each(|v| *v = i8::MIN);
+            for (tag, bmat) in [("rand", &b), ("neg128", &b_min)] {
+                let want = matmul_i8_triple(&a, bmat);
+                for nr in [4usize, 8] {
+                    let bp = PackedMatI8::pack_with(bmat, nr);
+                    for mr in [4usize, 8] {
+                        let mut c = MatI32::zeros(0, 0);
+                        matmul_i8_packed_kernel_into(
+                            &a,
+                            &bp,
+                            &mut c,
+                            ParallelGemm::sequential(),
+                            Kernel::Simd,
+                            mr,
+                        );
+                        assert_eq!(
+                            c.data, want.data,
+                            "family {fi} {tag} {m}x{k}x{n} tile {mr}x{nr}"
+                        );
+                    }
                 }
             }
         }
