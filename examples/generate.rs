@@ -15,14 +15,24 @@
 //! oracle replay is greedy-only; sampled runs check seed replay
 //! instead.)
 //!
+//! `--spec` additionally decodes each variant through draft-and-verify
+//! speculation (`gpt2::speculative`) and, in greedy mode, asserts the
+//! speculative stream equals the plain stream over the wrap-free prefix
+//! — the losslessness claim, checked live.
+//!
 //!     cargo run --release --example generate
 //!     cargo run --release --example generate -- --method muxq-pv --steps 48
 //!     cargo run --release --example generate -- --temperature 0.9 --top-k 40 --seed 7
+//!     cargo run --release --example generate -- --top-p 0.92 --rep-penalty 1.3
+//!     cargo run --release --example generate -- --spec --spec-k 3 --draft trunc2
 //!     cargo run --release --example generate -- --no-check
 
 use anyhow::Result;
 use muxq::data::bpe::Bpe;
-use muxq::gpt2::{DecodeSession, Gpt2Model, QuantizedGpt2, Sampler, WrapPolicy};
+use muxq::gpt2::{
+    DecodeSession, DraftKind, Gpt2Model, QuantizedGpt2, Sampler, SessionModel,
+    SpeculativeSession, WrapPolicy,
+};
 use muxq::quant::EngineSpec;
 use muxq::util::cli::Cli;
 use std::time::Instant;
@@ -39,7 +49,7 @@ fn generate_session(
     let logits = sess.prefill(prompt)?;
     let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
     let mut out = Vec::with_capacity(steps);
-    let mut next = sampler.sample(&logits);
+    let mut next = sampler.sample_in_context(&logits, sess.state.window());
     let mut half_ms = [0.0f64; 2];
     let half = steps.div_ceil(2).max(1);
     for i in 0..steps {
@@ -50,7 +60,7 @@ fn generate_session(
         let t = Instant::now();
         let logits = sess.decode_step(next)?;
         half_ms[i / half] += t.elapsed().as_secs_f64() * 1e3;
-        next = sampler.sample(&logits);
+        next = sampler.sample_in_context(&logits, sess.state.window());
     }
     let first = half_ms[0] / half.min(steps.saturating_sub(1)).max(1) as f64;
     let second = half_ms[1] / steps.saturating_sub(1 + half).max(1) as f64;
@@ -96,7 +106,12 @@ fn main() -> Result<()> {
         )
         .opt("temperature", "0", "softmax temperature (0 = greedy)")
         .opt("top-k", "0", "sample among the k best logits (0 = all)")
+        .opt("top-p", "1", "nucleus cutoff (1 = disabled)")
+        .opt("rep-penalty", "1", "repetition penalty on seen tokens (1 = disabled)")
         .opt("seed", "0", "sampling seed (replayable streams)")
+        .flag("spec", "also decode speculatively (draft-and-verify)")
+        .opt("spec-k", "3", "drafts per speculative round")
+        .opt("draft", "naive-int8", "draft model: naive-int8 | trunc<N>")
         .flag("no-check", "skip the full-forward oracle replay")
         .parse(&args)?;
     let steps = p.get_usize("steps")?;
@@ -104,11 +119,21 @@ fn main() -> Result<()> {
     let method = p.get("method").to_string();
     let temperature = p.get_f64("temperature")? as f32;
     let top_k = p.get_usize("top-k")?;
+    let top_p = p.get_f64("top-p")? as f32;
+    let rep_penalty = p.get_f64("rep-penalty")? as f32;
     let seed = p.get_usize("seed")? as u64;
+    let spec = p.flag("spec");
+    let spec_k = p.get_usize("spec-k")?;
+    let draft_kind = DraftKind::parse(p.get("draft"))?;
     let check = !p.flag("no-check");
+    let sampler_for = || {
+        Sampler::new(temperature, top_k, seed)
+            .with_top_p(top_p)
+            .with_repetition_penalty(rep_penalty)
+    };
     // let the Sampler define degeneracy (T <= 0 OR top-k == 1), so a
     // run that decodes greedily always gets the real oracle replay
-    let greedy = Sampler::new(temperature, top_k, seed).is_greedy();
+    let greedy = sampler_for().is_greedy();
 
     let artifacts = muxq::artifacts_dir();
     let (fp, bpe) = match Gpt2Model::load_from_artifacts(p.get("model")) {
@@ -131,7 +156,9 @@ fn main() -> Result<()> {
         if greedy {
             "greedy".to_string()
         } else {
-            format!("T={temperature} top-k={top_k} seed={seed}")
+            format!(
+                "T={temperature} top-k={top_k} top-p={top_p} rp={rep_penalty} seed={seed}"
+            )
         }
     );
 
@@ -153,11 +180,7 @@ fn main() -> Result<()> {
             None => fp.session(WrapPolicy::default()),
             Some(qq) => qq.session(WrapPolicy::default()),
         };
-        let mut sampler = if greedy {
-            Sampler::greedy()
-        } else {
-            Sampler::new(temperature, top_k, seed)
-        };
+        let mut sampler = sampler_for();
         let (tokens, prefill_ms, first_ms, second_ms) =
             generate_session(&mut sess, &mut sampler, &prompt, steps)?;
         println!("--- {name} (ia_bits {ia_bits}) ---");
@@ -174,7 +197,7 @@ fn main() -> Result<()> {
             }
             None => println!("tokens: {tokens:?}"),
         }
-        if check && greedy {
+        if check && greedy && rep_penalty == 1.0 {
             // oracle comparison only while the context fits n_ctx (past
             // that the oracle itself cannot run in one forward)
             let oracle_steps =
@@ -193,15 +216,48 @@ fn main() -> Result<()> {
                 );
             }
         } else if check {
-            // sampled runs: the stream must replay exactly from its seed
+            // sampled / penalized runs: the stream must replay exactly
+            // from its seed and settings
             let mut sess2 = match &q {
                 None => fp.session(WrapPolicy::default()),
                 Some(qq) => qq.session(WrapPolicy::default()),
             };
-            let replay =
-                sess2.generate(&prompt, steps, &mut Sampler::new(temperature, top_k, seed))?;
+            let replay = sess2.generate(&prompt, steps, &mut sampler_for())?;
             assert_eq!(tokens, replay, "{name}: sampled stream failed to replay from its seed");
             println!("seed replay: {steps} sampled tokens identical \u{2713}");
+        }
+        if spec {
+            // the same variant again, through draft-and-verify
+            let smodel = match &q {
+                None => SessionModel::Fp(&fp),
+                Some(qq) => SessionModel::Int(qq),
+            };
+            let mut ss =
+                SpeculativeSession::new(smodel, draft_kind, spec_k, WrapPolicy::default())?;
+            let mut smp = sampler_for();
+            let t0 = Instant::now();
+            let spec_tokens = ss.generate(&prompt, steps, &mut smp)?;
+            let ms_per_tok = t0.elapsed().as_secs_f64() * 1e3 / steps.max(1) as f64;
+            println!(
+                "spec[k={spec_k} draft={}] {ms_per_tok:.3}ms/tok   accept-rate {:.2}   \
+                 tokens/round {:.2}",
+                draft_kind.tag(),
+                ss.state.accept_rate(),
+                ss.state.tokens_per_round(),
+            );
+            if check && greedy {
+                // lossless while BOTH schedules stay wrap-free:
+                // prompt + steps + k must fit inside n_ctx
+                let lossless = steps.min(
+                    fp.cfg.n_ctx.saturating_sub(spec_k).saturating_sub(prompt.len()),
+                );
+                assert_eq!(
+                    &spec_tokens[..lossless],
+                    &tokens[..lossless],
+                    "{name}: speculative greedy diverged from plain greedy"
+                );
+                println!("spec lossless: first {lossless} tokens == plain greedy \u{2713}");
+            }
         }
         println!();
     }

@@ -5,7 +5,9 @@
 //! quantize-compute-dequant pipelines of each method, end-to-end
 //! `nll_per_seq` throughput through the true-INT pipeline, and
 //! incremental decode tokens/s through the KV-cache session API
-//! (`decode_tok_s` — the latency-bound serving number).
+//! (`decode_tok_s` — the latency-bound serving number), and speculative
+//! draft-and-verify decode (`decode_tok_s_spec`, with its acceptance
+//! rate and tokens-per-round).
 //! (The NPU projection lives in bench_npusim / npu_latency.)
 //!
 //! Run: `cargo bench --bench bench_gemm`. Writes the perf-trajectory
@@ -14,7 +16,11 @@
 //! rust/scripts/ci_check.sh).
 
 use muxq::data::prng::SplitMix64;
-use muxq::gpt2::{argmax, Gpt2Model, QuantizedGpt2, WrapPolicy};
+use muxq::gpt2::speculative::DRAFT_SEED_SALT;
+use muxq::gpt2::{
+    argmax, DraftKind, DraftModel, Gpt2Model, QuantizedGpt2, Sampler, SessionModel,
+    SpeculativeState, WrapPolicy,
+};
 use muxq::quant::EngineSpec;
 use muxq::quant::gemm::{matmul_f32, quant_matmul};
 use muxq::quant::llmint8::llmint8_matmul;
@@ -347,6 +353,35 @@ fn main() {
         decode_tok_s[0], decode_tok_s[1], decode_tok_s[2], full_tok_s
     );
 
+    // ---- speculative decode tokens/s (draft-and-verify) ----
+    // steady-state rounds over the SAME muxq backend: a trunc-1 draft
+    // proposes k=3 tokens, the target verifies them in one skinny
+    // batched forward. tokens/s = tokens-per-round x rounds/s; greedy
+    // acceptance, so the emitted stream equals plain decode.
+    Bencher::header("speculative decode (muxq target, trunc1 draft, k=3)");
+    let fp_spec = Gpt2Model::test_model(2, 128, 2, 64, 128, 7);
+    let q_spec = QuantizedGpt2::new(fp_spec, EngineSpec::muxq());
+    let sm_spec = SessionModel::Int(&q_spec);
+    let draft = DraftModel::build(&q_spec.fp, DraftKind::TruncateLayers(1)).unwrap();
+    let mut spec_st =
+        SpeculativeState::new(&q_spec.fp.cfg, draft.cfg(), 3, WrapPolicy::default()).unwrap();
+    let mut smp = Sampler::greedy();
+    let mut dsm = smp.fork(DRAFT_SEED_SALT);
+    let mut next = argmax(&spec_st.prefill(sm_spec, draft.session_model(), &prompt).unwrap());
+    let round_stats = b.bench("spec_round/muxq-k3-trunc1", || {
+        let toks = spec_st.round(sm_spec, draft.session_model(), next, &mut smp, &mut dsm).unwrap();
+        next = *toks.last().unwrap();
+        toks.len()
+    });
+    let spec_accept_rate = spec_st.accept_rate();
+    let spec_tokens_per_round = spec_st.tokens_per_round();
+    let decode_tok_s_spec = spec_tokens_per_round * round_stats.per_sec();
+    println!(
+        "\nspec decode {decode_tok_s_spec:.0} tok/s ({:.2}x vs plain muxq decode)   \
+         accept-rate {spec_accept_rate:.2}   tokens/round {spec_tokens_per_round:.2}",
+        decode_tok_s_spec / decode_tok_s[1]
+    );
+
     // ---- perf-trajectory record ----
     // packed_*_ms track the auto-routed engine (dispatch-selected
     // kernel + tile); wide44_1t_ms pins the PR-1 comparator so the
@@ -362,7 +397,7 @@ fn main() {
         None => ("null".to_string(), "null".to_string(), "null".to_string()),
     };
     let json = format!(
-        "{{\n  \"bench\": \"bench_gemm\",\n  \"bootstrap\": false,\n  \"shape\": [{gm}, {gk}, {gn}],\n  \"dispatch_kernel\": \"{}\",\n  \"seed_i8_ms\": {seed_ms:.4},\n  \"packed_1t_ms\": {:.4},\n  \"packed_2t_ms\": {:.4},\n  \"packed_4t_ms\": {:.4},\n  \"speedup_vs_seed_1t\": {:.3},\n  \"scaling_1t_to_4t\": {:.3},\n  \"gops_packed_1t\": {:.3},\n  \"pair_best_ms\": {pair_best_ms:.4},\n  \"pair_best_tile\": \"{best_mr}x{best_nr}\",\n  \"wide44_1t_ms\": {wide44_ms:.4},\n  \"pair_vs_wide44\": {:.3},\n  \"simd_best_ms\": {simd_best_ms_s},\n  \"simd_best_tile\": {simd_best_tile_s},\n  \"simd_vs_pair\": {simd_vs_pair_s},\n  \"gemv_m1_us\": {gemv_m1_us:.2},\n  \"gemv_vs_cascade_m1\": {gemv_vs_cascade_m1:.3},\n  \"e2e_naive_tok_per_s\": {:.1},\n  \"e2e_muxq_tok_per_s\": {:.1},\n  \"decode_tok_s_fp\": {:.1},\n  \"decode_tok_s\": {:.1},\n  \"decode_tok_s_llmint8\": {:.1},\n  \"full_forward_tok_s\": {full_tok_s:.1},\n  \"decode_vs_full_speedup\": {decode_vs_full:.2}\n}}\n",
+        "{{\n  \"bench\": \"bench_gemm\",\n  \"bootstrap\": false,\n  \"shape\": [{gm}, {gk}, {gn}],\n  \"dispatch_kernel\": \"{}\",\n  \"seed_i8_ms\": {seed_ms:.4},\n  \"packed_1t_ms\": {:.4},\n  \"packed_2t_ms\": {:.4},\n  \"packed_4t_ms\": {:.4},\n  \"speedup_vs_seed_1t\": {:.3},\n  \"scaling_1t_to_4t\": {:.3},\n  \"gops_packed_1t\": {:.3},\n  \"pair_best_ms\": {pair_best_ms:.4},\n  \"pair_best_tile\": \"{best_mr}x{best_nr}\",\n  \"wide44_1t_ms\": {wide44_ms:.4},\n  \"pair_vs_wide44\": {:.3},\n  \"simd_best_ms\": {simd_best_ms_s},\n  \"simd_best_tile\": {simd_best_tile_s},\n  \"simd_vs_pair\": {simd_vs_pair_s},\n  \"gemv_m1_us\": {gemv_m1_us:.2},\n  \"gemv_vs_cascade_m1\": {gemv_vs_cascade_m1:.3},\n  \"e2e_naive_tok_per_s\": {:.1},\n  \"e2e_muxq_tok_per_s\": {:.1},\n  \"decode_tok_s_fp\": {:.1},\n  \"decode_tok_s\": {:.1},\n  \"decode_tok_s_llmint8\": {:.1},\n  \"decode_tok_s_spec\": {decode_tok_s_spec:.1},\n  \"spec_accept_rate\": {spec_accept_rate:.3},\n  \"spec_tokens_per_round\": {spec_tokens_per_round:.3},\n  \"full_forward_tok_s\": {full_tok_s:.1},\n  \"decode_vs_full_speedup\": {decode_vs_full:.2}\n}}\n",
         dispatch.name(),
         per_thread_ms[0].1,
         per_thread_ms[1].1,

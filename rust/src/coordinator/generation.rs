@@ -6,8 +6,9 @@
 //!    ──> DecodeQueue ──> decode scheduler (one thread, owns the model):
 //!          loop {
 //!            admit new sessions while slots free (PREFILL, between steps)
-//!            decode_step_batch over ALL live sessions   <- ONE skinny GEMM
-//!            per session: sample (greedy/temperature/top-k) -> stream
+//!            decode_step_batch over the PLAIN live sessions <- ONE skinny GEMM
+//!            one draft-and-verify round per SPECULATIVE session
+//!            per session: sample (greedy/temperature/top-k/top-p) -> stream
 //!            TokenEvent, retire at budget
 //!          }
 //! ```
@@ -20,6 +21,15 @@
 //! GEMM returns per-session logits bit-identical to stepping each alone:
 //! continuous batching changes throughput, never results.
 //!
+//! Requests carrying a [`super::request::SpeculativeConfig`] are served
+//! through [`SpeculativeState`] instead: the scheduler lazily builds one
+//! [`DraftModel`] per requested [`DraftKind`] (shared by every session
+//! asking for it) and runs one draft-and-verify round per tick, emitting
+//! the round's `a + 1` tokens onto the stream. Greedy speculative
+//! streams are bit-identical to plain greedy serving (`gpt2::speculative`
+//! losslessness), and the server reports acceptance-rate /
+//! tokens-per-round under `spec_*` stats.
+//!
 //! Contrast with the scoring plane (`scheduler`): scoring coalesces
 //! one-shot fixed-shape requests and runs them on compiled PJRT
 //! variants; generation holds stateful sessions over the native packed
@@ -28,7 +38,9 @@
 use super::batcher::{AdmitError, DecodePop, DecodeQueue};
 use super::request::{FinishReason, GenerateHandle, GenerateRequest, PendingGen, TokenEvent};
 use crate::gpt2::session::{decode_step_batch, Sampler, SessionModel, SessionState, WrapPolicy};
+use crate::gpt2::speculative::{DraftKind, DraftModel, SpeculativeState, DRAFT_SEED_SALT};
 use crate::gpt2::{Gpt2Model, QuantizedGpt2};
+use crate::quant::MatF32;
 use crate::util::metrics::Registry;
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -108,6 +120,12 @@ pub struct GenerationStats {
     pub prefills: u64,
     /// prompts longer than n_ctx, truncated at admission
     pub prompts_truncated: u64,
+    /// draft-and-verify rounds run across all speculative sessions
+    pub spec_rounds: u64,
+    /// draft tokens proposed (k per round)
+    pub spec_drafted: u64,
+    /// draft tokens the target accepted
+    pub spec_accepted: u64,
     pub queued_now: usize,
 }
 
@@ -120,11 +138,44 @@ impl GenerationStats {
         }
         self.decode_rows as f64 / self.decode_batches as f64
     }
+
+    /// Fraction of drafted tokens the target accepted, across every
+    /// speculative session served.
+    pub fn spec_accept_rate(&self) -> f64 {
+        if self.spec_drafted == 0 {
+            return 0.0;
+        }
+        self.spec_accepted as f64 / self.spec_drafted as f64
+    }
+
+    /// Mean tokens emitted per speculative round (accepted + the
+    /// correction/bonus token); plain sequential decode is 1.0.
+    pub fn spec_tokens_per_round(&self) -> f64 {
+        if self.spec_rounds == 0 {
+            return 0.0;
+        }
+        (self.spec_accepted + self.spec_rounds) as f64 / self.spec_rounds as f64
+    }
+}
+
+/// How a live session decodes: plain sessions coalesce into one skinny
+/// batched step per tick; speculative sessions run one draft-and-verify
+/// round per tick against a scheduler-owned shared [`DraftModel`].
+enum LiveKind {
+    Plain(SessionState),
+    Spec {
+        spec: SpeculativeState,
+        /// index into the scheduler's draft-model cache
+        draft_idx: usize,
+        /// the draft's own decorrelated sampling stream
+        /// ([`DRAFT_SEED_SALT`] fork of the request sampler)
+        draft_sampler: Sampler,
+    },
 }
 
 /// One live session inside the scheduler.
 struct Live {
-    state: SessionState,
+    kind: LiveKind,
     /// this request's token selector (greedy or seeded sampling) —
     /// per-session state, so coalescing never couples streams
     sampler: Sampler,
@@ -138,6 +189,20 @@ struct Live {
     prefills_seen: u64,
     tx: mpsc::Sender<TokenEvent>,
     t0: Instant,
+}
+
+impl Live {
+    /// Prefill passes this session has run so far (target + draft for
+    /// speculative sessions) — the scheduler harvests the delta into the
+    /// metrics registry after each tick.
+    fn prefill_count(&self) -> u64 {
+        match &self.kind {
+            LiveKind::Plain(s) => s.prefills(),
+            LiveKind::Spec { spec, .. } => {
+                spec.target_state().prefills() + spec.draft_state().prefills()
+            }
+        }
+    }
 }
 
 /// The generation server: spawn with [`GenerationServer::start`], feed
@@ -220,6 +285,9 @@ impl GenerationServer {
             decode_rows: c("decode_rows"),
             prefills: c("prefills"),
             prompts_truncated: c("prompts_truncated"),
+            spec_rounds: c("spec_rounds"),
+            spec_drafted: c("spec_drafted"),
+            spec_accepted: c("spec_accepted"),
             queued_now: self.queue.queued(),
         }
     }
@@ -254,12 +322,17 @@ fn scheduler_loop(
 ) {
     let sm = backend.session_model();
     let mut live: Vec<Live> = Vec::new();
+    // one draft model per kind, built lazily at first admission and
+    // shared by every speculative session that asks for that kind
+    let mut drafts: Vec<(DraftKind, DraftModel)> = Vec::new();
     let mut draining = false;
     loop {
         // ---- admission: prefill new sessions between decode steps
         while !draining && live.len() < cfg.max_live {
             match queue.pop(live.is_empty()) {
-                DecodePop::Req(p) => admit(sm, &cfg, &metrics, p, &mut live),
+                DecodePop::Req(p) => {
+                    admit(&backend, &cfg, &metrics, p, &mut live, &mut drafts)
+                }
                 DecodePop::Empty => break,
                 DecodePop::Shutdown => draining = true,
             }
@@ -287,66 +360,112 @@ fn scheduler_loop(
             continue; // next admission pop blocks until work or shutdown
         }
 
-        // ---- one coalesced decode step over every live session
-        let tokens: Vec<u32> = live.iter().map(|l| l.next).collect();
-        let step = {
-            let mut refs: Vec<&mut SessionState> =
-                live.iter_mut().map(|l| &mut l.state).collect();
-            decode_step_batch(sm, &mut refs, &tokens)
-        };
-        match step {
-            Ok(logits) => {
-                metrics.counter("decode_batches").inc();
-                metrics.counter("decode_rows").add(live.len() as u64);
-                let mut keep = Vec::with_capacity(live.len());
-                for (gi, mut l) in live.drain(..).enumerate() {
-                    // harvest wrap re-prefills performed inside this step
-                    let p = l.state.prefills();
-                    if p > l.prefills_seen {
-                        metrics.counter("prefills").add(p - l.prefills_seen);
-                        l.prefills_seen = p;
-                    }
-                    let next = l.sampler.sample(logits.row(gi));
-                    l.produced += 1;
-                    metrics.counter("tokens_generated").inc();
-                    if l.tx.send(TokenEvent::Token { index: l.produced - 1, token: next }).is_err()
-                    {
-                        // client dropped the handle: cancel the session
-                        metrics.counter("cancelled").inc();
-                        continue;
-                    }
-                    if l.produced >= l.budget {
-                        metrics.counter("completed").inc();
-                        let _ = l.tx.send(TokenEvent::Done {
-                            reason: FinishReason::MaxTokens,
-                            generated: l.produced,
-                            latency: l.t0.elapsed(),
-                        });
-                        continue;
-                    }
-                    l.next = next;
-                    keep.push(l);
+        // ---- one tick: coalesce the plain sessions into one skinny
+        // batched step; speculative sessions each run one round below
+        let mut plain_logits: Option<MatF32> = None;
+        let mut plain_err: Option<String> = None;
+        {
+            let mut tokens: Vec<u32> = Vec::new();
+            let mut refs: Vec<&mut SessionState> = Vec::new();
+            for l in live.iter_mut() {
+                if let LiveKind::Plain(s) = &mut l.kind {
+                    tokens.push(l.next);
+                    refs.push(s);
                 }
-                live = keep;
             }
-            Err(e) => {
-                // a failed step poisons every coalesced session equally
-                metrics.counter("decode_errors").inc();
-                for l in live.drain(..) {
-                    let _ = l.tx.send(TokenEvent::Error(format!("decode step failed: {e:#}")));
+            if !refs.is_empty() {
+                metrics.counter("decode_batches").inc();
+                metrics.counter("decode_rows").add(refs.len() as u64);
+                match decode_step_batch(sm, &mut refs, &tokens) {
+                    Ok(l) => plain_logits = Some(l),
+                    Err(e) => {
+                        // a failed step poisons every coalesced session equally
+                        metrics.counter("decode_errors").inc();
+                        plain_err = Some(format!("{e:#}"));
+                    }
                 }
             }
         }
+        let mut keep = Vec::with_capacity(live.len());
+        let mut row = 0; // this session's row in the coalesced logits
+        for mut l in live.drain(..) {
+            let emitted: Vec<u32> = match &mut l.kind {
+                LiveKind::Plain(s) => {
+                    let gi = row;
+                    row += 1;
+                    if let Some(e) = &plain_err {
+                        let _ =
+                            l.tx.send(TokenEvent::Error(format!("decode step failed: {e}")));
+                        continue;
+                    }
+                    let logits = plain_logits.as_ref().expect("step ran").row(gi);
+                    vec![l.sampler.sample_in_context(logits, s.window())]
+                }
+                LiveKind::Spec { spec, draft_idx, draft_sampler } => {
+                    let dm = &drafts[*draft_idx].1;
+                    let k = spec.k;
+                    match spec.round(sm, dm.session_model(), l.next, &mut l.sampler, draft_sampler)
+                    {
+                        Ok(toks) => {
+                            metrics.counter("spec_rounds").inc();
+                            metrics.counter("spec_drafted").add(k as u64);
+                            metrics.counter("spec_accepted").add(toks.len() as u64 - 1);
+                            toks
+                        }
+                        Err(e) => {
+                            metrics.counter("decode_errors").inc();
+                            let _ = l.tx
+                                .send(TokenEvent::Error(format!("spec round failed: {e:#}")));
+                            continue;
+                        }
+                    }
+                }
+            };
+            // harvest wrap re-prefills performed inside this tick
+            let p = l.prefill_count();
+            if p > l.prefills_seen {
+                metrics.counter("prefills").add(p - l.prefills_seen);
+                l.prefills_seen = p;
+            }
+            let mut retired = false;
+            for next in emitted {
+                l.produced += 1;
+                metrics.counter("tokens_generated").inc();
+                if l.tx.send(TokenEvent::Token { index: l.produced - 1, token: next }).is_err() {
+                    // client dropped the handle: cancel the session
+                    metrics.counter("cancelled").inc();
+                    retired = true;
+                    break;
+                }
+                if l.produced >= l.budget {
+                    metrics.counter("completed").inc();
+                    let _ = l.tx.send(TokenEvent::Done {
+                        reason: FinishReason::MaxTokens,
+                        generated: l.produced,
+                        latency: l.t0.elapsed(),
+                    });
+                    retired = true;
+                    break;
+                }
+                l.next = next;
+            }
+            if !retired {
+                keep.push(l);
+            }
+        }
+        live = keep;
     }
 }
 
 fn admit(
-    sm: SessionModel<'_>,
+    backend: &GenBackend,
     cfg: &GenerationConfig,
     metrics: &Registry,
     p: PendingGen,
     live: &mut Vec<Live>,
+    drafts: &mut Vec<(DraftKind, DraftModel)>,
 ) {
+    let sm = backend.session_model();
     let gcfg = &sm.gpt().cfg;
     let asked = if p.req.max_new_tokens == 0 {
         cfg.max_new_tokens
@@ -357,43 +476,84 @@ fn admit(
     if p.req.prompt.len() > gcfg.n_ctx {
         metrics.counter("prompts_truncated").inc();
     }
-    let mut state = SessionState::new(gcfg, cfg.wrap);
-    let mut sampler = p.req.sampler();
-    match state.prefill(sm, &p.req.prompt) {
-        Ok(logits) => {
-            metrics.counter("prefills").inc();
-            let first = sampler.sample(&logits);
-            metrics.counter("tokens_generated").inc();
-            if p.tx.send(TokenEvent::Token { index: 0, token: first }).is_err() {
-                metrics.counter("cancelled").inc();
-                return;
-            }
-            if budget == 1 {
-                metrics.counter("completed").inc();
-                let _ = p.tx.send(TokenEvent::Done {
-                    reason: FinishReason::MaxTokens,
-                    generated: 1,
-                    latency: p.submitted.elapsed(),
-                });
-                return;
-            }
-            live.push(Live {
-                prefills_seen: state.prefills(),
-                state,
-                sampler,
-                next: first,
-                produced: 1,
-                budget,
-                tx: p.tx,
-                t0: p.submitted,
-            });
-        }
-        Err(e) => {
-            // bad prompt (e.g. out-of-vocab token): fail just this stream
-            metrics.counter("admit_errors").inc();
-            let _ = p.tx.send(TokenEvent::Error(format!("prefill failed: {e:#}")));
-        }
+    // bad prompt / bad spec config: fail just this stream
+    fn admit_err(
+        metrics: &Registry,
+        tx: &mpsc::Sender<TokenEvent>,
+        e: anyhow::Error,
+        what: &str,
+    ) {
+        metrics.counter("admit_errors").inc();
+        let _ = tx.send(TokenEvent::Error(format!("{what} failed: {e:#}")));
     }
+    let mut sampler = p.req.sampler();
+
+    // ---- build the session (plain, or speculative over a shared draft)
+    let (kind, logits) = if let Some(sc) = p.req.speculative {
+        let draft_idx = match drafts.iter().position(|(dk, _)| *dk == sc.draft) {
+            Some(i) => i,
+            None => match DraftModel::build(backend.gpt(), sc.draft) {
+                Ok(d) => {
+                    drafts.push((sc.draft, d));
+                    drafts.len() - 1
+                }
+                Err(e) => return admit_err(metrics, &p.tx, e, "draft build"),
+            },
+        };
+        let dm = &drafts[draft_idx].1;
+        let mut spec = match SpeculativeState::new(gcfg, dm.cfg(), sc.k, cfg.wrap) {
+            Ok(s) => s,
+            Err(e) => return admit_err(metrics, &p.tx, e, "speculative admit"),
+        };
+        match spec.prefill(sm, dm.session_model(), &p.req.prompt) {
+            Ok(logits) => {
+                metrics.counter("prefills").add(2); // target + draft
+                let draft_sampler = sampler.fork(DRAFT_SEED_SALT);
+                (LiveKind::Spec { spec, draft_idx, draft_sampler }, logits)
+            }
+            Err(e) => return admit_err(metrics, &p.tx, e, "prefill"),
+        }
+    } else {
+        let mut state = SessionState::new(gcfg, cfg.wrap);
+        match state.prefill(sm, &p.req.prompt) {
+            Ok(logits) => {
+                metrics.counter("prefills").inc();
+                (LiveKind::Plain(state), logits)
+            }
+            Err(e) => return admit_err(metrics, &p.tx, e, "prefill"),
+        }
+    };
+
+    let window = match &kind {
+        LiveKind::Plain(s) => s.window(),
+        LiveKind::Spec { spec, .. } => spec.target_state().window(),
+    };
+    let first = sampler.sample_in_context(&logits, window);
+    metrics.counter("tokens_generated").inc();
+    if p.tx.send(TokenEvent::Token { index: 0, token: first }).is_err() {
+        metrics.counter("cancelled").inc();
+        return;
+    }
+    if budget == 1 {
+        metrics.counter("completed").inc();
+        let _ = p.tx.send(TokenEvent::Done {
+            reason: FinishReason::MaxTokens,
+            generated: 1,
+            latency: p.submitted.elapsed(),
+        });
+        return;
+    }
+    let l = Live {
+        prefills_seen: 0,
+        kind,
+        sampler,
+        next: first,
+        produced: 1,
+        budget,
+        tx: p.tx,
+        t0: p.submitted,
+    };
+    live.push(Live { prefills_seen: l.prefill_count(), ..l });
 }
 
 #[cfg(test)]
@@ -567,6 +727,118 @@ mod tests {
             }
         }
         assert!(saw_shutdown);
+    }
+
+    #[test]
+    fn speculative_streams_match_plain_greedy_served() {
+        // mixed batch: spec sessions (both draft kinds) and a plain
+        // session interleave on one server; every greedy spec stream
+        // must equal the plain greedy stream for the same prompt
+        // (budgets sized so neither schedule wraps: prompt+budget+k <= n_ctx)
+        use crate::gpt2::DraftKind;
+        let q = QuantizedGpt2::new(tiny(), EngineSpec::muxq());
+        let prompts = [toks(3, 11), toks(3, 12), toks(4, 13)];
+        let mut want = Vec::new();
+        for p in &prompts {
+            let mut s = q.session(WrapPolicy::default());
+            want.push(s.generate_greedy(p, 6).unwrap());
+        }
+        let srv = GenerationServer::start(
+            GenBackend::Int(QuantizedGpt2::new(tiny(), EngineSpec::muxq())),
+            GenerationConfig::default(),
+        );
+        let reqs = [
+            req(prompts[0].clone(), 6).with_speculative(2, DraftKind::NaiveInt8),
+            req(prompts[1].clone(), 6).with_speculative(2, DraftKind::TruncateLayers(1)),
+            req(prompts[2].clone(), 6), // plain, coalesced alongside
+        ];
+        let handles: Vec<_> = reqs.iter().map(|r| srv.submit(r.clone()).unwrap()).collect();
+        for (h, w) in handles.into_iter().zip(&want) {
+            assert_eq!(&h.collect_tokens().unwrap(), w);
+        }
+        let st = srv.stats();
+        assert_eq!(st.completed, 3);
+        assert!(st.spec_rounds > 0, "spec sessions ran rounds");
+        assert_eq!(st.spec_drafted, 2 * st.spec_rounds, "k=2 drafts per round");
+        assert!(st.spec_accept_rate() >= 0.0 && st.spec_accept_rate() <= 1.0);
+        assert!(st.spec_tokens_per_round() >= 1.0, "every round emits >= 1 token");
+        assert!(st.decode_batches > 0, "the plain session still coalesces");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn speculative_survives_wrap_and_reports_rates() {
+        // budget far past n_ctx=12: reprefill rollback inside rounds
+        use crate::gpt2::DraftKind;
+        let srv = GenerationServer::start(
+            GenBackend::Fp(tiny()),
+            GenerationConfig { max_new_tokens: 64, ..Default::default() },
+        );
+        let h = srv
+            .submit(req(toks(5, 21), 30).with_speculative(3, DraftKind::TruncateLayers(1)))
+            .unwrap();
+        assert_eq!(h.collect_tokens().unwrap().len(), 30);
+        let st = srv.stats();
+        assert!(st.prefills > 2, "admission (x2) plus wrap re-prefills");
+        assert!(st.spec_rounds > 0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn speculative_misconfig_fails_only_its_stream() {
+        // Slide wrap can't host rollback; a trunc depth past n_layer
+        // can't build a draft — both fail at admission, leaving the
+        // plain session untouched
+        use crate::gpt2::DraftKind;
+        let srv = GenerationServer::start(
+            GenBackend::Fp(tiny()),
+            GenerationConfig { wrap: WrapPolicy::Slide, ..Default::default() },
+        );
+        let bad = srv
+            .submit(req(toks(4, 22), 4).with_speculative(2, DraftKind::NaiveInt8))
+            .unwrap();
+        let good = srv.submit(req(toks(4, 23), 3)).unwrap();
+        assert!(bad.collect_tokens().is_err(), "spec under Slide is an admit error");
+        assert_eq!(good.collect_tokens().unwrap().len(), 3);
+        assert_eq!(srv.stats().admit_errors, 1);
+        srv.shutdown();
+
+        let srv = GenerationServer::start(GenBackend::Fp(tiny()), GenerationConfig::default());
+        let bad = srv
+            .submit(req(toks(4, 24), 4).with_speculative(2, DraftKind::TruncateLayers(9)))
+            .unwrap();
+        assert!(bad.collect_tokens().is_err(), "undeep draft fails to build");
+        assert_eq!(srv.stats().admit_errors, 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn served_top_p_and_repetition_penalty_match_solo() {
+        // the new sampler knobs thread end to end: served stream ==
+        // solo session with the same sampler settings
+        let prompt = toks(5, 51);
+        let solo = {
+            let q = QuantizedGpt2::new(tiny(), EngineSpec::muxq());
+            let mut s = q.session(WrapPolicy::default());
+            let mut smp =
+                Sampler::new(1.1, 0, 77).with_top_p(0.9).with_repetition_penalty(1.25);
+            s.generate(&prompt, 8, &mut smp).unwrap()
+        };
+        let srv = GenerationServer::start(
+            GenBackend::Int(QuantizedGpt2::new(tiny(), EngineSpec::muxq())),
+            GenerationConfig::default(),
+        );
+        let served = srv
+            .submit(
+                GenerateRequest::sampled(prompt.clone(), 8, 1.1, 0, 77)
+                    .with_top_p(0.9)
+                    .with_repetition_penalty(1.25),
+            )
+            .unwrap()
+            .collect_tokens()
+            .unwrap();
+        assert_eq!(served, solo);
+        srv.shutdown();
     }
 
     #[test]

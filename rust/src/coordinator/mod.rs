@@ -38,7 +38,7 @@ pub use batcher::{AdmitError, BatcherConfig};
 pub use generation::{GenBackend, GenerationConfig, GenerationServer, GenerationStats};
 pub use request::{
     FinishReason, GenerateHandle, GenerateRequest, ResponseHandle, ScoreRequest, ScoreResponse,
-    TokenEvent,
+    SpeculativeConfig, TokenEvent,
 };
 pub use scheduler::{Coordinator, CoordinatorConfig, CoordinatorStats};
 pub use variants::{VariantKey, VariantRegistry};

@@ -61,11 +61,24 @@ pub struct Pending {
     pub tx: mpsc::Sender<anyhow::Result<ScoreResponse>>,
 }
 
+/// Per-request speculative decoding: a cheap draft proposes `k` tokens
+/// per round, the target verifies all of them in one skinny batched
+/// forward ([`crate::gpt2::SpeculativeState`]). Acceptance is lossless
+/// — greedy speculation reproduces plain greedy token for token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpeculativeConfig {
+    /// tokens drafted per round (`k >= 1`)
+    pub k: usize,
+    /// which draft model the server should build for this session
+    pub draft: crate::gpt2::DraftKind,
+}
+
 /// A generation request: prefill the prompt, then stream decoded tokens
-/// — greedy by default, seeded temperature / top-k sampling on request.
-/// Prompts longer than the model context keep their last `n_ctx` tokens
-/// (recorded in the server stats); the prompt is processed at its TRUE
-/// length — no padding rows.
+/// — greedy by default, seeded temperature / top-k / top-p sampling with
+/// repetition penalty on request, optionally draft-and-verify
+/// speculative decoding. Prompts longer than the model context keep
+/// their last `n_ctx` tokens (recorded in the server stats); the prompt
+/// is processed at its TRUE length — no padding rows.
 #[derive(Debug, Clone)]
 pub struct GenerateRequest {
     pub prompt: Vec<u32>,
@@ -76,15 +89,32 @@ pub struct GenerateRequest {
     pub temperature: f32,
     /// sample only among the k highest logits; `0` means all
     pub top_k: usize,
+    /// nucleus cutoff — keep the smallest top-logit prefix whose
+    /// probability mass reaches `top_p`; `1.0` disables
+    pub top_p: f32,
+    /// divide positive / multiply negative logits of seen tokens by
+    /// this factor; `1.0` disables
+    pub repetition_penalty: f32,
     /// sampling seed — (seed, prompt, model) fully determines the
     /// stream, so sampled generations are replayable
     pub seed: u64,
+    /// `Some` routes this session through draft-and-verify decoding
+    pub speculative: Option<SpeculativeConfig>,
 }
 
 impl GenerateRequest {
     /// Greedy request (the default serving mode).
     pub fn greedy(prompt: Vec<u32>, max_new_tokens: usize) -> GenerateRequest {
-        GenerateRequest { prompt, max_new_tokens, temperature: 0.0, top_k: 0, seed: 0 }
+        GenerateRequest {
+            prompt,
+            max_new_tokens,
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            repetition_penalty: 1.0,
+            seed: 0,
+            speculative: None,
+        }
     }
 
     /// Seeded temperature / top-k sampling request.
@@ -95,13 +125,33 @@ impl GenerateRequest {
         top_k: usize,
         seed: u64,
     ) -> GenerateRequest {
-        GenerateRequest { prompt, max_new_tokens, temperature, top_k, seed }
+        GenerateRequest { temperature, top_k, seed, ..GenerateRequest::greedy(prompt, max_new_tokens) }
+    }
+
+    /// Nucleus cutoff (builder).
+    pub fn with_top_p(mut self, top_p: f32) -> GenerateRequest {
+        self.top_p = top_p;
+        self
+    }
+
+    /// Repetition penalty (builder).
+    pub fn with_repetition_penalty(mut self, rp: f32) -> GenerateRequest {
+        self.repetition_penalty = rp;
+        self
+    }
+
+    /// Route through speculative decoding (builder).
+    pub fn with_speculative(mut self, k: usize, draft: crate::gpt2::DraftKind) -> GenerateRequest {
+        self.speculative = Some(SpeculativeConfig { k, draft });
+        self
     }
 
     /// The per-session sampler this request asks for (`Sampler` itself
     /// degrades to greedy argmax when the parameters are degenerate).
     pub fn sampler(&self) -> crate::gpt2::Sampler {
         crate::gpt2::Sampler::new(self.temperature, self.top_k, self.seed)
+            .with_top_p(self.top_p)
+            .with_repetition_penalty(self.repetition_penalty)
     }
 }
 
@@ -194,6 +244,32 @@ mod tests {
         // zero temperature always degrades to greedy, whatever the rest says
         let z = GenerateRequest::sampled(vec![1], 1, 0.0, 40, 7);
         assert!(z.sampler().is_greedy());
+    }
+
+    #[test]
+    fn request_builders_thread_new_knobs() {
+        let r = GenerateRequest::sampled(vec![1], 4, 0.9, 40, 7)
+            .with_top_p(0.92)
+            .with_repetition_penalty(1.3);
+        let sm = r.sampler();
+        assert_eq!((sm.top_p, sm.repetition_penalty), (0.92, 1.3));
+        // defaults leave both knobs disabled
+        let d = GenerateRequest::greedy(vec![1], 4).sampler();
+        assert_eq!((d.top_p, d.repetition_penalty), (1.0, 1.0));
+        // repetition penalty applies even in greedy mode, so the greedy
+        // request with a penalty still maps to a greedy sampler
+        let gp = GenerateRequest::greedy(vec![1], 4).with_repetition_penalty(1.5);
+        assert!(gp.sampler().is_greedy());
+    }
+
+    #[test]
+    fn speculative_config_rides_the_request() {
+        let r = GenerateRequest::greedy(vec![1, 2], 8)
+            .with_speculative(3, crate::gpt2::DraftKind::NaiveInt8);
+        let sc = r.speculative.unwrap();
+        assert_eq!(sc.k, 3);
+        assert_eq!(sc.draft, crate::gpt2::DraftKind::NaiveInt8);
+        assert!(GenerateRequest::greedy(vec![1], 1).speculative.is_none());
     }
 
     #[test]

@@ -13,7 +13,10 @@
 //! behind token-level generation serving ([`session`],
 //! `coordinator::generation`): per-layer [`KvCache`]s split the forward
 //! into prefill + decode steps, with skinny per-token projections routed
-//! through the packed engine's GEMV path.
+//! through the packed engine's GEMV path. [`speculative`] stacks
+//! draft-and-verify decoding on top: a cheap draft session proposes k
+//! tokens, the target scores k+1 positions in one skinny batched
+//! forward, and greedy acceptance is provably lossless.
 //!
 //! The deployed (true-INT) pipeline is [`QuantizedGpt2`]: one
 //! [`crate::quant::QuantLinear`] operator per projection site, built by
@@ -24,9 +27,11 @@
 mod model;
 mod quantized;
 pub mod session;
+pub mod speculative;
 
 pub use model::{Gpt2Config, Gpt2Model, KvCache, ProjFn, SiteCapture, PROJ_SITES};
 pub use quantized::QuantizedGpt2;
 pub use session::{
     argmax, decode_step_batch, DecodeSession, Sampler, SessionModel, SessionState, WrapPolicy,
 };
+pub use speculative::{DraftKind, DraftModel, SpeculativeSession, SpeculativeState};

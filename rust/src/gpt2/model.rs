@@ -163,6 +163,16 @@ impl KvCache {
         self.v.row(self.slot(logical))
     }
 
+    /// Drop the NEWEST rows so only the oldest `len` remain — the
+    /// speculative-decode rollback: a rejected draft's K/V rows are
+    /// logically at the tail, so truncation restores the cache to the
+    /// accepted prefix exactly (`start` is untouched; the retained rows
+    /// keep their slots, so attention reads them back bit-identical).
+    /// A `len` at or above the current length is a no-op.
+    pub fn truncate(&mut self, len: usize) {
+        self.len = self.len.min(len);
+    }
+
     /// Append one K/V row pair; when full, overwrite the oldest entry
     /// instead (ring advance). Returns whether an eviction happened.
     pub fn push(&mut self, k_row: &[f32], v_row: &[f32]) -> bool {
@@ -727,6 +737,28 @@ impl Gpt2Model {
         self.blocks[layer].ln_1.g[channel] *= factor;
     }
 
+    /// A shallow draft model: the first `n_layers` blocks with the same
+    /// embeddings, final norm and tied head — the truncated-layer draft
+    /// for speculative decoding (`gpt2::speculative`). Same vocab,
+    /// context and width, so its sessions propose tokens the target can
+    /// verify; only depth (and therefore per-token cost) shrinks.
+    pub fn truncated(&self, n_layers: usize) -> Result<Gpt2Model> {
+        if n_layers == 0 || n_layers > self.cfg.n_layer {
+            bail!("truncated draft wants {n_layers} of {} layers", self.cfg.n_layer);
+        }
+        let mut cfg = self.cfg.clone();
+        cfg.name = format!("{}-trunc{n_layers}", cfg.name);
+        cfg.n_layer = n_layers;
+        Ok(Gpt2Model {
+            cfg,
+            wte: self.wte.clone(),
+            wpe: self.wpe.clone(),
+            ln_f: self.ln_f.clone(),
+            blocks: self.blocks[..n_layers].to_vec(),
+            wte_t: OnceLock::new(),
+        })
+    }
+
     /// Build a randomly-initialized model (tests, benches, demos without
     /// artifacts). Deterministic in `seed`.
     pub fn test_model(
@@ -1049,6 +1081,66 @@ mod tests {
         assert_eq!(c.k_row(0), &[2.0, 0.0]);
         c.clear();
         assert!(c.is_empty());
+    }
+
+    #[test]
+    fn kv_cache_truncate_drops_newest_only() {
+        let mut c = KvCache::new(4, 2);
+        for t in 0..4 {
+            c.push(&[t as f32, 0.0], &[0.0, t as f32]);
+        }
+        // wrap once so start != 0, then truncate back
+        c.push(&[4.0, 0.0], &[0.0, 4.0]); // evicts 0; logical order 1,2,3,4
+        c.truncate(2);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.k_row(0), &[1.0, 0.0], "oldest survives");
+        assert_eq!(c.k_row(1), &[2.0, 0.0]);
+        // re-push lands where the truncated rows were
+        c.push(&[9.0, 0.0], &[0.0, 9.0]);
+        assert_eq!(c.k_row(2), &[9.0, 0.0]);
+        c.truncate(10); // no-op past len
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn truncate_then_extend_matches_never_extended() {
+        // rollback oracle at the model layer: append 3 rows, truncate
+        // them away, decode again — logits must equal a cache that never
+        // saw the rolled-back rows
+        let (cfg, m) = tiny();
+        let t = toks(1, 8, 51, cfg.vocab_size as u32)[0].clone();
+        let mut a = m.new_kv_caches();
+        let mut b = m.new_kv_caches();
+        m.forward_session(&t[..5], 0, &mut a, None).unwrap();
+        m.forward_session(&t[..5], 0, &mut b, None).unwrap();
+        m.forward_session(&t[5..8], 5, &mut a, None).unwrap();
+        for c in a.iter_mut() {
+            c.truncate(5);
+        }
+        let ra = m.decode_step_sessions(&[3], &[5], &mut [&mut a], None).unwrap();
+        let rb = m.decode_step_sessions(&[3], &[5], &mut [&mut b], None).unwrap();
+        assert_eq!(ra.data, rb.data);
+    }
+
+    #[test]
+    fn truncated_draft_shares_embeddings_and_shrinks_depth() {
+        let (cfg, m) = tiny();
+        let d = m.truncated(1).unwrap();
+        assert_eq!(d.cfg.n_layer, 1);
+        assert_eq!(d.cfg.vocab_size, cfg.vocab_size);
+        assert_eq!(d.cfg.n_ctx, cfg.n_ctx);
+        let t = toks(1, 6, 61, cfg.vocab_size as u32);
+        let l = d.forward(&t, None, None).unwrap();
+        assert_eq!((l.rows, l.cols), (6, cfg.vocab_size));
+        assert!(l.data.iter().all(|v| v.is_finite()));
+        // full-depth truncation is the model itself, function-wise
+        let full = m.truncated(cfg.n_layer).unwrap();
+        assert_eq!(
+            full.forward(&t, None, None).unwrap().data,
+            m.forward(&t, None, None).unwrap().data
+        );
+        assert!(m.truncated(0).is_err());
+        assert!(m.truncated(cfg.n_layer + 1).is_err());
     }
 
     #[test]

@@ -20,10 +20,12 @@
 //! decode step must match the same token scored inside a prefill, and a
 //! coalesced multi-session step must match stepping each session alone),
 //! so [`QuantizedGpt2::proj_session`] gives every row its own mask via
-//! the operators' `forward_row_into` (single-row fused quantize + GEMV
-//! against the shared load-time-packed weights). Methods whose batch
-//! path is already row-independent (`row_independent()` — naive per-row,
-//! fp) keep the coalesced batch GEMM.
+//! the operators' `forward_rows_into` (per-row fused quantize against
+//! the shared load-time-packed weights; MUXQ coalesces mask-sharing
+//! runs of rows into one Body+Aux GEMM pair, bit-identical to the
+//! per-row loop). Methods whose batch path is already row-independent
+//! (`row_independent()` — naive per-row, fp) keep the coalesced batch
+//! GEMM.
 //! [`QuantizedGpt2::forward_logits_session`] is the full-forward oracle
 //! with identical semantics, which `tests/decode_session.rs` pins
 //! bit-exact against the incremental path.
@@ -124,17 +126,16 @@ impl QuantizedGpt2 {
     /// (incremental decode) path, also the semantics of the oracle
     /// [`QuantizedGpt2::forward_logits_session`]. Operators whose batch
     /// path is row-independent keep the coalesced GEMM; batch-masked
-    /// operators project row by row (per-row masks, GEMV route).
+    /// operators route through `forward_rows_into` (per-row masks, with
+    /// the operator free to coalesce mask-sharing runs into one GEMM —
+    /// MUXQ does; results stay bit-identical to the per-row loop).
     pub(crate) fn proj_session(&self, x: &MatF32, site: &str, li: usize) -> MatF32 {
         let op = self.op(site, li);
         if op.row_independent() {
             op.forward(x)
         } else {
-            let (_, n) = op.shape();
-            let mut y = MatF32::zeros(x.rows, n);
-            for r in 0..x.rows {
-                op.forward_row_into(x.row(r), y.row_mut(r));
-            }
+            let mut y = MatF32::zeros(0, 0);
+            op.forward_rows_into(x, &mut y);
             y
         }
     }

@@ -100,6 +100,25 @@ impl<'m> SessionModel<'m> {
         }
     }
 
+    /// Verify-shaped extend: all rows land in the caches AND every row's
+    /// logits come back — the speculative k+1-row scoring pass. Refuses
+    /// to overflow the ring (`forward_session` bails), so callers make
+    /// room first ([`SessionState::ensure_room_for`]).
+    fn extend_scored(
+        &self,
+        tokens: &[u32],
+        pos0: usize,
+        caches: &mut [KvCache],
+    ) -> Result<MatF32> {
+        match self {
+            SessionModel::Fp(m) => m.forward_session(tokens, pos0, caches, None),
+            SessionModel::Int(q) => {
+                let mut f = |x: &MatF32, site: &'static str, li: usize| q.proj_session(x, site, li);
+                q.fp.forward_session(tokens, pos0, caches, Some(&mut f))
+            }
+        }
+    }
+
     /// `extend` without computing logits — the wrap re-prefill discards
     /// them, and the tied-head GEMM they cost is the biggest in the pass.
     fn extend_quiet(&self, tokens: &[u32], pos0: usize, caches: &mut [KvCache]) -> Result<()> {
@@ -131,22 +150,41 @@ impl<'m> SessionModel<'m> {
 // --------------------------------------------------------------- sampling
 
 /// Token selection over a logits row: greedy argmax, or seeded
-/// temperature / top-k sampling. Deterministic — the internal
-/// `SplitMix64` stream makes (seed, logits sequence) → tokens a pure
-/// function, so sampled generations are replayable and the server can be
-/// tested bit-for-bit against solo sessions.
+/// temperature / top-k / top-p sampling with optional repetition
+/// penalty. Deterministic — the internal `SplitMix64` stream makes
+/// (seed, logits sequence) → tokens a pure function, so sampled
+/// generations are replayable and the server can be tested bit-for-bit
+/// against solo sessions.
+///
+/// Speculative decoding needs the sampler split into its two halves:
+/// [`Sampler::probs_in_context`] exposes the exact distribution a
+/// [`Sampler::sample_in_context`] call would draw from (consuming no
+/// randomness), and [`Sampler::draw_from`] / [`Sampler::next_uniform`]
+/// consume the stream — so the rejection rule can compare target p
+/// against draft q and still draw from the identical RNG sequence.
 #[derive(Debug, Clone)]
 pub struct Sampler {
     /// softmax temperature; `<= 0` means greedy argmax
     pub temperature: f32,
     /// keep only the k highest logits before sampling; `0` = all
     pub top_k: usize,
+    /// nucleus cut: keep the smallest prefix of the probability-sorted
+    /// candidates whose mass reaches `top_p`; `>= 1.0` = off
+    pub top_p: f32,
+    /// divide positive / multiply negative logits of tokens already in
+    /// the context by this factor (the CTRL / HF convention); `1.0` = off
+    pub repetition_penalty: f32,
+    /// the seed this sampler was built from — kept so [`Sampler::fork`]
+    /// can derive decorrelated child streams
+    seed: u64,
     rng: SplitMix64,
     /// reusable candidate-index / weight buffers — this runs once per
     /// decoded token on the serving hot path, so no per-call allocation
-    /// and no full-vocab sort (top-k is a partial selection)
+    /// and no full-vocab sort unless top-p asks for one
     order: Vec<usize>,
     weights: Vec<f32>,
+    /// scratch row for repetition-penalized logits
+    penalized: Vec<f32>,
 }
 
 impl Sampler {
@@ -155,15 +193,41 @@ impl Sampler {
         Sampler::new(0.0, 0, 0)
     }
 
-    /// Seeded temperature / top-k sampler.
+    /// Seeded temperature / top-k sampler (top-p off, no penalty).
     pub fn new(temperature: f32, top_k: usize, seed: u64) -> Sampler {
         Sampler {
             temperature,
             top_k,
+            top_p: 1.0,
+            repetition_penalty: 1.0,
+            seed,
             rng: SplitMix64::new(seed),
             order: Vec::new(),
             weights: Vec::new(),
+            penalized: Vec::new(),
         }
+    }
+
+    /// Builder: nucleus (top-p) cut. Values `>= 1.0` disable it.
+    pub fn with_top_p(mut self, top_p: f32) -> Sampler {
+        self.top_p = top_p;
+        self
+    }
+
+    /// Builder: repetition penalty. `1.0` disables it.
+    pub fn with_repetition_penalty(mut self, penalty: f32) -> Sampler {
+        self.repetition_penalty = penalty;
+        self
+    }
+
+    /// A sampler with the same parameters but an independent stream
+    /// derived from (this seed, `salt`) — how a speculative session gives
+    /// its draft a decorrelated-but-reproducible RNG.
+    pub fn fork(&self, salt: u64) -> Sampler {
+        let mut s = Sampler::new(self.temperature, self.top_k, crate::data::prng::mix(&[self.seed, salt]));
+        s.top_p = self.top_p;
+        s.repetition_penalty = self.repetition_penalty;
+        s
     }
 
     /// Greedy when the parameters make sampling degenerate: zero
@@ -172,15 +236,105 @@ impl Sampler {
         self.temperature <= 0.0 || self.top_k == 1
     }
 
-    /// Pick the next token for one logits row. Greedy consumes no
-    /// randomness (ties resolve like [`argmax`]); otherwise one uniform
-    /// draw over the temperature-softmaxed top-k candidates. O(V) per
-    /// call (`select_nth` for the top-k cut, no sort), zero steady-state
-    /// allocation.
+    /// One raw uniform from the sampler's stream — the rejection-sampling
+    /// accept/reject coin for speculative decoding.
+    pub fn next_uniform(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    /// [`Sampler::sample_in_context`] with no context (no penalty applied).
     pub fn sample(&mut self, logits: &[f32]) -> u32 {
+        self.sample_in_context(logits, &[])
+    }
+
+    /// Pick the next token for one logits row, `history` being the live
+    /// context the repetition penalty reads. Greedy consumes no
+    /// randomness (ties resolve like [`argmax`]); otherwise one uniform
+    /// draw over the temperature-softmaxed top-k/top-p candidates. O(V)
+    /// per call (`select_nth` for the top-k cut; a candidate sort only
+    /// when top-p is on), zero steady-state allocation.
+    pub fn sample_in_context(&mut self, logits: &[f32], history: &[u32]) -> u32 {
+        let buf = std::mem::take(&mut self.penalized);
+        let buf = self.penalize(logits, history, buf);
+        let row: &[f32] = if buf.is_empty() { logits } else { &buf };
+        let tok = if self.is_greedy() {
+            argmax(row)
+        } else {
+            self.dist(row);
+            let total: f32 = self.weights.iter().sum();
+            let u = self.next_uniform() as f32 * total;
+            self.pick(u)
+        };
+        self.penalized = buf;
+        tok
+    }
+
+    /// The FULL-VOCAB probability vector `sample_in_context` would draw
+    /// from, written into `out` (zeros outside the candidate set; a point
+    /// mass at the argmax when greedy). Consumes no randomness — this is
+    /// the p / q the speculative acceptance rule compares.
+    pub fn probs_in_context(&mut self, logits: &[f32], history: &[u32], out: &mut Vec<f32>) {
+        let buf = std::mem::take(&mut self.penalized);
+        let buf = self.penalize(logits, history, buf);
+        let row: &[f32] = if buf.is_empty() { logits } else { &buf };
+        out.clear();
+        out.resize(logits.len(), 0.0);
         if self.is_greedy() {
-            return argmax(logits);
+            out[argmax(row) as usize] = 1.0;
+        } else {
+            self.dist(row);
+            let total: f32 = self.weights.iter().sum();
+            for (&i, &w) in self.order.iter().zip(&self.weights) {
+                out[i] = w / total;
+            }
         }
+        self.penalized = buf;
+    }
+
+    /// One seeded draw from an explicit (normalized) probability vector —
+    /// the speculative correction draw from `max(0, p - q)`. Consumes one
+    /// uniform. Falls back to the vector's argmax on numerical tails.
+    pub fn draw_from(&mut self, probs: &[f32]) -> u32 {
+        let mut u = self.next_uniform();
+        let mut last_live = None;
+        for (i, &p) in probs.iter().enumerate() {
+            if p <= 0.0 {
+                continue;
+            }
+            last_live = Some(i as u32);
+            u -= p as f64;
+            if u <= 0.0 {
+                return i as u32;
+            }
+        }
+        last_live.unwrap_or_else(|| argmax(probs))
+    }
+
+    /// Repetition penalty into the scratch `buf` (CTRL convention:
+    /// positive logits divided, negative multiplied — both push the
+    /// token down). Returns `buf` empty when the penalty is off so
+    /// callers can use the raw row without a copy.
+    fn penalize(&self, logits: &[f32], history: &[u32], mut buf: Vec<f32>) -> Vec<f32> {
+        buf.clear();
+        if self.repetition_penalty == 1.0 || history.is_empty() {
+            return buf;
+        }
+        buf.extend_from_slice(logits);
+        let rp = self.repetition_penalty;
+        for &t in history {
+            if let Some(l) = buf.get_mut(t as usize) {
+                *l = if *l > 0.0 { *l / rp } else { *l * rp };
+            }
+        }
+        buf
+    }
+
+    /// Fill `order` / `weights` with the candidate set and its
+    /// (unnormalized) softmax weights: top-k partial selection, then the
+    /// nucleus cut if top-p is on. Both `sample_in_context` and
+    /// `probs_in_context` route through this, so the drawn and the
+    /// reported distributions agree bit-for-bit.
+    fn dist(&mut self, logits: &[f32]) {
         let v = logits.len();
         let k = if self.top_k == 0 { v } else { self.top_k.min(v) };
         self.order.clear();
@@ -193,6 +347,13 @@ impl Sampler {
                 .select_nth_unstable_by(k - 1, |&a, &b| logits[b].total_cmp(&logits[a]));
             self.order.truncate(k);
         }
+        if self.top_p < 1.0 {
+            // nucleus needs the candidates probability-sorted; ties
+            // break on index so the cut is deterministic
+            self.order.sort_unstable_by(|&a, &b| {
+                logits[b].total_cmp(&logits[a]).then(a.cmp(&b))
+            });
+        }
         // temperature softmax with max-subtraction for stability (the
         // global max is always among the candidates)
         let max =
@@ -200,16 +361,33 @@ impl Sampler {
         let inv_t = 1.0 / self.temperature;
         self.weights.clear();
         self.weights.extend(self.order.iter().map(|&i| ((logits[i] - max) * inv_t).exp()));
-        let total: f32 = self.weights.iter().sum();
-        let mut u = self.rng.next_f64() as f32 * total;
+        if self.top_p < 1.0 {
+            let total: f32 = self.weights.iter().sum();
+            let target = self.top_p * total;
+            let mut cum = 0.0f32;
+            let mut keep = self.weights.len();
+            for (n, &w) in self.weights.iter().enumerate() {
+                cum += w;
+                if cum >= target {
+                    keep = n + 1;
+                    break;
+                }
+            }
+            self.order.truncate(keep);
+            self.weights.truncate(keep);
+        }
+    }
+
+    /// Walk `weights` with a pre-scaled uniform; numerical tail falls
+    /// back to the last candidate.
+    fn pick(&self, mut u: f32) -> u32 {
         for (w, &i) in self.weights.iter().zip(&self.order) {
             u -= w;
             if u <= 0.0 {
                 return i as u32;
             }
         }
-        // numerical tail: fall back to the last candidate
-        self.order[k - 1] as u32
+        self.order[self.order.len() - 1] as u32
     }
 }
 
@@ -293,6 +471,58 @@ impl SessionState {
         Ok(logits.data)
     }
 
+    /// Append `tokens` in one pass and return ALL their next-token
+    /// logits (`[len, vocab]`, row i scoring the context up to and
+    /// including `tokens[i]`) — the speculative verify step: the target
+    /// scores the drafted continuation in one skinny-M batched forward
+    /// instead of `len` sequential steps. No implicit wrap: callers run
+    /// [`SessionState::ensure_room_for`] first; overflowing extends bail.
+    pub fn extend_scored(&mut self, m: SessionModel<'_>, tokens: &[u32]) -> Result<MatF32> {
+        if self.window.is_empty() {
+            bail!("extend_scored before prefill");
+        }
+        let logits = m.extend_scored(tokens, self.window.len(), &mut self.caches)?;
+        self.window.extend_from_slice(tokens);
+        Ok(logits)
+    }
+
+    /// Append `tokens` in one pass and return the LAST row's logits —
+    /// the draft session's catch-up extend (tokens the target accepted
+    /// that the draft has not yet cached). Same no-implicit-wrap
+    /// contract as [`SessionState::extend_scored`].
+    pub fn extend_last(&mut self, m: SessionModel<'_>, tokens: &[u32]) -> Result<Vec<f32>> {
+        if self.window.is_empty() {
+            bail!("extend_last before prefill");
+        }
+        let logits = m.extend_last(tokens, self.window.len(), &mut self.caches)?;
+        self.window.extend_from_slice(tokens);
+        Ok(logits)
+    }
+
+    /// Roll the session back to its first `len` tokens: the speculative
+    /// rejection path. Drops the NEWEST window entries and K/V rows
+    /// ([`KvCache::truncate`]); the retained prefix reads back
+    /// bit-identical, as if the rolled-back tokens were never decoded.
+    pub fn truncate_to(&mut self, len: usize) {
+        self.window.truncate(len);
+        for c in &mut self.caches {
+            c.truncate(len);
+        }
+    }
+
+    /// The per-layer K/V caches — read-only, for state-equivalence tests
+    /// (rollback must leave ring contents equal to a never-extended
+    /// oracle's).
+    pub fn caches(&self) -> &[KvCache] {
+        &self.caches
+    }
+
+    /// This session's wrap policy (the server validates speculative
+    /// requests against it — spec rollback needs the exact policy).
+    pub fn wrap_policy(&self) -> WrapPolicy {
+        self.wrap
+    }
+
     fn next_pos(&self, n_ctx: usize) -> usize {
         self.window.len().min(n_ctx - 1)
     }
@@ -307,20 +537,39 @@ impl SessionState {
 
     /// Apply the wrap policy if the cache is full (called before a step).
     fn ensure_room(&mut self, m: SessionModel<'_>) -> Result<()> {
+        self.ensure_room_for(m, 1)
+    }
+
+    /// Make room for a `need`-token extend, applying the wrap policy
+    /// early if the window plus `need` would overflow the ring. A
+    /// speculative round calls this with `k + 1` before the verify
+    /// extend; `need == 1` is the plain decode-step path. Reprefill's
+    /// kept window shrinks below its configured `keep` when necessary so
+    /// the extend always fits; Slide can only absorb one token per step
+    /// (ring overwrite), so multi-token needs are rejected there.
+    pub fn ensure_room_for(&mut self, m: SessionModel<'_>, need: usize) -> Result<()> {
         let n_ctx = m.gpt().cfg.n_ctx;
-        if self.window.len() < n_ctx {
+        if need >= n_ctx {
+            bail!("{need}-token extend cannot fit n_ctx {n_ctx}");
+        }
+        if self.window.len() + need <= n_ctx {
             return Ok(());
         }
         match self.wrap {
-            WrapPolicy::Slide => Ok(()), // the ring overwrites in place
+            WrapPolicy::Slide => {
+                if need > 1 {
+                    bail!("Slide wrap cannot make room for a {need}-token extend");
+                }
+                Ok(()) // the ring overwrites in place
+            }
             WrapPolicy::Reprefill { .. } => {
-                let keep = self.wrap.keep_for(n_ctx);
+                let keep = self.wrap.keep_for(n_ctx).min(n_ctx - need);
                 self.window.drain(..self.window.len() - keep);
                 for c in &mut self.caches {
                     c.clear();
                 }
                 // logits of the kept window are not needed — the caller
-                // is about to decode the NEXT token
+                // is about to decode the NEXT token(s)
                 m.extend_quiet(&self.window, 0, &mut self.caches)?;
                 self.prefills += 1;
                 Ok(())
@@ -394,11 +643,15 @@ impl<'m> DecodeSession<'m> {
             self.prefill(prompt)?;
             return Ok(out);
         }
-        let mut next = sampler.sample(&self.prefill(prompt)?);
+        // selection reads the live window so the repetition penalty sees
+        // exactly the context the logits were computed over
+        let logits = self.prefill(prompt)?;
+        let mut next = sampler.sample_in_context(&logits, self.state.window());
         for i in 0..steps {
             out.push(next);
             if i + 1 < steps {
-                next = sampler.sample(&self.decode_step(next)?);
+                let logits = self.decode_step(next)?;
+                next = sampler.sample_in_context(&logits, self.state.window());
             }
         }
         Ok(out)
@@ -632,6 +885,166 @@ mod tests {
         let mut hot = Sampler::new(50.0, 0, 13);
         let draws: Vec<u32> = (0..200).map(|_| hot.sample(&logits)).collect();
         assert!(draws.iter().any(|&t| t != 2), "high T must diversify");
+    }
+
+    #[test]
+    fn top_p_keeps_only_the_nucleus() {
+        // one dominant logit: a tight nucleus must collapse onto it
+        let mut logits = vec![0.0f32; 16];
+        logits[5] = 8.0;
+        logits[9] = 7.0;
+        let mut s = Sampler::new(1.0, 0, 3).with_top_p(0.5);
+        for _ in 0..50 {
+            assert_eq!(s.sample(&logits), 5);
+        }
+        // p ~ 1-eps keeps (almost) everything: other tokens appear
+        let flat = vec![0.0f32; 16];
+        let mut wide = Sampler::new(1.0, 0, 4).with_top_p(0.99);
+        let draws: Vec<u32> = (0..100).map(|_| wide.sample(&flat)).collect();
+        assert!(draws.iter().any(|&t| t != draws[0]), "near-1 top-p must diversify");
+        // and stays seed-deterministic
+        let run = |seed: u64| -> Vec<u32> {
+            let mut s = Sampler::new(0.9, 6, seed).with_top_p(0.8);
+            let l: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+            (0..20).map(|_| s.sample(&l)).collect()
+        };
+        assert_eq!(run(7), run(7));
+    }
+
+    #[test]
+    fn repetition_penalty_pushes_history_down() {
+        // greedy + penalty: once 2 is in the history a strong penalty
+        // hands the argmax to the runner-up
+        let logits = [0.0f32, 1.0, 5.0, 4.0];
+        let mut s = Sampler::greedy().with_repetition_penalty(10.0);
+        assert_eq!(s.sample_in_context(&logits, &[]), 2);
+        assert_eq!(s.sample_in_context(&logits, &[2]), 3);
+        // negative logits are multiplied (pushed further down)
+        let neg = [-0.1f32, -5.0];
+        let mut s2 = Sampler::greedy().with_repetition_penalty(100.0);
+        assert_eq!(s2.sample_in_context(&neg, &[0]), 1);
+        // history ids past the vocab edge are ignored, not a panic
+        assert_eq!(s2.sample_in_context(&neg, &[999]), 0);
+    }
+
+    #[test]
+    fn probs_match_the_drawn_distribution() {
+        // probs_in_context must describe exactly what sample_in_context
+        // draws: support == candidate set, sums to 1, greedy = point mass
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 0.51).cos() * 2.0).collect();
+        let mut s = Sampler::new(0.8, 4, 9).with_top_p(0.9);
+        let mut p = Vec::new();
+        s.probs_in_context(&logits, &[], &mut p);
+        let total: f32 = p.iter().sum();
+        assert!((total - 1.0).abs() < 1e-5, "sums to {total}");
+        let support: Vec<usize> = (0..16).filter(|&i| p[i] > 0.0).collect();
+        assert!(support.len() <= 4, "top-k bound");
+        // every later draw lands inside the reported support
+        for _ in 0..50 {
+            let t = s.sample(&logits) as usize;
+            assert!(p[t] > 0.0, "draw {t} outside reported support");
+        }
+        // greedy: point mass, no RNG consumed
+        let mut g = Sampler::greedy();
+        g.probs_in_context(&logits, &[], &mut p);
+        assert_eq!(p.iter().filter(|&&x| x > 0.0).count(), 1);
+        assert_eq!(p[argmax(&logits) as usize], 1.0);
+    }
+
+    #[test]
+    fn draw_from_is_seeded_and_respects_support() {
+        let probs = [0.0f32, 0.5, 0.0, 0.5];
+        let run = |seed: u64| -> Vec<u32> {
+            let mut s = Sampler::new(1.0, 0, seed);
+            (0..30).map(|_| s.draw_from(&probs)).collect()
+        };
+        assert_eq!(run(5), run(5));
+        for t in run(5) {
+            assert!(t == 1 || t == 3, "draw {t} has zero probability");
+        }
+        // degenerate all-zero vector falls back without panicking
+        let mut s = Sampler::new(1.0, 0, 1);
+        let _ = s.draw_from(&[0.0, 0.0]);
+    }
+
+    #[test]
+    fn fork_is_reproducible_and_decorrelated() {
+        let base = Sampler::new(0.9, 5, 77).with_top_p(0.8).with_repetition_penalty(1.3);
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 0.29).sin() * 3.0).collect();
+        let draw = |mut s: Sampler| -> Vec<u32> { (0..20).map(|_| s.sample(&logits)).collect() };
+        let a = base.fork(1);
+        assert_eq!(a.temperature, 0.9);
+        assert_eq!(a.top_p, 0.8);
+        assert_eq!(a.repetition_penalty, 1.3);
+        assert_eq!(draw(base.fork(1)), draw(base.fork(1)), "same salt, same stream");
+        assert_ne!(draw(base.fork(1)), draw(base.fork(2)), "different salt, different stream");
+    }
+
+    #[test]
+    fn extend_scored_rows_match_sequential_decode() {
+        // the verify primitive: one k+1-row scored extend == stepping the
+        // same tokens one at a time, row for row, bit for bit
+        let m = tiny();
+        let prompt = toks(4, 31);
+        let ext = [1u32, 9, 17];
+        let mut a = SessionState::new(&m.cfg, WrapPolicy::default());
+        let mut b = SessionState::new(&m.cfg, WrapPolicy::default());
+        let sm = SessionModel::Fp(&m);
+        a.prefill(sm, &prompt).unwrap();
+        b.prefill(sm, &prompt).unwrap();
+        let scored = a.extend_scored(sm, &ext).unwrap();
+        assert_eq!((scored.rows, scored.cols), (3, m.cfg.vocab_size));
+        for (i, &t) in ext.iter().enumerate() {
+            let solo = b.decode_step(sm, t).unwrap();
+            assert_eq!(scored.row(i), &solo[..], "row {i}");
+        }
+        assert_eq!(a.window(), b.window());
+    }
+
+    #[test]
+    fn truncate_to_restores_the_rolled_back_state() {
+        // extend 3 tokens, roll them back, decode: logits and ring
+        // contents equal a session that never saw them
+        let q = QuantizedGpt2::new(tiny(), EngineSpec::muxq());
+        let sm = SessionModel::Int(&q);
+        let prompt = toks(5, 33);
+        let mut a = SessionState::new(&q.fp.cfg, WrapPolicy::default());
+        let mut b = SessionState::new(&q.fp.cfg, WrapPolicy::default());
+        a.prefill(sm, &prompt).unwrap();
+        b.prefill(sm, &prompt).unwrap();
+        a.extend_scored(sm, &[3, 1, 4]).unwrap();
+        a.truncate_to(prompt.len());
+        assert_eq!(a.window(), &prompt[..]);
+        for (ca, cb) in a.caches().iter().zip(b.caches()) {
+            assert_eq!(ca.len(), cb.len());
+            for i in 0..ca.len() {
+                assert_eq!(ca.k_row(i), cb.k_row(i));
+                assert_eq!(ca.v_row(i), cb.v_row(i));
+            }
+        }
+        let la = a.decode_step(sm, 7).unwrap();
+        let lb = b.decode_step(sm, 7).unwrap();
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn ensure_room_for_multi_token_extends() {
+        // n_ctx = 12: an 8-token window + need 5 forces an early wrap
+        // that still leaves the extend fitting exactly
+        let m = tiny();
+        let sm = SessionModel::Fp(&m);
+        let mut s = SessionState::new(&m.cfg, WrapPolicy::default());
+        s.prefill(sm, &toks(8, 35)).unwrap();
+        s.ensure_room_for(sm, 5).unwrap();
+        assert!(s.context_len() + 5 <= 12, "window {} too big", s.context_len());
+        assert_eq!(s.prefills(), 2, "wrap must have re-prefilled");
+        s.extend_scored(sm, &[1, 2, 3, 4, 5]).unwrap();
+        // Slide cannot absorb multi-token extends
+        let mut sl = SessionState::new(&m.cfg, WrapPolicy::Slide);
+        sl.prefill(sm, &toks(12, 36)).unwrap();
+        assert!(sl.ensure_room_for(sm, 2).is_err());
+        // need >= n_ctx is rejected outright
+        assert!(s.ensure_room_for(sm, 12).is_err());
     }
 
     #[test]

@@ -1,0 +1,538 @@
+//! Draft-and-verify speculative decoding over the session oracle
+//! (DESIGN.md §5b). A cheap DRAFT session proposes `k` tokens; the
+//! TARGET scores all `k + 1` positions in ONE skinny-M batched forward
+//! ([`SessionState::extend_scored`] — the same M ≤ 4 GEMV regime the
+//! decode path already routes through); an acceptance rule keeps the
+//! emitted distribution identical to plain decode and a KV rollback
+//! ([`SessionState::truncate_to`]) erases rejected draft rows.
+//!
+//! Why it wins: npusim pins decode as memory-bound for every INT
+//! operator, so a (k+1)-row verify costs roughly the same weight
+//! traffic as ONE sequential step. Each round emits `a + 1` tokens
+//! (`a` = accepted drafts) for one target pass plus `k` cheap draft
+//! steps — see `npusim::gemm_plan::SpecRoundPlan` for the pricing.
+//!
+//! # Acceptance rules
+//!
+//! * **Greedy** (`sampler.is_greedy()`): accept draft `d_i` iff it
+//!   equals the target argmax at that position; on mismatch emit the
+//!   target's choice and stop. Consumes NO randomness — by induction
+//!   every emitted token equals plain greedy decode (`tests/
+//!   speculative.rs` pins this token-for-token), because verify row `i`
+//!   is bit-exact against the plain decode step at the same prefix.
+//! * **Stochastic**: standard rejection sampling (Leviathan et al.).
+//!   Draft token `d ~ q`; accept iff `u · q(d) < p(d)`; on rejection
+//!   draw the correction from `norm(max(0, p − q))`. The marginal of
+//!   every emitted token is exactly `p` — distribution-identical to
+//!   plain sampled decode, though not stream-identical (the RNG is
+//!   consumed in a different order).
+//!
+//! # Sessions, rollback, catch-up
+//!
+//! Target and draft each own a full [`SessionState`]. After a round
+//! with `a` accepted drafts the target holds `a + 1` new rows (`next`
+//! plus the accepted drafts) — `truncate_to` drops the rejected tail.
+//! The draft cached `d_1 .. d_{k-1}` while proposing; on rejection it
+//! rolls back to the accepted prefix, on full acceptance `d_k` (chosen
+//! but never stepped) goes into `pending` and is replayed at the next
+//! round's catch-up extend. Both sessions require the exact
+//! [`WrapPolicy::Reprefill`] policy: rollback needs window ↔ ring
+//! agreement, which Slide's in-place overwrite breaks.
+
+use super::model::{Gpt2Config, Gpt2Model};
+use super::quantized::QuantizedGpt2;
+use super::session::{Sampler, SessionModel, SessionState, WrapPolicy};
+use anyhow::{bail, Result};
+
+/// Salt for deriving the draft's RNG stream from the request sampler
+/// ([`Sampler::fork`]) — one fixed constant so (seed, prompt, model)
+/// still reproduces a speculative generation exactly.
+pub const DRAFT_SEED_SALT: u64 = 0xd12a_f75a;
+
+/// Which cheap model proposes the draft tokens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DraftKind {
+    /// The full-depth model through the naive-INT8 operator — same
+    /// architecture, cheapest uniform quantization (high acceptance,
+    /// draft cost ≈ target's INT cost).
+    NaiveInt8,
+    /// The first `n` transformer blocks of the target at f32
+    /// ([`Gpt2Model::truncated`]) — depth-scaled cost, lower acceptance.
+    TruncateLayers(usize),
+}
+
+impl DraftKind {
+    /// Parse the CLI / request tag: `naive-int8` or `trunc<N>`.
+    pub fn parse(tag: &str) -> Result<DraftKind> {
+        if tag == "naive-int8" {
+            return Ok(DraftKind::NaiveInt8);
+        }
+        if let Some(n) = tag.strip_prefix("trunc") {
+            if let Ok(n) = n.parse::<usize>() {
+                return Ok(DraftKind::TruncateLayers(n));
+            }
+        }
+        bail!("unknown draft kind {tag:?} (naive-int8 | trunc<N>)")
+    }
+
+    pub fn tag(&self) -> String {
+        match self {
+            DraftKind::NaiveInt8 => "naive-int8".into(),
+            DraftKind::TruncateLayers(n) => format!("trunc{n}"),
+        }
+    }
+}
+
+/// An owned draft deployment built from the target model — owning (not
+/// borrowing) lets the serving loop cache drafts next to its backend.
+pub enum DraftModel {
+    Fp(Gpt2Model),
+    Int(QuantizedGpt2),
+}
+
+impl DraftModel {
+    /// Build the draft for `kind` from the target's weights.
+    pub fn build(target: &Gpt2Model, kind: DraftKind) -> Result<DraftModel> {
+        use crate::quant::EngineSpec;
+        Ok(match kind {
+            DraftKind::NaiveInt8 => {
+                DraftModel::Int(QuantizedGpt2::new(target.clone(), EngineSpec::naive()))
+            }
+            DraftKind::TruncateLayers(n) => DraftModel::Fp(target.truncated(n)?),
+        })
+    }
+
+    pub fn cfg(&self) -> &Gpt2Config {
+        match self {
+            DraftModel::Fp(m) => &m.cfg,
+            DraftModel::Int(q) => &q.fp.cfg,
+        }
+    }
+
+    /// The session-facing view (same enum every decode path consumes).
+    pub fn session_model(&self) -> SessionModel<'_> {
+        match self {
+            DraftModel::Fp(m) => SessionModel::Fp(m),
+            DraftModel::Int(q) => SessionModel::Int(q),
+        }
+    }
+}
+
+/// Model-borrowing-free speculative pair state — the serving loop owns
+/// many of these alongside its backend and draft cache, mirroring how
+/// [`SessionState`] relates to [`super::session::DecodeSession`].
+pub struct SpeculativeState {
+    /// drafts proposed per round
+    pub k: usize,
+    t: SessionState,
+    d: SessionState,
+    /// tokens already in the target window that the draft has not yet
+    /// cached (at most one: the last draft of a fully-accepted round)
+    pending: Vec<u32>,
+    rounds: u64,
+    drafted: u64,
+    accepted: u64,
+    /// reusable q / p / residual rows for the stochastic rule
+    qrows: Vec<Vec<f32>>,
+    pbuf: Vec<f32>,
+}
+
+impl SpeculativeState {
+    /// `k` drafts per round over a target/draft config pair. Speculation
+    /// requires the exact wrap policy (see module docs).
+    pub fn new(
+        target_cfg: &Gpt2Config,
+        draft_cfg: &Gpt2Config,
+        k: usize,
+        wrap: WrapPolicy,
+    ) -> Result<SpeculativeState> {
+        if k == 0 {
+            bail!("speculative k must be >= 1");
+        }
+        if !matches!(wrap, WrapPolicy::Reprefill { .. }) {
+            bail!("speculative decoding requires WrapPolicy::Reprefill (rollback needs exact ring state)");
+        }
+        if k + 1 >= target_cfg.n_ctx {
+            bail!("k {k} leaves no room for verify in n_ctx {}", target_cfg.n_ctx);
+        }
+        Ok(SpeculativeState {
+            k,
+            t: SessionState::new(target_cfg, wrap),
+            d: SessionState::new(draft_cfg, wrap),
+            pending: Vec::new(),
+            rounds: 0,
+            drafted: 0,
+            accepted: 0,
+            qrows: Vec::new(),
+            pbuf: Vec::new(),
+        })
+    }
+
+    /// Prefill BOTH sessions with the prompt; returns the target's
+    /// next-token logits (the caller samples the first token from them,
+    /// exactly like plain decode).
+    pub fn prefill(
+        &mut self,
+        target: SessionModel<'_>,
+        draft: SessionModel<'_>,
+        prompt: &[u32],
+    ) -> Result<Vec<f32>> {
+        self.pending.clear();
+        self.d.prefill(draft, prompt)?;
+        self.t.prefill(target, prompt)
+    }
+
+    /// One draft-and-verify round. `next` is the most recently emitted
+    /// token (sampled by the caller, not yet in either cache). Returns
+    /// the `a + 1` tokens this round emits — `a` accepted drafts plus
+    /// one correction (on rejection) or bonus (all accepted); the LAST
+    /// returned token is the next round's `next`.
+    pub fn round(
+        &mut self,
+        target: SessionModel<'_>,
+        draft: SessionModel<'_>,
+        next: u32,
+        sampler: &mut Sampler,
+        draft_sampler: &mut Sampler,
+    ) -> Result<Vec<u32>> {
+        let k = self.k;
+        let greedy = sampler.is_greedy();
+        self.t.ensure_room_for(target, k + 1)?;
+        self.d.ensure_room_for(draft, self.pending.len() + k)?;
+
+        // ---- draft: catch up on accepted tokens, then propose k more
+        let mut catchup = std::mem::take(&mut self.pending);
+        catchup.push(next);
+        let mut dlogits = self.d.extend_last(draft, &catchup)?;
+        catchup.clear();
+        self.pending = catchup;
+        let d_base = self.d.context_len(); // draft rollback point
+        self.qrows.resize_with(k, Vec::new);
+        let mut drafts = Vec::with_capacity(k);
+        for i in 0..k {
+            let di = if greedy {
+                // exact-match acceptance never reads q — let the draft
+                // pick however its sampler likes (no RNG when greedy)
+                draft_sampler.sample_in_context(&dlogits, self.d.window())
+            } else {
+                // stochastic: remember q_i, then draw from it so the
+                // proposal and the recorded distribution agree exactly
+                let q = &mut self.qrows[i];
+                draft_sampler.probs_in_context(&dlogits, self.d.window(), q);
+                draft_sampler.draw_from(q)
+            };
+            drafts.push(di);
+            if i + 1 < k {
+                dlogits = self.d.decode_step(draft, di)?;
+            }
+            // d_k is proposed but never stepped — the verify outcome
+            // decides whether it enters any cache
+        }
+
+        // ---- verify: one (k+1)-row scored extend on the target
+        let base = self.t.context_len();
+        let mut block = Vec::with_capacity(k + 1);
+        block.push(next);
+        block.extend_from_slice(&drafts);
+        let ver = self.t.extend_scored(target, &block)?;
+
+        // ---- accept
+        let mut emitted = Vec::with_capacity(k + 1);
+        let mut a = 0usize; // accepted drafts
+        for (i, &di) in drafts.iter().enumerate() {
+            // the context verify row i was computed over
+            let hist_len = base + 1 + i;
+            if greedy {
+                let choice = {
+                    let hist = &self.t.window()[..hist_len];
+                    sampler.sample_in_context(ver.row(i), hist)
+                };
+                if choice == di {
+                    a += 1;
+                    emitted.push(di);
+                } else {
+                    emitted.push(choice);
+                    break;
+                }
+            } else {
+                let mut p = std::mem::take(&mut self.pbuf);
+                {
+                    let hist = &self.t.window()[..hist_len];
+                    sampler.probs_in_context(ver.row(i), hist, &mut p);
+                }
+                let q = &self.qrows[i];
+                let (pd, qd) = (p[di as usize], q[di as usize]);
+                let accept = (sampler.next_uniform() as f32) * qd < pd;
+                if accept {
+                    a += 1;
+                    emitted.push(di);
+                    self.pbuf = p;
+                } else {
+                    // correction ~ norm(max(0, p - q)); the residual is
+                    // all-zero only when p == q up to float dust, where
+                    // drawing from p itself is the same distribution
+                    let mut total = 0.0f32;
+                    for (pv, &qv) in p.iter_mut().zip(q) {
+                        *pv = (*pv - qv).max(0.0);
+                        total += *pv;
+                    }
+                    if total > 0.0 {
+                        for pv in p.iter_mut() {
+                            *pv /= total;
+                        }
+                        emitted.push(sampler.draw_from(&p));
+                    } else {
+                        let hist = &self.t.window()[..hist_len];
+                        sampler.probs_in_context(ver.row(i), hist, &mut p);
+                        emitted.push(sampler.draw_from(&p));
+                    }
+                    self.pbuf = p;
+                    break;
+                }
+            }
+        }
+        if a == k {
+            // everything accepted: the bonus token comes free from the
+            // last verify row (full-window context)
+            let bonus = sampler.sample_in_context(ver.row(k), self.t.window());
+            emitted.push(bonus);
+        }
+
+        // ---- rollback to the accepted prefix
+        // target gained k+1 rows; keep `next` + the a accepted drafts
+        // (the final emitted token is NEXT round's input, not cached yet)
+        self.t.truncate_to(base + 1 + a);
+        if a == k {
+            // draft cached d_1..d_{k-1}; d_k rides along to the catch-up
+            self.pending.push(drafts[k - 1]);
+        } else {
+            self.d.truncate_to(d_base + a);
+        }
+
+        self.rounds += 1;
+        self.drafted += k as u64;
+        self.accepted += a as u64;
+        Ok(emitted)
+    }
+
+    /// The target-side session (its `window()` is the emitted context).
+    pub fn target_state(&self) -> &SessionState {
+        &self.t
+    }
+
+    pub fn draft_state(&self) -> &SessionState {
+        &self.d
+    }
+
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    pub fn drafted(&self) -> u64 {
+        self.drafted
+    }
+
+    pub fn accepted(&self) -> u64 {
+        self.accepted
+    }
+
+    /// Fraction of proposed drafts accepted (0 when no rounds ran).
+    pub fn accept_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    /// Mean tokens emitted per round (each round emits `a + 1`).
+    pub fn tokens_per_round(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            (self.accepted + self.rounds) as f64 / self.rounds as f64
+        }
+    }
+}
+
+/// Ergonomic owned-draft wrapper binding a [`SpeculativeState`] to its
+/// target model — the API `examples/generate.rs --spec` uses.
+pub struct SpeculativeSession<'m> {
+    target: SessionModel<'m>,
+    draft: DraftModel,
+    pub state: SpeculativeState,
+}
+
+impl<'m> SpeculativeSession<'m> {
+    pub fn new(
+        target: SessionModel<'m>,
+        kind: DraftKind,
+        k: usize,
+        wrap: WrapPolicy,
+    ) -> Result<SpeculativeSession<'m>> {
+        let draft = DraftModel::build(target.gpt(), kind)?;
+        let state = SpeculativeState::new(&target.gpt().cfg, draft.cfg(), k, wrap)?;
+        Ok(SpeculativeSession { target, draft, state })
+    }
+
+    /// Prefill + decode `steps` tokens speculatively. With a greedy
+    /// sampler the result equals [`super::session::DecodeSession::
+    /// generate_greedy`] token-for-token (while the context stays inside
+    /// `n_ctx` — wrap points differ between the two schedules).
+    pub fn generate(
+        &mut self,
+        prompt: &[u32],
+        steps: usize,
+        sampler: &mut Sampler,
+    ) -> Result<Vec<u32>> {
+        let mut draft_sampler = sampler.fork(DRAFT_SEED_SALT);
+        let logits = self.state.prefill(self.target, self.draft.session_model(), prompt)?;
+        if steps == 0 {
+            return Ok(Vec::new());
+        }
+        let mut next = sampler.sample_in_context(&logits, self.state.target_state().window());
+        let mut out = vec![next];
+        while out.len() < steps {
+            let emitted = self.state.round(
+                self.target,
+                self.draft.session_model(),
+                next,
+                sampler,
+                &mut draft_sampler,
+            )?;
+            next = *emitted.last().expect("round emits at least one token");
+            out.extend_from_slice(&emitted);
+        }
+        out.truncate(steps);
+        Ok(out)
+    }
+
+    pub fn generate_greedy(&mut self, prompt: &[u32], steps: usize) -> Result<Vec<u32>> {
+        self.generate(prompt, steps, &mut Sampler::greedy())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::EngineSpec;
+
+    fn tiny() -> Gpt2Model {
+        Gpt2Model::test_model(2, 16, 2, 16, 32, 7)
+    }
+
+    fn toks(n: usize, seed: u64) -> Vec<u32> {
+        let mut rng = crate::data::prng::SplitMix64::new(seed);
+        (0..n).map(|_| rng.next_below(32) as u32).collect()
+    }
+
+    #[test]
+    fn greedy_spec_equals_plain_greedy_both_drafts() {
+        let m = tiny();
+        let prompt = toks(4, 41);
+        // n_ctx 16: 4 prompt + 8 steps + k+1 <= 16 stays wrap-free
+        let steps = 8;
+        let mut plain = m.session(WrapPolicy::default());
+        let want = plain.generate_greedy(&prompt, steps).unwrap();
+        for kind in [DraftKind::TruncateLayers(1), DraftKind::NaiveInt8] {
+            for k in 1..=3usize {
+                let mut s =
+                    SpeculativeSession::new(SessionModel::Fp(&m), kind, k, WrapPolicy::default())
+                        .unwrap();
+                let got = s.generate_greedy(&prompt, steps).unwrap();
+                assert_eq!(got, want, "kind {kind:?} k {k}");
+                assert!(s.state.rounds() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_spec_on_int_target_matches_int_plain() {
+        // the target itself can be a deployed INT operator stack
+        let q = QuantizedGpt2::new(tiny(), EngineSpec::muxq());
+        let prompt = toks(5, 43);
+        let mut plain = q.session(WrapPolicy::default());
+        let want = plain.generate_greedy(&prompt, 7).unwrap();
+        let mut s = SpeculativeSession::new(
+            SessionModel::Int(&q),
+            DraftKind::TruncateLayers(1),
+            2,
+            WrapPolicy::default(),
+        )
+        .unwrap();
+        assert_eq!(s.generate_greedy(&prompt, 7).unwrap(), want);
+    }
+
+    #[test]
+    fn self_draft_accepts_everything() {
+        // draft == target (full-depth truncation): greedy acceptance is
+        // total, every round emits k+1 tokens
+        let m = tiny();
+        let mut s = SpeculativeSession::new(
+            SessionModel::Fp(&m),
+            DraftKind::TruncateLayers(m.cfg.n_layer),
+            3,
+            WrapPolicy::default(),
+        )
+        .unwrap();
+        let out = s.generate_greedy(&toks(4, 44), 9).unwrap();
+        assert_eq!(out.len(), 9);
+        assert_eq!(s.state.accept_rate(), 1.0);
+        assert_eq!(s.state.tokens_per_round(), 4.0);
+    }
+
+    #[test]
+    fn stochastic_spec_is_seed_reproducible_and_valid() {
+        let m = tiny();
+        let prompt = toks(4, 45);
+        let run = |seed: u64| {
+            let mut s = SpeculativeSession::new(
+                SessionModel::Fp(&m),
+                DraftKind::TruncateLayers(1),
+                2,
+                WrapPolicy::default(),
+            )
+            .unwrap();
+            s.generate(&prompt, 8, &mut Sampler::new(0.9, 8, seed).with_top_p(0.95))
+                .unwrap()
+        };
+        assert_eq!(run(5), run(5), "same seed, same speculative stream");
+        for &t in &run(5) {
+            assert!((t as usize) < 32, "token {t} outside vocab");
+        }
+    }
+
+    #[test]
+    fn misconfigurations_are_rejected() {
+        let m = tiny();
+        assert!(
+            SpeculativeSession::new(SessionModel::Fp(&m), DraftKind::NaiveInt8, 0, WrapPolicy::default())
+                .is_err(),
+            "k = 0"
+        );
+        assert!(
+            SpeculativeSession::new(SessionModel::Fp(&m), DraftKind::NaiveInt8, 2, WrapPolicy::Slide)
+                .is_err(),
+            "slide wrap"
+        );
+        assert!(
+            SpeculativeSession::new(
+                SessionModel::Fp(&m),
+                DraftKind::TruncateLayers(99),
+                2,
+                WrapPolicy::default()
+            )
+            .is_err(),
+            "draft deeper than target"
+        );
+    }
+
+    #[test]
+    fn draft_kind_tags_round_trip() {
+        for kind in [DraftKind::NaiveInt8, DraftKind::TruncateLayers(3)] {
+            assert_eq!(DraftKind::parse(&kind.tag()).unwrap(), kind);
+        }
+        assert!(DraftKind::parse("bogus").is_err());
+        assert!(DraftKind::parse("truncX").is_err());
+    }
+}

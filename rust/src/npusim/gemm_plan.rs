@@ -226,6 +226,87 @@ impl Plan {
     }
 }
 
+/// Pricing of ONE speculative draft-and-verify round vs sequential
+/// decode (`gpt2::speculative` is the host twin): the target scores
+/// k+1 positions in one `t = k+1` pass, the draft pays `k` of its own
+/// decode steps, and the round emits `E[tokens] = Σ_{i=0..k} α^i` for
+/// acceptance rate α (i.i.d. acceptance model — the standard expected
+/// length of the accepted prefix plus the correction/bonus token).
+///
+/// Why speculation wins exactly here: decode is **bytes-dominated**
+/// ([`Plan::decode_step`] is memory-bound on every INT config), so the
+/// (k+1)-row verify streams the same weights as ONE step — its cost
+/// barely grows with k — while each accepted token saves a whole
+/// sequential step. The sim predicts the speedup before CI measures it.
+#[derive(Debug, Clone)]
+pub struct SpecRoundPlan {
+    /// the (k+1)-row verify pass on the target
+    pub verify: Plan,
+    /// one draft decode step (same method/shape scaled by `draft_scale`)
+    pub draft_step: Plan,
+    /// one plain target decode step — the sequential baseline unit
+    pub target_step: Plan,
+    pub k: usize,
+    /// draft cost as a fraction of a target step (depth-truncated draft:
+    /// n_draft_layers / n_layers; quantized draft: its plan ratio)
+    pub draft_scale: f64,
+    /// expected fraction of drafts accepted (α)
+    pub accept_rate: f64,
+}
+
+impl SpecRoundPlan {
+    /// Build from the projection shape `[k_dim, n]` the decode plans
+    /// price (per-layer composition is linear, so one projection's ratio
+    /// is the model's).
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        cfg: &NpuConfig,
+        method: Method,
+        k: usize,
+        k_dim: usize,
+        n: usize,
+        r: usize,
+        bits: u32,
+        exp_factor: u32,
+        draft_scale: f64,
+        accept_rate: f64,
+    ) -> SpecRoundPlan {
+        SpecRoundPlan {
+            verify: Plan::build(cfg, method, k + 1, k_dim, n, r, bits, exp_factor),
+            draft_step: Plan::decode_step(cfg, method, k_dim, n, r, bits, exp_factor),
+            target_step: Plan::decode_step(cfg, method, k_dim, n, r, bits, exp_factor),
+            k,
+            draft_scale,
+            accept_rate,
+        }
+    }
+
+    /// Expected tokens emitted per round: `Σ_{i=0..k} α^i` (accepted
+    /// prefix + the always-emitted correction/bonus).
+    pub fn expected_tokens(&self) -> f64 {
+        let a = self.accept_rate.clamp(0.0, 1.0);
+        (0..=self.k).map(|i| a.powi(i as i32)).sum()
+    }
+
+    /// Cycles of one round: the verify pass plus k draft steps at
+    /// `draft_scale` of a target step each.
+    pub fn round_cycles(&self, cfg: &NpuConfig) -> f64 {
+        self.verify.cost(cfg).cycles()
+            + self.k as f64 * self.draft_scale * self.draft_step.cost(cfg).cycles()
+    }
+
+    /// Predicted tokens/s ratio vs plain sequential decode:
+    /// `(E[tokens] / round_cycles) / (1 / step_cycles)`. Above 1 means
+    /// speculation pays on this config.
+    pub fn tok_s_ratio_vs_sequential(&self, cfg: &NpuConfig) -> f64 {
+        let round = self.round_cycles(cfg);
+        if round == 0.0 {
+            return 1.0;
+        }
+        self.expected_tokens() * self.target_step.cost(cfg).cycles() / round
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -334,5 +415,56 @@ mod tests {
         let c1 = Plan::build(&cfg, Method::Muxq, 1024, 768, 768, 16, 8, 1).cost(&cfg).cycles();
         let c2 = Plan::build(&cfg, Method::Muxq, 1024, 768, 768, 16, 8, 2).cost(&cfg).cycles();
         assert!(c1 <= c2);
+    }
+
+    #[test]
+    fn spec_round_beats_sequential_on_int_decode() {
+        // decode is bytes-dominated, so the (k+1)-row verify streams the
+        // same weights as one step: with a cheap draft (trunc-layer at
+        // quarter depth) and a realistic acceptance rate, every INT
+        // config must predict tokens/s above plain sequential for k >= 2.
+        let cfg = NpuConfig::default();
+        for method in [Method::Naive, Method::Muxq] {
+            for k in 2..=4 {
+                let sp =
+                    SpecRoundPlan::build(&cfg, method, k, 768, 2304, 12, 8, 2, 0.25, 0.8);
+                let ratio = sp.tok_s_ratio_vs_sequential(&cfg);
+                assert!(ratio > 1.0, "{method:?} k={k}: ratio {ratio}");
+            }
+        }
+    }
+
+    #[test]
+    fn spec_round_expected_tokens_and_degenerate_rates() {
+        let cfg = NpuConfig::default();
+        let sp = SpecRoundPlan::build(&cfg, Method::Muxq, 3, 768, 2304, 12, 8, 2, 0.25, 0.8);
+        let want = 1.0 + 0.8 + 0.8_f64.powi(2) + 0.8_f64.powi(3);
+        assert!((sp.expected_tokens() - want).abs() < 1e-12);
+        // alpha=0: every draft rejected, the round still emits the
+        // correction token but pays verify + drafts — worse than plain
+        let reject =
+            SpecRoundPlan::build(&cfg, Method::Muxq, 3, 768, 2304, 12, 8, 2, 0.25, 0.0);
+        assert!((reject.expected_tokens() - 1.0).abs() < 1e-12);
+        assert!(reject.tok_s_ratio_vs_sequential(&cfg) < 1.0);
+        // alpha=1: self-draft limit, k+1 tokens per round
+        let perfect =
+            SpecRoundPlan::build(&cfg, Method::Muxq, 3, 768, 2304, 12, 8, 2, 0.25, 1.0);
+        assert!((perfect.expected_tokens() - 4.0).abs() < 1e-12);
+        assert!(
+            perfect.tok_s_ratio_vs_sequential(&cfg)
+                > reject.tok_s_ratio_vs_sequential(&cfg)
+        );
+    }
+
+    #[test]
+    fn spec_round_cycles_decompose() {
+        let cfg = NpuConfig::default();
+        let sp = SpecRoundPlan::build(&cfg, Method::Naive, 2, 768, 2304, 0, 8, 1, 0.5, 0.8);
+        let want = sp.verify.cost(&cfg).cycles()
+            + 2.0 * 0.5 * sp.draft_step.cost(&cfg).cycles();
+        assert!((sp.round_cycles(&cfg) - want).abs() < 1e-9);
+        // a free draft (scale 0) reduces the round to the verify pass
+        let free = SpecRoundPlan::build(&cfg, Method::Naive, 2, 768, 2304, 0, 8, 1, 0.0, 0.8);
+        assert_eq!(free.round_cycles(&cfg), free.verify.cost(&cfg).cycles());
     }
 }

@@ -46,8 +46,8 @@ use super::packed::{self, PackedMatI8, ParallelGemm};
 use crate::npusim::gemm_plan::Plan;
 use crate::npusim::NpuConfig;
 use anyhow::{bail, Result};
+use std::cell::RefCell;
 use std::fmt;
-use std::sync::Mutex;
 
 // ---------------------------------------------------------------- spec
 
@@ -235,20 +235,17 @@ impl EngineSpec {
                 spec: *self,
                 qw: PackedWeight::quantize(w_eff, self.w_qmax(), self.w_gran, bias),
                 smooth_s,
-                scratch: Mutex::new(IntScratch::new()),
             }),
             Method::Muxq => Box::new(MuxqLinear {
                 spec: *self,
                 qw: PackedWeight::quantize(w_eff, self.w_qmax(), self.w_gran, bias),
                 smooth_s,
-                scratch: Mutex::new(IntScratch::new()),
             }),
             Method::LlmInt8 => Box::new(LlmInt8Linear {
                 spec: *self,
                 qw: PackedWeight::quantize(w_eff, self.w_qmax(), self.w_gran, bias),
                 w_fp: w_eff.clone(),
                 smooth_s,
-                scratch: Mutex::new(IntScratch::new()),
             }),
         }
     }
@@ -308,6 +305,25 @@ pub trait QuantLinear: Send + Sync {
     /// bit for bit (a single row IS its own batch).
     fn forward_row_into(&self, x: &[f32], y: &mut [f32]);
 
+    /// Many rows through the ROW-INDEPENDENT semantics in one call (`y`
+    /// resized): results are defined to be bit-identical to `m`
+    /// [`QuantLinear::forward_row_into`] calls — per-row masks, per-row
+    /// scales — but methods may coalesce rows into fewer GEMMs when
+    /// that provably cannot change the arithmetic (MUXQ batches
+    /// mask-sharing runs; see its override). This is the session layer's
+    /// multi-row path: prefill and the speculative k-row verify both
+    /// route here.
+    fn forward_rows_into(&self, x: &MatF32, y: &mut MatF32) {
+        let (k, n) = self.shape();
+        debug_assert_eq!(x.cols, k);
+        y.rows = x.rows;
+        y.cols = n;
+        y.data.resize(x.rows * n, 0.0);
+        for r in 0..x.rows {
+            self.forward_row_into(x.row(r), &mut y.data[r * n..(r + 1) * n]);
+        }
+    }
+
     /// The npusim execution plan of one `m`-row call with `r` live
     /// outlier channels — simulated-hardware pricing derived from the
     /// same object that runs on the host.
@@ -362,10 +378,18 @@ impl PackedWeight {
     }
 }
 
-/// Reusable per-operator buffers: on the steady-state path the only
+/// Reusable INT-operator buffers: on the steady-state path the only
 /// per-call allocation is the caller's output matrix — quantized
 /// operands, accumulators, scale vectors, masks/index lists and the
 /// smoothed-activation copy are all resized in place.
+///
+/// Lives in a PER-THREAD pool ([`with_scratch`]), not per operator:
+/// one `IntScratch` per deployed site used to mean 4·n_layer live
+/// buffer sets per variant (plus a Mutex acquire on every projection),
+/// which scales with model depth exactly where speculative k-row
+/// scoring and big-batch serving multiply call rates. Operator forwards
+/// never nest, so one scratch per thread serves every operator; each
+/// call resizes the buffers it touches.
 struct IntScratch {
     /// smoothed activations (only touched when the spec smooths)
     xs: MatF32,
@@ -415,6 +439,18 @@ impl IntScratch {
             }
         }
     }
+}
+
+thread_local! {
+    /// The shared per-thread scratch pool — see [`IntScratch`].
+    static SCRATCH: RefCell<IntScratch> = RefCell::new(IntScratch::new());
+}
+
+/// Run `f` with this thread's shared [`IntScratch`]. Panics on
+/// re-entrant use (a projection calling a projection), which no
+/// operator does — the buffers hold one call's state at a time.
+fn with_scratch<R>(f: impl FnOnce(&mut IntScratch) -> R) -> R {
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
 }
 
 /// Divide activations by the smooth scales into `buf` (matching
@@ -673,18 +709,22 @@ pub struct NaiveLinear {
     spec: EngineSpec,
     qw: PackedWeight,
     smooth_s: Option<Vec<f32>>,
-    scratch: Mutex<IntScratch>,
 }
 
 impl NaiveLinear {
     fn project(&self, x: &MatF32, y: &mut MatF32) {
         let qmax = self.spec.ia_qmax();
-        let mut guard = self.scratch.lock().unwrap();
-        let sc = &mut *guard;
-        let xs = smoothed(x, &self.smooth_s, &mut sc.xs);
-        quantize_rows_into(xs, qmax, self.spec.act_gran, &mut sc.xq, &mut sc.sx);
-        packed::matmul_i8_packed_into(&sc.xq, &self.qw.packed, &mut sc.acc, ParallelGemm::global());
-        dequant_bias_into(&sc.acc, &sc.sx, &self.qw.scales, None, &self.qw.bias, y);
+        with_scratch(|sc| {
+            let xs = smoothed(x, &self.smooth_s, &mut sc.xs);
+            quantize_rows_into(xs, qmax, self.spec.act_gran, &mut sc.xq, &mut sc.sx);
+            packed::matmul_i8_packed_into(
+                &sc.xq,
+                &self.qw.packed,
+                &mut sc.acc,
+                ParallelGemm::global(),
+            );
+            dequant_bias_into(&sc.acc, &sc.sx, &self.qw.scales, None, &self.qw.bias, y);
+        });
     }
 }
 
@@ -716,12 +756,17 @@ impl QuantLinear for NaiveLinear {
         debug_assert_eq!(x.len(), k);
         debug_assert_eq!(y.len(), n);
         let qmax = self.spec.ia_qmax();
-        let mut guard = self.scratch.lock().unwrap();
-        let sc = &mut *guard;
-        sc.stage_row(x, &self.smooth_s);
-        quantize_rows_into(&sc.xrow, qmax, Granularity::PerRow, &mut sc.xq, &mut sc.sx);
-        packed::matmul_i8_packed_into(&sc.xq, &self.qw.packed, &mut sc.acc, ParallelGemm::global());
-        dequant_bias_row(&sc.acc.data[..n], sc.sx[0], &self.qw.scales, None, &self.qw.bias, y);
+        with_scratch(|sc| {
+            sc.stage_row(x, &self.smooth_s);
+            quantize_rows_into(&sc.xrow, qmax, Granularity::PerRow, &mut sc.xq, &mut sc.sx);
+            packed::matmul_i8_packed_into(
+                &sc.xq,
+                &self.qw.packed,
+                &mut sc.acc,
+                ParallelGemm::global(),
+            );
+            dequant_bias_row(&sc.acc.data[..n], sc.sx[0], &self.qw.scales, None, &self.qw.bias, y);
+        });
     }
 }
 
@@ -735,7 +780,6 @@ pub struct MuxqLinear {
     spec: EngineSpec,
     qw: PackedWeight,
     smooth_s: Option<Vec<f32>>,
-    scratch: Mutex<IntScratch>,
 }
 
 impl MuxqLinear {
@@ -814,37 +858,107 @@ impl QuantLinear for MuxqLinear {
 
     fn forward_into(&self, x: &MatF32, y: &mut MatF32) {
         let n = self.qw.packed.cols;
-        let mut guard = self.scratch.lock().unwrap();
-        let sc = &mut *guard;
-        y.rows = x.rows;
-        y.cols = n;
-        y.data.resize(x.rows * n, 0.0);
-        if self.smooth_s.is_some() {
-            // move the smoothed copy out of the scratch so the rest of
-            // the struct can be borrowed mutably alongside it (put back
-            // after; the placeholder is 0-element — no allocation)
-            smoothed(x, &self.smooth_s, &mut sc.xs);
-            let xs = std::mem::replace(&mut sc.xs, MatF32::zeros(0, 0));
-            outlier_mask_into(&xs, self.spec.muxq.theta, &mut sc.mask);
-            self.project_masked(&xs, sc, &mut y.data);
-            sc.xs = xs;
-        } else {
-            outlier_mask_into(x, self.spec.muxq.theta, &mut sc.mask);
-            self.project_masked(x, sc, &mut y.data);
-        }
+        with_scratch(|sc| {
+            y.rows = x.rows;
+            y.cols = n;
+            y.data.resize(x.rows * n, 0.0);
+            if self.smooth_s.is_some() {
+                // move the smoothed copy out of the scratch so the rest
+                // of the struct can be borrowed mutably alongside it
+                // (put back after; the placeholder is 0-element — no
+                // allocation)
+                smoothed(x, &self.smooth_s, &mut sc.xs);
+                let xs = std::mem::replace(&mut sc.xs, MatF32::zeros(0, 0));
+                outlier_mask_into(&xs, self.spec.muxq.theta, &mut sc.mask);
+                self.project_masked(&xs, sc, &mut y.data);
+                sc.xs = xs;
+            } else {
+                outlier_mask_into(x, self.spec.muxq.theta, &mut sc.mask);
+                self.project_masked(x, sc, &mut y.data);
+            }
+        });
     }
 
     fn forward_row_into(&self, x: &[f32], y: &mut [f32]) {
         let (k, n) = self.shape();
         debug_assert_eq!(x.len(), k);
         debug_assert_eq!(y.len(), n);
-        let mut guard = self.scratch.lock().unwrap();
-        let sc = &mut *guard;
-        sc.stage_row(x, &self.smooth_s);
-        outlier_mask_into(&sc.xrow, self.spec.muxq.theta, &mut sc.mask);
-        let xrow = std::mem::replace(&mut sc.xrow, MatF32::zeros(0, 0));
-        self.project_masked(&xrow, sc, y);
-        sc.xrow = xrow;
+        with_scratch(|sc| {
+            sc.stage_row(x, &self.smooth_s);
+            outlier_mask_into(&sc.xrow, self.spec.muxq.theta, &mut sc.mask);
+            let xrow = std::mem::replace(&mut sc.xrow, MatF32::zeros(0, 0));
+            self.project_masked(&xrow, sc, y);
+            sc.xrow = xrow;
+        });
+    }
+
+    /// Row-independent multi-row path with MASK-GROUPED body GEMMs: at
+    /// per-row activation granularity, consecutive rows whose per-row
+    /// outlier masks are identical share one `project_masked` call — one
+    /// Body GEMM + one Aux GEMM per run instead of per row. Bit-exact
+    /// against the per-row loop because per-row scales decouple the
+    /// rows ([`fused_decompose_quantize`] computes scales row-wise) and
+    /// the INT GEMMs are exact integer arithmetic at any M. Prefill
+    /// activations are temporally smooth, so neighbouring rows share
+    /// masks often enough for real coalescing (channel-persistent
+    /// outliers — the paper's Fig. 1 observation).
+    ///
+    /// Per-TENSOR activation granularity couples every row of a call
+    /// through the shared abs-max, so grouping would change results —
+    /// that configuration keeps the strict per-row loop.
+    fn forward_rows_into(&self, x: &MatF32, y: &mut MatF32) {
+        let (k, n) = self.shape();
+        debug_assert_eq!(x.cols, k);
+        y.rows = x.rows;
+        y.cols = n;
+        y.data.resize(x.rows * n, 0.0);
+        if x.rows == 0 {
+            return;
+        }
+        if self.spec.act_gran != Granularity::PerRow {
+            for r in 0..x.rows {
+                self.forward_row_into(x.row(r), &mut y.data[r * n..(r + 1) * n]);
+            }
+            return;
+        }
+        let theta = self.spec.muxq.theta;
+        with_scratch(|sc| {
+            // smooth the whole batch once (per-element divide — the same
+            // arithmetic `stage_row` applies row by row)
+            let xs_owned = if self.smooth_s.is_some() {
+                smoothed(x, &self.smooth_s, &mut sc.xs);
+                Some(std::mem::replace(&mut sc.xs, MatF32::zeros(0, 0)))
+            } else {
+                None
+            };
+            let xs: &MatF32 = xs_owned.as_ref().unwrap_or(x);
+            let same_mask = |a: usize, b: usize| {
+                xs.row(a)
+                    .iter()
+                    .zip(xs.row(b))
+                    .all(|(va, vb)| (va.abs() > theta) == (vb.abs() > theta))
+            };
+            let mut run = std::mem::replace(&mut sc.xrow, MatF32::zeros(0, 0));
+            let mut r0 = 0;
+            while r0 < xs.rows {
+                let mut r1 = r0 + 1;
+                while r1 < xs.rows && same_mask(r0, r1) {
+                    r1 += 1;
+                }
+                sc.mask.clear();
+                sc.mask.extend(xs.row(r0).iter().map(|v| v.abs() > theta));
+                run.rows = r1 - r0;
+                run.cols = k;
+                run.data.clear();
+                run.data.extend_from_slice(&xs.data[r0 * k..r1 * k]);
+                self.project_masked(&run, sc, &mut y.data[r0 * n..r1 * n]);
+                r0 = r1;
+            }
+            sc.xrow = run;
+            if let Some(owned) = xs_owned {
+                sc.xs = owned;
+            }
+        });
     }
 }
 
@@ -864,7 +978,6 @@ pub struct LlmInt8Linear {
     /// resident FP weights for the outlier leg (fp16 stand-in)
     w_fp: MatF32,
     smooth_s: Option<Vec<f32>>,
-    scratch: Mutex<IntScratch>,
 }
 
 impl LlmInt8Linear {
@@ -951,34 +1064,34 @@ impl QuantLinear for LlmInt8Linear {
 
     fn forward_into(&self, x: &MatF32, y: &mut MatF32) {
         let n = self.qw.packed.cols;
-        let mut guard = self.scratch.lock().unwrap();
-        let sc = &mut *guard;
-        y.rows = x.rows;
-        y.cols = n;
-        y.data.resize(x.rows * n, 0.0);
-        if self.smooth_s.is_some() {
-            smoothed(x, &self.smooth_s, &mut sc.xs);
-            let xs = std::mem::replace(&mut sc.xs, MatF32::zeros(0, 0));
-            outlier_mask_into(&xs, self.spec.muxq.theta, &mut sc.mask);
-            self.project(&xs, sc, &mut y.data);
-            sc.xs = xs;
-        } else {
-            outlier_mask_into(x, self.spec.muxq.theta, &mut sc.mask);
-            self.project(x, sc, &mut y.data);
-        }
+        with_scratch(|sc| {
+            y.rows = x.rows;
+            y.cols = n;
+            y.data.resize(x.rows * n, 0.0);
+            if self.smooth_s.is_some() {
+                smoothed(x, &self.smooth_s, &mut sc.xs);
+                let xs = std::mem::replace(&mut sc.xs, MatF32::zeros(0, 0));
+                outlier_mask_into(&xs, self.spec.muxq.theta, &mut sc.mask);
+                self.project(&xs, sc, &mut y.data);
+                sc.xs = xs;
+            } else {
+                outlier_mask_into(x, self.spec.muxq.theta, &mut sc.mask);
+                self.project(x, sc, &mut y.data);
+            }
+        });
     }
 
     fn forward_row_into(&self, x: &[f32], y: &mut [f32]) {
         let (k, n) = self.shape();
         debug_assert_eq!(x.len(), k);
         debug_assert_eq!(y.len(), n);
-        let mut guard = self.scratch.lock().unwrap();
-        let sc = &mut *guard;
-        sc.stage_row(x, &self.smooth_s);
-        outlier_mask_into(&sc.xrow, self.spec.muxq.theta, &mut sc.mask);
-        let xrow = std::mem::replace(&mut sc.xrow, MatF32::zeros(0, 0));
-        self.project(&xrow, sc, y);
-        sc.xrow = xrow;
+        with_scratch(|sc| {
+            sc.stage_row(x, &self.smooth_s);
+            outlier_mask_into(&sc.xrow, self.spec.muxq.theta, &mut sc.mask);
+            let xrow = std::mem::replace(&mut sc.xrow, MatF32::zeros(0, 0));
+            self.project(&xrow, sc, y);
+            sc.xrow = xrow;
+        });
     }
 }
 
@@ -1112,6 +1225,81 @@ mod tests {
             op.forward_row_into(x.row(0), &mut row);
             assert_eq!(batch.data, row, "{}", spec.tag());
         }
+    }
+
+    #[test]
+    fn forward_rows_into_matches_row_loop_bitwise() {
+        // satellite: the MUXQ mask-grouped multi-row path must equal the
+        // strict per-row loop bit for bit — per-row scales decouple the
+        // rows, integer GEMMs are exact at any M. Rows are built so the
+        // mask CHANGES mid-batch (rows 0-2 share outliers in col 3,
+        // rows 3-5 in col 9, rows 6-7 have none): multiple runs form.
+        let w = mat(32, 12, 15, &[], 1.0);
+        let bias: Vec<f32> = (0..12).map(|i| i as f32 * 0.1 - 0.3).collect();
+        let mut x = mat(8, 32, 16, &[], 1.0);
+        for r in 0..3 {
+            *x.at_mut(r, 3) = 30.0 + r as f32;
+        }
+        for r in 3..6 {
+            *x.at_mut(r, 9) = -28.0 - r as f32;
+        }
+        for spec in [
+            EngineSpec::muxq(),
+            EngineSpec::muxq().with_smooth(0.5),
+            EngineSpec::muxq().with_granularity(Granularity::PerTensor, Granularity::PerTensor),
+            EngineSpec::naive(),
+            EngineSpec::llmint8(),
+            EngineSpec::fp16(),
+        ] {
+            let op = spec.pack(&w, &bias);
+            let mut grouped = MatF32::zeros(0, 0);
+            op.forward_rows_into(&x, &mut grouped);
+            assert_eq!((grouped.rows, grouped.cols), (8, 12), "{}", spec.tag());
+            for r in 0..8 {
+                let mut row = vec![0.0f32; 12];
+                op.forward_row_into(x.row(r), &mut row);
+                assert_eq!(grouped.row(r), &row[..], "{} row {r}", spec.tag());
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_pool_is_shared_and_thread_deterministic() {
+        // the per-thread pool must (a) give every operator the same
+        // results it got with private scratch, (b) keep threads fully
+        // isolated: N threads hammering DIFFERENT operators concurrently
+        // each reproduce the single-threaded answer exactly
+        let x = mat(6, 32, 17, &[4], 28.0);
+        let w1 = mat(32, 12, 18, &[], 1.0);
+        let w2 = mat(32, 8, 19, &[], 1.0);
+        let muxq = EngineSpec::muxq().pack(&w1, &vec![0.0; 12]);
+        let naive = EngineSpec::naive().pack(&w2, &vec![0.0; 8]);
+        // interleaving two operators on ONE thread shares one scratch
+        let a1 = muxq.forward(&x);
+        let b1 = naive.forward(&x);
+        let a2 = muxq.forward(&x);
+        assert_eq!(a1.data, a2.data, "interleaved reuse changes nothing");
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut rows = MatF32::zeros(0, 0);
+                        for _ in 0..5 {
+                            let a = muxq.forward(&x);
+                            assert_eq!(a.data, a1.data);
+                            let b = naive.forward(&x);
+                            assert_eq!(b.data, b1.data);
+                            muxq.forward_rows_into(&x, &mut rows);
+                        }
+                        rows.data
+                    })
+                })
+                .collect();
+            let all: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+            for d in &all[1..] {
+                assert_eq!(d, &all[0], "thread results identical");
+            }
+        });
     }
 
     #[test]

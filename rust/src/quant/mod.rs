@@ -32,6 +32,7 @@
 //!
 //! | trait impl (spec tag) | batch `forward_into` | kernels on the hot path |
 //! |---|---|---|
+//! | any, session multi-row (`forward_rows_into`) | prefill rows + the speculative k-row verify (`gpt2::speculative`) | per-row loop over `forward_row_into`; `MuxqLinear` coalesces consecutive rows sharing an outlier mask into one body GEMM (PerRow act scales ⇒ bit-identical to the loop) |
 //! | `Fp32Linear` (`fp16-*`) | plain GEMM + bias | [`gemm::matmul_f32`] (f32 stands in for FP16) |
 //! | `NaiveLinear` (`naive-*`) | per-row/tensor abs-max quantize → one INT GEMM | [`packed::matmul_i8_packed_into`] |
 //! | `MuxqLinear` (`muxq-*`) | fused decompose+quantize → Body GEMM + skinny Aux | Body: [`packed::matmul_i8_packed_into`]; Aux: [`packed::matmul_i8_rows_subset_into`] reading outlier rows out of the ONE packed W |

@@ -1,0 +1,261 @@
+//! Speculative-decoding oracles. Draft-and-verify must be LOSSLESS for
+//! greedy decoding — token-for-token equal to the plain incremental
+//! session across random models, draft kinds, k, and both FP and
+//! true-INT targets — and its rejection rollback must leave the target
+//! KV ring bit-identical to a session that never saw the rejected
+//! drafts. Losslessness is an exact claim (the verify pass reuses the
+//! session oracle rows), so every comparison here is `==`, never an
+//! epsilon.
+
+use muxq::gpt2::{
+    argmax, DraftKind, Gpt2Model, QuantizedGpt2, Sampler, SessionModel, SessionState,
+    SpeculativeSession, SpeculativeState, WrapPolicy,
+};
+use muxq::quant::EngineSpec;
+use muxq::util::proptest::{prop, prop_assert, Gen};
+
+/// Small random model: 1–3 layers, d_head 4–8, n_ctx 8–16, vocab 32.
+fn model_for(g: &mut Gen) -> Gpt2Model {
+    let n_layer = g.usize(1, 3);
+    let n_head = *g.choice(&[1usize, 2, 4]);
+    let d_model = n_head * g.usize(4, 8);
+    let n_ctx = g.usize(8, 16);
+    Gpt2Model::test_model(n_layer, d_model, n_head, n_ctx, 32, g.u64(1, 1 << 30))
+}
+
+fn prompt_for(g: &mut Gen, len: usize) -> Vec<u32> {
+    (0..len).map(|_| g.usize(0, 31) as u32).collect()
+}
+
+fn err_str<T>(r: anyhow::Result<T>) -> Result<T, String> {
+    r.map_err(|e| format!("{e:#}"))
+}
+
+fn draft_for(g: &mut Gen, n_layer: usize) -> DraftKind {
+    if g.bool() {
+        DraftKind::NaiveInt8
+    } else {
+        DraftKind::TruncateLayers(g.usize(1, n_layer))
+    }
+}
+
+#[test]
+fn prop_greedy_spec_lossless_vs_plain() {
+    // the tentpole claim: greedy speculation == plain greedy, for every
+    // k, both draft kinds, FP and INT targets. Bounds keep both
+    // schedules wrap-free (prompt + steps + k <= n_ctx): wrap POINTS
+    // differ between spec and plain, losslessness holds inside a window.
+    prop("greedy spec == plain greedy", |g| {
+        let use_int = g.bool();
+        let fp = model_for(g);
+        let n_layer = fp.cfg.n_layer;
+        let n_ctx = fp.cfg.n_ctx;
+        let q;
+        let sm = if use_int {
+            q = QuantizedGpt2::new(fp, EngineSpec::muxq());
+            SessionModel::Int(&q)
+        } else {
+            q = QuantizedGpt2::new(fp, EngineSpec::naive()); // fp lives inside
+            SessionModel::Fp(&q.fp)
+        };
+        let k = g.usize(1, (n_ctx - 4).min(3));
+        let plen = g.usize(1, n_ctx - k - 2);
+        let steps = g.usize(1, n_ctx - k - plen);
+        let prompt = prompt_for(g, plen);
+        let kind = draft_for(g, n_layer);
+
+        let mut plain = SessionState::new(&sm.gpt().cfg, WrapPolicy::default());
+        let mut logits = err_str(plain.prefill(sm, &prompt))?;
+        let mut want = Vec::new();
+        for _ in 0..steps {
+            let next = argmax(&logits);
+            want.push(next);
+            if want.len() < steps {
+                logits = err_str(plain.decode_step(sm, next))?;
+            }
+        }
+
+        let mut spec = err_str(SpeculativeSession::new(sm, kind, k, WrapPolicy::default()))?;
+        let got = err_str(spec.generate_greedy(&prompt, steps))?;
+        prop_assert(
+            got == want,
+            format!("int={use_int} {kind:?} k={k} plen={plen} steps={steps}: {got:?} != {want:?}"),
+        )?;
+        // the accounting must be consistent: every accepted draft is a
+        // drafted token, and each round emits accepted/rounds + 1 mean
+        let st = &spec.state;
+        prop_assert(st.accepted() <= st.drafted(), "accepted > drafted")?;
+        if st.rounds() > 0 {
+            prop_assert(st.drafted() == st.rounds() * k as u64, "k drafts per round")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rejection_rollback_restores_kv_state() {
+    // after any mix of accept/reject rounds, the target session's live
+    // window + KV ring must be bit-identical to a fresh session that
+    // prefilled the emitted context directly — i.e. rejected drafts
+    // leave NO trace. Rounds are driven by hand so the state and the
+    // emitted stream stay in lockstep (the generate() wrapper may
+    // truncate its RETURN without truncating the session).
+    prop("rollback leaves no trace in the target ring", |g| {
+        let fp = model_for(g);
+        let n_layer = fp.cfg.n_layer;
+        let n_ctx = fp.cfg.n_ctx;
+        let cfg = fp.cfg.clone();
+        let holder = QuantizedGpt2::new(fp, EngineSpec::muxq());
+        let sm = if g.bool() { SessionModel::Int(&holder) } else { SessionModel::Fp(&holder.fp) };
+        let k = g.usize(1, (n_ctx - 4).min(3));
+        let plen = g.usize(1, n_ctx - k - 1);
+        let rounds = g.usize(1, (n_ctx - plen) / (k + 1)); // wrap-free
+        let prompt = prompt_for(g, plen);
+        let kind = draft_for(g, n_layer);
+        // a warm sampler stream forces genuine rejections some of the time
+        let mut smp =
+            if g.bool() { Sampler::greedy() } else { Sampler::new(g.f32(0.6, 1.4), 8, g.u64(1, 1 << 30)) };
+        let mut dsm = smp.fork(muxq::gpt2::speculative::DRAFT_SEED_SALT);
+
+        let draft = err_str(muxq::gpt2::DraftModel::build(sm.gpt(), kind))?;
+        let mut st = err_str(SpeculativeState::new(&cfg, draft.cfg(), k, WrapPolicy::default()))?;
+        let logits = err_str(st.prefill(sm, draft.session_model(), &prompt))?;
+        let mut next = smp.sample_in_context(&logits, st.target_state().window());
+        let mut ctx = prompt.clone();
+        ctx.push(next);
+        for _ in 0..rounds {
+            let toks = err_str(st.round(sm, draft.session_model(), next, &mut smp, &mut dsm))?;
+            next = *toks.last().expect("round emits >= 1 token");
+            ctx.extend_from_slice(&toks);
+        }
+
+        // the live window is exactly the emitted context minus its last
+        // token (the last token is the NEXT decode input, never cached)
+        let t = st.target_state();
+        prop_assert(
+            t.window() == &ctx[..ctx.len() - 1],
+            format!("{kind:?} k={k}: window != emitted prefix"),
+        )?;
+        let mut oracle = SessionState::new(&cfg, WrapPolicy::default());
+        err_str(oracle.prefill(sm, &ctx[..ctx.len() - 1]))?;
+        for (li, (a, b)) in t.caches().iter().zip(oracle.caches()).enumerate() {
+            prop_assert(a.len() == b.len(), format!("layer {li}: ring length"))?;
+            for j in 0..a.len() {
+                prop_assert(
+                    a.k_row(j) == b.k_row(j) && a.v_row(j) == b.v_row(j),
+                    format!("layer {li} logical row {j}: ring contents differ"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spec_survives_wrap_past_n_ctx() {
+    // generate well past the window: reprefill rollback inside rounds
+    // must keep emitting finite, in-vocab tokens at the requested count
+    prop("spec generation survives wrap", |g| {
+        let m = model_for(g);
+        let n_layer = m.cfg.n_layer;
+        let n_ctx = m.cfg.n_ctx;
+        let k = g.usize(1, (n_ctx - 4).min(3));
+        let plen = g.usize(1, n_ctx);
+        let steps = n_ctx + g.usize(1, 6); // guaranteed to wrap
+        let kind = draft_for(g, n_layer);
+        let mut spec = err_str(SpeculativeSession::new(
+            SessionModel::Fp(&m),
+            kind,
+            k,
+            WrapPolicy::default(),
+        ))?;
+        let got = err_str(spec.generate_greedy(&prompt_for(g, plen), steps))?;
+        prop_assert(got.len() == steps, format!("{} != {steps} tokens", got.len()))?;
+        prop_assert(got.iter().all(|&t| t < 32), "out-of-vocab token emitted")?;
+        prop_assert(
+            spec.state.target_state().window().len() <= n_ctx,
+            "target window exceeded n_ctx",
+        )?;
+        prop_assert(
+            spec.state.target_state().prefills() > 1,
+            "must have re-prefilled past n_ctx",
+        )
+    });
+}
+
+#[test]
+fn prop_stochastic_spec_reproducible_and_rates_sane() {
+    // sampled speculation: same seed -> identical stream; acceptance
+    // bookkeeping stays within its definitions
+    prop("seeded stochastic spec replays", |g| {
+        let m = model_for(g);
+        let n_layer = m.cfg.n_layer;
+        let n_ctx = m.cfg.n_ctx;
+        let k = g.usize(1, (n_ctx - 4).min(3));
+        let plen = g.usize(1, n_ctx - k - 2);
+        let steps = g.usize(1, n_ctx - k - plen);
+        let prompt = prompt_for(g, plen);
+        let kind = draft_for(g, n_layer);
+        let seed = g.u64(1, 1 << 40);
+        let temperature = g.f32(0.5, 1.5);
+        let run = || -> Result<(Vec<u32>, f64), String> {
+            let mut spec =
+                err_str(SpeculativeSession::new(SessionModel::Fp(&m), kind, k, WrapPolicy::default()))?;
+            let mut smp = Sampler::new(temperature, 8, seed).with_top_p(0.95);
+            let out = err_str(spec.generate(&prompt, steps, &mut smp))?;
+            Ok((out, spec.state.accept_rate()))
+        };
+        let (a, ra) = run()?;
+        let (b, rb) = run()?;
+        prop_assert(a == b, "same seed must replay the identical stream")?;
+        prop_assert(ra == rb, "acceptance bookkeeping must replay too")?;
+        prop_assert((0.0..=1.0).contains(&ra), format!("accept rate {ra} out of range"))?;
+        prop_assert(a.len() == steps && a.iter().all(|&t| t < 32), "stream shape")
+    });
+}
+
+#[test]
+fn spec_state_counters_cross_check_session_oracle() {
+    // deterministic cross-check of the stats identities on a fixed model:
+    // tokens_per_round == (accepted + rounds) / rounds, and a self-draft
+    // (full-depth truncation) accepts everything
+    let m = Gpt2Model::test_model(2, 16, 2, 16, 32, 123);
+    let sm = SessionModel::Fp(&m);
+    let mut spec =
+        SpeculativeSession::new(sm, DraftKind::TruncateLayers(2), 3, WrapPolicy::default())
+            .unwrap();
+    let out = spec.generate_greedy(&[1, 2, 3, 4], 8).unwrap();
+    assert_eq!(out.len(), 8);
+    let st = &spec.state;
+    assert_eq!(st.accept_rate(), 1.0, "a full-depth draft IS the target");
+    assert_eq!(st.tokens_per_round(), 4.0, "k+1 tokens per round at k=3");
+    // and the plain session agrees with the emitted stream
+    let mut plain = m.session(WrapPolicy::default());
+    assert_eq!(plain.generate_greedy(&[1, 2, 3, 4], 8).unwrap(), out);
+}
+
+#[test]
+fn spec_misconfig_is_rejected_up_front() {
+    let m = Gpt2Model::test_model(1, 8, 1, 8, 32, 5);
+    let sm = SessionModel::Fp(&m);
+    assert!(
+        SpeculativeSession::new(sm, DraftKind::NaiveInt8, 0, WrapPolicy::default()).is_err(),
+        "k = 0"
+    );
+    assert!(
+        SpeculativeSession::new(sm, DraftKind::NaiveInt8, 2, WrapPolicy::Slide).is_err(),
+        "Slide wrap cannot roll back"
+    );
+    assert!(
+        SpeculativeSession::new(sm, DraftKind::TruncateLayers(7), 2, WrapPolicy::default())
+            .is_err(),
+        "draft deeper than the target"
+    );
+    assert!(
+        SpeculativeSession::new(sm, DraftKind::NaiveInt8, 7, WrapPolicy::default()).is_err(),
+        "k + 1 must leave room inside n_ctx"
+    );
+    // SpeculativeState rejects mismatched wrap policies independently of
+    // the session wrapper
+    assert!(SpeculativeState::new(&m.cfg, &m.cfg, 2, WrapPolicy::Slide).is_err());
+}
