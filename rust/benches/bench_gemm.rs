@@ -18,8 +18,8 @@
 use muxq::data::prng::SplitMix64;
 use muxq::gpt2::speculative::DRAFT_SEED_SALT;
 use muxq::gpt2::{
-    argmax, DraftKind, DraftModel, Gpt2Model, QuantizedGpt2, Sampler, SessionModel,
-    SpeculativeState, WrapPolicy,
+    argmax, DraftKind, DraftModel, Gpt2Model, KvPool, PrefixCache, QuantizedGpt2, Sampler,
+    SessionModel, SessionState, SpeculativeState, WrapPolicy,
 };
 use muxq::quant::EngineSpec;
 use muxq::quant::gemm::{matmul_f32, quant_matmul};
@@ -382,6 +382,45 @@ fn main() {
         decode_tok_s_spec / decode_tok_s[1]
     );
 
+    // ---- paged KV serving (pool occupancy + prefix sharing) ----
+    // four sessions share the 16-token system prompt copy-on-write:
+    // paged_fill is the pool occupancy that results, shared_page_ratio
+    // the peak fraction of the pool serving more than one owner — the
+    // two ratios the serving stats surface, recorded here so the
+    // baseline tracks them across PRs. Paged decode itself is also
+    // timed: same operator path as the ring, only the KV addressing
+    // changes.
+    Bencher::header("paged KV (96-page pool, 8 rows/page, shared 16-token prefix)");
+    let pool = KvPool::new(96, 8, q_spec.fp.cfg.d_model);
+    let mut pc = PrefixCache::new(pool.clone(), 8);
+    let mut paged_sessions = Vec::new();
+    for t in 0..4u32 {
+        let mut s = SessionState::new_paged(&q_spec.fp.cfg, WrapPolicy::Slide, &pool);
+        let mut p = prompt.clone();
+        p.push(t);
+        s.prefill_cached(sm_spec, &p, &mut pc).unwrap();
+        paged_sessions.push(s);
+    }
+    pool.note_shared(paged_sessions.iter().map(|s| s.shared_pages()).sum());
+    let paged_fill = pool.pages_in_use() as f64 / pool.capacity() as f64;
+    let shared_page_ratio = pool.shared_pages_note() as f64 / pool.capacity() as f64;
+    {
+        let sess = &mut paged_sessions[0];
+        let mut next = 1u32;
+        let stats = b.bench("decode_step/paged-muxq", || {
+            let l = sess.decode_step(sm_spec, next).unwrap();
+            next = argmax(&l);
+            next
+        });
+        println!(
+            "\npaged decode {:.0} tok/s ({:.2}x vs ring muxq decode)   \
+             pool fill {paged_fill:.2}   shared-page ratio {shared_page_ratio:.2}",
+            stats.per_sec(),
+            stats.per_sec() / decode_tok_s[1]
+        );
+    }
+    drop(paged_sessions);
+
     // ---- perf-trajectory record ----
     // packed_*_ms track the auto-routed engine (dispatch-selected
     // kernel + tile); wide44_1t_ms pins the PR-1 comparator so the
@@ -397,7 +436,7 @@ fn main() {
         None => ("null".to_string(), "null".to_string(), "null".to_string()),
     };
     let json = format!(
-        "{{\n  \"bench\": \"bench_gemm\",\n  \"bootstrap\": false,\n  \"shape\": [{gm}, {gk}, {gn}],\n  \"dispatch_kernel\": \"{}\",\n  \"seed_i8_ms\": {seed_ms:.4},\n  \"packed_1t_ms\": {:.4},\n  \"packed_2t_ms\": {:.4},\n  \"packed_4t_ms\": {:.4},\n  \"speedup_vs_seed_1t\": {:.3},\n  \"scaling_1t_to_4t\": {:.3},\n  \"gops_packed_1t\": {:.3},\n  \"pair_best_ms\": {pair_best_ms:.4},\n  \"pair_best_tile\": \"{best_mr}x{best_nr}\",\n  \"wide44_1t_ms\": {wide44_ms:.4},\n  \"pair_vs_wide44\": {:.3},\n  \"simd_best_ms\": {simd_best_ms_s},\n  \"simd_best_tile\": {simd_best_tile_s},\n  \"simd_vs_pair\": {simd_vs_pair_s},\n  \"gemv_m1_us\": {gemv_m1_us:.2},\n  \"gemv_vs_cascade_m1\": {gemv_vs_cascade_m1:.3},\n  \"e2e_naive_tok_per_s\": {:.1},\n  \"e2e_muxq_tok_per_s\": {:.1},\n  \"decode_tok_s_fp\": {:.1},\n  \"decode_tok_s\": {:.1},\n  \"decode_tok_s_llmint8\": {:.1},\n  \"decode_tok_s_spec\": {decode_tok_s_spec:.1},\n  \"spec_accept_rate\": {spec_accept_rate:.3},\n  \"spec_tokens_per_round\": {spec_tokens_per_round:.3},\n  \"full_forward_tok_s\": {full_tok_s:.1},\n  \"decode_vs_full_speedup\": {decode_vs_full:.2}\n}}\n",
+        "{{\n  \"bench\": \"bench_gemm\",\n  \"bootstrap\": false,\n  \"shape\": [{gm}, {gk}, {gn}],\n  \"dispatch_kernel\": \"{}\",\n  \"seed_i8_ms\": {seed_ms:.4},\n  \"packed_1t_ms\": {:.4},\n  \"packed_2t_ms\": {:.4},\n  \"packed_4t_ms\": {:.4},\n  \"speedup_vs_seed_1t\": {:.3},\n  \"scaling_1t_to_4t\": {:.3},\n  \"gops_packed_1t\": {:.3},\n  \"pair_best_ms\": {pair_best_ms:.4},\n  \"pair_best_tile\": \"{best_mr}x{best_nr}\",\n  \"wide44_1t_ms\": {wide44_ms:.4},\n  \"pair_vs_wide44\": {:.3},\n  \"simd_best_ms\": {simd_best_ms_s},\n  \"simd_best_tile\": {simd_best_tile_s},\n  \"simd_vs_pair\": {simd_vs_pair_s},\n  \"gemv_m1_us\": {gemv_m1_us:.2},\n  \"gemv_vs_cascade_m1\": {gemv_vs_cascade_m1:.3},\n  \"e2e_naive_tok_per_s\": {:.1},\n  \"e2e_muxq_tok_per_s\": {:.1},\n  \"decode_tok_s_fp\": {:.1},\n  \"decode_tok_s\": {:.1},\n  \"decode_tok_s_llmint8\": {:.1},\n  \"decode_tok_s_spec\": {decode_tok_s_spec:.1},\n  \"spec_accept_rate\": {spec_accept_rate:.3},\n  \"spec_tokens_per_round\": {spec_tokens_per_round:.3},\n  \"full_forward_tok_s\": {full_tok_s:.1},\n  \"decode_vs_full_speedup\": {decode_vs_full:.2},\n  \"paged_fill\": {paged_fill:.3},\n  \"shared_page_ratio\": {shared_page_ratio:.3}\n}}\n",
         dispatch.name(),
         per_thread_ms[0].1,
         per_thread_ms[1].1,

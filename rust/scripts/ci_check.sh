@@ -73,6 +73,14 @@ cargo run --release "${MANIFEST_ARGS[@]}" --example kernel_dispatch
 echo "== cargo test -q"
 cargo test -q "${MANIFEST_ARGS[@]}"
 
+echo "== kv-pool fuzz gate (500 op-stream cases)"
+# the paged-KV allocator is proven by differential fuzzing against a
+# naive Vec-backed reference ring (tests/kvpool_fuzz.rs); the regular
+# test run above uses the small local default, so CI re-runs the
+# harness with the case count pinned high enough that refcount,
+# aliasing, and free-list regressions cannot hide behind a small sample
+MUXQ_PROPTEST_CASES=500 cargo test -q "${MANIFEST_ARGS[@]}" --test kvpool_fuzz
+
 echo "== cargo clippy --all-targets (-D warnings)"
 # deliberate idioms of the kernel code, allowed rather than rewritten:
 # index-heavy loops (readability of the tile math) and the microkernel

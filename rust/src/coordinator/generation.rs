@@ -37,6 +37,7 @@
 
 use super::batcher::{AdmitError, DecodePop, DecodeQueue};
 use super::request::{FinishReason, GenerateHandle, GenerateRequest, PendingGen, TokenEvent};
+use crate::gpt2::kvpool::{KvPool, PrefixCache};
 use crate::gpt2::session::{decode_step_batch, Sampler, SessionModel, SessionState, WrapPolicy};
 use crate::gpt2::speculative::{DraftKind, DraftModel, SpeculativeState, DRAFT_SEED_SALT};
 use crate::gpt2::{Gpt2Model, QuantizedGpt2};
@@ -82,6 +83,15 @@ pub struct GenerationConfig {
     pub max_new_tokens: usize,
     /// context-overflow policy for every session
     pub wrap: WrapPolicy,
+    /// KV pool capacity in pages. 0 (the default) keeps ring-per-session
+    /// storage; > 0 switches every session to paged KV drawn from one
+    /// shared [`KvPool`], with admission priced by actual free pages and
+    /// copy-on-write prefix sharing across sessions.
+    pub pool_pages: usize,
+    /// K/V rows per page (paged mode only; clamped to >= 1)
+    pub page_rows: usize,
+    /// prefixes the shared [`PrefixCache`] retains (paged mode only)
+    pub prefix_cache_entries: usize,
 }
 
 impl Default for GenerationConfig {
@@ -91,6 +101,9 @@ impl Default for GenerationConfig {
             max_queue: 256,
             max_new_tokens: 128,
             wrap: WrapPolicy::Reprefill { keep: 0 },
+            pool_pages: 0,
+            page_rows: 16,
+            prefix_cache_entries: 8,
         }
     }
 }
@@ -126,6 +139,27 @@ pub struct GenerationStats {
     pub spec_drafted: u64,
     /// draft tokens the target accepted
     pub spec_accepted: u64,
+    /// prefill admissions that seeded shared prefix pages (paged mode)
+    pub prefix_hits: u64,
+    /// prefill admissions that found no shareable prefix (paged mode)
+    pub prefix_misses: u64,
+    /// admissions refused because the pool could not cover the prompt
+    pub pool_refusals: u64,
+    /// live sessions evicted under pool pressure (streams ended with
+    /// [`FinishReason::Evicted`])
+    pub evicted: u64,
+    /// pool capacity in pages (0 = ring mode, no pool)
+    pub pool_pages: usize,
+    /// pages currently held by live owners
+    pub pool_pages_in_use: usize,
+    /// pages allocatable right now
+    pub pool_pages_free: usize,
+    /// PEAK shared-page count observed across scheduler ticks (sessions
+    /// retire between ticks, so a last-sample gauge would usually read 0
+    /// by the time stats are collected)
+    pub shared_pages: u64,
+    /// copy-on-write page forks performed
+    pub cow_forks: u64,
     pub queued_now: usize,
 }
 
@@ -155,6 +189,23 @@ impl GenerationStats {
             return 0.0;
         }
         (self.spec_accepted + self.spec_rounds) as f64 / self.spec_rounds as f64
+    }
+
+    /// Fraction of the KV pool currently in use (0.0 in ring mode).
+    pub fn paged_fill(&self) -> f64 {
+        if self.pool_pages == 0 {
+            return 0.0;
+        }
+        self.pool_pages_in_use as f64 / self.pool_pages as f64
+    }
+
+    /// Peak shared pages as a fraction of pool capacity (0.0 in ring
+    /// mode) — how much footprint prefix sharing saved at its best.
+    pub fn shared_page_ratio(&self) -> f64 {
+        if self.pool_pages == 0 {
+            return 0.0;
+        }
+        self.shared_pages as f64 / self.pool_pages as f64
     }
 }
 
@@ -205,6 +256,17 @@ impl Live {
     }
 }
 
+/// Shared (prefix) pages this live session currently holds — summed into
+/// the pool's peak-gauge each tick.
+fn shared_pages_of(l: &Live) -> usize {
+    match &l.kind {
+        LiveKind::Plain(s) => s.shared_pages(),
+        LiveKind::Spec { spec, .. } => {
+            spec.target_state().shared_pages() + spec.draft_state().shared_pages()
+        }
+    }
+}
+
 /// The generation server: spawn with [`GenerationServer::start`], feed
 /// it [`GenerateRequest`]s, read streamed tokens off the returned
 /// [`GenerateHandle`]s. One server per deployed model/method (the
@@ -213,6 +275,9 @@ pub struct GenerationServer {
     queue: Arc<DecodeQueue>,
     metrics: Arc<Registry>,
     running: Arc<AtomicBool>,
+    /// shared KV page pool (`Some` iff `pool_pages > 0`); the server
+    /// keeps a clone so `stats()` can read live occupancy gauges
+    pool: Option<KvPool>,
     worker: Option<JoinHandle<()>>,
 }
 
@@ -225,15 +290,18 @@ impl GenerationServer {
         let queue = Arc::new(DecodeQueue::new(cfg.max_queue.max(1)));
         let metrics = Arc::new(Registry::default());
         let running = Arc::new(AtomicBool::new(true));
+        let pool = (cfg.pool_pages > 0)
+            .then(|| KvPool::new(cfg.pool_pages, cfg.page_rows.max(1), backend.gpt().cfg.d_model));
         let worker = {
             let queue = queue.clone();
             let metrics = metrics.clone();
+            let pool = pool.clone();
             std::thread::Builder::new()
                 .name("muxq-decode".into())
-                .spawn(move || scheduler_loop(backend, cfg, queue, metrics))
+                .spawn(move || scheduler_loop(backend, cfg, queue, metrics, pool))
                 .expect("spawn decode scheduler")
         };
-        GenerationServer { queue, metrics, running, worker: Some(worker) }
+        GenerationServer { queue, metrics, running, pool, worker: Some(worker) }
     }
 
     /// Submit a generation request; returns the token stream handle.
@@ -288,6 +356,15 @@ impl GenerationServer {
             spec_rounds: c("spec_rounds"),
             spec_drafted: c("spec_drafted"),
             spec_accepted: c("spec_accepted"),
+            prefix_hits: c("prefix_hits"),
+            prefix_misses: c("prefix_misses"),
+            pool_refusals: c("pool_refusals"),
+            evicted: c("evicted"),
+            pool_pages: self.pool.as_ref().map(|p| p.capacity()).unwrap_or(0),
+            pool_pages_in_use: self.pool.as_ref().map(|p| p.pages_in_use()).unwrap_or(0),
+            pool_pages_free: self.pool.as_ref().map(|p| p.free_pages()).unwrap_or(0),
+            shared_pages: self.pool.as_ref().map(|p| p.shared_pages_note()).unwrap_or(0),
+            cow_forks: self.pool.as_ref().map(|p| p.cow_forks()).unwrap_or(0),
             queued_now: self.queue.queued(),
         }
     }
@@ -319,23 +396,44 @@ fn scheduler_loop(
     cfg: GenerationConfig,
     queue: Arc<DecodeQueue>,
     metrics: Arc<Registry>,
+    pool: Option<KvPool>,
 ) {
     let sm = backend.session_model();
+    let n_ctx = backend.gpt().cfg.n_ctx;
     let mut live: Vec<Live> = Vec::new();
     // one draft model per kind, built lazily at first admission and
     // shared by every speculative session that asks for that kind
     let mut drafts: Vec<(DraftKind, DraftModel)> = Vec::new();
+    // paged mode: the shared prefix cache, plus the last-harvested
+    // (hits, misses) pair so counter deltas land in the registry
+    let mut prefix = pool
+        .as_ref()
+        .map(|p| PrefixCache::new(p.clone(), cfg.prefix_cache_entries.max(1)));
+    let mut pc_seen = (0u64, 0u64);
     let mut draining = false;
     loop {
         // ---- admission: prefill new sessions between decode steps
         while !draining && live.len() < cfg.max_live {
             match queue.pop(live.is_empty()) {
-                DecodePop::Req(p) => {
-                    admit(&backend, &cfg, &metrics, p, &mut live, &mut drafts)
-                }
+                DecodePop::Req(p) => admit(
+                    &backend,
+                    &cfg,
+                    &metrics,
+                    p,
+                    &mut live,
+                    &mut drafts,
+                    pool.as_ref(),
+                    &mut prefix,
+                ),
                 DecodePop::Empty => break,
                 DecodePop::Shutdown => draining = true,
             }
+        }
+        if let Some(pc) = &prefix {
+            let (h, m) = (pc.hits(), pc.misses());
+            metrics.counter("prefix_hits").add(h - pc_seen.0);
+            metrics.counter("prefix_misses").add(m - pc_seen.1);
+            pc_seen = (h, m);
         }
         if draining {
             for p in queue.drain_remaining() {
@@ -358,6 +456,48 @@ fn scheduler_loop(
         }
         if live.is_empty() {
             continue; // next admission pop blocks until work or shutdown
+        }
+
+        // ---- paged mode: make sure the upcoming tick's page demand
+        // fits the pool. Shed cached prefixes first; if that is not
+        // enough, evict the NEWEST live sessions (their streams end
+        // cleanly with FinishReason::Evicted, pages return on drop)
+        // until the demand fits — always keeping at least one session
+        // so the server makes progress.
+        if let Some(pool) = &pool {
+            let tick_demand = |l: &Live| match &l.kind {
+                LiveKind::Plain(s) => s.page_demand(n_ctx, 1),
+                LiveKind::Spec { spec, .. } => {
+                    // one round extends the target by k+1 (verify) and
+                    // the draft by up to k+1 (catch-up + k-1 proposals)
+                    spec.target_state().page_demand(n_ctx, spec.k + 1)
+                        + spec.draft_state().page_demand(n_ctx, spec.k + 1)
+                }
+            };
+            loop {
+                let demand: usize = live.iter().map(tick_demand).sum();
+                if demand <= pool.free_pages() {
+                    break;
+                }
+                if let Some(pc) = &mut prefix {
+                    pc.shed(demand);
+                    if demand <= pool.free_pages() {
+                        break;
+                    }
+                }
+                if live.len() <= 1 {
+                    break; // the survivor's own failure surfaces per-stream
+                }
+                let l = live.pop().expect("live checked non-empty");
+                metrics.counter("evicted").inc();
+                let _ = l.tx.send(TokenEvent::Done {
+                    reason: FinishReason::Evicted,
+                    generated: l.produced,
+                    latency: l.t0.elapsed(),
+                });
+                // dropping `l` drops its session state, returning pages
+            }
+            pool.note_shared(live.iter().map(shared_pages_of).sum());
         }
 
         // ---- one tick: coalesce the plain sessions into one skinny
@@ -457,6 +597,20 @@ fn scheduler_loop(
     }
 }
 
+/// True when the pool can cover `demand` fresh pages, shedding cached
+/// prefixes first if it cannot (their pages are reclaimable cache, not
+/// live state).
+fn pool_fits(pool: &KvPool, prefix: &mut Option<PrefixCache>, demand: usize) -> bool {
+    if demand <= pool.free_pages() {
+        return true;
+    }
+    if let Some(pc) = prefix {
+        pc.shed(demand);
+    }
+    demand <= pool.free_pages()
+}
+
+#[allow(clippy::too_many_arguments)]
 fn admit(
     backend: &GenBackend,
     cfg: &GenerationConfig,
@@ -464,6 +618,8 @@ fn admit(
     p: PendingGen,
     live: &mut Vec<Live>,
     drafts: &mut Vec<(DraftKind, DraftModel)>,
+    pool: Option<&KvPool>,
+    prefix: &mut Option<PrefixCache>,
 ) {
     let sm = backend.session_model();
     let gcfg = &sm.gpt().cfg;
@@ -486,6 +642,10 @@ fn admit(
         metrics.counter("admit_errors").inc();
         let _ = tx.send(TokenEvent::Error(format!("{what} failed: {e:#}")));
     }
+    // rows the prefill will store per layer (the truncated prompt)
+    let used_rows = p.req.prompt.len().min(gcfg.n_ctx);
+    let page_rows = pool.map(|pl| pl.page_rows()).unwrap_or(1);
+    let pages_per_layer = used_rows.div_ceil(page_rows);
     let mut sampler = p.req.sampler();
 
     // ---- build the session (plain, or speculative over a shared draft)
@@ -501,9 +661,34 @@ fn admit(
             },
         };
         let dm = &drafts[draft_idx].1;
-        let mut spec = match SpeculativeState::new(gcfg, dm.cfg(), sc.k, cfg.wrap) {
-            Ok(s) => s,
-            Err(e) => return admit_err(metrics, &p.tx, e, "speculative admit"),
+        let mut spec = match pool {
+            Some(pl) => {
+                // price the two prefills before building: target + draft
+                // both store the full prompt, and spec prefill is never
+                // prefix-seeded (draft K/V are model-specific, so the
+                // target's shared pages don't apply)
+                let demand = (gcfg.n_layer + dm.cfg().n_layer) * pages_per_layer;
+                if !pool_fits(pl, prefix, demand) {
+                    metrics.counter("pool_refusals").inc();
+                    return admit_err(
+                        metrics,
+                        &p.tx,
+                        anyhow!(
+                            "kv pool exhausted (need {demand} pages, {} free)",
+                            pl.free_pages()
+                        ),
+                        "pool admission",
+                    );
+                }
+                match SpeculativeState::new_paged(gcfg, dm.cfg(), sc.k, cfg.wrap, pl) {
+                    Ok(s) => s,
+                    Err(e) => return admit_err(metrics, &p.tx, e, "speculative admit"),
+                }
+            }
+            None => match SpeculativeState::new(gcfg, dm.cfg(), sc.k, cfg.wrap) {
+                Ok(s) => s,
+                Err(e) => return admit_err(metrics, &p.tx, e, "speculative admit"),
+            },
         };
         match spec.prefill(sm, dm.session_model(), &p.req.prompt) {
             Ok(logits) => {
@@ -514,8 +699,36 @@ fn admit(
             Err(e) => return admit_err(metrics, &p.tx, e, "prefill"),
         }
     } else {
-        let mut state = SessionState::new(gcfg, cfg.wrap);
-        match state.prefill(sm, &p.req.prompt) {
+        let mut state = match pool {
+            Some(pl) => {
+                // shared prefix pages are free (Arc clones); only the
+                // uncached tail demands fresh pages
+                let cached = prefix
+                    .as_ref()
+                    .map(|pc| pc.probe_rows(&p.req.prompt[p.req.prompt.len() - used_rows..]))
+                    .unwrap_or(0);
+                let demand = gcfg.n_layer * (pages_per_layer - cached / page_rows);
+                if !pool_fits(pl, prefix, demand) {
+                    metrics.counter("pool_refusals").inc();
+                    return admit_err(
+                        metrics,
+                        &p.tx,
+                        anyhow!(
+                            "kv pool exhausted (need {demand} pages, {} free)",
+                            pl.free_pages()
+                        ),
+                        "pool admission",
+                    );
+                }
+                SessionState::new_paged(gcfg, cfg.wrap, pl)
+            }
+            None => SessionState::new(gcfg, cfg.wrap),
+        };
+        let filled = match prefix.as_mut() {
+            Some(pc) => state.prefill_cached(sm, &p.req.prompt, pc),
+            None => state.prefill(sm, &p.req.prompt),
+        };
+        match filled {
             Ok(logits) => {
                 metrics.counter("prefills").inc();
                 (LiveKind::Plain(state), logits)
@@ -838,6 +1051,37 @@ mod tests {
             .collect_tokens()
             .unwrap();
         assert_eq!(served, solo);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn paged_server_streams_match_ring_serving() {
+        // pool-backed serving is a storage change, not a results change:
+        // every stream equals the solo ring session, and the pool stats
+        // surface occupancy + prefix sharing
+        let q = QuantizedGpt2::new(tiny(), EngineSpec::muxq());
+        let prompts = [toks(4, 61), toks(4, 61), toks(5, 62)]; // two share a prompt
+        let mut want = Vec::new();
+        for p in &prompts {
+            let mut s = q.session(WrapPolicy::default());
+            want.push(s.generate_greedy(p, 6).unwrap());
+        }
+        let srv = GenerationServer::start(
+            GenBackend::Int(QuantizedGpt2::new(tiny(), EngineSpec::muxq())),
+            GenerationConfig { pool_pages: 64, page_rows: 2, ..Default::default() },
+        );
+        let handles: Vec<_> =
+            prompts.iter().map(|p| srv.submit(req(p.clone(), 6)).unwrap()).collect();
+        for (h, w) in handles.into_iter().zip(&want) {
+            assert_eq!(&h.collect_tokens().unwrap(), w);
+        }
+        let st = srv.stats();
+        assert_eq!(st.completed, 3);
+        assert_eq!(st.pool_pages, 64);
+        assert_eq!(st.pool_pages_in_use + st.pool_pages_free, 64);
+        assert_eq!(st.evicted, 0, "a 64-page pool never pressures 3 tiny sessions");
+        assert_eq!(st.pool_refusals, 0);
+        assert!(st.paged_fill() >= 0.0 && st.paged_fill() <= 1.0);
         srv.shutdown();
     }
 

@@ -164,6 +164,11 @@ pub enum FinishReason {
     MaxTokens,
     /// server shut down before the budget was reached
     Shutdown,
+    /// evicted by the server under KV-pool pressure (paged mode): the
+    /// scheduler reclaimed this session's pages so already-admitted
+    /// sessions could keep decoding. The stream ends cleanly with the
+    /// tokens generated so far.
+    Evicted,
 }
 
 /// One event on a generation stream. Tokens arrive strictly in order

@@ -1,0 +1,893 @@
+//! Paged KV storage: a block-pool allocator ([`KvPool`]), per-session
+//! block tables ([`PagedKv`]), and copy-on-write prefix sharing
+//! ([`PrefixCache`]).
+//!
+//! The ring-per-session layout (`KvCache` backed by one `[n_ctx,
+//! d_model]` matrix per layer) caps resident sessions by memory long
+//! before the kernels saturate. This module replaces the backing store
+//! with fixed-size **pages** of K/V rows drawn from a shared pool:
+//!
+//! ```text
+//!   KvPool (one per server)                 PagedKv (one per layer per session)
+//!   ┌────────────────────────┐              ┌──────────────────────────────┐
+//!   │ free list: [P7, P3]    │              │ block table: [P0, P5, None]  │
+//!   │ created:   6 / max 64  │              │ start=0 len=34 cap_rows=48   │
+//!   └────────────────────────┘              └──────────────────────────────┘
+//!                                   page_rows = 16 → logical row 17 lives in
+//!                                   table[1] (= P5), in-page row 1
+//! ```
+//!
+//! Pages are handed out as `Arc<Page>`: the Arc strong count **is** the
+//! refcount. A page referenced by several block tables (a shared system
+//! prompt seeded through [`PrefixCache`]) is written through
+//! `Arc::get_mut`, which only succeeds for a unique owner — a shared
+//! page is forked (copied into a fresh page) before the first write
+//! touches it, so aliasing after a fork is structurally impossible.
+//!
+//! Every long-lived page owner (a [`PagedKv`] table, a [`PrefixCache`]
+//! entry) must return pages through [`KvPool::release`] so the buffer
+//! lands back on the free list; transient Arc clones (a [`PrefixHit`]
+//! in flight to a session) may simply drop, because the owning entry
+//! outlives them and its eventual release recycles the buffer.
+
+use crate::quant::MatF32;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One fixed-size block of K and V rows (`page_rows × d_model` each).
+/// Fields are private: rows are read through [`Page::k_row`] /
+/// [`Page::v_row`] and written only by [`PagedKv`] through
+/// `Arc::get_mut` (the copy-on-write choke point).
+pub struct Page {
+    k: MatF32,
+    v: MatF32,
+}
+
+impl Page {
+    fn zeroed(rows: usize, d_model: usize) -> Page {
+        Page { k: MatF32::zeros(rows, d_model), v: MatF32::zeros(rows, d_model) }
+    }
+
+    /// K row `r` of this page (`r < page_rows`).
+    pub fn k_row(&self, r: usize) -> &[f32] {
+        self.k.row(r)
+    }
+
+    /// V row `r` of this page (`r < page_rows`).
+    pub fn v_row(&self, r: usize) -> &[f32] {
+        self.v.row(r)
+    }
+}
+
+struct PoolInner {
+    /// recycled page buffers awaiting reuse
+    free: Vec<Page>,
+    /// pages ever created; never exceeds `max_pages`
+    created: usize,
+}
+
+struct PoolShared {
+    page_rows: usize,
+    d_model: usize,
+    max_pages: usize,
+    inner: Mutex<PoolInner>,
+    /// copy-on-write forks performed (a shared page copied before a write)
+    cow_forks: AtomicU64,
+    /// peak shared-page count noted by the server (fetch_max gauge)
+    shared_note: AtomicU64,
+}
+
+/// Shared handle to the block pool. Cloning is cheap (one `Arc`); every
+/// clone sees the same free list, counters, and capacity. The mutex is
+/// touched only on alloc/release — row reads inside the decode hot loop
+/// go straight through `Arc<Page>` without locking.
+#[derive(Clone)]
+pub struct KvPool {
+    shared: Arc<PoolShared>,
+}
+
+impl KvPool {
+    /// A pool of at most `max_pages` pages, each holding `page_rows`
+    /// K/V rows of width `d_model`. Pages are created lazily and
+    /// recycled through a free list, so a cold pool costs nothing.
+    pub fn new(max_pages: usize, page_rows: usize, d_model: usize) -> KvPool {
+        assert!(max_pages > 0, "kv pool needs at least one page");
+        assert!(page_rows > 0, "kv pages need at least one row");
+        assert!(d_model > 0, "kv rows need at least one column");
+        KvPool {
+            shared: Arc::new(PoolShared {
+                page_rows,
+                d_model,
+                max_pages,
+                inner: Mutex::new(PoolInner { free: Vec::new(), created: 0 }),
+                cow_forks: AtomicU64::new(0),
+                shared_note: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Allocate one page: reuse a free buffer if any, otherwise create
+    /// one if the pool is under capacity. `None` means exhausted — the
+    /// caller decides whether that is an admission refusal or a bug.
+    pub fn alloc(&self) -> Option<Arc<Page>> {
+        let mut inner = self.shared.inner.lock().unwrap();
+        if let Some(p) = inner.free.pop() {
+            return Some(Arc::new(p));
+        }
+        if inner.created < self.shared.max_pages {
+            inner.created += 1;
+            return Some(Arc::new(Page::zeroed(self.shared.page_rows, self.shared.d_model)));
+        }
+        None
+    }
+
+    /// Return a page reference to the pool. If this was the last strong
+    /// reference the buffer goes back on the free list; otherwise the
+    /// clone is dropped and the page stays alive with its remaining
+    /// owners (whichever of them releases last recycles it).
+    pub fn release(&self, page: Arc<Page>) {
+        let mut inner = self.shared.inner.lock().unwrap();
+        if let Ok(buf) = Arc::try_unwrap(page) {
+            inner.free.push(buf);
+        }
+    }
+
+    /// Pages currently held by live owners (created minus free).
+    pub fn pages_in_use(&self) -> usize {
+        let inner = self.shared.inner.lock().unwrap();
+        inner.created - inner.free.len()
+    }
+
+    /// Pages still allocatable right now (free-list + never-created).
+    pub fn free_pages(&self) -> usize {
+        self.shared.max_pages - self.pages_in_use()
+    }
+
+    /// Hard capacity in pages.
+    pub fn capacity(&self) -> usize {
+        self.shared.max_pages
+    }
+
+    /// Pages ever created (high-water mark of physical buffers; a
+    /// stable value under churn proves free-list reuse).
+    pub fn pages_created(&self) -> usize {
+        self.shared.inner.lock().unwrap().created
+    }
+
+    /// Rows per page.
+    pub fn page_rows(&self) -> usize {
+        self.shared.page_rows
+    }
+
+    /// Row width every page in this pool was created with.
+    pub fn d_model(&self) -> usize {
+        self.shared.d_model
+    }
+
+    /// Copy-on-write forks performed so far (monotonic).
+    pub fn cow_forks(&self) -> u64 {
+        self.shared.cow_forks.load(Ordering::Relaxed)
+    }
+
+    fn note_fork(&self) {
+        self.shared.cow_forks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an observed shared-page count. The note keeps the PEAK
+    /// (`fetch_max`), not the latest sample: sessions retire between
+    /// scheduler ticks and a last-written gauge would usually read 0 by
+    /// the time stats are collected.
+    pub fn note_shared(&self, shared_pages: usize) {
+        self.shared.shared_note.fetch_max(shared_pages as u64, Ordering::Relaxed);
+    }
+
+    /// Peak shared-page count ever noted via [`KvPool::note_shared`].
+    pub fn shared_pages_note(&self) -> u64 {
+        self.shared.shared_note.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-layer paged KV storage for one session: a block table over pool
+/// pages presenting the exact ring semantics of the old contiguous
+/// `KvCache` (logical row `i` lives at slot `(start + i) % cap_rows`).
+/// Unmapped table entries are `None` until the first write reaches
+/// their slot range, so a short session in a big context maps only the
+/// pages it touches.
+pub struct PagedKv {
+    pool: KvPool,
+    table: Vec<Option<Arc<Page>>>,
+    cap_rows: usize,
+    start: usize,
+    len: usize,
+}
+
+impl PagedKv {
+    /// An empty paged cache of `cap_rows` logical rows drawn from
+    /// `pool`. No pages are allocated until rows are written.
+    pub fn new(pool: &KvPool, cap_rows: usize) -> PagedKv {
+        assert!(cap_rows > 0, "kv cache capacity must be positive");
+        let r = pool.page_rows();
+        PagedKv {
+            pool: pool.clone(),
+            table: (0..cap_rows.div_ceil(r)).map(|_| None).collect(),
+            cap_rows,
+            start: 0,
+            len: 0,
+        }
+    }
+
+    /// Logical capacity in rows.
+    pub fn cap(&self) -> usize {
+        self.cap_rows
+    }
+
+    /// Rows currently stored.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no rows are stored.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn page_rows(&self) -> usize {
+        self.pool.page_rows()
+    }
+
+    /// Rows per page of the backing pool.
+    pub fn page_size(&self) -> usize {
+        self.pool.page_rows()
+    }
+
+    /// Physical slot of logical row `i` (ring addressing).
+    fn slot(&self, logical: usize) -> usize {
+        debug_assert!(logical < self.len, "kv read past cache length");
+        (self.start + logical) % self.cap_rows
+    }
+
+    /// Physical slot the `i`-th upcoming push will write. Covers both
+    /// the append case and the full-ring overwrite case: with
+    /// `len == cap_rows` this reduces to `(start + i) % cap_rows`,
+    /// exactly the oldest rows a sliding overwrite replaces.
+    fn write_slot(&self, i: usize) -> usize {
+        (self.start + self.len + i) % self.cap_rows
+    }
+
+    /// K row for logical position `logical`.
+    pub fn k_row(&self, logical: usize) -> &[f32] {
+        let s = self.slot(logical);
+        let page = self.table[s / self.page_rows()].as_ref().expect("read of an unmapped kv page");
+        page.k_row(s % self.page_rows())
+    }
+
+    /// V row for logical position `logical`.
+    pub fn v_row(&self, logical: usize) -> &[f32] {
+        let s = self.slot(logical);
+        let page = self.table[s / self.page_rows()].as_ref().expect("read of an unmapped kv page");
+        page.v_row(s % self.page_rows())
+    }
+
+    /// Pages this cache would need to allocate (or fork) before it can
+    /// absorb `rows` more pushes. Counts distinct target pages that are
+    /// either unmapped or currently shared (a shared page must be
+    /// forked into a fresh one before the write).
+    pub fn pages_needed(&self, rows: usize) -> usize {
+        let r = self.page_rows();
+        let mut need = 0usize;
+        let mut last_pi = usize::MAX;
+        for i in 0..rows.min(self.cap_rows) {
+            let pi = self.write_slot(i) / r;
+            if pi == last_pi {
+                continue;
+            }
+            last_pi = pi;
+            match &self.table[pi] {
+                None => need += 1,
+                Some(p) if Arc::strong_count(p) > 1 => need += 1,
+                Some(_) => {}
+            }
+        }
+        need
+    }
+
+    /// Reserve (allocate or COW-fork) every page the next `rows` pushes
+    /// will touch. Errors — without partial-write side effects visible
+    /// to readers — when the pool is exhausted, which the admission
+    /// layer converts into a refusal instead of a panic.
+    pub fn ensure_capacity(&mut self, rows: usize) -> Result<()> {
+        let r = self.page_rows();
+        let mut last_pi = usize::MAX;
+        for i in 0..rows.min(self.cap_rows) {
+            let pi = self.write_slot(i) / r;
+            if pi == last_pi {
+                continue;
+            }
+            last_pi = pi;
+            self.ensure_page(pi)?;
+        }
+        Ok(())
+    }
+
+    /// Make `table[pi]` present and uniquely owned: allocate a fresh
+    /// page if unmapped, or fork (copy) it if shared. The fork is the
+    /// copy-on-write choke point — the old page is released back to its
+    /// remaining owners untouched.
+    fn ensure_page(&mut self, pi: usize) -> Result<()> {
+        if self.table[pi].is_none() {
+            match self.pool.alloc() {
+                Some(p) => self.table[pi] = Some(p),
+                None => bail!(
+                    "kv pool exhausted ({} of {} pages in use)",
+                    self.pool.pages_in_use(),
+                    self.pool.capacity()
+                ),
+            }
+            return Ok(());
+        }
+        if Arc::strong_count(self.table[pi].as_ref().unwrap()) > 1 {
+            let mut fresh = match self.pool.alloc() {
+                Some(p) => p,
+                None => bail!(
+                    "kv pool exhausted ({} of {} pages in use)",
+                    self.pool.pages_in_use(),
+                    self.pool.capacity()
+                ),
+            };
+            let old = self.table[pi].take().unwrap();
+            {
+                let dst = Arc::get_mut(&mut fresh).expect("freshly allocated page is unique");
+                dst.k.data.copy_from_slice(&old.k.data);
+                dst.v.data.copy_from_slice(&old.v.data);
+            }
+            self.table[pi] = Some(fresh);
+            self.pool.release(old);
+            self.pool.note_fork();
+        }
+        Ok(())
+    }
+
+    /// Append one K/V row pair, overwriting the oldest row once full
+    /// (identical return contract to the ring `KvCache::push`: `true`
+    /// iff an old row was overwritten). The target page is self-healed
+    /// via [`PagedKv::ensure_capacity`] if the caller skipped the
+    /// reservation; that path panics on pool exhaustion, so reserve
+    /// first whenever refusal (not panic) is the desired failure mode.
+    pub fn push(&mut self, k: &[f32], v: &[f32]) -> bool {
+        self.ensure_capacity(1)
+            .expect("kv pool exhausted (reserve with ensure_capacity before push)");
+        let s = self.write_slot(0);
+        let r = self.page_rows();
+        let page = self.table[s / r].as_mut().unwrap();
+        let page = Arc::get_mut(page).expect("write page is uniquely owned after ensure_capacity");
+        page.k.row_mut(s % r).copy_from_slice(k);
+        page.v.row_mut(s % r).copy_from_slice(v);
+        if self.len == self.cap_rows {
+            self.start = (self.start + 1) % self.cap_rows;
+            true
+        } else {
+            self.len += 1;
+            false
+        }
+    }
+
+    /// Shrink to at most `len` rows (newest rows are discarded — this
+    /// backs speculative rollback) and release any page that no longer
+    /// covers a live slot.
+    pub fn truncate(&mut self, len: usize) {
+        self.len = self.len.min(len);
+        self.gc_dead_pages();
+    }
+
+    /// Drop all rows and return every mapped page to the pool.
+    pub fn clear(&mut self) {
+        self.start = 0;
+        self.len = 0;
+        for entry in self.table.iter_mut() {
+            if let Some(p) = entry.take() {
+                self.pool.release(p);
+            }
+        }
+    }
+
+    /// Release mapped pages covering no live slot. Liveness of physical
+    /// slot `s` under ring addressing: `(s + cap - start) % cap < len`.
+    fn gc_dead_pages(&mut self) {
+        let r = self.page_rows();
+        for pi in 0..self.table.len() {
+            if self.table[pi].is_none() {
+                continue;
+            }
+            let lo = pi * r;
+            let hi = (lo + r).min(self.cap_rows);
+            let any_live = (lo..hi)
+                .any(|s| (s + self.cap_rows - self.start) % self.cap_rows < self.len);
+            if !any_live {
+                let p = self.table[pi].take().unwrap();
+                self.pool.release(p);
+            }
+        }
+    }
+
+    /// Adopt `rows` rows of prefix content by sharing `pages` (cloned
+    /// Arcs — zero copies). Only legal on an empty, unwrapped cache;
+    /// the shared pages are forked lazily if this session ever writes
+    /// into them.
+    pub fn seed_prefix(&mut self, pages: &[Arc<Page>], rows: usize) -> Result<()> {
+        if self.len != 0 || self.start != 0 {
+            bail!("seed_prefix requires an empty cache");
+        }
+        let r = self.page_rows();
+        let need = rows.div_ceil(r);
+        if rows == 0 || rows > self.cap_rows || pages.len() != need {
+            bail!(
+                "seed_prefix shape mismatch: {} rows need {} pages, got {}",
+                rows,
+                need,
+                pages.len()
+            );
+        }
+        for (i, p) in pages.iter().enumerate() {
+            self.table[i] = Some(Arc::clone(p));
+        }
+        self.len = rows;
+        Ok(())
+    }
+
+    /// Clone out the first `rows` rows as shareable pages, for
+    /// registration in a [`PrefixCache`]. `None` unless the cache is
+    /// unwrapped (`start == 0`), holds at least `rows`, and `rows` is
+    /// page-aligned — sharing a partially written page would let this
+    /// session's next push mutate rows another session reads.
+    pub fn prefix_pages(&self, rows: usize) -> Option<Vec<Arc<Page>>> {
+        let r = self.page_rows();
+        if self.start != 0 || rows == 0 || rows > self.len || rows % r != 0 {
+            return None;
+        }
+        Some(self.table[..rows / r].iter().map(|p| Arc::clone(p.as_ref().unwrap())).collect())
+    }
+
+    /// Mapped pages currently held by this cache's block table.
+    pub fn pages_held(&self) -> usize {
+        self.table.iter().filter(|p| p.is_some()).count()
+    }
+
+    /// Held pages that are shared with at least one other owner.
+    pub fn shared_pages(&self) -> usize {
+        self.table
+            .iter()
+            .filter(|p| p.as_ref().map(|p| Arc::strong_count(p) > 1).unwrap_or(false))
+            .count()
+    }
+}
+
+impl Drop for PagedKv {
+    fn drop(&mut self) {
+        self.clear();
+    }
+}
+
+/// Block tables for all layers of one registered prefix:
+/// `pages[layer][page_index]`.
+pub type LayerPages = Vec<Vec<Arc<Page>>>;
+
+/// A successful prefix-cache lookup: `rows` token positions whose K/V
+/// content is already materialized in `pages` (one block table per
+/// layer). The Arcs are transient clones — the owning cache entry
+/// outlives them, so dropping a hit leaks nothing.
+pub struct PrefixHit {
+    pub rows: usize,
+    pub pages: LayerPages,
+}
+
+struct PrefixEntry {
+    tokens: Vec<u32>,
+    pages: LayerPages,
+    last_used: u64,
+}
+
+impl PrefixEntry {
+    fn rows(&self) -> usize {
+        self.tokens.len()
+    }
+}
+
+/// Token-prefix → shared-page cache: sessions admitted with a common
+/// system prompt seed their block tables from here instead of
+/// recomputing (and re-storing) the same K/V rows. Sharing is safe and
+/// bit-exact because K/V rows are deterministic functions of the causal
+/// token prefix from position 0, and a shared page is COW-forked before
+/// any session writes into it. Entries hold real page references and
+/// are LRU-evicted (returning their pages) under pool pressure.
+pub struct PrefixCache {
+    pool: KvPool,
+    entries: Vec<PrefixEntry>,
+    max_entries: usize,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl PrefixCache {
+    /// A cache holding at most `max_entries` registered prefixes.
+    pub fn new(pool: KvPool, max_entries: usize) -> PrefixCache {
+        PrefixCache { pool, entries: Vec::new(), max_entries: max_entries.max(1), tick: 0, hits: 0, misses: 0 }
+    }
+
+    /// Rows per page of the backing pool.
+    pub fn page_rows(&self) -> usize {
+        self.pool.page_rows()
+    }
+
+    /// Lookup hits so far.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lookup misses so far.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Registered prefixes.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no prefixes are registered.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Longest usable page-aligned shared prefix of `tokens`, if any.
+    /// The match is capped at `tokens.len() - 1` so a hit always leaves
+    /// at least one token for the session to prefill into a fresh row
+    /// (prefill needs a final row to produce logits from).
+    pub fn lookup(&mut self, tokens: &[u32]) -> Option<PrefixHit> {
+        let (bi, rows) = match self.best_match(tokens) {
+            Some(m) => m,
+            None => {
+                self.misses += 1;
+                return None;
+            }
+        };
+        self.tick += 1;
+        self.entries[bi].last_used = self.tick;
+        self.hits += 1;
+        let r = self.page_rows();
+        let pages = self.entries[bi]
+            .pages
+            .iter()
+            .map(|lp| lp[..rows / r].iter().map(Arc::clone).collect())
+            .collect();
+        Some(PrefixHit { rows, pages })
+    }
+
+    /// The rows a [`PrefixCache::lookup`] for `tokens` would return,
+    /// without touching hit/miss stats or LRU order — for admission
+    /// pricing (how many pages would this prompt actually need?).
+    pub fn probe_rows(&self, tokens: &[u32]) -> usize {
+        self.best_match(tokens).map(|(_, rows)| rows).unwrap_or(0)
+    }
+
+    fn best_match(&self, tokens: &[u32]) -> Option<(usize, usize)> {
+        if tokens.len() < 2 {
+            return None;
+        }
+        let r = self.page_rows();
+        let mut best: Option<(usize, usize)> = None;
+        for (i, e) in self.entries.iter().enumerate() {
+            let cap = e.rows().min(tokens.len() - 1);
+            let common =
+                tokens[..cap].iter().zip(&e.tokens[..cap]).take_while(|(a, b)| a == b).count();
+            let aligned = common / r * r;
+            if aligned > 0 && best.map(|(_, b)| aligned > b).unwrap_or(true) {
+                best = Some((i, aligned));
+            }
+        }
+        best
+    }
+
+    /// Register a computed prefix: `pages[layer]` must each cover
+    /// exactly `tokens.len()` rows (page-aligned). Malformed or
+    /// duplicate registrations are dropped — their page references are
+    /// released, not leaked.
+    pub fn register(&mut self, tokens: Vec<u32>, pages: LayerPages) {
+        let rows = tokens.len();
+        let r = self.page_rows();
+        let well_formed = rows > 0
+            && rows % r == 0
+            && !pages.is_empty()
+            && pages.iter().all(|lp| lp.len() == rows / r);
+        let duplicate = self
+            .entries
+            .iter()
+            .any(|e| e.rows() >= rows && e.tokens[..rows] == tokens[..]);
+        if !well_formed || duplicate {
+            self.release_pages(pages);
+            return;
+        }
+        while self.entries.len() >= self.max_entries {
+            if !self.evict_lru() {
+                break;
+            }
+        }
+        self.tick += 1;
+        self.entries.push(PrefixEntry { tokens, pages, last_used: self.tick });
+    }
+
+    fn release_pages(&self, pages: LayerPages) {
+        for lp in pages {
+            for p in lp {
+                self.pool.release(p);
+            }
+        }
+    }
+
+    fn evict_lru(&mut self) -> bool {
+        let oldest = match self
+            .entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(i, _)| i)
+        {
+            Some(i) => i,
+            None => return false,
+        };
+        let e = self.entries.swap_remove(oldest);
+        self.release_pages(e.pages);
+        true
+    }
+
+    /// Evict least-recently-used prefixes until the pool has at least
+    /// `want_free` allocatable pages (or the cache is empty). Called by
+    /// the admission layer before refusing a request for lack of pages.
+    pub fn shed(&mut self, want_free: usize) {
+        while self.pool.free_pages() < want_free && self.evict_lru() {}
+    }
+
+    /// Drop every registered prefix, releasing all pages.
+    pub fn clear(&mut self) {
+        while self.evict_lru() {}
+    }
+}
+
+impl Drop for PrefixCache {
+    fn drop(&mut self) {
+        self.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rowv(d: usize, seed: f32) -> Vec<f32> {
+        (0..d).map(|i| seed + i as f32 * 0.25).collect()
+    }
+
+    #[test]
+    fn pool_alloc_exhaust_release_recycle() {
+        let pool = KvPool::new(2, 4, 3);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        assert!(pool.alloc().is_none(), "capacity 2 must refuse a third page");
+        assert_eq!(pool.pages_in_use(), 2);
+        assert_eq!(pool.free_pages(), 0);
+        pool.release(a);
+        assert_eq!(pool.free_pages(), 1);
+        let c = pool.alloc().unwrap();
+        assert_eq!(pool.pages_created(), 2, "release + alloc must reuse, not create");
+        drop((b, c));
+    }
+
+    #[test]
+    fn release_of_shared_page_keeps_it_alive() {
+        let pool = KvPool::new(4, 2, 2);
+        let a = pool.alloc().unwrap();
+        let b = Arc::clone(&a);
+        pool.release(a);
+        // still one live owner: not recycled yet
+        assert_eq!(pool.pages_in_use(), 1);
+        pool.release(b);
+        assert_eq!(pool.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn paged_ring_matches_contract() {
+        let pool = KvPool::new(8, 2, 3);
+        let mut kv = PagedKv::new(&pool, 4);
+        assert!(kv.is_empty());
+        for t in 0..4 {
+            let over = kv.push(&rowv(3, t as f32), &rowv(3, 100.0 + t as f32));
+            assert!(!over);
+        }
+        assert_eq!(kv.len(), 4);
+        // full: next push overwrites the oldest
+        assert!(kv.push(&rowv(3, 9.0), &rowv(3, 109.0)));
+        assert_eq!(kv.len(), 4);
+        assert_eq!(kv.k_row(0)[0], 1.0, "oldest surviving row is t=1");
+        assert_eq!(kv.k_row(3)[0], 9.0, "newest row is the overwrite");
+        assert_eq!(kv.v_row(3)[0], 109.0);
+    }
+
+    #[test]
+    fn truncate_releases_dead_pages_and_clear_releases_all() {
+        let pool = KvPool::new(8, 2, 2);
+        let mut kv = PagedKv::new(&pool, 8);
+        for t in 0..8 {
+            kv.push(&rowv(2, t as f32), &rowv(2, t as f32));
+        }
+        assert_eq!(kv.pages_held(), 4);
+        assert_eq!(pool.pages_in_use(), 4);
+        kv.truncate(3); // rows 0..3 live → pages 0,1 live, pages 2,3 dead
+        assert_eq!(kv.pages_held(), 2);
+        assert_eq!(pool.pages_in_use(), 2);
+        assert_eq!(kv.k_row(2)[0], 2.0, "surviving rows untouched by GC");
+        kv.clear();
+        assert_eq!(pool.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn drop_returns_all_pages() {
+        let pool = KvPool::new(8, 2, 2);
+        {
+            let mut kv = PagedKv::new(&pool, 6);
+            for t in 0..5 {
+                kv.push(&rowv(2, t as f32), &rowv(2, t as f32));
+            }
+            assert!(pool.pages_in_use() > 0);
+        }
+        assert_eq!(pool.pages_in_use(), 0, "session drop must not leak pages");
+    }
+
+    #[test]
+    fn cow_fork_isolates_writers() {
+        let pool = KvPool::new(8, 2, 2);
+        let mut a = PagedKv::new(&pool, 4);
+        for t in 0..2 {
+            a.push(&rowv(2, t as f32), &rowv(2, 50.0 + t as f32));
+        }
+        let prefix = a.prefix_pages(2).unwrap();
+        let mut b = PagedKv::new(&pool, 4);
+        b.seed_prefix(&prefix, 2).unwrap();
+        drop(prefix);
+        assert_eq!(b.k_row(1), a.k_row(1), "seeded rows read back shared content");
+        assert_eq!(a.shared_pages(), 1);
+        assert_eq!(pool.pages_in_use(), 1, "sharing holds one physical page");
+        // b truncates into the shared page and writes: must fork first
+        b.truncate(1);
+        b.push(&rowv(2, 777.0), &rowv(2, 778.0));
+        assert_eq!(pool.cow_forks(), 1);
+        assert_eq!(a.k_row(1)[0], 1.0, "a's view survives b's divergent write");
+        assert_eq!(b.k_row(1)[0], 777.0);
+        assert_eq!(a.shared_pages(), 0, "fork ends the sharing");
+    }
+
+    #[test]
+    fn seed_prefix_rejects_bad_shapes() {
+        let pool = KvPool::new(8, 2, 2);
+        let mut a = PagedKv::new(&pool, 4);
+        for t in 0..4 {
+            a.push(&rowv(2, t as f32), &rowv(2, t as f32));
+        }
+        let prefix = a.prefix_pages(2).unwrap();
+        let mut b = PagedKv::new(&pool, 4);
+        b.push(&rowv(2, 0.0), &rowv(2, 0.0));
+        assert!(b.seed_prefix(&prefix, 2).is_err(), "non-empty cache must refuse seeding");
+        // unaligned / oversized prefix requests are refused at the source
+        assert!(a.prefix_pages(1).is_none(), "unaligned rows can't be shared");
+        assert!(a.prefix_pages(6).is_none(), "can't share more rows than stored");
+        assert!(a.prefix_pages(0).is_none());
+    }
+
+    #[test]
+    fn ensure_capacity_prices_shared_pages_as_forks() {
+        let pool = KvPool::new(3, 2, 2);
+        let mut a = PagedKv::new(&pool, 4);
+        a.push(&rowv(2, 0.0), &rowv(2, 0.0));
+        a.push(&rowv(2, 1.0), &rowv(2, 1.0));
+        let prefix = a.prefix_pages(2).unwrap();
+        let mut b = PagedKv::new(&pool, 4);
+        b.seed_prefix(&prefix, 2).unwrap();
+        drop(prefix);
+        b.truncate(1);
+        // b's next write hits the shared page: needs a fork (1 page)
+        assert_eq!(b.pages_needed(1), 1);
+        // a's next write goes to an unmapped page: also 1
+        assert_eq!(a.pages_needed(1), 1);
+        // exhaustion is an error, not a panic, through ensure_capacity
+        let c1 = pool.alloc().unwrap();
+        let c2 = pool.alloc().unwrap();
+        assert!(b.ensure_capacity(1).is_err());
+        drop((c1, c2));
+    }
+
+    #[test]
+    fn prefix_cache_lookup_register_lru() {
+        let pool = KvPool::new(16, 2, 2);
+        let mut pc = PrefixCache::new(pool.clone(), 2);
+        let sys = vec![7u32, 8, 9, 10];
+        let mut a = PagedKv::new(&pool, 8);
+        for (t, _) in sys.iter().enumerate() {
+            a.push(&rowv(2, t as f32), &rowv(2, t as f32));
+        }
+        pc.register(sys.clone(), vec![a.prefix_pages(4).unwrap()]);
+        assert_eq!(pc.len(), 1);
+
+        // full hit is capped at tokens.len()-1 then page-aligned
+        let hit = pc.lookup(&[7, 8, 9, 10, 11]).unwrap();
+        assert_eq!(hit.rows, 4);
+        let hit2 = pc.lookup(&[7, 8, 9, 10]).unwrap();
+        assert_eq!(hit2.rows, 2, "must leave >=1 token to prefill");
+        assert_eq!(pc.probe_rows(&[7, 8, 9, 10, 11]), 4);
+        assert_eq!(pc.probe_rows(&[1, 2, 3]), 0);
+        assert!(pc.lookup(&[1, 2, 3]).is_none());
+        assert_eq!((pc.hits(), pc.misses()), (2, 1));
+
+        // duplicate registration releases, not leaks
+        let in_use = pool.pages_in_use();
+        pc.register(sys.clone(), vec![a.prefix_pages(4).unwrap()]);
+        assert_eq!(pc.len(), 1);
+        assert_eq!(pool.pages_in_use(), in_use);
+
+        // capacity-2 cache LRU-evicts the stalest entry
+        let mut b = PagedKv::new(&pool, 8);
+        for t in 0..2 {
+            b.push(&rowv(2, 30.0 + t as f32), &rowv(2, t as f32));
+        }
+        pc.register(vec![20, 21], vec![b.prefix_pages(2).unwrap()]);
+        let mut c = PagedKv::new(&pool, 8);
+        for t in 0..2 {
+            c.push(&rowv(2, 60.0 + t as f32), &rowv(2, t as f32));
+        }
+        pc.register(vec![40, 41], vec![c.prefix_pages(2).unwrap()]);
+        assert_eq!(pc.len(), 2);
+        assert_eq!(pc.probe_rows(&[20, 21, 22]), 0, "LRU entry [20,21] was evicted");
+        assert!(pc.probe_rows(&[40, 41, 42]) > 0);
+    }
+
+    #[test]
+    fn prefix_cache_shed_frees_pool_pressure() {
+        let pool = KvPool::new(4, 2, 2);
+        let mut pc = PrefixCache::new(pool.clone(), 4);
+        let mut a = PagedKv::new(&pool, 4);
+        for t in 0..4 {
+            a.push(&rowv(2, t as f32), &rowv(2, t as f32));
+        }
+        pc.register(vec![1, 2, 3, 4], vec![a.prefix_pages(4).unwrap()]);
+        drop(a); // cache is now the only owner of those 2 pages
+        assert_eq!(pool.pages_in_use(), 2);
+        assert_eq!(pool.free_pages(), 2);
+        pc.shed(4);
+        assert_eq!(pool.free_pages(), 4, "shed evicts entries until the target frees up");
+        assert!(pc.is_empty());
+    }
+
+    #[test]
+    fn prefix_cache_drop_releases_pages() {
+        let pool = KvPool::new(4, 2, 2);
+        {
+            let mut pc = PrefixCache::new(pool.clone(), 4);
+            let mut a = PagedKv::new(&pool, 4);
+            a.push(&rowv(2, 0.0), &rowv(2, 0.0));
+            a.push(&rowv(2, 1.0), &rowv(2, 1.0));
+            pc.register(vec![1, 2], vec![a.prefix_pages(2).unwrap()]);
+            drop(a);
+            assert_eq!(pool.pages_in_use(), 1);
+        }
+        assert_eq!(pool.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn shared_note_is_a_peak_gauge() {
+        let pool = KvPool::new(2, 2, 2);
+        pool.note_shared(3);
+        pool.note_shared(1);
+        assert_eq!(pool.shared_pages_note(), 3);
+        pool.note_shared(5);
+        assert_eq!(pool.shared_pages_note(), 5);
+    }
+}

@@ -16,7 +16,11 @@
 //! through the packed engine's GEMV path. [`speculative`] stacks
 //! draft-and-verify decoding on top: a cheap draft session proposes k
 //! tokens, the target scores k+1 positions in one skinny batched
-//! forward, and greedy acceptance is provably lossless.
+//! forward, and greedy acceptance is provably lossless. [`kvpool`]
+//! lifts KV storage off private rings onto a shared block pool
+//! (fixed-size pages, per-session block tables, copy-on-write prefix
+//! sharing) so resident sessions are priced by pages, not worst-case
+//! `n_ctx` buffers.
 //!
 //! The deployed (true-INT) pipeline is [`QuantizedGpt2`]: one
 //! [`crate::quant::QuantLinear`] operator per projection site, built by
@@ -24,11 +28,13 @@
 //! (naive, MUXQ, LLM.int8(), SmoothQuant compositions) deploys through
 //! the same object shape, end to end into the generation server.
 
+pub mod kvpool;
 mod model;
 mod quantized;
 pub mod session;
 pub mod speculative;
 
+pub use kvpool::{KvPool, LayerPages, Page, PagedKv, PrefixCache, PrefixHit};
 pub use model::{Gpt2Config, Gpt2Model, KvCache, ProjFn, SiteCapture, PROJ_SITES};
 pub use quantized::QuantizedGpt2;
 pub use session::{

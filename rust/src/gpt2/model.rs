@@ -17,12 +17,13 @@
 //! property `tests/decode_session.rs` pins across ragged prompt lengths
 //! and cache states.
 
+use super::kvpool::{KvPool, Page, PagedKv};
 use crate::data::tensors::TensorFile;
 use crate::quant::gemm::matmul_f32;
 use crate::quant::{MatF32, QuantSpec};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 /// The four quantized projection sites (paper §4.3), in block order.
 pub const PROJ_SITES: [&str; 4] = ["c_attn", "attn_proj", "c_fc", "mlp_proj"];
@@ -115,34 +116,34 @@ enum LogitsMode {
 /// decision (`gpt2::session::WrapPolicy`): the exactness-preserving
 /// policy re-prefills before the ring wraps, the sliding policy lets it
 /// wrap. Logical index 0 always names the oldest live row.
+///
+/// Two interchangeable backings present this one surface: the original
+/// contiguous ring ([`KvCache::new`]) and a paged block table over a
+/// shared [`KvPool`] ([`KvCache::paged`]). Reads and pushes are
+/// bit-identical across backings; only the paged one can refuse a write
+/// (pool exhausted — surfaced through [`KvCache::ensure_capacity`]) or
+/// share prefix pages with other sessions.
 pub struct KvCache {
+    b: Backing,
+}
+
+enum Backing {
+    Ring(RingKv),
+    Paged(PagedKv),
+}
+
+/// The original ring storage: one contiguous `[cap, d_model]` K and V
+/// matrix owned by this cache alone.
+struct RingKv {
     k: MatF32, // [cap, d_model]
     v: MatF32,
     start: usize,
     len: usize,
 }
 
-impl KvCache {
-    pub fn new(cap: usize, d_model: usize) -> KvCache {
-        assert!(cap > 0, "zero-capacity kv cache");
-        KvCache { k: MatF32::zeros(cap, d_model), v: MatF32::zeros(cap, d_model), start: 0, len: 0 }
-    }
-
-    pub fn cap(&self) -> usize {
+impl RingKv {
+    fn cap(&self) -> usize {
         self.k.rows
-    }
-
-    pub fn len(&self) -> usize {
-        self.len
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len == 0
-    }
-
-    pub fn clear(&mut self) {
-        self.start = 0;
-        self.len = 0;
     }
 
     #[inline(always)]
@@ -151,31 +152,7 @@ impl KvCache {
         (self.start + logical) % self.cap()
     }
 
-    /// K row at logical index (0 = oldest live entry).
-    #[inline(always)]
-    pub fn k_row(&self, logical: usize) -> &[f32] {
-        self.k.row(self.slot(logical))
-    }
-
-    /// V row at logical index (0 = oldest live entry).
-    #[inline(always)]
-    pub fn v_row(&self, logical: usize) -> &[f32] {
-        self.v.row(self.slot(logical))
-    }
-
-    /// Drop the NEWEST rows so only the oldest `len` remain — the
-    /// speculative-decode rollback: a rejected draft's K/V rows are
-    /// logically at the tail, so truncation restores the cache to the
-    /// accepted prefix exactly (`start` is untouched; the retained rows
-    /// keep their slots, so attention reads them back bit-identical).
-    /// A `len` at or above the current length is a no-op.
-    pub fn truncate(&mut self, len: usize) {
-        self.len = self.len.min(len);
-    }
-
-    /// Append one K/V row pair; when full, overwrite the oldest entry
-    /// instead (ring advance). Returns whether an eviction happened.
-    pub fn push(&mut self, k_row: &[f32], v_row: &[f32]) -> bool {
+    fn push(&mut self, k_row: &[f32], v_row: &[f32]) -> bool {
         let cap = self.cap();
         if self.len == cap {
             let slot = self.start;
@@ -189,6 +166,169 @@ impl KvCache {
             self.v.row_mut(slot).copy_from_slice(v_row);
             self.len += 1;
             false
+        }
+    }
+}
+
+impl KvCache {
+    /// Ring-backed cache: private contiguous storage, never refuses a
+    /// write. The pre-pager layout, kept as the differential oracle.
+    pub fn new(cap: usize, d_model: usize) -> KvCache {
+        assert!(cap > 0, "zero-capacity kv cache");
+        KvCache {
+            b: Backing::Ring(RingKv {
+                k: MatF32::zeros(cap, d_model),
+                v: MatF32::zeros(cap, d_model),
+                start: 0,
+                len: 0,
+            }),
+        }
+    }
+
+    /// Paged cache drawing fixed-size pages from a shared [`KvPool`].
+    /// Pages are allocated lazily as rows are written and returned on
+    /// clear/truncate/drop.
+    pub fn paged(pool: &KvPool, cap: usize) -> KvCache {
+        KvCache { b: Backing::Paged(PagedKv::new(pool, cap)) }
+    }
+
+    /// Whether this cache is pool-backed.
+    pub fn is_paged(&self) -> bool {
+        matches!(self.b, Backing::Paged(_))
+    }
+
+    pub fn cap(&self) -> usize {
+        match &self.b {
+            Backing::Ring(r) => r.cap(),
+            Backing::Paged(p) => p.cap(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.b {
+            Backing::Ring(r) => r.len,
+            Backing::Paged(p) => p.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&mut self) {
+        match &mut self.b {
+            Backing::Ring(r) => {
+                r.start = 0;
+                r.len = 0;
+            }
+            Backing::Paged(p) => p.clear(),
+        }
+    }
+
+    /// K row at logical index (0 = oldest live entry).
+    #[inline(always)]
+    pub fn k_row(&self, logical: usize) -> &[f32] {
+        match &self.b {
+            Backing::Ring(r) => r.k.row(r.slot(logical)),
+            Backing::Paged(p) => p.k_row(logical),
+        }
+    }
+
+    /// V row at logical index (0 = oldest live entry).
+    #[inline(always)]
+    pub fn v_row(&self, logical: usize) -> &[f32] {
+        match &self.b {
+            Backing::Ring(r) => r.v.row(r.slot(logical)),
+            Backing::Paged(p) => p.v_row(logical),
+        }
+    }
+
+    /// Drop the NEWEST rows so only the oldest `len` remain — the
+    /// speculative-decode rollback: a rejected draft's K/V rows are
+    /// logically at the tail, so truncation restores the cache to the
+    /// accepted prefix exactly (`start` is untouched; the retained rows
+    /// keep their slots, so attention reads them back bit-identical).
+    /// A `len` at or above the current length is a no-op. A paged cache
+    /// additionally releases pages left covering no live row.
+    pub fn truncate(&mut self, len: usize) {
+        match &mut self.b {
+            Backing::Ring(r) => r.len = r.len.min(len),
+            Backing::Paged(p) => p.truncate(len),
+        }
+    }
+
+    /// Append one K/V row pair; when full, overwrite the oldest entry
+    /// instead (ring advance). Returns whether an eviction happened.
+    pub fn push(&mut self, k_row: &[f32], v_row: &[f32]) -> bool {
+        match &mut self.b {
+            Backing::Ring(r) => r.push(k_row, v_row),
+            Backing::Paged(p) => p.push(k_row, v_row),
+        }
+    }
+
+    /// Reserve backing storage for the next `rows` pushes. A ring cache
+    /// always succeeds; a paged cache allocates (or COW-forks) every
+    /// page those writes will touch, erroring — before any row is
+    /// written — when the pool is exhausted.
+    pub fn ensure_capacity(&mut self, rows: usize) -> Result<()> {
+        match &mut self.b {
+            Backing::Ring(_) => Ok(()),
+            Backing::Paged(p) => p.ensure_capacity(rows),
+        }
+    }
+
+    /// Pages the next `rows` pushes would have to allocate or fork
+    /// (0 for a ring cache) — the admission layer's pricing input.
+    pub fn pages_needed(&self, rows: usize) -> usize {
+        match &self.b {
+            Backing::Ring(_) => 0,
+            Backing::Paged(p) => p.pages_needed(rows),
+        }
+    }
+
+    /// Pages `rows` rows occupy at this cache's page size, ignoring
+    /// current state (0 for a ring cache) — worst-case pricing for a
+    /// cache that will be cleared and re-prefilled.
+    pub fn pages_for(&self, rows: usize) -> usize {
+        match &self.b {
+            Backing::Ring(_) => 0,
+            Backing::Paged(p) => {
+                let r = p.page_size();
+                rows.min(p.cap()).div_ceil(r)
+            }
+        }
+    }
+
+    /// Mapped pages held by this cache (0 for a ring cache).
+    pub fn pages_held(&self) -> usize {
+        match &self.b {
+            Backing::Ring(_) => 0,
+            Backing::Paged(p) => p.pages_held(),
+        }
+    }
+
+    /// Held pages shared with another owner (0 for a ring cache).
+    pub fn shared_pages(&self) -> usize {
+        match &self.b {
+            Backing::Ring(_) => 0,
+            Backing::Paged(p) => p.shared_pages(),
+        }
+    }
+
+    /// Adopt `rows` rows of shared prefix pages (paged backing only).
+    pub fn seed_prefix(&mut self, pages: &[Arc<Page>], rows: usize) -> Result<()> {
+        match &mut self.b {
+            Backing::Ring(_) => bail!("seed_prefix requires a paged kv cache"),
+            Backing::Paged(p) => p.seed_prefix(pages, rows),
+        }
+    }
+
+    /// Clone out the first `rows` rows as shareable pages (`None` on a
+    /// ring backing or when the request is unaligned/oversized).
+    pub fn prefix_pages(&self, rows: usize) -> Option<Vec<Arc<Page>>> {
+        match &self.b {
+            Backing::Ring(_) => None,
+            Backing::Paged(p) => p.prefix_pages(rows),
         }
     }
 }
@@ -486,7 +626,7 @@ impl Gpt2Model {
             bail!("{} kv caches for {} layers", caches.len(), self.cfg.n_layer);
         }
         let base = caches[0].len();
-        for c in caches.iter() {
+        for c in caches.iter_mut() {
             if c.len() != base {
                 bail!("per-layer kv caches out of sync ({} vs {base})", c.len());
             }
@@ -496,6 +636,10 @@ impl Gpt2Model {
                     c.cap()
                 );
             }
+            // paged backing: reserve (alloc / COW-fork) the pages these S
+            // pushes will hit, so exhaustion errors out here rather than
+            // panicking mid-write
+            c.ensure_capacity(s)?;
         }
         let mut h = MatF32::zeros(s, d);
         for (si, &tok) in tokens.iter().enumerate() {
@@ -604,7 +748,7 @@ impl Gpt2Model {
                 caches.len()
             );
         }
-        for (gi, cs) in caches.iter().enumerate() {
+        for (gi, cs) in caches.iter_mut().enumerate() {
             if cs.len() != self.cfg.n_layer {
                 bail!("session {gi}: {} kv caches for {} layers", cs.len(), self.cfg.n_layer);
             }
@@ -617,6 +761,12 @@ impl Gpt2Model {
             }
             if tokens[gi] as usize >= self.cfg.vocab_size {
                 bail!("session {gi}: token {} out of vocab", tokens[gi]);
+            }
+            for c in cs.iter_mut() {
+                // paged backing: the single push below may need a fresh
+                // page (or a COW fork of a shared one) — reserve it now so
+                // pool exhaustion is an error, not a mid-batch panic
+                c.ensure_capacity(1)?;
             }
         }
         let mut h = MatF32::zeros(g, d);
@@ -685,6 +835,18 @@ impl Gpt2Model {
         (0..self.cfg.n_layer)
             .map(|_| KvCache::new(self.cfg.n_ctx, self.cfg.d_model))
             .collect()
+    }
+
+    /// Fresh per-layer paged caches drawing from `pool`. The pool's row
+    /// width must match the model (page buffers are shared across every
+    /// session of this server, so the shape is a pool-level invariant).
+    pub fn new_paged_kv_caches(&self, pool: &KvPool) -> Vec<KvCache> {
+        assert_eq!(
+            pool.d_model(),
+            self.cfg.d_model,
+            "kv pool row width does not match the model"
+        );
+        (0..self.cfg.n_layer).map(|_| KvCache::paged(pool, self.cfg.n_ctx)).collect()
     }
 
     /// Per-sequence NLL sums + token counts (twin of python nll_per_seq).
@@ -1100,6 +1262,51 @@ mod tests {
         assert_eq!(c.k_row(2), &[9.0, 0.0]);
         c.truncate(10); // no-op past len
         assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn kv_cache_paged_backing_matches_ring() {
+        // every op the sessions issue, replayed against both backings
+        let pool = super::KvPool::new(8, 2, 2);
+        let mut ring = KvCache::new(5, 2);
+        let mut paged = KvCache::paged(&pool, 5);
+        assert!(!ring.is_paged() && paged.is_paged());
+        for t in 0..9 {
+            paged.ensure_capacity(1).unwrap();
+            let (er, ep) =
+                (ring.push(&[t as f32, 1.0], &[2.0, t as f32]), paged.push(&[t as f32, 1.0], &[2.0, t as f32]));
+            assert_eq!(er, ep, "eviction signal diverged at t={t}");
+        }
+        assert_eq!(ring.len(), paged.len());
+        for i in 0..ring.len() {
+            assert_eq!(ring.k_row(i), paged.k_row(i));
+            assert_eq!(ring.v_row(i), paged.v_row(i));
+        }
+        ring.truncate(2);
+        paged.truncate(2);
+        assert_eq!(ring.len(), paged.len());
+        for i in 0..2 {
+            assert_eq!(ring.k_row(i), paged.k_row(i));
+        }
+        paged.clear();
+        assert_eq!(pool.pages_in_use(), 0, "clear returns every page");
+    }
+
+    #[test]
+    fn paged_session_forward_matches_ring_session() {
+        let (cfg, m) = tiny();
+        let pool = super::KvPool::new(64, 3, cfg.d_model);
+        let t = toks(1, 8, 77, cfg.vocab_size as u32)[0].clone();
+        let mut ring = m.new_kv_caches();
+        let mut paged = m.new_paged_kv_caches(&pool);
+        let lr = m.forward_session(&t[..6], 0, &mut ring, None).unwrap();
+        let lp = m.forward_session(&t[..6], 0, &mut paged, None).unwrap();
+        assert_eq!(lr.data, lp.data, "prefill logits diverged across backings");
+        let dr = m.decode_step_sessions(&[t[6]], &[6], &mut [&mut ring], None).unwrap();
+        let dp = m.decode_step_sessions(&[t[6]], &[6], &mut [&mut paged], None).unwrap();
+        assert_eq!(dr.data, dp.data, "decode logits diverged across backings");
+        drop(paged);
+        assert_eq!(pool.pages_in_use(), 0);
     }
 
     #[test]

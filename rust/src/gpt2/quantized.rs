@@ -186,6 +186,50 @@ impl QuantizedGpt2 {
         }
         total
     }
+
+    /// [`QuantizedGpt2::decode_plans`] with paged-KV attention traffic
+    /// priced in: each block's attention step streams `ctx_rows` K/V
+    /// rows gathered from non-contiguous `page_rows`-sized pages, so the
+    /// c_attn plan carries the page-gather DMA overhead
+    /// ([`Plan::with_paged_kv_gather`]) on top of its GEMM cost. The
+    /// residual and MLP sites are KV-free and price unchanged.
+    pub fn decode_plans_paged(
+        &self,
+        cfg: &NpuConfig,
+        r: usize,
+        ctx_rows: usize,
+        page_rows: usize,
+    ) -> Vec<Plan> {
+        let d_model = self.fp.cfg.d_model;
+        let mut plans = Vec::with_capacity(self.weights.len() * 4);
+        for site_ops in &self.weights {
+            for (si, ri) in [(0usize, r), (1, 0), (2, r), (3, 0)] {
+                let p = site_ops[si].plan(cfg, 1, ri);
+                plans.push(if si == 0 {
+                    p.with_paged_kv_gather(cfg, ctx_rows, d_model, page_rows)
+                } else {
+                    p
+                });
+            }
+        }
+        plans
+    }
+
+    /// Simulated cost of one decode step over a paged KV cache holding
+    /// `ctx_rows` live rows in `page_rows`-sized pages.
+    pub fn decode_cost_sim_paged(
+        &self,
+        cfg: &NpuConfig,
+        r: usize,
+        ctx_rows: usize,
+        page_rows: usize,
+    ) -> Cost {
+        let mut total = Cost::default();
+        for p in self.decode_plans_paged(cfg, r, ctx_rows, page_rows) {
+            total.add(p.cost(cfg));
+        }
+        total
+    }
 }
 
 #[cfg(test)]
@@ -396,5 +440,31 @@ mod tests {
         let cm = muxq.decode_cost_sim(&cfg, 4).cycles();
         let cx = mixed.decode_cost_sim(&cfg, 4).cycles();
         assert!(cm < cx, "muxq {cm} vs llm.int8() {cx}");
+    }
+
+    #[test]
+    fn paged_decode_plans_price_the_kv_gather() {
+        let cfg = NpuConfig::default();
+        let muxq = QuantizedGpt2::new(tiny(), EngineSpec::muxq());
+        let flat = muxq.decode_plans(&cfg, 4);
+        let paged = muxq.decode_plans_paged(&cfg, 4, 96, 16);
+        assert_eq!(flat.len(), paged.len());
+        // only the attention site (every 4th plan, si == 0) pays gather
+        for (i, (f, p)) in flat.iter().zip(&paged).enumerate() {
+            if i % 4 == 0 {
+                assert!(
+                    p.overhead_cycles > f.overhead_cycles,
+                    "c_attn plan {i} must carry page-gather overhead"
+                );
+            } else {
+                assert_eq!(p.overhead_cycles, f.overhead_cycles, "KV-free site {i} changed");
+            }
+        }
+        // gather overhead grows with context and shrinks with page size
+        let short = muxq.decode_cost_sim_paged(&cfg, 4, 16, 16).cycles();
+        let long = muxq.decode_cost_sim_paged(&cfg, 4, 96, 16).cycles();
+        assert!(long > short, "more live KV rows must cost more ({long} vs {short})");
+        let coarse = muxq.decode_cost_sim_paged(&cfg, 4, 96, 32).cycles();
+        assert!(coarse < long, "bigger pages mean fewer gather bursts ({coarse} vs {long})");
     }
 }

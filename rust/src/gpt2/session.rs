@@ -36,6 +36,7 @@
 //!   full-forward oracle past the wrap; the ring mechanics themselves
 //!   are pinned against a deque reference in `tests/decode_session.rs`.
 
+use super::kvpool::{KvPool, PrefixCache};
 use super::model::{Gpt2Config, Gpt2Model, KvCache};
 use super::quantized::QuantizedGpt2;
 use crate::data::prng::SplitMix64;
@@ -46,7 +47,12 @@ use anyhow::{bail, Result};
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WrapPolicy {
     /// Drop the oldest tokens and re-prefill the last `keep` with fresh
-    /// positions (exact; `keep == 0` means 3/4 of `n_ctx`).
+    /// positions (exact). `keep == 0` selects the default window,
+    /// `3/4 · n_ctx` rounded down but never below 1; an explicit `keep`
+    /// is clamped into `[1, n_ctx - 1]` — silently, so a `keep >= n_ctx`
+    /// retains `n_ctx - 1` tokens rather than failing. See
+    /// [`WrapPolicy::keep_for`] for the exact rule (including the
+    /// degenerate `n_ctx <= 1` edge).
     Reprefill { keep: usize },
     /// Ring-overwrite the oldest entry, clamp positions at `n_ctx - 1`
     /// (approximate, O(1) per step).
@@ -60,10 +66,26 @@ impl Default for WrapPolicy {
 }
 
 impl WrapPolicy {
-    fn keep_for(self, n_ctx: usize) -> usize {
+    /// Tokens retained across a wrap of an `n_ctx`-sized window.
+    ///
+    /// * `Reprefill { keep: 0 }` → `max(n_ctx * 3 / 4, 1)` (the default
+    ///   window; the `max` matters only for `n_ctx <= 1`).
+    /// * `Reprefill { keep }` → `keep` clamped into `[1, n_ctx - 1]`.
+    ///   The clamp is silent — this is a best-effort policy knob, not a
+    ///   validated config.
+    /// * `Slide` → `n_ctx` (nothing is dropped; the ring overwrites).
+    ///
+    /// Degenerate edge: at `n_ctx <= 1` both Reprefill arms resolve to
+    /// 1, which *exceeds* `n_ctx - 1` (saturating to 0 for `n_ctx == 0`)
+    /// — there is no way to keep a nonempty strict prefix of a ≤1-token
+    /// window. Callers that must leave room for new tokens apply their
+    /// own cap (`SessionState::ensure_room_for` takes
+    /// `min(keep_for(n_ctx), n_ctx - need)`), which is also what makes
+    /// the value usable at all in that edge.
+    pub fn keep_for(self, n_ctx: usize) -> usize {
         match self {
             WrapPolicy::Reprefill { keep: 0 } => (n_ctx * 3 / 4).max(1),
-            WrapPolicy::Reprefill { keep } => keep.min(n_ctx - 1).max(1),
+            WrapPolicy::Reprefill { keep } => keep.min(n_ctx.saturating_sub(1)).max(1),
             WrapPolicy::Slide => n_ctx,
         }
     }
@@ -419,6 +441,26 @@ impl SessionState {
         }
     }
 
+    /// A session whose per-layer caches draw pages from a shared
+    /// [`KvPool`] instead of owning `[n_ctx, d_model]` rings — same
+    /// decode semantics (the proptests pin bit-exactness), but storage
+    /// is priced per page and common prefixes can be shared
+    /// copy-on-write across sessions.
+    pub fn new_paged(cfg: &Gpt2Config, wrap: WrapPolicy, pool: &KvPool) -> SessionState {
+        assert_eq!(pool.d_model(), cfg.d_model, "kv pool row width does not match the model");
+        SessionState {
+            caches: (0..cfg.n_layer).map(|_| KvCache::paged(pool, cfg.n_ctx)).collect(),
+            window: Vec::new(),
+            wrap,
+            prefills: 0,
+        }
+    }
+
+    /// Whether this session's caches are pool-backed.
+    pub fn is_paged(&self) -> bool {
+        self.caches.first().map(|c| c.is_paged()).unwrap_or(false)
+    }
+
     /// The live context: every token whose K/V the next step attends to.
     /// After a `decode_step` the stepped token is included, so under the
     /// (default, exact) Reprefill policy the returned logits are always a
@@ -456,6 +498,85 @@ impl SessionState {
         self.window.extend_from_slice(used);
         self.prefills += 1;
         Ok(logits)
+    }
+
+    /// Prefill through a shared [`PrefixCache`]: if a registered prefix
+    /// matches this prompt, seed its pages into the caches (zero copies,
+    /// copy-on-write from here on) and run the forward only over the
+    /// uncached tail; afterwards, register this prompt's own page-aligned
+    /// prefix for future sessions. Falls back to a plain
+    /// [`SessionState::prefill`] on ring-backed caches. Bit-exact either
+    /// way: K/V rows are deterministic functions of the causal token
+    /// prefix from position 0, so a seeded page equals recomputation.
+    pub fn prefill_cached(
+        &mut self,
+        m: SessionModel<'_>,
+        prompt: &[u32],
+        pc: &mut PrefixCache,
+    ) -> Result<Vec<f32>> {
+        if !self.is_paged() {
+            return self.prefill(m, prompt);
+        }
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        let n_ctx = m.gpt().cfg.n_ctx;
+        let used = &prompt[prompt.len().saturating_sub(n_ctx)..];
+        for c in &mut self.caches {
+            c.clear();
+        }
+        self.window.clear();
+        let hit = pc.lookup(used);
+        let logits = match hit {
+            Some(h) => {
+                debug_assert!(h.rows < used.len(), "lookup must leave a tail to prefill");
+                for (c, pages) in self.caches.iter_mut().zip(&h.pages) {
+                    c.seed_prefix(pages, h.rows)?;
+                }
+                m.extend_last(&used[h.rows..], h.rows, &mut self.caches)?
+            }
+            None => m.extend_last(used, 0, &mut self.caches)?,
+        };
+        self.window.extend_from_slice(used);
+        self.prefills += 1;
+        // offer this prompt's page-aligned prefix to future sessions
+        // (register() drops duplicates and releases their references)
+        let r = pc.page_rows();
+        let t = used.len() / r * r;
+        if t > 0 {
+            if let Some(pages) =
+                self.caches.iter().map(|c| c.prefix_pages(t)).collect::<Option<Vec<_>>>()
+            {
+                pc.register(used[..t].to_vec(), pages);
+            }
+        }
+        Ok(logits)
+    }
+
+    /// Pages this session's next `need`-token extend will demand from
+    /// the pool, worst case (0 for ring sessions) — the scheduler's
+    /// pressure input. If the extend will trigger a Reprefill wrap, the
+    /// wrap's full re-prefill footprint is priced (conservatively
+    /// ignoring the pages the preceding clear frees).
+    pub fn page_demand(&self, n_ctx: usize, need: usize) -> usize {
+        if !self.is_paged() {
+            return 0;
+        }
+        let wraps = self.window.len() + need > n_ctx
+            && matches!(self.wrap, WrapPolicy::Reprefill { .. })
+            && need < n_ctx;
+        if wraps {
+            let keep = self.wrap.keep_for(n_ctx).min(n_ctx - need);
+            self.caches.iter().map(|c| c.pages_for(keep + need)).sum()
+        } else {
+            self.caches.iter().map(|c| c.pages_needed(need)).sum()
+        }
+    }
+
+    /// Pages this session holds that are shared with another owner
+    /// (summed over layers; 0 for ring sessions).
+    pub fn shared_pages(&self) -> usize {
+        self.caches.iter().map(|c| c.shared_pages()).sum()
     }
 
     /// Append one token and return its next-token logits — O(context)
@@ -621,6 +742,11 @@ impl<'m> DecodeSession<'m> {
         DecodeSession { state: SessionState::new(&model.gpt().cfg, wrap), model }
     }
 
+    /// A session with pool-backed (paged) KV caches.
+    pub fn new_paged(model: SessionModel<'m>, wrap: WrapPolicy, pool: &KvPool) -> DecodeSession<'m> {
+        DecodeSession { state: SessionState::new_paged(&model.gpt().cfg, wrap, pool), model }
+    }
+
     pub fn prefill(&mut self, prompt: &[u32]) -> Result<Vec<f32>> {
         self.state.prefill(self.model, prompt)
     }
@@ -668,6 +794,11 @@ impl Gpt2Model {
     pub fn session(&self, wrap: WrapPolicy) -> DecodeSession<'_> {
         DecodeSession::new(SessionModel::Fp(self), wrap)
     }
+
+    /// Open a session whose KV caches draw pages from `pool`.
+    pub fn session_paged(&self, wrap: WrapPolicy, pool: &KvPool) -> DecodeSession<'_> {
+        DecodeSession::new_paged(SessionModel::Fp(self), wrap, pool)
+    }
 }
 
 impl QuantizedGpt2 {
@@ -675,6 +806,11 @@ impl QuantizedGpt2 {
     /// (row-independent session projection — see `quantized.rs` docs).
     pub fn session(&self, wrap: WrapPolicy) -> DecodeSession<'_> {
         DecodeSession::new(SessionModel::Int(self), wrap)
+    }
+
+    /// Open a true-INT session whose KV caches draw pages from `pool`.
+    pub fn session_paged(&self, wrap: WrapPolicy, pool: &KvPool) -> DecodeSession<'_> {
+        DecodeSession::new_paged(SessionModel::Int(self), wrap, pool)
     }
 }
 
@@ -702,6 +838,39 @@ mod tests {
     fn toks(n: usize, seed: u64) -> Vec<u32> {
         let mut rng = crate::data::prng::SplitMix64::new(seed);
         (0..n).map(|_| rng.next_below(32) as u32).collect()
+    }
+
+    #[test]
+    fn keep_for_default_is_three_quarters_floor_one() {
+        assert_eq!(WrapPolicy::Reprefill { keep: 0 }.keep_for(16), 12);
+        assert_eq!(WrapPolicy::Reprefill { keep: 0 }.keep_for(5), 3);
+        // the max(1) floor only matters at degenerate contexts
+        assert_eq!(WrapPolicy::Reprefill { keep: 0 }.keep_for(1), 1);
+    }
+
+    #[test]
+    fn keep_for_clamps_explicit_keep_silently() {
+        // in range: passes through
+        assert_eq!(WrapPolicy::Reprefill { keep: 5 }.keep_for(16), 5);
+        // too big: clamped to n_ctx - 1, not an error
+        assert_eq!(WrapPolicy::Reprefill { keep: 99 }.keep_for(16), 15);
+        assert_eq!(WrapPolicy::Reprefill { keep: 16 }.keep_for(16), 15);
+        // Slide keeps everything (the ring overwrites)
+        assert_eq!(WrapPolicy::Slide.keep_for(16), 16);
+    }
+
+    #[test]
+    fn keep_for_n_ctx_at_most_one_resolves_to_one() {
+        // the documented degenerate edge: at n_ctx <= 1 there is no
+        // nonempty strict prefix to keep, so BOTH Reprefill arms return
+        // 1 — which exceeds n_ctx - 1. Callers needing room apply their
+        // own min(.., n_ctx - need) cap (ensure_room_for does).
+        for n_ctx in [0usize, 1] {
+            assert_eq!(WrapPolicy::Reprefill { keep: 0 }.keep_for(n_ctx), 1);
+            assert_eq!(WrapPolicy::Reprefill { keep: 7 }.keep_for(n_ctx), 1);
+        }
+        // and the cap callers apply does saturate sanely
+        assert_eq!(WrapPolicy::Reprefill { keep: 7 }.keep_for(1).min(1usize.saturating_sub(1)), 0);
     }
 
     #[test]

@@ -39,6 +39,7 @@
 //! [`WrapPolicy::Reprefill`] policy: rollback needs window ↔ ring
 //! agreement, which Slide's in-place overwrite breaks.
 
+use super::kvpool::KvPool;
 use super::model::{Gpt2Config, Gpt2Model};
 use super::quantized::QuantizedGpt2;
 use super::session::{Sampler, SessionModel, SessionState, WrapPolicy};
@@ -146,6 +147,39 @@ impl SpeculativeState {
         k: usize,
         wrap: WrapPolicy,
     ) -> Result<SpeculativeState> {
+        Self::validate(target_cfg, k, wrap)?;
+        Ok(Self::from_sessions(
+            k,
+            SessionState::new(target_cfg, wrap),
+            SessionState::new(draft_cfg, wrap),
+        ))
+    }
+
+    /// [`SpeculativeState::new`] with BOTH sessions drawing KV pages
+    /// from a shared [`KvPool`] — target and draft preserve `d_model`
+    /// (NaiveInt8 is the same architecture; TruncateLayers shrinks depth
+    /// only), so one pool serves both block tables. Rollback
+    /// (`truncate_to`) releases dead pages instead of merely shrinking
+    /// `len`, which the differential proptests pin bit-exact against the
+    /// ring pair.
+    pub fn new_paged(
+        target_cfg: &Gpt2Config,
+        draft_cfg: &Gpt2Config,
+        k: usize,
+        wrap: WrapPolicy,
+        pool: &KvPool,
+    ) -> Result<SpeculativeState> {
+        Self::validate(target_cfg, k, wrap)?;
+        Ok(Self::from_sessions(
+            k,
+            SessionState::new_paged(target_cfg, wrap, pool),
+            SessionState::new_paged(draft_cfg, wrap, pool),
+        ))
+    }
+
+    /// Shared admission checks for both constructors. Speculation
+    /// requires the exact wrap policy (see module docs).
+    fn validate(target_cfg: &Gpt2Config, k: usize, wrap: WrapPolicy) -> Result<()> {
         if k == 0 {
             bail!("speculative k must be >= 1");
         }
@@ -155,17 +189,21 @@ impl SpeculativeState {
         if k + 1 >= target_cfg.n_ctx {
             bail!("k {k} leaves no room for verify in n_ctx {}", target_cfg.n_ctx);
         }
-        Ok(SpeculativeState {
+        Ok(())
+    }
+
+    fn from_sessions(k: usize, t: SessionState, d: SessionState) -> SpeculativeState {
+        SpeculativeState {
             k,
-            t: SessionState::new(target_cfg, wrap),
-            d: SessionState::new(draft_cfg, wrap),
+            t,
+            d,
             pending: Vec::new(),
             rounds: 0,
             drafted: 0,
             accepted: 0,
             qrows: Vec::new(),
             pbuf: Vec::new(),
-        })
+        }
     }
 
     /// Prefill BOTH sessions with the prompt; returns the target's

@@ -183,6 +183,50 @@ impl Plan {
         self
     }
 
+    /// K + V bytes of `ctx_rows` live cache rows (f32, d_model wide —
+    /// the layout `gpt2::KvCache` stores).
+    fn kv_bytes(ctx_rows: usize, d_model: usize) -> f64 {
+        (ctx_rows * d_model) as f64 * 2.0 * 4.0
+    }
+
+    /// Price the attention read of a CONTIGUOUS (ring) KV cache into
+    /// this plan: `ctx_rows` K and V rows stream at full DRAM bandwidth
+    /// — the pre-pager baseline [`Plan::with_paged_kv_gather`] is
+    /// compared against.
+    pub fn with_contiguous_kv(mut self, cfg: &NpuConfig, ctx_rows: usize, d_model: usize) -> Plan {
+        if ctx_rows == 0 {
+            return self;
+        }
+        let bytes_per_cycle = cfg.dram_gbps * 1e9 / (cfg.freq_ghz * 1e9);
+        self.overhead_cycles += Self::kv_bytes(ctx_rows, d_model) / bytes_per_cycle;
+        self
+    }
+
+    /// Price the attention read of a PAGED KV cache into this plan:
+    /// `ctx_rows` live rows scattered across `page_rows`-sized pages.
+    /// The block table makes the access non-contiguous, so the bytes
+    /// move at the irregular-gather rate (`gather_bytes_per_cycle`, the
+    /// same penalty the mixed-precision split pays) and every page costs
+    /// one K burst + one V burst of DMA descriptor setup
+    /// (`page_gather_setup_cycles`). Larger pages amortize the setup —
+    /// exactly the fill-vs-gather trade the page-size knob tunes.
+    pub fn with_paged_kv_gather(
+        mut self,
+        cfg: &NpuConfig,
+        ctx_rows: usize,
+        d_model: usize,
+        page_rows: usize,
+    ) -> Plan {
+        if ctx_rows == 0 {
+            return self;
+        }
+        let page_rows = page_rows.max(1);
+        let pages = ctx_rows.div_ceil(page_rows);
+        self.overhead_cycles += Self::kv_bytes(ctx_rows, d_model) / cfg.gather_bytes_per_cycle
+            + (2 * pages) as f64 * cfg.page_gather_setup_cycles;
+        self
+    }
+
     /// End-to-end latency ratio of this plan on a 32-bit-lane (one MAC
     /// per cycle) datapath vs the i16 pair-accumulation datapath, same
     /// config otherwise. In [1, 2]: compute-bound INT plans approach 2x;
@@ -381,6 +425,44 @@ mod tests {
         // and a large-batch INT plan is compute-bound: decode is special
         let batch = Plan::build(&cfg, Method::Muxq, 4096, 4096, 4096, 12, 8, 2);
         assert!(!batch.is_memory_bound(&cfg), "big-batch plan must be compute-bound");
+    }
+
+    #[test]
+    fn paged_kv_gather_pricing() {
+        let cfg = NpuConfig::default();
+        let base = Plan::decode_step(&cfg, Method::Naive, 768, 2304, 0, 8, 1);
+        let flat = base.clone().with_contiguous_kv(&cfg, 96, 768);
+        let paged = base.clone().with_paged_kv_gather(&cfg, 96, 768, 16);
+        // the same bytes move, but gathered: paged must cost at least as
+        // much as the contiguous stream (gather rate < DRAM rate, plus
+        // per-page burst setup)
+        assert!(flat.overhead_cycles > base.overhead_cycles);
+        assert!(
+            paged.overhead_cycles > flat.overhead_cycles,
+            "paged {} vs contiguous {}",
+            paged.overhead_cycles,
+            flat.overhead_cycles
+        );
+        // bigger pages amortize burst setup: overhead monotonically
+        // shrinks as page_rows grows
+        let coarse = base.clone().with_paged_kv_gather(&cfg, 96, 768, 48);
+        assert!(coarse.overhead_cycles < paged.overhead_cycles);
+        // empty context is a no-op for both
+        assert_eq!(
+            base.clone().with_paged_kv_gather(&cfg, 0, 768, 16).overhead_cycles,
+            base.overhead_cycles
+        );
+        assert_eq!(
+            base.clone().with_contiguous_kv(&cfg, 0, 768).overhead_cycles,
+            base.overhead_cycles
+        );
+        // the decode step stays memory-bound with the gather priced in
+        // (overhead adds latency but is not MAC work)
+        assert!(paged.is_memory_bound(&cfg));
+        // the setup knob is live: pricier descriptors, pricier plan
+        let dearer = cfg.clone().with_page_gather_setup(640.0);
+        let p2 = base.clone().with_paged_kv_gather(&dearer, 96, 768, 16);
+        assert!(p2.overhead_cycles > paged.overhead_cycles);
     }
 
     #[test]

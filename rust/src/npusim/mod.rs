@@ -52,6 +52,10 @@ pub struct NpuConfig {
     pub pack_bytes_per_cycle: f64,
     /// cycles to flush/refill the array between precision domains.
     pub domain_switch_cycles: u64,
+    /// cycles of DMA descriptor setup per non-contiguous KV page burst
+    /// (paged attention reads K then V of each page as separate strided
+    /// bursts instead of one streaming transfer).
+    pub page_gather_setup_cycles: f64,
     /// INT accumulator lane width in bits. 32 models one i8 MAC per lane
     /// per cycle; 16 models i16 pair accumulation — two i8 MACs per lane
     /// before the i32 widening step, the datapath of
@@ -82,6 +86,7 @@ impl Default for NpuConfig {
             gather_bytes_per_cycle: 16.0,
             pack_bytes_per_cycle: 32.0,
             domain_switch_cycles: 2048,
+            page_gather_setup_cycles: 32.0,
             acc_width_bits: 16,
             dot_width: None,
             pj_per_int8_mac: 0.2,
@@ -123,6 +128,13 @@ impl NpuConfig {
     /// 2 = `pmaddwd`-class pair MACs).
     pub fn with_dot_width(mut self, d: u32) -> Self {
         self.dot_width = Some(d);
+        self
+    }
+
+    /// Builder-style page-gather DMA setup cost (cycles per KV page
+    /// burst in paged attention).
+    pub fn with_page_gather_setup(mut self, cycles: f64) -> Self {
+        self.page_gather_setup_cycles = cycles;
         self
     }
 

@@ -175,3 +175,95 @@ fn graceful_shutdown_completes_inflight() {
     let resp = h.wait().unwrap();
     assert!(resp.nll.is_finite());
 }
+
+#[test]
+fn paged_pool_pressure_evicts_and_refuses_instead_of_panicking() {
+    // oversubscribe a deliberately tiny KV pool: a full 12-token session
+    // needs 12 pages (2 layers x 6 pages at 2 rows/page), the pool holds
+    // 14, and three long-budget sessions with DISTINCT prompts (no
+    // prefix sharing to discount admission) fight for it. The server
+    // must never panic: demand is refused at admission or shed by
+    // evicting the newest session, every stream still gets exactly one
+    // terminal event, at least one session runs to its full budget, and
+    // the server keeps serving afterwards.
+    use muxq::coordinator::{
+        FinishReason, GenBackend, GenerateRequest, GenerationConfig, GenerationServer, TokenEvent,
+    };
+    use muxq::gpt2::Gpt2Model;
+
+    fn toks(n: usize, seed: u64) -> Vec<u32> {
+        (0..n).map(|i| ((seed * 31 + i as u64 * 7) % 32) as u32).collect()
+    }
+    let srv = GenerationServer::start(
+        GenBackend::Fp(Gpt2Model::test_model(2, 16, 2, 12, 32, 7)),
+        GenerationConfig {
+            pool_pages: 14,
+            page_rows: 2,
+            max_new_tokens: 64,
+            ..Default::default()
+        },
+    );
+    let handles: Vec<_> = (0..3)
+        .map(|i| srv.submit(GenerateRequest::greedy(toks(6, 101 + i), 20)).unwrap())
+        .collect();
+
+    let mut full_budget = 0;
+    let mut evicted = 0;
+    let mut refused = 0;
+    for h in handles {
+        let mut tokens = 0usize;
+        let mut terminal = None;
+        while let Some(ev) = h.recv() {
+            match ev {
+                TokenEvent::Token { index, token } => {
+                    assert_eq!(index, tokens, "out-of-order stream");
+                    assert!(token < 32, "out-of-vocab token under pressure");
+                    tokens += 1;
+                }
+                ev @ (TokenEvent::Done { .. } | TokenEvent::Error(_)) => {
+                    assert!(terminal.is_none(), "two terminal events on one stream");
+                    terminal = Some(ev);
+                }
+            }
+        }
+        match terminal.expect("stream closed without a terminal event") {
+            TokenEvent::Done { reason: FinishReason::MaxTokens, generated, .. } => {
+                assert_eq!(generated, 20, "full-budget session under-delivered");
+                assert_eq!(tokens, 20);
+                full_budget += 1;
+            }
+            TokenEvent::Done { reason: FinishReason::Evicted, generated, .. } => {
+                // eviction ends the stream cleanly with what was produced
+                assert_eq!(generated, tokens);
+                assert!(tokens < 20, "an evicted session cannot also be complete");
+                evicted += 1;
+            }
+            TokenEvent::Done { reason, .. } => panic!("unexpected finish reason {reason:?}"),
+            TokenEvent::Error(e) => {
+                assert!(
+                    e.contains("kv pool exhausted"),
+                    "pressure refusal must say why, got: {e}"
+                );
+                assert_eq!(tokens, 0, "refused sessions never stream tokens");
+                refused += 1;
+            }
+        }
+    }
+    assert_eq!(full_budget + evicted + refused, 3, "every stream accounted for");
+    assert!(full_budget >= 1, "at least one session must survive to its budget");
+    assert!(evicted + refused >= 1, "a 14-page pool cannot satisfy three 12-page sessions");
+
+    let st = srv.stats();
+    assert_eq!(st.completed as usize, full_budget);
+    assert_eq!(st.evicted as usize, evicted);
+    assert_eq!(st.pool_refusals as usize, refused);
+    // sessions returned their pages; only prefix-cache registrations may
+    // still occupy the pool, and the books must balance either way
+    assert_eq!(st.pool_pages_in_use + st.pool_pages_free, 14);
+
+    // the pool recovers: a fresh request after the storm serves normally
+    let after = srv.submit(GenerateRequest::greedy(toks(4, 200), 4)).unwrap();
+    assert_eq!(after.collect_tokens().unwrap().len(), 4);
+    assert_eq!(srv.stats().completed as usize, full_budget + 1);
+    srv.shutdown();
+}

@@ -1,0 +1,204 @@
+//! Allocator fuzz layer: random op-streams over [`PagedKv`] caches
+//! sharing one small [`KvPool`], checked after EVERY op against naive
+//! `VecDeque`-backed reference rings. The reference has no pages, no
+//! refcounts, and no sharing — so any aliasing (a COW fork that didn't
+//! copy, a GC that freed a live page, a seed that leaked a write
+//! channel) shows up as a content mismatch, and any bookkeeping error
+//! shows up in the pool conservation invariants:
+//!
+//! * content: every logical row of every cache bit-equals its reference
+//! * conservation: `pages_in_use() <= Σ pages_held()` (sharing only
+//!   ever REDUCES physical pages) and `pages_created() <= capacity`
+//! * no leaks: dropping every cache returns the pool to zero in-use
+//! * refusal, not panic: a failed reserve implies the pool really was
+//!   out of pages at that moment
+//!
+//! Case count is driven by `MUXQ_PROPTEST_CASES` (CI pins 500).
+
+use muxq::gpt2::{KvPool, PagedKv};
+use muxq::util::proptest::{prop, prop_assert, Gen};
+use std::collections::VecDeque;
+
+type RefRing = VecDeque<(Vec<f32>, Vec<f32>)>;
+
+fn ref_push(r: &mut RefRing, cap: usize, k: Vec<f32>, v: Vec<f32>) {
+    if r.len() == cap {
+        r.pop_front();
+    }
+    r.push_back((k, v));
+}
+
+/// Every cache must present exactly its reference's rows, and the pool
+/// counters must satisfy the conservation inequalities.
+fn check_all(pool: &KvPool, caches: &[(PagedKv, RefRing, usize)], op: usize) -> Result<(), String> {
+    for (ci, (c, r, _)) in caches.iter().enumerate() {
+        prop_assert(
+            c.len() == r.len(),
+            format!("op {op} cache {ci}: len {} != reference {}", c.len(), r.len()),
+        )?;
+        for (j, (rk, rv)) in r.iter().enumerate() {
+            prop_assert(
+                c.k_row(j) == rk.as_slice() && c.v_row(j) == rv.as_slice(),
+                format!("op {op} cache {ci} row {j}: content diverged from reference"),
+            )?;
+        }
+    }
+    let held: usize = caches.iter().map(|(c, _, _)| c.pages_held()).sum();
+    prop_assert(
+        pool.pages_in_use() <= held,
+        format!("op {op}: {} pages in use but only {held} held (phantom pages)", pool.pages_in_use()),
+    )?;
+    prop_assert(
+        pool.pages_created() <= pool.capacity(),
+        format!("op {op}: created {} pages past capacity {}", pool.pages_created(), pool.capacity()),
+    )
+}
+
+#[test]
+fn prop_pool_op_stream_vs_reference() {
+    prop("paged caches == VecDeque reference under random op streams", |g| {
+        let d = g.usize(1, 4);
+        let page_rows = g.usize(1, 4);
+        let max_pages = g.usize(2, 12);
+        let pool = KvPool::new(max_pages, page_rows, d);
+        let n = g.usize(1, 3);
+        let mut caches: Vec<(PagedKv, RefRing, usize)> = (0..n)
+            .map(|_| {
+                let cap = g.usize(1, 10);
+                (PagedKv::new(&pool, cap), RefRing::new(), cap)
+            })
+            .collect();
+
+        let ops = g.usize(20, 60);
+        for op in 0..ops {
+            let i = g.usize(0, caches.len() - 1);
+            match g.usize(0, 9) {
+                // push dominates the mix: it exercises alloc, ring
+                // overwrite, and the COW choke point all at once
+                0..=4 => {
+                    let (c, r, cap) = &mut caches[i];
+                    match c.ensure_capacity(1) {
+                        Ok(()) => {
+                            let k = g.vec_f32(d, -4.0, 4.0);
+                            let v = g.vec_f32(d, -4.0, 4.0);
+                            let wrapped = c.push(&k, &v);
+                            prop_assert(
+                                wrapped == (r.len() == *cap),
+                                format!("op {op}: wrap report disagrees with reference"),
+                            )?;
+                            ref_push(r, *cap, k, v);
+                        }
+                        Err(_) => {
+                            // refusal must mean genuine exhaustion: the
+                            // write page needed allocating and nothing
+                            // was free at that moment
+                            prop_assert(
+                                c.pages_needed(1) > pool.free_pages(),
+                                format!(
+                                    "op {op}: reserve refused with {} free pages for {} needed",
+                                    pool.free_pages(),
+                                    c.pages_needed(1)
+                                ),
+                            )?;
+                        }
+                    }
+                }
+                5 => {
+                    let want = g.usize(0, 11);
+                    let (c, r, _) = &mut caches[i];
+                    c.truncate(want);
+                    r.truncate(want);
+                }
+                6 => {
+                    let (c, r, _) = &mut caches[i];
+                    c.clear();
+                    r.clear();
+                }
+                7 => {
+                    // drop & recreate: the dropped table must return its
+                    // pages (any leak shows up as in_use > held later)
+                    let cap = g.usize(1, 10);
+                    caches[i] = (PagedKv::new(&pool, cap), RefRing::new(), cap);
+                }
+                _ => {
+                    // COW fork seed: rebuild cache i from another
+                    // cache's page-aligned prefix, zero copies — later
+                    // pushes into either owner must fork, never alias
+                    if caches.len() < 2 {
+                        continue;
+                    }
+                    let j = (i + 1) % caches.len();
+                    let t = caches[j].1.len() / page_rows * page_rows;
+                    if t == 0 {
+                        continue;
+                    }
+                    let Some(pages) = caches[j].0.prefix_pages(t) else {
+                        continue; // source has wrapped; its prefix is not shareable
+                    };
+                    let cap = t + g.usize(0, 4);
+                    let mut fresh = PagedKv::new(&pool, cap);
+                    fresh.seed_prefix(&pages, t).expect("aligned prefix seed is legal");
+                    let seeded: RefRing = caches[j].1.iter().take(t).cloned().collect();
+                    caches[i] = (fresh, seeded, cap);
+                }
+            }
+            check_all(&pool, &caches, op)?;
+        }
+        drop(caches);
+        prop_assert(
+            pool.pages_in_use() == 0,
+            format!("dropping every cache left {} pages in use", pool.pages_in_use()),
+        )
+    });
+}
+
+#[test]
+fn cow_fork_isolates_and_counts() {
+    // directed aliasing check: B seeds A's 4-row prefix, rolls back into
+    // the shared range, and overwrites — A must keep its original rows
+    // and the pool must record exactly the forks that happened
+    let pool = KvPool::new(8, 2, 2);
+    let mut a = PagedKv::new(&pool, 6);
+    for i in 0..4 {
+        let row = vec![i as f32, -(i as f32)];
+        a.ensure_capacity(1).unwrap();
+        a.push(&row, &row);
+    }
+    let pages = a.prefix_pages(4).expect("4 rows are page-aligned at 2 rows/page");
+    let mut b = PagedKv::new(&pool, 6);
+    b.seed_prefix(&pages, 4).unwrap();
+    drop(pages);
+    assert_eq!(pool.pages_in_use(), 2, "seeding shares pages, it never copies");
+    assert_eq!(b.shared_pages(), 2);
+
+    let forks_before = pool.cow_forks();
+    b.truncate(1); // row 1 (page 0) becomes B's next write slot
+    b.ensure_capacity(1).unwrap(); // forks page 0 away from A
+    b.push(&[9.0, 9.0], &[8.0, 8.0]);
+    assert_eq!(pool.cow_forks(), forks_before + 1, "one shared page, one fork");
+    assert_eq!(b.k_row(1), &[9.0, 9.0]);
+    for i in 0..4 {
+        assert_eq!(a.k_row(i), &[i as f32, -(i as f32)], "fork leaked into the source cache");
+    }
+    // page 1 was released by B's truncate; page 0 forked: A's 2 + B's 1
+    assert_eq!(pool.pages_in_use(), 3);
+}
+
+#[test]
+fn free_list_reuse_keeps_created_stable() {
+    // churn must recycle buffers, not mint new ones: after the first
+    // full fill, `pages_created` is a fixed point across clear/refill
+    let pool = KvPool::new(4, 2, 3);
+    let mut c = PagedKv::new(&pool, 8);
+    let row = [1.0f32, 2.0, 3.0];
+    for cycle in 0..5 {
+        for _ in 0..8 {
+            c.ensure_capacity(1).unwrap();
+            c.push(&row, &row);
+        }
+        assert_eq!(pool.pages_created(), 4, "cycle {cycle} minted fresh pages instead of reusing");
+        assert_eq!(pool.pages_in_use(), 4);
+        c.clear();
+        assert_eq!(pool.pages_in_use(), 0, "cycle {cycle} leaked on clear");
+    }
+}

@@ -1,0 +1,414 @@
+//! Differential layer for the paged KV subsystem: a pool-backed session
+//! is a STORAGE change, never a results change. Every prop here runs the
+//! same token schedule through a ring-backed session (the oracle) and a
+//! paged session drawing from a [`KvPool`], and demands bit-equality —
+//! logits, windows, and raw K/V rows. K/V rows are deterministic
+//! functions of the causal token prefix, so `==` is the right
+//! comparison; an epsilon would hide an aliased or stale page.
+//!
+//! Coverage, per the paged-KV issue: ragged prompts across all engines
+//! (fp / naive / muxq / llmint8), Reprefill wrap past `n_ctx`, Slide
+//! overwrite on shared storage, speculative `truncate_to` rollback, and
+//! shared-prefix accounting (occupancy + isolation) at both the session
+//! and the server level.
+
+use muxq::coordinator::{GenBackend, GenerateRequest, GenerationConfig, GenerationServer};
+use muxq::gpt2::{
+    argmax, DraftKind, DraftModel, Gpt2Model, KvPool, PrefixCache, QuantizedGpt2, Sampler,
+    SessionModel, SessionState, SpeculativeState, WrapPolicy,
+};
+use muxq::quant::EngineSpec;
+use muxq::util::proptest::{prop, prop_assert, Gen};
+
+/// Small random model: 1–3 layers, d_head 4–8, n_ctx 8–16, vocab 32.
+fn model_for(g: &mut Gen) -> Gpt2Model {
+    let n_layer = g.usize(1, 3);
+    let n_head = *g.choice(&[1usize, 2, 4]);
+    let d_model = n_head * g.usize(4, 8);
+    let n_ctx = g.usize(8, 16);
+    Gpt2Model::test_model(n_layer, d_model, n_head, n_ctx, 32, g.u64(1, 1 << 30))
+}
+
+fn prompt_for(g: &mut Gen, len: usize) -> Vec<u32> {
+    (0..len).map(|_| g.usize(0, 31) as u32).collect()
+}
+
+fn err_str<T>(r: anyhow::Result<T>) -> Result<T, String> {
+    r.map_err(|e| format!("{e:#}"))
+}
+
+/// A pool big enough that exhaustion never interferes with a
+/// bit-exactness prop (pressure behaviour has its own tests); page size
+/// is the interesting knob, so it ranges over ragged vs aligned splits.
+fn pool_for(g: &mut Gen, d_model: usize) -> KvPool {
+    KvPool::new(256, g.usize(1, 8), d_model)
+}
+
+/// Every K/V row the two sessions hold must be bit-identical, layer by
+/// layer, logical row by logical row — regardless of backing.
+fn assert_caches_equal(a: &SessionState, b: &SessionState) -> Result<(), String> {
+    for (li, (ca, cb)) in a.caches().iter().zip(b.caches()).enumerate() {
+        prop_assert(ca.len() == cb.len(), format!("layer {li}: cache length differs"))?;
+        for j in 0..ca.len() {
+            prop_assert(
+                ca.k_row(j) == cb.k_row(j) && ca.v_row(j) == cb.v_row(j),
+                format!("layer {li} logical row {j}: K/V rows differ across backings"),
+            )?;
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_paged_session_bit_exact_vs_ring_all_engines() {
+    // ragged prompts (including longer than n_ctx) + a short greedy
+    // decode chain, across all four engines. The token schedule is
+    // driven from the RING session's logits so any divergence shows up
+    // as a logits mismatch, not a silently different schedule.
+    prop("paged prefill+decode == ring (fp/naive/muxq/llmint8)", |g| {
+        let fp = model_for(g);
+        let cfg = fp.cfg.clone();
+        let n_ctx = cfg.n_ctx;
+        let engine = g.usize(0, 3);
+        let q;
+        let sm = match engine {
+            0 => {
+                q = QuantizedGpt2::new(fp, EngineSpec::naive()); // fp lives inside
+                SessionModel::Fp(&q.fp)
+            }
+            1 => {
+                q = QuantizedGpt2::new(fp, EngineSpec::naive());
+                SessionModel::Int(&q)
+            }
+            2 => {
+                q = QuantizedGpt2::new(fp, EngineSpec::muxq());
+                SessionModel::Int(&q)
+            }
+            _ => {
+                q = QuantizedGpt2::new(fp, EngineSpec::llmint8());
+                SessionModel::Int(&q)
+            }
+        };
+        let plen = g.usize(1, n_ctx + 3); // ragged, may exceed the window
+        let steps = g.usize(1, 6);
+        let prompt = prompt_for(g, plen);
+        let pool = pool_for(g, cfg.d_model);
+
+        let mut ring = SessionState::new(&cfg, WrapPolicy::default());
+        let mut paged = SessionState::new_paged(&cfg, WrapPolicy::default(), &pool);
+        prop_assert(paged.is_paged() && !ring.is_paged(), "backing flags")?;
+        let lr = err_str(ring.prefill(sm, &prompt))?;
+        let lp = err_str(paged.prefill(sm, &prompt))?;
+        prop_assert(lr == lp, format!("engine {engine}: prefill logits differ"))?;
+        let mut next = argmax(&lr);
+        for s in 0..steps {
+            let lr = err_str(ring.decode_step(sm, next))?;
+            let lp = err_str(paged.decode_step(sm, next))?;
+            prop_assert(lr == lp, format!("engine {engine} step {s}: decode logits differ"))?;
+            next = argmax(&lr);
+        }
+        prop_assert(ring.window() == paged.window(), "windows diverged")?;
+        assert_caches_equal(&ring, &paged)?;
+        drop(paged);
+        prop_assert(pool.pages_in_use() == 0, "session drop leaked pages")
+    });
+}
+
+#[test]
+fn prop_paged_reprefill_wrap_matches_ring_past_n_ctx() {
+    // generate well past n_ctx: the Reprefill wrap clears the paged
+    // caches (releasing every page) and re-prefills the kept tail into
+    // fresh pages — every step's logits must still equal the ring's,
+    // and the wrap accounting must agree.
+    prop("paged Reprefill wrap == ring", |g| {
+        let fp = model_for(g);
+        let cfg = fp.cfg.clone();
+        let n_ctx = cfg.n_ctx;
+        let holder = QuantizedGpt2::new(fp, EngineSpec::muxq());
+        let sm =
+            if g.bool() { SessionModel::Int(&holder) } else { SessionModel::Fp(&holder.fp) };
+        let wrap = WrapPolicy::Reprefill { keep: g.usize(0, n_ctx - 1) };
+        let plen = g.usize(1, n_ctx);
+        let steps = n_ctx + g.usize(1, 6); // guaranteed to wrap
+        let prompt = prompt_for(g, plen);
+        let pool = pool_for(g, cfg.d_model);
+
+        let mut ring = SessionState::new(&cfg, wrap);
+        let mut paged = SessionState::new_paged(&cfg, wrap, &pool);
+        let lr = err_str(ring.prefill(sm, &prompt))?;
+        let lp = err_str(paged.prefill(sm, &prompt))?;
+        prop_assert(lr == lp, "prefill logits differ")?;
+        let mut next = argmax(&lr);
+        for s in 0..steps {
+            let lr = err_str(ring.decode_step(sm, next))?;
+            let lp = err_str(paged.decode_step(sm, next))?;
+            prop_assert(lr == lp, format!("step {s}: decode logits differ across a wrap"))?;
+            next = argmax(&lr);
+        }
+        prop_assert(paged.prefills() > 1, "must have re-prefilled past n_ctx")?;
+        prop_assert(paged.prefills() == ring.prefills(), "wrap counts diverged")?;
+        assert_caches_equal(&ring, &paged)?;
+        drop(paged);
+        prop_assert(pool.pages_in_use() == 0, "wrapping session leaked pages")
+    });
+}
+
+#[test]
+fn prop_paged_slide_overwrite_matches_ring() {
+    // Slide never clears: old slots are overwritten in place, which on
+    // paged storage exercises the universal write-slot path (and COW
+    // when a page is shared — here pages are private, so the overwrite
+    // must happen in place without growing the pool).
+    prop("paged Slide overwrite == ring", |g| {
+        let fp = model_for(g);
+        let cfg = fp.cfg.clone();
+        let n_ctx = cfg.n_ctx;
+        let holder = QuantizedGpt2::new(fp, EngineSpec::muxq());
+        let sm =
+            if g.bool() { SessionModel::Int(&holder) } else { SessionModel::Fp(&holder.fp) };
+        let plen = g.usize(1, n_ctx);
+        let steps = n_ctx + g.usize(1, 6);
+        let prompt = prompt_for(g, plen);
+        let pool = pool_for(g, cfg.d_model);
+
+        let mut ring = SessionState::new(&cfg, WrapPolicy::Slide);
+        let mut paged = SessionState::new_paged(&cfg, WrapPolicy::Slide, &pool);
+        let lr = err_str(ring.prefill(sm, &prompt))?;
+        let lp = err_str(paged.prefill(sm, &prompt))?;
+        prop_assert(lr == lp, "prefill logits differ")?;
+        let mut next = argmax(&lr);
+        let full = pool.pages_in_use(); // a full window's footprint, at most
+        for s in 0..steps {
+            let lr = err_str(ring.decode_step(sm, next))?;
+            let lp = err_str(paged.decode_step(sm, next))?;
+            prop_assert(lr == lp, format!("step {s}: Slide decode logits differ"))?;
+            next = argmax(&lr);
+        }
+        // once the window is full, sliding overwrites in place — the
+        // footprint may only have grown while the window was filling
+        let per_layer = n_ctx.div_ceil(pool.page_rows());
+        prop_assert(
+            pool.pages_in_use() <= per_layer * cfg.n_layer && pool.pages_in_use() >= full,
+            "Slide footprint exceeded one full window per layer",
+        )?;
+        assert_caches_equal(&ring, &paged)?;
+        drop(paged);
+        prop_assert(pool.pages_in_use() == 0, "sliding session leaked pages")
+    });
+}
+
+#[test]
+fn prop_paged_truncate_to_matches_ring() {
+    // the rollback primitive in isolation: extend_scored a batch of
+    // tokens, truncate part of it back (releasing now-dead pages), then
+    // decode — every observable must match the ring twin.
+    prop("paged extend+truncate_to == ring", |g| {
+        let fp = model_for(g);
+        let cfg = fp.cfg.clone();
+        let n_ctx = cfg.n_ctx;
+        let holder = QuantizedGpt2::new(fp, EngineSpec::muxq());
+        let sm =
+            if g.bool() { SessionModel::Int(&holder) } else { SessionModel::Fp(&holder.fp) };
+        let plen = g.usize(1, n_ctx - 3);
+        let ext = g.usize(1, n_ctx - plen - 1);
+        let keep = g.usize(0, ext); // tokens of the extension that survive
+        let prompt = prompt_for(g, plen);
+        let tokens = prompt_for(g, ext);
+        let pool = pool_for(g, cfg.d_model);
+
+        let mut ring = SessionState::new(&cfg, WrapPolicy::default());
+        let mut paged = SessionState::new_paged(&cfg, WrapPolicy::default(), &pool);
+        err_str(ring.prefill(sm, &prompt))?;
+        err_str(paged.prefill(sm, &prompt))?;
+        let sr = err_str(ring.extend_scored(sm, &tokens))?;
+        let sp = err_str(paged.extend_scored(sm, &tokens))?;
+        prop_assert(sr.data == sp.data, "extend_scored logits differ")?;
+        let held = pool.pages_in_use();
+        ring.truncate_to(plen + keep);
+        paged.truncate_to(plen + keep);
+        prop_assert(pool.pages_in_use() <= held, "truncate must never allocate")?;
+        prop_assert(ring.window() == paged.window(), "windows diverged after rollback")?;
+        assert_caches_equal(&ring, &paged)?;
+        let lr = err_str(ring.decode_step(sm, 7))?;
+        let lp = err_str(paged.decode_step(sm, 7))?;
+        prop_assert(lr == lp, "decode after rollback differs")?;
+        drop(paged);
+        prop_assert(pool.pages_in_use() == 0, "rolled-back session leaked pages")
+    });
+}
+
+#[test]
+fn prop_spec_rollback_on_pages_matches_ring() {
+    // draft-and-verify drives extend_scored + truncate_to every round;
+    // rejected drafts must leave NO trace in the paged tables, exactly
+    // as they leave none in the ring. Both greedy and seeded stochastic
+    // streams must be identical token for token, and the final target
+    // AND draft K/V must be bit-equal across backings.
+    prop("speculative rollback paged == ring", |g| {
+        let fp = model_for(g);
+        let n_layer = fp.cfg.n_layer;
+        let n_ctx = fp.cfg.n_ctx;
+        let cfg = fp.cfg.clone();
+        let holder = QuantizedGpt2::new(fp, EngineSpec::muxq());
+        let sm =
+            if g.bool() { SessionModel::Int(&holder) } else { SessionModel::Fp(&holder.fp) };
+        let k = g.usize(1, (n_ctx - 4).min(3));
+        let plen = g.usize(1, n_ctx - k - 1);
+        let rounds = g.usize(1, (n_ctx - plen) / (k + 1)); // wrap-free
+        let prompt = prompt_for(g, plen);
+        let kind = if g.bool() {
+            DraftKind::NaiveInt8
+        } else {
+            DraftKind::TruncateLayers(g.usize(1, n_layer))
+        };
+        let greedy = g.bool();
+        let temperature = g.f32(0.6, 1.4);
+        let seed = g.u64(1, 1 << 40);
+        let draft = err_str(DraftModel::build(sm.gpt(), kind))?;
+        let pool = pool_for(g, cfg.d_model);
+
+        let run = |paged: bool| -> Result<(Vec<u32>, SpeculativeState), String> {
+            let mut smp =
+                if greedy { Sampler::greedy() } else { Sampler::new(temperature, 8, seed) };
+            let mut dsm = smp.fork(muxq::gpt2::speculative::DRAFT_SEED_SALT);
+            let mut st = err_str(if paged {
+                SpeculativeState::new_paged(&cfg, draft.cfg(), k, WrapPolicy::default(), &pool)
+            } else {
+                SpeculativeState::new(&cfg, draft.cfg(), k, WrapPolicy::default())
+            })?;
+            let logits = err_str(st.prefill(sm, draft.session_model(), &prompt))?;
+            let mut next = smp.sample_in_context(&logits, st.target_state().window());
+            let mut ctx = prompt.clone();
+            ctx.push(next);
+            for _ in 0..rounds {
+                let toks = err_str(st.round(sm, draft.session_model(), next, &mut smp, &mut dsm))?;
+                next = *toks.last().expect("round emits >= 1 token");
+                ctx.extend_from_slice(&toks);
+            }
+            Ok((ctx, st))
+        };
+        let (ctx_r, st_r) = run(false)?;
+        let (ctx_p, st_p) = run(true)?;
+        prop_assert(
+            ctx_r == ctx_p,
+            format!("{kind:?} k={k} greedy={greedy}: emitted streams differ across backings"),
+        )?;
+        prop_assert(
+            (st_r.accepted(), st_r.drafted(), st_r.rounds())
+                == (st_p.accepted(), st_p.drafted(), st_p.rounds()),
+            "accept/reject accounting diverged",
+        )?;
+        assert_caches_equal(st_r.target_state(), st_p.target_state())?;
+        assert_caches_equal(st_r.draft_state(), st_p.draft_state())?;
+        drop(st_p);
+        prop_assert(pool.pages_in_use() == 0, "speculative session leaked pages")
+    });
+}
+
+#[test]
+fn shared_prefix_pages_are_accounted_and_isolated() {
+    // three sessions with a common page-aligned system prompt: the pool
+    // must hold far fewer pages than three solo footprints, each later
+    // session must report shared pages, and — the isolation claim —
+    // divergent decodes must equal unshared ring twins bit for bit.
+    let m = Gpt2Model::test_model(2, 16, 2, 12, 32, 7);
+    let cfg = m.cfg.clone();
+    let sm = SessionModel::Fp(&m);
+    let pool = KvPool::new(64, 2, cfg.d_model);
+    let mut pc = PrefixCache::new(pool.clone(), 8);
+    let system: Vec<u32> = vec![3, 1, 4, 1, 5, 9]; // 6 rows = 3 pages/layer
+    let tails: [u32; 3] = [11, 22, 30];
+
+    let mut sessions = Vec::new();
+    let mut prefill_logits = Vec::new();
+    let mut solo_footprint = 0;
+    for (i, &t) in tails.iter().enumerate() {
+        let mut prompt = system.clone();
+        prompt.push(t);
+        let mut s = SessionState::new_paged(&cfg, WrapPolicy::default(), &pool);
+        prefill_logits.push(s.prefill_cached(sm, &prompt, &mut pc).unwrap());
+        if i == 0 {
+            solo_footprint = pool.pages_in_use();
+            assert_eq!(s.shared_pages(), 6, "registered prefix pages are shared with the cache");
+        } else {
+            assert!(s.shared_pages() >= 6, "session {i} shares the system-prompt pages");
+        }
+        sessions.push(s);
+    }
+    assert_eq!(pc.hits(), 2, "sessions 2 and 3 hit the registered prefix");
+    assert_eq!(pc.misses(), 1);
+    assert!(
+        pool.pages_in_use() < 3 * solo_footprint,
+        "sharing saved nothing: {} pages vs 3x{solo_footprint}",
+        pool.pages_in_use()
+    );
+
+    // isolation: each session decodes a DIFFERENT token; logits must
+    // equal an unshared ring twin that never touched the pool
+    for ((s, &t), l) in sessions.iter_mut().zip(&tails).zip(&prefill_logits) {
+        let mut prompt = system.clone();
+        prompt.push(t);
+        let mut twin = SessionState::new(&cfg, WrapPolicy::default());
+        let tw_pre = twin.prefill(sm, &prompt).unwrap();
+        assert_eq!(l, &tw_pre, "shared-prefix prefill logits differ from the unshared twin");
+        let got = s.decode_step(sm, t ^ 1).unwrap();
+        let want = twin.decode_step(sm, t ^ 1).unwrap();
+        assert_eq!(got, want, "shared-prefix session contaminated by a sibling");
+    }
+
+    // cleanup discipline: dropping the sessions leaves only the cache's
+    // registered pages; clearing the cache empties the pool
+    drop(sessions);
+    assert_eq!(pool.pages_in_use(), 6, "only the cached prefix survives the sessions");
+    pc.clear();
+    assert_eq!(pool.pages_in_use(), 0, "prefix cache leaked pages");
+}
+
+#[test]
+fn paged_server_mixed_plain_and_spec_streams_match_solo() {
+    // mixed batch on pooled storage: two plain sessions sharing a
+    // prompt, one distinct plain, one speculative — all coalesced on one
+    // server drawing from one pool. Every stream must equal its solo
+    // ring-session oracle, and the server must surface prefix sharing.
+    fn toks(n: usize, seed: u64) -> Vec<u32> {
+        // deterministic in-vocab prompt without reaching into crate internals
+        (0..n).map(|i| ((seed * 31 + i as u64 * 7) % 32) as u32).collect()
+    }
+    let q = QuantizedGpt2::new(Gpt2Model::test_model(2, 16, 2, 12, 32, 7), EngineSpec::muxq());
+    let shared = toks(5, 3);
+    let other = toks(3, 4);
+    let spec_p = toks(3, 5);
+    let mut want = Vec::new();
+    for p in [&shared, &shared, &other, &spec_p] {
+        let mut s = q.session(WrapPolicy::default());
+        want.push(s.generate_greedy(p, 6).unwrap());
+    }
+
+    let backend =
+        GenBackend::Int(QuantizedGpt2::new(Gpt2Model::test_model(2, 16, 2, 12, 32, 7), EngineSpec::muxq()));
+    let srv = GenerationServer::start(
+        backend,
+        GenerationConfig { pool_pages: 96, page_rows: 2, ..Default::default() },
+    );
+    let reqs = [
+        GenerateRequest::greedy(shared.clone(), 6),
+        GenerateRequest::greedy(shared.clone(), 6),
+        GenerateRequest::greedy(other.clone(), 6),
+        GenerateRequest::greedy(spec_p.clone(), 6).with_speculative(2, DraftKind::NaiveInt8),
+    ];
+    let handles: Vec<_> = reqs.iter().map(|r| srv.submit(r.clone()).unwrap()).collect();
+    for (h, w) in handles.into_iter().zip(&want) {
+        assert_eq!(&h.collect_tokens().unwrap(), w);
+    }
+    let st = srv.stats();
+    assert_eq!(st.completed, 4);
+    assert_eq!(st.evicted, 0, "a 96-page pool never pressures four tiny sessions");
+    assert_eq!(st.pool_refusals, 0);
+    assert_eq!(st.pool_pages, 96);
+    assert_eq!(st.pool_pages_in_use + st.pool_pages_free, 96);
+    assert!(st.shared_pages > 0, "identical prompts must have shared prefix pages");
+    assert!(st.prefix_hits >= 1, "the second identical prompt hits the prefix cache");
+    assert!(st.spec_rounds > 0, "the speculative session ran rounds");
+    assert!(st.shared_page_ratio() > 0.0 && st.shared_page_ratio() <= 1.0);
+    srv.shutdown();
+}
