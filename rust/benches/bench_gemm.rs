@@ -5,9 +5,11 @@
 //! quantize-compute-dequant pipelines of each method, end-to-end
 //! `nll_per_seq` throughput through the true-INT pipeline, and
 //! incremental decode tokens/s through the KV-cache session API
-//! (`decode_tok_s` — the latency-bound serving number), and speculative
+//! (`decode_tok_s` — the latency-bound serving number), speculative
 //! draft-and-verify decode (`decode_tok_s_spec`, with its acceptance
-//! rate and tokens-per-round).
+//! rate and tokens-per-round), and the W4 nibble weight path
+//! (`decode_tok_s_w4` / `decode_tok_s_resq` and the packed-panel byte
+//! halving `w4_weight_bytes_ratio`).
 //! (The NPU projection lives in bench_npusim / npu_latency.)
 //!
 //! Run: `cargo bench --bench bench_gemm`. Writes the perf-trajectory
@@ -27,8 +29,8 @@ use muxq::quant::llmint8::llmint8_matmul;
 use muxq::quant::matrix::{MatI32, MatI8};
 use muxq::quant::muxq::{muxq_matmul_int, MuxqParams};
 use muxq::quant::packed::{
-    matmul_i8_gemv_into, matmul_i8_packed_kernel_into, matmul_i8_packed_with, Kernel,
-    PackedMatI8, ParallelGemm,
+    matmul_i8_gemv_into, matmul_i8_packed_kernel_into, matmul_i8_packed_with,
+    matmul_i8w4_gemv_into, Kernel, PackedMatI4, PackedMatI8, ParallelGemm,
 };
 use muxq::quant::simd;
 use muxq::quant::{Granularity, MatF32};
@@ -382,6 +384,49 @@ fn main() {
         decode_tok_s_spec / decode_tok_s[1]
     );
 
+    // ---- W4 nibble decode (the halved weight stream) ----
+    // the nibble panel stores two i4 weights per byte — exactly half
+    // the W8 engine's packed-panel bytes (layout arithmetic, recorded
+    // as w4_weight_bytes_ratio). At decode widths the weight stream IS
+    // the cost, so the halving is measured where it pays: the M=1 GEMV
+    // against a pre-packed W4 weight, then full serving-path decode for
+    // the W4 deployments (naive-w4a8, and resq = W4 body + rank-r fp32
+    // residual through the gathered-rows kernel).
+    Bencher::header(&format!("w4 nibble decode ({gk}x{gn} weight, 2L d=128 session)"));
+    let wq4 = MatI8 {
+        rows: wq.rows,
+        cols: wq.cols,
+        data: wq.data.iter().map(|&v| v >> 4).collect(), // i4 range [-8, 7]
+    };
+    let bp4 = PackedMatI4::pack(&wq4);
+    let w4_weight_bytes_ratio = bp_dec.padded_bytes() as f64 / bp4.padded_bytes() as f64;
+    let x1w = rand_i8(1, gk, 42);
+    b.bench("w4_gemv/m=1", || {
+        matmul_i8w4_gemv_into(&x1w, &bp4, &mut acc, Kernel::Auto);
+        acc.data[0]
+    });
+    let mut w4_tok_s = [0.0f64; 2]; // [naive-w4a8, resq]
+    for (slot, label, spec) in [
+        (0usize, "naive-w4a8", EngineSpec::naive().with_bits(8, 4)),
+        (1, "resq", EngineSpec::resq()),
+    ] {
+        let q = QuantizedGpt2::new(Gpt2Model::test_model(2, 128, 2, 64, 128, 7), spec);
+        let mut sess = q.session(WrapPolicy::Slide);
+        let mut next = argmax(&sess.prefill(&prompt).unwrap());
+        let stats = b.bench(&format!("decode_step/{label}"), || {
+            let l = sess.decode_step(next).unwrap();
+            next = argmax(&l);
+            next
+        });
+        w4_tok_s[slot] = stats.per_sec();
+    }
+    let (decode_tok_s_w4, decode_tok_s_resq) = (w4_tok_s[0], w4_tok_s[1]);
+    println!(
+        "\nw4 decode {decode_tok_s_w4:.0} tok/s ({:.2}x vs muxq w8 decode)   \
+         resq {decode_tok_s_resq:.0} tok/s   weight bytes {w4_weight_bytes_ratio:.2}x smaller",
+        decode_tok_s_w4 / decode_tok_s[1]
+    );
+
     // ---- paged KV serving (pool occupancy + prefix sharing) ----
     // four sessions share the 16-token system prompt copy-on-write:
     // paged_fill is the pool occupancy that results, shared_page_ratio
@@ -436,7 +481,7 @@ fn main() {
         None => ("null".to_string(), "null".to_string(), "null".to_string()),
     };
     let json = format!(
-        "{{\n  \"bench\": \"bench_gemm\",\n  \"bootstrap\": false,\n  \"shape\": [{gm}, {gk}, {gn}],\n  \"dispatch_kernel\": \"{}\",\n  \"seed_i8_ms\": {seed_ms:.4},\n  \"packed_1t_ms\": {:.4},\n  \"packed_2t_ms\": {:.4},\n  \"packed_4t_ms\": {:.4},\n  \"speedup_vs_seed_1t\": {:.3},\n  \"scaling_1t_to_4t\": {:.3},\n  \"gops_packed_1t\": {:.3},\n  \"pair_best_ms\": {pair_best_ms:.4},\n  \"pair_best_tile\": \"{best_mr}x{best_nr}\",\n  \"wide44_1t_ms\": {wide44_ms:.4},\n  \"pair_vs_wide44\": {:.3},\n  \"simd_best_ms\": {simd_best_ms_s},\n  \"simd_best_tile\": {simd_best_tile_s},\n  \"simd_vs_pair\": {simd_vs_pair_s},\n  \"gemv_m1_us\": {gemv_m1_us:.2},\n  \"gemv_vs_cascade_m1\": {gemv_vs_cascade_m1:.3},\n  \"e2e_naive_tok_per_s\": {:.1},\n  \"e2e_muxq_tok_per_s\": {:.1},\n  \"decode_tok_s_fp\": {:.1},\n  \"decode_tok_s\": {:.1},\n  \"decode_tok_s_llmint8\": {:.1},\n  \"decode_tok_s_spec\": {decode_tok_s_spec:.1},\n  \"spec_accept_rate\": {spec_accept_rate:.3},\n  \"spec_tokens_per_round\": {spec_tokens_per_round:.3},\n  \"full_forward_tok_s\": {full_tok_s:.1},\n  \"decode_vs_full_speedup\": {decode_vs_full:.2},\n  \"paged_fill\": {paged_fill:.3},\n  \"shared_page_ratio\": {shared_page_ratio:.3}\n}}\n",
+        "{{\n  \"bench\": \"bench_gemm\",\n  \"bootstrap\": false,\n  \"shape\": [{gm}, {gk}, {gn}],\n  \"dispatch_kernel\": \"{}\",\n  \"seed_i8_ms\": {seed_ms:.4},\n  \"packed_1t_ms\": {:.4},\n  \"packed_2t_ms\": {:.4},\n  \"packed_4t_ms\": {:.4},\n  \"speedup_vs_seed_1t\": {:.3},\n  \"scaling_1t_to_4t\": {:.3},\n  \"gops_packed_1t\": {:.3},\n  \"pair_best_ms\": {pair_best_ms:.4},\n  \"pair_best_tile\": \"{best_mr}x{best_nr}\",\n  \"wide44_1t_ms\": {wide44_ms:.4},\n  \"pair_vs_wide44\": {:.3},\n  \"simd_best_ms\": {simd_best_ms_s},\n  \"simd_best_tile\": {simd_best_tile_s},\n  \"simd_vs_pair\": {simd_vs_pair_s},\n  \"gemv_m1_us\": {gemv_m1_us:.2},\n  \"gemv_vs_cascade_m1\": {gemv_vs_cascade_m1:.3},\n  \"e2e_naive_tok_per_s\": {:.1},\n  \"e2e_muxq_tok_per_s\": {:.1},\n  \"decode_tok_s_fp\": {:.1},\n  \"decode_tok_s\": {:.1},\n  \"decode_tok_s_llmint8\": {:.1},\n  \"decode_tok_s_w4\": {decode_tok_s_w4:.1},\n  \"decode_tok_s_resq\": {decode_tok_s_resq:.1},\n  \"w4_weight_bytes_ratio\": {w4_weight_bytes_ratio:.3},\n  \"decode_tok_s_spec\": {decode_tok_s_spec:.1},\n  \"spec_accept_rate\": {spec_accept_rate:.3},\n  \"spec_tokens_per_round\": {spec_tokens_per_round:.3},\n  \"full_forward_tok_s\": {full_tok_s:.1},\n  \"decode_vs_full_speedup\": {decode_vs_full:.2},\n  \"paged_fill\": {paged_fill:.3},\n  \"shared_page_ratio\": {shared_page_ratio:.3}\n}}\n",
         dispatch.name(),
         per_thread_ms[0].1,
         per_thread_ms[1].1,

@@ -20,7 +20,7 @@ fn main() {
     let mut b = Bencher::default();
     Bencher::header("cost-model evaluation speed");
     b.bench("model_cost gpt2-large 36L", || {
-        model_cost(&cfg, Method::Muxq, 36, 1024, 1280, 16, 8)
+        model_cost(&cfg, Method::Muxq, 36, 1024, 1280, 16, 8, 8)
     });
     b.bench("full 4-method comparison x3 models", || {
         paper_geometries()

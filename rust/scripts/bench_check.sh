@@ -59,9 +59,10 @@ print(f"OK: packed_1t {cur_ms:.3f}ms vs baseline {old_ms:.3f}ms")
 # decode throughput gates (tokens/s: HIGHER is better). Baselines
 # recorded before a subsystem existed lack its field - skip until the
 # first baseline carrying it lands. decode_tok_s = plain sequential
-# decode; decode_tok_s_spec = speculative draft-and-verify decode.
+# decode; decode_tok_s_spec = speculative draft-and-verify decode;
+# decode_tok_s_w4 = the nibble-packed W4A8 weight path.
 tok_gates_ok = True
-for field in ("decode_tok_s", "decode_tok_s_spec"):
+for field in ("decode_tok_s", "decode_tok_s_spec", "decode_tok_s_w4"):
     old_tok, new_tok = base.get(field), new.get(field)
     if old_tok is None or new_tok is None:
         continue

@@ -81,6 +81,15 @@ echo "== kv-pool fuzz gate (500 op-stream cases)"
 # aliasing, and free-list regressions cannot hide behind a small sample
 MUXQ_PROPTEST_CASES=500 cargo test -q "${MANIFEST_ARGS[@]}" --test kvpool_fuzz
 
+echo "== w4 nibble-kernel gate (400 oracle-diff cases)"
+# the W4A8 nibble engine must stay bit-exact against the i8-widened
+# packed oracle (tests/w4_kernels.rs: dense tile grid, rows-subset,
+# GEMV, the -8 corner). Like the kv-pool gate, CI pins the case count
+# high; the matrix legs re-run it under each MUXQ_FORCE_KERNEL value so
+# the scalar pair kernel and both SIMD nibble-unpack paths all face the
+# oracle on real hardware
+MUXQ_PROPTEST_CASES=400 cargo test -q "${MANIFEST_ARGS[@]}" --test w4_kernels
+
 echo "== cargo clippy --all-targets (-D warnings)"
 # deliberate idioms of the kernel code, allowed rather than rewritten:
 # index-heavy loops (readability of the tile math) and the microkernel

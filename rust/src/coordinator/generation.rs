@@ -841,6 +841,60 @@ mod tests {
     }
 
     #[test]
+    fn w4_and_resq_models_serve_tokens_end_to_end() {
+        // the nibble-packed engine needs ZERO serving changes: every W4
+        // operator family generates through the full stack and matches
+        // its own solo greedy session exactly
+        for spec in [
+            EngineSpec::naive().with_bits(8, 4),
+            EngineSpec::muxq().with_bits(8, 4),
+            EngineSpec::resq(),
+        ] {
+            let q = QuantizedGpt2::new(tiny(), spec);
+            let prompts = [toks(4, 41), toks(6, 42)];
+            let mut want = Vec::new();
+            for p in &prompts {
+                let mut s = q.session(WrapPolicy::default());
+                want.push(s.generate_greedy(p, 5).unwrap());
+            }
+            let srv = GenerationServer::start(
+                GenBackend::Int(QuantizedGpt2::new(tiny(), spec)),
+                GenerationConfig::default(),
+            );
+            let handles: Vec<_> =
+                prompts.iter().map(|p| srv.submit(req(p.clone(), 5)).unwrap()).collect();
+            for (h, w) in handles.into_iter().zip(&want) {
+                assert_eq!(&h.collect_tokens().unwrap(), w, "{}", spec.tag());
+            }
+            assert_eq!(srv.stats().completed, 2, "{}", spec.tag());
+            srv.shutdown();
+        }
+    }
+
+    #[test]
+    fn w4_draft_speculative_stream_matches_plain_greedy() {
+        // the W4 deployment is the natural cheap draft: same
+        // architecture, half the draft's weight traffic — and greedy
+        // acceptance keeps the served stream lossless
+        use crate::gpt2::DraftKind;
+        let q = QuantizedGpt2::new(tiny(), EngineSpec::muxq());
+        let prompt = toks(3, 51);
+        let mut s = q.session(WrapPolicy::default());
+        let want = s.generate_greedy(&prompt, 6).unwrap();
+        let srv = GenerationServer::start(
+            GenBackend::Int(QuantizedGpt2::new(tiny(), EngineSpec::muxq())),
+            GenerationConfig::default(),
+        );
+        let h = srv
+            .submit(req(prompt, 6).with_speculative(2, DraftKind::NaiveInt4))
+            .unwrap();
+        assert_eq!(h.collect_tokens().unwrap(), want);
+        let st = srv.stats();
+        assert!(st.spec_rounds > 0, "W4 draft ran speculative rounds");
+        srv.shutdown();
+    }
+
+    #[test]
     fn sampled_streams_are_seed_reproducible() {
         // temperature/top-k through the server: same seed -> identical
         // stream (across separate servers), equal to a solo sampled

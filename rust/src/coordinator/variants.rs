@@ -47,6 +47,11 @@ pub struct VariantMeta {
     pub batch: usize,
     pub seq: usize,
     pub weights_file: String,
+    /// Resolved bit widths: the manifest's explicit `ia_bits`/`w_bits`
+    /// when present (checked against the tag), else the tag's own —
+    /// `-w{W}a{A}` suffix or the method default.
+    pub ia_bits: u32,
+    pub w_bits: u32,
 }
 
 impl VariantMeta {
@@ -76,6 +81,39 @@ impl Manifest {
                 kind: e.get("kind")?.as_str()?.to_string(),
                 tag: e.get("tag")?.as_str()?.to_string(),
             };
+            // the tag is the canonical spelling (EngineSpec round-trip);
+            // the manifest's redundant method/granularity/smooth/exp
+            // fields must agree with it — drift here used to surface as
+            // silently-wrong table columns, now it fails the load
+            let spec = EngineSpec::parse(&key.tag)
+                .with_context(|| format!("manifest tag {:?} is not canonical", key.tag))?;
+            if spec.tag() != key.tag {
+                bail!("manifest tag {:?} does not round-trip (got {:?})", key.tag, spec.tag());
+            }
+            // explicit bit-width fields are optional (older manifests
+            // predate them: the tag is then the only authority), but
+            // when present they must not drift from the tag either
+            let bits_field = |field: &str, want: u32| -> Result<u32> {
+                match e {
+                    Json::Obj(m) => match m.get(field) {
+                        Some(v) => Ok(v.as_usize()? as u32),
+                        None => Ok(want),
+                    },
+                    _ => Ok(want),
+                }
+            };
+            let ia_bits = bits_field("ia_bits", spec.ia_bits)?;
+            let w_bits = bits_field("w_bits", spec.w_bits)?;
+            if (ia_bits, w_bits) != (spec.ia_bits, spec.w_bits) {
+                bail!(
+                    "manifest entry {:?} bits drifted from its tag: manifest w{}a{} vs tag w{}a{}",
+                    key.tag,
+                    w_bits,
+                    ia_bits,
+                    spec.w_bits,
+                    spec.ia_bits
+                );
+            }
             let meta = VariantMeta {
                 key: key.clone(),
                 method: e.get("method")?.as_str()?.to_string(),
@@ -86,17 +124,9 @@ impl Manifest {
                 batch: e.get("batch")?.as_usize()?,
                 seq: e.get("seq")?.as_usize()?,
                 weights_file: e.get("weights")?.as_str()?.to_string(),
+                ia_bits,
+                w_bits,
             };
-            // the tag is the canonical spelling (EngineSpec round-trip);
-            // the manifest's redundant method/granularity/smooth/exp
-            // fields must agree with it — drift here used to surface as
-            // silently-wrong table columns, now it fails the load
-            let spec = meta
-                .spec()
-                .with_context(|| format!("manifest tag {:?} is not canonical", key.tag))?;
-            if spec.tag() != key.tag {
-                bail!("manifest tag {:?} does not round-trip (got {:?})", key.tag, spec.tag());
-            }
             if spec.method.tag_name() != meta.method
                 || crate::quant::Granularity::parse(&meta.granularity)
                     != Some((spec.act_gran, spec.w_gran))

@@ -427,6 +427,54 @@ mod tests {
     }
 
     #[test]
+    fn w4_deployments_serve_with_halved_weight_bytes() {
+        // nibble-packed W4 is a drop-in deployment: same sites, same
+        // pack-once discipline, roughly half the body bytes
+        let before = packed::pack_count();
+        let w4 = QuantizedGpt2::new(tiny(), EngineSpec::naive().with_bits(8, 4));
+        assert_eq!(packed::pack_count() - before, 2 * 4, "W4 packs once per site too");
+        let w8 = QuantizedGpt2::new(tiny(), EngineSpec::naive());
+        let (b4, _) = w4.weight_bytes();
+        let (b8, _) = w8.weight_bytes();
+        assert!(b4 < b8, "nibble panels must shrink the deployed model");
+        // on a wider model the f32-vs-deployed ratio clears W8's 4x cap
+        let big4 = QuantizedGpt2::new(
+            Gpt2Model::test_model(2, 128, 2, 12, 32, 7),
+            EngineSpec::naive().with_bits(8, 4),
+        );
+        let (int_b, fp_b) = big4.weight_bytes();
+        let ratio = fp_b as f64 / int_b as f64;
+        assert!(ratio > 6.0 && ratio <= 8.0, "ratio {ratio}");
+        // and serving never re-packs
+        let t = toks(2, 8, 1);
+        let after = packed::pack_count();
+        w4.nll_per_seq(&t).unwrap();
+        assert_eq!(packed::pack_count(), after, "no per-call repacking");
+    }
+
+    #[test]
+    fn w4_session_oracle_stays_sane_and_resq_recovers() {
+        let fp = tiny();
+        let t = toks(2, 8, 5);
+        let fp_logits = fp.forward(&t, None, None).unwrap();
+        let mae = |spec: EngineSpec| {
+            let q = QuantizedGpt2::new(tiny(), spec);
+            let s = q.forward_logits_session(&t).unwrap();
+            assert_eq!((s.rows, s.cols), (fp_logits.rows, fp_logits.cols));
+            fp_logits.mean_abs_diff(&s)
+        };
+        let naive8 = mae(EngineSpec::naive());
+        let naive4 = mae(EngineSpec::naive().with_bits(8, 4));
+        let muxq4 = mae(EngineSpec::muxq().with_bits(8, 4));
+        let resq = mae(EngineSpec::resq());
+        assert!(naive4.is_finite() && muxq4.is_finite() && resq.is_finite());
+        // W4 weights cost accuracy vs W8...
+        assert!(naive4 > naive8, "naive-w4 {naive4} vs naive-w8 {naive8}");
+        // ...and the rank-r residual claws it back (never makes it worse)
+        assert!(resq < naive4 * 1.05, "resq {resq} vs naive-w4 {naive4}");
+    }
+
+    #[test]
     fn decode_plans_price_the_deployed_model() {
         let cfg = NpuConfig::default();
         let muxq = QuantizedGpt2::new(tiny(), EngineSpec::muxq());
@@ -440,6 +488,13 @@ mod tests {
         let cm = muxq.decode_cost_sim(&cfg, 4).cycles();
         let cx = mixed.decode_cost_sim(&cfg, 4).cycles();
         assert!(cm < cx, "muxq {cm} vs llm.int8() {cx}");
+        // and the W4 deployment decodes cheaper than its W8 twin — the
+        // halved weight stream priced through the served operators
+        let w8 = QuantizedGpt2::new(tiny(), EngineSpec::naive());
+        let w4 = QuantizedGpt2::new(tiny(), EngineSpec::naive().with_bits(8, 4));
+        let c8 = w8.decode_cost_sim(&cfg, 0).cycles();
+        let c4 = w4.decode_cost_sim(&cfg, 0).cycles();
+        assert!(c4 < c8, "w4 decode {c4} vs w8 {c8}");
     }
 
     #[test]

@@ -57,28 +57,38 @@ pub enum DraftKind {
     /// architecture, cheapest uniform quantization (high acceptance,
     /// draft cost ≈ target's INT cost).
     NaiveInt8,
+    /// The full-depth model through the naive-W4A8 operator — the
+    /// nibble-packed weight engine makes the natural cheap draft: same
+    /// architecture (high acceptance) at half the INT8 draft's
+    /// bytes-dominated decode cost.
+    NaiveInt4,
     /// The first `n` transformer blocks of the target at f32
     /// ([`Gpt2Model::truncated`]) — depth-scaled cost, lower acceptance.
     TruncateLayers(usize),
 }
 
 impl DraftKind {
-    /// Parse the CLI / request tag: `naive-int8` or `trunc<N>`.
+    /// Parse the CLI / request tag: `naive-int8`, `naive-int4` or
+    /// `trunc<N>`.
     pub fn parse(tag: &str) -> Result<DraftKind> {
         if tag == "naive-int8" {
             return Ok(DraftKind::NaiveInt8);
+        }
+        if tag == "naive-int4" {
+            return Ok(DraftKind::NaiveInt4);
         }
         if let Some(n) = tag.strip_prefix("trunc") {
             if let Ok(n) = n.parse::<usize>() {
                 return Ok(DraftKind::TruncateLayers(n));
             }
         }
-        bail!("unknown draft kind {tag:?} (naive-int8 | trunc<N>)")
+        bail!("unknown draft kind {tag:?} (naive-int8 | naive-int4 | trunc<N>)")
     }
 
     pub fn tag(&self) -> String {
         match self {
             DraftKind::NaiveInt8 => "naive-int8".into(),
+            DraftKind::NaiveInt4 => "naive-int4".into(),
             DraftKind::TruncateLayers(n) => format!("trunc{n}"),
         }
     }
@@ -99,6 +109,10 @@ impl DraftModel {
             DraftKind::NaiveInt8 => {
                 DraftModel::Int(QuantizedGpt2::new(target.clone(), EngineSpec::naive()))
             }
+            DraftKind::NaiveInt4 => DraftModel::Int(QuantizedGpt2::new(
+                target.clone(),
+                EngineSpec::naive().with_bits(8, 4),
+            )),
             DraftKind::TruncateLayers(n) => DraftModel::Fp(target.truncated(n)?),
         })
     }
@@ -157,8 +171,8 @@ impl SpeculativeState {
 
     /// [`SpeculativeState::new`] with BOTH sessions drawing KV pages
     /// from a shared [`KvPool`] — target and draft preserve `d_model`
-    /// (NaiveInt8 is the same architecture; TruncateLayers shrinks depth
-    /// only), so one pool serves both block tables. Rollback
+    /// (the NaiveInt* drafts are the same architecture; TruncateLayers
+    /// shrinks depth only), so one pool serves both block tables. Rollback
     /// (`truncate_to`) releases dead pages instead of merely shrinking
     /// `len`, which the differential proptests pin bit-exact against the
     /// ring pair.
@@ -472,7 +486,9 @@ mod tests {
         let steps = 8;
         let mut plain = m.session(WrapPolicy::default());
         let want = plain.generate_greedy(&prompt, steps).unwrap();
-        for kind in [DraftKind::TruncateLayers(1), DraftKind::NaiveInt8] {
+        for kind in
+            [DraftKind::TruncateLayers(1), DraftKind::NaiveInt8, DraftKind::NaiveInt4]
+        {
             for k in 1..=3usize {
                 let mut s =
                     SpeculativeSession::new(SessionModel::Fp(&m), kind, k, WrapPolicy::default())
@@ -567,7 +583,7 @@ mod tests {
 
     #[test]
     fn draft_kind_tags_round_trip() {
-        for kind in [DraftKind::NaiveInt8, DraftKind::TruncateLayers(3)] {
+        for kind in [DraftKind::NaiveInt8, DraftKind::NaiveInt4, DraftKind::TruncateLayers(3)] {
             assert_eq!(DraftKind::parse(&kind.tag()).unwrap(), kind);
         }
         assert!(DraftKind::parse("bogus").is_err());

@@ -2,17 +2,21 @@
 //! which precision — used by the report generator and the exp_factor
 //! ablation (recombination cost appears when 2^exp − 1 != 1, paper §3.3).
 //!
-//! Plans price through [`gemm_cost`](super::gemm_cost), so they inherit
-//! the widened-MAC datapath model: `NpuConfig::acc_width_bits == 16`
-//! (the default) retires two i8 MACs per lane per cycle, matching the
-//! rust engine's i16 pair-accumulation microkernel.
+//! Plans price through [`gemm_cost_w`](super::gemm_cost_w), so they
+//! inherit the widened-MAC datapath model: `NpuConfig::acc_width_bits ==
+//! 16` (the default) retires two i8 MACs per lane per cycle, matching
+//! the rust engine's i16 pair-accumulation microkernel — and the
+//! split activation/weight precisions, so W4A8 plans stream nibble
+//! weight panels (0.5 B/elem) against full INT8 activations.
 //! [`Plan::widened_mac_speedup`] quantifies what the pairing buys one
 //! plan end to end.
 
-use super::{gemm_cost, Cost, NpuConfig, Precision};
+use super::{gemm_cost_w, Cost, NpuConfig, Precision};
 use crate::quant::Method;
 
-/// One GEMM in a plan.
+/// One GEMM in a plan. Activation operand at `prec`, weight operand at
+/// `w_prec` — split so W4A8 plans price the nibble weight stream
+/// without touching the activation side.
 #[derive(Debug, Clone)]
 pub struct PlannedGemm {
     pub label: &'static str,
@@ -20,6 +24,7 @@ pub struct PlannedGemm {
     pub k: usize,
     pub n: usize,
     pub prec: Precision,
+    pub w_prec: Precision,
 }
 
 /// A method's execution plan for one projection.
@@ -38,10 +43,14 @@ pub struct Plan {
 }
 
 impl Plan {
-    /// Build the plan for projection [t,k]@[k,n] with r outlier channels.
-    /// `exp_factor` only matters for MUXQ: when != 1, the recombination
-    /// needs a scaled add over the output (t*n fp16 elements through the
-    /// vector unit) instead of folding into the accumulate.
+    /// Build the plan for projection [t,k]@[k,n] with r outlier channels
+    /// (for ResQ, r is the residual rank). `exp_factor` only matters for
+    /// MUXQ: when != 1, the recombination needs a scaled add over the
+    /// output (t*n fp16 elements through the vector unit) instead of
+    /// folding into the accumulate. `bits` sets the activation
+    /// precision, `w_bits` the weight-stream precision — `w_bits <= 4`
+    /// prices the nibble-packed panels at 0.5 B/elem.
+    #[allow(clippy::too_many_arguments)]
     pub fn build(
         cfg: &NpuConfig,
         method: Method,
@@ -50,19 +59,28 @@ impl Plan {
         n: usize,
         r: usize,
         bits: u32,
+        w_bits: u32,
         exp_factor: u32,
     ) -> Plan {
-        let int_prec = if bits <= 4 { Precision::Int4 } else { Precision::Int8 };
+        let act_prec = if bits <= 4 { Precision::Int4 } else { Precision::Int8 };
+        let w_prec = if w_bits <= 4 { Precision::Int4 } else { Precision::Int8 };
         match method {
             Method::Fp16 => Plan {
                 method,
-                gemms: vec![PlannedGemm { label: "fp16", m: t, k, n, prec: Precision::Fp16 }],
+                gemms: vec![PlannedGemm {
+                    label: "fp16",
+                    m: t,
+                    k,
+                    n,
+                    prec: Precision::Fp16,
+                    w_prec: Precision::Fp16,
+                }],
                 overhead_cycles: 0.0,
                 pack_cycles: 0.0,
             },
             Method::Naive => Plan {
                 method,
-                gemms: vec![PlannedGemm { label: "int", m: t, k, n, prec: int_prec }],
+                gemms: vec![PlannedGemm { label: "int", m: t, k, n, prec: act_prec, w_prec }],
                 overhead_cycles: 0.0,
                 pack_cycles: 0.0,
             },
@@ -81,7 +99,8 @@ impl Plan {
                             m: t,
                             k: k + r,
                             n,
-                            prec: int_prec,
+                            prec: act_prec,
+                            w_prec,
                         }],
                         overhead_cycles: 0.0,
                         pack_cycles: 0.0,
@@ -90,8 +109,8 @@ impl Plan {
                     Plan {
                         method,
                         gemms: vec![
-                            PlannedGemm { label: "body", m: t, k, n, prec: int_prec },
-                            PlannedGemm { label: "aux", m: t, k: r, n, prec: int_prec },
+                            PlannedGemm { label: "body", m: t, k, n, prec: act_prec, w_prec },
+                            PlannedGemm { label: "aux", m: t, k: r, n, prec: act_prec, w_prec },
                         ],
                         // scaled recombination on the vector unit
                         // (t*n fused multiply-adds, 64 lanes, overlapped
@@ -107,7 +126,8 @@ impl Plan {
                     m: t,
                     k: k.saturating_sub(r).max(1),
                     n,
-                    prec: int_prec,
+                    prec: act_prec,
+                    w_prec,
                 }];
                 let mut overhead = 0.0;
                 if r > 0 {
@@ -117,8 +137,40 @@ impl Plan {
                         k: r,
                         n,
                         prec: Precision::Fp16,
+                        w_prec: Precision::Fp16,
                     });
                     let gather_bytes = (t * r) as f64 * 2.0 * 2.0;
+                    overhead += gather_bytes / cfg.gather_bytes_per_cycle;
+                    overhead += cfg.domain_switch_cycles as f64;
+                }
+                Plan { method, gemms, overhead_cycles: overhead, pack_cycles: 0.0 }
+            }
+            Method::Resq => {
+                // W4 body over the FULL k (the residual is an additive
+                // correction, not a column split like LLM.int8()), plus
+                // a skinny rank-r FP leg over the compact residual.
+                let mut gemms = vec![PlannedGemm {
+                    label: "int-body",
+                    m: t,
+                    k,
+                    n,
+                    prec: act_prec,
+                    w_prec,
+                }];
+                let mut overhead = 0.0;
+                if r > 0 {
+                    gemms.push(PlannedGemm {
+                        label: "fp-residual",
+                        m: t,
+                        k: r,
+                        n,
+                        prec: Precision::Fp16,
+                        w_prec: Precision::Fp16,
+                    });
+                    // gather t*r activation columns into the compact
+                    // residual operand; no scatter back — the leg
+                    // accumulates straight into the dequant output
+                    let gather_bytes = (t * r) as f64 * 2.0;
                     overhead += gather_bytes / cfg.gather_bytes_per_cycle;
                     overhead += cfg.domain_switch_cycles as f64;
                 }
@@ -134,7 +186,9 @@ impl Plan {
     /// roughly the arithmetic-intensity deficit (`array utilization ~
     /// 1/array_dim`): decode latency is **bytes-dominated**, the regime
     /// where the INT8-vs-FP16 operand-size halving buys latency directly
-    /// (the rust engine's GEMV path is the kernel-level twin).
+    /// (the rust engine's GEMV path is the kernel-level twin) — and
+    /// where `w_bits = 4` halves the dominant weight stream again.
+    #[allow(clippy::too_many_arguments)]
     pub fn decode_step(
         cfg: &NpuConfig,
         method: Method,
@@ -142,16 +196,17 @@ impl Plan {
         n: usize,
         r: usize,
         bits: u32,
+        w_bits: u32,
         exp_factor: u32,
     ) -> Plan {
-        Self::build(cfg, method, 1, k, n, r, bits, exp_factor)
+        Self::build(cfg, method, 1, k, n, r, bits, w_bits, exp_factor)
     }
 
     /// (compute, dma) cycle totals across the plan's GEMMs — the split
     /// [`Plan::cost`] folds away via sequential composition.
     pub fn compute_dma_split(&self, cfg: &NpuConfig) -> (f64, f64) {
         self.gemms.iter().fold((0.0, 0.0), |(c, d), g| {
-            let gc = gemm_cost(cfg, g.m, g.k, g.n, g.prec);
+            let gc = gemm_cost_w(cfg, g.m, g.k, g.n, g.prec, g.w_prec);
             (c + gc.compute_cycles, d + gc.dma_cycles)
         })
     }
@@ -168,7 +223,11 @@ impl Plan {
     pub fn bytes_per_step(&self) -> f64 {
         self.gemms
             .iter()
-            .map(|g| (g.m * g.k + g.k * g.n) as f64 * g.prec.bytes() + (g.m * g.n) as f64 * 2.0)
+            .map(|g| {
+                (g.m * g.k) as f64 * g.prec.bytes()
+                    + (g.k * g.n) as f64 * g.w_prec.bytes()
+                    + (g.m * g.n) as f64 * 2.0
+            })
             .sum()
     }
 
@@ -178,7 +237,7 @@ impl Plan {
     /// before the MAC array can stream it.
     pub fn with_weight_repack(mut self, cfg: &NpuConfig) -> Plan {
         let bytes: f64 =
-            self.gemms.iter().map(|g| (g.k * g.n) as f64 * g.prec.bytes()).sum();
+            self.gemms.iter().map(|g| (g.k * g.n) as f64 * g.w_prec.bytes()).sum();
         self.pack_cycles += bytes / cfg.pack_bytes_per_cycle;
         self
     }
@@ -244,7 +303,7 @@ impl Plan {
     pub fn cost(&self, cfg: &NpuConfig) -> Cost {
         let mut total = Cost::default();
         for g in &self.gemms {
-            total.add(gemm_cost(cfg, g.m, g.k, g.n, g.prec));
+            total.add(gemm_cost_w(cfg, g.m, g.k, g.n, g.prec, g.w_prec));
         }
         total.extra_cycles += self.overhead_cycles + self.pack_cycles;
         total
@@ -261,11 +320,16 @@ impl Plan {
             .gemms
             .iter()
             .filter(|g| g.prec == Precision::Fp16 && self.method != Method::Fp16)
-            .map(|g| gemm_cost(cfg, g.m, g.k, g.n, g.prec).cycles())
+            .map(|g| gemm_cost_w(cfg, g.m, g.k, g.n, g.prec, g.w_prec).cycles())
             .sum();
         // MUXQ's recombination is an INT vector add (uniform dataflow);
-        // only LLM.int8()'s gather/scatter + domain switch is irregular.
-        let irregular = if self.method == Method::LlmInt8 { self.overhead_cycles } else { 0.0 };
+        // LLM.int8()'s gather/scatter + domain switch is irregular, and
+        // so is ResQ's residual-leg gather + domain switch.
+        let irregular = if matches!(self.method, Method::LlmInt8 | Method::Resq) {
+            self.overhead_cycles
+        } else {
+            0.0
+        };
         (fp + irregular) / total
     }
 }
@@ -311,14 +375,15 @@ impl SpecRoundPlan {
         n: usize,
         r: usize,
         bits: u32,
+        w_bits: u32,
         exp_factor: u32,
         draft_scale: f64,
         accept_rate: f64,
     ) -> SpecRoundPlan {
         SpecRoundPlan {
-            verify: Plan::build(cfg, method, k + 1, k_dim, n, r, bits, exp_factor),
-            draft_step: Plan::decode_step(cfg, method, k_dim, n, r, bits, exp_factor),
-            target_step: Plan::decode_step(cfg, method, k_dim, n, r, bits, exp_factor),
+            verify: Plan::build(cfg, method, k + 1, k_dim, n, r, bits, w_bits, exp_factor),
+            draft_step: Plan::decode_step(cfg, method, k_dim, n, r, bits, w_bits, exp_factor),
+            target_step: Plan::decode_step(cfg, method, k_dim, n, r, bits, w_bits, exp_factor),
             k,
             draft_scale,
             accept_rate,
@@ -358,11 +423,11 @@ mod tests {
     #[test]
     fn plan_shapes() {
         let cfg = NpuConfig::default();
-        let p = Plan::build(&cfg, Method::Muxq, 512, 768, 768, 12, 8, 2);
+        let p = Plan::build(&cfg, Method::Muxq, 512, 768, 768, 12, 8, 8, 2);
         assert_eq!(p.gemms.len(), 2, "exp!=1 falls back to two GEMMs");
         assert_eq!(p.gemms[1].k, 12);
         assert!(p.overhead_cycles > 0.0, "exp=2 pays recombination");
-        let p1 = Plan::build(&cfg, Method::Muxq, 512, 768, 768, 12, 8, 1);
+        let p1 = Plan::build(&cfg, Method::Muxq, 512, 768, 768, 12, 8, 8, 1);
         assert_eq!(p1.gemms.len(), 1, "exp=1 concatenates");
         assert_eq!(p1.gemms[0].k, 768 + 12);
         assert_eq!(p1.overhead_cycles, 0.0, "exp=1 is a plain sum");
@@ -371,8 +436,8 @@ mod tests {
     #[test]
     fn muxq_stays_uniform_int() {
         let cfg = NpuConfig::default();
-        let muxq = Plan::build(&cfg, Method::Muxq, 512, 768, 768, 12, 8, 2);
-        let mixed = Plan::build(&cfg, Method::LlmInt8, 512, 768, 768, 12, 8, 2);
+        let muxq = Plan::build(&cfg, Method::Muxq, 512, 768, 768, 12, 8, 8, 2);
+        let mixed = Plan::build(&cfg, Method::LlmInt8, 512, 768, 768, 12, 8, 8, 2);
         assert!(muxq.non_uniform_fraction(&cfg) < 0.02);
         assert!(mixed.non_uniform_fraction(&cfg) > muxq.non_uniform_fraction(&cfg));
     }
@@ -383,7 +448,7 @@ mod tests {
         // per-call repack variant must cost strictly more, by exactly the
         // panel-rewrite traversal of every weight operand.
         let cfg = NpuConfig::default();
-        let plan = Plan::build(&cfg, Method::Muxq, 512, 768, 768, 12, 8, 2);
+        let plan = Plan::build(&cfg, Method::Muxq, 512, 768, 768, 12, 8, 8, 2);
         assert_eq!(plan.pack_cycles, 0.0, "deployment packs at load time");
         let repack = plan.clone().with_weight_repack(&cfg);
         let bytes: f64 = plan.gemms.iter().map(|g| (g.k * g.n) as f64).sum();
@@ -396,15 +461,15 @@ mod tests {
     fn widened_mac_datapath_tracks_pair_kernel() {
         let cfg = NpuConfig::default();
         // compute-bound INT plan: pairing buys a real speedup, capped at 2x
-        let muxq = Plan::build(&cfg, Method::Muxq, 4096, 4096, 4096, 16, 8, 2);
+        let muxq = Plan::build(&cfg, Method::Muxq, 4096, 4096, 4096, 16, 8, 8, 2);
         let s = muxq.widened_mac_speedup(&cfg);
         assert!(s > 1.2 && s <= 2.0 + 1e-9, "speedup {s}");
         // a pure-FP16 plan is untouched by the INT accumulator width
-        let fp = Plan::build(&cfg, Method::Fp16, 4096, 4096, 4096, 0, 8, 1);
+        let fp = Plan::build(&cfg, Method::Fp16, 4096, 4096, 4096, 0, 8, 8, 1);
         assert!((fp.widened_mac_speedup(&cfg) - 1.0).abs() < 1e-9);
         // LLM.int8() keeps an FP16 leg, so its benefit must be smaller
         // than the uniform-INT plan's
-        let mixed = Plan::build(&cfg, Method::LlmInt8, 4096, 4096, 4096, 16, 8, 2);
+        let mixed = Plan::build(&cfg, Method::LlmInt8, 4096, 4096, 4096, 16, 8, 8, 2);
         assert!(mixed.widened_mac_speedup(&cfg) < s);
     }
 
@@ -416,21 +481,21 @@ mod tests {
         // roof) — the roofline version of the paper's INT8 premise.
         let cfg = NpuConfig::default();
         for method in [Method::Naive, Method::Muxq] {
-            let p = Plan::decode_step(&cfg, method, 768, 2304, 12, 8, 2);
+            let p = Plan::decode_step(&cfg, method, 768, 2304, 12, 8, 8, 2);
             let (compute, dma) = p.compute_dma_split(&cfg);
             assert!(p.is_memory_bound(&cfg), "{method:?}: compute {compute} dma {dma}");
         }
-        let fp = Plan::decode_step(&cfg, Method::Fp16, 768, 2304, 0, 16, 1);
+        let fp = Plan::decode_step(&cfg, Method::Fp16, 768, 2304, 0, 16, 16, 1);
         assert!(!fp.is_memory_bound(&cfg), "fp16 decode is MAC-bound here");
         // and a large-batch INT plan is compute-bound: decode is special
-        let batch = Plan::build(&cfg, Method::Muxq, 4096, 4096, 4096, 12, 8, 2);
+        let batch = Plan::build(&cfg, Method::Muxq, 4096, 4096, 4096, 12, 8, 8, 2);
         assert!(!batch.is_memory_bound(&cfg), "big-batch plan must be compute-bound");
     }
 
     #[test]
     fn paged_kv_gather_pricing() {
         let cfg = NpuConfig::default();
-        let base = Plan::decode_step(&cfg, Method::Naive, 768, 2304, 0, 8, 1);
+        let base = Plan::decode_step(&cfg, Method::Naive, 768, 2304, 0, 8, 8, 1);
         let flat = base.clone().with_contiguous_kv(&cfg, 96, 768);
         let paged = base.clone().with_paged_kv_gather(&cfg, 96, 768, 16);
         // the same bytes move, but gathered: paged must cost at least as
@@ -470,7 +535,7 @@ mod tests {
         // for the INT decode plan, latency IS the byte stream: cycles ==
         // dma == bytes / bandwidth, with compute fully hidden under it
         let cfg = NpuConfig::default();
-        let p = Plan::decode_step(&cfg, Method::Naive, 768, 2304, 0, 8, 1);
+        let p = Plan::decode_step(&cfg, Method::Naive, 768, 2304, 0, 8, 8, 1);
         let (compute, dma) = p.compute_dma_split(&cfg);
         assert!(dma > 2.0 * compute, "compute {compute} vs dma {dma}");
         let bytes_per_cycle = cfg.dram_gbps * 1e9 / (cfg.freq_ghz * 1e9);
@@ -482,9 +547,9 @@ mod tests {
     fn decode_muxq_overhead_tiny_and_beats_llmint8() {
         let cfg = NpuConfig::default();
         let r = 8;
-        let naive = Plan::decode_step(&cfg, Method::Naive, 768, 2304, r, 8, 1);
-        let muxq = Plan::decode_step(&cfg, Method::Muxq, 768, 2304, r, 8, 1);
-        let mixed = Plan::decode_step(&cfg, Method::LlmInt8, 768, 2304, r, 8, 1);
+        let naive = Plan::decode_step(&cfg, Method::Naive, 768, 2304, r, 8, 8, 1);
+        let muxq = Plan::decode_step(&cfg, Method::Muxq, 768, 2304, r, 8, 8, 1);
+        let mixed = Plan::decode_step(&cfg, Method::LlmInt8, 768, 2304, r, 8, 8, 1);
         let overhead = muxq.cost(&cfg).cycles() / naive.cost(&cfg).cycles() - 1.0;
         assert!(overhead >= 0.0 && overhead < 0.05, "muxq decode overhead {overhead}");
         assert!(muxq.cost(&cfg).cycles() < mixed.cost(&cfg).cycles());
@@ -494,8 +559,8 @@ mod tests {
     fn expfactor_ablation_cost_order() {
         // exp=1 cheapest recombination; higher exp adds the scaled add
         let cfg = NpuConfig::default();
-        let c1 = Plan::build(&cfg, Method::Muxq, 1024, 768, 768, 16, 8, 1).cost(&cfg).cycles();
-        let c2 = Plan::build(&cfg, Method::Muxq, 1024, 768, 768, 16, 8, 2).cost(&cfg).cycles();
+        let c1 = Plan::build(&cfg, Method::Muxq, 1024, 768, 768, 16, 8, 8, 1).cost(&cfg).cycles();
+        let c2 = Plan::build(&cfg, Method::Muxq, 1024, 768, 768, 16, 8, 8, 2).cost(&cfg).cycles();
         assert!(c1 <= c2);
     }
 
@@ -509,7 +574,7 @@ mod tests {
         for method in [Method::Naive, Method::Muxq] {
             for k in 2..=4 {
                 let sp =
-                    SpecRoundPlan::build(&cfg, method, k, 768, 2304, 12, 8, 2, 0.25, 0.8);
+                    SpecRoundPlan::build(&cfg, method, k, 768, 2304, 12, 8, 8, 2, 0.25, 0.8);
                 let ratio = sp.tok_s_ratio_vs_sequential(&cfg);
                 assert!(ratio > 1.0, "{method:?} k={k}: ratio {ratio}");
             }
@@ -519,18 +584,18 @@ mod tests {
     #[test]
     fn spec_round_expected_tokens_and_degenerate_rates() {
         let cfg = NpuConfig::default();
-        let sp = SpecRoundPlan::build(&cfg, Method::Muxq, 3, 768, 2304, 12, 8, 2, 0.25, 0.8);
+        let sp = SpecRoundPlan::build(&cfg, Method::Muxq, 3, 768, 2304, 12, 8, 8, 2, 0.25, 0.8);
         let want = 1.0 + 0.8 + 0.8_f64.powi(2) + 0.8_f64.powi(3);
         assert!((sp.expected_tokens() - want).abs() < 1e-12);
         // alpha=0: every draft rejected, the round still emits the
         // correction token but pays verify + drafts — worse than plain
         let reject =
-            SpecRoundPlan::build(&cfg, Method::Muxq, 3, 768, 2304, 12, 8, 2, 0.25, 0.0);
+            SpecRoundPlan::build(&cfg, Method::Muxq, 3, 768, 2304, 12, 8, 8, 2, 0.25, 0.0);
         assert!((reject.expected_tokens() - 1.0).abs() < 1e-12);
         assert!(reject.tok_s_ratio_vs_sequential(&cfg) < 1.0);
         // alpha=1: self-draft limit, k+1 tokens per round
         let perfect =
-            SpecRoundPlan::build(&cfg, Method::Muxq, 3, 768, 2304, 12, 8, 2, 0.25, 1.0);
+            SpecRoundPlan::build(&cfg, Method::Muxq, 3, 768, 2304, 12, 8, 8, 2, 0.25, 1.0);
         assert!((perfect.expected_tokens() - 4.0).abs() < 1e-12);
         assert!(
             perfect.tok_s_ratio_vs_sequential(&cfg)
@@ -541,12 +606,45 @@ mod tests {
     #[test]
     fn spec_round_cycles_decompose() {
         let cfg = NpuConfig::default();
-        let sp = SpecRoundPlan::build(&cfg, Method::Naive, 2, 768, 2304, 0, 8, 1, 0.5, 0.8);
+        let sp = SpecRoundPlan::build(&cfg, Method::Naive, 2, 768, 2304, 0, 8, 8, 1, 0.5, 0.8);
         let want = sp.verify.cost(&cfg).cycles()
             + 2.0 * 0.5 * sp.draft_step.cost(&cfg).cycles();
         assert!((sp.round_cycles(&cfg) - want).abs() < 1e-9);
         // a free draft (scale 0) reduces the round to the verify pass
-        let free = SpecRoundPlan::build(&cfg, Method::Naive, 2, 768, 2304, 0, 8, 1, 0.0, 0.8);
+        let free = SpecRoundPlan::build(&cfg, Method::Naive, 2, 768, 2304, 0, 8, 8, 1, 0.0, 0.8);
         assert_eq!(free.round_cycles(&cfg), free.verify.cost(&cfg).cycles());
+    }
+
+    #[test]
+    fn w4_decode_halves_weight_bytes() {
+        // the tentpole's pricing claim: nibble panels stream at
+        // 0.5 B/elem, so the bytes-dominated decode step sheds exactly
+        // half the k*n weight stream. W8 and W4 plans differ by NOTHING
+        // but the weight term — activations and output are untouched.
+        let cfg = NpuConfig::default();
+        let (k, n) = (768, 2304);
+        let w8 = Plan::decode_step(&cfg, Method::Naive, k, n, 0, 8, 8, 1);
+        let w4 = Plan::decode_step(&cfg, Method::Naive, k, n, 0, 8, 4, 1);
+        let saved = w8.bytes_per_step() - w4.bytes_per_step();
+        assert_eq!(saved, (k * n) as f64 * 0.5, "exactly half the weight stream");
+        let ratio = w8.bytes_per_step() / w4.bytes_per_step();
+        assert!(ratio > 1.9, "weight-dominated step ~halves: ratio {ratio}");
+        // and bytes ARE latency in this regime: W4 decode must be
+        // memory-bound and faster than W8 by nearly the byte ratio
+        assert!(w4.is_memory_bound(&cfg));
+        let speedup = w8.cost(&cfg).cycles() / w4.cost(&cfg).cycles();
+        assert!(speedup > 1.8, "decode speedup {speedup}");
+        // muxq-w4a8: aux rows ride along in the same nibble panel —
+        // still within a few percent of the naive-W4 stream
+        let muxq4 = Plan::decode_step(&cfg, Method::Muxq, k, n, 12, 8, 4, 1);
+        assert!(muxq4.bytes_per_step() < w4.bytes_per_step() * 1.05);
+        // resq: W4 body + rank-r FP residual prices BETWEEN naive-W4
+        // and naive-W8 — the residual leg costs real bytes but far
+        // fewer than the 4 bits/elem it replaces
+        let resq = Plan::decode_step(&cfg, Method::Resq, k, n, 48, 8, 4, 1);
+        assert!(resq.bytes_per_step() > w4.bytes_per_step());
+        assert!(resq.bytes_per_step() < w8.bytes_per_step());
+        // the residual leg is FP work off the uniform INT dataflow
+        assert!(resq.non_uniform_fraction(&cfg) > 0.0);
     }
 }

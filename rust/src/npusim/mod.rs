@@ -200,29 +200,55 @@ impl Cost {
     }
 }
 
-/// Price a dense GEMM on the array.
+/// Price a dense GEMM on the array with one precision for both operands
+/// — shorthand for [`gemm_cost_w`] at `act == w` (the pre-W4 model,
+/// numerically unchanged).
 pub fn gemm_cost(cfg: &NpuConfig, m: usize, k: usize, n: usize, prec: Precision) -> Cost {
+    gemm_cost_w(cfg, m, k, n, prec, prec)
+}
+
+/// Price a dense GEMM `[m,k] @ [k,n]` with SPLIT operand precisions:
+/// `act` for the `[m,k]` activation stream, `w` for the `[k,n]` weight
+/// stream — the W4A8 regime streams nibble weights against byte
+/// activations, so the byte terms must separate. Compute cadence and MAC
+/// energy follow the narrower INT side (the FineQ-style weight-datapath
+/// premise: an i4-weight MAC tree retires `int4_speedup`x the i8 rate
+/// and spends half the pJ); any FP16 operand drags the whole GEMM onto
+/// the FP16 lanes.
+pub fn gemm_cost_w(
+    cfg: &NpuConfig,
+    m: usize,
+    k: usize,
+    n: usize,
+    act: Precision,
+    w: Precision,
+) -> Cost {
     let a = cfg.array_dim as f64;
     let tiles_m = (m as f64 / a).ceil();
     let tiles_n = (n as f64 / a).ceil();
     let per_tile = k as f64 + 2.0 * a; // stream K + fill/drain
     // pair accumulation widens the INT datapath; FP16 lanes don't pair
-    let slow = match prec {
-        Precision::Int8 => 1.0 / cfg.int_macs_per_cycle(),
-        Precision::Int4 => 1.0 / (cfg.int4_speedup * cfg.int_macs_per_cycle()),
-        Precision::Fp16 => cfg.fp16_slowdown,
+    let slow = match (act, w) {
+        (Precision::Fp16, _) | (_, Precision::Fp16) => cfg.fp16_slowdown,
+        (Precision::Int4, _) | (_, Precision::Int4) => {
+            1.0 / (cfg.int4_speedup * cfg.int_macs_per_cycle())
+        }
+        _ => 1.0 / cfg.int_macs_per_cycle(),
     };
     let compute = tiles_m * tiles_n * per_tile * slow;
 
-    let op_bytes = (m * k + k * n) as f64 * prec.bytes() + (m * n) as f64 * 2.0; // out fp16
+    // operand bytes split by side; output fp16 — the ONE formula
+    // `Plan::bytes_per_step` mirrors term for term
+    let op_bytes =
+        (m * k) as f64 * act.bytes() + (k * n) as f64 * w.bytes() + (m * n) as f64 * 2.0;
     let bytes_per_cycle = cfg.dram_gbps * 1e9 / (cfg.freq_ghz * 1e9);
     let dma = op_bytes / bytes_per_cycle;
 
     let macs = (m * k * n) as f64;
-    let pj_mac = match prec {
-        Precision::Fp16 => cfg.pj_per_fp16_mac,
-        Precision::Int8 => cfg.pj_per_int8_mac,
-        Precision::Int4 => cfg.pj_per_int8_mac / 2.0,
+    let pj_mac = match (act, w) {
+        (Precision::Fp16, _) | (_, Precision::Fp16) => cfg.pj_per_fp16_mac,
+        (Precision::Int4, _) | (_, Precision::Int4) => cfg.pj_per_int8_mac / 2.0,
+        _ => cfg.pj_per_int8_mac,
     };
     Cost {
         compute_cycles: compute,
@@ -233,7 +259,10 @@ pub fn gemm_cost(cfg: &NpuConfig, m: usize, k: usize, n: usize, prec: Precision)
 }
 
 /// Price one projection layer `[t, k] @ [k, n]` for a method.
-/// `r` = number of outlier channels, `bits` = activation precision.
+/// `r` = number of outlier channels (the ResQ residual rank for
+/// [`Method::Resq`]), `bits` = activation precision, `w_bits` = weight
+/// precision — W4A8 passes (8, 4) and the weight byte terms halve.
+#[allow(clippy::too_many_arguments)]
 pub fn layer_cost(
     cfg: &NpuConfig,
     method: Method,
@@ -242,11 +271,13 @@ pub fn layer_cost(
     n: usize,
     r: usize,
     bits: u32,
+    w_bits: u32,
 ) -> Cost {
-    let int_prec = if bits <= 4 { Precision::Int4 } else { Precision::Int8 };
+    let act_prec = if bits <= 4 { Precision::Int4 } else { Precision::Int8 };
+    let w_prec = if w_bits <= 4 { Precision::Int4 } else { Precision::Int8 };
     match method {
         Method::Fp16 => gemm_cost(cfg, t, k, n, Precision::Fp16),
-        Method::Naive => gemm_cost(cfg, t, k, n, int_prec),
+        Method::Naive => gemm_cost_w(cfg, t, k, n, act_prec, w_prec),
         Method::Muxq => {
             // Body and Aux concatenate into ONE uniform-INT GEMM with
             // inner dimension k + r:
@@ -255,16 +286,32 @@ pub fn layer_cost(
             // Decompose fuses with the quantize-on-DMA-in pass, so the
             // only cost over naive is streaming r extra channels — the
             // "small additional computation" of the paper's conclusion.
-            gemm_cost(cfg, t, k + r, n, int_prec)
+            gemm_cost_w(cfg, t, k + r, n, act_prec, w_prec)
         }
         Method::LlmInt8 => {
             // INT GEMM over normal channels + FP16 GEMM over outliers +
             // irregular gather/scatter of the outlier slice + a precision
             // domain switch.
-            let mut c = gemm_cost(cfg, t, k.saturating_sub(r).max(1), n, int_prec);
+            let mut c = gemm_cost_w(cfg, t, k.saturating_sub(r).max(1), n, act_prec, w_prec);
             if r > 0 {
                 c.add(gemm_cost(cfg, t, r, n, Precision::Fp16));
                 let gather_bytes = (t * r) as f64 * 2.0 * 2.0; // gather + scatter, fp16
+                c.extra_cycles += gather_bytes / cfg.gather_bytes_per_cycle;
+                c.extra_cycles += cfg.domain_switch_cycles as f64;
+            }
+            c
+        }
+        Method::Resq => {
+            // W4 body over the FULL k (nothing is carved out of the
+            // nibble-packed W) + a skinny rank-r FP16 residual GEMM over
+            // the compact [r, n] residual. The covered activation
+            // columns gather at the irregular rate (no scatter — the
+            // residual accumulates in place) and the FP leg costs one
+            // precision domain switch.
+            let mut c = gemm_cost_w(cfg, t, k, n, act_prec, w_prec);
+            if r > 0 {
+                c.add(gemm_cost(cfg, t, r, n, Precision::Fp16));
+                let gather_bytes = (t * r) as f64 * 2.0; // gather only, fp16
                 c.extra_cycles += gather_bytes / cfg.gather_bytes_per_cycle;
                 c.extra_cycles += cfg.domain_switch_cycles as f64;
             }
@@ -276,6 +323,7 @@ pub fn layer_cost(
 /// End-to-end cost of a model's projection stack for one batch.
 /// Shapes: per block (c_attn [t,d,3d], attn_proj [t,d,d], c_fc [t,d,4d],
 /// mlp_proj [t,4d,d]); `r` outliers at the two post-LN sites.
+#[allow(clippy::too_many_arguments)]
 pub fn model_cost(
     cfg: &NpuConfig,
     method: Method,
@@ -284,13 +332,14 @@ pub fn model_cost(
     d: usize,
     r: usize,
     bits: u32,
+    w_bits: u32,
 ) -> Cost {
     let mut total = Cost::default();
     for _ in 0..n_layer {
-        total.add(layer_cost(cfg, method, t, d, 3 * d, r, bits)); // c_attn
-        total.add(layer_cost(cfg, method, t, d, d, 0, bits)); // attn_proj
-        total.add(layer_cost(cfg, method, t, d, 4 * d, r, bits)); // c_fc
-        total.add(layer_cost(cfg, method, t, 4 * d, d, 0, bits)); // mlp_proj
+        total.add(layer_cost(cfg, method, t, d, 3 * d, r, bits, w_bits)); // c_attn
+        total.add(layer_cost(cfg, method, t, d, d, 0, bits, w_bits)); // attn_proj
+        total.add(layer_cost(cfg, method, t, d, 4 * d, r, bits, w_bits)); // c_fc
+        total.add(layer_cost(cfg, method, t, 4 * d, d, 0, bits, w_bits)); // mlp_proj
     }
     total
 }
@@ -309,8 +358,9 @@ pub fn decode_cost(
     d: usize,
     r: usize,
     bits: u32,
+    w_bits: u32,
 ) -> Cost {
-    model_cost(cfg, method, n_layer, 1, d, r, bits)
+    model_cost(cfg, method, n_layer, 1, d, r, bits, w_bits)
 }
 
 /// Simulated steady-state decode throughput (tokens/s) implied by
@@ -323,8 +373,9 @@ pub fn decode_tok_per_s(
     d: usize,
     r: usize,
     bits: u32,
+    w_bits: u32,
 ) -> f64 {
-    let us = decode_cost(cfg, method, n_layer, d, r, bits).latency_us(cfg);
+    let us = decode_cost(cfg, method, n_layer, d, r, bits, w_bits).latency_us(cfg);
     if us <= 0.0 {
         return 0.0;
     }
@@ -353,8 +404,8 @@ mod tests {
     fn muxq_overhead_small_vs_naive() {
         let cfg = NpuConfig::default();
         let r = 8; // few outlier channels (the paper's premise)
-        let naive = model_cost(&cfg, Method::Naive, 12, T, D, r, 8);
-        let muxq = model_cost(&cfg, Method::Muxq, 12, T, D, r, 8);
+        let naive = model_cost(&cfg, Method::Naive, 12, T, D, r, 8, 8);
+        let muxq = model_cost(&cfg, Method::Muxq, 12, T, D, r, 8, 8);
         let overhead = muxq.cycles() / naive.cycles() - 1.0;
         assert!(overhead > 0.0);
         assert!(overhead < 0.15, "muxq overhead {overhead}");
@@ -364,8 +415,8 @@ mod tests {
     fn muxq_faster_than_llmint8() {
         let cfg = NpuConfig::default();
         let r = 8;
-        let muxq = model_cost(&cfg, Method::Muxq, 12, T, D, r, 8);
-        let mixed = model_cost(&cfg, Method::LlmInt8, 12, T, D, r, 8);
+        let muxq = model_cost(&cfg, Method::Muxq, 12, T, D, r, 8, 8);
+        let mixed = model_cost(&cfg, Method::LlmInt8, 12, T, D, r, 8, 8);
         assert!(
             muxq.cycles() < mixed.cycles(),
             "muxq {} vs llmint8 {}",
@@ -377,8 +428,8 @@ mod tests {
     #[test]
     fn muxq_faster_than_fp16() {
         let cfg = NpuConfig::default();
-        let muxq = model_cost(&cfg, Method::Muxq, 12, T, D, 8, 8);
-        let fp = model_cost(&cfg, Method::Fp16, 12, T, D, 0, 8);
+        let muxq = model_cost(&cfg, Method::Muxq, 12, T, D, 8, 8, 8);
+        let fp = model_cost(&cfg, Method::Fp16, 12, T, D, 0, 8, 8);
         assert!(muxq.cycles() < fp.cycles() / 1.5);
     }
 
@@ -428,7 +479,8 @@ mod tests {
         assert!(c(K::Neon) < c(K::Avx2));
         assert_eq!(c(K::Avx2), c(K::Pair));
         assert!(c(K::Avx2) < c(K::Scalar));
-        let d = |k| decode_cost(&NpuConfig::for_kernel(k), Method::Muxq, 12, D, 8, 8).cycles();
+        let d =
+            |k| decode_cost(&NpuConfig::for_kernel(k), Method::Muxq, 12, D, 8, 8, 8).cycles();
         assert_eq!(d(K::Neon), d(K::Scalar), "M=1 decode is bytes-bound on every kernel");
     }
 
@@ -444,8 +496,8 @@ mod tests {
     #[test]
     fn int4_cheaper_than_int8() {
         let cfg = NpuConfig::default();
-        let a = model_cost(&cfg, Method::Naive, 4, T, D, 0, 4);
-        let b = model_cost(&cfg, Method::Naive, 4, T, D, 0, 8);
+        let a = model_cost(&cfg, Method::Naive, 4, T, D, 0, 4, 4);
+        let b = model_cost(&cfg, Method::Naive, 4, T, D, 0, 8, 8);
         assert!(a.cycles() < b.cycles());
     }
 
@@ -456,7 +508,7 @@ mod tests {
         // pipeline and fp16 — at decode the gap is byte-driven
         let cfg = NpuConfig::default();
         let r = 8;
-        let tps = |m| decode_tok_per_s(&cfg, m, 12, D, r, 8);
+        let tps = |m| decode_tok_per_s(&cfg, m, 12, D, r, 8, 8);
         let (naive, muxq, mixed, fp) =
             (tps(Method::Naive), tps(Method::Muxq), tps(Method::LlmInt8), tps(Method::Fp16));
         assert!(naive > 0.0 && muxq > 0.0);
@@ -470,9 +522,9 @@ mod tests {
     fn energy_ordering() {
         let cfg = NpuConfig::default();
         let r = 8;
-        let e_naive = model_cost(&cfg, Method::Naive, 12, T, D, r, 8).energy_pj;
-        let e_muxq = model_cost(&cfg, Method::Muxq, 12, T, D, r, 8).energy_pj;
-        let e_fp = model_cost(&cfg, Method::Fp16, 12, T, D, r, 8).energy_pj;
+        let e_naive = model_cost(&cfg, Method::Naive, 12, T, D, r, 8, 8).energy_pj;
+        let e_muxq = model_cost(&cfg, Method::Muxq, 12, T, D, r, 8, 8).energy_pj;
+        let e_fp = model_cost(&cfg, Method::Fp16, 12, T, D, r, 8, 8).energy_pj;
         assert!(e_naive < e_muxq); // aux GEMM costs a bit
         assert!(e_muxq < e_fp); // but INT stays well below FP16
     }
@@ -482,8 +534,8 @@ mod tests {
         // more outlier channels -> llm.int8 pays more vs muxq
         let cfg = NpuConfig::default();
         let gap = |r| {
-            let m = model_cost(&cfg, Method::Muxq, 12, T, D, r, 8).cycles();
-            let l = model_cost(&cfg, Method::LlmInt8, 12, T, D, r, 8).cycles();
+            let m = model_cost(&cfg, Method::Muxq, 12, T, D, r, 8, 8).cycles();
+            let l = model_cost(&cfg, Method::LlmInt8, 12, T, D, r, 8, 8).cycles();
             l / m
         };
         assert!(gap(32) > gap(4));

@@ -9,6 +9,7 @@ pub struct Row {
     pub model: String,
     pub method: Method,
     pub bits: u32,
+    pub w_bits: u32,
     pub latency_us: f64,
     pub energy_uj: f64,
     pub speedup_vs_fp16: f64,
@@ -45,18 +46,22 @@ pub fn sim_geometries() -> Vec<(&'static str, ModelGeom)> {
 }
 
 pub fn compare(cfg: &NpuConfig, name: &str, g: ModelGeom, bits: u32) -> Vec<Row> {
-    let fp = model_cost(cfg, Method::Fp16, g.n_layer, g.t, g.d, 0, bits);
-    [Method::Fp16, Method::Naive, Method::Muxq, Method::LlmInt8]
+    let fp = model_cost(cfg, Method::Fp16, g.n_layer, g.t, g.d, 0, bits, bits);
+    [Method::Fp16, Method::Naive, Method::Muxq, Method::LlmInt8, Method::Resq]
         .into_iter()
         .map(|method| {
             let r = if method == Method::Fp16 || method == Method::Naive { 0 } else { g.r };
             // naive ignores outliers entirely (that's its accuracy bug,
-            // not a latency cost); muxq/llmint8 pay their handling cost
-            let c = model_cost(cfg, method, g.n_layer, g.t, g.d, r, bits);
+            // not a latency cost); muxq/llmint8 pay their handling cost,
+            // and resq's r prices its residual rank. resq deploys at its
+            // method-default W4 (the whole point of the method)
+            let w_bits = if method == Method::Resq { 4 } else { bits };
+            let c = model_cost(cfg, method, g.n_layer, g.t, g.d, r, bits, w_bits);
             Row {
                 model: name.to_string(),
                 method,
                 bits,
+                w_bits,
                 latency_us: c.latency_us(cfg),
                 energy_uj: c.energy_pj / 1e6,
                 speedup_vs_fp16: fp.cycles() / c.cycles(),
@@ -67,15 +72,15 @@ pub fn compare(cfg: &NpuConfig, name: &str, g: ModelGeom, bits: u32) -> Vec<Row>
 
 pub fn render_table(rows: &[Row]) -> String {
     let mut s = format!(
-        "{:<20} {:<12} {:>5} {:>12} {:>12} {:>14}\n",
+        "{:<20} {:<12} {:>6} {:>12} {:>12} {:>14}\n",
         "model", "method", "bits", "latency(us)", "energy(uJ)", "vs fp16"
     );
     for r in rows {
         s.push_str(&format!(
-            "{:<20} {:<12} {:>5} {:>12.1} {:>12.1} {:>13.2}x\n",
+            "{:<20} {:<12} {:>6} {:>12.1} {:>12.1} {:>13.2}x\n",
             r.model,
             r.method.name(),
-            r.bits,
+            format!("w{}a{}", r.w_bits, r.bits),
             r.latency_us,
             r.energy_uj,
             r.speedup_vs_fp16
@@ -100,6 +105,10 @@ mod tests {
             assert!(by(Method::Muxq).latency_us < by(Method::Naive).latency_us * 1.15);
             // MUXQ beats the mixed-precision baseline
             assert!(by(Method::Muxq).latency_us < by(Method::LlmInt8).latency_us);
+            // ResQ deploys at W4 and still clears the FP16 baseline
+            let resq = by(Method::Resq);
+            assert_eq!(resq.w_bits, 4, "{name}");
+            assert!(resq.speedup_vs_fp16 > 1.0, "{name}");
         }
     }
 
@@ -108,7 +117,7 @@ mod tests {
         let cfg = NpuConfig::default();
         let (name, g) = paper_geometries()[0];
         let t = render_table(&compare(&cfg, name, g, 8));
-        for m in ["fp16", "naive", "muxq", "llm.int8()"] {
+        for m in ["fp16", "naive", "muxq", "llm.int8()", "resq", "w4a8", "w8a8"] {
             assert!(t.contains(m), "{t}");
         }
     }

@@ -42,7 +42,7 @@ use super::gemm::matmul_f32;
 use super::matrix::{rint, MatF32, MatI32, MatI8};
 use super::method::Method;
 use super::muxq::{outlier_mask_into, MuxqParams};
-use super::packed::{self, PackedMatI8, ParallelGemm};
+use super::packed::{self, PackedMatI4, PackedMatI8, ParallelGemm};
 use crate::npusim::gemm_plan::Plan;
 use crate::npusim::NpuConfig;
 use anyhow::{bail, Result};
@@ -73,16 +73,30 @@ pub struct EngineSpec {
 
 impl EngineSpec {
     /// Deployment defaults: per-token activations, per-out-channel
-    /// weights, 8/8 bits, default MUXQ params, no smoothing.
+    /// weights, the method's default bit-widths
+    /// ([`EngineSpec::default_bits`]), default MUXQ params, no smoothing.
     pub fn new(method: Method) -> EngineSpec {
+        let (ia_bits, w_bits) = EngineSpec::default_bits(method);
         EngineSpec {
             method,
             act_gran: Granularity::PerRow,
             w_gran: Granularity::PerCol,
-            ia_bits: 8,
-            w_bits: 8,
+            ia_bits,
+            w_bits,
             muxq: MuxqParams::default(),
             smooth_alpha: None,
+        }
+    }
+
+    /// Per-method default `(ia_bits, w_bits)`: 8/8 everywhere except
+    /// ResQ, whose whole point is the nibble-packed W4 body (8/4). The
+    /// tag grammar encodes bit-widths only when they differ from these
+    /// defaults, so `naive-pv` still means W8A8 and bare `resq-pv`
+    /// already means W4A8.
+    pub fn default_bits(method: Method) -> (u32, u32) {
+        match method {
+            Method::Resq => (8, 4),
+            _ => (8, 8),
         }
     }
 
@@ -100,6 +114,12 @@ impl EngineSpec {
 
     pub fn llmint8() -> EngineSpec {
         EngineSpec::new(Method::LlmInt8)
+    }
+
+    /// ResQ-style W4 + rank-r FP residual; defaults to W4A8
+    /// ([`EngineSpec::default_bits`]).
+    pub fn resq() -> EngineSpec {
+        EngineSpec::new(Method::Resq)
     }
 
     pub fn with_bits(mut self, ia_bits: u32, w_bits: u32) -> EngineSpec {
@@ -137,9 +157,12 @@ impl EngineSpec {
 
     /// The canonical variant tag — the ONE spelling shared by the python
     /// build manifest, the coordinator registry, and every example:
-    /// `{method}-{pt|pv}[-sq][-e{exp}]` (the `-e` suffix only for MUXQ
-    /// with a non-default `exp_factor`). Bit-widths are deliberately not
-    /// part of the tag: they are runtime inputs of the compiled variants.
+    /// `{method}-{pt|pv}[-sq][-e{exp}][-w{W}a{A}]`. The `-e` suffix only
+    /// appears for MUXQ with a non-default `exp_factor`; the `-w{W}a{A}`
+    /// bits suffix only when the widths differ from the method's
+    /// defaults ([`EngineSpec::default_bits`]) — so `naive-pv-w4a8` is
+    /// the nibble-packed W4A8 engine while `naive-pv` stays W8A8 and
+    /// bare `resq-pv` already means W4A8.
     pub fn tag(&self) -> String {
         let g = match (self.act_gran, self.w_gran) {
             (Granularity::PerTensor, Granularity::PerTensor) => "pt",
@@ -151,13 +174,22 @@ impl EngineSpec {
         } else {
             String::new()
         };
-        format!("{}-{g}{s}{e}", self.method.tag_name())
+        let b = if (self.ia_bits, self.w_bits) != EngineSpec::default_bits(self.method) {
+            format!("-w{}a{}", self.w_bits, self.ia_bits)
+        } else {
+            String::new()
+        };
+        format!("{}-{g}{s}{e}{b}", self.method.tag_name())
     }
 
-    /// Parse a canonical tag back into a spec (bits default to 8/8, the
-    /// smooth alpha to 0.5 — neither is encoded in tags). Inverse of
-    /// [`EngineSpec::tag`]; `parse(t).tag() == t` for every well-formed
-    /// tag, which is what keeps manifest and examples drift-free.
+    /// Parse a canonical tag back into a spec (absent bits suffix means
+    /// the method's default widths, the smooth alpha defaults to 0.5 —
+    /// alpha is not encoded in tags). Inverse of [`EngineSpec::tag`];
+    /// `parse(t).tag() == t` for every CANONICAL tag, which is what
+    /// keeps manifest and examples drift-free. A bits suffix spelling
+    /// out the method defaults (e.g. `naive-pv-w8a8`) parses fine but
+    /// re-tags to the canonical short form — the manifest canonicality
+    /// check relies on exactly that.
     pub fn parse(tag: &str) -> Result<EngineSpec> {
         let mut parts = tag.split('-');
         let Some(m) = parts.next() else { bail!("empty variant tag") };
@@ -178,6 +210,18 @@ impl EngineSpec {
                     bail!("variant tag {tag:?}: -e suffix is MUXQ-only");
                 }
                 spec.muxq.exp_factor = exp;
+            } else if let Some(rest) = p.strip_prefix('w') {
+                let Some((ws, as_)) = rest.split_once('a') else {
+                    bail!("variant tag {tag:?}: bad bits suffix {p:?} (want -w{{W}}a{{A}})");
+                };
+                let w: u32 = ws
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("variant tag {tag:?}: bad bits suffix {p:?}"))?;
+                let a: u32 = as_
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("variant tag {tag:?}: bad bits suffix {p:?}"))?;
+                spec.ia_bits = a;
+                spec.w_bits = w;
             } else {
                 bail!("variant tag {tag:?}: unknown suffix {p:?}");
             }
@@ -233,20 +277,21 @@ impl EngineSpec {
             }),
             Method::Naive => Box::new(NaiveLinear {
                 spec: *self,
-                qw: PackedWeight::quantize(w_eff, self.w_qmax(), self.w_gran, bias),
+                qw: PackedWeight::quantize(w_eff, self.w_qmax(), self.w_gran, bias, self.w_bits),
                 smooth_s,
             }),
             Method::Muxq => Box::new(MuxqLinear {
                 spec: *self,
-                qw: PackedWeight::quantize(w_eff, self.w_qmax(), self.w_gran, bias),
+                qw: PackedWeight::quantize(w_eff, self.w_qmax(), self.w_gran, bias, self.w_bits),
                 smooth_s,
             }),
             Method::LlmInt8 => Box::new(LlmInt8Linear {
                 spec: *self,
-                qw: PackedWeight::quantize(w_eff, self.w_qmax(), self.w_gran, bias),
+                qw: PackedWeight::quantize(w_eff, self.w_qmax(), self.w_gran, bias, self.w_bits),
                 w_fp: w_eff.clone(),
                 smooth_s,
             }),
+            Method::Resq => Box::new(ResqLinear::build(*self, w_eff, bias, smooth_s)),
         }
     }
 
@@ -330,7 +375,7 @@ pub trait QuantLinear: Send + Sync {
     fn plan(&self, cfg: &NpuConfig, m: usize, r: usize) -> Plan {
         let (k, n) = self.shape();
         let s = self.spec();
-        Plan::build(cfg, s.method, m, k, n, r, s.ia_bits, s.muxq.exp_factor)
+        Plan::build(cfg, s.method, m, k, n, r, s.ia_bits, s.w_bits, s.muxq.exp_factor)
     }
 
     /// [`QuantLinear::plan`] priced on the NPU config that mirrors the
@@ -352,24 +397,87 @@ pub trait QuantLinear: Send + Sync {
 
 // ------------------------------------------------------- shared pieces
 
+/// The packed INT body of one weight matrix at either deployed width:
+/// byte-per-weight INT8 panels or nibble-per-weight INT4 panels. One
+/// enum so every INT operator serves both widths through the same two
+/// contractions — the whole-matrix GEMM and the rows-subset aux GEMM —
+/// and the skinny-M GEMV routing stays inside the packed engine.
+pub enum PackedBody {
+    I8(PackedMatI8),
+    I4(PackedMatI4),
+}
+
+impl PackedBody {
+    /// Logical `(k, n)` shape.
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            PackedBody::I8(p) => (p.rows, p.cols),
+            PackedBody::I4(p) => (p.rows, p.cols),
+        }
+    }
+
+    /// Stored panel bytes — nibble panels really are half the INT8
+    /// bytes, the 0.5 B/elem memory claim `bytes()` passes upward.
+    pub fn padded_bytes(&self) -> usize {
+        match self {
+            PackedBody::I8(p) => p.padded_bytes(),
+            PackedBody::I4(p) => p.padded_bytes(),
+        }
+    }
+
+    fn gemm_into(&self, xq: &MatI8, acc: &mut MatI32) {
+        match self {
+            PackedBody::I8(p) => packed::matmul_i8_packed_into(xq, p, acc, ParallelGemm::global()),
+            PackedBody::I4(p) => {
+                packed::matmul_i8w4_packed_into(xq, p, acc, ParallelGemm::global())
+            }
+        }
+    }
+
+    fn rows_subset_into(&self, xq: &MatI8, idx: &[usize], acc: &mut MatI32) {
+        match self {
+            PackedBody::I8(p) => {
+                packed::matmul_i8_rows_subset_into(xq, p, idx, acc, ParallelGemm::global())
+            }
+            PackedBody::I4(p) => {
+                packed::matmul_i8w4_rows_subset_into(xq, p, idx, acc, ParallelGemm::global())
+            }
+        }
+    }
+}
+
 /// One weight matrix, pre-quantized and pre-packed (K-major panels) —
 /// the INT methods' shared weight half.
 pub struct PackedWeight {
-    pub packed: PackedMatI8,
+    pub body: PackedBody,
     pub scales: Scales,
     pub bias: Vec<f32>,
 }
 
 impl PackedWeight {
-    pub fn quantize(w: &MatF32, qmax: f32, gran: Granularity, bias: &[f32]) -> PackedWeight {
+    /// Quantize + pack once at load time; `w_bits <= 4` selects the
+    /// nibble panel format (the quantized grid already fits [-7, 7], so
+    /// the pack-time saturation scan never fires on this path).
+    pub fn quantize(
+        w: &MatF32,
+        qmax: f32,
+        gran: Granularity,
+        bias: &[f32],
+        w_bits: u32,
+    ) -> PackedWeight {
         let scales = Scales::compute(w, qmax, gran);
         let q = super::absmax::quantize_i8(w, &scales, qmax);
-        PackedWeight { packed: PackedMatI8::pack(&q), scales, bias: bias.to_vec() }
+        let body = if w_bits <= 4 {
+            PackedBody::I4(PackedMatI4::pack(&q))
+        } else {
+            PackedBody::I8(PackedMatI8::pack(&q))
+        };
+        PackedWeight { body, scales, bias: bias.to_vec() }
     }
 
     /// Packed panels + scale vector + f32 bias.
     pub fn bytes(&self) -> usize {
-        self.packed.padded_bytes()
+        self.body.padded_bytes()
             + match &self.scales {
                 Scales::Tensor(_) => 4,
                 Scales::Rows(v) | Scales::Cols(v) => v.len() * 4,
@@ -399,6 +507,8 @@ struct IntScratch {
     xq: MatI8,
     /// compact quantized Aux — outlier columns only, [m, r]
     aux_q: MatI8,
+    /// compact gathered activation columns for the ResQ residual leg, [m, rank]
+    xg: MatF32,
     acc: MatI32,
     acc_aux: MatI32,
     /// per-row activation scales (body, aux)
@@ -415,6 +525,7 @@ impl IntScratch {
             xrow: MatF32::zeros(0, 0),
             xq: MatI8::zeros(0, 0),
             aux_q: MatI8::zeros(0, 0),
+            xg: MatF32::zeros(0, 0),
             acc: MatI32::zeros(0, 0),
             acc_aux: MatI32::zeros(0, 0),
             sx: Vec::new(),
@@ -717,12 +828,7 @@ impl NaiveLinear {
         with_scratch(|sc| {
             let xs = smoothed(x, &self.smooth_s, &mut sc.xs);
             quantize_rows_into(xs, qmax, self.spec.act_gran, &mut sc.xq, &mut sc.sx);
-            packed::matmul_i8_packed_into(
-                &sc.xq,
-                &self.qw.packed,
-                &mut sc.acc,
-                ParallelGemm::global(),
-            );
+            self.qw.body.gemm_into(&sc.xq, &mut sc.acc);
             dequant_bias_into(&sc.acc, &sc.sx, &self.qw.scales, None, &self.qw.bias, y);
         });
     }
@@ -734,7 +840,7 @@ impl QuantLinear for NaiveLinear {
     }
 
     fn shape(&self) -> (usize, usize) {
-        (self.qw.packed.rows, self.qw.packed.cols)
+        self.qw.body.shape()
     }
 
     fn bytes(&self) -> usize {
@@ -759,12 +865,7 @@ impl QuantLinear for NaiveLinear {
         with_scratch(|sc| {
             sc.stage_row(x, &self.smooth_s);
             quantize_rows_into(&sc.xrow, qmax, Granularity::PerRow, &mut sc.xq, &mut sc.sx);
-            packed::matmul_i8_packed_into(
-                &sc.xq,
-                &self.qw.packed,
-                &mut sc.acc,
-                ParallelGemm::global(),
-            );
+            self.qw.body.gemm_into(&sc.xq, &mut sc.acc);
             dequant_bias_row(&sc.acc.data[..n], sc.sx[0], &self.qw.scales, None, &self.qw.bias, y);
         });
     }
@@ -787,7 +888,7 @@ impl MuxqLinear {
     /// `xs` — callers differ only in mask scope (whole batch vs one row).
     fn project_masked(&self, xs: &MatF32, sc: &mut IntScratch, y_row0: &mut [f32]) {
         let qmax = self.spec.ia_qmax();
-        let n = self.qw.packed.cols;
+        let n = self.qw.body.shape().1;
         sc.idx.clear();
         sc.idx.extend(sc.mask.iter().enumerate().filter(|(_, m)| **m).map(|(i, _)| i));
         fused_decompose_quantize(
@@ -802,7 +903,7 @@ impl MuxqLinear {
             &mut sc.aux_q,
             &mut sc.sa,
         );
-        packed::matmul_i8_packed_into(&sc.xq, &self.qw.packed, &mut sc.acc, ParallelGemm::global());
+        self.qw.body.gemm_into(&sc.xq, &mut sc.acc);
         if sc.idx.is_empty() {
             for r in 0..xs.rows {
                 dequant_bias_row(
@@ -815,13 +916,7 @@ impl MuxqLinear {
                 );
             }
         } else {
-            packed::matmul_i8_rows_subset_into(
-                &sc.aux_q,
-                &self.qw.packed,
-                &sc.idx,
-                &mut sc.acc_aux,
-                ParallelGemm::global(),
-            );
+            self.qw.body.rows_subset_into(&sc.aux_q, &sc.idx, &mut sc.acc_aux);
             let f = self.spec.muxq.aux_weight();
             for r in 0..xs.rows {
                 dequant_bias_row(
@@ -843,7 +938,7 @@ impl QuantLinear for MuxqLinear {
     }
 
     fn shape(&self) -> (usize, usize) {
-        (self.qw.packed.rows, self.qw.packed.cols)
+        self.qw.body.shape()
     }
 
     fn bytes(&self) -> usize {
@@ -857,7 +952,7 @@ impl QuantLinear for MuxqLinear {
     }
 
     fn forward_into(&self, x: &MatF32, y: &mut MatF32) {
-        let n = self.qw.packed.cols;
+        let n = self.qw.body.shape().1;
         with_scratch(|sc| {
             y.rows = x.rows;
             y.cols = n;
@@ -1019,11 +1114,11 @@ impl LlmInt8Linear {
 
     /// INT leg + FP outlier leg over rows of `xs`, writing `y` rows.
     fn project(&self, xs: &MatF32, sc: &mut IntScratch, y: &mut [f32]) {
-        let n = self.qw.packed.cols;
+        let n = self.qw.body.shape().1;
         sc.idx.clear();
         sc.idx.extend(sc.mask.iter().enumerate().filter(|(_, m)| **m).map(|(i, _)| i));
         self.quantize_masked(xs, sc);
-        packed::matmul_i8_packed_into(&sc.xq, &self.qw.packed, &mut sc.acc, ParallelGemm::global());
+        self.qw.body.gemm_into(&sc.xq, &mut sc.acc);
         for r in 0..xs.rows {
             dequant_bias_row(
                 &sc.acc.data[r * n..(r + 1) * n],
@@ -1048,7 +1143,7 @@ impl QuantLinear for LlmInt8Linear {
     }
 
     fn shape(&self) -> (usize, usize) {
-        (self.qw.packed.rows, self.qw.packed.cols)
+        self.qw.body.shape()
     }
 
     fn bytes(&self) -> usize {
@@ -1063,7 +1158,7 @@ impl QuantLinear for LlmInt8Linear {
     }
 
     fn forward_into(&self, x: &MatF32, y: &mut MatF32) {
-        let n = self.qw.packed.cols;
+        let n = self.qw.body.shape().1;
         with_scratch(|sc| {
             y.rows = x.rows;
             y.cols = n;
@@ -1092,6 +1187,179 @@ impl QuantLinear for LlmInt8Linear {
             self.project(&xrow, sc, y);
             sc.xrow = xrow;
         });
+    }
+}
+
+// ------------------------------------------------------------------ resq
+
+/// ResQ-style W4 + rank-r FP residual (arXiv:2412.14363): the weight
+/// body is nibble-packed INT4 — half the decode weight traffic of W8 —
+/// and accuracy is recovered by a LOW-RANK FP correction fixed at pack
+/// time. Unlike LLM.int8()'s runtime mask, the residual rows are a
+/// static property of the *weight* quantization error, so the operator
+/// is row-independent like Naive and carries no per-call mask work.
+/// Structurally the correction is the MUXQ aux leg generalized: it
+/// reuses the LLM.int8() gathered-rows FP kernel, but against a COMPACT
+/// `[rank, n]` residual instead of a resident full-size FP copy —
+/// `bytes()` charges the residual at 2 B/elem (fp16 stand-in), which at
+/// rank = k/16 is a small fraction of the LLM.int8() overhead.
+pub struct ResqLinear {
+    spec: EngineSpec,
+    /// nibble-packed W4 body (I8 body if the spec overrides `w_bits`)
+    qw: PackedWeight,
+    /// compact residual rows `R[idx[t], :]` of `R = W − dq(Q(W))`, shape
+    /// `[rank, n]`
+    resid: MatF32,
+    /// the k-rows the residual covers — largest residual row L2 norms
+    idx: Vec<usize>,
+    /// `0..rank`: row indices into the COMPACT residual for the gathered
+    /// kernel (the activation columns are gathered to match)
+    idx_all: Vec<usize>,
+    smooth_s: Option<Vec<f32>>,
+}
+
+impl ResqLinear {
+    /// rank = max(1, k/16) — the low-rank regime of the ResQ paper: a
+    /// few percent of input channels carry most of the W4 error.
+    fn rank_for(k: usize) -> usize {
+        (k / 16).max(1)
+    }
+
+    fn build(spec: EngineSpec, w: &MatF32, bias: &[f32], smooth_s: Option<Vec<f32>>) -> ResqLinear {
+        let (k, n) = (w.rows, w.cols);
+        let qmax = spec.w_qmax();
+        let qw = PackedWeight::quantize(w, qmax, spec.w_gran, bias, spec.w_bits);
+        // the residual of the body quantization, R = W − dq(Q(W)) — the
+        // same grid `PackedWeight::quantize` just packed (identical
+        // scales + rounding, so body + residual reconstructs W exactly
+        // on the covered rows)
+        let q = super::absmax::quantize_i8(w, &qw.scales, qmax);
+        let res_at = |r: usize, c: usize| w.at(r, c) - q.data[r * n + c] as f32 * qw.scales.at(r, c);
+        let mut norms: Vec<(f32, usize)> = (0..k)
+            .map(|r| ((0..n).map(|c| res_at(r, c) * res_at(r, c)).sum(), r))
+            .collect();
+        norms.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        let rank = Self::rank_for(k).min(k);
+        let mut idx: Vec<usize> = norms[..rank].iter().map(|&(_, r)| r).collect();
+        idx.sort_unstable();
+        let mut resid = MatF32::zeros(rank, n);
+        for (t, &r) in idx.iter().enumerate() {
+            for c in 0..n {
+                *resid.at_mut(t, c) = res_at(r, c);
+            }
+        }
+        let idx_all = (0..rank).collect();
+        ResqLinear { spec, qw, resid, idx, idx_all, smooth_s }
+    }
+
+    /// W4 INT leg + rank-r FP residual leg over rows of `xs`.
+    fn project(&self, xs: &MatF32, sc: &mut IntScratch, y: &mut [f32]) {
+        let n = self.qw.body.shape().1;
+        let qmax = self.spec.ia_qmax();
+        quantize_rows_into(xs, qmax, self.spec.act_gran, &mut sc.xq, &mut sc.sx);
+        self.qw.body.gemm_into(&sc.xq, &mut sc.acc);
+        for r in 0..xs.rows {
+            dequant_bias_row(
+                &sc.acc.data[r * n..(r + 1) * n],
+                sc.sx[r],
+                &self.qw.scales,
+                None,
+                &self.qw.bias,
+                &mut y[r * n..(r + 1) * n],
+            );
+        }
+        // residual leg: gather the covered activation columns into a
+        // compact [m, rank] operand, then accumulate through the same
+        // blocked gathered-rows kernel LLM.int8() deploys — but against
+        // the [rank, n] residual, not a full FP weight copy
+        let rank = self.idx.len();
+        sc.xg.rows = xs.rows;
+        sc.xg.cols = rank;
+        sc.xg.data.resize(xs.rows * rank, 0.0);
+        for i in 0..xs.rows {
+            let xr = xs.row(i);
+            for (t, &c) in self.idx.iter().enumerate() {
+                sc.xg.data[i * rank + t] = xr[c];
+            }
+        }
+        super::gemm::matmul_f32_rows_gathered_acc(
+            &sc.xg,
+            &self.idx_all,
+            &self.resid,
+            &mut y[..xs.rows * n],
+        );
+    }
+}
+
+impl QuantLinear for ResqLinear {
+    fn spec(&self) -> &EngineSpec {
+        &self.spec
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        self.qw.body.shape()
+    }
+
+    fn bytes(&self) -> usize {
+        // compact residual at 2 B/elem (fp16 stand-in) + 4 B per covered
+        // row index — the honest low-rank overhead on the W4 body
+        self.qw.bytes()
+            + self.resid.data.len() * 2
+            + self.idx.len() * 4
+            + self.smooth_s.as_ref().map_or(0, |s| s.len() * 4)
+    }
+
+    fn row_independent(&self) -> bool {
+        // the residual is static (no runtime mask); per-row activation
+        // scales decouple rows exactly like Naive
+        self.spec.act_gran == Granularity::PerRow
+    }
+
+    fn forward_into(&self, x: &MatF32, y: &mut MatF32) {
+        let n = self.qw.body.shape().1;
+        with_scratch(|sc| {
+            y.rows = x.rows;
+            y.cols = n;
+            y.data.resize(x.rows * n, 0.0);
+            if self.smooth_s.is_some() {
+                smoothed(x, &self.smooth_s, &mut sc.xs);
+                let xs = std::mem::replace(&mut sc.xs, MatF32::zeros(0, 0));
+                self.project(&xs, sc, &mut y.data);
+                sc.xs = xs;
+            } else {
+                self.project(x, sc, &mut y.data);
+            }
+        });
+    }
+
+    fn forward_row_into(&self, x: &[f32], y: &mut [f32]) {
+        let (k, n) = self.shape();
+        debug_assert_eq!(x.len(), k);
+        debug_assert_eq!(y.len(), n);
+        with_scratch(|sc| {
+            sc.stage_row(x, &self.smooth_s);
+            let xrow = std::mem::replace(&mut sc.xrow, MatF32::zeros(0, 0));
+            self.project(&xrow, sc, y);
+            sc.xrow = xrow;
+        });
+    }
+
+    fn plan(&self, cfg: &NpuConfig, m: usize, _r: usize) -> Plan {
+        // the residual rank is a static pack-time property of this
+        // operator — price it, not the caller's runtime outlier estimate
+        let (k, n) = self.shape();
+        let s = self.spec();
+        Plan::build(
+            cfg,
+            s.method,
+            m,
+            k,
+            n,
+            self.idx.len(),
+            s.ia_bits,
+            s.w_bits,
+            s.muxq.exp_factor,
+        )
     }
 }
 
@@ -1124,7 +1392,8 @@ mod tests {
         for tag in [
             "fp16-pt", "naive-pv", "naive-pt", "muxq-pv", "muxq-pt", "llmint8-pv",
             "llmint8-pt", "muxq-pt-sq", "naive-pt-sq", "muxq-pt-e1", "muxq-pt-e3",
-            "muxq-pt-sq-e3",
+            "muxq-pt-sq-e3", "naive-pv-w4a8", "muxq-pv-w4a8", "muxq-pt-sq-e3-w4a8",
+            "naive-pv-w4a6", "resq-pv", "resq-pt", "resq-pv-w8a8", "llmint8-pv-w4a8",
         ] {
             let spec = EngineSpec::parse(tag).unwrap();
             assert_eq!(spec.tag(), tag, "round trip");
@@ -1134,6 +1403,14 @@ mod tests {
         assert!(EngineSpec::parse("muxq-pg").is_err());
         assert!(EngineSpec::parse("naive-pt-e3").is_err(), "-e is muxq-only");
         assert!(EngineSpec::parse("muxq-pt-zz").is_err());
+        assert!(EngineSpec::parse("naive-pv-w4").is_err(), "bits suffix needs both widths");
+        assert!(EngineSpec::parse("naive-pv-w4a").is_err());
+        assert!(EngineSpec::parse("naive-pv-wxa8").is_err());
+        // a bits suffix spelling out the method defaults parses but
+        // re-tags canonical-short — the manifest canonicality check
+        // rides on this
+        assert_eq!(EngineSpec::parse("naive-pv-w8a8").unwrap().tag(), "naive-pv");
+        assert_eq!(EngineSpec::parse("resq-pv-w4a8").unwrap().tag(), "resq-pv");
     }
 
     #[test]
@@ -1148,7 +1425,13 @@ mod tests {
             Granularity::PerTensor,
         );
         assert_eq!(s.ia_qmax(), 31.0);
-        assert_eq!(s.tag(), "naive-pt");
+        assert_eq!(s.tag(), "naive-pt-w8a6");
+        // resq defaults to the W4 body — bare tag, no bits suffix
+        let s = EngineSpec::resq();
+        assert_eq!((s.ia_bits, s.w_bits), (8, 4));
+        assert_eq!(s.w_qmax(), 7.0);
+        assert_eq!(s.tag(), "resq-pv");
+        assert_eq!(EngineSpec::naive().with_bits(8, 4).tag(), "naive-pv-w4a8");
     }
 
     #[test]
@@ -1166,6 +1449,62 @@ mod tests {
             let want = quant_matmul(&x, &w, 127.0, ag, wg);
             assert_eq!(y.data, want.data, "{ag:?}/{wg:?}");
         }
+    }
+
+    #[test]
+    fn w4_operator_matches_manual_nibble_pipeline_bitwise() {
+        // the W4A8 naive operator must equal an independently written
+        // W4 pipeline bit for bit: quantize W on the 4-bit grid, i32
+        // reference contraction on the WIDENED values, shared dequant
+        let x = mat(5, 40, 21, &[], 1.0);
+        let w = mat(40, 24, 22, &[], 1.0);
+        let bias: Vec<f32> = (0..24).map(|i| i as f32 * 0.05).collect();
+        let op = EngineSpec::naive().with_bits(8, 4).pack(&w, &bias);
+        let y = op.forward(&x);
+        // oracle: same scale math as the operator, naive i32 loops
+        let sw = crate::quant::absmax::Scales::compute(&w, 7.0, Granularity::PerCol);
+        let qw = crate::quant::absmax::quantize_i8(&w, &sw, 7.0);
+        let mut want = MatF32::zeros(5, 24);
+        for r in 0..5 {
+            let amax = x.row(r).iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let sx = amax.max(crate::quant::absmax::EPS) / 127.0;
+            let qx: Vec<i8> =
+                x.row(r).iter().map(|v| rint(v / sx).clamp(-127.0, 127.0) as i8).collect();
+            for j in 0..24 {
+                let acc: i32 =
+                    (0..40).map(|c| qx[c] as i32 * qw.data[c * 24 + j] as i32).sum();
+                *want.at_mut(r, j) = acc as f32 * (sx * sw.at(0, j)) + bias[j];
+            }
+        }
+        assert_eq!(y.data, want.data);
+        // and the nibble body really stores half the panel bytes of W8
+        let op8 = EngineSpec::naive().pack(&w, &bias);
+        assert!(op.bytes() < op8.bytes());
+    }
+
+    #[test]
+    fn resq_operator_recovers_w4_error_with_low_rank_residual() {
+        // ResQ = W4 body + rank-r FP residual on the worst rows. On a
+        // weight matrix with a few large rows (where the per-col 4-bit
+        // grid hurts most), resq must beat plain naive-W4A8 against FP,
+        // and the covered rows' residual must reconstruct W exactly
+        let x = mat(12, 64, 23, &[], 1.0);
+        let mut w = mat(64, 16, 24, &[], 1.0);
+        for &r in &[5usize, 33] {
+            for v in w.row_mut(r) {
+                *v *= 30.0;
+            }
+        }
+        let exact = matmul_f32(&x, &w);
+        let bias = vec![0.0f32; 16];
+        let w4 = EngineSpec::naive().with_bits(8, 4).pack(&w, &bias).forward(&x);
+        let rq = EngineSpec::resq().pack(&w, &bias).forward(&x);
+        assert!(
+            rq.mean_abs_diff(&exact) < w4.mean_abs_diff(&exact),
+            "resq {} vs naive-w4 {}",
+            rq.mean_abs_diff(&exact),
+            w4.mean_abs_diff(&exact)
+        );
     }
 
     #[test]
@@ -1218,6 +1557,10 @@ mod tests {
             EngineSpec::muxq(),
             EngineSpec::llmint8(),
             EngineSpec::muxq().with_smooth(0.5),
+            EngineSpec::naive().with_bits(8, 4),
+            EngineSpec::muxq().with_bits(8, 4),
+            EngineSpec::resq(),
+            EngineSpec::resq().with_smooth(0.5),
         ] {
             let op = spec.pack(&w, &bias);
             let batch = op.forward(&x);
@@ -1250,6 +1593,9 @@ mod tests {
             EngineSpec::naive(),
             EngineSpec::llmint8(),
             EngineSpec::fp16(),
+            EngineSpec::muxq().with_bits(8, 4),
+            EngineSpec::naive().with_bits(8, 4),
+            EngineSpec::resq(),
         ] {
             let op = spec.pack(&w, &bias);
             let mut grouped = MatF32::zeros(0, 0);
@@ -1339,10 +1685,17 @@ mod tests {
         let naive = EngineSpec::naive().pack(&w, &bias).bytes();
         let muxq = EngineSpec::muxq().pack(&w, &bias).bytes();
         let mixed = EngineSpec::llmint8().pack(&w, &bias).bytes();
+        let naive4 = EngineSpec::naive().with_bits(8, 4).pack(&w, &bias).bytes();
+        let resq = EngineSpec::resq().pack(&w, &bias).bytes();
         assert!(naive < fp, "INT8 beats f32 storage");
         assert_eq!(naive, muxq, "MUXQ stores exactly one packed W");
         assert!(mixed > naive, "llm.int8() pays for its resident FP copy");
         assert!(mixed < fp, "but the int+fp16 pair still beats pure f32");
+        // W4: nibble panels halve the packed-panel bytes (scales + bias
+        // overhead is identical, so total bytes shrink by the panel half)
+        assert!(naive4 < naive, "nibble panels beat byte panels");
+        assert!(resq > naive4, "resq pays for its rank-r residual");
+        assert!(resq < naive, "but W4 + compact residual still beats W8");
     }
 
     #[test]

@@ -23,6 +23,12 @@ pub enum Method {
     Naive,
     Muxq,
     LlmInt8,
+    /// ResQ-style W4 + rank-r FP residual (arXiv:2412.14363): the weight
+    /// body is nibble-packed INT4, accuracy is recovered by a low-rank
+    /// FP correction on the rows where the quantization error
+    /// concentrates. Activations quantize exactly like Naive (plain
+    /// per-row INT8) — the residual is a *weight*-side leg.
+    Resq,
 }
 
 impl Method {
@@ -32,6 +38,7 @@ impl Method {
             "naive" => Method::Naive,
             "muxq" => Method::Muxq,
             "llmint8" | "llm.int8" | "llm.int8()" => Method::LlmInt8,
+            "resq" => Method::Resq,
             _ => bail!("unknown method {s:?}"),
         })
     }
@@ -43,6 +50,7 @@ impl Method {
             Method::Naive => "naive",
             Method::Muxq => "muxq",
             Method::LlmInt8 => "llm.int8()",
+            Method::Resq => "resq",
         }
     }
 
@@ -55,6 +63,7 @@ impl Method {
             Method::Naive => "naive",
             Method::Muxq => "muxq",
             Method::LlmInt8 => "llmint8",
+            Method::Resq => "resq",
         }
     }
 }
@@ -106,6 +115,9 @@ impl QuantSpec {
             Method::Naive => fq_naive(x, self.ia_qmax(), self.act_gran),
             Method::Muxq => fq_muxq(x, self.ia_qmax(), self.act_gran, &self.muxq),
             Method::LlmInt8 => fq_llmint8_act(x, self.ia_qmax(), self.act_gran, self.muxq.theta),
+            // ResQ activations are plain INT8 — the method's novelty is
+            // entirely on the weight side (W4 body + FP residual)
+            Method::Resq => fq_naive(x, self.ia_qmax(), self.act_gran),
         }
     }
 }
@@ -136,8 +148,9 @@ mod tests {
         assert_eq!(Method::parse("llm.int8()").unwrap(), Method::LlmInt8);
         assert_eq!(Method::parse("llmint8").unwrap(), Method::LlmInt8);
         assert!(Method::parse("nope").is_err());
+        assert_eq!(Method::parse("resq").unwrap(), Method::Resq);
         // the tag spelling always round-trips through parse
-        for m in [Method::Fp16, Method::Naive, Method::Muxq, Method::LlmInt8] {
+        for m in [Method::Fp16, Method::Naive, Method::Muxq, Method::LlmInt8, Method::Resq] {
             assert_eq!(Method::parse(m.tag_name()).unwrap(), m);
         }
     }
@@ -183,7 +196,9 @@ mod tests {
         )
         .unwrap();
         let exact = matmul_f32(&x, &w);
-        for method in [Method::Fp16, Method::Naive, Method::Muxq, Method::LlmInt8] {
+        for method in
+            [Method::Fp16, Method::Naive, Method::Muxq, Method::LlmInt8, Method::Resq]
+        {
             let y = QuantSpec::new(method, "per-vector", 8, 8).unwrap().engine().matmul(&x, &w);
             assert_eq!((y.rows, y.cols), (16, 8));
             assert!(y.mean_abs_diff(&exact) < 0.2, "{method:?}");

@@ -7,8 +7,10 @@
 //! * [`matrix`] — dense f32/i8/i32 matrices + IEEE rint
 //! * [`absmax`] — symmetric abs-max quantization at all granularities
 //! * [`gemm`] — blocked f32 and i8→i32 GEMMs, quantize-compute-dequant
-//! * [`packed`] — packed-weight parallel INT8 engine (the i8 hot path:
-//!   i16 pair-accumulation microkernel, shape-aware MR×NR tiles)
+//! * [`packed`] — packed-weight parallel INT engine (the i8 hot path:
+//!   i16 pair-accumulation microkernel, shape-aware MR×NR tiles; plus
+//!   the nibble-packed W4 panel format `PackedMatI4` with
+//!   unpack-in-register microkernels, DESIGN.md §4a)
 //! * [`simd`] — per-arch SIMD microkernels (AVX2 `pmaddwd` / NEON
 //!   `sdot`-`smlal`) + the one-time runtime dispatcher
 //!   (`MUXQ_FORCE_KERNEL` override) the packed engine routes through
@@ -37,6 +39,9 @@
 //! | `NaiveLinear` (`naive-*`) | per-row/tensor abs-max quantize → one INT GEMM | [`packed::matmul_i8_packed_into`] |
 //! | `MuxqLinear` (`muxq-*`) | fused decompose+quantize → Body GEMM + skinny Aux | Body: [`packed::matmul_i8_packed_into`]; Aux: [`packed::matmul_i8_rows_subset_into`] reading outlier rows out of the ONE packed W |
 //! | `LlmInt8Linear` (`llmint8-*`) | masked quantize → INT GEMM + resident-FP outlier leg | normal channels [`packed::matmul_i8_packed_into`]; outlier columns [`gemm::matmul_f32_rows_gathered_acc`] (blocked gathered-rows accumulation) over the operator's resident FP copy |
+//! | `NaiveLinear` (`naive-*-w4a8`) | same as `naive-*`, nibble-packed W4 body | [`packed::matmul_i8w4_packed_into`] — unpack-in-register nibble microkernels, half the weight bytes streamed per token |
+//! | `MuxqLinear` (`muxq-*-w4a8`) | same as `muxq-*`, W4 body AND W4 aux against the ONE nibble-packed W | Body: [`packed::matmul_i8w4_packed_into`]; Aux: [`packed::matmul_i8w4_rows_subset_into`] |
+//! | `ResqLinear` (`resq-*`) | W4 body GEMM + static rank-r FP residual leg | body [`packed::matmul_i8w4_packed_into`]; residual [`gemm::matmul_f32_rows_gathered_acc`] over a compact `[rank, n]` residual (no resident full FP copy) |
 //! | any, smoothed (`*-sq`) | X/s pre-divide, s⊙W folded in at pack time | same kernels as the unsmoothed impl — composition is a pre-transform, not a route |
 //!
 //! Inside the packed engine every INT contraction above (dense tile,
@@ -79,4 +84,4 @@ pub use linear::{EngineSpec, QuantLinear};
 pub use matrix::{MatF32, MatI32, MatI8};
 pub use method::{Method, QuantSpec};
 pub use muxq::MuxqParams;
-pub use packed::{PackedMatI8, ParallelGemm};
+pub use packed::{PackedMatI4, PackedMatI8, ParallelGemm};

@@ -31,6 +31,17 @@
 //!   every reachable input. (The only unrepresentable pair sum,
 //!   (-128·-128)+(-128·-128) = 32768, requires -128 on BOTH sides of
 //!   both products.)
+//! * [`PackedMatI4`] — the same K-major panel geometry with TWO signed
+//!   4-bit weights per byte (even k in the low nibble, odd k in the
+//!   high nibble — the k-pair alignment the i8 layout already enforces
+//!   IS the nibble alignment). Half the weight bytes of
+//!   [`PackedMatI8`]: the decode path is bytes-dominated (npusim), so
+//!   nibble panels are a direct ~2× weight-traffic cut. The W4
+//!   microkernels ([`matmul_i8w4_packed_into`] and friends) unpack
+//!   nibbles in-register; |w| ≤ 8 bounds the i16 pair sum by 2·128·8 =
+//!   2048, so the W4 pair kernel is exact for EVERY input — no −128
+//!   scan, no wide-i32 fallback. Pack-time saturation clamps to
+//!   [-8, 7] and records the event ([`PackedMatI4::saturated`]).
 //! * A **shape-aware tile selector** ([`TileConfig`]): the register tile
 //!   MR×NR is chosen from (M, N, K) and an L1 size hint instead of the
 //!   old hard-coded 4×4 — NR is fixed at pack time (it is baked into the
@@ -87,7 +98,8 @@ thread_local! {
     static PACK_COUNT: Cell<usize> = const { Cell::new(0) };
 }
 
-/// Number of [`PackedMatI8::pack`] calls made *by this thread*. Test
+/// Number of [`PackedMatI8::pack`] / [`PackedMatI4::pack`] calls made
+/// *by this thread*. Test
 /// hook: asserts weights are packed once at construction and never on
 /// the per-call projection path. Thread-local so concurrently running
 /// tests cannot perturb each other's counts.
@@ -267,6 +279,29 @@ impl Kernel {
             }
         }
     }
+
+    /// Route for the W4 contractions. The scalar W4 pair kernel is exact
+    /// for every input (|w| ≤ 8 bounds the i16 pair sum by 2048), so
+    /// there is no wide fallback: `PairI16` and `WideI32` both select
+    /// the one scalar kernel, and `Auto` only chooses between it and
+    /// the host SIMD kernel.
+    fn route_w4(self) -> Route {
+        match self {
+            Kernel::Auto => match simd::dispatch() {
+                DispatchKernel::Avx2 | DispatchKernel::Neon => Route::Simd,
+                DispatchKernel::Scalar | DispatchKernel::Pair => Route::Pair,
+            },
+            Kernel::PairI16 | Kernel::WideI32 => Route::Pair,
+            Kernel::Simd => {
+                assert!(
+                    simd::host_simd().is_some(),
+                    "Kernel::Simd requested but this host has no SIMD kernel \
+                     (need x86-64 AVX2 or aarch64 NEON)"
+                );
+                Route::Simd
+            }
+        }
+    }
 }
 
 /// Weight matrix pre-packed into K-major column panels.
@@ -355,6 +390,133 @@ impl PackedMatI8 {
     #[inline(always)]
     fn panel(&self, p: usize) -> &[i8] {
         &self.data[p * self.k_pad * self.nr..(p + 1) * self.k_pad * self.nr]
+    }
+}
+
+/// Clamp an i8 value into the signed 4-bit range, recording saturation.
+#[inline(always)]
+fn clamp_i4(v: i8, saturated: &mut bool) -> i8 {
+    if v < -8 {
+        *saturated = true;
+        -8
+    } else if v > 7 {
+        *saturated = true;
+        7
+    } else {
+        v
+    }
+}
+
+/// Weight matrix pre-packed into K-major NIBBLE panels: two signed
+/// 4-bit weights per byte, half the bytes of [`PackedMatI8`] — the
+/// weight-traffic lever for the bytes-dominated decode path
+/// (DESIGN.md §4a).
+///
+/// Layout: `ceil(cols / nr)` panels of `(k_pad / 2) · nr` bytes each,
+/// `k_pad` rounding K up to even exactly like the i8 layout — the
+/// k-pair alignment the pair microkernels already need IS the nibble
+/// alignment. Byte `t·nr + j` of a panel holds the k-pair
+/// `(2t, 2t+1)` of the panel's column `j`: the EVEN k row in the low
+/// nibble, the ODD k row in the high nibble, both two's-complement in
+/// [-8, 7]. Odd K leaves the high nibble of the last byte row zero
+/// (the same zero pad the i8 layout gives a full row), so no K-tail
+/// branch is needed when streaming whole pairs.
+///
+/// Packing clamps out-of-range source values (saturating to [-8, 7])
+/// and records the event in [`PackedMatI4::saturated`] — symmetric
+/// 4-bit quantization emits [-7, 7] and never trips it; the scan is a
+/// deployment-time sanity signal, NOT a kernel-correctness gate (the
+/// W4 kernels are exact for the full [-8, 7] range including -8).
+#[derive(Debug, Clone)]
+pub struct PackedMatI4 {
+    /// K — the inner (contraction) dimension (logical, unpadded).
+    pub rows: usize,
+    /// N — the output dimension (logical, unpadded).
+    pub cols: usize,
+    nr: usize,
+    k_pad: usize,
+    saturated: bool,
+    data: Vec<u8>,
+}
+
+impl PackedMatI4 {
+    /// One-time nibble packing with the tile-selected panel width. The
+    /// source matrix carries i4-range values widened to i8 (what the
+    /// 4-bit quantizer emits); anything outside [-8, 7] saturates.
+    pub fn pack(b: &MatI8) -> PackedMatI4 {
+        Self::pack_with(b, TileConfig::nr_for(b.rows, b.cols))
+    }
+
+    /// Pack with an explicit panel width (bench/test hook; `nr` must be
+    /// 4 or 8).
+    pub fn pack_with(b: &MatI8, nr: usize) -> PackedMatI4 {
+        assert!(nr == 4 || nr == 8, "unsupported panel width {nr}");
+        PACK_COUNT.with(|c| c.set(c.get() + 1));
+        let (k, n) = (b.rows, b.cols);
+        let k_pad = k + (k & 1);
+        let panels = n.div_ceil(nr);
+        let mut data = vec![0u8; panels * (k_pad / 2) * nr];
+        let mut saturated = false;
+        for p in 0..panels {
+            let j0 = p * nr;
+            let jw = nr.min(n - j0);
+            let base = p * (k_pad / 2) * nr;
+            for t in 0..k_pad / 2 {
+                for j in 0..jw {
+                    let lo = clamp_i4(b.data[2 * t * n + j0 + j], &mut saturated);
+                    let hi = if 2 * t + 1 < k {
+                        clamp_i4(b.data[(2 * t + 1) * n + j0 + j], &mut saturated)
+                    } else {
+                        0
+                    };
+                    data[base + t * nr + j] = (lo as u8 & 0x0f) | ((hi as u8) << 4);
+                }
+            }
+        }
+        PackedMatI4 { rows: k, cols: n, nr, k_pad, saturated, data }
+    }
+
+    /// Panel width this matrix was packed with.
+    pub fn nr(&self) -> usize {
+        self.nr
+    }
+
+    /// Whether any source value fell outside [-8, 7] and was clamped.
+    pub fn saturated(&self) -> bool {
+        self.saturated
+    }
+
+    /// Number of column panels.
+    pub fn panels(&self) -> usize {
+        self.cols.div_ceil(self.nr)
+    }
+
+    /// Actual storage bytes including panel and K-pair padding — the
+    /// honest number for the ~2× weight-traffic claim (compare with
+    /// [`PackedMatI8::padded_bytes`] of the same logical matrix).
+    pub fn padded_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Logical (unpadded) element count of the original matrix.
+    pub fn logical_len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Decode one logical element (test/oracle hook; the kernels unpack
+    /// nibbles in-register, never through this).
+    pub fn get(&self, k: usize, j: usize) -> i8 {
+        debug_assert!(k < self.rows && j < self.cols);
+        let p = j / self.nr;
+        let b = self.data
+            [p * (self.k_pad / 2) * self.nr + (k / 2) * self.nr + (j % self.nr)];
+        nib(b, k & 1 == 1)
+    }
+
+    #[inline(always)]
+    fn panel(&self, p: usize) -> &[u8] {
+        let stride = (self.k_pad / 2) * self.nr;
+        &self.data[p * stride..(p + 1) * stride]
     }
 }
 
@@ -498,6 +660,88 @@ pub fn matmul_i8_gemv_into(a: &MatI8, bp: &PackedMatI8, c: &mut MatI32, kernel: 
     c.cols = n;
     c.data.resize(m * n, 0);
     gemv_dispatch(a, bp, None, route, &mut c.data);
+}
+
+/// C = A_i8 @ B4_packed against the nibble panels — the W4A8 twin of
+/// [`matmul_i8_packed_into`]: auto kernel/tile selection, skinny shapes
+/// (M ≤ [`TileConfig::gemv_max_m`], the decode regime) take the GEMV
+/// route. Bit-exact vs widening the i4 weights to i8 and running the
+/// i8 engine, at half the weight bytes streamed.
+pub fn matmul_i8w4_packed_into(a: &MatI8, bp: &PackedMatI4, c: &mut MatI32, cfg: ParallelGemm) {
+    if TileConfig::use_gemv(a.rows) {
+        matmul_i8w4_gemv_into(a, bp, c, Kernel::Auto);
+        return;
+    }
+    matmul_i8w4_packed_kernel_into(a, bp, c, cfg, Kernel::Auto, TileConfig::mr_for(a.rows));
+}
+
+/// Full-control W4 variant: explicit [`Kernel`] and register tile rows
+/// `mr` ∈ {4, 8} (the bit-exactness proptests drive every combination
+/// through this; `PairI16`/`WideI32` both mean "the scalar W4 kernel",
+/// which needs no wide fallback — the pair sum is bounded by 2048).
+pub fn matmul_i8w4_packed_kernel_into(
+    a: &MatI8,
+    bp: &PackedMatI4,
+    c: &mut MatI32,
+    cfg: ParallelGemm,
+    kernel: Kernel,
+    mr: usize,
+) {
+    assert_eq!(a.cols, bp.rows, "inner dims {}x{}", a.cols, bp.rows);
+    assert!(mr == 4 || mr == 8, "unsupported register tile rows {mr}");
+    let (m, n) = (a.rows, bp.cols);
+    let route = kernel.route_w4();
+    c.rows = m;
+    c.cols = n;
+    c.data.resize(m * n, 0);
+    run_row_parallel(m, n, a.cols, cfg, &mut c.data, &|row0, row1, chunk| {
+        gemm_rows_w4(a, bp, None, route, mr, row0, row1, chunk);
+    });
+}
+
+/// W4 rows-subset GEMM: `C = A_compact @ B4[idx, :]` read straight out
+/// of the nibble panels — MUXQ's Aux GEMM against a W4 body, so the
+/// muxq-w4a8 operator runs body and aux legs off ONE packed weight.
+/// Each indexed k row is one nibble of byte row `idx[t] / 2` (parity
+/// selects the half); the index list is walked in pairs for the i16
+/// pair math exactly like the i8 path.
+pub fn matmul_i8w4_rows_subset_into(
+    a: &MatI8,
+    bp: &PackedMatI4,
+    idx: &[usize],
+    c: &mut MatI32,
+    cfg: ParallelGemm,
+) {
+    assert_eq!(a.cols, idx.len(), "compact A width vs index list");
+    debug_assert!(idx.iter().all(|&k| k < bp.rows));
+    let (m, n) = (a.rows, bp.cols);
+    let route = Kernel::Auto.route_w4();
+    c.rows = m;
+    c.cols = n;
+    c.data.resize(m * n, 0);
+    if TileConfig::use_gemv(m) {
+        gemv_dispatch_w4(a, bp, Some(idx), route, &mut c.data);
+        return;
+    }
+    let mr = TileConfig::mr_for(m);
+    run_row_parallel(m, n, idx.len(), cfg, &mut c.data, &|row0, row1, chunk| {
+        gemm_rows_w4(a, bp, Some(idx), route, mr, row0, row1, chunk);
+    });
+}
+
+/// Skinny-M W4 GEMV: the decode projection against nibble panels — the
+/// call where the 2× byte cut matters most, since an M=1 token streams
+/// the entire weight once and npusim prices decode as bytes-bound. A
+/// rows stream in place, no interleave buffer, no threads, same as the
+/// i8 GEMV.
+pub fn matmul_i8w4_gemv_into(a: &MatI8, bp: &PackedMatI4, c: &mut MatI32, kernel: Kernel) {
+    assert_eq!(a.cols, bp.rows, "inner dims {}x{}", a.cols, bp.rows);
+    let (m, n) = (a.rows, bp.cols);
+    let route = kernel.route_w4();
+    c.rows = m;
+    c.cols = n;
+    c.data.resize(m * n, 0);
+    gemv_dispatch_w4(a, bp, None, route, &mut c.data);
 }
 
 /// Split output rows into near-equal chunks and run `body(row0, row1,
@@ -644,6 +888,83 @@ fn tiles<const M: usize, const N: usize>(
     i
 }
 
+/// W4 twin of [`gemm_rows`]: same 8 → 4 → 1 register-tile cascade, one
+/// driver for dense and rows-subset contractions. No A-interleave
+/// buffer on any route — the packed byte already holds the whole
+/// k-pair, so the scalar W4 kernel reads A rows in place just like the
+/// SIMD kernels do.
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows_w4(
+    a: &MatI8,
+    bp: &PackedMatI4,
+    idx: Option<&[usize]>,
+    route: Route,
+    mr: usize,
+    row0: usize,
+    row1: usize,
+    c_rows: &mut [i32],
+) {
+    debug_assert_eq!(c_rows.len(), (row1 - row0) * bp.cols);
+    let mut i = row0;
+    if mr == 8 {
+        i = if bp.nr == 8 {
+            tiles_w4::<8, 8>(a, bp, idx, route, i, row1, row0, c_rows)
+        } else {
+            tiles_w4::<8, 4>(a, bp, idx, route, i, row1, row0, c_rows)
+        };
+    }
+    i = if bp.nr == 8 {
+        tiles_w4::<4, 8>(a, bp, idx, route, i, row1, row0, c_rows)
+    } else {
+        tiles_w4::<4, 4>(a, bp, idx, route, i, row1, row0, c_rows)
+    };
+    if bp.nr == 8 {
+        tiles_w4::<1, 8>(a, bp, idx, route, i, row1, row0, c_rows);
+    } else {
+        tiles_w4::<1, 4>(a, bp, idx, route, i, row1, row0, c_rows);
+    }
+}
+
+/// Process full `M`-row W4 tiles from `start`; returns the first
+/// unprocessed row. `Route::Simd` runs the host's nibble-expand SIMD
+/// kernels; every other route runs the scalar W4 pair kernel (exact for
+/// all inputs, so `Route::Wide` never exists for W4).
+#[allow(clippy::too_many_arguments)]
+fn tiles_w4<const M: usize, const N: usize>(
+    a: &MatI8,
+    bp: &PackedMatI4,
+    idx: Option<&[usize]>,
+    route: Route,
+    start: usize,
+    row1: usize,
+    row0: usize,
+    c_rows: &mut [i32],
+) -> usize {
+    debug_assert_eq!(N, bp.nr);
+    let (k, n) = (a.cols, bp.cols);
+    let mut i = start;
+    while i + M <= row1 {
+        for p in 0..bp.panels() {
+            let j0 = p * N;
+            let jw = N.min(n - j0);
+            let panel = bp.panel(p);
+            let mut acc = [[0i32; N]; M];
+            let rows: [&[i8]; M] = std::array::from_fn(|di| a.row(i + di));
+            match (idx, route) {
+                (None, Route::Simd) => simd::micro_dense_w4::<M, N>(k, &rows, panel, &mut acc),
+                (Some(ix), Route::Simd) => simd::micro_idx_w4::<M, N>(ix, &rows, panel, &mut acc),
+                (None, _) => micro_pair_w4::<M, N>(k, &rows, panel, &mut acc),
+                (Some(ix), _) => micro_idx_w4::<M, N>(ix, &rows, panel, &mut acc),
+            }
+            for (di, accr) in acc.iter().enumerate() {
+                c_rows[(i - row0 + di) * n + j0..][..jw].copy_from_slice(&accr[..jw]);
+            }
+        }
+        i += M;
+    }
+    i
+}
+
 /// GEMV driver: panel-outer / row-inner, so one B panel stays hot in L1
 /// across the (few) A rows; each output element is written exactly once.
 /// Monomorphizes on the packed panel width.
@@ -737,6 +1058,55 @@ fn gemv_pair_idx<const N: usize>(arow: &[i8], idx: &[usize], panel: &[i8], acc: 
         let b = &panel[idx[t] * N..idx[t] * N + N];
         for j in 0..N {
             acc[j] += av * b[j] as i32;
+        }
+    }
+}
+
+/// W4 GEMV driver: same panel-outer / row-inner walk as
+/// [`gemv_dispatch`], against nibble panels. The GEMV kernels ARE the
+/// M=1 instances of the W4 microkernels — the A row streams in place on
+/// every route, so no separate pair/idx GEMV bodies are needed.
+fn gemv_dispatch_w4(
+    a: &MatI8,
+    bp: &PackedMatI4,
+    idx: Option<&[usize]>,
+    route: Route,
+    c: &mut [i32],
+) {
+    if bp.nr == 8 {
+        gemv_panels_w4::<8>(a, bp, idx, route, c);
+    } else {
+        gemv_panels_w4::<4>(a, bp, idx, route, c);
+    }
+}
+
+fn gemv_panels_w4<const N: usize>(
+    a: &MatI8,
+    bp: &PackedMatI4,
+    idx: Option<&[usize]>,
+    route: Route,
+    c: &mut [i32],
+) {
+    debug_assert_eq!(N, bp.nr);
+    let n = bp.cols;
+    for p in 0..bp.panels() {
+        let j0 = p * N;
+        let jw = N.min(n - j0);
+        let panel = bp.panel(p);
+        for i in 0..a.rows {
+            let arow = a.row(i);
+            let mut acc = [[0i32; N]; 1];
+            match (idx, route) {
+                (None, Route::Simd) => {
+                    simd::micro_dense_w4::<1, N>(arow.len(), &[arow], panel, &mut acc)
+                }
+                (Some(ix), Route::Simd) => {
+                    simd::micro_idx_w4::<1, N>(ix, &[arow], panel, &mut acc)
+                }
+                (None, _) => micro_pair_w4::<1, N>(arow.len(), &[arow], panel, &mut acc),
+                (Some(ix), _) => micro_idx_w4::<1, N>(ix, &[arow], panel, &mut acc),
+            }
+            c[i * n + j0..][..jw].copy_from_slice(&acc[0][..jw]);
         }
     }
 }
@@ -865,6 +1235,114 @@ pub(crate) fn micro_wide_idx<const M: usize, const N: usize>(
             let av = a[i][t] as i32;
             for j in 0..N {
                 acc[i][j] += av * b[j] as i32;
+            }
+        }
+    }
+}
+
+/// Sign-extend the LOW nibble of a packed W4 byte (the even-k weight):
+/// shift the nibble to the top of the byte, then arithmetic-shift back.
+#[inline(always)]
+pub(crate) fn nib_lo(b: u8) -> i8 {
+    ((b << 4) as i8) >> 4
+}
+
+/// Sign-extend the HIGH nibble of a packed W4 byte (the odd-k weight).
+#[inline(always)]
+pub(crate) fn nib_hi(b: u8) -> i8 {
+    (b as i8) >> 4
+}
+
+/// Nibble of packed byte `b` for k-row parity `odd`.
+#[inline(always)]
+pub(crate) fn nib(b: u8, odd: bool) -> i8 {
+    if odd {
+        nib_hi(b)
+    } else {
+        nib_lo(b)
+    }
+}
+
+/// Scalar W4 dense microkernel: one packed byte per (k-pair, column),
+/// both nibbles unpacked in-register and retired against the adjacent
+/// A pair in one i16 pair sum.
+///
+/// No-overflow proof (stronger than the i8 kernel's): |w| ≤ 8 and
+/// |a| ≤ 128 bound each i16 product by 1024 and the pair sum by 2048 ≪
+/// `i16::MAX` — exact for EVERY input including the -8 nibble corner
+/// and a -128 activation, so W4 needs no pack-time -128 scan and no
+/// wide-i32 fallback route. A rows are read in place (the byte already
+/// holds the whole k-pair, so there is nothing to interleave); odd K
+/// takes the low nibble of the final byte row (its high nibble is the
+/// zero pad).
+#[inline(always)]
+pub(crate) fn micro_pair_w4<const M: usize, const N: usize>(
+    k: usize,
+    a: &[&[i8]; M],
+    panel: &[u8],
+    acc: &mut [[i32; N]; M],
+) {
+    debug_assert!(panel.len() >= k.div_ceil(2) * N);
+    for t in 0..k / 2 {
+        let bb = &panel[t * N..t * N + N];
+        for i in 0..M {
+            let a_lo = a[i][2 * t] as i16;
+            let a_hi = a[i][2 * t + 1] as i16;
+            for j in 0..N {
+                let p = a_lo * nib_lo(bb[j]) as i16;
+                let q = a_hi * nib_hi(bb[j]) as i16;
+                acc[i][j] += (p + q) as i32;
+            }
+        }
+    }
+    if k % 2 == 1 {
+        let bb = &panel[(k / 2) * N..(k / 2) * N + N];
+        for i in 0..M {
+            let av = a[i][k - 1] as i32;
+            for j in 0..N {
+                acc[i][j] += av * nib_lo(bb[j]) as i32;
+            }
+        }
+    }
+}
+
+/// Index-mapped W4 microkernel (Aux GEMM against a nibble body): walks
+/// `idx` in pairs — each indexed k row is the `idx[t] & 1` nibble of
+/// byte row `idx[t] / 2`, read from arbitrary panel offsets. The i16
+/// pair sum stays bounded by 2048, so odd-length lists just take a
+/// single-nibble tail step (no widening needed).
+#[inline(always)]
+pub(crate) fn micro_idx_w4<const M: usize, const N: usize>(
+    idx: &[usize],
+    a: &[&[i8]; M],
+    panel: &[u8],
+    acc: &mut [[i32; N]; M],
+) {
+    let pairs = idx.len() / 2;
+    for t in 0..pairs {
+        let (k0, k1) = (idx[2 * t], idx[2 * t + 1]);
+        let b0 = &panel[(k0 >> 1) * N..(k0 >> 1) * N + N];
+        let b1 = &panel[(k1 >> 1) * N..(k1 >> 1) * N + N];
+        let (o0, o1) = (k0 & 1 == 1, k1 & 1 == 1);
+        for i in 0..M {
+            let a_lo = a[i][2 * t] as i16;
+            let a_hi = a[i][2 * t + 1] as i16;
+            for j in 0..N {
+                let p = a_lo * nib(b0[j], o0) as i16;
+                let q = a_hi * nib(b1[j], o1) as i16;
+                acc[i][j] += (p + q) as i32;
+            }
+        }
+    }
+    if idx.len() % 2 == 1 {
+        let t = idx.len() - 1;
+        let krow = idx[t];
+        let b = &panel[(krow >> 1) * N..(krow >> 1) * N + N];
+        let odd = krow & 1 == 1;
+        for i in 0..M {
+            let av = a[i][t] as i32;
+            for j in 0..N {
+                acc[i][j] += av * nib(b[j], odd) as i32;
             }
         }
     }
@@ -1238,5 +1716,260 @@ mod tests {
         let _ = PackedMatI8::pack(&rand_i8(2, 2, 7));
         let _ = PackedMatI8::pack(&rand_i8(2, 2, 8));
         assert_eq!(pack_count(), before + 2);
+    }
+
+    // ------------------------------------------------------- W4 (nibble)
+
+    /// Random i4-range weights, full signed span [-8, 7] incl. -8.
+    fn rand_i4(rows: usize, cols: usize, seed: u64) -> MatI8 {
+        let mut rng = SplitMix64::new(seed);
+        let mut m = MatI8::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = (rng.next_below(16) as i32 - 8) as i8;
+        }
+        m
+    }
+
+    #[test]
+    fn pack4_layout_golden() {
+        // 4x3, nr 4: two byte rows per panel, each byte = (even k lo
+        // nibble, odd k hi nibble); col pad bytes zero
+        let mut b = MatI8::zeros(4, 3);
+        b.data.copy_from_slice(&[1, -2, 3, -8, 5, -6, 7, 0, -1, 2, -3, 4]);
+        let p = PackedMatI4::pack_with(&b, 4);
+        assert_eq!(p.panels(), 1);
+        assert_eq!(p.padded_bytes(), 2 * 4); // (k_pad/2)·nr = 2·4
+        assert_eq!(p.logical_len(), 12);
+        assert!(!p.saturated());
+        // byte row 0 pairs rows 0/1: (1,-8) (−2,5) (3,−6) (pad 0,0)
+        // byte row 1 pairs rows 2/3: (7,2) (0,−3) (−1,4)
+        let lo = |v: i8| (v as u8) & 0x0f;
+        let hi = |v: i8| ((v as u8) & 0x0f) << 4;
+        assert_eq!(
+            p.panel(0),
+            &[
+                lo(1) | hi(-8),
+                lo(-2) | hi(5),
+                lo(3) | hi(-6),
+                0,
+                lo(7) | hi(2),
+                lo(0) | hi(-3),
+                lo(-1) | hi(4),
+                0
+            ]
+        );
+        // every logical element round-trips through get(), -8 included
+        for k in 0..4 {
+            for j in 0..3 {
+                assert_eq!(p.get(k, j), b.data[k * 3 + j], "({k},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn pack4_odd_k_zero_pads_high_nibble() {
+        let mut b = MatI8::zeros(3, 2);
+        b.data.copy_from_slice(&[-8, 7, 1, -1, 5, -5]);
+        let p = PackedMatI4::pack_with(&b, 4);
+        assert_eq!(p.padded_bytes(), 2 * 4);
+        // last byte row pairs row 2 with the zero pad row
+        assert_eq!(nib_lo(p.panel(0)[4]), 5);
+        assert_eq!(nib_hi(p.panel(0)[4]), 0);
+        assert_eq!(p.get(2, 1), -5);
+    }
+
+    #[test]
+    fn pack4_saturates_out_of_range_and_records_it() {
+        let mut b = MatI8::zeros(2, 2);
+        b.data.copy_from_slice(&[127, -128, 8, -9]);
+        let p = PackedMatI4::pack(&b);
+        assert!(p.saturated());
+        assert_eq!(p.get(0, 0), 7);
+        assert_eq!(p.get(0, 1), -8);
+        assert_eq!(p.get(1, 0), 7);
+        assert_eq!(p.get(1, 1), -8);
+        // in-range packs never trip the flag
+        assert!(!PackedMatI4::pack(&rand_i4(5, 5, 1)).saturated());
+    }
+
+    #[test]
+    fn w4_matches_widened_oracle_ragged_shapes() {
+        // the i8-widened oracle: the SAME i4-range weight matrix through
+        // the proven i8 engine — W4 must be bit-identical at half the
+        // panel bytes
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (2, 3, 5),
+            (7, 11, 13),
+            (5, 4, 9),
+            (6, 65, 7),
+            (33, 17, 12),
+            (8, 8, 3),
+            (9, 7, 10),
+        ] {
+            let a = rand_i8(m, k, 700 + m as u64 * 31 + n as u64);
+            let w = rand_i4(k, n, 800 + k as u64 * 37);
+            let bp8 = PackedMatI8::pack(&w);
+            let bp4 = PackedMatI4::pack(&w);
+            assert_eq!(bp4.padded_bytes() * 2, bp8.padded_bytes(), "{m}x{k}x{n}");
+            let want = matmul_i8_packed_with(&a, &bp8, ParallelGemm::sequential());
+            let mut got = MatI32::zeros(0, 0);
+            matmul_i8w4_packed_into(&a, &bp4, &mut got, ParallelGemm::sequential());
+            assert_eq!(got.data, want.data, "{m}x{k}x{n}");
+            assert_eq!((got.rows, got.cols), (m, n));
+        }
+    }
+
+    #[test]
+    fn w4_kernels_bit_exact_across_tile_grid() {
+        // every (kernel, mr, nr) combination, odd K, ragged M/N tails
+        for &(m, k, n) in &[(5, 9, 11), (8, 16, 8), (13, 31, 17), (1, 3, 1)] {
+            let a = rand_i8(m, k, 900 + m as u64);
+            let w = rand_i4(k, n, 1000 + n as u64);
+            let want = matmul_naive(&a, &w);
+            for nr in [4usize, 8] {
+                let bp4 = PackedMatI4::pack_with(&w, nr);
+                for mr in [4usize, 8] {
+                    for kernel in selectable_kernels() {
+                        let mut c = MatI32::zeros(0, 0);
+                        matmul_i8w4_packed_kernel_into(
+                            &a,
+                            &bp4,
+                            &mut c,
+                            ParallelGemm::sequential(),
+                            kernel,
+                            mr,
+                        );
+                        assert_eq!(c.data, want.data, "{m}x{k}x{n} {kernel:?} tile {mr}x{nr}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn w4_neg8_corner_exact_on_every_route() {
+        // all-(-8) weights against all-(-128) activations: the W4 pair
+        // sum peaks at 2·128·8 = 2048 — exact on every kernel with no
+        // fallback (contrast the i8 engine's -128 wide fallback)
+        let mut a = MatI8::zeros(5, 7);
+        let mut w = MatI8::zeros(7, 9);
+        a.data.iter_mut().for_each(|v| *v = i8::MIN);
+        w.data.iter_mut().for_each(|v| *v = -8);
+        let want = matmul_naive(&a, &w);
+        for nr in [4usize, 8] {
+            let bp4 = PackedMatI4::pack_with(&w, nr);
+            assert!(!bp4.saturated());
+            for kernel in selectable_kernels() {
+                for mr in [4usize, 8] {
+                    let mut c = MatI32::zeros(0, 0);
+                    matmul_i8w4_packed_kernel_into(
+                        &a,
+                        &bp4,
+                        &mut c,
+                        ParallelGemm::sequential(),
+                        kernel,
+                        mr,
+                    );
+                    assert_eq!(c.data, want.data, "{kernel:?} tile {mr}x{nr}");
+                }
+                let mut g = MatI32::zeros(0, 0);
+                matmul_i8w4_gemv_into(&a, &bp4, &mut g, kernel);
+                assert_eq!(g.data, want.data, "gemv {kernel:?} nr {nr}");
+            }
+        }
+    }
+
+    #[test]
+    fn w4_gemv_matches_naive_skinny_shapes() {
+        for &(m, k, n) in &[(1, 1, 1), (1, 7, 5), (1, 64, 48), (2, 9, 11), (3, 16, 4), (4, 33, 13)]
+        {
+            let a = rand_i8(m, k, 1100 + m as u64 * 7 + k as u64);
+            let w = rand_i4(k, n, 1200 + n as u64);
+            let want = matmul_naive(&a, &w);
+            for nr in [4usize, 8] {
+                let bp4 = PackedMatI4::pack_with(&w, nr);
+                for kernel in selectable_kernels() {
+                    let mut c = MatI32::zeros(0, 0);
+                    matmul_i8w4_gemv_into(&a, &bp4, &mut c, kernel);
+                    assert_eq!(c.data, want.data, "{m}x{k}x{n} {kernel:?} nr {nr}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn w4_rows_subset_equals_explicit_gather() {
+        // odd/even indices exercise both nibble parities at arbitrary
+        // panel offsets; m spans the GEMV and tiled routes
+        let w = rand_i4(21, 9, 1300);
+        for idx in [&[0usize][..], &[3, 7][..], &[1, 4, 9, 16, 20][..], &[2, 5, 11][..]] {
+            for m in [1usize, 3, 6, 9] {
+                let a = rand_i8(m, idx.len(), 1400 + m as u64);
+                for nr in [4usize, 8] {
+                    let bp4 = PackedMatI4::pack_with(&w, nr);
+                    let mut got = MatI32::zeros(0, 0);
+                    matmul_i8w4_rows_subset_into(
+                        &a,
+                        &bp4,
+                        idx,
+                        &mut got,
+                        ParallelGemm::sequential(),
+                    );
+                    let mut gathered = MatI8::zeros(idx.len(), 9);
+                    for (t, &r) in idx.iter().enumerate() {
+                        gathered.data[t * 9..(t + 1) * 9].copy_from_slice(w.row(r));
+                    }
+                    assert_eq!(
+                        got.data,
+                        matmul_naive(&a, &gathered).data,
+                        "m {m} idx {idx:?} nr {nr}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn w4_parallel_bit_exact_vs_sequential() {
+        let a = rand_i8(37, 29, 1500);
+        let w = rand_i4(29, 23, 1600);
+        let bp4 = PackedMatI4::pack(&w);
+        let mut seq = MatI32::zeros(0, 0);
+        matmul_i8w4_packed_into(&a, &bp4, &mut seq, ParallelGemm::sequential());
+        for threads in [2usize, 3, 4, 8] {
+            let cfg = ParallelGemm { threads, min_parallel_macs: 0 };
+            let mut par = MatI32::zeros(0, 0);
+            matmul_i8w4_packed_into(&a, &bp4, &mut par, cfg);
+            assert_eq!(par.data, seq.data, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn w4_skinny_auto_route_matches_tile_cascade() {
+        for m in 1..=4usize {
+            let a = rand_i8(m, 31, 1700 + m as u64);
+            let w = rand_i4(31, 17, 1800);
+            let bp4 = PackedMatI4::pack(&w);
+            let mut via_auto = MatI32::zeros(0, 0);
+            matmul_i8w4_packed_into(&a, &bp4, &mut via_auto, ParallelGemm::sequential());
+            let mut via_tiles = MatI32::zeros(0, 0);
+            matmul_i8w4_packed_kernel_into(
+                &a,
+                &bp4,
+                &mut via_tiles,
+                ParallelGemm::sequential(),
+                Kernel::Auto,
+                4,
+            );
+            assert_eq!(via_auto.data, via_tiles.data, "m = {m}");
+        }
+    }
+
+    #[test]
+    fn pack4_counts_toward_pack_count() {
+        let before = pack_count();
+        let _ = PackedMatI4::pack(&rand_i4(4, 4, 2000));
+        assert_eq!(pack_count(), before + 1);
     }
 }

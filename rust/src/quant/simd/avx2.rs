@@ -29,7 +29,7 @@
 //! Safety: every `unsafe fn` here requires AVX2; `super::micro_dense` /
 //! `super::micro_idx` check `host_caps().avx2` before entering.
 
-use super::tail_step;
+use super::{tail_step, tail_step_w4};
 use std::arch::x86_64::*;
 
 /// The A pair `[lo, hi]` as one i32: two sign-extended i16 halves,
@@ -168,4 +168,194 @@ pub(crate) unsafe fn micro_idx<const M: usize, const N: usize>(
     }
 }
 
-// odd-K / odd-index scalar tails: `super::tail_step` (shared with NEON).
+// --------------------------------------------------- W4 (nibble) twins
+//
+// The packed-nibble panels of `PackedMatI4` store a whole k-pair in ONE
+// byte row (`N` bytes per byte row: even k in the low nibble, odd k in
+// the high nibble). Expansion is shift+mask plus an XOR-based sign
+// extension — `(x ^ 8) - 8` sign-extends a 4-bit value held in the low
+// bits of a byte lane — after which the bytes feed the IDENTICAL
+// interleave → `pmovsxbw` → `pmaddwd` pipeline as the i8 kernels. The
+// pair sums are bounded by 2·128·8 = 2048, so exactness is trivial.
+
+/// Expand 16 packed bytes into (low-nibble, high-nibble) signed i8
+/// vectors: lane `j` of the outputs holds the even-k / odd-k weight of
+/// byte `j`.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn nibbles(b: __m128i) -> (__m128i, __m128i) {
+    unsafe {
+        let mask = _mm_set1_epi8(0x0f);
+        let sign = _mm_set1_epi8(0x08);
+        let lo = _mm_and_si128(b, mask);
+        let hi = _mm_and_si128(_mm_srli_epi16::<4>(b), mask);
+        (
+            _mm_sub_epi8(_mm_xor_si128(lo, sign), sign),
+            _mm_sub_epi8(_mm_xor_si128(hi, sign), sign),
+        )
+    }
+}
+
+/// Expand one 8-byte nibble row (a whole k-pair for 8 columns) into the
+/// interleaved-pair i16 layout the `pmaddwd` loop consumes — the W4
+/// equivalent of [`interleave8`] from a single byte row.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn interleave8_w4(row: *const u8) -> __m256i {
+    unsafe {
+        let b = _mm_loadl_epi64(row as *const __m128i);
+        let (lo, hi) = nibbles(b);
+        _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(lo, hi))
+    }
+}
+
+/// 4-column variant: one u32 byte row expands to 8 interleaved i16s.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn interleave4_w4(row: *const u8) -> __m128i {
+    unsafe {
+        let b = _mm_cvtsi32_si128((row as *const u32).read_unaligned() as i32);
+        let (lo, hi) = nibbles(b);
+        _mm_cvtepi8_epi16(_mm_unpacklo_epi8(lo, hi))
+    }
+}
+
+/// Expand the logical k row `krow` of an 8-wide nibble panel to signed
+/// i8 lanes (byte row `krow / 2`, parity selects the nibble).
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn nibble_row8(bp: *const u8, krow: usize) -> __m128i {
+    unsafe {
+        let b = _mm_loadl_epi64(bp.add((krow >> 1) * 8) as *const __m128i);
+        let (lo, hi) = nibbles(b);
+        if krow & 1 == 1 {
+            hi
+        } else {
+            lo
+        }
+    }
+}
+
+/// 4-wide panel variant of [`nibble_row8`].
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn nibble_row4(bp: *const u8, krow: usize) -> __m128i {
+    unsafe {
+        let b = _mm_cvtsi32_si128((bp.add((krow >> 1) * 4) as *const u32).read_unaligned() as i32);
+        let (lo, hi) = nibbles(b);
+        if krow & 1 == 1 {
+            hi
+        } else {
+            lo
+        }
+    }
+}
+
+/// Dense W4 microkernel: nibble panel, same contract as [`micro_dense`].
+///
+/// # Safety
+/// Requires AVX2 on the host. `panel` must hold at least `ceil(k/2)`
+/// byte rows of `N` bytes; every `a[i]` at least `k` elements.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn micro_dense_w4<const M: usize, const N: usize>(
+    k: usize,
+    a: &[&[i8]; M],
+    panel: &[u8],
+    acc: &mut [[i32; N]; M],
+) {
+    debug_assert!(N == 4 || N == 8);
+    debug_assert!(panel.len() >= k.div_ceil(2) * N);
+    let bp = panel.as_ptr();
+    let accp = acc as *mut _ as *mut i32;
+    unsafe {
+        if N == 8 {
+            let mut vacc = [_mm256_setzero_si256(); M];
+            for t in 0..k / 2 {
+                let b16 = interleave8_w4(bp.add(t * 8));
+                for (i, va) in vacc.iter_mut().enumerate() {
+                    let av = _mm256_set1_epi32(pair_dw(a[i][2 * t], a[i][2 * t + 1]));
+                    *va = _mm256_add_epi32(*va, _mm256_madd_epi16(av, b16));
+                }
+            }
+            for (i, va) in vacc.iter().enumerate() {
+                let p = accp.add(i * 8) as *mut __m256i;
+                _mm256_storeu_si256(p, _mm256_add_epi32(_mm256_loadu_si256(p as *const _), *va));
+            }
+        } else {
+            let mut vacc = [_mm_setzero_si128(); M];
+            for t in 0..k / 2 {
+                let b16 = interleave4_w4(bp.add(t * 4));
+                for (i, va) in vacc.iter_mut().enumerate() {
+                    let av = _mm_set1_epi32(pair_dw(a[i][2 * t], a[i][2 * t + 1]));
+                    *va = _mm_add_epi32(*va, _mm_madd_epi16(av, b16));
+                }
+            }
+            for (i, va) in vacc.iter().enumerate() {
+                let p = accp.add(i * 4) as *mut __m128i;
+                _mm_storeu_si128(p, _mm_add_epi32(_mm_loadu_si128(p as *const _), *va));
+            }
+        }
+        if k % 2 == 1 {
+            tail_step_w4::<M, N>(k - 1, k - 1, a, bp, accp);
+        }
+    }
+}
+
+/// Rows-subset (Aux) W4 microkernel: the contraction walks `idx`; each
+/// indexed k row expands from its nibble before the same interleave →
+/// `pmaddwd` pairing as [`micro_idx`].
+///
+/// # Safety
+/// Requires AVX2 on the host. Every `idx[t]` must be a valid logical
+/// panel row; every `a[i]` at least `idx.len()` elements.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn micro_idx_w4<const M: usize, const N: usize>(
+    idx: &[usize],
+    a: &[&[i8]; M],
+    panel: &[u8],
+    acc: &mut [[i32; N]; M],
+) {
+    debug_assert!(N == 4 || N == 8);
+    let bp = panel.as_ptr();
+    let accp = acc as *mut _ as *mut i32;
+    unsafe {
+        if N == 8 {
+            let mut vacc = [_mm256_setzero_si256(); M];
+            for t in 0..idx.len() / 2 {
+                let r0 = nibble_row8(bp, idx[2 * t]);
+                let r1 = nibble_row8(bp, idx[2 * t + 1]);
+                let b16 = _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(r0, r1));
+                for (i, va) in vacc.iter_mut().enumerate() {
+                    let av = _mm256_set1_epi32(pair_dw(a[i][2 * t], a[i][2 * t + 1]));
+                    *va = _mm256_add_epi32(*va, _mm256_madd_epi16(av, b16));
+                }
+            }
+            for (i, va) in vacc.iter().enumerate() {
+                let p = accp.add(i * 8) as *mut __m256i;
+                _mm256_storeu_si256(p, _mm256_add_epi32(_mm256_loadu_si256(p as *const _), *va));
+            }
+        } else {
+            let mut vacc = [_mm_setzero_si128(); M];
+            for t in 0..idx.len() / 2 {
+                let r0 = nibble_row4(bp, idx[2 * t]);
+                let r1 = nibble_row4(bp, idx[2 * t + 1]);
+                let b16 = _mm_cvtepi8_epi16(_mm_unpacklo_epi8(r0, r1));
+                for (i, va) in vacc.iter_mut().enumerate() {
+                    let av = _mm_set1_epi32(pair_dw(a[i][2 * t], a[i][2 * t + 1]));
+                    *va = _mm_add_epi32(*va, _mm_madd_epi16(av, b16));
+                }
+            }
+            for (i, va) in vacc.iter().enumerate() {
+                let p = accp.add(i * 4) as *mut __m128i;
+                _mm_storeu_si128(p, _mm_add_epi32(_mm_loadu_si128(p as *const _), *va));
+            }
+        }
+        if idx.len() % 2 == 1 {
+            let t = idx.len() - 1;
+            tail_step_w4::<M, N>(t, idx[t], a, bp, accp);
+        }
+    }
+}
+
+// odd-K / odd-index scalar tails: `super::tail_step` / `tail_step_w4`
+// (shared with NEON).

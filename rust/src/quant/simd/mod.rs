@@ -21,6 +21,15 @@
 //!   accumulation otherwise. Both form sums in i32 — exact for every i8
 //!   input, same as AVX2.
 //!
+//! Every contraction also has a **W4 nibble twin** (`micro_dense_w4` /
+//! `micro_idx_w4`): the packed-nibble panels of
+//! [`super::packed::PackedMatI4`] are expanded in-register — AVX2 with
+//! shift+mask and an XOR-based sign extension feeding the SAME
+//! `pmaddwd` pair loop, NEON with `shl`/`sshr` nibble expansion feeding
+//! the same `sdot`/`smlal` bodies — so the W4A8 path halves the weight
+//! bytes streamed without touching the accumulate math (which is
+//! trivially exact at |w| ≤ 8).
+//!
 //! # Dispatch
 //!
 //! [`dispatch`] resolves ONCE per process (cached in a `OnceLock`):
@@ -298,6 +307,58 @@ fn portable_idx<const M: usize, const N: usize>(
     super::packed::micro_wide_idx::<M, N>(idx, a, panel, acc);
 }
 
+/// Dense W4 microkernel wrapper: nibble panels, same accumulate
+/// contract as [`micro_dense`]. Routes to the host's nibble-expand SIMD
+/// kernel; the portable fallback is the ONE scalar W4 pair kernel in
+/// `packed.rs` (which is exact for all inputs — W4 has no wide route).
+#[inline]
+#[allow(unused_variables, unreachable_code)]
+pub(crate) fn micro_dense_w4<const M: usize, const N: usize>(
+    k: usize,
+    a: &[&[i8]; M],
+    panel: &[u8],
+    acc: &mut [[i32; N]; M],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if host_caps().avx2 {
+        // SAFETY: AVX2 presence just checked.
+        unsafe { avx2::micro_dense_w4::<M, N>(k, a, panel, acc) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { neon::micro_dense_w4::<M, N>(k, a, panel, acc) };
+        return;
+    }
+    super::packed::micro_pair_w4::<M, N>(k, a, panel, acc);
+}
+
+/// Rows-subset (Aux) W4 microkernel wrapper: contraction walks `idx`,
+/// each indexed k row is one nibble of byte row `idx[t] / 2`.
+#[inline]
+#[allow(unused_variables, unreachable_code)]
+pub(crate) fn micro_idx_w4<const M: usize, const N: usize>(
+    idx: &[usize],
+    a: &[&[i8]; M],
+    panel: &[u8],
+    acc: &mut [[i32; N]; M],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if host_caps().avx2 {
+        // SAFETY: AVX2 presence just checked.
+        unsafe { avx2::micro_idx_w4::<M, N>(idx, a, panel, acc) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { neon::micro_idx_w4::<M, N>(idx, a, panel, acc) };
+        return;
+    }
+    super::packed::micro_idx_w4::<M, N>(idx, a, panel, acc);
+}
+
 /// One scalar wide-i32 contraction step — the shared odd-K / odd-index
 /// tail of the AVX2 and NEON kernels (`at` indexes A, `krow` the packed
 /// panel row): `acc[i][j] += a[i][at] · panel_row[krow][j]`.
@@ -320,6 +381,35 @@ pub(crate) unsafe fn tail_step<const M: usize, const N: usize>(
             let av = a[i][at] as i32;
             for j in 0..N {
                 *accp.add(i * N + j) += av * *bp.add(krow * N + j) as i32;
+            }
+        }
+    }
+}
+
+/// W4 twin of [`tail_step`] against a NIBBLE panel: logical k row
+/// `krow` lives in byte row `krow / 2` (`N` bytes per byte row), parity
+/// selecting the nibble — unpacked scalar, one MAC per lane.
+///
+/// # Safety
+/// `accp` must point at `M·N` writable i32s and `bp` at a nibble panel
+/// with at least `krow/2 + 1` byte rows of `N` bytes; every `a[i]`
+/// needs `at + 1` elements.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+pub(crate) unsafe fn tail_step_w4<const M: usize, const N: usize>(
+    at: usize,
+    krow: usize,
+    a: &[&[i8]; M],
+    bp: *const u8,
+    accp: *mut i32,
+) {
+    unsafe {
+        let odd = krow & 1 == 1;
+        for i in 0..M {
+            let av = a[i][at] as i32;
+            for j in 0..N {
+                let w = super::packed::nib(*bp.add((krow >> 1) * N + j), odd);
+                *accp.add(i * N + j) += av * w as i32;
             }
         }
     }

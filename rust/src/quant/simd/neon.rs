@@ -33,7 +33,7 @@
 //! additionally require `dotprod`, which `micro_dense`/`micro_idx`
 //! check via the cached [`super::host_caps`] probe.
 
-use super::tail_step;
+use super::{tail_step, tail_step_w4};
 use std::arch::aarch64::*;
 
 /// tbl indices: column quads j=0..4 of a row-major 4×8 byte block.
@@ -325,4 +325,347 @@ unsafe fn store4<const M: usize>(accp: *mut i32, vacc: &[int32x4_t; M]) {
     }
 }
 
-// K / index scalar tails: `super::tail_step` (shared with AVX2).
+// --------------------------------------------------- W4 (nibble) twins
+//
+// `PackedMatI4` stores a whole k-pair per byte row (even k low nibble,
+// odd k high nibble). Expansion is two shifts: `sshl #4` then `sshr #4`
+// sign-extends the low nibble, a bare `sshr #4` the high nibble. The
+// expanded bytes feed the SAME `sdot` quad / `smlal` pair bodies as the
+// i8 kernels — zips replace the `tbl` transpose because the nibble
+// expansion already splits even/odd k rows into separate registers.
+
+/// Sign-extend both nibbles of 8 packed bytes: returns (even-k row,
+/// odd-k row) as i8 lanes.
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn nibbles8(b: int8x8_t) -> (int8x8_t, int8x8_t) {
+    unsafe { (vshr_n_s8::<4>(vshl_n_s8::<4>(b)), vshr_n_s8::<4>(b)) }
+}
+
+/// 16-byte (two byte rows = one k-quad at N=8) variant of [`nibbles8`].
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn nibbles16(b: int8x16_t) -> (int8x16_t, int8x16_t) {
+    unsafe { (vshrq_n_s8::<4>(vshlq_n_s8::<4>(b)), vshrq_n_s8::<4>(b)) }
+}
+
+/// Expand the logical k row `krow` of an 8-wide nibble panel.
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn nibble_row8(bp: *const u8, krow: usize) -> int8x8_t {
+    unsafe {
+        let (lo, hi) = nibbles8(vld1_s8(bp.add((krow >> 1) * 8) as *const i8));
+        if krow & 1 == 1 {
+            hi
+        } else {
+            lo
+        }
+    }
+}
+
+/// 4-wide panel variant of [`nibble_row8`] (valid data in lanes 0..4).
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn nibble_row4(bp: *const u8, krow: usize) -> int8x8_t {
+    unsafe {
+        let w = (bp.add((krow >> 1) * 4) as *const u32).read_unaligned();
+        let (lo, hi) = nibbles8(vcreate_s8(w as u64));
+        if krow & 1 == 1 {
+            hi
+        } else {
+            lo
+        }
+    }
+}
+
+/// Transpose a loaded 16-byte nibble block (byte rows 2q, 2q+1 = k rows
+/// 4q..4q+4 at N=8) into the column-quad registers `vdotq_s32` wants —
+/// zip twice: bytes (pairing k rows 4q/4q+1 and 4q+2/4q+3 per column),
+/// then u16 lanes (merging the two pairs into column quads).
+#[target_feature(enable = "neon,dotprod")]
+#[inline]
+unsafe fn quads8_w4(b: int8x16_t) -> (int8x16_t, int8x16_t) {
+    unsafe {
+        let (lo, hi) = nibbles16(b);
+        let z0 = vreinterpretq_u16_s8(vzip1q_s8(lo, hi));
+        let z1 = vreinterpretq_u16_s8(vzip2q_s8(lo, hi));
+        (vreinterpretq_s8_u16(vzip1q_u16(z0, z1)), vreinterpretq_s8_u16(vzip2q_u16(z0, z1)))
+    }
+}
+
+/// Column-quad transpose of four gathered k rows (N=8, the idx path):
+/// same double-zip as [`quads8_w4`] from separate row registers.
+#[target_feature(enable = "neon,dotprod")]
+#[inline]
+unsafe fn quads8_rows(
+    r0: int8x8_t,
+    r1: int8x8_t,
+    r2: int8x8_t,
+    r3: int8x8_t,
+) -> (int8x16_t, int8x16_t) {
+    unsafe {
+        let z01 = vzip_s8(r0, r1);
+        let z23 = vzip_s8(r2, r3);
+        let a0 = vreinterpret_u16_s8(z01.0);
+        let a1 = vreinterpret_u16_s8(z01.1);
+        let b0 = vreinterpret_u16_s8(z23.0);
+        let b1 = vreinterpret_u16_s8(z23.1);
+        let q0 = vzip_u16(a0, b0);
+        let q1 = vzip_u16(a1, b1);
+        (
+            vreinterpretq_s8_u16(vcombine_u16(q0.0, q0.1)),
+            vreinterpretq_s8_u16(vcombine_u16(q1.0, q1.1)),
+        )
+    }
+}
+
+/// Column-quad transpose of four k rows at N=4 (lanes 0..4 of each row
+/// register valid): one byte zip + one u16 zip fills a single q vector.
+#[target_feature(enable = "neon,dotprod")]
+#[inline]
+unsafe fn quads4_rows(r0: int8x8_t, r1: int8x8_t, r2: int8x8_t, r3: int8x8_t) -> int8x16_t {
+    unsafe {
+        let z01 = vreinterpret_u16_s8(vzip_s8(r0, r1).0);
+        let z23 = vreinterpret_u16_s8(vzip_s8(r2, r3).0);
+        let q = vzip_u16(z01, z23);
+        vreinterpretq_s8_u16(vcombine_u16(q.0, q.1))
+    }
+}
+
+/// Dense W4 microkernel: nibble panel, same contract as [`micro_dense`].
+///
+/// # Safety
+/// aarch64/NEON only. `panel` must hold at least `ceil(k/2)` byte rows
+/// of `N` bytes; every `a[i]` at least `k` elements.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn micro_dense_w4<const M: usize, const N: usize>(
+    k: usize,
+    a: &[&[i8]; M],
+    panel: &[u8],
+    acc: &mut [[i32; N]; M],
+) {
+    debug_assert!(N == 4 || N == 8);
+    debug_assert!(panel.len() >= k.div_ceil(2) * N);
+    unsafe {
+        if super::host_caps().neon_dot {
+            dense_dot_w4::<M, N>(k, a, panel, acc);
+        } else {
+            dense_mlal_w4::<M, N>(k, a, panel, acc);
+        }
+    }
+}
+
+/// Rows-subset (Aux) W4 microkernel: contraction walks `idx`, each
+/// indexed k row expanded from its nibble.
+///
+/// # Safety
+/// aarch64/NEON only. Every `idx[t]` must be a valid logical panel row;
+/// every `a[i]` at least `idx.len()` elements.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn micro_idx_w4<const M: usize, const N: usize>(
+    idx: &[usize],
+    a: &[&[i8]; M],
+    panel: &[u8],
+    acc: &mut [[i32; N]; M],
+) {
+    debug_assert!(N == 4 || N == 8);
+    unsafe {
+        if super::host_caps().neon_dot {
+            idx_dot_w4::<M, N>(idx, a, panel, acc);
+        } else {
+            idx_mlal_w4::<M, N>(idx, a, panel, acc);
+        }
+    }
+}
+
+#[target_feature(enable = "neon,dotprod")]
+unsafe fn dense_dot_w4<const M: usize, const N: usize>(
+    k: usize,
+    a: &[&[i8]; M],
+    panel: &[u8],
+    acc: &mut [[i32; N]; M],
+) {
+    let bp = panel.as_ptr();
+    let accp = acc as *mut _ as *mut i32;
+    unsafe {
+        if N == 8 {
+            let mut acc0 = [vdupq_n_s32(0); M];
+            let mut acc1 = [vdupq_n_s32(0); M];
+            for t in 0..k / 4 {
+                // 16 bytes = byte rows 2t, 2t+1 = k rows 4t..4t+4
+                let (q0, q1) = quads8_w4(vld1q_s8(bp.add(t * 16) as *const i8));
+                for i in 0..M {
+                    let ab = a_quad(a[i], 4 * t);
+                    acc0[i] = vdotq_s32(acc0[i], q0, ab);
+                    acc1[i] = vdotq_s32(acc1[i], q1, ab);
+                }
+            }
+            store8::<M>(accp, &acc0, &acc1);
+        } else {
+            let mut vacc = [vdupq_n_s32(0); M];
+            for t in 0..k / 4 {
+                // 8 bytes = byte rows 2t, 2t+1 = k rows 4t..4t+4
+                let (lo, hi) = nibbles8(vld1_s8(bp.add(t * 8) as *const i8));
+                // lo lanes: rows 4t (0..4) and 4t+2 (4..8); hi: 4t+1, 4t+3
+                let q = quads4_rows(
+                    lo,
+                    hi,
+                    vreinterpret_s8_u32(vdup_lane_u32::<1>(vreinterpret_u32_s8(lo))),
+                    vreinterpret_s8_u32(vdup_lane_u32::<1>(vreinterpret_u32_s8(hi))),
+                );
+                for i in 0..M {
+                    vacc[i] = vdotq_s32(vacc[i], q, a_quad(a[i], 4 * t));
+                }
+            }
+            store4::<M>(accp, &vacc);
+        }
+        for kk in (k - k % 4)..k {
+            tail_step_w4::<M, N>(kk, kk, a, bp, accp);
+        }
+    }
+}
+
+#[target_feature(enable = "neon,dotprod")]
+unsafe fn idx_dot_w4<const M: usize, const N: usize>(
+    idx: &[usize],
+    a: &[&[i8]; M],
+    panel: &[u8],
+    acc: &mut [[i32; N]; M],
+) {
+    let bp = panel.as_ptr();
+    let accp = acc as *mut _ as *mut i32;
+    let r = idx.len();
+    unsafe {
+        if N == 8 {
+            let mut acc0 = [vdupq_n_s32(0); M];
+            let mut acc1 = [vdupq_n_s32(0); M];
+            for t in 0..r / 4 {
+                let (q0, q1) = quads8_rows(
+                    nibble_row8(bp, idx[4 * t]),
+                    nibble_row8(bp, idx[4 * t + 1]),
+                    nibble_row8(bp, idx[4 * t + 2]),
+                    nibble_row8(bp, idx[4 * t + 3]),
+                );
+                for i in 0..M {
+                    let ab = a_quad(a[i], 4 * t);
+                    acc0[i] = vdotq_s32(acc0[i], q0, ab);
+                    acc1[i] = vdotq_s32(acc1[i], q1, ab);
+                }
+            }
+            store8::<M>(accp, &acc0, &acc1);
+        } else {
+            let mut vacc = [vdupq_n_s32(0); M];
+            for t in 0..r / 4 {
+                let q = quads4_rows(
+                    nibble_row4(bp, idx[4 * t]),
+                    nibble_row4(bp, idx[4 * t + 1]),
+                    nibble_row4(bp, idx[4 * t + 2]),
+                    nibble_row4(bp, idx[4 * t + 3]),
+                );
+                for i in 0..M {
+                    vacc[i] = vdotq_s32(vacc[i], q, a_quad(a[i], 4 * t));
+                }
+            }
+            store4::<M>(accp, &vacc);
+        }
+        for t in (r - r % 4)..r {
+            tail_step_w4::<M, N>(t, idx[t], a, bp, accp);
+        }
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dense_mlal_w4<const M: usize, const N: usize>(
+    k: usize,
+    a: &[&[i8]; M],
+    panel: &[u8],
+    acc: &mut [[i32; N]; M],
+) {
+    let bp = panel.as_ptr();
+    let accp = acc as *mut _ as *mut i32;
+    unsafe {
+        if N == 8 {
+            let mut acc0 = [vdupq_n_s32(0); M];
+            let mut acc1 = [vdupq_n_s32(0); M];
+            for t in 0..k / 2 {
+                let (lo, hi) = nibbles8(vld1_s8(bp.add(t * 8) as *const i8));
+                let b0 = vmovl_s8(lo);
+                let b1 = vmovl_s8(hi);
+                for i in 0..M {
+                    let av_lo = vdup_n_s16(a[i][2 * t] as i16);
+                    let av_hi = vdup_n_s16(a[i][2 * t + 1] as i16);
+                    acc0[i] = vmlal_s16(acc0[i], vget_low_s16(b0), av_lo);
+                    acc1[i] = vmlal_s16(acc1[i], vget_high_s16(b0), av_lo);
+                    acc0[i] = vmlal_s16(acc0[i], vget_low_s16(b1), av_hi);
+                    acc1[i] = vmlal_s16(acc1[i], vget_high_s16(b1), av_hi);
+                }
+            }
+            store8::<M>(accp, &acc0, &acc1);
+        } else {
+            let mut vacc = [vdupq_n_s32(0); M];
+            for t in 0..k / 2 {
+                let w = (bp.add(t * 4) as *const u32).read_unaligned();
+                let (lo, hi) = nibbles8(vcreate_s8(w as u64));
+                let b0 = vget_low_s16(vmovl_s8(lo));
+                let b1 = vget_low_s16(vmovl_s8(hi));
+                for i in 0..M {
+                    vacc[i] = vmlal_s16(vacc[i], b0, vdup_n_s16(a[i][2 * t] as i16));
+                    vacc[i] = vmlal_s16(vacc[i], b1, vdup_n_s16(a[i][2 * t + 1] as i16));
+                }
+            }
+            store4::<M>(accp, &vacc);
+        }
+        if k % 2 == 1 {
+            tail_step_w4::<M, N>(k - 1, k - 1, a, bp, accp);
+        }
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn idx_mlal_w4<const M: usize, const N: usize>(
+    idx: &[usize],
+    a: &[&[i8]; M],
+    panel: &[u8],
+    acc: &mut [[i32; N]; M],
+) {
+    let bp = panel.as_ptr();
+    let accp = acc as *mut _ as *mut i32;
+    let r = idx.len();
+    unsafe {
+        if N == 8 {
+            let mut acc0 = [vdupq_n_s32(0); M];
+            let mut acc1 = [vdupq_n_s32(0); M];
+            for t in 0..r / 2 {
+                let b0 = vmovl_s8(nibble_row8(bp, idx[2 * t]));
+                let b1 = vmovl_s8(nibble_row8(bp, idx[2 * t + 1]));
+                for i in 0..M {
+                    let av_lo = vdup_n_s16(a[i][2 * t] as i16);
+                    let av_hi = vdup_n_s16(a[i][2 * t + 1] as i16);
+                    acc0[i] = vmlal_s16(acc0[i], vget_low_s16(b0), av_lo);
+                    acc1[i] = vmlal_s16(acc1[i], vget_high_s16(b0), av_lo);
+                    acc0[i] = vmlal_s16(acc0[i], vget_low_s16(b1), av_hi);
+                    acc1[i] = vmlal_s16(acc1[i], vget_high_s16(b1), av_hi);
+                }
+            }
+            store8::<M>(accp, &acc0, &acc1);
+        } else {
+            let mut vacc = [vdupq_n_s32(0); M];
+            for t in 0..r / 2 {
+                let b0 = vget_low_s16(vmovl_s8(nibble_row4(bp, idx[2 * t])));
+                let b1 = vget_low_s16(vmovl_s8(nibble_row4(bp, idx[2 * t + 1])));
+                for i in 0..M {
+                    vacc[i] = vmlal_s16(vacc[i], b0, vdup_n_s16(a[i][2 * t] as i16));
+                    vacc[i] = vmlal_s16(vacc[i], b1, vdup_n_s16(a[i][2 * t + 1] as i16));
+                }
+            }
+            store4::<M>(accp, &vacc);
+        }
+        if r % 2 == 1 {
+            let t = r - 1;
+            tail_step_w4::<M, N>(t, idx[t], a, bp, accp);
+        }
+    }
+}
+
+// K / index scalar tails: `super::tail_step` / `tail_step_w4` (shared
+// with AVX2).

@@ -74,6 +74,55 @@ fn manifest_tag_field_drift_is_rejected() {
     }
 }
 
+fn manifest_entry_bits(tag: &str, method: &str, ia_bits: u32, w_bits: u32) -> String {
+    format!(
+        r#"[{{"model": "sim-small", "kind": "eval", "tag": "{tag}",
+             "method": "{method}", "granularity": "per-vector", "smooth": false,
+             "exp_factor": 2, "file": "f.hlo.txt", "batch": 8, "seq": 128,
+             "weights": "weights/sim-small.bin",
+             "ia_bits": {ia_bits}, "w_bits": {w_bits}}}]"#
+    )
+}
+
+#[test]
+fn manifest_bits_resolve_from_tag_and_drift_is_rejected() {
+    let load_one = |name: &str, body: String| {
+        let d = tmpdir(name);
+        std::fs::write(d.join("manifest.json"), body).unwrap();
+        let m = Manifest::load(&d).unwrap();
+        m.entries.values().next().unwrap().clone()
+    };
+
+    // no explicit fields: bits resolve from the tag suffix / method default
+    let meta =
+        load_one("bits_tag_only", manifest_entry("naive-pv-w4a8", "naive", "per-vector", false, 1));
+    assert_eq!((meta.ia_bits, meta.w_bits), (8, 4));
+
+    // resq's method default is W4A8 with NO suffix on the canonical tag
+    let meta2 =
+        load_one("bits_resq_default", manifest_entry("resq-pv", "resq", "per-vector", false, 1));
+    assert_eq!((meta2.ia_bits, meta2.w_bits), (8, 4));
+
+    // explicit fields that agree with the tag load fine
+    let meta3 = load_one("bits_explicit_ok", manifest_entry_bits("muxq-pv-w4a8", "muxq", 8, 4));
+    assert_eq!(meta3.w_bits, 4);
+
+    // explicit fields that DISAGREE with the tag fail the load
+    for (name, bad) in [
+        ("w_bits", manifest_entry_bits("muxq-pv-w4a8", "muxq", 8, 8)),
+        ("ia_bits", manifest_entry_bits("muxq-pv", "muxq", 6, 8)),
+        ("resq default", manifest_entry_bits("resq-pv", "resq", 8, 8)),
+    ] {
+        let d = tmpdir(&format!("bits_drift_{}", name.replace(' ', "_")));
+        std::fs::write(d.join("manifest.json"), bad).unwrap();
+        let err = Manifest::load(&d).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("bits drifted"),
+            "{name}: bits drift must fail the load"
+        );
+    }
+}
+
 #[test]
 fn truncated_weights_rejected() {
     let d = tmpdir("truncweights");

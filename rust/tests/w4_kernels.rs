@@ -1,0 +1,245 @@
+//! W4A8 nibble-engine invariants (via the in-repo mini-proptest): the
+//! pack/unpack round-trip over the whole signed i4 range (including the
+//! -8 corner the sign-extension tricks must survive), and every W4
+//! contraction — dense tile grid, rows-subset Aux, skinny-M GEMV —
+//! bit-exact against the i8-widened packed oracle across random ragged
+//! shapes, both panel widths, and every forced kernel the host offers.
+//! The CI matrix runs this on x86-64 (AVX2 nibble expand) AND arm64
+//! (NEON `vshl`/`vshr`), so both SIMD unpack paths are exercised.
+
+use muxq::quant::matrix::{MatI32, MatI8};
+use muxq::quant::packed::{
+    matmul_i8_packed_kernel_into, matmul_i8w4_gemv_into, matmul_i8w4_packed_into,
+    matmul_i8w4_packed_kernel_into, matmul_i8w4_rows_subset_into, Kernel, PackedMatI4,
+    PackedMatI8, ParallelGemm,
+};
+use muxq::quant::simd;
+use muxq::util::proptest::{prop, prop_assert, Gen};
+
+/// i4-range weights widened to i8 — what the 4-bit quantizer emits.
+fn gen_i4(g: &mut Gen, rows: usize, cols: usize) -> MatI8 {
+    let mut m = MatI8::zeros(rows, cols);
+    for v in m.data.iter_mut() {
+        *v = g.usize(0, 15) as i8 - 8;
+    }
+    m
+}
+
+/// Full-range i8 activations, -128 included (the W4 pair sum is bounded
+/// by 2·128·8 = 2048, so no input needs a wide fallback).
+fn gen_act(g: &mut Gen, rows: usize, cols: usize) -> MatI8 {
+    let mut m = MatI8::zeros(rows, cols);
+    for v in m.data.iter_mut() {
+        *v = (g.usize(0, 255) as i32 - 128) as i8;
+    }
+    m
+}
+
+/// The oracle: widen the i4 weights to i8 and run the proven i8 packed
+/// engine (itself pinned against the naive triple loop elsewhere)
+/// through its always-exact wide kernel.
+fn widened_oracle(a: &MatI8, b: &MatI8, nr: usize, mr: usize) -> MatI32 {
+    let bp = PackedMatI8::pack_with(b, nr);
+    let mut c = MatI32::zeros(0, 0);
+    matmul_i8_packed_kernel_into(a, &bp, &mut c, ParallelGemm::sequential(), Kernel::WideI32, mr);
+    c
+}
+
+#[test]
+fn prop_nibble_pack_roundtrip_full_i4_range() {
+    prop("PackedMatI4 round-trips every i4 value (incl -8)", |g| {
+        let k = g.usize(1, 40);
+        let n = g.usize(1, 24);
+        let mut b = gen_i4(g, k, n);
+        if g.bool() {
+            // out-of-range values must clamp, not wrap
+            let at = g.usize(0, b.data.len() - 1);
+            b.data[at] = *g.choice(&[-128i8, -9, 8, 127]);
+        }
+        let nr = *g.choice(&[4usize, 8]);
+        let bp = PackedMatI4::pack_with(&b, nr);
+        let want_sat = b.data.iter().any(|&v| !(-8..=7).contains(&v));
+        prop_assert(bp.saturated() == want_sat, "saturation flag")?;
+        let i8p = PackedMatI8::pack_with(&b, nr);
+        prop_assert(
+            bp.padded_bytes() * 2 == i8p.padded_bytes(),
+            format!("half the panel bytes: {} vs {}", bp.padded_bytes(), i8p.padded_bytes()),
+        )?;
+        for kk in 0..k {
+            for j in 0..n {
+                let want = b.data[kk * n + j].clamp(-8, 7);
+                prop_assert(
+                    bp.get(kk, j) == want,
+                    format!("({kk},{j}) got {} want {want} nr {nr}", bp.get(kk, j)),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn nibble_roundtrip_every_i4_value_deterministic() {
+    // all 16 values down one column, in both panel widths and both
+    // K-parities (odd K exercises the zero-padded high nibble)
+    for nr in [4usize, 8] {
+        for k in [16usize, 15] {
+            let mut b = MatI8::zeros(k, 3);
+            for kk in 0..k {
+                for j in 0..3 {
+                    b.data[kk * 3 + j] = ((kk + j) % 16) as i8 - 8;
+                }
+            }
+            let bp = PackedMatI4::pack_with(&b, nr);
+            assert!(!bp.saturated());
+            for kk in 0..k {
+                for j in 0..3 {
+                    assert_eq!(bp.get(kk, j), b.data[kk * 3 + j], "k {kk} j {j} nr {nr}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_w4_dense_bit_exact_vs_widened_oracle() {
+    // every W4 dense route — scalar pair kernel (PairI16 and WideI32
+    // both name it; there is no wide fallback to fall back to) and the
+    // host's SIMD kernel — across the full register-tile grid and
+    // ragged shapes, against the i8-widened oracle
+    prop("W4 dense GEMM == widened-i8 oracle", |g| {
+        let m = g.usize(1, 40);
+        let k = g.usize(1, 48);
+        let n = g.usize(1, 40);
+        let a = gen_act(g, m, k);
+        let mut b = gen_i4(g, k, n);
+        if g.bool() {
+            // the -8 corner: scatter true minimums into the weights
+            for _ in 0..g.usize(1, 4) {
+                let at = g.usize(0, b.data.len() - 1);
+                b.data[at] = -8;
+            }
+        }
+        let nr = *g.choice(&[4usize, 8]);
+        let mr = *g.choice(&[4usize, 8]);
+        let want = widened_oracle(&a, &b, nr, mr);
+        let bp = PackedMatI4::pack_with(&b, nr);
+        let mut kernels = vec![Kernel::PairI16, Kernel::WideI32];
+        if simd::host_simd().is_some() {
+            kernels.push(Kernel::Simd);
+        }
+        for kernel in kernels {
+            let mut c = MatI32::zeros(0, 0);
+            matmul_i8w4_packed_kernel_into(&a, &bp, &mut c, ParallelGemm::sequential(), kernel, mr);
+            prop_assert(
+                c.data == want.data,
+                format!("{m}x{k}x{n} {kernel:?} tile {mr}x{nr}"),
+            )?;
+        }
+        // the routed public entry (GEMV for skinny M, tiles otherwise),
+        // sequential and threaded, agrees too
+        for cfg in [ParallelGemm::sequential(), ParallelGemm { threads: 3, min_parallel_macs: 0 }] {
+            let mut c = MatI32::zeros(0, 0);
+            matmul_i8w4_packed_into(&a, &bp, &mut c, cfg);
+            prop_assert(c.data == want.data, format!("routed {m}x{k}x{n} ({} thr)", cfg.threads))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_w4_gemv_and_rows_subset_bit_exact() {
+    // the decode path (skinny-M GEMV) and the MUXQ Aux path (compact A
+    // against scattered W4 rows) vs widened oracles
+    prop("W4 GEMV + rows-subset == widened-i8 oracle", |g| {
+        let m = g.usize(1, 4);
+        let k = g.usize(1, 48);
+        let n = g.usize(1, 24);
+        let a = gen_act(g, m, k);
+        let b = gen_i4(g, k, n);
+        let nr = *g.choice(&[4usize, 8]);
+        let bp = PackedMatI4::pack_with(&b, nr);
+        let want = widened_oracle(&a, &b, nr, 4);
+        let mut kernels = vec![Kernel::Auto, Kernel::PairI16];
+        if simd::host_simd().is_some() {
+            kernels.push(Kernel::Simd);
+        }
+        for kernel in kernels {
+            let mut c = MatI32::zeros(0, 0);
+            matmul_i8w4_gemv_into(&a, &bp, &mut c, kernel);
+            prop_assert(c.data == want.data, format!("gemv {m}x{k}x{n} {kernel:?} nr {nr}"))?;
+        }
+        // rows-subset: gather the indexed W4 rows, widen, re-run
+        let r = g.usize(1, k.min(8));
+        let idx: Vec<usize> = (0..r).map(|_| g.usize(0, k - 1)).collect();
+        let ac = gen_act(g, m, r);
+        let mut got = MatI32::zeros(0, 0);
+        matmul_i8w4_rows_subset_into(&ac, &bp, &idx, &mut got, ParallelGemm::sequential());
+        let mut gathered = MatI8::zeros(r, n);
+        for (t, &row) in idx.iter().enumerate() {
+            gathered.data[t * n..(t + 1) * n].copy_from_slice(b.row(row));
+        }
+        let want_aux = widened_oracle(&ac, &gathered, nr, 4);
+        prop_assert(got.data == want_aux.data, format!("subset m {m} r {r} nr {nr}"))
+    });
+}
+
+#[test]
+fn w4_exact_on_ragged_shape_families_full_tile_grid() {
+    // the deterministic twin: odd K (the padded half-byte), tiny K
+    // (degenerate contractions), M/N straddling every tile boundary —
+    // every (mr, nr, kernel) combination, plus the all-(-8) worst case
+    // (the most negative nibble through every unpack trick) against
+    // extreme activations
+    let families: [&[(usize, usize, usize)]; 3] = [
+        &[(4, 1, 4), (8, 3, 8), (5, 7, 9), (16, 65, 16), (6, 129, 10)], // odd K
+        &[(1, 1, 1), (2, 2, 3), (9, 2, 7), (12, 4, 5)],                 // tiny K
+        &[(3, 8, 5), (7, 16, 11), (9, 10, 13), (17, 12, 15)],           // M/N tails
+    ];
+    let mut kernels = vec![Kernel::PairI16];
+    if simd::host_simd().is_some() {
+        kernels.push(Kernel::Simd);
+    }
+    for (fi, family) in families.iter().enumerate() {
+        for &(m, k, n) in family.iter() {
+            let mut rng =
+                muxq::data::prng::SplitMix64::new((fi * 7919 + m * 131 + k * 17 + n) as u64);
+            let mut a = MatI8::zeros(m, k);
+            for v in a.data.iter_mut() {
+                *v = (rng.next_below(256) as i32 - 128) as i8;
+            }
+            let mut b = MatI8::zeros(k, n);
+            for v in b.data.iter_mut() {
+                *v = (rng.next_below(16) as i32 - 8) as i8;
+            }
+            let mut b_min = MatI8::zeros(k, n);
+            b_min.data.iter_mut().for_each(|v| *v = -8);
+            let mut a_min = MatI8::zeros(m, k);
+            a_min.data.iter_mut().for_each(|v| *v = i8::MIN);
+            for (tag, amat, bmat) in [("rand", &a, &b), ("neg8", &a_min, &b_min)] {
+                for nr in [4usize, 8] {
+                    let bp = PackedMatI4::pack_with(bmat, nr);
+                    assert!(!bp.saturated(), "i4-range input must not clamp");
+                    for mr in [4usize, 8] {
+                        let want = widened_oracle(amat, bmat, nr, mr);
+                        for &kernel in &kernels {
+                            let mut c = MatI32::zeros(0, 0);
+                            matmul_i8w4_packed_kernel_into(
+                                amat,
+                                &bp,
+                                &mut c,
+                                ParallelGemm::sequential(),
+                                kernel,
+                                mr,
+                            );
+                            assert_eq!(
+                                c.data, want.data,
+                                "family {fi} {tag} {m}x{k}x{n} {kernel:?} tile {mr}x{nr}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
