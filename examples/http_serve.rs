@@ -1,0 +1,171 @@
+//! Stand up the HTTP serving front end (`muxq::serve`) over a
+//! generation server and leave it listening — the interactive twin of
+//! the stress harness (`examples/stress.rs`).
+//!
+//!     cargo run --release --example http_serve
+//!     cargo run --release --example http_serve -- --addr 127.0.0.1:8080 --method muxq-pv
+//!     cargo run --release --example http_serve -- --tenants a:3,b:1 --tenant-cap 8
+//!     cargo run --release --example http_serve -- --smoke     # CI: one loopback
+//!                                                             # completion, then exit
+//!
+//! Then talk to it with curl (prompts are token IDs — see the serve
+//! module docs for the full wire format):
+//!
+//!     curl -N http://127.0.0.1:8080/v1/completions \
+//!       -d '{"prompt": [1, 2, 3], "max_tokens": 16, "tenant": "a"}'
+//!     curl http://127.0.0.1:8080/v1/models
+//!     curl http://127.0.0.1:8080/metrics
+//!
+//! `--smoke` is the CI leg (`rust/scripts/ci_check.sh`): ephemeral
+//! port, one streamed completion over loopback asserted token-exact
+//! against a solo `DecodeSession`, clean shutdown, exit 0.
+
+use anyhow::{anyhow, Result};
+use muxq::coordinator::{GenBackend, GenerationConfig, GenerationServer, QosConfig};
+use muxq::gpt2::{Gpt2Model, QuantizedGpt2, WrapPolicy};
+use muxq::quant::EngineSpec;
+use muxq::serve::{HttpServer, ServeConfig};
+use muxq::util::cli::Cli;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+/// Parse `a:3,b:1` into QoS weights.
+fn parse_tenants(s: &str) -> Result<Vec<(String, usize)>> {
+    if s.is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|part| {
+            let (name, w) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow!("tenant spec {part:?} is not name:weight"))?;
+            Ok((name.to_string(), w.parse::<usize>()?))
+        })
+        .collect()
+}
+
+/// One streamed completion over loopback; returns the token stream.
+fn loopback_completion(addr: std::net::SocketAddr, body: &str) -> Result<Vec<u32>> {
+    let mut s = TcpStream::connect(addr)?;
+    write!(
+        s,
+        "POST /v1/completions HTTP/1.1\r\nHost: smoke\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )?;
+    let mut r = BufReader::new(s);
+    let mut status = String::new();
+    r.read_line(&mut status)?;
+    if !status.starts_with("HTTP/1.1 200") {
+        return Err(anyhow!("unexpected status: {}", status.trim()));
+    }
+    let mut tokens = Vec::new();
+    let mut done = false;
+    for line in r.lines() {
+        let line = line?;
+        if let Some(rest) = line.strip_prefix("data: ") {
+            if rest == "[DONE]" {
+                done = true;
+                break;
+            }
+            let j = muxq::util::json::Json::parse(rest)?;
+            if let Ok(t) = j.get("token") {
+                tokens.push(t.as_usize()? as u32);
+            } else if j.get("finish").is_err() {
+                return Err(anyhow!("stream error event: {rest}"));
+            }
+        }
+    }
+    if !done {
+        return Err(anyhow!("stream ended without data: [DONE]"));
+    }
+    Ok(tokens)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let p = Cli::new("http_serve", "HTTP serving front end over the generation server")
+        .opt("addr", "127.0.0.1:8080", "bind address (port 0 = ephemeral)")
+        .opt("method", "muxq-pv", "fp32 | an EngineSpec tag (naive-pv, muxq-pv, ...)")
+        .opt("workers", "16", "HTTP worker threads (max concurrent connections)")
+        .opt("max-live", "8", "decode batch width ceiling")
+        .opt("max-new", "64", "server-side token budget ceiling")
+        .opt("pool-pages", "0", "paged KV pool capacity (0 = ring per session)")
+        .opt("tenants", "", "QoS weights, e.g. a:3,b:1 (empty = weight 1 for all)")
+        .opt("tenant-cap", "0", "max in-flight sessions per tenant (0 = unlimited)")
+        .flag("smoke", "CI mode: one loopback completion, verify, exit")
+        .parse(&args)?;
+    let smoke = p.flag("smoke");
+    let method = p.get("method").to_string();
+
+    // no artifacts needed: a seeded test model serves token IDs
+    let fp = Gpt2Model::test_model(2, 32, 2, 48, 64, 7);
+    let mut qos = QosConfig {
+        max_inflight_per_tenant: p.get_usize("tenant-cap")?,
+        ..QosConfig::default()
+    };
+    qos.weights = parse_tenants(p.get("tenants"))?;
+    let gen_cfg = GenerationConfig {
+        max_live: p.get_usize("max-live")?,
+        max_new_tokens: p.get_usize("max-new")?,
+        pool_pages: p.get_usize("pool-pages")?,
+        wrap: WrapPolicy::default(),
+        qos,
+        ..Default::default()
+    };
+    let (backend, tag) = if method == "fp32" {
+        (GenBackend::Fp(fp.clone()), "fp32".to_string())
+    } else {
+        let spec = EngineSpec::parse(&method)?;
+        (GenBackend::Int(QuantizedGpt2::new(fp.clone(), spec)), spec.tag())
+    };
+    let gen = Arc::new(GenerationServer::start(backend, gen_cfg));
+    let serve_cfg = ServeConfig {
+        addr: if smoke { "127.0.0.1:0".to_string() } else { p.get("addr").to_string() },
+        workers: p.get_usize("workers")?,
+        model_id: fp.cfg.name.clone(),
+        engine_tag: tag,
+        ..Default::default()
+    };
+    let srv = HttpServer::start(gen.clone(), serve_cfg)?;
+    let addr = srv.addr();
+
+    if smoke {
+        // the served stream must equal a solo greedy session bit for bit
+        let prompt: Vec<u32> = vec![1, 2, 3, 4];
+        let steps = 8;
+        let want = if method == "fp32" {
+            fp.session(WrapPolicy::default()).generate_greedy(&prompt, steps)?
+        } else {
+            let q = QuantizedGpt2::new(fp.clone(), EngineSpec::parse(&method)?);
+            q.session(WrapPolicy::default()).generate_greedy(&prompt, steps)?
+        };
+        let body = format!(
+            "{{\"prompt\": [1, 2, 3, 4], \"max_tokens\": {steps}, \"tenant\": \"smoke\"}}"
+        );
+        let got = loopback_completion(addr, &body)?;
+        if got != want {
+            return Err(anyhow!("smoke stream {got:?} != solo session {want:?}"));
+        }
+        let st = gen.stats();
+        srv.shutdown();
+        println!(
+            "serve smoke OK: {} tokens streamed over {addr}, bit-exact vs solo session \
+             (completed {}, tokens {})",
+            got.len(),
+            st.completed,
+            st.tokens_generated
+        );
+        return Ok(());
+    }
+
+    println!("model {} ({}) listening on http://{addr}", fp.cfg.name, method);
+    println!("  curl -N http://{addr}/v1/completions -d '{{\"prompt\": [1,2,3], \"max_tokens\": 16}}'");
+    println!("  curl http://{addr}/v1/models");
+    println!("  curl http://{addr}/metrics");
+    println!("(ctrl-c to stop)");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}

@@ -1,0 +1,383 @@
+//! Sustained-load stress harness for the HTTP serving front end
+//! (`muxq::serve`): hundreds of concurrent loopback connections firing
+//! mixed traffic — plain streamed completions, speculative sessions,
+//! buffered calls, and deliberate mid-stream disconnects — against one
+//! server, with multi-tenant QoS weights under saturation.
+//!
+//! Reported per run: p50/p99 time-to-first-token, p50/p99 per-token gap,
+//! aggregate tokens/s, refusals by class (inline pool shed, queue-full
+//! 503, per-tenant 429), server-side cancels for the abandoned streams,
+//! KV-pool evictions, and the per-tenant served-token split (the DWRR
+//! weights should show up as the share ratio once both lanes saturate).
+//! The npusim [`ServeTickPlan`] prices the same multi-tenant decode tick
+//! on the modeled NPU and reports the predicted utilization at the
+//! measured token rate next to the host numbers.
+//!
+//!     cargo run --release --example stress
+//!     cargo run --release --example stress -- --conns 400 --rounds 3
+//!     cargo run --release --example stress -- --tenants a:3,b:1 --steps 24
+//!     cargo run --release --example stress -- --json BENCH_serve.json
+//!
+//! `--json` writes the machine-readable record `bench_check.sh` gates
+//! against the committed `BENCH_serve.json` baseline (tokens/s and p99
+//! TTFT, anti-ratchet — see the script).
+//!
+//! [`ServeTickPlan`]: muxq::npusim::gemm_plan::ServeTickPlan
+
+use anyhow::{anyhow, Result};
+use muxq::coordinator::{GenBackend, GenerationConfig, GenerationServer, QosConfig};
+use muxq::gpt2::{Gpt2Model, QuantizedGpt2};
+use muxq::npusim::gemm_plan::ServeTickPlan;
+use muxq::npusim::NpuConfig;
+use muxq::quant::{EngineSpec, Method};
+use muxq::serve::{HttpServer, ServeConfig};
+use muxq::util::cli::Cli;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+/// What one client connection did.
+#[derive(Debug, Default, Clone)]
+struct Outcome {
+    /// HTTP status answered (0 = connect/io failure before a status)
+    status: u16,
+    tokens: usize,
+    /// ms to the first streamed token (< 0 = never saw one)
+    ttft_ms: f64,
+    /// inter-token gaps, ms
+    gaps_ms: Vec<f64>,
+    /// this client abandoned its stream on purpose
+    cancelled: bool,
+    finish: String,
+}
+
+/// The traffic mix, decided per client index (deterministic).
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Plain,
+    Speculative,
+    Buffered,
+    Cancel,
+}
+
+fn mode_for(i: usize, spec_pct: usize, cancel_pct: usize, buffered_pct: usize) -> Mode {
+    let slot = i % 100;
+    if slot < spec_pct {
+        Mode::Speculative
+    } else if slot < spec_pct + cancel_pct {
+        Mode::Cancel
+    } else if slot < spec_pct + cancel_pct + buffered_pct {
+        Mode::Buffered
+    } else {
+        Mode::Plain
+    }
+}
+
+/// One client: connect, fire, read the stream, classify the outcome.
+fn run_client(addr: SocketAddr, body: &str, mode: Mode) -> Outcome {
+    let mut out = Outcome { ttft_ms: -1.0, ..Default::default() };
+    let t0 = Instant::now();
+    let mut s = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(_) => return out,
+    };
+    let raw = format!(
+        "POST /v1/completions HTTP/1.1\r\nHost: stress\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    if s.write_all(raw.as_bytes()).is_err() {
+        return out;
+    }
+    let mut r = BufReader::new(s);
+    let mut status_line = String::new();
+    if r.read_line(&mut status_line).is_err() || status_line.len() < 12 {
+        return out;
+    }
+    out.status = status_line[9..12].parse().unwrap_or(0);
+    if out.status != 200 {
+        return out; // refused (429/503/...); body not needed
+    }
+    if mode == Mode::Buffered {
+        // one fixed-length JSON answer; TTFT is the full response time
+        let mut rest = String::new();
+        use std::io::Read;
+        if r.read_to_string(&mut rest).is_err() {
+            return out;
+        }
+        out.ttft_ms = t0.elapsed().as_secs_f64() * 1e3;
+        if let Some(pos) = rest.find("\r\n\r\n") {
+            if let Ok(j) = muxq::util::json::Json::parse(rest[pos..].trim()) {
+                out.tokens = j.get("generated").and_then(|g| g.as_usize()).unwrap_or(0);
+            }
+        }
+        out.finish = "buffered".into();
+        return out;
+    }
+    let mut last_tok = t0;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match r.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+        let Some(data) = line.trim_end().strip_prefix("data: ") else {
+            continue; // chunk framing / blank separators
+        };
+        if data == "[DONE]" {
+            break;
+        }
+        if data.starts_with("{\"index\"") {
+            let now = Instant::now();
+            if out.tokens == 0 {
+                out.ttft_ms = (now - t0).as_secs_f64() * 1e3;
+            } else {
+                out.gaps_ms.push((now - last_tok).as_secs_f64() * 1e3);
+            }
+            last_tok = now;
+            out.tokens += 1;
+            if mode == Mode::Cancel {
+                out.cancelled = true;
+                out.finish = "client-cancel".into();
+                return out; // drop the socket mid-stream
+            }
+        } else if let Some(rest) = data.strip_prefix("{\"finish\":\"") {
+            out.finish = rest.split('"').next().unwrap_or("?").to_string();
+        }
+    }
+    out
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn parse_tenants(s: &str) -> Result<Vec<(String, usize)>> {
+    s.split(',')
+        .map(|part| {
+            let (name, w) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow!("tenant spec {part:?} is not name:weight"))?;
+            Ok((name.to_string(), w.parse::<usize>()?))
+        })
+        .collect()
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let p = Cli::new("stress", "sustained-load stress harness for the HTTP front end")
+        .opt("conns", "200", "concurrent connections per round")
+        .opt("rounds", "2", "back-to-back waves of connections")
+        .opt("steps", "12", "tokens requested per completion")
+        .opt("workers", "48", "HTTP worker threads")
+        .opt("backlog", "64", "accepted-connection backlog before inline 503 shed")
+        .opt("max-live", "8", "decode batch width ceiling")
+        .opt("max-queue", "128", "admission queue cap (503 past it)")
+        .opt("tenants", "a:3,b:1", "QoS weights, e.g. a:3,b:1")
+        .opt("tenant-queue-cap", "48", "per-tenant queued-request cap (429 past it)")
+        .opt("spec-pct", "15", "percent of clients decoding speculatively")
+        .opt("cancel-pct", "10", "percent of clients abandoning mid-stream")
+        .opt("buffered-pct", "10", "percent of clients using stream:false")
+        .opt("pool-pages", "96", "paged KV pool capacity (0 = ring per session)")
+        .opt("json", "", "write the machine-readable record here (bench gate)")
+        .parse(&args)?;
+    let conns = p.get_usize("conns")?;
+    let rounds = p.get_usize("rounds")?.max(1);
+    let steps = p.get_usize("steps")?.max(1);
+    let spec_pct = p.get_usize("spec-pct")?;
+    let cancel_pct = p.get_usize("cancel-pct")?;
+    let buffered_pct = p.get_usize("buffered-pct")?;
+    let tenants = parse_tenants(p.get("tenants"))?;
+
+    // tiny seeded model: the harness measures the serving plane, not the
+    // GEMM kernels (bench_gemm owns those)
+    let fp = Gpt2Model::test_model(2, 32, 2, 48, 64, 7);
+    let vocab = fp.cfg.vocab_size as u32;
+    let gen = Arc::new(GenerationServer::start(
+        GenBackend::Int(QuantizedGpt2::new(fp.clone(), EngineSpec::muxq())),
+        GenerationConfig {
+            max_live: p.get_usize("max-live")?,
+            max_queue: p.get_usize("max-queue")?,
+            max_new_tokens: steps,
+            pool_pages: p.get_usize("pool-pages")?,
+            page_rows: 4,
+            qos: QosConfig {
+                weights: tenants.clone(),
+                max_queue_per_tenant: p.get_usize("tenant-queue-cap")?,
+                ..QosConfig::default()
+            },
+            ..Default::default()
+        },
+    ));
+    let srv = HttpServer::start(
+        gen.clone(),
+        ServeConfig {
+            workers: p.get_usize("workers")?,
+            backlog: p.get_usize("backlog")?,
+            model_id: fp.cfg.name.clone(),
+            engine_tag: EngineSpec::muxq().tag(),
+            ..Default::default()
+        },
+    )?;
+    let addr = srv.addr();
+    println!(
+        "stress: {conns} conns x {rounds} rounds vs {addr}  \
+         (mix: {spec_pct}% spec, {cancel_pct}% cancel, {buffered_pct}% buffered; \
+         tenants {})",
+        p.get("tenants")
+    );
+
+    let mut outcomes: Vec<Outcome> = Vec::with_capacity(conns * rounds);
+    let t_all = Instant::now();
+    for round in 0..rounds {
+        let barrier = Arc::new(Barrier::new(conns));
+        let handles: Vec<_> = (0..conns)
+            .map(|i| {
+                let barrier = barrier.clone();
+                let tenant = tenants[i % tenants.len()].0.clone();
+                let mode = mode_for(i, spec_pct, cancel_pct, buffered_pct);
+                // deterministic per-client prompt, 4..8 tokens
+                let n = 4 + (i + round) % 4;
+                let prompt: Vec<String> = (0..n)
+                    .map(|j| (((i * 7 + j * 13 + round) as u32) % vocab).to_string())
+                    .collect();
+                let mut body = format!(
+                    "{{\"prompt\": [{}], \"max_tokens\": {steps}, \"tenant\": \"{tenant}\"",
+                    prompt.join(", ")
+                );
+                match mode {
+                    Mode::Speculative => {
+                        body.push_str(", \"speculative\": {\"k\": 2, \"draft\": \"naive-int8\"}")
+                    }
+                    Mode::Buffered => body.push_str(", \"stream\": false"),
+                    _ => {}
+                }
+                body.push('}');
+                std::thread::spawn(move || {
+                    barrier.wait(); // everyone connects at once
+                    run_client(addr, &body, mode)
+                })
+            })
+            .collect();
+        for h in handles {
+            outcomes.push(h.join().expect("client thread panicked"));
+        }
+    }
+    let wall_s = t_all.elapsed().as_secs_f64();
+
+    // ---- aggregate
+    let served = outcomes.iter().filter(|o| o.status == 200 && !o.cancelled).count();
+    let refused_429 = outcomes.iter().filter(|o| o.status == 429).count();
+    let refused_503 = outcomes.iter().filter(|o| o.status == 503).count();
+    let io_errors = outcomes.iter().filter(|o| o.status == 0).count();
+    let client_cancels = outcomes.iter().filter(|o| o.cancelled).count();
+    let tokens_total: usize = outcomes.iter().map(|o| o.tokens).sum();
+    let tok_s = tokens_total as f64 / wall_s.max(1e-9);
+    let mut ttfts: Vec<f64> =
+        outcomes.iter().filter(|o| o.ttft_ms >= 0.0).map(|o| o.ttft_ms).collect();
+    ttfts.sort_by(|a, b| a.total_cmp(b));
+    let mut gaps: Vec<f64> = outcomes.iter().flat_map(|o| o.gaps_ms.iter().copied()).collect();
+    gaps.sort_by(|a, b| a.total_cmp(b));
+    let st = gen.stats();
+    let sheds = gen.metrics().counter("http_sheds").get();
+    let by_tenant = gen.metrics().counters_with_prefix("tokens_tenant_");
+
+    println!("\n---- outcome ({wall_s:.2}s wall)");
+    println!(
+        "served {served}   refused 429/{refused_429} 503/{refused_503} shed/{sheds}   \
+         client-cancels {client_cancels} (server cancelled {})   io-errors {io_errors}",
+        st.cancelled
+    );
+    println!(
+        "tokens {tokens_total} ({tok_s:.0} tok/s aggregate)   evictions {}   \
+         pool refusals {}   batch fill {:.2}",
+        st.evicted,
+        st.pool_refusals,
+        st.batch_fill()
+    );
+    println!(
+        "ttft p50 {:.1}ms p99 {:.1}ms   per-token p50 {:.2}ms p99 {:.2}ms",
+        percentile(&ttfts, 0.50),
+        percentile(&ttfts, 0.99),
+        percentile(&gaps, 0.50),
+        percentile(&gaps, 0.99),
+    );
+    for (name, tokens) in &by_tenant {
+        println!("  {name}: {tokens} served tokens");
+    }
+    let share_ratio = if by_tenant.len() >= 2 && by_tenant.iter().all(|(_, t)| *t > 0) {
+        // tenants sort lexically; report first/last (a:3,b:1 -> ~3)
+        by_tenant.first().unwrap().1 as f64 / by_tenant.last().unwrap().1 as f64
+    } else {
+        0.0
+    };
+    if share_ratio > 0.0 {
+        println!("tenant share ratio (first/last, weights want it ~weight ratio): {share_ratio:.2}");
+    }
+
+    // ---- the npusim twin: price this tick shape on the modeled NPU
+    let ncfg = NpuConfig::default();
+    let plan = ServeTickPlan::build(
+        Method::Muxq,
+        fp.cfg.n_layer,
+        fp.cfg.d_model,
+        8,
+        8,
+        8,
+        p.get_usize("max-live")?,
+        tenants.len(),
+    );
+    let sim_cap = plan.tok_per_s(&ncfg);
+    let sim_util = plan.utilization(&ncfg, tok_s);
+    let sim_sched = plan.sched_overhead_fraction(&ncfg);
+    println!(
+        "\nnpusim serve tick: modeled capacity {sim_cap:.0} tok/s, predicted utilization \
+         {:.1}% at the measured rate, DWRR overhead {:.4}% of the tick",
+        sim_util * 100.0,
+        sim_sched * 100.0
+    );
+
+    // sanity: the harness itself asserts the load actually served
+    assert!(served > 0, "no client was served at all");
+    assert!(tokens_total > 0, "no tokens streamed");
+    for o in outcomes.iter().filter(|o| o.finish == "length") {
+        assert_eq!(
+            o.tokens, steps,
+            "a finish=length stream carried {} tokens, wanted {steps}",
+            o.tokens
+        );
+    }
+
+    if !p.get("json").is_empty() {
+        let json = format!(
+            "{{\n  \"bench\": \"stress_serve\",\n  \"bootstrap\": false,\n  \
+             \"conns\": {conns},\n  \"rounds\": {rounds},\n  \"steps\": {steps},\n  \
+             \"served\": {served},\n  \"refused_429\": {refused_429},\n  \
+             \"refused_503\": {refused_503},\n  \"sheds\": {sheds},\n  \
+             \"io_errors\": {io_errors},\n  \"client_cancels\": {client_cancels},\n  \
+             \"server_cancelled\": {},\n  \"evictions\": {},\n  \
+             \"tokens_total\": {tokens_total},\n  \"tok_s\": {tok_s:.1},\n  \
+             \"ttft_p50_ms\": {:.2},\n  \"ttft_p99_ms\": {:.2},\n  \
+             \"per_token_p50_ms\": {:.3},\n  \"per_token_p99_ms\": {:.3},\n  \
+             \"tenant_share_ratio\": {share_ratio:.3},\n  \
+             \"sim_npu_util\": {sim_util:.4},\n  \"sim_sched_overhead\": {sim_sched:.6}\n}}\n",
+            st.cancelled,
+            st.evicted,
+            percentile(&ttfts, 0.50),
+            percentile(&ttfts, 0.99),
+            percentile(&gaps, 0.50),
+            percentile(&gaps, 0.99),
+        );
+        std::fs::write(p.get("json"), &json)?;
+        println!("wrote {}", p.get("json"));
+    }
+
+    srv.shutdown();
+    Ok(())
+}

@@ -1,10 +1,13 @@
 #!/usr/bin/env bash
-# GEMM bench smoke gate: run bench_gemm in quick mode, refresh the
+# Perf smoke gates: (1) run bench_gemm in quick mode, refresh the
 # repo-root BENCH_gemm.json perf-trajectory record, and FAIL if packed
-# single-thread throughput regressed >20% vs the committed baseline.
+# single-thread throughput (or any decode tokens/s metric) regressed
+# >20% vs the committed baseline; (2) run the HTTP serving stress
+# harness (examples/stress.rs) and gate BENCH_serve.json the same way
+# (aggregate tok_s within 20%, p99 TTFT within 25%).
 #
 # Usage: rust/scripts/bench_check.sh
-# The committed baseline may carry "bootstrap": true (no measured numbers
+# A committed baseline may carry "bootstrap": true (no measured numbers
 # yet, e.g. first checkout on a new host class); the first real run then
 # records the baseline instead of gating. The full CI gate (build + tests
 # + rustdoc link hygiene + this smoke) is rust/scripts/ci_check.sh.
@@ -13,7 +16,9 @@ cd "$(dirname "$0")/../.."
 
 BASELINE=BENCH_gemm.json
 NEW=$(mktemp /tmp/bench_gemm.XXXXXX.json)
-trap 'rm -f "$NEW"' EXIT
+SERVE_BASELINE=BENCH_serve.json
+SERVE_NEW=$(mktemp /tmp/bench_serve.XXXXXX.json)
+trap 'rm -f "$NEW" "$SERVE_NEW"' EXIT
 
 # the crate manifest may live at the repo root or beside the rust/ tree
 MANIFEST_ARGS=()
@@ -60,9 +65,11 @@ print(f"OK: packed_1t {cur_ms:.3f}ms vs baseline {old_ms:.3f}ms")
 # recorded before a subsystem existed lack its field - skip until the
 # first baseline carrying it lands. decode_tok_s = plain sequential
 # decode; decode_tok_s_spec = speculative draft-and-verify decode;
-# decode_tok_s_w4 = the nibble-packed W4A8 weight path.
+# decode_tok_s_w4 = the nibble-packed W4A8 weight path;
+# decode_tok_s_resq = the low-rank-residual W4 operator.
 tok_gates_ok = True
-for field in ("decode_tok_s", "decode_tok_s_spec", "decode_tok_s_w4"):
+for field in ("decode_tok_s", "decode_tok_s_spec", "decode_tok_s_w4",
+              "decode_tok_s_resq"):
     old_tok, new_tok = base.get(field), new.get(field)
     if old_tok is None or new_tok is None:
         continue
@@ -84,4 +91,53 @@ if cur_ms < old_ms and tok_gates_ok:
     shutil.copy(new_path, baseline_path)
 elif cur_ms < old_ms:
     print("packed improved but a decode tokens/s metric did not; keeping old baseline")
+EOF
+
+# ---- serving-plane gate: the stress harness under the default load
+# (200 conns x 2 rounds of mixed plain/spec/cancel/buffered traffic)
+cargo run --release "${MANIFEST_ARGS[@]}" --example stress -- --json "$SERVE_NEW"
+
+python3 - "$SERVE_BASELINE" "$SERVE_NEW" <<'EOF'
+import json, shutil, sys
+
+baseline_path, new_path = sys.argv[1], sys.argv[2]
+with open(new_path) as f:
+    new = json.load(f)
+
+try:
+    with open(baseline_path) as f:
+        base = json.load(f)
+except FileNotFoundError:
+    base = None
+
+if base is None or base.get("bootstrap"):
+    print(f"no measured serving baseline; recording this run as {baseline_path}")
+    shutil.copy(new_path, baseline_path)
+    sys.exit(0)
+
+ok_to_advance = True
+# aggregate serving throughput: HIGHER is better, >20% drop fails
+old_tok, cur_tok = base["tok_s"], new["tok_s"]
+if cur_tok < old_tok * 0.8:
+    print(f"FAIL: serve tok_s {cur_tok:.0f} vs baseline {old_tok:.0f} "
+          f"(>{(1 - cur_tok/old_tok)*100:.0f}% slower)")
+    sys.exit(1)
+print(f"OK: serve tok_s {cur_tok:.0f} vs baseline {old_tok:.0f}")
+if cur_tok < old_tok:
+    ok_to_advance = False
+
+# tail first-token latency: LOWER is better, >25% growth fails
+old_ttft, cur_ttft = base["ttft_p99_ms"], new["ttft_p99_ms"]
+if old_ttft > 0 and cur_ttft > old_ttft * 1.25:
+    print(f"FAIL: ttft_p99 {cur_ttft:.1f}ms vs baseline {old_ttft:.1f}ms "
+          f"(>{(cur_ttft/old_ttft - 1)*100:.0f}% slower)")
+    sys.exit(1)
+print(f"OK: ttft_p99 {cur_ttft:.1f}ms vs baseline {old_ttft:.1f}ms")
+if old_ttft > 0 and cur_ttft > old_ttft:
+    ok_to_advance = False
+
+# advance only when NOTHING regressed (same anti-ratchet rule as above)
+if ok_to_advance and (cur_tok > old_tok or (old_ttft > 0 and cur_ttft < old_ttft)):
+    print("serving numbers improved everywhere; advancing baseline")
+    shutil.copy(new_path, baseline_path)
 EOF

@@ -90,6 +90,18 @@ echo "== w4 nibble-kernel gate (400 oracle-diff cases)"
 # oracle on real hardware
 MUXQ_PROPTEST_CASES=400 cargo test -q "${MANIFEST_ARGS[@]}" --test w4_kernels
 
+echo "== serve smoke gate (loopback HTTP completion, bit-exact)"
+# the HTTP front end end-to-end over a real loopback socket: start the
+# server on an ephemeral port, stream one completion, assert the token
+# stream equals a solo DecodeSession bit for bit, shut down cleanly
+cargo run --release "${MANIFEST_ARGS[@]}" --example http_serve -- --smoke
+
+echo "== tenant-fairness gate (200 randomized QoS schedules)"
+# the DWRR scheduler's weighted-share and no-starvation guarantees
+# (tests/tenant_qos.rs) re-run with the case count pinned high, same
+# rationale as the kv-pool and w4 gates above
+MUXQ_PROPTEST_CASES=200 cargo test -q "${MANIFEST_ARGS[@]}" --test tenant_qos
+
 echo "== cargo clippy --all-targets (-D warnings)"
 # deliberate idioms of the kernel code, allowed rather than rewritten:
 # index-heavy loops (readability of the tile math) and the microkernel

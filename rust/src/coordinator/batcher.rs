@@ -13,11 +13,26 @@
 //!   skinny decode GEMM per step, and new sessions are prefill-admitted
 //!   *between* steps, never queued behind an in-flight batch — so there
 //!   is no max-wait knob, only backpressure ([`AdmitError::QueueFull`]).
+//!
+//!   Admission order is **multi-tenant deficit-weighted round-robin**
+//!   (DWRR), not FIFO: each [`GenerateRequest::tenant`] gets its own
+//!   lane, lanes earn token-credits (`deficit`) in proportion to their
+//!   configured [`QosConfig`] weight, and a lane is served while its
+//!   deficit covers the front request's token cost. Under saturation,
+//!   served-token shares converge to the weight ratio; every backlogged
+//!   lane keeps earning credit, so none starves. A single-tenant queue
+//!   degenerates to the original FIFO order bit-exactly (one lane, one
+//!   front). Per-tenant queue caps shed excess load at `push`
+//!   ([`AdmitError::TenantBusy`]); per-tenant in-flight caps hold a
+//!   lane's requests in queue until one of its admitted sessions
+//!   retires (tracked by RAII [`TenantPermit`]s).
+//!
+//! [`GenerateRequest::tenant`]: super::request::GenerateRequest
 
 use super::request::{Pending, PendingGen};
 use super::variants::VariantKey;
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Queue key: variant + bit-widths (f32 bit patterns so Eq/Ord work).
@@ -62,7 +77,11 @@ impl Default for BatcherConfig {
 
 #[derive(Debug, PartialEq, Eq)]
 pub enum AdmitError {
+    /// whole-queue backpressure (every tenant is shedding)
     QueueFull,
+    /// this tenant's own queue cap is full (others may still admit);
+    /// the HTTP front end maps it to 429 with a `Retry-After`
+    TenantBusy,
     Shutdown,
 }
 
@@ -177,10 +196,90 @@ impl Batcher {
 pub enum DecodePop {
     /// a request to prefill-admit
     Req(PendingGen),
-    /// nothing queued (non-blocking pop, or spurious wake)
+    /// nothing queued — or everything queued belongs to tenants at
+    /// their in-flight cap (non-blocking pop, or spurious wake)
     Empty,
     /// queue shut down and fully drained
     Shutdown,
+}
+
+/// Per-tenant QoS policy for the decode admission queue.
+#[derive(Debug, Clone)]
+pub struct QosConfig {
+    /// `(tenant, weight)` pairs; tenants not listed get
+    /// `default_weight`. Weights are clamped to `>= 1` — a zero weight
+    /// would starve by construction.
+    pub weights: Vec<(String, usize)>,
+    /// weight for tenants not in `weights`
+    pub default_weight: usize,
+    /// DWRR quantum: token-credits a lane earns per crediting round per
+    /// unit of weight. Smaller quanta interleave tenants more finely;
+    /// the served-share ratio is quantum-independent.
+    pub quantum_tokens: u64,
+    /// max admitted-but-unretired sessions per tenant (0 = unlimited).
+    /// A lane at its cap is held in queue — not shed — until one of its
+    /// sessions retires ([`TenantPermit`] drop).
+    pub max_inflight_per_tenant: usize,
+    /// max queued requests per tenant (0 = no per-tenant cap). The
+    /// whole-queue `max_queue` still applies on top.
+    pub max_queue_per_tenant: usize,
+    /// assumed token cost for requests asking `max_new_tokens == 0`
+    /// (the server substitutes its own default budget for those, so the
+    /// generation server sets this to that default)
+    pub default_cost_tokens: u64,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        QosConfig {
+            weights: Vec::new(),
+            default_weight: 1,
+            quantum_tokens: 32,
+            max_inflight_per_tenant: 0,
+            max_queue_per_tenant: 0,
+            default_cost_tokens: 128,
+        }
+    }
+}
+
+impl QosConfig {
+    /// Weight builder.
+    pub fn with_weight(mut self, tenant: &str, weight: usize) -> QosConfig {
+        self.weights.push((tenant.to_string(), weight));
+        self
+    }
+
+    fn weight_of(&self, tenant: &str) -> u64 {
+        self.weights
+            .iter()
+            .find(|(t, _)| t == tenant)
+            .map(|(_, w)| *w)
+            .unwrap_or(self.default_weight)
+            .max(1) as u64
+    }
+
+    /// The DWRR token cost of one request: its effective budget under a
+    /// server whose default/ceiling budget is `default_cost_tokens`.
+    fn cost_of(&self, p: &PendingGen) -> u64 {
+        let d = self.default_cost_tokens.max(1);
+        if p.req.max_new_tokens == 0 {
+            d
+        } else {
+            (p.req.max_new_tokens as u64).min(d).max(1)
+        }
+    }
+}
+
+/// One tenant's lane. Lanes persist once created (they carry the
+/// in-flight count); only *backlogged* lanes sit in the DWRR rotation.
+struct TenantLane {
+    queue: VecDeque<PendingGen>,
+    weight: u64,
+    /// DWRR token credit; reset when the lane drains (inactive lanes
+    /// must not bank credit)
+    deficit: u64,
+    /// admitted sessions not yet retired ([`TenantPermit`] outstanding)
+    inflight: usize,
 }
 
 /// Admission queue for generation sessions (see module docs). `push` is
@@ -189,20 +288,57 @@ pub enum DecodePop {
 /// non-blocking between decode steps.
 pub struct DecodeQueue {
     max_queue: usize,
+    qos: QosConfig,
     state: Mutex<GenState>,
     nonempty: Condvar,
 }
 
 struct GenState {
-    queue: VecDeque<PendingGen>,
+    lanes: BTreeMap<String, TenantLane>,
+    /// DWRR rotation: tenants with a non-empty queue, in
+    /// became-backlogged order
+    order: Vec<String>,
+    /// rotation position the next pop scans from
+    cursor: usize,
+    total: usize,
     shutdown: bool,
 }
 
+impl GenState {
+    /// Drop `tenant` from the rotation (its queue drained), keeping the
+    /// cursor pointing at the same next tenant.
+    fn retire_from_order(&mut self, tenant: &str) {
+        if let Some(pos) = self.order.iter().position(|t| t == tenant) {
+            self.order.remove(pos);
+            if pos < self.cursor {
+                self.cursor -= 1;
+            }
+            if self.cursor >= self.order.len() {
+                self.cursor = 0;
+            }
+        }
+    }
+}
+
 impl DecodeQueue {
+    /// FIFO-compatible constructor: one implicit lane per tenant with
+    /// the default QoS (all weights 1, no caps). With a single tenant
+    /// this is exactly the pre-QoS FIFO queue.
     pub fn new(max_queue: usize) -> DecodeQueue {
+        DecodeQueue::with_qos(max_queue, QosConfig::default())
+    }
+
+    pub fn with_qos(max_queue: usize, qos: QosConfig) -> DecodeQueue {
         DecodeQueue {
             max_queue,
-            state: Mutex::new(GenState { queue: VecDeque::new(), shutdown: false }),
+            qos,
+            state: Mutex::new(GenState {
+                lanes: BTreeMap::new(),
+                order: Vec::new(),
+                cursor: 0,
+                total: 0,
+                shutdown: false,
+            }),
             nonempty: Condvar::new(),
         }
     }
@@ -212,16 +348,43 @@ impl DecodeQueue {
         if st.shutdown {
             return Err(AdmitError::Shutdown);
         }
-        if st.queue.len() >= self.max_queue {
+        if st.total >= self.max_queue {
             return Err(AdmitError::QueueFull);
         }
-        st.queue.push_back(p);
+        let tenant = p.req.tenant.clone();
+        let weight = self.qos.weight_of(&tenant);
+        let cap = self.qos.max_queue_per_tenant;
+        let lane = st.lanes.entry(tenant.clone()).or_insert(TenantLane {
+            queue: VecDeque::new(),
+            weight,
+            deficit: 0,
+            inflight: 0,
+        });
+        if cap > 0 && lane.queue.len() >= cap {
+            return Err(AdmitError::TenantBusy);
+        }
+        let was_empty = lane.queue.is_empty();
+        lane.queue.push_back(p);
+        if was_empty {
+            st.order.push(tenant);
+        }
+        st.total += 1;
         self.nonempty.notify_one();
         Ok(())
     }
 
     pub fn queued(&self) -> usize {
-        self.state.lock().unwrap().queue.len()
+        self.state.lock().unwrap().total
+    }
+
+    /// Requests queued for one tenant (its lane backlog, not in-flight).
+    pub fn queued_for(&self, tenant: &str) -> usize {
+        self.state.lock().unwrap().lanes.get(tenant).map(|l| l.queue.len()).unwrap_or(0)
+    }
+
+    /// Admitted-but-unretired sessions for one tenant.
+    pub fn inflight_for(&self, tenant: &str) -> usize {
+        self.state.lock().unwrap().lanes.get(tenant).map(|l| l.inflight).unwrap_or(0)
     }
 
     pub fn shutdown(&self) {
@@ -230,19 +393,90 @@ impl DecodeQueue {
         self.nonempty.notify_all();
     }
 
-    /// Next request to admit. `block == false` (the between-steps probe)
-    /// returns immediately; `block == true` (no live sessions) waits for
-    /// work or shutdown. Shutdown reports immediately — decode shutdown
-    /// stops at the next step boundary; the scheduler fails whatever is
-    /// still queued via [`DecodeQueue::drain_remaining`] rather than
-    /// paying a prefill per doomed request.
+    /// Retire one admitted session of `tenant`, freeing an in-flight
+    /// slot (called by [`TenantPermit::drop`]). Wakes poppers: a lane
+    /// held at its cap may now be servable.
+    fn release(&self, tenant: &str) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(lane) = st.lanes.get_mut(tenant) {
+            lane.inflight = lane.inflight.saturating_sub(1);
+        }
+        self.nonempty.notify_all();
+    }
+
+    /// DWRR service decision over the backlogged, under-cap lanes.
+    ///
+    /// Classic DWRR visits lanes round-robin, crediting `quantum ×
+    /// weight` per visit and serving while the deficit covers the front
+    /// cost. Simulating those empty crediting rounds one by one would
+    /// make `pop` O(max_cost/quantum); instead the rounds are
+    /// fast-forwarded: pick the lane that becomes affordable in the
+    /// fewest crediting rounds (ties broken by rotation distance from
+    /// the cursor), credit EVERY eligible lane those rounds, serve the
+    /// winner. Identical schedule, O(lanes) per pop.
+    fn try_pop(&self, st: &mut GenState) -> Option<PendingGen> {
+        let cap = self.qos.max_inflight_per_tenant;
+        let quantum = self.qos.quantum_tokens.max(1);
+        let n = st.order.len();
+        // (rounds to afford, rotation distance, order index)
+        let mut best: Option<(u64, usize, usize)> = None;
+        for dist in 0..n {
+            let pos = (st.cursor + dist) % n;
+            let lane = &st.lanes[&st.order[pos]];
+            if cap > 0 && lane.inflight >= cap {
+                continue;
+            }
+            let front = lane.queue.front().expect("rotation holds only backlogged lanes");
+            let cost = self.qos.cost_of(front);
+            let need = cost.saturating_sub(lane.deficit);
+            let rounds = need.div_ceil(quantum * lane.weight);
+            if best.map_or(true, |(r, d, _)| (rounds, dist) < (r, d)) {
+                best = Some((rounds, dist, pos));
+            }
+        }
+        let (rounds, _, pos) = best?;
+        if rounds > 0 {
+            // fast-forward `rounds` crediting visits for every lane
+            // still in contention (backlogged + under cap)
+            for t in st.order.clone() {
+                let lane = st.lanes.get_mut(&t).expect("rotation lane exists");
+                if cap > 0 && lane.inflight >= cap {
+                    continue;
+                }
+                lane.deficit = lane.deficit.saturating_add(rounds * quantum * lane.weight);
+            }
+        }
+        let tenant = st.order[pos].clone();
+        let lane = st.lanes.get_mut(&tenant).expect("winner lane exists");
+        let p = lane.queue.pop_front().expect("winner was backlogged");
+        lane.deficit -= self.qos.cost_of(&p).min(lane.deficit);
+        lane.inflight += 1;
+        st.total -= 1;
+        if lane.queue.is_empty() {
+            lane.deficit = 0; // drained lanes don't bank credit
+            st.retire_from_order(&tenant);
+        } else {
+            // leave the cursor ON the winner: remaining deficit lets it
+            // burst (DWRR serves a lane while its credit lasts)
+            st.cursor = pos.min(st.order.len().saturating_sub(1));
+        }
+        Some(p)
+    }
+
+    /// Next request to admit, in DWRR order. `block == false` (the
+    /// between-steps probe) returns immediately; `block == true` (no
+    /// live sessions) waits for work, an in-flight release, or
+    /// shutdown. Shutdown reports immediately — decode shutdown stops
+    /// at the next step boundary; the scheduler fails whatever is still
+    /// queued via [`DecodeQueue::drain_remaining`] rather than paying a
+    /// prefill per doomed request.
     pub fn pop(&self, block: bool) -> DecodePop {
         let mut st = self.state.lock().unwrap();
         loop {
             if st.shutdown {
                 return DecodePop::Shutdown;
             }
-            if let Some(p) = st.queue.pop_front() {
+            if let Some(p) = self.try_pop(&mut st) {
                 return DecodePop::Req(p);
             }
             if !block {
@@ -253,10 +487,41 @@ impl DecodeQueue {
     }
 
     /// Take every request still queued (used by the scheduler after
-    /// shutdown to send each a terminal event).
+    /// shutdown to send each a terminal event). Deterministic tenant
+    /// (lexicographic) order, FIFO within a tenant.
     pub fn drain_remaining(&self) -> Vec<PendingGen> {
         let mut st = self.state.lock().unwrap();
-        st.queue.drain(..).collect()
+        let mut out = Vec::with_capacity(st.total);
+        for lane in st.lanes.values_mut() {
+            lane.deficit = 0;
+            out.extend(lane.queue.drain(..));
+        }
+        st.order.clear();
+        st.cursor = 0;
+        st.total = 0;
+        out
+    }
+}
+
+/// RAII in-flight slot for one admitted session: the decode scheduler
+/// mints one per popped request and parks it in the live-session record;
+/// dropping it (retirement on ANY path — completion, cancel, eviction,
+/// admit failure, shutdown) releases the tenant's slot so its next
+/// queued request becomes servable.
+pub struct TenantPermit {
+    queue: Arc<DecodeQueue>,
+    tenant: String,
+}
+
+impl TenantPermit {
+    pub fn new(queue: Arc<DecodeQueue>, tenant: String) -> TenantPermit {
+        TenantPermit { queue, tenant }
+    }
+}
+
+impl Drop for TenantPermit {
+    fn drop(&mut self) {
+        self.queue.release(&self.tenant);
     }
 }
 
@@ -402,6 +667,117 @@ mod tests {
         let (p, _r) = pending_gen();
         q.push(p).unwrap();
         assert!(waiter.join().unwrap());
+    }
+
+    fn pending_gen_for(
+        tenant: &str,
+        max_new: usize,
+    ) -> (PendingGen, mpsc::Receiver<crate::coordinator::request::TokenEvent>) {
+        use crate::coordinator::request::GenerateRequest;
+        let (tx, rx) = mpsc::channel();
+        (
+            PendingGen {
+                req: GenerateRequest::greedy(vec![1, 2, 3], max_new).with_tenant(tenant),
+                submitted: Instant::now(),
+                tx,
+            },
+            rx,
+        )
+    }
+
+    /// quantum 1 + equal costs make the DWRR schedule fully deterministic
+    fn fine_grained_qos() -> QosConfig {
+        QosConfig {
+            quantum_tokens: 1,
+            default_cost_tokens: 4,
+            ..QosConfig::default()
+        }
+    }
+
+    #[test]
+    fn decode_queue_dwrr_weighted_ratio() {
+        let qos = fine_grained_qos().with_weight("a", 3).with_weight("b", 1);
+        let q = DecodeQueue::with_qos(64, qos);
+        let mut rxs = Vec::new();
+        for _ in 0..8 {
+            let (p, r) = pending_gen_for("a", 4);
+            q.push(p).unwrap();
+            rxs.push(r);
+            let (p, r) = pending_gen_for("b", 4);
+            q.push(p).unwrap();
+            rxs.push(r);
+        }
+        let mut served = Vec::new();
+        while let DecodePop::Req(p) = q.pop(false) {
+            served.push(p.req.tenant.clone());
+        }
+        assert_eq!(served.len(), 16, "every backlogged request drains");
+        // weights 3:1 with equal costs → the steady-state schedule is
+        // a,a,a,b repeating; check the ratio over the saturated prefix
+        let first8_a = served[..8].iter().filter(|t| *t == "a").count();
+        assert_eq!(first8_a, 6, "3:1 share in saturation, got {:?}", served);
+        assert!(
+            served[..4].iter().any(|t| t == "b"),
+            "light tenant is not starved: {:?}",
+            served
+        );
+    }
+
+    #[test]
+    fn decode_queue_single_tenant_is_fifo() {
+        // one lane (the anonymous tenant) must preserve exact push order
+        // even with wildly mixed costs — bit-compat with the pre-QoS queue
+        let q = DecodeQueue::new(16);
+        let costs = [7usize, 1, 200, 3, 50];
+        let mut rxs = Vec::new();
+        for &c in &costs {
+            let (p, r) = pending_gen_for("", c);
+            q.push(p).unwrap();
+            rxs.push(r);
+        }
+        for &c in &costs {
+            match q.pop(false) {
+                DecodePop::Req(p) => assert_eq!(p.req.max_new_tokens, c),
+                _ => panic!("expected Req"),
+            }
+        }
+        assert!(matches!(q.pop(false), DecodePop::Empty));
+    }
+
+    #[test]
+    fn decode_queue_tenant_queue_cap_sheds() {
+        let qos = QosConfig { max_queue_per_tenant: 2, ..QosConfig::default() };
+        let q = DecodeQueue::with_qos(64, qos);
+        let (p1, _r1) = pending_gen_for("a", 4);
+        let (p2, _r2) = pending_gen_for("a", 4);
+        let (p3, _r3) = pending_gen_for("a", 4);
+        let (p4, _r4) = pending_gen_for("b", 4);
+        q.push(p1).unwrap();
+        q.push(p2).unwrap();
+        assert!(matches!(q.push(p3), Err(AdmitError::TenantBusy)));
+        // another tenant still admits — the cap is per-lane
+        q.push(p4).unwrap();
+        assert_eq!(q.queued_for("a"), 2);
+        assert_eq!(q.queued_for("b"), 1);
+    }
+
+    #[test]
+    fn decode_queue_inflight_cap_holds_until_release() {
+        let qos = QosConfig { max_inflight_per_tenant: 1, ..QosConfig::default() };
+        let q = std::sync::Arc::new(DecodeQueue::with_qos(64, qos));
+        let (p1, _r1) = pending_gen_for("a", 4);
+        let (p2, _r2) = pending_gen_for("a", 4);
+        q.push(p1).unwrap();
+        q.push(p2).unwrap();
+        assert!(matches!(q.pop(false), DecodePop::Req(_)));
+        assert_eq!(q.inflight_for("a"), 1);
+        // lane is at its in-flight cap: held in queue, not shed
+        assert!(matches!(q.pop(false), DecodePop::Empty));
+        assert_eq!(q.queued_for("a"), 1);
+        // retiring the admitted session (permit drop) frees the slot
+        drop(TenantPermit::new(q.clone(), "a".to_string()));
+        assert_eq!(q.inflight_for("a"), 0);
+        assert!(matches!(q.pop(false), DecodePop::Req(_)));
     }
 
     #[test]

@@ -35,7 +35,7 @@
 //! variants; generation holds stateful sessions over the native packed
 //! INT engine and interleaves prefill admission with decode steps.
 
-use super::batcher::{AdmitError, DecodePop, DecodeQueue};
+use super::batcher::{AdmitError, DecodePop, DecodeQueue, QosConfig, TenantPermit};
 use super::request::{FinishReason, GenerateHandle, GenerateRequest, PendingGen, TokenEvent};
 use crate::gpt2::kvpool::{KvPool, PrefixCache};
 use crate::gpt2::session::{decode_step_batch, Sampler, SessionModel, SessionState, WrapPolicy};
@@ -92,6 +92,12 @@ pub struct GenerationConfig {
     pub page_rows: usize,
     /// prefixes the shared [`PrefixCache`] retains (paged mode only)
     pub prefix_cache_entries: usize,
+    /// multi-tenant admission policy (weights, quanta, per-tenant caps).
+    /// The default is weight-1-for-everyone with no caps, which makes a
+    /// single-tenant server FIFO bit-exact. `default_cost_tokens` is
+    /// overridden with `max_new_tokens` at start so DWRR costs mirror
+    /// the server's actual budget clamp.
+    pub qos: QosConfig,
 }
 
 impl Default for GenerationConfig {
@@ -104,9 +110,37 @@ impl Default for GenerationConfig {
             pool_pages: 0,
             page_rows: 16,
             prefix_cache_entries: 8,
+            qos: QosConfig::default(),
         }
     }
 }
+
+/// Structured admission outcome for [`GenerationServer::try_submit`] —
+/// the HTTP front end maps each variant to a status code (`serve::api`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// whole-queue backpressure — HTTP 503 + `Retry-After`
+    QueueFull,
+    /// this tenant's own queue cap — HTTP 429 + `Retry-After`
+    TenantBusy,
+    /// malformed request (e.g. empty prompt) — HTTP 400
+    BadRequest(String),
+    /// server stopped — HTTP 503
+    Shutdown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "generation queue full (backpressure)"),
+            SubmitError::TenantBusy => write!(f, "tenant queue full (per-tenant cap)"),
+            SubmitError::BadRequest(m) => write!(f, "{m}"),
+            SubmitError::Shutdown => write!(f, "generation server is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Point-in-time statistics snapshot.
 #[derive(Debug, Clone)]
@@ -238,6 +272,12 @@ struct Live {
     /// (wrap re-prefills happen inside decode steps; the delta is
     /// harvested after each step)
     prefills_seen: u64,
+    /// QoS lane this session was admitted under ("" = anonymous);
+    /// non-empty tenants get a `tokens_tenant_<name>` served counter
+    tenant: String,
+    /// the tenant's in-flight slot — dropping the `Live` on ANY retire
+    /// path releases it, unblocking the lane's next queued request
+    _permit: TenantPermit,
     tx: mpsc::Sender<TokenEvent>,
     t0: Instant,
 }
@@ -287,7 +327,12 @@ impl GenerationServer {
         // never reach the queue (or see its shutdown) — clamp like
         // max_queue below
         let cfg = GenerationConfig { max_live: cfg.max_live.max(1), ..cfg };
-        let queue = Arc::new(DecodeQueue::new(cfg.max_queue.max(1)));
+        // DWRR costs track the budgets the scheduler will actually grant
+        let qos = QosConfig {
+            default_cost_tokens: cfg.max_new_tokens.max(1) as u64,
+            ..cfg.qos.clone()
+        };
+        let queue = Arc::new(DecodeQueue::with_qos(cfg.max_queue.max(1), qos));
         let metrics = Arc::new(Registry::default());
         let running = Arc::new(AtomicBool::new(true));
         let pool = (cfg.pool_pages > 0)
@@ -306,25 +351,32 @@ impl GenerationServer {
 
     /// Submit a generation request; returns the token stream handle.
     pub fn submit(&self, req: GenerateRequest) -> Result<GenerateHandle> {
+        self.try_submit(req).map_err(|e| anyhow!("{e}"))
+    }
+
+    /// [`GenerationServer::submit`] with a structured admission outcome,
+    /// so callers (the HTTP front end) can distinguish shedding
+    /// (429/503 + `Retry-After`) from malformed input (400).
+    pub fn try_submit(&self, req: GenerateRequest) -> Result<GenerateHandle, SubmitError> {
         self.metrics.counter("submitted").inc();
         if !self.running.load(Ordering::SeqCst) {
             self.metrics.counter("rejected").inc();
-            return Err(anyhow!("generation server is shut down"));
+            return Err(SubmitError::Shutdown);
         }
         if req.prompt.is_empty() {
             self.metrics.counter("rejected").inc();
-            return Err(anyhow!("empty prompt"));
+            return Err(SubmitError::BadRequest("empty prompt".into()));
         }
         let (tx, rx) = mpsc::channel();
         match self.queue.push(PendingGen { req, submitted: Instant::now(), tx }) {
             Ok(()) => Ok(GenerateHandle { rx }),
-            Err(AdmitError::QueueFull) => {
+            Err(e) => {
                 self.metrics.counter("rejected").inc();
-                Err(anyhow!("generation queue full (backpressure)"))
-            }
-            Err(AdmitError::Shutdown) => {
-                self.metrics.counter("rejected").inc();
-                Err(anyhow!("generation server is shut down"))
+                Err(match e {
+                    AdmitError::QueueFull => SubmitError::QueueFull,
+                    AdmitError::TenantBusy => SubmitError::TenantBusy,
+                    AdmitError::Shutdown => SubmitError::Shutdown,
+                })
             }
         }
     }
@@ -415,16 +467,23 @@ fn scheduler_loop(
         // ---- admission: prefill new sessions between decode steps
         while !draining && live.len() < cfg.max_live {
             match queue.pop(live.is_empty()) {
-                DecodePop::Req(p) => admit(
-                    &backend,
-                    &cfg,
-                    &metrics,
-                    p,
-                    &mut live,
-                    &mut drafts,
-                    pool.as_ref(),
-                    &mut prefix,
-                ),
+                DecodePop::Req(p) => {
+                    // the in-flight slot is held from pop to retirement;
+                    // admit() parks it in the Live (or drops it with the
+                    // request on any admission-failure path)
+                    let permit = TenantPermit::new(queue.clone(), p.req.tenant.clone());
+                    admit(
+                        &backend,
+                        &cfg,
+                        &metrics,
+                        p,
+                        permit,
+                        &mut live,
+                        &mut drafts,
+                        pool.as_ref(),
+                        &mut prefix,
+                    )
+                }
                 DecodePop::Empty => break,
                 DecodePop::Shutdown => draining = true,
             }
@@ -571,9 +630,21 @@ fn scheduler_loop(
             for next in emitted {
                 l.produced += 1;
                 metrics.counter("tokens_generated").inc();
+                if !l.tenant.is_empty() {
+                    metrics.counter(&format!("tokens_tenant_{}", l.tenant)).inc();
+                }
                 if l.tx.send(TokenEvent::Token { index: l.produced - 1, token: next }).is_err() {
-                    // client dropped the handle: cancel the session
+                    // client dropped the handle (closed socket / abandoned
+                    // stream): cancel the session NOW — its KV pages free
+                    // on drop instead of decoding to budget. The terminal
+                    // event is best-effort (the receiver is gone); the
+                    // `cancelled` counter is the observable record.
                     metrics.counter("cancelled").inc();
+                    let _ = l.tx.send(TokenEvent::Done {
+                        reason: FinishReason::Cancelled,
+                        generated: l.produced,
+                        latency: l.t0.elapsed(),
+                    });
                     retired = true;
                     break;
                 }
@@ -616,6 +687,7 @@ fn admit(
     cfg: &GenerationConfig,
     metrics: &Registry,
     p: PendingGen,
+    permit: TenantPermit,
     live: &mut Vec<Live>,
     drafts: &mut Vec<(DraftKind, DraftModel)>,
     pool: Option<&KvPool>,
@@ -743,8 +815,18 @@ fn admit(
     };
     let first = sampler.sample_in_context(&logits, window);
     metrics.counter("tokens_generated").inc();
+    if !p.req.tenant.is_empty() {
+        metrics.counter(&format!("tokens_tenant_{}", p.req.tenant)).inc();
+    }
     if p.tx.send(TokenEvent::Token { index: 0, token: first }).is_err() {
+        // abandoned before its first token — retire immediately (the
+        // permit drops with this frame, freeing the tenant's slot)
         metrics.counter("cancelled").inc();
+        let _ = p.tx.send(TokenEvent::Done {
+            reason: FinishReason::Cancelled,
+            generated: 1,
+            latency: p.submitted.elapsed(),
+        });
         return;
     }
     if budget == 1 {
@@ -763,6 +845,8 @@ fn admit(
         next: first,
         produced: 1,
         budget,
+        tenant: p.req.tenant.clone(),
+        _permit: permit,
         tx: p.tx,
         t0: p.submitted,
     };

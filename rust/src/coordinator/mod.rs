@@ -34,8 +34,10 @@ pub mod request;
 pub mod scheduler;
 pub mod variants;
 
-pub use batcher::{AdmitError, BatcherConfig};
-pub use generation::{GenBackend, GenerationConfig, GenerationServer, GenerationStats};
+pub use batcher::{AdmitError, BatcherConfig, QosConfig, TenantPermit};
+pub use generation::{
+    GenBackend, GenerationConfig, GenerationServer, GenerationStats, SubmitError,
+};
 pub use request::{
     FinishReason, GenerateHandle, GenerateRequest, ResponseHandle, ScoreRequest, ScoreResponse,
     SpeculativeConfig, TokenEvent,

@@ -100,6 +100,11 @@ pub struct GenerateRequest {
     pub seed: u64,
     /// `Some` routes this session through draft-and-verify decoding
     pub speculative: Option<SpeculativeConfig>,
+    /// multi-tenant QoS key: requests are queued per tenant and served
+    /// by deficit-weighted round-robin ([`super::batcher::DecodeQueue`]).
+    /// `""` (the default) is the anonymous tenant — a single-tenant
+    /// server degenerates to the original FIFO order exactly.
+    pub tenant: String,
 }
 
 impl GenerateRequest {
@@ -114,6 +119,7 @@ impl GenerateRequest {
             repetition_penalty: 1.0,
             seed: 0,
             speculative: None,
+            tenant: String::new(),
         }
     }
 
@@ -146,6 +152,12 @@ impl GenerateRequest {
         self
     }
 
+    /// Tag this request with a QoS tenant (builder).
+    pub fn with_tenant(mut self, tenant: &str) -> GenerateRequest {
+        self.tenant = tenant.to_string();
+        self
+    }
+
     /// The per-session sampler this request asks for (`Sampler` itself
     /// degrades to greedy argmax when the parameters are degenerate).
     pub fn sampler(&self) -> crate::gpt2::Sampler {
@@ -155,9 +167,7 @@ impl GenerateRequest {
     }
 }
 
-/// Why a generation stream ended. (Client-side cancellation — dropping
-/// the [`GenerateHandle`] — has no variant: the dropped receiver can't
-/// observe one; it surfaces in the server's `cancelled` stat instead.)
+/// Why a generation stream ended.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FinishReason {
     /// produced `max_new_tokens`
@@ -169,6 +179,25 @@ pub enum FinishReason {
     /// sessions could keep decoding. The stream ends cleanly with the
     /// tokens generated so far.
     Evicted,
+    /// the client abandoned the stream (dropped [`GenerateHandle`] /
+    /// closed socket) and the server cancelled the live session so its
+    /// KV pages free promptly. The dropped receiver can't observe this
+    /// event — the scheduler still records it (the `cancelled` stat and
+    /// the HTTP front end's `http_disconnects` counter), and the
+    /// best-effort `Done` send documents the retirement in one place.
+    Cancelled,
+}
+
+impl FinishReason {
+    /// Wire spelling used by the HTTP front end's SSE `finish` events.
+    pub fn as_wire(&self) -> &'static str {
+        match self {
+            FinishReason::MaxTokens => "length",
+            FinishReason::Shutdown => "shutdown",
+            FinishReason::Evicted => "evicted",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
 }
 
 /// One event on a generation stream. Tokens arrive strictly in order
@@ -275,6 +304,26 @@ mod tests {
         assert_eq!(sc.k, 3);
         assert_eq!(sc.draft, crate::gpt2::DraftKind::NaiveInt8);
         assert!(GenerateRequest::greedy(vec![1], 1).speculative.is_none());
+    }
+
+    #[test]
+    fn tenant_rides_the_request() {
+        assert_eq!(GenerateRequest::greedy(vec![1], 1).tenant, "");
+        assert_eq!(GenerateRequest::greedy(vec![1], 1).with_tenant("team-a").tenant, "team-a");
+    }
+
+    #[test]
+    fn finish_reason_wire_spellings_are_distinct() {
+        use std::collections::BTreeSet;
+        let all = [
+            FinishReason::MaxTokens,
+            FinishReason::Shutdown,
+            FinishReason::Evicted,
+            FinishReason::Cancelled,
+        ];
+        let wires: BTreeSet<&str> = all.iter().map(|r| r.as_wire()).collect();
+        assert_eq!(wires.len(), all.len());
+        assert_eq!(FinishReason::MaxTokens.as_wire(), "length");
     }
 
     #[test]

@@ -13,6 +13,8 @@
 //!   LLM.int8(), SmoothQuant) mirroring the python/jax reference.
 //! * [`gpt2`] — native f32 GPT-2 forward + KV-cache incremental decode
 //!   (baseline, Fig.1 capture, and the generation engine).
+//! * [`serve`] — HTTP front end over the generation server: hand-rolled
+//!   HTTP/1.1 + SSE streaming, multi-tenant QoS admission, load shedding.
 //! * [`npusim`] — systolic-array cost model (hardware-efficiency study).
 //! * [`data`] — corpus generator, BPE tokenizer, tensor container.
 //! * [`util`] — in-repo substrates: CLI parsing, bench harness,
@@ -26,6 +28,7 @@ pub mod harness;
 pub mod npusim;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 /// Crate-wide result alias.

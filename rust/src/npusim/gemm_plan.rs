@@ -11,7 +11,7 @@
 //! [`Plan::widened_mac_speedup`] quantifies what the pairing buys one
 //! plan end to end.
 
-use super::{gemm_cost_w, Cost, NpuConfig, Precision};
+use super::{gemm_cost_w, model_cost, Cost, NpuConfig, Precision};
 use crate::quant::Method;
 
 /// One GEMM in a plan. Activation operand at `prec`, weight operand at
@@ -416,6 +416,127 @@ impl SpecRoundPlan {
     }
 }
 
+/// Pricing of ONE multi-tenant batched decode tick — the serving
+/// front end's steady state (`coordinator::generation` + the `serve`
+/// HTTP layer are the host twins). `batch` live sessions each advance
+/// one token in a single `t = batch` forward pass through the
+/// projection stack, and before the pass launches the scheduler pays
+/// deficit-weighted round-robin bookkeeping
+/// ([`NpuConfig::tenant_sched_cycles`]) once per tenant lane with live
+/// work.
+///
+/// Why batching wins exactly here: a `t = 1` decode step is
+/// bytes-dominated ([`Plan::decode_step`]), so a `t = G` pass streams
+/// the SAME weight bytes to advance G sessions — per-token latency
+/// drops nearly G-fold until compute catches the byte stream. The
+/// per-tenant overhead is the price of fairness: it grows with lane
+/// count, not batch size, so consolidating tenants never beats adding
+/// batch rows. The stress harness (`examples/stress.rs`) reports this
+/// plan's predicted utilization next to the measured serving numbers.
+#[derive(Debug, Clone)]
+pub struct ServeTickPlan {
+    pub method: Method,
+    pub n_layer: usize,
+    pub d_model: usize,
+    /// outlier channels / residual rank at the post-LN sites
+    pub r: usize,
+    pub bits: u32,
+    pub w_bits: u32,
+    /// live sessions advanced per tick (decode batch rows)
+    pub batch: usize,
+    /// distinct tenant lanes holding those sessions (`<= batch` in any
+    /// real schedule; clamped up to 1)
+    pub n_tenants: usize,
+}
+
+impl ServeTickPlan {
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        method: Method,
+        n_layer: usize,
+        d_model: usize,
+        r: usize,
+        bits: u32,
+        w_bits: u32,
+        batch: usize,
+        n_tenants: usize,
+    ) -> ServeTickPlan {
+        ServeTickPlan {
+            method,
+            n_layer,
+            d_model,
+            r,
+            bits,
+            w_bits,
+            batch: batch.max(1),
+            n_tenants: n_tenants.clamp(1, batch.max(1)),
+        }
+    }
+
+    /// DWRR bookkeeping cycles per tick: one credit/rotation pass per
+    /// tenant lane.
+    pub fn sched_cycles(&self, cfg: &NpuConfig) -> f64 {
+        self.n_tenants as f64 * cfg.tenant_sched_cycles
+    }
+
+    /// Full cost of one tick: the batched `t = batch` projection pass
+    /// plus the per-tenant scheduling overhead (serial with the pass —
+    /// admission decides the rows before the DMA queue fills).
+    pub fn tick_cost(&self, cfg: &NpuConfig) -> Cost {
+        let mut c = model_cost(
+            cfg,
+            self.method,
+            self.n_layer,
+            self.batch,
+            self.d_model,
+            self.r,
+            self.bits,
+            self.w_bits,
+        );
+        c.extra_cycles += self.sched_cycles(cfg);
+        c
+    }
+
+    /// Wall-clock per token emitted: tick latency / batch rows.
+    pub fn per_token_latency_us(&self, cfg: &NpuConfig) -> f64 {
+        self.tick_cost(cfg).latency_us(cfg) / self.batch as f64
+    }
+
+    /// Aggregate serving throughput ceiling (tokens/s across all
+    /// tenants) with the array ticking back to back.
+    pub fn tok_per_s(&self, cfg: &NpuConfig) -> f64 {
+        let us = self.tick_cost(cfg).latency_us(cfg);
+        if us <= 0.0 {
+            return 0.0;
+        }
+        self.batch as f64 * 1e6 / us
+    }
+
+    /// Fraction of the tick spent on fairness bookkeeping rather than
+    /// the forward pass — the QoS tax. Tiny at defaults; grows linearly
+    /// with tenant count.
+    pub fn sched_overhead_fraction(&self, cfg: &NpuConfig) -> f64 {
+        let total = self.tick_cost(cfg).cycles();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.sched_cycles(cfg) / total
+    }
+
+    /// Simulated NPU utilization at an offered aggregate load: the
+    /// fraction of wall time the array + DMA is busy if the serving
+    /// plane sustains `offered_tok_s` tokens/s. Clamps at 1.0 — offered
+    /// load beyond [`ServeTickPlan::tok_per_s`] queues (and eventually
+    /// sheds as 429/503), it cannot raise utilization further.
+    pub fn utilization(&self, cfg: &NpuConfig, offered_tok_s: f64) -> f64 {
+        let cap = self.tok_per_s(cfg);
+        if cap <= 0.0 || offered_tok_s <= 0.0 {
+            return 0.0;
+        }
+        (offered_tok_s / cap).min(1.0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -646,5 +767,54 @@ mod tests {
         assert!(resq.bytes_per_step() < w8.bytes_per_step());
         // the residual leg is FP work off the uniform INT dataflow
         assert!(resq.non_uniform_fraction(&cfg) > 0.0);
+    }
+
+    #[test]
+    fn serve_tick_batching_amortizes_the_weight_stream() {
+        // decode is bytes-dominated, so a G-row tick streams the same
+        // weights as one row: per-token latency must fall steeply with
+        // batch, and aggregate tokens/s must rise
+        let cfg = NpuConfig::default();
+        let solo = ServeTickPlan::build(Method::Muxq, 12, 768, 8, 8, 8, 1, 1);
+        let batched = ServeTickPlan::build(Method::Muxq, 12, 768, 8, 8, 8, 8, 4);
+        assert!(
+            batched.per_token_latency_us(&cfg) < solo.per_token_latency_us(&cfg) / 4.0,
+            "batch 8 per-token {} vs solo {}",
+            batched.per_token_latency_us(&cfg),
+            solo.per_token_latency_us(&cfg)
+        );
+        assert!(batched.tok_per_s(&cfg) > 4.0 * solo.tok_per_s(&cfg));
+        // batch=1, one tenant decomposes to decode_cost + one lane's
+        // bookkeeping exactly
+        let want = super::super::decode_cost(&cfg, Method::Muxq, 12, 768, 8, 8, 8).cycles()
+            + cfg.tenant_sched_cycles;
+        assert!((solo.tick_cost(&cfg).cycles() - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serve_tick_tenant_overhead_is_linear_and_small() {
+        let cfg = NpuConfig::default();
+        let one = ServeTickPlan::build(Method::Muxq, 12, 768, 8, 8, 8, 16, 1);
+        let four = ServeTickPlan::build(Method::Muxq, 12, 768, 8, 8, 8, 16, 4);
+        assert_eq!(four.sched_cycles(&cfg), 4.0 * one.sched_cycles(&cfg));
+        // fairness tax at defaults: well under 1% of the tick
+        assert!(four.sched_overhead_fraction(&cfg) < 0.01);
+        // the knob is live, and the clamp keeps lanes <= batch rows
+        let dear = cfg.clone().with_tenant_sched(1e6);
+        assert!(four.sched_overhead_fraction(&dear) > four.sched_overhead_fraction(&cfg));
+        let clamped = ServeTickPlan::build(Method::Muxq, 12, 768, 8, 8, 8, 4, 99);
+        assert_eq!(clamped.n_tenants, 4);
+        assert_eq!(ServeTickPlan::build(Method::Muxq, 12, 768, 8, 8, 8, 0, 0).batch, 1);
+    }
+
+    #[test]
+    fn serve_tick_utilization_tracks_offered_load() {
+        let cfg = NpuConfig::default();
+        let plan = ServeTickPlan::build(Method::Muxq, 12, 768, 8, 8, 8, 8, 2);
+        let cap = plan.tok_per_s(&cfg);
+        assert!(cap > 0.0);
+        assert!((plan.utilization(&cfg, cap / 2.0) - 0.5).abs() < 1e-9);
+        assert_eq!(plan.utilization(&cfg, cap * 10.0), 1.0, "overload clamps at busy");
+        assert_eq!(plan.utilization(&cfg, 0.0), 0.0);
     }
 }

@@ -56,6 +56,13 @@ pub struct NpuConfig {
     /// (paged attention reads K then V of each page as separate strided
     /// bursts instead of one streaming transfer).
     pub page_gather_setup_cycles: f64,
+    /// cycles of per-tenant scheduler bookkeeping per decode tick:
+    /// deficit-weighted round-robin credit accounting, lane rotation and
+    /// in-flight cap checks for ONE tenant lane
+    /// (`coordinator::batcher::DecodeQueue`'s host-side twin). Paid once
+    /// per distinct tenant per batched tick in
+    /// [`gemm_plan::ServeTickPlan`].
+    pub tenant_sched_cycles: f64,
     /// INT accumulator lane width in bits. 32 models one i8 MAC per lane
     /// per cycle; 16 models i16 pair accumulation — two i8 MACs per lane
     /// before the i32 widening step, the datapath of
@@ -87,6 +94,7 @@ impl Default for NpuConfig {
             pack_bytes_per_cycle: 32.0,
             domain_switch_cycles: 2048,
             page_gather_setup_cycles: 32.0,
+            tenant_sched_cycles: 64.0,
             acc_width_bits: 16,
             dot_width: None,
             pj_per_int8_mac: 0.2,
@@ -135,6 +143,13 @@ impl NpuConfig {
     /// burst in paged attention).
     pub fn with_page_gather_setup(mut self, cycles: f64) -> Self {
         self.page_gather_setup_cycles = cycles;
+        self
+    }
+
+    /// Builder-style per-tenant scheduler bookkeeping cost (cycles per
+    /// tenant lane per batched decode tick).
+    pub fn with_tenant_sched(mut self, cycles: f64) -> Self {
+        self.tenant_sched_cycles = cycles;
         self
     }
 

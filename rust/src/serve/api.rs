@@ -1,0 +1,290 @@
+//! Wire format of the serving front end: the OpenAI-style completions
+//! request body, the SSE event grammar streamed back, and the mapping
+//! from [`SubmitError`] to HTTP statuses. Kept free of sockets so every
+//! piece is unit-testable; `serve::server` does the I/O.
+//!
+//! # Request body (`POST /v1/completions`)
+//!
+//! ```json
+//! {
+//!   "prompt": [464, 3290, 318],      // token IDs (no tokenizer in-repo)
+//!   "max_tokens": 32,                 // 0 / absent = server default
+//!   "temperature": 0.8,               // absent = greedy
+//!   "top_k": 40, "top_p": 0.95,
+//!   "repetition_penalty": 1.1,
+//!   "seed": 7,
+//!   "tenant": "team-a",               // QoS lane; absent = anonymous
+//!   "speculative": {"k": 3, "draft": "naive-int4"},
+//!   "stream": true                    // false = buffered JSON response
+//! }
+//! ```
+//!
+//! # SSE event grammar (`Content-Type: text/event-stream`, chunked)
+//!
+//! ```text
+//! data: {"index":0,"token":464}\n\n        one per generated token
+//! data: {"finish":"length","generated":32,"latency_ms":8.2}\n\n
+//! data: {"error":"..."}\n\n                terminal on failure
+//! data: [DONE]\n\n                          always the last event
+//! ```
+//!
+//! `finish` spells [`FinishReason::as_wire`]: `length`, `shutdown`,
+//! `evicted`, `cancelled`.
+
+use crate::coordinator::{FinishReason, GenerateRequest, SubmitError};
+use crate::gpt2::DraftKind;
+use crate::util::json::Json;
+use std::time::Duration;
+
+/// A parsed completions call: the generation request plus transport
+/// options that never reach the scheduler.
+#[derive(Debug, Clone)]
+pub struct CompletionCall {
+    pub req: GenerateRequest,
+    /// stream SSE events (default) or buffer into one JSON response
+    pub stream: bool,
+}
+
+/// Parse a completions body. Every failure is a client error (HTTP 400)
+/// with the reason in the message.
+pub fn parse_completion(body: &[u8]) -> Result<CompletionCall, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not utf-8".to_string())?;
+    let j = Json::parse(text).map_err(|e| format!("bad json: {e:#}"))?;
+    let prompt_field = j.get("prompt").map_err(|_| "missing \"prompt\"".to_string())?;
+    let arr = prompt_field
+        .as_arr()
+        .map_err(|_| "\"prompt\" must be an array of token ids".to_string())?;
+    let mut prompt = Vec::with_capacity(arr.len());
+    for (i, t) in arr.iter().enumerate() {
+        let n = t.as_f64().map_err(|_| format!("prompt[{i}] is not a number"))?;
+        if n < 0.0 || n.fract() != 0.0 || n > u32::MAX as f64 {
+            return Err(format!("prompt[{i}] = {n} is not a token id"));
+        }
+        prompt.push(n as u32);
+    }
+    if prompt.is_empty() {
+        return Err("empty prompt".to_string());
+    }
+    let num = |key: &str, default: f64| -> Result<f64, String> {
+        match j.get(key) {
+            Ok(v) => v.as_f64().map_err(|_| format!("{key:?} must be a number")),
+            Err(_) => Ok(default),
+        }
+    };
+    let max_tokens = num("max_tokens", 0.0)?;
+    if max_tokens < 0.0 || max_tokens.fract() != 0.0 {
+        return Err(format!("\"max_tokens\" = {max_tokens} is not a non-negative integer"));
+    }
+    let mut req = GenerateRequest::greedy(prompt, max_tokens as usize);
+    req.temperature = num("temperature", 0.0)? as f32;
+    req.top_k = num("top_k", 0.0)? as usize;
+    req.top_p = num("top_p", 1.0)? as f32;
+    req.repetition_penalty = num("repetition_penalty", 1.0)? as f32;
+    req.seed = num("seed", 0.0)? as u64;
+    if req.top_p <= 0.0 || req.top_p > 1.0 {
+        return Err(format!("\"top_p\" = {} out of (0, 1]", req.top_p));
+    }
+    if let Ok(t) = j.get("tenant") {
+        req.tenant = t.as_str().map_err(|_| "\"tenant\" must be a string".to_string())?.into();
+        if req.tenant.contains(|c: char| c.is_whitespace()) {
+            return Err("\"tenant\" must not contain whitespace".to_string());
+        }
+    }
+    if let Ok(sp) = j.get("speculative") {
+        let k = sp
+            .get("k")
+            .and_then(|v| v.as_usize())
+            .map_err(|_| "\"speculative.k\" must be an integer".to_string())?;
+        if k == 0 {
+            return Err("\"speculative.k\" must be >= 1".to_string());
+        }
+        let tag = sp
+            .get("draft")
+            .and_then(|v| v.as_str().map(str::to_string))
+            .map_err(|_| "\"speculative.draft\" must be a string".to_string())?;
+        let draft = DraftKind::parse(&tag).map_err(|e| format!("{e:#}"))?;
+        req = req.with_speculative(k, draft);
+    }
+    let stream = match j.get("stream") {
+        Ok(v) => v.as_bool().map_err(|_| "\"stream\" must be a boolean".to_string())?,
+        Err(_) => true,
+    };
+    Ok(CompletionCall { req, stream })
+}
+
+/// `(status, Retry-After?)` for an admission outcome. Shedding answers
+/// (429/503) always carry `Retry-After` so well-behaved clients back
+/// off instead of hammering the acceptor.
+pub fn submit_error_status(e: &SubmitError) -> (u16, bool) {
+    match e {
+        SubmitError::BadRequest(_) => (400, false),
+        SubmitError::TenantBusy => (429, true),
+        SubmitError::QueueFull | SubmitError::Shutdown => (503, true),
+    }
+}
+
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+pub fn error_body(message: &str) -> String {
+    format!("{{\"error\": \"{}\"}}\n", json_escape(message))
+}
+
+/// One generated token as an SSE event.
+pub fn sse_token(index: usize, token: u32) -> String {
+    format!("data: {{\"index\":{index},\"token\":{token}}}\n\n")
+}
+
+/// Terminal event for a finished stream.
+pub fn sse_done(reason: FinishReason, generated: usize, latency: Duration) -> String {
+    format!(
+        "data: {{\"finish\":\"{}\",\"generated\":{},\"latency_ms\":{:.3}}}\n\n",
+        reason.as_wire(),
+        generated,
+        latency.as_secs_f64() * 1e3
+    )
+}
+
+/// Terminal event for a failed stream.
+pub fn sse_error(message: &str) -> String {
+    format!("data: {{\"error\":\"{}\"}}\n\n", json_escape(message))
+}
+
+/// The stream-end sentinel (OpenAI convention).
+pub fn sse_terminator() -> &'static str {
+    "data: [DONE]\n\n"
+}
+
+/// Buffered (`"stream": false`) completion response body.
+pub fn completion_body(tokens: &[u32], reason: FinishReason, latency: Duration) -> String {
+    let toks: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
+    format!(
+        "{{\"tokens\": [{}], \"finish\": \"{}\", \"generated\": {}, \"latency_ms\": {:.3}}}\n",
+        toks.join(", "),
+        reason.as_wire(),
+        tokens.len(),
+        latency.as_secs_f64() * 1e3
+    )
+}
+
+/// `GET /v1/models` body.
+pub fn models_body(model_id: &str, engine_tag: &str) -> String {
+    format!(
+        "{{\"object\": \"list\", \"data\": [{{\"id\": \"{}\", \"object\": \"model\", \
+         \"owned_by\": \"muxq\", \"engine\": \"{}\"}}]}}\n",
+        json_escape(model_id),
+        json_escape(engine_tag)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_body() {
+        let c = parse_completion(br#"{"prompt": [1, 2, 3]}"#).unwrap();
+        assert_eq!(c.req.prompt, vec![1, 2, 3]);
+        assert_eq!(c.req.max_new_tokens, 0, "absent max_tokens -> server default");
+        assert!(c.req.sampler().is_greedy());
+        assert_eq!(c.req.tenant, "");
+        assert!(c.req.speculative.is_none());
+        assert!(c.stream, "streaming is the default");
+    }
+
+    #[test]
+    fn parses_every_knob() {
+        let c = parse_completion(
+            br#"{"prompt": [5], "max_tokens": 9, "temperature": 0.8, "top_k": 40,
+                "top_p": 0.95, "repetition_penalty": 1.1, "seed": 7,
+                "tenant": "team-a", "speculative": {"k": 3, "draft": "naive-int4"},
+                "stream": false}"#,
+        )
+        .unwrap();
+        assert_eq!(c.req.max_new_tokens, 9);
+        assert_eq!(c.req.temperature, 0.8);
+        assert_eq!((c.req.top_k, c.req.top_p), (40, 0.95));
+        assert_eq!(c.req.repetition_penalty, 1.1);
+        assert_eq!(c.req.seed, 7);
+        assert_eq!(c.req.tenant, "team-a");
+        let sp = c.req.speculative.unwrap();
+        assert_eq!(sp.k, 3);
+        assert_eq!(sp.draft, DraftKind::NaiveInt4);
+        assert!(!c.stream);
+    }
+
+    #[test]
+    fn rejects_malformed_bodies() {
+        for bad in [
+            &b"not json"[..],
+            br#"{}"#,
+            br#"{"prompt": "text"}"#,
+            br#"{"prompt": []}"#,
+            br#"{"prompt": [1.5]}"#,
+            br#"{"prompt": [-1]}"#,
+            br#"{"prompt": [1], "max_tokens": -3}"#,
+            br#"{"prompt": [1], "top_p": 0.0}"#,
+            br#"{"prompt": [1], "top_p": 1.5}"#,
+            br#"{"prompt": [1], "tenant": 5}"#,
+            br#"{"prompt": [1], "tenant": "a b"}"#,
+            br#"{"prompt": [1], "speculative": {"k": 0, "draft": "naive-int8"}}"#,
+            br#"{"prompt": [1], "speculative": {"k": 2, "draft": "warp-drive"}}"#,
+            br#"{"prompt": [1], "stream": "yes"}"#,
+        ] {
+            assert!(
+                parse_completion(bad).is_err(),
+                "should reject {:?}",
+                String::from_utf8_lossy(bad)
+            );
+        }
+    }
+
+    #[test]
+    fn admission_outcomes_map_to_statuses() {
+        assert_eq!(submit_error_status(&SubmitError::BadRequest("x".into())), (400, false));
+        assert_eq!(submit_error_status(&SubmitError::TenantBusy), (429, true));
+        assert_eq!(submit_error_status(&SubmitError::QueueFull), (503, true));
+        assert_eq!(submit_error_status(&SubmitError::Shutdown), (503, true));
+    }
+
+    #[test]
+    fn sse_events_are_well_formed() {
+        assert_eq!(sse_token(0, 464), "data: {\"index\":0,\"token\":464}\n\n");
+        let done = sse_done(FinishReason::MaxTokens, 4, Duration::from_millis(8));
+        assert!(done.starts_with("data: {\"finish\":\"length\",\"generated\":4,"));
+        assert!(done.ends_with("\n\n"));
+        assert_eq!(sse_error("a\"b"), "data: {\"error\":\"a\\\"b\"}\n\n");
+        assert_eq!(sse_terminator(), "data: [DONE]\n\n");
+        // every event parses back as json (the sentinel aside)
+        for ev in [sse_token(1, 2), done, sse_error("x\n")] {
+            let payload = ev.trim_start_matches("data: ").trim_end();
+            Json::parse(payload).expect("event payload is valid json");
+        }
+    }
+
+    #[test]
+    fn buffered_and_models_bodies_parse() {
+        let b = completion_body(&[7, 9], FinishReason::MaxTokens, Duration::from_millis(1));
+        let j = Json::parse(b.trim()).unwrap();
+        assert_eq!(j.get("generated").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("finish").unwrap().as_str().unwrap(), "length");
+        let m = Json::parse(models_body("tiny", "muxq-w8a8").trim()).unwrap();
+        assert_eq!(
+            m.get("data").unwrap().as_arr().unwrap()[0].get("id").unwrap().as_str().unwrap(),
+            "tiny"
+        );
+    }
+}

@@ -1,0 +1,290 @@
+//! Hand-rolled HTTP/1.1 primitives over blocking `std::net` streams —
+//! the crate builds with no Cargo.toml of its own (see the CI preflight),
+//! so there is no tokio/hyper to lean on. Scope is deliberately narrow:
+//! one request per connection (`Connection: close`), `Content-Length`
+//! bodies on the way in, fixed-length or chunked-transfer bodies on the
+//! way out. Chunked writing is what streams SSE tokens: each event is
+//! one flushed chunk, and a failed chunk write is the disconnect signal
+//! that cancels the generation session.
+
+use std::io::{BufRead, Read, Write};
+
+/// Parse limits: a request line + headers beyond this is a 431, a
+/// declared body beyond this is a 413. Token-ID prompts are a few bytes
+/// per token, so these bounds fit tens of thousands of prompt tokens.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// A parsed request. Header names are lowercased at parse time.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// path only — any `?query` suffix is split off and kept verbatim
+    pub path: String,
+    pub query: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+/// Why a request failed to parse; carries the status to answer with.
+#[derive(Debug)]
+pub struct ParseError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl ParseError {
+    fn new(status: u16, message: impl Into<String>) -> ParseError {
+        ParseError { status, message: message.into() }
+    }
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Read one request off a buffered stream. `Ok(None)` means the
+    /// client closed before sending anything (not an error — pools and
+    /// health checks do this); `Err` carries the status to answer with.
+    pub fn read_from<R: BufRead>(r: &mut R) -> Result<Option<Request>, ParseError> {
+        let mut head = 0usize;
+        let mut line = String::new();
+        let n = r
+            .read_line(&mut line)
+            .map_err(|e| ParseError::new(400, format!("read request line: {e}")))?;
+        if n == 0 {
+            return Ok(None);
+        }
+        head += n;
+        let line = line.trim_end();
+        let mut parts = line.split(' ');
+        let (method, target, version) =
+            match (parts.next(), parts.next(), parts.next(), parts.next()) {
+                (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => (m, t, v),
+                _ => return Err(ParseError::new(400, format!("malformed request line {line:?}"))),
+            };
+        if !version.starts_with("HTTP/1.") {
+            return Err(ParseError::new(505, format!("unsupported version {version:?}")));
+        }
+        let (path, query) = match target.split_once('?') {
+            Some((p, q)) => (p.to_string(), q.to_string()),
+            None => (target.to_string(), String::new()),
+        };
+        let mut headers = Vec::new();
+        loop {
+            let mut hl = String::new();
+            let n = r
+                .read_line(&mut hl)
+                .map_err(|e| ParseError::new(400, format!("read header: {e}")))?;
+            if n == 0 {
+                return Err(ParseError::new(400, "connection closed mid-headers"));
+            }
+            head += n;
+            if head > MAX_HEAD_BYTES {
+                return Err(ParseError::new(431, "request head too large"));
+            }
+            let hl = hl.trim_end();
+            if hl.is_empty() {
+                break;
+            }
+            let (name, value) = hl
+                .split_once(':')
+                .ok_or_else(|| ParseError::new(400, format!("malformed header {hl:?}")))?;
+            headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+        }
+        let mut req =
+            Request { method: method.to_string(), path, query, headers, body: Vec::new() };
+        if let Some(cl) = req.header("content-length") {
+            let len: usize = cl
+                .parse()
+                .map_err(|_| ParseError::new(400, format!("bad content-length {cl:?}")))?;
+            if len > MAX_BODY_BYTES {
+                return Err(ParseError::new(413, "body too large"));
+            }
+            let mut body = vec![0u8; len];
+            r.read_exact(&mut body)
+                .map_err(|e| ParseError::new(400, format!("short body: {e}")))?;
+            req.body = body;
+        } else if req.header("transfer-encoding").is_some() {
+            // inbound chunked bodies are out of scope for this API
+            return Err(ParseError::new(411, "length required (chunked uploads unsupported)"));
+        }
+        Ok(Some(req))
+    }
+}
+
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete fixed-length response (`Connection: close` — one
+/// request per connection keeps the server stateless across requests).
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", status, status_reason(status))?;
+    write!(w, "Content-Type: {content_type}\r\n")?;
+    write!(w, "Content-Length: {}\r\n", body.len())?;
+    write!(w, "Connection: close\r\n")?;
+    for (name, value) in extra_headers {
+        write!(w, "{name}: {value}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Chunked-transfer body writer for streaming responses. Every chunk is
+/// flushed immediately so SSE events reach the client as they are
+/// produced; the first failed write after the peer closes is how the
+/// server learns a stream was abandoned.
+pub struct ChunkedWriter<W: Write> {
+    w: W,
+    finished: bool,
+}
+
+impl<W: Write> ChunkedWriter<W> {
+    /// Write the streaming response head and return the chunk writer.
+    pub fn start(
+        mut w: W,
+        status: u16,
+        content_type: &str,
+        extra_headers: &[(&str, &str)],
+    ) -> std::io::Result<ChunkedWriter<W>> {
+        write!(w, "HTTP/1.1 {} {}\r\n", status, status_reason(status))?;
+        write!(w, "Content-Type: {content_type}\r\n")?;
+        write!(w, "Transfer-Encoding: chunked\r\n")?;
+        write!(w, "Connection: close\r\n")?;
+        write!(w, "Cache-Control: no-store\r\n")?;
+        for (name, value) in extra_headers {
+            write!(w, "{name}: {value}\r\n")?;
+        }
+        w.write_all(b"\r\n")?;
+        w.flush()?;
+        Ok(ChunkedWriter { w, finished: false })
+    }
+
+    pub fn write_chunk(&mut self, data: &[u8]) -> std::io::Result<()> {
+        if data.is_empty() {
+            return Ok(()); // an empty chunk would terminate the body
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
+    /// Terminal zero-chunk. Safe to skip on error paths (the connection
+    /// closes anyway); calling it twice is a no-op.
+    pub fn finish(&mut self) -> std::io::Result<()> {
+        if self.finished {
+            return Ok(());
+        }
+        self.finished = true;
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &str) -> Result<Option<Request>, ParseError> {
+        Request::read_from(&mut BufReader::new(raw.as_bytes()))
+    }
+
+    #[test]
+    fn parses_get_with_headers() {
+        let r = parse("GET /v1/models?x=1 HTTP/1.1\r\nHost: a\r\nAccept: */*\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/v1/models");
+        assert_eq!(r.query, "x=1");
+        assert_eq!(r.header("host"), Some("a"));
+        assert_eq!(r.header("HOST"), Some("a"), "lookup is case-insensitive");
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_body_by_content_length() {
+        let r = parse("POST /v1/completions HTTP/1.1\r\nContent-Length: 9\r\n\r\n{\"a\": 1}x")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.body, b"{\"a\": 1}x");
+    }
+
+    #[test]
+    fn empty_connection_is_none_not_error() {
+        assert!(parse("").unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_inputs_carry_statuses() {
+        assert_eq!(parse("GARBAGE\r\n\r\n").unwrap_err().status, 400);
+        assert_eq!(parse("GET / SPDY/3\r\n\r\n").unwrap_err().status, 505);
+        assert_eq!(
+            parse("POST / HTTP/1.1\r\nContent-Length: 99\r\n\r\nshort").unwrap_err().status,
+            400
+        );
+        assert_eq!(
+            parse("POST / HTTP/1.1\r\nContent-Length: 9999999999\r\n\r\n").unwrap_err().status,
+            413
+        );
+        assert_eq!(
+            parse("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n").unwrap_err().status,
+            411
+        );
+        let huge = format!("GET / HTTP/1.1\r\nX-Big: {}\r\n\r\n", "y".repeat(MAX_HEAD_BYTES));
+        assert_eq!(parse(&huge).unwrap_err().status, 431);
+    }
+
+    #[test]
+    fn fixed_response_shape() {
+        let mut out = Vec::new();
+        write_response(&mut out, 429, "application/json", &[("Retry-After", "1")], b"{}")
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Content-Length: 2\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+    }
+
+    #[test]
+    fn chunked_stream_shape() {
+        let mut out = Vec::new();
+        {
+            let mut cw = ChunkedWriter::start(&mut out, 200, "text/event-stream", &[]).unwrap();
+            cw.write_chunk(b"data: hi\n\n").unwrap();
+            cw.write_chunk(b"").unwrap(); // dropped, not a terminator
+            cw.finish().unwrap();
+            cw.finish().unwrap(); // idempotent
+        }
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Transfer-Encoding: chunked\r\n"));
+        assert!(text.contains("\r\n\r\na\r\ndata: hi\n\n\r\n0\r\n\r\n"));
+    }
+}

@@ -1,0 +1,71 @@
+//! L4 — the HTTP serving front end: [`GenerationServer`] exposed over
+//! the network with multi-tenant QoS (DESIGN.md §5d).
+//!
+//! Dependency-free by construction (the crate has no Cargo.toml of its
+//! own, so no tokio/hyper): a hand-rolled HTTP/1.1 layer over
+//! `std::net::TcpListener`, thread-per-connection behind a bounded
+//! worker pool, and chunked-transfer SSE for token streaming. Admission
+//! is the coordinator's deficit-weighted round-robin over per-tenant
+//! lanes ([`crate::coordinator::QosConfig`]); backpressure surfaces as
+//! HTTP 429/503 with `Retry-After` instead of blocking the acceptor.
+//!
+//! * [`http`] — request parsing, fixed + chunked response writing.
+//! * [`api`] — the completions wire format, SSE event grammar, and the
+//!   [`crate::coordinator::SubmitError`] → status mapping.
+//! * [`server`] — acceptor, worker pool, routing, stream bridging,
+//!   disconnect-cancel.
+//!
+//! # Quickstart
+//!
+//! Start a server (see `examples/http_serve.rs`, or any test in
+//! `rust/tests/serve_http.rs`):
+//!
+//! ```text
+//! let gen = Arc::new(GenerationServer::start(backend, gen_cfg));
+//! let srv = HttpServer::start(gen, ServeConfig::default())?;   // port 0 = ephemeral
+//! println!("listening on {}", srv.addr());
+//! ```
+//!
+//! Then, with `curl` (prompts are token IDs — the repo has no
+//! tokenizer):
+//!
+//! ```text
+//! # stream a completion as SSE events
+//! curl -N http://127.0.0.1:PORT/v1/completions \
+//!   -d '{"prompt": [464, 3290, 318], "max_tokens": 16, "tenant": "team-a"}'
+//! data: {"index":0,"token":257}
+//! data: {"index":1,"token":922}
+//! ...
+//! data: {"finish":"length","generated":16,"latency_ms":3.1}
+//! data: [DONE]
+//!
+//! # buffered (non-streaming) completion
+//! curl http://127.0.0.1:PORT/v1/completions \
+//!   -d '{"prompt": [464], "max_tokens": 4, "stream": false}'
+//! {"tokens": [922, 11, 257, 30], "finish": "length", "generated": 4, ...}
+//!
+//! # speculative decoding, sampled, per-request
+//! curl -N http://127.0.0.1:PORT/v1/completions \
+//!   -d '{"prompt": [464], "temperature": 0.8, "seed": 7,
+//!        "speculative": {"k": 3, "draft": "naive-int4"}}'
+//!
+//! # the deployed model + operator tag
+//! curl http://127.0.0.1:PORT/v1/models
+//!
+//! # counters (incl. per-tenant served tokens), latency histograms, gauges
+//! curl http://127.0.0.1:PORT/metrics
+//! ```
+//!
+//! Shedding answers carry `Retry-After`: `429` when one tenant's own
+//! queue cap is full ([`crate::coordinator::SubmitError::TenantBusy`]),
+//! `503` when the whole queue or the worker pool is saturated.
+
+pub mod api;
+pub mod http;
+pub mod server;
+
+pub use api::{parse_completion, CompletionCall};
+pub use server::{HttpServer, ServeConfig};
+
+// re-exported so serve users need only this module + coordinator
+pub use crate::coordinator::GenerationServer;

@@ -1,0 +1,563 @@
+//! The HTTP front end: a `std::net::TcpListener` acceptor feeding a
+//! bounded worker pool, one request per connection. Workers parse with
+//! [`serve::http`], map bodies with [`serve::api`], and bridge
+//! [`GenerationServer`] token streams onto chunked SSE.
+//!
+//! ## Admission and shedding
+//!
+//! Three layers shed load before it can block the acceptor:
+//!
+//! 1. **acceptor → worker pool**: accepted connections enter a bounded
+//!    channel; when every worker is busy and the backlog is full the
+//!    acceptor answers `503 + Retry-After` inline and closes (counted
+//!    as `http_sheds`).
+//! 2. **whole-queue backpressure**: [`SubmitError::QueueFull`] /
+//!    [`SubmitError::Shutdown`] → `503 + Retry-After`.
+//! 3. **per-tenant caps**: [`SubmitError::TenantBusy`] → `429 +
+//!    Retry-After` — one noisy tenant is refused while others admit.
+//!
+//! ## Disconnect handling
+//!
+//! Every SSE event is one flushed chunk; the first failed write after
+//! the peer closes surfaces as an error here, the worker drops the
+//! [`GenerateHandle`], and the decode scheduler cancels the live
+//! session at its next step ([`FinishReason::Cancelled`]) — abandoned
+//! streams free their KV pages promptly instead of decoding to budget.
+//! Counted as `http_disconnects`.
+//!
+//! [`serve::http`]: super::http
+//! [`serve::api`]: super::api
+//! [`SubmitError::QueueFull`]: crate::coordinator::SubmitError
+//! [`SubmitError::Shutdown`]: crate::coordinator::SubmitError
+//! [`SubmitError::TenantBusy`]: crate::coordinator::SubmitError
+//! [`FinishReason::Cancelled`]: crate::coordinator::FinishReason
+
+use super::api;
+use super::http::{write_response, ChunkedWriter, Request};
+use crate::coordinator::{GenerationServer, TokenEvent};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// bind address; port 0 picks an ephemeral port (tests, CI smoke)
+    pub addr: String,
+    /// worker threads == max concurrently served connections
+    pub workers: usize,
+    /// accepted connections waiting for a worker before the acceptor
+    /// sheds inline with 503
+    pub backlog: usize,
+    /// reported by `GET /v1/models`
+    pub model_id: String,
+    /// the deployed operator tag (`EngineSpec::tag`), reported next to
+    /// the model id
+    pub engine_tag: String,
+    /// `Retry-After` seconds on 429/503 answers
+    pub retry_after_secs: u64,
+    /// per-connection read timeout (slow or stalled clients release
+    /// their worker instead of pinning it)
+    pub read_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 16,
+            backlog: 64,
+            model_id: "muxq".to_string(),
+            engine_tag: "unknown".to_string(),
+            retry_after_secs: 1,
+            read_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// The running front end. [`HttpServer::shutdown`] (or drop) stops the
+/// acceptor, drains the worker pool, and joins every thread; the
+/// underlying [`GenerationServer`] is shared and NOT shut down here.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    pub fn start(gen: Arc<GenerationServer>, cfg: ServeConfig) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::sync_channel::<TcpStream>(cfg.backlog.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let cfg = Arc::new(cfg);
+        let workers = (0..cfg.workers.max(1))
+            .map(|i| {
+                let rx = rx.clone();
+                let gen = gen.clone();
+                let cfg = cfg.clone();
+                std::thread::Builder::new()
+                    .name(format!("muxq-http-{i}"))
+                    .spawn(move || loop {
+                        // holding the lock only for recv keeps the pool
+                        // work-stealing: any free worker takes the next conn
+                        let stream = match rx.lock().unwrap().recv() {
+                            Ok(s) => s,
+                            Err(_) => return, // acceptor gone, queue drained
+                        };
+                        handle_connection(&gen, &cfg, stream);
+                    })
+                    .expect("spawn http worker")
+            })
+            .collect();
+        let acceptor = {
+            let stop = stop.clone();
+            let gen = gen.clone();
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name("muxq-http-accept".into())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break; // tx drops here; workers drain and exit
+                        }
+                        let stream = match conn {
+                            Ok(s) => s,
+                            Err(_) => continue,
+                        };
+                        match tx.try_send(stream) {
+                            Ok(()) => {}
+                            Err(TrySendError::Full(stream)) => {
+                                // every worker busy AND backlog full: shed
+                                // inline so the acceptor never blocks
+                                gen.metrics().counter("http_sheds").inc();
+                                shed_overloaded(stream, &cfg);
+                            }
+                            Err(TrySendError::Disconnected(_)) => break,
+                        }
+                    }
+                })
+                .expect("spawn http acceptor")
+        };
+        Ok(HttpServer { addr, stop, acceptor: Some(acceptor), workers })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        if self.acceptor.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        // the acceptor blocks in accept(); a self-connection wakes it to
+        // observe the stop flag
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Inline 503 for connections the pool cannot absorb.
+fn shed_overloaded(stream: TcpStream, cfg: &ServeConfig) {
+    let mut w = BufWriter::new(stream);
+    let retry = cfg.retry_after_secs.to_string();
+    let _ = write_response(
+        &mut w,
+        503,
+        "application/json",
+        &[("Retry-After", retry.as_str())],
+        api::error_body("server overloaded (worker pool saturated)").as_bytes(),
+    );
+}
+
+fn handle_connection(gen: &GenerationServer, cfg: &ServeConfig, stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+    let _ = stream.set_nodelay(true); // SSE events are tiny; don't batch them
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(reader_stream);
+    let mut writer = BufWriter::new(stream);
+    gen.metrics().counter("http_requests").inc();
+    let req = match Request::read_from(&mut reader) {
+        Ok(Some(req)) => req,
+        Ok(None) => return, // closed without a request (probe / pool churn)
+        Err(e) => {
+            gen.metrics().counter("http_parse_errors").inc();
+            let _ = write_response(
+                &mut writer,
+                e.status,
+                "application/json",
+                &[],
+                api::error_body(&e.message).as_bytes(),
+            );
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/completions") => serve_completion(gen, cfg, &mut writer, &req),
+        ("GET", "/v1/models") => {
+            let body = api::models_body(&cfg.model_id, &cfg.engine_tag);
+            let _ = write_response(&mut writer, 200, "application/json", &[], body.as_bytes());
+        }
+        ("GET", "/metrics") => {
+            let body = metrics_text(gen);
+            let _ = write_response(
+                &mut writer,
+                200,
+                "text/plain; charset=utf-8",
+                &[],
+                body.as_bytes(),
+            );
+        }
+        (_, "/v1/completions") | (_, "/v1/models") | (_, "/metrics") => {
+            gen.metrics().counter("http_404").inc();
+            let _ = write_response(
+                &mut writer,
+                405,
+                "application/json",
+                &[],
+                api::error_body(&format!("{} not allowed on {}", req.method, req.path)).as_bytes(),
+            );
+        }
+        _ => {
+            gen.metrics().counter("http_404").inc();
+            let _ = write_response(
+                &mut writer,
+                404,
+                "application/json",
+                &[],
+                api::error_body(&format!("no route {}", req.path)).as_bytes(),
+            );
+        }
+    }
+}
+
+fn serve_completion<W: Write>(
+    gen: &GenerationServer,
+    cfg: &ServeConfig,
+    writer: &mut W,
+    req: &Request,
+) {
+    let call = match api::parse_completion(&req.body) {
+        Ok(c) => c,
+        Err(msg) => {
+            gen.metrics().counter("http_400").inc();
+            let _ = write_response(
+                writer,
+                400,
+                "application/json",
+                &[],
+                api::error_body(&msg).as_bytes(),
+            );
+            return;
+        }
+    };
+    let t0 = Instant::now();
+    let handle = match gen.try_submit(call.req) {
+        Ok(h) => h,
+        Err(e) => {
+            let (status, retry) = api::submit_error_status(&e);
+            gen.metrics().counter(&format!("http_{status}")).inc();
+            let retry_secs = cfg.retry_after_secs.to_string();
+            let extra: &[(&str, &str)] =
+                if retry { &[("Retry-After", retry_secs.as_str())] } else { &[] };
+            let _ = write_response(
+                writer,
+                status,
+                "application/json",
+                extra,
+                api::error_body(&e.to_string()).as_bytes(),
+            );
+            return;
+        }
+    };
+    if !call.stream {
+        // buffered mode: drain the stream, answer once
+        let mut tokens = Vec::new();
+        loop {
+            match handle.recv() {
+                Some(TokenEvent::Token { token, .. }) => {
+                    if tokens.is_empty() {
+                        gen.metrics().histogram("http_ttft").record(t0.elapsed());
+                    }
+                    tokens.push(token);
+                }
+                Some(TokenEvent::Done { reason, latency, .. }) => {
+                    gen.metrics().counter("http_streams_done").inc();
+                    let body = api::completion_body(&tokens, reason, latency);
+                    let _ =
+                        write_response(writer, 200, "application/json", &[], body.as_bytes());
+                    return;
+                }
+                other => {
+                    let e = match other {
+                        Some(TokenEvent::Error(e)) => e,
+                        _ => "stream closed without a terminal event".to_string(),
+                    };
+                    gen.metrics().counter("http_stream_errors").inc();
+                    let _ = write_response(
+                        writer,
+                        500,
+                        "application/json",
+                        &[],
+                        api::error_body(&e).as_bytes(),
+                    );
+                    return;
+                }
+            }
+        }
+    }
+    // streaming mode: headers first, then one flushed chunk per event
+    let mut cw = match ChunkedWriter::start(writer, 200, "text/event-stream", &[]) {
+        Ok(cw) => cw,
+        Err(_) => {
+            gen.metrics().counter("http_disconnects").inc();
+            return; // dropping `handle` cancels the session
+        }
+    };
+    let mut first = true;
+    loop {
+        match handle.recv() {
+            Some(TokenEvent::Token { index, token }) => {
+                if first {
+                    gen.metrics().histogram("http_ttft").record(t0.elapsed());
+                    first = false;
+                }
+                if cw.write_chunk(api::sse_token(index, token).as_bytes()).is_err() {
+                    // peer closed: dropping `handle` below cancels the
+                    // live session at the scheduler's next step
+                    gen.metrics().counter("http_disconnects").inc();
+                    return;
+                }
+            }
+            Some(TokenEvent::Done { reason, generated, latency }) => {
+                gen.metrics().counter("http_streams_done").inc();
+                let _ = cw.write_chunk(api::sse_done(reason, generated, latency).as_bytes());
+                break;
+            }
+            Some(TokenEvent::Error(e)) => {
+                gen.metrics().counter("http_stream_errors").inc();
+                let _ = cw.write_chunk(api::sse_error(&e).as_bytes());
+                break;
+            }
+            None => {
+                gen.metrics().counter("http_stream_errors").inc();
+                let _ = cw
+                    .write_chunk(api::sse_error("stream closed without a terminal event").as_bytes());
+                break;
+            }
+        }
+    }
+    let _ = cw.write_chunk(api::sse_terminator().as_bytes());
+    let _ = cw.finish();
+}
+
+/// `GET /metrics`: the registry dump (counters incl. per-tenant served
+/// tokens, latency histograms) plus point-in-time server gauges.
+fn metrics_text(gen: &GenerationServer) -> String {
+    let st = gen.stats();
+    let mut out = gen.metrics().render();
+    out.push_str(&format!("gauge    {:<32} {}\n", "queued_now", st.queued_now));
+    out.push_str(&format!("gauge    {:<32} {}\n", "pool_pages", st.pool_pages));
+    out.push_str(&format!("gauge    {:<32} {}\n", "pool_pages_in_use", st.pool_pages_in_use));
+    out.push_str(&format!("gauge    {:<32} {}\n", "pool_pages_free", st.pool_pages_free));
+    out.push_str(&format!("gauge    {:<32} {:.4}\n", "batch_fill", st.batch_fill()));
+    out.push_str(&format!("gauge    {:<32} {:.4}\n", "spec_accept_rate", st.spec_accept_rate()));
+    out.push_str(&format!(
+        "gauge    {:<32} {:.4}\n",
+        "spec_tokens_per_round",
+        st.spec_tokens_per_round()
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{GenBackend, GenerationConfig};
+    use crate::gpt2::Gpt2Model;
+    use std::io::{BufRead, Read};
+
+    fn tiny_server() -> (Arc<GenerationServer>, HttpServer) {
+        let gen = Arc::new(GenerationServer::start(
+            GenBackend::Fp(Gpt2Model::test_model(2, 16, 2, 12, 32, 7)),
+            GenerationConfig { max_new_tokens: 8, ..Default::default() },
+        ));
+        let srv = HttpServer::start(
+            gen.clone(),
+            ServeConfig {
+                workers: 2,
+                model_id: "tiny-fp32".into(),
+                engine_tag: "fp32".into(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        (gen, srv)
+    }
+
+    fn roundtrip(addr: SocketAddr, raw: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn models_metrics_and_404_routes() {
+        let (_gen, srv) = tiny_server();
+        let addr = srv.addr();
+        let models = roundtrip(addr, "GET /v1/models HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert!(models.starts_with("HTTP/1.1 200 OK\r\n"), "{models}");
+        assert!(models.contains("tiny-fp32") && models.contains("fp32"));
+        let metrics = roundtrip(addr, "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert!(metrics.contains("counter") && metrics.contains("queued_now"), "{metrics}");
+        let missing = roundtrip(addr, "GET /nope HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert!(missing.starts_with("HTTP/1.1 404 "), "{missing}");
+        let wrong_method = roundtrip(addr, "GET /v1/completions HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert!(wrong_method.starts_with("HTTP/1.1 405 "), "{wrong_method}");
+        let garbage = roundtrip(addr, "TOTAL NONSENSE\r\n\r\n");
+        assert!(garbage.starts_with("HTTP/1.1 400 "), "{garbage}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn streamed_completion_roundtrip() {
+        let (_gen, srv) = tiny_server();
+        let body = r#"{"prompt": [1, 2, 3], "max_tokens": 4}"#;
+        let raw = format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        let resp = roundtrip(srv.addr(), &raw);
+        assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "{resp}");
+        assert!(resp.contains("Transfer-Encoding: chunked"), "{resp}");
+        assert_eq!(resp.matches("\"token\":").count(), 4, "{resp}");
+        assert!(resp.contains("\"finish\":\"length\""), "{resp}");
+        assert!(resp.contains("data: [DONE]"), "{resp}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn buffered_completion_roundtrip() {
+        let (_gen, srv) = tiny_server();
+        let body = r#"{"prompt": [1, 2, 3], "max_tokens": 3, "stream": false}"#;
+        let raw = format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        let resp = roundtrip(srv.addr(), &raw);
+        assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "{resp}");
+        let json_start = resp.find("\r\n\r\n").unwrap() + 4;
+        let j = crate::util::json::Json::parse(resp[json_start..].trim()).unwrap();
+        assert_eq!(j.get("generated").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 3);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn bad_body_is_400_with_reason() {
+        let (gen, srv) = tiny_server();
+        let body = r#"{"prompt": []}"#;
+        let raw = format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        let resp = roundtrip(srv.addr(), &raw);
+        assert!(resp.starts_with("HTTP/1.1 400 "), "{resp}");
+        assert!(resp.contains("empty prompt"), "{resp}");
+        assert_eq!(gen.metrics().counter("http_400").get(), 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn client_disconnect_cancels_session() {
+        // a budget far beyond what the client will read: if disconnect
+        // did NOT cancel, the session would decode for ages
+        let gen = Arc::new(GenerationServer::start(
+            GenBackend::Fp(Gpt2Model::test_model(2, 16, 2, 12, 32, 7)),
+            GenerationConfig { max_new_tokens: 50_000, ..Default::default() },
+        ));
+        let srv = HttpServer::start(gen.clone(), ServeConfig::default()).unwrap();
+        // a long stream the client abandons after the first token
+        let body = r#"{"prompt": [1, 2, 3], "max_tokens": 50000}"#;
+        let raw = format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        {
+            let mut s = TcpStream::connect(srv.addr()).unwrap();
+            s.write_all(raw.as_bytes()).unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            assert!(line.starts_with("HTTP/1.1 200"), "{line}");
+            // drop both halves: the next chunk write fails server-side
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while Instant::now() < deadline {
+            if gen.stats().cancelled >= 1 || gen.metrics().counter("http_disconnects").get() >= 1
+            {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(
+            gen.stats().cancelled >= 1,
+            "abandoned stream cancelled the live session (stats: {:?})",
+            gen.stats()
+        );
+        assert!(gen.metrics().counter("http_disconnects").get() >= 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_clean_and_idempotent_under_drop() {
+        let (_gen, srv) = tiny_server();
+        let addr = srv.addr();
+        drop(srv); // Drop path must also join cleanly
+        // the port is released: a fresh server can bind it again
+        let gen2 = Arc::new(GenerationServer::start(
+            GenBackend::Fp(Gpt2Model::test_model(2, 16, 2, 12, 32, 7)),
+            GenerationConfig::default(),
+        ));
+        let srv2 = HttpServer::start(
+            gen2.clone(),
+            ServeConfig { addr: addr.to_string(), ..Default::default() },
+        );
+        // (rebinding may race with TIME_WAIT on some kernels; ephemeral
+        // bind is the guaranteed path)
+        if let Ok(s) = srv2 {
+            s.shutdown();
+        }
+    }
+}

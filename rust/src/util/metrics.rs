@@ -124,6 +124,20 @@ impl Registry {
         self.histograms.lock().unwrap().entry(name.into()).or_default().clone()
     }
 
+    /// Snapshot of every counter whose name starts with `prefix`,
+    /// name-sorted (BTreeMap order). Dynamic counter families — e.g. the
+    /// generation server's per-tenant `tokens_tenant_<name>` — are read
+    /// back this way without knowing the tenant set up front.
+    pub fn counters_with_prefix(&self, prefix: &str) -> Vec<(String, u64)> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(n, _)| n.starts_with(prefix))
+            .map(|(n, c)| (n.clone(), c.get()))
+            .collect()
+    }
+
     /// Human-readable dump (examples print this at exit).
     pub fn render(&self) -> String {
         let mut out = String::new();

@@ -1,0 +1,273 @@
+//! HTTP serving front end over real loopback sockets: the full
+//! submit → SSE stream → finish round trip bit-exact against a solo
+//! [`DecodeSession`], malformed bodies answered 400, and admission
+//! shedding (per-tenant 429, whole-queue 503, both with `Retry-After`).
+//! The socket-free wire-format pieces are unit-tested in
+//! `serve::api`; this file is the black-box twin that drives the real
+//! listener, worker pool, and chunked-transfer writer.
+//!
+//! [`DecodeSession`]: muxq::gpt2::DecodeSession
+
+use muxq::coordinator::batcher::QosConfig;
+use muxq::coordinator::{GenBackend, GenerationConfig, GenerationServer};
+use muxq::gpt2::{Gpt2Model, QuantizedGpt2, WrapPolicy};
+use muxq::quant::EngineSpec;
+use muxq::serve::{HttpServer, ServeConfig};
+use muxq::util::json::Json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn completions_raw(body: &str) -> String {
+    format!(
+        "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )
+}
+
+/// One-shot exchange: send, read until the server closes (every route
+/// answers `Connection: close`).
+fn roundtrip(addr: SocketAddr, raw: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(raw.as_bytes()).unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+/// Parse one streamed completion: returns (tokens, finish, generated).
+/// Asserts SSE invariants along the way: contiguous indices, exactly
+/// one finish event, `[DONE]` last.
+fn stream_completion(addr: SocketAddr, body: &str) -> (Vec<u32>, String, usize) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(completions_raw(body).as_bytes()).unwrap();
+    let mut r = BufReader::new(s);
+    let mut status = String::new();
+    r.read_line(&mut status).unwrap();
+    assert!(status.starts_with("HTTP/1.1 200 OK"), "{status}");
+    let mut head = String::new();
+    loop {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        if line.trim_end().is_empty() {
+            break;
+        }
+        head.push_str(&line);
+    }
+    assert!(head.contains("Content-Type: text/event-stream"), "{head}");
+    assert!(head.contains("Transfer-Encoding: chunked"), "{head}");
+
+    let mut tokens = Vec::new();
+    let mut finish = None;
+    let mut done = false;
+    for line in r.lines() {
+        let line = line.unwrap();
+        // chunk-size and blank framing lines never start with `data: `
+        let Some(data) = line.trim_end().strip_prefix("data: ") else { continue };
+        assert!(!done, "event after [DONE]: {data}");
+        if data == "[DONE]" {
+            done = true;
+            continue;
+        }
+        let j = Json::parse(data).unwrap();
+        if let Ok(t) = j.get("token") {
+            assert!(finish.is_none(), "token after finish event");
+            let index = j.get("index").unwrap().as_usize().unwrap();
+            assert_eq!(index, tokens.len(), "indices must be contiguous");
+            tokens.push(t.as_usize().unwrap() as u32);
+        } else {
+            let f = j.get("finish").unwrap_or_else(|_| panic!("unexpected event {data}"));
+            let gen = j.get("generated").unwrap().as_usize().unwrap();
+            assert!(finish.replace((f.as_str().unwrap().to_string(), gen)).is_none());
+        }
+    }
+    assert!(done, "stream ended without data: [DONE]");
+    let (reason, generated) = finish.expect("stream ended without a finish event");
+    (tokens, reason, generated)
+}
+
+#[test]
+fn streamed_and_buffered_completions_are_bit_exact_vs_solo_session() {
+    // the quantized engine end to end: what the wire delivers must be
+    // the same tokens a solo DecodeSession produces for the same prompt
+    let fp = Gpt2Model::test_model(2, 32, 2, 48, 64, 7);
+    let spec = EngineSpec::muxq();
+    let gen = Arc::new(GenerationServer::start(
+        GenBackend::Int(QuantizedGpt2::new(fp.clone(), spec)),
+        GenerationConfig { max_new_tokens: 16, ..Default::default() },
+    ));
+    let srv = HttpServer::start(
+        gen.clone(),
+        ServeConfig { model_id: "tiny".into(), engine_tag: spec.tag(), ..Default::default() },
+    )
+    .unwrap();
+    let addr = srv.addr();
+
+    let prompt: Vec<u32> = vec![3, 1, 4, 1, 5];
+    let steps = 10;
+    let want = QuantizedGpt2::new(fp, spec)
+        .session(WrapPolicy::default())
+        .generate_greedy(&prompt, steps)
+        .unwrap();
+
+    let body = format!("{{\"prompt\": [3, 1, 4, 1, 5], \"max_tokens\": {steps}}}");
+    let (tokens, reason, generated) = stream_completion(addr, &body);
+    assert_eq!(reason, "length");
+    assert_eq!(generated, steps);
+    assert_eq!(tokens, want, "streamed tokens diverged from solo session");
+
+    // the buffered (non-streaming) path serves the identical tokens
+    let buffered = format!(
+        "{{\"prompt\": [3, 1, 4, 1, 5], \"max_tokens\": {steps}, \"stream\": false}}"
+    );
+    let resp = roundtrip(addr, &completions_raw(&buffered));
+    assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "{resp}");
+    let json_start = resp.find("\r\n\r\n").unwrap() + 4;
+    let j = Json::parse(resp[json_start..].trim()).unwrap();
+    let got: Vec<u32> = j
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_usize().unwrap() as u32)
+        .collect();
+    assert_eq!(got, want, "buffered tokens diverged from solo session");
+    assert_eq!(gen.stats().completed, 2);
+    srv.shutdown();
+}
+
+#[test]
+fn malformed_bodies_answer_400_without_touching_the_scheduler() {
+    let gen = Arc::new(GenerationServer::start(
+        GenBackend::Fp(Gpt2Model::test_model(2, 16, 2, 12, 32, 7)),
+        GenerationConfig::default(),
+    ));
+    let srv = HttpServer::start(gen.clone(), ServeConfig::default()).unwrap();
+    for bad in [
+        "this is not json",
+        r#"{"max_tokens": 4}"#,                       // no prompt
+        r#"{"prompt": "words", "max_tokens": 4}"#,    // prompt not an id array
+        r#"{"prompt": [1, -3], "max_tokens": 4}"#,    // negative id
+        r#"{"prompt": [1, 2], "max_tokens": 2.5}"#,   // fractional budget
+        r#"{"prompt": [1, 2], "top_p": 1.5}"#,        // out-of-range nucleus
+    ] {
+        let resp = roundtrip(srv.addr(), &completions_raw(bad));
+        assert!(resp.starts_with("HTTP/1.1 400 "), "{bad:?} -> {resp}");
+        assert!(resp.contains("\"error\""), "{bad:?} -> {resp}");
+    }
+    let st = gen.stats();
+    assert_eq!(st.submitted, 0, "malformed bodies must be rejected pre-submit");
+    assert_eq!(gen.metrics().counter("http_400").get(), 6);
+    srv.shutdown();
+}
+
+/// Open a long-budget stream and hold it until the first token arrives,
+/// proving the session is live (admitted, not queued).
+fn open_live_stream(addr: SocketAddr, tenant: &str) -> TcpStream {
+    let body = format!("{{\"prompt\": [1, 2, 3], \"max_tokens\": 50000, \"tenant\": {tenant:?}}}");
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(completions_raw(&body).as_bytes()).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let mut line = String::new();
+    loop {
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        if line.contains("\"token\"") {
+            return s;
+        }
+        assert!(!line.is_empty(), "stream closed before first token");
+    }
+}
+
+fn wait_queued(gen: &GenerationServer, n: usize) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while gen.stats().queued_now < n {
+        assert!(Instant::now() < deadline, "queue never reached {n}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn noisy_tenant_sheds_429_while_others_still_admit() {
+    let gen = Arc::new(GenerationServer::start(
+        GenBackend::Fp(Gpt2Model::test_model(2, 16, 2, 12, 32, 7)),
+        GenerationConfig {
+            max_live: 1,
+            max_new_tokens: 50_000,
+            qos: QosConfig { max_queue_per_tenant: 1, ..QosConfig::default() },
+            ..Default::default()
+        },
+    ));
+    let srv = HttpServer::start(gen.clone(), ServeConfig::default()).unwrap();
+    let addr = srv.addr();
+
+    // one live session + one queued request saturate tenant "noisy"
+    let live = open_live_stream(addr, "noisy");
+    let mut queued = TcpStream::connect(addr).unwrap();
+    let qbody = r#"{"prompt": [4, 5], "max_tokens": 4, "tenant": "noisy"}"#;
+    queued.write_all(completions_raw(qbody).as_bytes()).unwrap();
+    wait_queued(&gen, 1);
+
+    // the tenant's next request is shed with 429 + Retry-After...
+    let resp = roundtrip(addr, &completions_raw(qbody));
+    assert!(resp.starts_with("HTTP/1.1 429 "), "{resp}");
+    assert!(resp.contains("Retry-After:"), "{resp}");
+    assert_eq!(gen.metrics().counter("http_429").get(), 1);
+
+    // ...while a different tenant still enters the queue (cap is per-lane)
+    let mut polite = TcpStream::connect(addr).unwrap();
+    polite
+        .write_all(
+            completions_raw(r#"{"prompt": [6], "max_tokens": 4, "tenant": "polite"}"#).as_bytes(),
+        )
+        .unwrap();
+    wait_queued(&gen, 2);
+    assert_eq!(gen.metrics().counter("http_429").get(), 1, "polite tenant was shed");
+
+    // dropping the live stream cancels it; the queued sessions then admit,
+    // find their clients gone, and cancel too — the server stays healthy
+    drop(live);
+    drop(queued);
+    drop(polite);
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while gen.stats().cancelled < 3 {
+        assert!(Instant::now() < deadline, "expected 3 cancelled, {:?}", gen.stats());
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn full_queue_sheds_503_with_retry_after() {
+    let gen = Arc::new(GenerationServer::start(
+        GenBackend::Fp(Gpt2Model::test_model(2, 16, 2, 12, 32, 7)),
+        GenerationConfig {
+            max_live: 1,
+            max_queue: 1,
+            max_new_tokens: 50_000,
+            ..Default::default()
+        },
+    ));
+    let srv = HttpServer::start(gen.clone(), ServeConfig::default()).unwrap();
+    let addr = srv.addr();
+
+    let live = open_live_stream(addr, "a");
+    let mut queued = TcpStream::connect(addr).unwrap();
+    queued
+        .write_all(completions_raw(r#"{"prompt": [4], "max_tokens": 4}"#).as_bytes())
+        .unwrap();
+    wait_queued(&gen, 1);
+
+    // queue full: ANY tenant is refused now
+    let resp = roundtrip(addr, &completions_raw(r#"{"prompt": [5], "max_tokens": 4}"#));
+    assert!(resp.starts_with("HTTP/1.1 503 "), "{resp}");
+    assert!(resp.contains("Retry-After:"), "{resp}");
+    assert_eq!(gen.metrics().counter("http_503").get(), 1);
+
+    drop(live);
+    drop(queued);
+    srv.shutdown();
+}

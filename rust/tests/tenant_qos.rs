@@ -1,0 +1,353 @@
+//! Multi-tenant QoS invariants for the decode admission queue and the
+//! generation server built on it (via the in-repo mini-proptest):
+//!
+//! * under saturation, served shares track the configured DWRR weights
+//!   and no backlogged tenant starves;
+//! * a single-tenant queue is FIFO bit-exact (compat with the pre-QoS
+//!   admission order);
+//! * per-tenant queue caps and whole-queue backpressure shed exactly
+//!   the requests a reference model predicts, and nothing is lost or
+//!   duplicated;
+//! * end to end through [`GenerationServer`], a 3:1-weighted heavy
+//!   tenant finishes ~3 sessions per light-tenant session while every
+//!   stream stays bit-exact vs a solo [`DecodeSession`].
+//!
+//! CI re-runs this file with `MUXQ_PROPTEST_CASES=200` (see
+//! `rust/scripts/ci_check.sh`).
+//!
+//! [`DecodeSession`]: muxq::gpt2::DecodeSession
+
+use muxq::coordinator::batcher::{AdmitError, DecodePop, DecodeQueue, QosConfig};
+use muxq::coordinator::request::{GenerateRequest, PendingGen, TokenEvent};
+use muxq::coordinator::{GenBackend, GenerationConfig, GenerationServer};
+use muxq::gpt2::{Gpt2Model, WrapPolicy};
+use muxq::util::proptest::{prop, prop_assert, Gen};
+use std::sync::mpsc;
+use std::time::Instant;
+
+fn pending_for(
+    tenant: &str,
+    prompt: Vec<u32>,
+    max_new: usize,
+) -> (PendingGen, mpsc::Receiver<TokenEvent>) {
+    let (tx, rx) = mpsc::channel();
+    (
+        PendingGen {
+            req: GenerateRequest::greedy(prompt, max_new).with_tenant(tenant),
+            submitted: Instant::now(),
+            tx,
+        },
+        rx,
+    )
+}
+
+// ------------------------------------------------- queue-level (DWRR)
+
+#[test]
+fn prop_dwrr_shares_track_weights_under_saturation() {
+    // randomized lanes/weights/costs/quanta; push everything up front
+    // (full saturation), drain, and check the served-token shares over
+    // the saturated prefix. DWRR's fairness bound: a lane's service
+    // count over R crediting rounds deviates from R·q·w/c by at most a
+    // burst (q·w/c services) plus rounding, so shares converge to the
+    // weight ratio with an O(lanes · burst) error — the tolerance below.
+    prop("DWRR shares ~ weights, nobody starves", |g: &mut Gen| {
+        let n_lanes = g.usize(2, 4);
+        let weights: Vec<u64> = (0..n_lanes).map(|_| g.usize(1, 4) as u64).collect();
+        let w_sum: u64 = weights.iter().sum();
+        let w_max = *weights.iter().max().unwrap();
+        let cost = g.usize(2, 8) as u64;
+        let quantum = g.usize(1, 2) as u64;
+        // enough backlog that the saturated prefix dwarfs the tolerance
+        let per_lane = (12 * w_max) as usize;
+
+        let mut qos = QosConfig {
+            quantum_tokens: quantum,
+            default_cost_tokens: cost,
+            ..QosConfig::default()
+        };
+        for (i, &w) in weights.iter().enumerate() {
+            qos.weights.push((format!("t{i}"), w as usize));
+        }
+        let q = DecodeQueue::with_qos(4096, qos);
+        let mut rxs = Vec::new();
+        for j in 0..per_lane {
+            for i in 0..n_lanes {
+                let (p, r) = pending_for(&format!("t{i}"), vec![j as u32], cost as usize);
+                q.push(p).unwrap();
+                rxs.push(r);
+            }
+        }
+
+        let mut served: Vec<usize> = Vec::new(); // lane index per pop
+        while let DecodePop::Req(p) = q.pop(false) {
+            let lane: usize = p.req.tenant.strip_prefix('t').unwrap().parse().unwrap();
+            served.push(lane);
+        }
+        prop_assert(
+            served.len() == per_lane * n_lanes,
+            format!("drained {} of {}", served.len(), per_lane * n_lanes),
+        )?;
+
+        // saturated prefix: pops made while EVERY lane was still backlogged
+        let mut count = vec![0usize; n_lanes];
+        let mut prefix = 0;
+        for &lane in &served {
+            count[lane] += 1;
+            prefix += 1;
+            if count[lane] == per_lane {
+                break;
+            }
+        }
+        let mut in_prefix = vec![0usize; n_lanes];
+        for &lane in &served[..prefix] {
+            in_prefix[lane] += 1;
+        }
+        for (i, &got) in in_prefix.iter().enumerate() {
+            let expected = prefix as f64 * weights[i] as f64 / w_sum as f64;
+            let burst = (quantum * weights[i]) as f64 / cost as f64;
+            let tol = 3.0 + (n_lanes as f64) * (burst + 1.0);
+            prop_assert(
+                (got as f64 - expected).abs() <= tol,
+                format!(
+                    "lane {i} (w {}): served {got} of {prefix}, expected {expected:.1} ± {tol:.1}",
+                    weights[i]
+                ),
+            )?;
+        }
+        // no starvation: every lane is served early, not just eventually
+        let window = (3 * quantum * w_sum) as usize + n_lanes;
+        for i in 0..n_lanes {
+            let first = served.iter().position(|&l| l == i).unwrap();
+            prop_assert(
+                first < window,
+                format!("lane {i} first served at pop {first}, window {window}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_single_tenant_queue_is_fifo_bit_exact() {
+    // one lane must reproduce the pre-QoS FIFO admission order exactly,
+    // whatever the costs, quantum, or (irrelevant) weight table say
+    prop("single lane == FIFO", |g: &mut Gen| {
+        let tenant = if g.bool() { "solo" } else { "" };
+        let qos = QosConfig {
+            quantum_tokens: g.usize(1, 64) as u64,
+            default_cost_tokens: g.usize(1, 256) as u64,
+            weights: vec![("solo".to_string(), g.usize(1, 9))],
+            ..QosConfig::default()
+        };
+        let q = DecodeQueue::with_qos(4096, qos);
+        let n = g.usize(1, 40);
+        let mut rxs = Vec::new();
+        for j in 0..n {
+            let (p, r) = pending_for(tenant, vec![j as u32], g.usize(1, 300));
+            q.push(p).unwrap();
+            rxs.push(r);
+        }
+        for j in 0..n {
+            match q.pop(false) {
+                DecodePop::Req(p) => {
+                    prop_assert(
+                        p.req.prompt == vec![j as u32],
+                        format!("pop {j} got prompt {:?}", p.req.prompt),
+                    )?;
+                }
+                _ => return Err(format!("pop {j}: queue empty early")),
+            }
+        }
+        prop_assert(matches!(q.pop(false), DecodePop::Empty), "queue not drained")
+    });
+}
+
+#[test]
+fn prop_caps_shed_exactly_what_the_reference_model_predicts() {
+    // differential state machine: random push/pop interleavings vs a
+    // trivial per-lane counter model. Admission verdicts (Ok /
+    // TenantBusy / QueueFull) and conservation must match exactly.
+    prop("cap shedding == reference model", |g: &mut Gen| {
+        let n_lanes = g.usize(1, 4);
+        let cap = g.usize(0, 3);
+        let max_queue = g.usize(1, 24);
+        let qos = QosConfig { max_queue_per_tenant: cap, ..QosConfig::default() };
+        let q = DecodeQueue::with_qos(max_queue, qos);
+
+        let mut model = vec![0usize; n_lanes]; // queued per lane
+        let mut accepted = vec![0usize; n_lanes];
+        let mut popped = vec![0usize; n_lanes];
+        let mut rxs = Vec::new();
+        for step in 0..g.usize(20, 80) {
+            if g.bool() {
+                let lane = g.usize(0, n_lanes - 1);
+                let (p, r) = pending_for(&format!("t{lane}"), vec![step as u32], 4);
+                let got = q.push(p);
+                let total: usize = model.iter().sum();
+                if total >= max_queue {
+                    prop_assert(
+                        got == Err(AdmitError::QueueFull),
+                        format!("step {step}: expected QueueFull, got {got:?}"),
+                    )?;
+                } else if cap > 0 && model[lane] >= cap {
+                    prop_assert(
+                        got == Err(AdmitError::TenantBusy),
+                        format!("step {step}: expected TenantBusy, got {got:?}"),
+                    )?;
+                } else {
+                    prop_assert(got.is_ok(), format!("step {step}: expected Ok, got {got:?}"))?;
+                    model[lane] += 1;
+                    accepted[lane] += 1;
+                    rxs.push(r);
+                }
+            } else {
+                match q.pop(false) {
+                    DecodePop::Req(p) => {
+                        let lane: usize =
+                            p.req.tenant.strip_prefix('t').unwrap().parse().unwrap();
+                        prop_assert(model[lane] > 0, format!("step {step}: phantom pop"))?;
+                        model[lane] -= 1;
+                        popped[lane] += 1;
+                    }
+                    DecodePop::Empty => {
+                        let total: usize = model.iter().sum();
+                        prop_assert(
+                            total == 0,
+                            format!("step {step}: Empty with {total} queued"),
+                        )?;
+                    }
+                    DecodePop::Shutdown => return Err(format!("step {step}: early shutdown")),
+                }
+            }
+        }
+        while let DecodePop::Req(p) = q.pop(false) {
+            let lane: usize = p.req.tenant.strip_prefix('t').unwrap().parse().unwrap();
+            popped[lane] += 1;
+        }
+        prop_assert(
+            popped == accepted,
+            format!("conservation: accepted {accepted:?} popped {popped:?}"),
+        )
+    });
+}
+
+// ---------------------------------------- server-level (end to end)
+
+fn toks(n: usize, seed: u64) -> Vec<u32> {
+    let mut rng = muxq::data::prng::SplitMix64::new(seed);
+    (0..n).map(|_| rng.next_below(32) as u32).collect()
+}
+
+#[test]
+fn weighted_tenants_share_a_saturated_server_three_to_one() {
+    // 6 sessions per tenant, weights a:3 b:1, one decode slot: once the
+    // backlog builds, completion order must run ~a,a,a,b. `Done` events
+    // carry submit→finish latency; with one serial slot, sorting by
+    // latency IS the completion order (all submits land within µs, each
+    // session takes ms). Quantum 1 keeps DWRR bursts at single requests.
+    let fp = Gpt2Model::test_model(2, 16, 2, 48, 32, 7);
+    let steps = 4;
+    let srv = GenerationServer::start(
+        GenBackend::Fp(fp.clone()),
+        GenerationConfig {
+            max_live: 1,
+            max_new_tokens: steps,
+            qos: QosConfig {
+                quantum_tokens: 1,
+                weights: vec![("a".to_string(), 3), ("b".to_string(), 1)],
+                ..QosConfig::default()
+            },
+            ..Default::default()
+        },
+    );
+    // occupy the single slot with a warmup session while the backlog
+    // builds, so DWRR sees BOTH lanes fully queued from its first pick
+    // (without it, the first few pops race the submission loop)
+    let warm = srv
+        .submit(GenerateRequest::greedy(toks(5, 99), steps).with_tenant("warm"))
+        .unwrap();
+    let mut handles = Vec::new();
+    for i in 0..6u64 {
+        let req = GenerateRequest::greedy(toks(5, 100 + i), steps).with_tenant("a");
+        handles.push(("a", toks(5, 100 + i), srv.submit(req).unwrap()));
+    }
+    for i in 0..6u64 {
+        let req = GenerateRequest::greedy(toks(5, 200 + i), steps).with_tenant("b");
+        handles.push(("b", toks(5, 200 + i), srv.submit(req).unwrap()));
+    }
+
+    let mut finished = Vec::new(); // (latency, tenant)
+    assert!(warm.collect_tokens().is_ok());
+    for (tenant, prompt, h) in handles {
+        let mut tokens = Vec::new();
+        let mut done = None;
+        while let Some(ev) = h.recv() {
+            match ev {
+                TokenEvent::Token { token, .. } => tokens.push(token),
+                TokenEvent::Done { generated, latency, .. } => done = Some((generated, latency)),
+                TokenEvent::Error(e) => panic!("stream error: {e}"),
+            }
+        }
+        let (generated, latency) = done.expect("missing terminal event");
+        assert_eq!(generated, steps);
+        // bit-exactness survives multi-tenant interleaving
+        let want = fp.session(WrapPolicy::default()).generate_greedy(&prompt, steps).unwrap();
+        assert_eq!(tokens, want, "tenant {tenant} stream diverged from solo session");
+        finished.push((latency, tenant));
+    }
+    finished.sort_by_key(|(l, _)| *l);
+    let order: Vec<&str> = finished.iter().map(|(_, t)| *t).collect();
+    let first8_a = order[..8].iter().filter(|t| **t == "a").count();
+    assert!(first8_a >= 5, "3:1 weights: expected ~6 'a' in first 8, got {order:?}");
+    let first_b = order.iter().position(|t| *t == "b").unwrap();
+    assert!(first_b < 6, "light tenant starved: first 'b' at {first_b} in {order:?}");
+
+    let st = srv.stats();
+    assert_eq!(st.completed, 13); // 12 measured + the warmup
+    // both lanes generated their full budgets (fairness is about order,
+    // never about dropping anyone's tokens)
+    let shares = srv.metrics().counters_with_prefix("tokens_tenant_");
+    let of = |name: &str| {
+        shares.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(0)
+    };
+    assert_eq!(of("tokens_tenant_a"), 6 * steps as u64);
+    assert_eq!(of("tokens_tenant_b"), 6 * steps as u64);
+    srv.shutdown();
+}
+
+#[test]
+fn single_tenant_server_completes_in_submission_order() {
+    // no weights, one anonymous lane, one decode slot: the pre-QoS FIFO
+    // contract end to end — completion order == submission order and
+    // every stream equals its solo session
+    let fp = Gpt2Model::test_model(2, 16, 2, 48, 32, 7);
+    let steps = 3;
+    let srv = GenerationServer::start(
+        GenBackend::Fp(fp.clone()),
+        GenerationConfig { max_live: 1, max_new_tokens: steps, ..Default::default() },
+    );
+    let handles: Vec<_> = (0..5u64)
+        .map(|i| (i, srv.submit(GenerateRequest::greedy(toks(4, 300 + i), steps)).unwrap()))
+        .collect();
+    let mut finished = Vec::new();
+    for (i, h) in handles {
+        let mut tokens = Vec::new();
+        let mut latency = None;
+        while let Some(ev) = h.recv() {
+            match ev {
+                TokenEvent::Token { token, .. } => tokens.push(token),
+                TokenEvent::Done { latency: l, .. } => latency = Some(l),
+                TokenEvent::Error(e) => panic!("stream error: {e}"),
+            }
+        }
+        let want =
+            fp.session(WrapPolicy::default()).generate_greedy(&toks(4, 300 + i), steps).unwrap();
+        assert_eq!(tokens, want, "request {i} diverged from solo session");
+        finished.push((latency.expect("no Done"), i));
+    }
+    finished.sort_by_key(|(l, _)| *l);
+    let order: Vec<u64> = finished.iter().map(|(_, i)| *i).collect();
+    assert_eq!(order, vec![0, 1, 2, 3, 4], "single lane must stay FIFO");
+    srv.shutdown();
+}
