@@ -188,6 +188,7 @@ def stage_export(root: Path, cfg: ModelConfig, flat: dict, variants, log,
                 "model": cfg.name, "kind": kind, "tag": qcfg.tag,
                 "method": qcfg.method, "granularity": qcfg.granularity,
                 "smooth": qcfg.smooth, "exp_factor": qcfg.exp_factor,
+                "rotate": qcfg.rotate, "permute": qcfg.permute,
                 "file": out.name, "batch": EVAL_BATCH, "seq": EVAL_SEQ,
                 "weights": f"weights/{cfg.name}.bin",
             })

@@ -88,13 +88,27 @@ class QuantConfig:
     smooth: bool = False
     #: SmoothQuant alpha
     smooth_alpha: float = 0.5
+    #: blockwise-orthogonal rotation pre-transform (DuQuant-style; the
+    #: rust engine owns the algebra — here only the variant spelling)
+    rotate: bool = False
+    #: zigzag channel-permutation pre-transform
+    permute: bool = False
+    #: explicit resq residual rank (``-r{N}``; resq-only, None = auto)
+    resid_rank: int | None = None
 
     @property
     def tag(self) -> str:
+        """Canonical variant tag — MUST stay in sync with the rust
+        ``EngineSpec::tag`` grammar (pre-transform suffixes in pipeline
+        order smooth -> rotate -> permute, then ``-r{N}``/``-e{N}``);
+        ``Manifest::load`` rejects entries whose fields drift from it."""
         g = "pv" if self.granularity == "per-vector" else "pt"
-        s = "-sq" if self.smooth else ""
+        s = ("-sq" if self.smooth else "") \
+            + ("-rot" if self.rotate else "") \
+            + ("-perm" if self.permute else "")
+        r = f"-r{self.resid_rank}" if self.method == "resq" and self.resid_rank else ""
         e = f"-e{self.exp_factor}" if self.method == "muxq" and self.exp_factor != 2 else ""
-        return f"{self.method}-{g}{s}{e}"
+        return f"{self.method}-{g}{s}{r}{e}"
 
 
 #: variants exported per sim model (Tables 1, 2 + combos)

@@ -9,7 +9,9 @@
 //! draft-and-verify decode (`decode_tok_s_spec`, with its acceptance
 //! rate and tokens-per-round), and the W4 nibble weight path
 //! (`decode_tok_s_w4` / `decode_tok_s_resq` and the packed-panel byte
-//! halving `w4_weight_bytes_ratio`).
+//! halving `w4_weight_bytes_ratio`), plus the rotated W4A8 pipeline
+//! (`decode_tok_s_rot` — what the per-row inverse rotation costs at
+//! decode widths).
 //! (The NPU projection lives in bench_npusim / npu_latency.)
 //!
 //! Run: `cargo bench --bench bench_gemm`. Writes the perf-trajectory
@@ -405,10 +407,14 @@ fn main() {
         matmul_i8w4_gemv_into(&x1w, &bp4, &mut acc, Kernel::Auto);
         acc.data[0]
     });
-    let mut w4_tok_s = [0.0f64; 2]; // [naive-w4a8, resq]
+    let mut w4_tok_s = [0.0f64; 3]; // [naive-w4a8, resq, naive-w4a8-rot]
     for (slot, label, spec) in [
         (0usize, "naive-w4a8", EngineSpec::naive().with_bits(8, 4)),
         (1, "resq", EngineSpec::resq()),
+        // the rotated pipeline: blockwise-orthogonal pre-transform folded
+        // into the nibble panel at pack time, inverse rotation paid per
+        // activation row — decode_tok_s_rot prices that per-token cost
+        (2, "naive-w4a8-rot", EngineSpec::naive().with_bits(8, 4).with_rotate()),
     ] {
         let q = QuantizedGpt2::new(Gpt2Model::test_model(2, 128, 2, 64, 128, 7), spec);
         let mut sess = q.session(WrapPolicy::Slide);
@@ -420,10 +426,12 @@ fn main() {
         });
         w4_tok_s[slot] = stats.per_sec();
     }
-    let (decode_tok_s_w4, decode_tok_s_resq) = (w4_tok_s[0], w4_tok_s[1]);
+    let (decode_tok_s_w4, decode_tok_s_resq, decode_tok_s_rot) =
+        (w4_tok_s[0], w4_tok_s[1], w4_tok_s[2]);
     println!(
         "\nw4 decode {decode_tok_s_w4:.0} tok/s ({:.2}x vs muxq w8 decode)   \
-         resq {decode_tok_s_resq:.0} tok/s   weight bytes {w4_weight_bytes_ratio:.2}x smaller",
+         resq {decode_tok_s_resq:.0} tok/s   rot {decode_tok_s_rot:.0} tok/s   \
+         weight bytes {w4_weight_bytes_ratio:.2}x smaller",
         decode_tok_s_w4 / decode_tok_s[1]
     );
 
@@ -481,7 +489,7 @@ fn main() {
         None => ("null".to_string(), "null".to_string(), "null".to_string()),
     };
     let json = format!(
-        "{{\n  \"bench\": \"bench_gemm\",\n  \"bootstrap\": false,\n  \"shape\": [{gm}, {gk}, {gn}],\n  \"dispatch_kernel\": \"{}\",\n  \"seed_i8_ms\": {seed_ms:.4},\n  \"packed_1t_ms\": {:.4},\n  \"packed_2t_ms\": {:.4},\n  \"packed_4t_ms\": {:.4},\n  \"speedup_vs_seed_1t\": {:.3},\n  \"scaling_1t_to_4t\": {:.3},\n  \"gops_packed_1t\": {:.3},\n  \"pair_best_ms\": {pair_best_ms:.4},\n  \"pair_best_tile\": \"{best_mr}x{best_nr}\",\n  \"wide44_1t_ms\": {wide44_ms:.4},\n  \"pair_vs_wide44\": {:.3},\n  \"simd_best_ms\": {simd_best_ms_s},\n  \"simd_best_tile\": {simd_best_tile_s},\n  \"simd_vs_pair\": {simd_vs_pair_s},\n  \"gemv_m1_us\": {gemv_m1_us:.2},\n  \"gemv_vs_cascade_m1\": {gemv_vs_cascade_m1:.3},\n  \"e2e_naive_tok_per_s\": {:.1},\n  \"e2e_muxq_tok_per_s\": {:.1},\n  \"decode_tok_s_fp\": {:.1},\n  \"decode_tok_s\": {:.1},\n  \"decode_tok_s_llmint8\": {:.1},\n  \"decode_tok_s_w4\": {decode_tok_s_w4:.1},\n  \"decode_tok_s_resq\": {decode_tok_s_resq:.1},\n  \"w4_weight_bytes_ratio\": {w4_weight_bytes_ratio:.3},\n  \"decode_tok_s_spec\": {decode_tok_s_spec:.1},\n  \"spec_accept_rate\": {spec_accept_rate:.3},\n  \"spec_tokens_per_round\": {spec_tokens_per_round:.3},\n  \"full_forward_tok_s\": {full_tok_s:.1},\n  \"decode_vs_full_speedup\": {decode_vs_full:.2},\n  \"paged_fill\": {paged_fill:.3},\n  \"shared_page_ratio\": {shared_page_ratio:.3}\n}}\n",
+        "{{\n  \"bench\": \"bench_gemm\",\n  \"bootstrap\": false,\n  \"shape\": [{gm}, {gk}, {gn}],\n  \"dispatch_kernel\": \"{}\",\n  \"seed_i8_ms\": {seed_ms:.4},\n  \"packed_1t_ms\": {:.4},\n  \"packed_2t_ms\": {:.4},\n  \"packed_4t_ms\": {:.4},\n  \"speedup_vs_seed_1t\": {:.3},\n  \"scaling_1t_to_4t\": {:.3},\n  \"gops_packed_1t\": {:.3},\n  \"pair_best_ms\": {pair_best_ms:.4},\n  \"pair_best_tile\": \"{best_mr}x{best_nr}\",\n  \"wide44_1t_ms\": {wide44_ms:.4},\n  \"pair_vs_wide44\": {:.3},\n  \"simd_best_ms\": {simd_best_ms_s},\n  \"simd_best_tile\": {simd_best_tile_s},\n  \"simd_vs_pair\": {simd_vs_pair_s},\n  \"gemv_m1_us\": {gemv_m1_us:.2},\n  \"gemv_vs_cascade_m1\": {gemv_vs_cascade_m1:.3},\n  \"e2e_naive_tok_per_s\": {:.1},\n  \"e2e_muxq_tok_per_s\": {:.1},\n  \"decode_tok_s_fp\": {:.1},\n  \"decode_tok_s\": {:.1},\n  \"decode_tok_s_llmint8\": {:.1},\n  \"decode_tok_s_w4\": {decode_tok_s_w4:.1},\n  \"decode_tok_s_resq\": {decode_tok_s_resq:.1},\n  \"decode_tok_s_rot\": {decode_tok_s_rot:.1},\n  \"w4_weight_bytes_ratio\": {w4_weight_bytes_ratio:.3},\n  \"decode_tok_s_spec\": {decode_tok_s_spec:.1},\n  \"spec_accept_rate\": {spec_accept_rate:.3},\n  \"spec_tokens_per_round\": {spec_tokens_per_round:.3},\n  \"full_forward_tok_s\": {full_tok_s:.1},\n  \"decode_vs_full_speedup\": {decode_vs_full:.2},\n  \"paged_fill\": {paged_fill:.3},\n  \"shared_page_ratio\": {shared_page_ratio:.3}\n}}\n",
         dispatch.name(),
         per_thread_ms[0].1,
         per_thread_ms[1].1,

@@ -68,9 +68,9 @@ fn main() {
     };
     Bencher::header(&format!("end-to-end nll_per_seq (2L d=96, batch {nb}x{ns} tokens)"));
     for spec in [EngineSpec::naive(), EngineSpec::muxq(), EngineSpec::llmint8()] {
+        let tag = spec.tag();
         let q = QuantizedGpt2::new(Gpt2Model::test_model(2, 96, 2, 48, 64, 9), spec);
-        let stats =
-            b.bench(&format!("nll_per_seq/{}", spec.tag()), || q.nll_per_seq(&tokens).unwrap());
+        let stats = b.bench(&format!("nll_per_seq/{tag}"), || q.nll_per_seq(&tokens).unwrap());
         println!("    -> {:.0} tokens/s", (nb * ns) as f64 * stats.per_sec());
     }
 }

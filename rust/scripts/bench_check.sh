@@ -66,10 +66,11 @@ print(f"OK: packed_1t {cur_ms:.3f}ms vs baseline {old_ms:.3f}ms")
 # first baseline carrying it lands. decode_tok_s = plain sequential
 # decode; decode_tok_s_spec = speculative draft-and-verify decode;
 # decode_tok_s_w4 = the nibble-packed W4A8 weight path;
-# decode_tok_s_resq = the low-rank-residual W4 operator.
+# decode_tok_s_resq = the low-rank-residual W4 operator;
+# decode_tok_s_rot = the rotated (pre-transform pipeline) W4A8 path.
 tok_gates_ok = True
 for field in ("decode_tok_s", "decode_tok_s_spec", "decode_tok_s_w4",
-              "decode_tok_s_resq"):
+              "decode_tok_s_resq", "decode_tok_s_rot"):
     old_tok, new_tok = base.get(field), new.get(field)
     if old_tok is None or new_tok is None:
         continue

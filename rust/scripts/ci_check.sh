@@ -96,6 +96,17 @@ echo "== serve smoke gate (loopback HTTP completion, bit-exact)"
 # stream equals a solo DecodeSession bit for bit, shut down cleanly
 cargo run --release "${MANIFEST_ARGS[@]}" --example http_serve -- --smoke
 
+echo "== pre-transform pipeline gate (200 cases: algebra + tag grammar)"
+# the composable pack-time pipeline (tests/transforms.rs): rotation
+# orthogonality, permutation bit-exact round trips, rotated-then-
+# quantized forwards against the fp32 oracle, and the Table-1-style
+# rotated-beats-unrotated margins; plus the extended tag grammar
+# round-trip proptests (tests/quant_linear.rs) over composed
+# -sq/-rot/-perm/-r{N} suffixes — both pinned high so grammar or
+# absorption regressions cannot hide behind a small sample
+MUXQ_PROPTEST_CASES=200 cargo test -q "${MANIFEST_ARGS[@]}" --test transforms
+MUXQ_PROPTEST_CASES=200 cargo test -q "${MANIFEST_ARGS[@]}" --test quant_linear
+
 echo "== tenant-fairness gate (200 randomized QoS schedules)"
 # the DWRR scheduler's weighted-share and no-starvation guarantees
 # (tests/tenant_qos.rs) re-run with the case count pinned high, same

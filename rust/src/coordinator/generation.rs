@@ -927,14 +927,19 @@ mod tests {
     #[test]
     fn w4_and_resq_models_serve_tokens_end_to_end() {
         // the nibble-packed engine needs ZERO serving changes: every W4
-        // operator family generates through the full stack and matches
-        // its own solo greedy session exactly
+        // operator family — pre-transformed variants included — generates
+        // through the full stack and matches its own solo greedy session
+        // exactly (muxq-w4a8-rot and the permuted naive variant are the
+        // issue's acceptance specs)
         for spec in [
             EngineSpec::naive().with_bits(8, 4),
             EngineSpec::muxq().with_bits(8, 4),
             EngineSpec::resq(),
+            EngineSpec::muxq().with_bits(8, 4).with_rotate(),
+            EngineSpec::naive().with_bits(8, 4).with_rotate().with_permute(),
+            EngineSpec::resq().with_smooth(0.5).with_resid_rank(2),
         ] {
-            let q = QuantizedGpt2::new(tiny(), spec);
+            let q = QuantizedGpt2::new(tiny(), spec.clone());
             let prompts = [toks(4, 41), toks(6, 42)];
             let mut want = Vec::new();
             for p in &prompts {
@@ -942,7 +947,7 @@ mod tests {
                 want.push(s.generate_greedy(p, 5).unwrap());
             }
             let srv = GenerationServer::start(
-                GenBackend::Int(QuantizedGpt2::new(tiny(), spec)),
+                GenBackend::Int(QuantizedGpt2::new(tiny(), spec.clone())),
                 GenerationConfig::default(),
             );
             let handles: Vec<_> =

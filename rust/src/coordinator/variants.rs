@@ -21,7 +21,8 @@ pub struct VariantKey {
     pub model: String,
     /// "eval" (per-seq nll) or "logits"
     pub kind: String,
-    /// e.g. "muxq-pt", "naive-pv", "fp16-pt", "muxq-pt-sq", "muxq-pt-e1"
+    /// e.g. "muxq-pt", "naive-pv", "fp16-pt", "muxq-pt-sq", "muxq-pt-e1",
+    /// "muxq-pv-rot", "naive-pv-rot-perm-w4a8", "resq-pv-r8"
     pub tag: String,
 }
 
@@ -42,6 +43,15 @@ pub struct VariantMeta {
     pub method: String,
     pub granularity: String,
     pub smooth: bool,
+    /// Pre-transform flags: whether the tag's pipeline carries a
+    /// blockwise rotation / zigzag permutation. Optional in the JSON
+    /// (older manifests predate the pipeline: absent means "whatever
+    /// the tag says"), but when present they must agree with the tag.
+    pub rotate: bool,
+    pub permute: bool,
+    /// Explicit resq residual rank (`-r{N}` tag suffix); `None` means
+    /// the operator picks its rank (calibrated or k/16 fallback).
+    pub resid_rank: Option<usize>,
     pub exp_factor: u32,
     pub file: String,
     pub batch: usize,
@@ -104,6 +114,26 @@ impl Manifest {
             };
             let ia_bits = bits_field("ia_bits", spec.ia_bits)?;
             let w_bits = bits_field("w_bits", spec.w_bits)?;
+            // pre-transform fields are optional the same way: absent
+            // defers to the tag, present must not drift from it
+            let flag_field = |field: &str, want: bool| -> Result<bool> {
+                match e {
+                    Json::Obj(m) => match m.get(field) {
+                        Some(v) => v.as_bool(),
+                        None => Ok(want),
+                    },
+                    _ => Ok(want),
+                }
+            };
+            let rotate = flag_field("rotate", spec.has_rotate())?;
+            let permute = flag_field("permute", spec.has_permute())?;
+            let resid_rank = match e {
+                Json::Obj(m) => match m.get("resid_rank") {
+                    Some(v) => Some(v.as_usize()?),
+                    None => spec.resid_rank,
+                },
+                _ => spec.resid_rank,
+            };
             if (ia_bits, w_bits) != (spec.ia_bits, spec.w_bits) {
                 bail!(
                     "manifest entry {:?} bits drifted from its tag: manifest w{}a{} vs tag w{}a{}",
@@ -119,6 +149,9 @@ impl Manifest {
                 method: e.get("method")?.as_str()?.to_string(),
                 granularity: e.get("granularity")?.as_str()?.to_string(),
                 smooth: e.get("smooth")?.as_bool()?,
+                rotate,
+                permute,
+                resid_rank,
                 exp_factor: e.get("exp_factor")?.as_usize()? as u32,
                 file: e.get("file")?.as_str()?.to_string(),
                 batch: e.get("batch")?.as_usize()?,
@@ -130,7 +163,7 @@ impl Manifest {
             if spec.method.tag_name() != meta.method
                 || crate::quant::Granularity::parse(&meta.granularity)
                     != Some((spec.act_gran, spec.w_gran))
-                || spec.smooth_alpha.is_some() != meta.smooth
+                || spec.has_smooth() != meta.smooth
                 || (spec.method == crate::quant::Method::Muxq
                     && spec.muxq.exp_factor != meta.exp_factor)
             {
@@ -142,6 +175,26 @@ impl Manifest {
                     meta.granularity,
                     meta.smooth,
                     meta.exp_factor
+                );
+            }
+            if (meta.rotate, meta.permute) != (spec.has_rotate(), spec.has_permute()) {
+                bail!(
+                    "manifest entry {:?} pre-transform drifted from its tag: \
+                     manifest rotate {} permute {} vs tag rotate {} permute {}",
+                    key.tag,
+                    meta.rotate,
+                    meta.permute,
+                    spec.has_rotate(),
+                    spec.has_permute()
+                );
+            }
+            if meta.resid_rank != spec.resid_rank {
+                bail!(
+                    "manifest entry {:?} resid_rank drifted from its tag: \
+                     manifest {:?} vs tag {:?}",
+                    key.tag,
+                    meta.resid_rank,
+                    spec.resid_rank
                 );
             }
             entries.insert(key, meta);

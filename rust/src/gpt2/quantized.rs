@@ -252,7 +252,7 @@ mod tests {
         let t = toks(2, 8, 1);
         let (fp_nll, _) = fp.nll_per_seq(&t, None).unwrap();
         for spec in [EngineSpec::naive(), EngineSpec::muxq(), EngineSpec::llmint8()] {
-            let q = QuantizedGpt2::new(tiny(), spec);
+            let q = QuantizedGpt2::new(tiny(), spec.clone());
             let (q_nll, counts) = q.nll_per_seq(&t).unwrap();
             assert_eq!(counts[0], 7.0);
             for (a, b) in fp_nll.iter().zip(&q_nll) {
@@ -370,7 +370,7 @@ mod tests {
         let t = toks(2, 8, 5);
         let fp_logits = fp.forward(&t, None, None).unwrap();
         for spec in [EngineSpec::naive(), EngineSpec::muxq(), EngineSpec::llmint8()] {
-            let q = QuantizedGpt2::new(tiny(), spec);
+            let q = QuantizedGpt2::new(tiny(), spec.clone());
             let s_logits = q.forward_logits_session(&t).unwrap();
             assert_eq!((s_logits.rows, s_logits.cols), (fp_logits.rows, fp_logits.cols));
             assert!(
@@ -424,6 +424,32 @@ mod tests {
             let rel = (a - b).abs() / a.abs().max(1.0);
             assert!(rel < 0.05, "fp {a} smooth-int {b}");
         }
+    }
+
+    #[test]
+    fn rotated_permuted_calibrated_deployment_runs_and_stays_close() {
+        // the full pipeline surface — rotation + permutation folded into
+        // the packed weights at load time, inverses applied per call —
+        // deploys through the same calibrated path SmoothQuant uses and
+        // keeps 8-bit NLL within the usual envelope of the fp model
+        let fp = tiny();
+        let calib = toks(2, 8, 9);
+        let t = toks(2, 8, 10);
+        let (fp_nll, _) = fp.nll_per_seq(&t, None).unwrap();
+        let spec = EngineSpec::muxq().with_rotate().with_permute();
+        let q = QuantizedGpt2::new_calibrated(tiny(), spec, &calib).unwrap();
+        assert_eq!(q.spec.tag(), "muxq-pv-rot-perm");
+        let (q_nll, _) = q.nll_per_seq(&t).unwrap();
+        for (a, b) in fp_nll.iter().zip(&q_nll) {
+            let rel = (a - b).abs() / a.abs().max(1.0);
+            assert!(rel < 0.05, "fp {a} rot-perm-int {b}");
+        }
+        // the uncalibrated constructor serves the same pipeline (pack-time
+        // fallback ranges), including composed with a W4 weight stream
+        let q2 = QuantizedGpt2::new(tiny(), EngineSpec::naive().with_bits(8, 4).with_rotate());
+        assert_eq!(q2.spec.tag(), "naive-pv-rot-w4a8");
+        let (nll2, _) = q2.nll_per_seq(&t).unwrap();
+        assert!(nll2.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! plan end to end.
 
 use super::{gemm_cost_w, model_cost, Cost, NpuConfig, Precision};
-use crate::quant::Method;
+use crate::quant::{Method, PreTransform};
 
 /// One GEMM in a plan. Activation operand at `prec`, weight operand at
 /// `w_prec` — split so W4A8 plans price the nibble weight stream
@@ -239,6 +239,51 @@ impl Plan {
         let bytes: f64 =
             self.gemms.iter().map(|g| (g.k * g.n) as f64 * g.w_prec.bytes()).sum();
         self.pack_cycles += bytes / cfg.pack_bytes_per_cycle;
+        self
+    }
+
+    /// Price the activation-side pre-transform pipeline into this plan:
+    /// the weight-side halves are folded at pack time and cost nothing
+    /// per call, but each step must touch the live `[t, k]` activation
+    /// tile before the quantizer sees it. `Smooth` is an elementwise
+    /// divide on the vector unit; `Permute` moves the tile at the
+    /// irregular-gather rate (the same penalty the mixed-precision
+    /// split pays); `Rotate` is real extra GEMM work — every rotated
+    /// channel contracts a `block`-wide sliver of the row, so the tile
+    /// prices as one skinny FP GEMM `[t, block] @ [block, k]` on top of
+    /// the method's own lowering (the host twin is
+    /// [`crate::quant::transform::BlockRot::apply_to_row`]).
+    pub fn with_act_pre_transforms(
+        mut self,
+        cfg: &NpuConfig,
+        t: usize,
+        k: usize,
+        pre: &[PreTransform],
+    ) -> Plan {
+        for step in pre {
+            match step {
+                PreTransform::Smooth { .. } => {
+                    // per-channel divide: t*k elements, 64 vector lanes
+                    self.overhead_cycles += (t * k) as f64 / 64.0;
+                }
+                PreTransform::Permute { .. } => {
+                    // gather the fp16 activation tile through the
+                    // channel-order table (non-contiguous by design)
+                    self.overhead_cycles +=
+                        (t * k) as f64 * 2.0 / cfg.gather_bytes_per_cycle;
+                }
+                PreTransform::Rotate { block } => {
+                    self.gemms.push(PlannedGemm {
+                        label: "rot-pre",
+                        m: t,
+                        k: (*block).max(1),
+                        n: k,
+                        prec: Precision::Fp16,
+                        w_prec: Precision::Fp16,
+                    });
+                }
+            }
+        }
         self
     }
 
@@ -649,6 +694,68 @@ mod tests {
         let dearer = cfg.clone().with_page_gather_setup(640.0);
         let p2 = base.clone().with_paged_kv_gather(&dearer, 96, 768, 16);
         assert!(p2.overhead_cycles > paged.overhead_cycles);
+    }
+
+    #[test]
+    fn act_pre_transform_pricing() {
+        // the weight-side halves fold at pack time; only the live
+        // activation tile costs per call, and each step's price has the
+        // right shape: smooth ~ vector cycles, permute ~ gather bytes,
+        // rotate ~ one skinny FP GEMM appended to the plan
+        let cfg = NpuConfig::default();
+        let (t, k, n) = (8, 768, 2304);
+        let base = Plan::build(&cfg, Method::Naive, t, k, n, 0, 8, 4, 1);
+        let none = base.clone().with_act_pre_transforms(&cfg, t, k, &[]);
+        assert_eq!(none.cost(&cfg).cycles(), base.cost(&cfg).cycles());
+
+        let sq = base.clone().with_act_pre_transforms(
+            &cfg,
+            t,
+            k,
+            &[PreTransform::Smooth { alpha: 0.5 }],
+        );
+        assert_eq!(sq.overhead_cycles, (t * k) as f64 / 64.0);
+        assert_eq!(sq.gemms.len(), base.gemms.len(), "smooth adds no GEMM");
+
+        let perm = base.clone().with_act_pre_transforms(
+            &cfg,
+            t,
+            k,
+            &[PreTransform::Permute { kind: crate::quant::PermuteKind::Zigzag }],
+        );
+        assert_eq!(
+            perm.overhead_cycles,
+            (t * k) as f64 * 2.0 / cfg.gather_bytes_per_cycle
+        );
+
+        let rot = base.clone().with_act_pre_transforms(
+            &cfg,
+            t,
+            k,
+            &[PreTransform::Rotate { block: 16 }],
+        );
+        assert_eq!(rot.gemms.len(), base.gemms.len() + 1);
+        let leg = rot.gemms.last().unwrap();
+        assert_eq!((leg.m, leg.k, leg.n), (t, 16, k));
+        assert_eq!(leg.prec, Precision::Fp16);
+        assert!(rot.cost(&cfg).cycles() > base.cost(&cfg).cycles());
+        // the rotation sliver is skinny: a small tax on the decode-ish
+        // plan, nowhere near doubling it
+        assert!(rot.cost(&cfg).cycles() < 1.25 * base.cost(&cfg).cycles());
+
+        // composition sums: sq + perm + rot stack their individual costs
+        let all = base.clone().with_act_pre_transforms(
+            &cfg,
+            t,
+            k,
+            &[
+                PreTransform::Smooth { alpha: 0.5 },
+                PreTransform::Permute { kind: crate::quant::PermuteKind::Zigzag },
+                PreTransform::Rotate { block: 16 },
+            ],
+        );
+        assert_eq!(all.overhead_cycles, sq.overhead_cycles + perm.overhead_cycles);
+        assert_eq!(all.gemms.len(), base.gemms.len() + 1);
     }
 
     #[test]

@@ -24,11 +24,15 @@
 //!   hardware pricing flows from the same object that runs on the host.
 //!
 //! [`EngineSpec`] is the builder that owns method, bits, granularity,
-//! [`MuxqParams`] and the optional SmoothQuant composition, replacing both
+//! [`MuxqParams`] and the ordered [`PreTransform`] pipeline (SmoothQuant
+//! scaling, DuQuant-style blockwise rotation, zigzag channel
+//! permutation — `quant::transform` owns the algebra), replacing both
 //! the old `QuantSpec::matmul` dispatch and `IntMethod`. Its canonical
 //! `tag()` / [`EngineSpec::parse`] round-trip is the single spelling of a
-//! variant ("muxq-pt-sq", "naive-pv", "muxq-pt-e1", …) shared with the
-//! python build's manifest (`python/compile/config.py QuantConfig.tag`).
+//! variant ("muxq-pt-sq", "naive-pv-rot-perm-w4a8", "resq-pv-r8", …)
+//! shared with the python build's manifest
+//! (`python/compile/config.py QuantConfig.tag`); pre-transform suffixes
+//! appear in pipeline order because composition order is observable.
 //!
 //! Bit-exactness contract: the Naive and MUXQ operators reproduce the
 //! pre-redesign `QuantizedGpt2::proj_int` / `proj_session` arithmetic
@@ -43,6 +47,9 @@ use super::matrix::{rint, MatF32, MatI32, MatI8};
 use super::method::Method;
 use super::muxq::{outlier_mask_into, MuxqParams};
 use super::packed::{self, PackedMatI4, PackedMatI8, ParallelGemm};
+use super::transform::{
+    zigzag_perm, ActPipeline, ActStep, BlockRot, PermuteKind, PreTransform, ROT_BLOCK,
+};
 use crate::npusim::gemm_plan::Plan;
 use crate::npusim::NpuConfig;
 use anyhow::{bail, Result};
@@ -53,10 +60,12 @@ use std::fmt;
 
 /// Full specification of a deployable linear-operator engine: which
 /// method, at which bit-widths and granularities, with which MUXQ
-/// hyper-parameters, optionally composed with SmoothQuant. The builder
-/// half of the [`QuantLinear`] API — `spec.pack(w, bias)` yields the
-/// operator object.
-#[derive(Debug, Clone, Copy)]
+/// hyper-parameters, composed with an ordered pack-time
+/// [`PreTransform`] pipeline (SmoothQuant scaling, DuQuant-style
+/// blockwise rotation, zigzag channel permutation — in any order). The
+/// builder half of the [`QuantLinear`] API — `spec.pack(w, bias)`
+/// yields the operator object.
+#[derive(Debug, Clone)]
 pub struct EngineSpec {
     pub method: Method,
     /// activation granularity (PerRow = per-token, the deployment default)
@@ -67,14 +76,23 @@ pub struct EngineSpec {
     pub w_bits: u32,
     /// outlier threshold + exponent shift (also LLM.int8()'s theta)
     pub muxq: MuxqParams,
-    /// SmoothQuant migration strength; `None` = no smoothing
-    pub smooth_alpha: Option<f32>,
+    /// the ORDERED pack-time pre-transform pipeline; empty = none.
+    /// Each entry rewrites `(W, calib)` at pack time and contributes
+    /// its activation-side inverse to the operator (`quant::transform`
+    /// has the algebra). The old `smooth_alpha: Option<f32>` field is
+    /// the one-element `[Smooth{alpha}]` pipeline.
+    pub pre: Vec<PreTransform>,
+    /// ResQ residual rank override (`-r{N}`); `None` = chosen at pack
+    /// time (calibrated energy threshold, or the k/16 heuristic when
+    /// packing uncalibrated)
+    pub resid_rank: Option<usize>,
 }
 
 impl EngineSpec {
     /// Deployment defaults: per-token activations, per-out-channel
     /// weights, the method's default bit-widths
-    /// ([`EngineSpec::default_bits`]), default MUXQ params, no smoothing.
+    /// ([`EngineSpec::default_bits`]), default MUXQ params, an empty
+    /// pre-transform pipeline.
     pub fn new(method: Method) -> EngineSpec {
         let (ia_bits, w_bits) = EngineSpec::default_bits(method);
         EngineSpec {
@@ -84,7 +102,8 @@ impl EngineSpec {
             ia_bits,
             w_bits,
             muxq: MuxqParams::default(),
-            smooth_alpha: None,
+            pre: Vec::new(),
+            resid_rank: None,
         }
     }
 
@@ -142,9 +161,58 @@ impl EngineSpec {
     /// Compose with SmoothQuant difficulty migration (paper contribution
     /// #2): at pack time the weight rows are scaled by `s` and every
     /// incoming activation is divided by `s` before quantization.
-    pub fn with_smooth(mut self, alpha: f32) -> EngineSpec {
-        self.smooth_alpha = Some(alpha);
+    /// Appends `Smooth{alpha}` to the pipeline — the pre-redesign
+    /// `smooth_alpha` field spelled as a transform.
+    pub fn with_smooth(self, alpha: f32) -> EngineSpec {
+        self.with_pre(PreTransform::Smooth { alpha })
+    }
+
+    /// Compose with a DuQuant-style blockwise orthogonal rotation
+    /// ([`super::transform::BlockRot`], block width [`ROT_BLOCK`]):
+    /// `R·W` folded in at pack time, `x·Rᵀ` applied per activation row.
+    pub fn with_rotate(self) -> EngineSpec {
+        self.with_pre(PreTransform::Rotate { block: ROT_BLOCK })
+    }
+
+    /// Compose with the zigzag channel permutation (calibration-ranked
+    /// channels dealt evenly across [`ROT_BLOCK`]-wide groups).
+    pub fn with_permute(self) -> EngineSpec {
+        self.with_pre(PreTransform::Permute { kind: PermuteKind::Zigzag })
+    }
+
+    /// Append one pre-transform to the pipeline (transforms compose in
+    /// the order appended — order is observable, and the tag spells it).
+    pub fn with_pre(mut self, t: PreTransform) -> EngineSpec {
+        self.pre.push(t);
         self
+    }
+
+    /// Pin the ResQ residual rank (`-r{N}`) instead of letting pack
+    /// time choose it.
+    pub fn with_resid_rank(mut self, rank: usize) -> EngineSpec {
+        self.resid_rank = Some(rank);
+        self
+    }
+
+    /// First smooth stage's alpha, if the pipeline smooths — the
+    /// back-compat query the manifest's `smooth` field maps to.
+    pub fn smooth_alpha(&self) -> Option<f32> {
+        self.pre.iter().find_map(|t| match t {
+            PreTransform::Smooth { alpha } => Some(*alpha),
+            _ => None,
+        })
+    }
+
+    pub fn has_smooth(&self) -> bool {
+        self.smooth_alpha().is_some()
+    }
+
+    pub fn has_rotate(&self) -> bool {
+        self.pre.iter().any(|t| matches!(t, PreTransform::Rotate { .. }))
+    }
+
+    pub fn has_permute(&self) -> bool {
+        self.pre.iter().any(|t| matches!(t, PreTransform::Permute { .. }))
     }
 
     pub fn ia_qmax(&self) -> f32 {
@@ -157,18 +225,27 @@ impl EngineSpec {
 
     /// The canonical variant tag — the ONE spelling shared by the python
     /// build manifest, the coordinator registry, and every example:
-    /// `{method}-{pt|pv}[-sq][-e{exp}][-w{W}a{A}]`. The `-e` suffix only
-    /// appears for MUXQ with a non-default `exp_factor`; the `-w{W}a{A}`
-    /// bits suffix only when the widths differ from the method's
-    /// defaults ([`EngineSpec::default_bits`]) — so `naive-pv-w4a8` is
-    /// the nibble-packed W4A8 engine while `naive-pv` stays W8A8 and
-    /// bare `resq-pv` already means W4A8.
+    /// `{method}-{pt|pv}[{-sq|-rot|-perm}…][-r{N}][-e{exp}][-w{W}a{A}]`.
+    /// The pre-transform suffixes appear in PIPELINE ORDER (order is
+    /// observable — `-sq-rot` calibrates the smooth in the unrotated
+    /// basis, `-rot-sq` in the rotated one); parameters are not encoded
+    /// (`-sq` is alpha 0.5, `-rot`/`-perm` use [`ROT_BLOCK`]). `-r{N}`
+    /// pins the ResQ residual rank. The `-e` suffix only appears for
+    /// MUXQ with a non-default `exp_factor`; the `-w{W}a{A}` bits
+    /// suffix only when the widths differ from the method's defaults
+    /// ([`EngineSpec::default_bits`]) — so `naive-pv-w4a8` is the
+    /// nibble-packed W4A8 engine while `naive-pv` stays W8A8 and bare
+    /// `resq-pv` already means W4A8.
     pub fn tag(&self) -> String {
         let g = match (self.act_gran, self.w_gran) {
             (Granularity::PerTensor, Granularity::PerTensor) => "pt",
             _ => "pv",
         };
-        let s = if self.smooth_alpha.is_some() { "-sq" } else { "" };
+        let s: String = self.pre.iter().map(|t| t.tag_suffix()).collect();
+        let r = match (self.method, self.resid_rank) {
+            (Method::Resq, Some(n)) => format!("-r{n}"),
+            _ => String::new(),
+        };
         let e = if self.method == Method::Muxq && self.muxq.exp_factor != 2 {
             format!("-e{}", self.muxq.exp_factor)
         } else {
@@ -179,17 +256,19 @@ impl EngineSpec {
         } else {
             String::new()
         };
-        format!("{}-{g}{s}{e}{b}", self.method.tag_name())
+        format!("{}-{g}{s}{r}{e}{b}", self.method.tag_name())
     }
 
     /// Parse a canonical tag back into a spec (absent bits suffix means
-    /// the method's default widths, the smooth alpha defaults to 0.5 —
-    /// alpha is not encoded in tags). Inverse of [`EngineSpec::tag`];
-    /// `parse(t).tag() == t` for every CANONICAL tag, which is what
-    /// keeps manifest and examples drift-free. A bits suffix spelling
-    /// out the method defaults (e.g. `naive-pv-w8a8`) parses fine but
-    /// re-tags to the canonical short form — the manifest canonicality
-    /// check relies on exactly that.
+    /// the method's default widths; transform parameters are not
+    /// encoded — `-sq` parses to alpha 0.5, `-rot`/`-perm` to the
+    /// [`ROT_BLOCK`] schemes — and the pipeline is rebuilt in suffix
+    /// order). Inverse of [`EngineSpec::tag`]; `parse(t).tag() == t`
+    /// for every CANONICAL tag, which is what keeps manifest and
+    /// examples drift-free. A bits suffix spelling out the method
+    /// defaults (e.g. `naive-pv-w8a8`) parses fine but re-tags to the
+    /// canonical short form — the manifest canonicality check relies on
+    /// exactly that.
     pub fn parse(tag: &str) -> Result<EngineSpec> {
         let mut parts = tag.split('-');
         let Some(m) = parts.next() else { bail!("empty variant tag") };
@@ -201,7 +280,22 @@ impl EngineSpec {
         let mut spec = EngineSpec::new(method).with_granularity(act_gran, w_gran);
         for p in parts {
             if p == "sq" {
-                spec.smooth_alpha = Some(0.5);
+                spec.pre.push(PreTransform::Smooth { alpha: 0.5 });
+            } else if p == "rot" {
+                spec.pre.push(PreTransform::Rotate { block: ROT_BLOCK });
+            } else if p == "perm" {
+                spec.pre.push(PreTransform::Permute { kind: PermuteKind::Zigzag });
+            } else if let Some(r) = p.strip_prefix('r') {
+                let rank: usize = r
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("variant tag {tag:?}: bad rank suffix {p:?}"))?;
+                if method != Method::Resq {
+                    bail!("variant tag {tag:?}: -r suffix is resq-only");
+                }
+                if rank == 0 {
+                    bail!("variant tag {tag:?}: residual rank must be >= 1");
+                }
+                spec.resid_rank = Some(rank);
             } else if let Some(e) = p.strip_prefix('e') {
                 let exp: u32 = e
                     .parse()
@@ -230,17 +324,24 @@ impl EngineSpec {
     }
 
     /// Build the operator for one weight matrix `w [k, n]` + bias,
-    /// quantizing and packing ONCE (load time). Smoothing, when
-    /// configured, uses unit calibration (weight-only equalization);
-    /// real deployments calibrate — see [`EngineSpec::pack_calibrated`].
+    /// quantizing and packing ONCE (load time). Pre-transforms, when
+    /// configured, use unit calibration (weight-only equalization for
+    /// smooth, rank-order-degenerate zigzag); real deployments
+    /// calibrate — see [`EngineSpec::pack_calibrated`].
     pub fn pack(&self, w: &MatF32, bias: &[f32]) -> Box<dyn QuantLinear> {
         self.pack_calibrated(w, bias, None)
     }
 
     /// [`EngineSpec::pack`] with a per-input-channel activation abs-max
-    /// from calibration (len `k`) feeding the SmoothQuant scales
-    /// `s_j = amax_j^alpha / wmax_j^(1-alpha)`. Ignored when the spec has
-    /// no smoothing.
+    /// from calibration (len `k`). The ordered [`PreTransform`]
+    /// pipeline folds into the weight here: each stage rewrites
+    /// `(W, amax)` — smooth scales rows by `s = amax^α/wmax^(1−α)` and
+    /// divides `amax`, permute reorders both, rotate folds `R·W` and
+    /// propagates an RMS `amax` estimate — and contributes its
+    /// activation-side inverse to the [`ActPipeline`] the operator
+    /// applies per call. Applied identically by every method (that is
+    /// the composability claim). The calibrated `amax` surviving the
+    /// pipeline also drives ResQ's energy-threshold rank selection.
     pub fn pack_calibrated(
         &self,
         w: &MatF32,
@@ -248,50 +349,81 @@ impl EngineSpec {
         act_absmax: Option<&[f32]>,
     ) -> Box<dyn QuantLinear> {
         assert_eq!(bias.len(), w.cols, "bias length vs output dim");
-        // the SmoothQuant pre-transform: scale weight rows by s at pack
-        // time, remember s to divide activations at call time. Applied
-        // identically by every method (that is the composability claim).
-        let (w_eff, smooth_s): (std::borrow::Cow<'_, MatF32>, Option<Vec<f32>>) =
-            match self.smooth_alpha {
-                None => (std::borrow::Cow::Borrowed(w), None),
-                Some(alpha) => {
-                    let ones = vec![1.0f32; w.rows];
-                    let amax = act_absmax.unwrap_or(&ones);
-                    let s = super::smooth::smooth_scales(amax, w, alpha);
-                    let mut ws = w.clone();
+        let k = w.rows;
+        let calibrated = act_absmax.is_some();
+        let mut amax: Vec<f32> = match act_absmax {
+            Some(a) => {
+                assert_eq!(a.len(), k, "calibration abs-max length vs input dim");
+                a.to_vec()
+            }
+            None => vec![1.0f32; k],
+        };
+        let mut w_eff: std::borrow::Cow<'_, MatF32> = std::borrow::Cow::Borrowed(w);
+        let mut pre = ActPipeline::empty();
+        for t in &self.pre {
+            match *t {
+                PreTransform::Smooth { alpha } => {
+                    let s = super::smooth::smooth_scales(&amax, &w_eff, alpha);
+                    let ws = w_eff.to_mut();
                     for (r, sc) in s.iter().enumerate() {
                         for v in ws.row_mut(r) {
                             *v *= sc;
                         }
                     }
-                    (std::borrow::Cow::Owned(ws), Some(s))
+                    for (a, sc) in amax.iter_mut().zip(&s) {
+                        *a /= sc;
+                    }
+                    pre.push(ActStep::Scale(s));
                 }
-            };
+                PreTransform::Permute { kind: PermuteKind::Zigzag } => {
+                    let p = zigzag_perm(&amax, ROT_BLOCK);
+                    let mut ws = MatF32::zeros(k, w_eff.cols);
+                    for (j, &src) in p.iter().enumerate() {
+                        ws.row_mut(j).copy_from_slice(w_eff.row(src));
+                    }
+                    amax = p.iter().map(|&src| amax[src]).collect();
+                    w_eff = std::borrow::Cow::Owned(ws);
+                    pre.push(ActStep::Permute(p));
+                }
+                PreTransform::Rotate { block } => {
+                    let rot = BlockRot::build(k, block);
+                    w_eff = std::borrow::Cow::Owned(rot.apply_to_weight(&w_eff));
+                    amax = rot.amax_estimate(&amax);
+                    pre.push(ActStep::Rotate(rot));
+                }
+            }
+        }
         let w_eff: &MatF32 = &w_eff;
         match self.method {
             Method::Fp16 => Box::new(Fp32Linear {
-                spec: *self,
+                spec: self.clone(),
                 w: w_eff.clone(),
                 bias: bias.to_vec(),
-                smooth_s,
+                pre,
             }),
             Method::Naive => Box::new(NaiveLinear {
-                spec: *self,
+                spec: self.clone(),
                 qw: PackedWeight::quantize(w_eff, self.w_qmax(), self.w_gran, bias, self.w_bits),
-                smooth_s,
+                pre,
             }),
             Method::Muxq => Box::new(MuxqLinear {
-                spec: *self,
+                spec: self.clone(),
                 qw: PackedWeight::quantize(w_eff, self.w_qmax(), self.w_gran, bias, self.w_bits),
-                smooth_s,
+                pre,
             }),
             Method::LlmInt8 => Box::new(LlmInt8Linear {
-                spec: *self,
+                spec: self.clone(),
                 qw: PackedWeight::quantize(w_eff, self.w_qmax(), self.w_gran, bias, self.w_bits),
                 w_fp: w_eff.clone(),
-                smooth_s,
+                pre,
             }),
-            Method::Resq => Box::new(ResqLinear::build(*self, w_eff, bias, smooth_s)),
+            Method::Resq => Box::new(ResqLinear::build(
+                self.clone(),
+                w_eff,
+                bias,
+                pre,
+                calibrated.then_some(&amax[..]),
+            )),
         }
     }
 
@@ -301,7 +433,7 @@ impl EngineSpec {
     /// `QuantSpec::matmul` now IS this trait. FP16 skips the pack (no
     /// weight copy on the reference path).
     pub fn matmul(&self, x: &MatF32, w: &MatF32) -> MatF32 {
-        if self.method == Method::Fp16 && self.smooth_alpha.is_none() {
+        if self.method == Method::Fp16 && self.pre.is_empty() {
             return matmul_f32(x, w);
         }
         self.pack(w, &vec![0.0f32; w.cols]).forward(x)
@@ -371,11 +503,15 @@ pub trait QuantLinear: Send + Sync {
 
     /// The npusim execution plan of one `m`-row call with `r` live
     /// outlier channels — simulated-hardware pricing derived from the
-    /// same object that runs on the host.
+    /// same object that runs on the host. The spec's pre-transform
+    /// pipeline prices its activation-side work on top
+    /// ([`Plan::with_act_pre_transforms`]); the folded weight side is
+    /// free per call by construction.
     fn plan(&self, cfg: &NpuConfig, m: usize, r: usize) -> Plan {
         let (k, n) = self.shape();
         let s = self.spec();
         Plan::build(cfg, s.method, m, k, n, r, s.ia_bits, s.w_bits, s.muxq.exp_factor)
+            .with_act_pre_transforms(cfg, m, k, &s.pre)
     }
 
     /// [`QuantLinear::plan`] priced on the NPU config that mirrors the
@@ -499,10 +635,14 @@ impl PackedWeight {
 /// never nest, so one scratch per thread serves every operator; each
 /// call resizes the buffers it touches.
 struct IntScratch {
-    /// smoothed activations (only touched when the spec smooths)
+    /// pre-transformed activations (only touched when the spec has a
+    /// pre-transform pipeline)
     xs: MatF32,
     /// single-row staging for the row path
     xrow: MatF32,
+    /// pipeline staging for the permute/rotate steps (Scale runs in
+    /// place; the other steps stage one row here and copy back)
+    tbuf: Vec<f32>,
     /// quantized activations (Body for MUXQ, masked-normal for LLM.int8())
     xq: MatI8,
     /// compact quantized Aux — outlier columns only, [m, r]
@@ -523,6 +663,7 @@ impl IntScratch {
         IntScratch {
             xs: MatF32::zeros(0, 0),
             xrow: MatF32::zeros(0, 0),
+            tbuf: Vec::new(),
             xq: MatI8::zeros(0, 0),
             aux_q: MatI8::zeros(0, 0),
             xg: MatF32::zeros(0, 0),
@@ -535,20 +676,18 @@ impl IntScratch {
         }
     }
 
-    /// Stage one activation row (applying the smooth divide) into the
-    /// reusable single-row buffer — the shared `forward_row_into`
-    /// preamble of every INT operator. ONE implementation on purpose:
-    /// this is the seam the decode bit-exactness oracles stand on.
-    fn stage_row(&mut self, x: &[f32], smooth_s: &Option<Vec<f32>>) {
+    /// Stage one activation row (applying the pre-transform pipeline)
+    /// into the reusable single-row buffer — the shared
+    /// `forward_row_into` preamble of every operator. ONE implementation
+    /// on purpose: this is the seam the decode bit-exactness oracles
+    /// stand on, and [`transformed`] (the batch seam) routes every row
+    /// through the same [`ActPipeline::apply_row`] arithmetic.
+    fn stage_row(&mut self, x: &[f32], pre: &ActPipeline) {
         self.xrow.rows = 1;
         self.xrow.cols = x.len();
         self.xrow.data.resize(x.len(), 0.0);
         self.xrow.data.copy_from_slice(x);
-        if let Some(s) = smooth_s {
-            for (v, sv) in self.xrow.data.iter_mut().zip(s) {
-                *v /= sv;
-            }
-        }
+        pre.apply_row(&mut self.xrow.data, &mut self.tbuf);
     }
 }
 
@@ -564,18 +703,27 @@ fn with_scratch<R>(f: impl FnOnce(&mut IntScratch) -> R) -> R {
     SCRATCH.with(|s| f(&mut s.borrow_mut()))
 }
 
-/// Divide activations by the smooth scales into `buf` (matching
-/// `smooth::migrate`'s X side bit for bit), or pass `x` through
-/// untouched when the operator is not smoothed.
-fn smoothed<'a>(x: &'a MatF32, s: &Option<Vec<f32>>, buf: &'a mut MatF32) -> &'a MatF32 {
-    let Some(s) = s else { return x };
+/// Apply the activation-side pre-transform pipeline to every row of `x`
+/// into `buf` — the batch twin of [`IntScratch::stage_row`], same
+/// per-row [`ActPipeline::apply_row`] arithmetic (the row/batch
+/// bit-exactness contract; for a pure smooth pipeline this matches
+/// `smooth::migrate`'s X side bit for bit) — or pass `x` through
+/// untouched when the pipeline is empty.
+fn transformed<'a>(
+    x: &'a MatF32,
+    pre: &ActPipeline,
+    buf: &'a mut MatF32,
+    tmp: &mut Vec<f32>,
+) -> &'a MatF32 {
+    if pre.is_empty() {
+        return x;
+    }
     buf.rows = x.rows;
     buf.cols = x.cols;
     buf.data.resize(x.rows * x.cols, 0.0);
-    for ((bv, xv), sc) in
-        buf.data.iter_mut().zip(&x.data).zip(s.iter().cycle().take(x.rows * x.cols))
-    {
-        *bv = xv / sc;
+    buf.data.copy_from_slice(&x.data);
+    for r in 0..x.rows {
+        pre.apply_row(buf.row_mut(r), tmp);
     }
     buf
 }
@@ -751,7 +899,7 @@ pub struct Fp32Linear {
     spec: EngineSpec,
     w: MatF32,
     bias: Vec<f32>,
-    smooth_s: Option<Vec<f32>>,
+    pre: ActPipeline,
 }
 
 impl QuantLinear for Fp32Linear {
@@ -764,7 +912,7 @@ impl QuantLinear for Fp32Linear {
     }
 
     fn bytes(&self) -> usize {
-        self.w.data.len() * 4 + self.bias.len() * 4
+        self.w.data.len() * 4 + self.bias.len() * 4 + self.pre.bytes()
     }
 
     fn row_independent(&self) -> bool {
@@ -772,11 +920,13 @@ impl QuantLinear for Fp32Linear {
     }
 
     fn forward_into(&self, x: &MatF32, y: &mut MatF32) {
-        // smoothing is function-preserving in FP: X/s @ s⊙W == X @ W up
-        // to rounding; applied anyway so the FP operator is the faithful
-        // reference for its smoothed INT siblings
+        // pre-transforms are function-preserving in FP (X/s @ s⊙W,
+        // X·Rᵀ @ R·W, X·P @ Pᵀ·W all equal X @ W up to rounding);
+        // applied anyway so the FP operator is the faithful reference
+        // for its transformed INT siblings
         let mut buf = MatF32::zeros(0, 0);
-        let xs = smoothed(x, &self.smooth_s, &mut buf);
+        let mut tmp = Vec::new();
+        let xs = transformed(x, &self.pre, &mut buf, &mut tmp);
         *y = matmul_f32(xs, &self.w);
         for r in 0..y.rows {
             for (v, b) in y.row_mut(r).iter_mut().zip(&self.bias) {
@@ -792,22 +942,30 @@ impl QuantLinear for Fp32Linear {
         // k-ascending accumulation with the bias added LAST — the same
         // float summation order as the batch kernel (`matmul_f32` plus
         // the bias pass), so a 1-row batch and the row path agree bit
-        // for bit. The zero-skip matches `matmul_f32_rows` too.
-        y.fill(0.0);
-        for (c, &xv) in x.iter().enumerate() {
-            let xv = match &self.smooth_s {
-                Some(s) => xv / s[c],
-                None => xv,
-            };
-            if xv == 0.0 {
-                continue;
+        // for bit. The zero-skip matches `matmul_f32_rows` too. A
+        // pre-transform pipeline stages the row through the same seam
+        // the batch path uses, then accumulates identically.
+        let acc = |xrow: &[f32], y: &mut [f32]| {
+            y.fill(0.0);
+            for (c, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                for (yv, wv) in y.iter_mut().zip(self.w.row(c)) {
+                    *yv += xv * wv;
+                }
             }
-            for (yv, wv) in y.iter_mut().zip(self.w.row(c)) {
-                *yv += xv * wv;
+            for (yv, b) in y.iter_mut().zip(&self.bias) {
+                *yv += b;
             }
-        }
-        for (yv, b) in y.iter_mut().zip(&self.bias) {
-            *yv += b;
+        };
+        if self.pre.is_empty() {
+            acc(x, y);
+        } else {
+            with_scratch(|sc| {
+                sc.stage_row(x, &self.pre);
+                acc(&sc.xrow.data, y);
+            });
         }
     }
 }
@@ -819,14 +977,14 @@ impl QuantLinear for Fp32Linear {
 pub struct NaiveLinear {
     spec: EngineSpec,
     qw: PackedWeight,
-    smooth_s: Option<Vec<f32>>,
+    pre: ActPipeline,
 }
 
 impl NaiveLinear {
     fn project(&self, x: &MatF32, y: &mut MatF32) {
         let qmax = self.spec.ia_qmax();
         with_scratch(|sc| {
-            let xs = smoothed(x, &self.smooth_s, &mut sc.xs);
+            let xs = transformed(x, &self.pre, &mut sc.xs, &mut sc.tbuf);
             quantize_rows_into(xs, qmax, self.spec.act_gran, &mut sc.xq, &mut sc.sx);
             self.qw.body.gemm_into(&sc.xq, &mut sc.acc);
             dequant_bias_into(&sc.acc, &sc.sx, &self.qw.scales, None, &self.qw.bias, y);
@@ -844,7 +1002,7 @@ impl QuantLinear for NaiveLinear {
     }
 
     fn bytes(&self) -> usize {
-        self.qw.bytes() + self.smooth_s.as_ref().map_or(0, |s| s.len() * 4)
+        self.qw.bytes() + self.pre.bytes()
     }
 
     fn row_independent(&self) -> bool {
@@ -863,7 +1021,7 @@ impl QuantLinear for NaiveLinear {
         debug_assert_eq!(y.len(), n);
         let qmax = self.spec.ia_qmax();
         with_scratch(|sc| {
-            sc.stage_row(x, &self.smooth_s);
+            sc.stage_row(x, &self.pre);
             quantize_rows_into(&sc.xrow, qmax, Granularity::PerRow, &mut sc.xq, &mut sc.sx);
             self.qw.body.gemm_into(&sc.xq, &mut sc.acc);
             dequant_bias_row(&sc.acc.data[..n], sc.sx[0], &self.qw.scales, None, &self.qw.bias, y);
@@ -880,7 +1038,7 @@ impl QuantLinear for NaiveLinear {
 pub struct MuxqLinear {
     spec: EngineSpec,
     qw: PackedWeight,
-    smooth_s: Option<Vec<f32>>,
+    pre: ActPipeline,
 }
 
 impl MuxqLinear {
@@ -942,7 +1100,7 @@ impl QuantLinear for MuxqLinear {
     }
 
     fn bytes(&self) -> usize {
-        self.qw.bytes() + self.smooth_s.as_ref().map_or(0, |s| s.len() * 4)
+        self.qw.bytes() + self.pre.bytes()
     }
 
     fn row_independent(&self) -> bool {
@@ -957,12 +1115,12 @@ impl QuantLinear for MuxqLinear {
             y.rows = x.rows;
             y.cols = n;
             y.data.resize(x.rows * n, 0.0);
-            if self.smooth_s.is_some() {
-                // move the smoothed copy out of the scratch so the rest
-                // of the struct can be borrowed mutably alongside it
-                // (put back after; the placeholder is 0-element — no
+            if !self.pre.is_empty() {
+                // move the transformed copy out of the scratch so the
+                // rest of the struct can be borrowed mutably alongside
+                // it (put back after; the placeholder is 0-element — no
                 // allocation)
-                smoothed(x, &self.smooth_s, &mut sc.xs);
+                transformed(x, &self.pre, &mut sc.xs, &mut sc.tbuf);
                 let xs = std::mem::replace(&mut sc.xs, MatF32::zeros(0, 0));
                 outlier_mask_into(&xs, self.spec.muxq.theta, &mut sc.mask);
                 self.project_masked(&xs, sc, &mut y.data);
@@ -979,7 +1137,7 @@ impl QuantLinear for MuxqLinear {
         debug_assert_eq!(x.len(), k);
         debug_assert_eq!(y.len(), n);
         with_scratch(|sc| {
-            sc.stage_row(x, &self.smooth_s);
+            sc.stage_row(x, &self.pre);
             outlier_mask_into(&sc.xrow, self.spec.muxq.theta, &mut sc.mask);
             let xrow = std::mem::replace(&mut sc.xrow, MatF32::zeros(0, 0));
             self.project_masked(&xrow, sc, y);
@@ -1018,10 +1176,10 @@ impl QuantLinear for MuxqLinear {
         }
         let theta = self.spec.muxq.theta;
         with_scratch(|sc| {
-            // smooth the whole batch once (per-element divide — the same
-            // arithmetic `stage_row` applies row by row)
-            let xs_owned = if self.smooth_s.is_some() {
-                smoothed(x, &self.smooth_s, &mut sc.xs);
+            // transform the whole batch once (per-row pipeline — the
+            // same arithmetic `stage_row` applies row by row)
+            let xs_owned = if !self.pre.is_empty() {
+                transformed(x, &self.pre, &mut sc.xs, &mut sc.tbuf);
                 Some(std::mem::replace(&mut sc.xs, MatF32::zeros(0, 0)))
             } else {
                 None
@@ -1072,7 +1230,7 @@ pub struct LlmInt8Linear {
     qw: PackedWeight,
     /// resident FP weights for the outlier leg (fp16 stand-in)
     w_fp: MatF32,
-    smooth_s: Option<Vec<f32>>,
+    pre: ActPipeline,
 }
 
 impl LlmInt8Linear {
@@ -1148,9 +1306,7 @@ impl QuantLinear for LlmInt8Linear {
 
     fn bytes(&self) -> usize {
         // fp16 stand-in for the resident FP copy: 2 bytes per element
-        self.qw.bytes()
-            + self.w_fp.data.len() * 2
-            + self.smooth_s.as_ref().map_or(0, |s| s.len() * 4)
+        self.qw.bytes() + self.w_fp.data.len() * 2 + self.pre.bytes()
     }
 
     fn row_independent(&self) -> bool {
@@ -1163,8 +1319,8 @@ impl QuantLinear for LlmInt8Linear {
             y.rows = x.rows;
             y.cols = n;
             y.data.resize(x.rows * n, 0.0);
-            if self.smooth_s.is_some() {
-                smoothed(x, &self.smooth_s, &mut sc.xs);
+            if !self.pre.is_empty() {
+                transformed(x, &self.pre, &mut sc.xs, &mut sc.tbuf);
                 let xs = std::mem::replace(&mut sc.xs, MatF32::zeros(0, 0));
                 outlier_mask_into(&xs, self.spec.muxq.theta, &mut sc.mask);
                 self.project(&xs, sc, &mut y.data);
@@ -1181,7 +1337,7 @@ impl QuantLinear for LlmInt8Linear {
         debug_assert_eq!(x.len(), k);
         debug_assert_eq!(y.len(), n);
         with_scratch(|sc| {
-            sc.stage_row(x, &self.smooth_s);
+            sc.stage_row(x, &self.pre);
             outlier_mask_into(&sc.xrow, self.spec.muxq.theta, &mut sc.mask);
             let xrow = std::mem::replace(&mut sc.xrow, MatF32::zeros(0, 0));
             self.project(&xrow, sc, y);
@@ -1215,17 +1371,47 @@ pub struct ResqLinear {
     /// `0..rank`: row indices into the COMPACT residual for the gathered
     /// kernel (the activation columns are gathered to match)
     idx_all: Vec<usize>,
-    smooth_s: Option<Vec<f32>>,
+    pre: ActPipeline,
 }
 
 impl ResqLinear {
-    /// rank = max(1, k/16) — the low-rank regime of the ResQ paper: a
-    /// few percent of input channels carry most of the W4 error.
+    /// Uncalibrated fallback rank = max(1, k/16) — the low-rank regime
+    /// of the ResQ paper: a few percent of input channels carry most of
+    /// the W4 error. Calibrated packs replace this with
+    /// [`ResqLinear::calibrated_rank`].
     fn rank_for(k: usize) -> usize {
         (k / 16).max(1)
     }
 
-    fn build(spec: EngineSpec, w: &MatF32, bias: &[f32], smooth_s: Option<Vec<f32>>) -> ResqLinear {
+    /// A residual row only matters as much as the activations that
+    /// multiply it: channel `r`'s contribution to the output error is
+    /// bounded by `amax[r]·‖res_r‖`, so its ENERGY share is
+    /// `amax[r]²·‖res_r‖²`. Keep every channel whose weighted energy
+    /// exceeds [`Self::ENERGY_OUTLIER_MULT`]× the uniform share
+    /// (total/k) — a flat residual spectrum selects almost nothing
+    /// (there is nothing low-rank to correct), a spiky one selects
+    /// exactly the spikes. Clamped to `[1, k/4]` so the "low-rank"
+    /// claim stays honest even on pathological calibrations.
+    const ENERGY_OUTLIER_MULT: f32 = 4.0;
+
+    fn calibrated_rank(weighted: &[(f32, usize)]) -> usize {
+        let k = weighted.len();
+        let total: f32 = weighted.iter().map(|&(e, _)| e).sum();
+        if total <= 0.0 {
+            return 1;
+        }
+        let thresh = Self::ENERGY_OUTLIER_MULT * total / k as f32;
+        let picked = weighted.iter().filter(|&&(e, _)| e > thresh).count();
+        picked.clamp(1, (k / 4).max(1))
+    }
+
+    fn build(
+        spec: EngineSpec,
+        w: &MatF32,
+        bias: &[f32],
+        pre: ActPipeline,
+        act_absmax: Option<&[f32]>,
+    ) -> ResqLinear {
         let (k, n) = (w.rows, w.cols);
         let qmax = spec.w_qmax();
         let qw = PackedWeight::quantize(w, qmax, spec.w_gran, bias, spec.w_bits);
@@ -1235,11 +1421,23 @@ impl ResqLinear {
         // on the covered rows)
         let q = super::absmax::quantize_i8(w, &qw.scales, qmax);
         let res_at = |r: usize, c: usize| w.at(r, c) - q.data[r * n + c] as f32 * qw.scales.at(r, c);
+        // rank selection sorts rows by residual energy — weighted by
+        // the calibrated activation abs-max when one is available (the
+        // POST-pipeline abs-max: the residual lives in transformed space)
         let mut norms: Vec<(f32, usize)> = (0..k)
-            .map(|r| ((0..n).map(|c| res_at(r, c) * res_at(r, c)).sum(), r))
+            .map(|r| {
+                let e: f32 = (0..n).map(|c| res_at(r, c) * res_at(r, c)).sum();
+                let wgt = act_absmax.map_or(1.0, |a| a[r] * a[r]);
+                (e * wgt, r)
+            })
             .collect();
         norms.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
-        let rank = Self::rank_for(k).min(k);
+        let rank = match (spec.resid_rank, act_absmax) {
+            (Some(r), _) => r,           // `-r{N}`: the spec pins it
+            (None, Some(_)) => Self::calibrated_rank(&norms),
+            (None, None) => Self::rank_for(k),
+        }
+        .min(k);
         let mut idx: Vec<usize> = norms[..rank].iter().map(|&(_, r)| r).collect();
         idx.sort_unstable();
         let mut resid = MatF32::zeros(rank, n);
@@ -1249,7 +1447,7 @@ impl ResqLinear {
             }
         }
         let idx_all = (0..rank).collect();
-        ResqLinear { spec, qw, resid, idx, idx_all, smooth_s }
+        ResqLinear { spec, qw, resid, idx, idx_all, pre }
     }
 
     /// W4 INT leg + rank-r FP residual leg over rows of `xs`.
@@ -1303,10 +1501,7 @@ impl QuantLinear for ResqLinear {
     fn bytes(&self) -> usize {
         // compact residual at 2 B/elem (fp16 stand-in) + 4 B per covered
         // row index — the honest low-rank overhead on the W4 body
-        self.qw.bytes()
-            + self.resid.data.len() * 2
-            + self.idx.len() * 4
-            + self.smooth_s.as_ref().map_or(0, |s| s.len() * 4)
+        self.qw.bytes() + self.resid.data.len() * 2 + self.idx.len() * 4 + self.pre.bytes()
     }
 
     fn row_independent(&self) -> bool {
@@ -1321,8 +1516,8 @@ impl QuantLinear for ResqLinear {
             y.rows = x.rows;
             y.cols = n;
             y.data.resize(x.rows * n, 0.0);
-            if self.smooth_s.is_some() {
-                smoothed(x, &self.smooth_s, &mut sc.xs);
+            if !self.pre.is_empty() {
+                transformed(x, &self.pre, &mut sc.xs, &mut sc.tbuf);
                 let xs = std::mem::replace(&mut sc.xs, MatF32::zeros(0, 0));
                 self.project(&xs, sc, &mut y.data);
                 sc.xs = xs;
@@ -1337,7 +1532,7 @@ impl QuantLinear for ResqLinear {
         debug_assert_eq!(x.len(), k);
         debug_assert_eq!(y.len(), n);
         with_scratch(|sc| {
-            sc.stage_row(x, &self.smooth_s);
+            sc.stage_row(x, &self.pre);
             let xrow = std::mem::replace(&mut sc.xrow, MatF32::zeros(0, 0));
             self.project(&xrow, sc, y);
             sc.xrow = xrow;
@@ -1360,6 +1555,7 @@ impl QuantLinear for ResqLinear {
             s.w_bits,
             s.muxq.exp_factor,
         )
+        .with_act_pre_transforms(cfg, m, k, &s.pre)
     }
 }
 
@@ -1394,6 +1590,10 @@ mod tests {
             "llmint8-pt", "muxq-pt-sq", "naive-pt-sq", "muxq-pt-e1", "muxq-pt-e3",
             "muxq-pt-sq-e3", "naive-pv-w4a8", "muxq-pv-w4a8", "muxq-pt-sq-e3-w4a8",
             "naive-pv-w4a6", "resq-pv", "resq-pt", "resq-pv-w8a8", "llmint8-pv-w4a8",
+            // the composable pre-transform pipeline, suffixes in order
+            "muxq-pv-rot", "naive-pv-perm", "muxq-pv-rot-perm", "muxq-pv-sq-rot",
+            "muxq-pv-rot-sq", "naive-pv-rot-perm-w4a8", "muxq-pt-sq-rot-perm-e3-w4a8",
+            "resq-pv-sq-r8", "resq-pv-rot-r16", "llmint8-pv-perm-rot",
         ] {
             let spec = EngineSpec::parse(tag).unwrap();
             assert_eq!(spec.tag(), tag, "round trip");
@@ -1406,6 +1606,9 @@ mod tests {
         assert!(EngineSpec::parse("naive-pv-w4").is_err(), "bits suffix needs both widths");
         assert!(EngineSpec::parse("naive-pv-w4a").is_err());
         assert!(EngineSpec::parse("naive-pv-wxa8").is_err());
+        assert!(EngineSpec::parse("naive-pv-r4").is_err(), "-r{{N}} is resq-only");
+        assert!(EngineSpec::parse("resq-pv-r0").is_err(), "rank 0 is meaningless");
+        assert!(EngineSpec::parse("muxq-pv-rotate").is_err(), "only the short suffix parses");
         // a bits suffix spelling out the method defaults parses but
         // re-tags canonical-short — the manifest canonicality check
         // rides on this
@@ -1561,6 +1764,10 @@ mod tests {
             EngineSpec::muxq().with_bits(8, 4),
             EngineSpec::resq(),
             EngineSpec::resq().with_smooth(0.5),
+            EngineSpec::muxq().with_rotate(),
+            EngineSpec::naive().with_permute(),
+            EngineSpec::muxq().with_smooth(0.5).with_rotate().with_permute(),
+            EngineSpec::resq().with_rotate(),
         ] {
             let op = spec.pack(&w, &bias);
             let batch = op.forward(&x);
@@ -1596,6 +1803,9 @@ mod tests {
             EngineSpec::muxq().with_bits(8, 4),
             EngineSpec::naive().with_bits(8, 4),
             EngineSpec::resq(),
+            EngineSpec::muxq().with_rotate(),
+            EngineSpec::muxq().with_rotate().with_permute(),
+            EngineSpec::llmint8().with_permute(),
         ] {
             let op = spec.pack(&w, &bias);
             let mut grouped = MatF32::zeros(0, 0);

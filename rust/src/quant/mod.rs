@@ -21,6 +21,9 @@
 //! * [`llmint8`] — the mixed-precision baseline
 //! * [`group`] — per-group scales (the overhead the paper declines to pay)
 //! * [`smooth`] — SmoothQuant migration (composable with MUXQ)
+//! * [`transform`] — the composable pack-time [`PreTransform`] pipeline
+//!   (smooth / DuQuant-style blockwise rotation / zigzag permutation)
+//!   every operator folds into its weight and applies to activations
 //! * [`method`] — method naming + the fake-quant evaluation spec
 //!
 //! # Which trait impl routes through which kernel
@@ -43,6 +46,9 @@
 //! | `MuxqLinear` (`muxq-*-w4a8`) | same as `muxq-*`, W4 body AND W4 aux against the ONE nibble-packed W | Body: [`packed::matmul_i8w4_packed_into`]; Aux: [`packed::matmul_i8w4_rows_subset_into`] |
 //! | `ResqLinear` (`resq-*`) | W4 body GEMM + static rank-r FP residual leg | body [`packed::matmul_i8w4_packed_into`]; residual [`gemm::matmul_f32_rows_gathered_acc`] over a compact `[rank, n]` residual (no resident full FP copy) |
 //! | any, smoothed (`*-sq`) | X/s pre-divide, s⊙W folded in at pack time | same kernels as the unsmoothed impl — composition is a pre-transform, not a route |
+//! | any, rotated (`*-rot`) | blockwise `x·Rᵀ` pre-GEMM, `R·W` folded in at pack time | same kernels; the rotate itself is a k×[`transform::ROT_BLOCK`] f32 sliver per row ([`transform::BlockRot::apply_to_row`]), priced by npusim as one extra skinny FP GEMM |
+//! | any, permuted (`*-perm`) | channel gather `x[perm]` pre-quantize, W rows reordered at pack time | same kernels — a permutation never touches the contraction, only the operand layout |
+//! | any composition (`*-sq-rot-perm`, any order) | the ordered [`transform::ActPipeline`] at the two staging seams | transforms stack; the tag spells pipeline order because order is observable |
 //!
 //! Inside the packed engine every INT contraction above (dense tile,
 //! rows-subset Aux, skinny-M GEMV) resolves its microkernel through the
@@ -78,6 +84,7 @@ pub mod muxq;
 pub mod packed;
 pub mod simd;
 pub mod smooth;
+pub mod transform;
 
 pub use absmax::{fq_naive, qmax_from_bits, Granularity, Scales};
 pub use linear::{EngineSpec, QuantLinear};
@@ -85,3 +92,4 @@ pub use matrix::{MatF32, MatI32, MatI8};
 pub use method::{Method, QuantSpec};
 pub use muxq::MuxqParams;
 pub use packed::{PackedMatI4, PackedMatI8, ParallelGemm};
+pub use transform::{PermuteKind, PreTransform};

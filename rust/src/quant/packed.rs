@@ -80,6 +80,14 @@
 //! i32 accumulation is exact for K up to 2^31 / 128^2 ≈ 131k — far above
 //! any model dimension here; `debug_assert`s guard the operand shapes.
 //!
+//! Pack-time pre-transforms (SmoothQuant scaling, blockwise rotation,
+//! channel permutation — `super::transform`) never reach this layer:
+//! [`EngineSpec::pack`](super::linear::EngineSpec::pack) rewrites the
+//! f32 weight BEFORE quantization, so the panels packed here always
+//! hold the already-transformed weight and the kernels stay
+//! transform-oblivious. The per-call inverse lives on the activation
+//! staging side (`linear::IntScratch`), upstream of every contraction.
+//!
 //! Perf numbers live in EXPERIMENTS.md §Perf; `bench_gemm` regenerates
 //! them (BENCH_gemm.json, gated by rust/scripts/bench_check.sh, doc and
 //! test hygiene by rust/scripts/ci_check.sh).

@@ -1,0 +1,525 @@
+//! Composable pack-time pre-transforms — the `PreTransform` pipeline.
+//!
+//! MUXQ's outlier decomposition, SmoothQuant's difficulty migration,
+//! DuQuant's blockwise rotations (arXiv:2406.01721) and its zigzag
+//! channel permutation are all instances of ONE algebraic move: rewrite
+//! `y = x·W` as `y = (x·T⁻¹)·(T·W)` for an invertible `T` on the input
+//! (k) dimension, fold `T·W` into the weight at pack time, and apply
+//! `x·T⁻¹` to every activation before quantization. Each
+//! [`PreTransform`] variant contributes one such `T`:
+//!
+//! * `Smooth{alpha}` — `T = diag(s)`, `s_j = amax_j^α / wmax_j^(1−α)`
+//!   (`smooth::smooth_scales`): weight rows scale up, activations divide
+//!   down. The inverse is an elementwise divide.
+//! * `Rotate{block}` — `T = R`, block-diagonal orthogonal (seeded,
+//!   deterministic). `R·Rᵀ = I` so the inverse is the transpose: the
+//!   activation side applies `x·Rᵀ`, which spreads an outlier channel's
+//!   magnitude across its whole block (the DuQuant observation: rotated
+//!   distributions are closer to Gaussian, so abs-max grids waste fewer
+//!   levels on a single spike).
+//! * `Permute{Zigzag}` — `T = P`, a channel permutation dealing the
+//!   calibration-ranked channels serpentine-wise across rotation blocks
+//!   so no block hoards the hot channels. Exact (a reordering of the
+//!   same products).
+//!
+//! Transforms COMPOSE IN ORDER: `pre = [T1, T2]` packs `T2·(T1·W)` and
+//! the activation path applies T1's inverse then T2's — the pipeline is
+//! ordered, and order is observable (rotating then smoothing calibrates
+//! the smooth scales in the rotated basis, and vice versa), which is why
+//! the tag grammar spells the pipeline out in order (`-sq-rot` vs
+//! `-rot-sq`).
+//!
+//! At pack time each stage also rewrites the calibration abs-max vector
+//! so the NEXT stage (and ResQ's calibrated rank selection) sees the
+//! activation statistics of its own input space: smooth divides it,
+//! permute reorders it, rotate propagates an RMS estimate
+//! `amax'_j = sqrt(Σ_i R_{ji}² · amax_i²)` (rows of `R` have unit norm,
+//! so a flat vector stays flat and a spike spreads across its block).
+//!
+//! The activation side is compiled into an [`ActPipeline`] applied at
+//! exactly two seams — `IntScratch::stage_row` (the decode row path) and
+//! `transformed` (the batch path) in `quant::linear` — through the same
+//! per-row slice arithmetic, which is what keeps the row/batch
+//! bit-exactness contract intact for every composition.
+
+use super::matrix::MatF32;
+
+/// Default rotation / permutation block width (DuQuant uses small
+/// power-of-two blocks; 16 divides every projection width in this repo
+/// and keeps the per-call rotate GEMM a k×16 sliver). Not encoded in
+/// tags — `-rot` always means this block, like `-sq` always means
+/// alpha 0.5.
+pub const ROT_BLOCK: usize = 16;
+
+/// How a `Permute` pre-transform orders channels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PermuteKind {
+    /// Rank channels by calibration abs-max, deal them serpentine-wise
+    /// across the [`ROT_BLOCK`]-sized groups (DuQuant §4.3): every
+    /// block receives an even share of hot channels.
+    Zigzag,
+}
+
+/// One pack-time pre-transform — see the module docs for the algebra.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PreTransform {
+    /// SmoothQuant difficulty migration with strength `alpha`.
+    Smooth { alpha: f32 },
+    /// Blockwise orthogonal rotation with the given block width.
+    Rotate { block: usize },
+    /// Channel permutation.
+    Permute { kind: PermuteKind },
+}
+
+impl PreTransform {
+    /// The tag suffix this transform is spelled as (`-sq`, `-rot`,
+    /// `-perm`) — parameters are not encoded, exactly like the smooth
+    /// alpha before the pipeline existed.
+    pub fn tag_suffix(&self) -> &'static str {
+        match self {
+            PreTransform::Smooth { .. } => "-sq",
+            PreTransform::Rotate { .. } => "-rot",
+            PreTransform::Permute { .. } => "-perm",
+        }
+    }
+}
+
+// ------------------------------------------------------------ rotation
+
+/// A block-diagonal orthogonal rotation on the k dimension: one dense
+/// `b×b` orthogonal factor per block (the last block shrinks when
+/// `dim % block != 0`). Stored row-major per block; both the weight
+/// fold (`R·W`) and the activation side (`x·Rᵀ`) contract against R's
+/// ROWS, so one layout serves both.
+#[derive(Debug, Clone)]
+pub struct BlockRot {
+    pub dim: usize,
+    pub block: usize,
+    /// per-block row-major `b_i × b_i` factors, `Σ b_i = dim`
+    blocks: Vec<MatF32>,
+}
+
+/// Deterministic xorshift64* stream for rotation construction — the
+/// rotation must be a pure function of `(dim, block)` so every pack of
+/// the same spec (across processes, across the weight/activation sides)
+/// builds the identical matrix.
+fn xorshift64(state: &mut u64) -> u64 {
+    let mut x = *state;
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    *state = x;
+    x
+}
+
+/// Uniform in (-1, 1), f64 for the orthonormalization.
+fn next_unit(state: &mut u64) -> f64 {
+    // 53 mantissa bits of the stream → [0, 1), shifted to (-1, 1)
+    (xorshift64(state) >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0
+}
+
+impl BlockRot {
+    /// Build the seeded random orthogonal factors: fill each block with
+    /// uniform noise and orthonormalize with two passes of modified
+    /// Gram–Schmidt in f64 (the second pass scrubs the first's rounding,
+    /// leaving `R·Rᵀ = I` to well under f32 resolution), then round to
+    /// f32. Degenerate draws (a row landing in the span of the previous
+    /// rows) are resolved by re-seeding that row from the stream — with
+    /// 53-bit draws this is a practically-never branch, kept so the
+    /// construction is total.
+    pub fn build(dim: usize, block: usize) -> BlockRot {
+        assert!(block > 0, "rotation block must be positive");
+        let mut blocks = Vec::new();
+        let mut start = 0usize;
+        let mut bi = 0u64;
+        while start < dim {
+            let b = block.min(dim - start);
+            // seed mixes dim, block index and block width so distinct
+            // sites never share a factor by accident
+            let mut state = 0x9E37_79B9_7F4A_7C15u64
+                ^ (dim as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)
+                ^ bi.wrapping_mul(0x94D0_49BB_1331_11EB)
+                ^ (b as u64);
+            // never let the stream start at 0 (xorshift fixed point)
+            if state == 0 {
+                state = 1;
+            }
+            let mut rows: Vec<Vec<f64>> = (0..b)
+                .map(|_| (0..b).map(|_| next_unit(&mut state)).collect())
+                .collect();
+            // two rounds of modified Gram–Schmidt
+            for _round in 0..2 {
+                for i in 0..b {
+                    for j in 0..i {
+                        let dot: f64 = (0..b).map(|c| rows[i][c] * rows[j][c]).sum();
+                        for c in 0..b {
+                            rows[i][c] -= dot * rows[j][c];
+                        }
+                    }
+                    let mut norm: f64 = (0..b).map(|c| rows[i][c] * rows[i][c]).sum::<f64>().sqrt();
+                    while norm < 1e-12 {
+                        for c in 0..b {
+                            rows[i][c] = next_unit(&mut state);
+                        }
+                        for j in 0..i {
+                            let dot: f64 = (0..b).map(|c| rows[i][c] * rows[j][c]).sum();
+                            for c in 0..b {
+                                rows[i][c] -= dot * rows[j][c];
+                            }
+                        }
+                        norm = (0..b).map(|c| rows[i][c] * rows[i][c]).sum::<f64>().sqrt();
+                    }
+                    for c in 0..b {
+                        rows[i][c] /= norm;
+                    }
+                }
+            }
+            let mut m = MatF32::zeros(b, b);
+            for i in 0..b {
+                for c in 0..b {
+                    *m.at_mut(i, c) = rows[i][c] as f32;
+                }
+            }
+            blocks.push(m);
+            start += b;
+            bi += 1;
+        }
+        BlockRot { dim, block, blocks }
+    }
+
+    /// Apply to one activation row: `dst[j0+j] = Σ_i R[j][i]·src[j0+i]`
+    /// per block — the `x·Rᵀ` side. `src` and `dst` must not alias.
+    pub fn apply_to_row(&self, src: &[f32], dst: &mut [f32]) {
+        debug_assert_eq!(src.len(), self.dim);
+        debug_assert_eq!(dst.len(), self.dim);
+        let mut j0 = 0usize;
+        for m in &self.blocks {
+            let b = m.rows;
+            for j in 0..b {
+                let rrow = m.row(j);
+                let mut acc = 0.0f32;
+                for i in 0..b {
+                    acc += rrow[i] * src[j0 + i];
+                }
+                dst[j0 + j] = acc;
+            }
+            j0 += b;
+        }
+    }
+
+    /// Fold into the weight at pack time: `W' = R·W`, i.e.
+    /// `w'[j0+j][c] = Σ_i R[j][i]·w[j0+i][c]` per block.
+    pub fn apply_to_weight(&self, w: &MatF32) -> MatF32 {
+        assert_eq!(w.rows, self.dim, "rotation dim vs weight k");
+        let n = w.cols;
+        let mut out = MatF32::zeros(w.rows, n);
+        let mut j0 = 0usize;
+        for m in &self.blocks {
+            let b = m.rows;
+            for j in 0..b {
+                let rrow = m.row(j);
+                let orow = out.row_mut(j0 + j);
+                for i in 0..b {
+                    let rv = rrow[i];
+                    for (ov, wv) in orow.iter_mut().zip(w.row(j0 + i)) {
+                        *ov += rv * wv;
+                    }
+                }
+            }
+            j0 += b;
+        }
+        out
+    }
+
+    /// Propagate a per-channel abs-max estimate through the rotation:
+    /// `amax'_j = sqrt(Σ_i R[j][i]²·amax_i²)` — an RMS bound that treats
+    /// channels as independent. Unit-norm rows keep a flat vector flat
+    /// and spread a spike across its block, which is all downstream
+    /// stages (smooth scales, ResQ rank) need from it.
+    pub fn amax_estimate(&self, amax: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(amax.len(), self.dim);
+        let mut out = vec![0.0f32; self.dim];
+        let mut j0 = 0usize;
+        for m in &self.blocks {
+            let b = m.rows;
+            for j in 0..b {
+                let rrow = m.row(j);
+                let mut acc = 0.0f32;
+                for i in 0..b {
+                    let t = rrow[i] * amax[j0 + i];
+                    acc += t * t;
+                }
+                out[j0 + j] = acc.sqrt();
+            }
+            j0 += b;
+        }
+        out
+    }
+
+    /// Deployed bytes of the rotation factors at 2 B/elem (the fp16 the
+    /// f32 stands in for, same accounting as the LLM.int8() FP copy).
+    pub fn bytes(&self) -> usize {
+        self.blocks.iter().map(|m| m.data.len() * 2).sum()
+    }
+}
+
+// --------------------------------------------------------- permutation
+
+/// The zigzag channel order: rank channels by `amax` (descending,
+/// index-ascending tiebreak — fully deterministic), deal them into
+/// `ceil(k/block)` groups serpentine-wise (group 0..G−1, then G−1..0,
+/// …), concatenate the groups. Returns the new-to-old map `perm`:
+/// position `j` of the permuted space holds old channel `perm[j]`.
+pub fn zigzag_perm(amax: &[f32], block: usize) -> Vec<usize> {
+    let k = amax.len();
+    assert!(block > 0, "permutation block must be positive");
+    let groups = k.div_ceil(block).max(1);
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| amax[b].total_cmp(&amax[a]).then(a.cmp(&b)));
+    let mut bins: Vec<Vec<usize>> = vec![Vec::new(); groups];
+    let mut g = 0usize;
+    let mut dir = 1isize;
+    for c in order {
+        bins[g].push(c);
+        if groups > 1 {
+            if (g == groups - 1 && dir == 1) || (g == 0 && dir == -1) {
+                dir = -dir;
+            } else {
+                g = (g as isize + dir) as usize;
+            }
+        }
+    }
+    bins.into_iter().flatten().collect()
+}
+
+/// Invert a permutation: `inv[p[j]] == j`.
+pub fn invert_perm(p: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; p.len()];
+    for (j, &src) in p.iter().enumerate() {
+        inv[src] = j;
+    }
+    inv
+}
+
+// ------------------------------------------------- activation pipeline
+
+/// One compiled activation-side step — the inverse/absorbed factor a
+/// [`PreTransform`] contributed at pack time.
+#[derive(Debug, Clone)]
+pub enum ActStep {
+    /// elementwise divide by the smooth scales (len k)
+    Scale(Vec<f32>),
+    /// gather `out[j] = x[perm[j]]` (the same reorder applied to W rows)
+    Permute(Vec<usize>),
+    /// blockwise `x·Rᵀ`
+    Rotate(BlockRot),
+}
+
+/// The ordered activation-side pipeline an operator applies to every
+/// incoming row before quantization — empty for a bare spec, one
+/// `Scale` for classic `-sq`, arbitrary compositions for the full
+/// grammar. Applied through [`ActPipeline::apply_row`] at both the
+/// batch and the single-row seams of `quant::linear`, with identical
+/// per-element arithmetic (the row/batch bit-exactness contract).
+#[derive(Debug, Clone, Default)]
+pub struct ActPipeline {
+    steps: Vec<ActStep>,
+}
+
+impl ActPipeline {
+    pub fn empty() -> ActPipeline {
+        ActPipeline { steps: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    pub fn push(&mut self, step: ActStep) {
+        self.steps.push(step);
+    }
+
+    pub fn steps(&self) -> &[ActStep] {
+        &self.steps
+    }
+
+    /// Apply the pipeline to one activation row in place. `tmp` is
+    /// caller-provided staging (the scratch pool's, on the hot path) so
+    /// the steady state allocates nothing; `Scale` runs in place,
+    /// `Permute`/`Rotate` stage through `tmp` and copy back.
+    pub fn apply_row(&self, row: &mut [f32], tmp: &mut Vec<f32>) {
+        for step in &self.steps {
+            match step {
+                ActStep::Scale(s) => {
+                    debug_assert_eq!(s.len(), row.len());
+                    for (v, sv) in row.iter_mut().zip(s) {
+                        *v /= sv;
+                    }
+                }
+                ActStep::Permute(p) => {
+                    debug_assert_eq!(p.len(), row.len());
+                    tmp.clear();
+                    tmp.extend(p.iter().map(|&src| row[src]));
+                    row.copy_from_slice(tmp);
+                }
+                ActStep::Rotate(rot) => {
+                    tmp.clear();
+                    tmp.resize(row.len(), 0.0);
+                    rot.apply_to_row(row, tmp);
+                    row.copy_from_slice(tmp);
+                }
+            }
+        }
+    }
+
+    /// Deployed bytes of the pipeline state (`bytes()` honesty): scales
+    /// at 4 B, permutation indices at 4 B (u32-sized, like the ResQ row
+    /// index list), rotation factors per [`BlockRot::bytes`].
+    pub fn bytes(&self) -> usize {
+        self.steps
+            .iter()
+            .map(|s| match s {
+                ActStep::Scale(v) => v.len() * 4,
+                ActStep::Permute(p) => p.len() * 4,
+                ActStep::Rotate(r) => r.bytes(),
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_rot_is_orthogonal_and_deterministic() {
+        for (dim, block) in [(16usize, 16usize), (48, 16), (20, 16), (7, 16), (64, 8)] {
+            let rot = BlockRot::build(dim, block);
+            let rot2 = BlockRot::build(dim, block);
+            let mut j0 = 0;
+            for (bi, m) in rot.blocks.iter().enumerate() {
+                let b = m.rows;
+                assert_eq!(m.data, rot2.blocks[bi].data, "deterministic");
+                for i in 0..b {
+                    for j in 0..b {
+                        let dot: f32 = (0..b).map(|c| m.at(i, c) * m.at(j, c)).sum();
+                        let want = if i == j { 1.0 } else { 0.0 };
+                        assert!(
+                            (dot - want).abs() < 1e-4,
+                            "R·Rᵀ[{i},{j}] = {dot} (dim {dim} block at {j0})"
+                        );
+                    }
+                }
+                j0 += b;
+            }
+            assert_eq!(j0, dim, "blocks tile the dimension");
+        }
+    }
+
+    #[test]
+    fn rotate_row_then_transpose_recovers_input() {
+        // x·Rᵀ·R == x to f32 tolerance — the function-preservation the
+        // pack-time fold relies on (exact orthogonality lives in f64)
+        let rot = BlockRot::build(32, 16);
+        let x: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+        let mut xr = vec![0.0f32; 32];
+        rot.apply_to_row(&x, &mut xr);
+        // applying R (not Rᵀ) to the rotated row: Σ_j R[j][i]·xr[j] per i
+        let mut back = vec![0.0f32; 32];
+        let mut j0 = 0;
+        for m in &rot.blocks {
+            let b = m.rows;
+            for i in 0..b {
+                let mut acc = 0.0f32;
+                for j in 0..b {
+                    acc += m.at(j, i) * xr[j0 + j];
+                }
+                back[j0 + i] = acc;
+            }
+            j0 += b;
+        }
+        for (bv, xv) in back.iter().zip(&x) {
+            assert!((bv - xv).abs() < 1e-4, "{bv} vs {xv}");
+        }
+    }
+
+    #[test]
+    fn zigzag_deals_hot_channels_across_blocks() {
+        // 32 channels, the 4 hottest at the front: after the zigzag each
+        // 16-wide block must hold exactly 2 of them
+        let mut amax = vec![1.0f32; 32];
+        for c in 0..4 {
+            amax[c] = 100.0 + c as f32;
+        }
+        let p = zigzag_perm(&amax, 16);
+        let mut seen = p.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..32).collect::<Vec<_>>(), "a permutation");
+        for blk in 0..2 {
+            let hot = p[blk * 16..(blk + 1) * 16].iter().filter(|&&c| c < 4).count();
+            assert_eq!(hot, 2, "block {blk} hot-channel share");
+        }
+        let inv = invert_perm(&p);
+        for j in 0..32 {
+            assert_eq!(inv[p[j]], j);
+        }
+    }
+
+    #[test]
+    fn permute_step_round_trips_bit_exact() {
+        // permute then inverse-permute is the identity BIT FOR BIT — a
+        // permutation only moves values
+        let amax: Vec<f32> = (0..24).map(|i| ((i * 7) % 11) as f32).collect();
+        let p = zigzag_perm(&amax, 16);
+        let x: Vec<f32> = (0..24).map(|i| (i as f32 * 1.37).cos() * 9.0).collect();
+        let mut pipe = ActPipeline::empty();
+        pipe.push(ActStep::Permute(p.clone()));
+        pipe.push(ActStep::Permute(invert_perm(&p)));
+        let mut row = x.clone();
+        let mut tmp = Vec::new();
+        pipe.apply_row(&mut row, &mut tmp);
+        assert_eq!(row, x);
+    }
+
+    #[test]
+    fn pipeline_applies_in_order() {
+        // Scale-then-Permute and Permute-then-Scale differ whenever the
+        // scales are non-uniform — pins that apply_row honours order
+        let s = vec![2.0f32, 4.0, 8.0, 16.0];
+        let p = vec![3usize, 2, 1, 0];
+        let x = vec![16.0f32, 16.0, 16.0, 16.0];
+        let mut tmp = Vec::new();
+        let mut a = ActPipeline::empty();
+        a.push(ActStep::Scale(s.clone()));
+        a.push(ActStep::Permute(p.clone()));
+        let mut ra = x.clone();
+        a.apply_row(&mut ra, &mut tmp);
+        let mut b = ActPipeline::empty();
+        b.push(ActStep::Permute(p));
+        b.push(ActStep::Scale(s));
+        let mut rb = x.clone();
+        b.apply_row(&mut rb, &mut tmp);
+        assert_eq!(ra, vec![1.0, 2.0, 4.0, 8.0]);
+        assert_eq!(rb, vec![8.0, 4.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn rotation_flattens_a_spike() {
+        // the point of the rotation: a single huge channel's magnitude
+        // spreads across its block, dropping the row abs-max by roughly
+        // sqrt(block) — the headroom the abs-max grid gets back
+        let rot = BlockRot::build(16, 16);
+        let mut x = vec![0.1f32; 16];
+        x[3] = 64.0;
+        let mut xr = vec![0.0f32; 16];
+        rot.apply_to_row(&x, &mut xr);
+        let before = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let after = xr.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        assert!(after < before * 0.75, "spike must spread: {after} vs {before}");
+        // energy is preserved (orthogonality), so the mass moved, not
+        // vanished
+        let e0: f32 = x.iter().map(|v| v * v).sum();
+        let e1: f32 = xr.iter().map(|v| v * v).sum();
+        assert!((e0 - e1).abs() / e0 < 1e-3, "energy {e0} vs {e1}");
+    }
+}

@@ -67,7 +67,7 @@ fn prop_int_decode_bit_exact_vs_session_oracle() {
     // sometimes with an injected outlier channel so the per-row masks
     // are genuinely non-empty
     prop("int prefill+decode == rowwise full-forward oracle", |g| {
-        let spec = *g.choice(&[EngineSpec::naive(), EngineSpec::muxq(), EngineSpec::llmint8()]);
+        let spec = g.choice(&[EngineSpec::naive(), EngineSpec::muxq(), EngineSpec::llmint8()]).clone();
         let mut fp = model_for(g);
         if g.bool() {
             let ch = g.usize(0, fp.cfg.d_model - 1);
@@ -139,7 +139,7 @@ fn prop_continuous_batch_bit_exact_vs_solo() {
         let cfg = fp.cfg.clone();
         let q;
         let sm = if use_int {
-            let spec = *g.choice(&[EngineSpec::muxq(), EngineSpec::llmint8()]);
+            let spec = g.choice(&[EngineSpec::muxq(), EngineSpec::llmint8()]).clone();
             q = QuantizedGpt2::new(fp, spec);
             SessionModel::Int(&q)
         } else {

@@ -123,6 +123,95 @@ fn manifest_bits_resolve_from_tag_and_drift_is_rejected() {
     }
 }
 
+fn manifest_entry_pre(tag: &str, method: &str, smooth: bool, extra: &str) -> String {
+    format!(
+        r#"[{{"model": "sim-small", "kind": "eval", "tag": "{tag}",
+             "method": "{method}", "granularity": "per-vector", "smooth": {smooth},
+             "exp_factor": 2, "file": "f.hlo.txt", "batch": 8, "seq": 128,
+             "weights": "weights/sim-small.bin"{extra}}}]"#
+    )
+}
+
+#[test]
+fn manifest_pre_transform_drift_is_rejected() {
+    let load_one = |name: &str, body: String| {
+        let d = tmpdir(name);
+        std::fs::write(d.join("manifest.json"), body).unwrap();
+        Manifest::load(&d)
+    };
+
+    // transform fields absent: the tag is the authority, flags resolve
+    // from its suffixes
+    let m = load_one("pre_tag_only", manifest_entry_pre("muxq-pv-rot", "muxq", false, ""))
+        .unwrap();
+    let meta = m.entries.values().next().unwrap();
+    assert!(meta.rotate && !meta.permute);
+    assert!(meta.spec().unwrap().has_rotate());
+
+    // explicit fields that agree load fine (rank included)
+    let m2 = load_one(
+        "pre_explicit_ok",
+        manifest_entry_pre(
+            "naive-pv-rot-perm-w4a8",
+            "naive",
+            false,
+            r#", "rotate": true, "permute": true"#,
+        ),
+    )
+    .unwrap();
+    let meta2 = m2.entries.values().next().unwrap();
+    assert!(meta2.rotate && meta2.permute);
+    let m3 = load_one(
+        "pre_rank_ok",
+        manifest_entry_pre("resq-pv-r8", "resq", false, r#", "resid_rank": 8"#),
+    )
+    .unwrap();
+    assert_eq!(m3.entries.values().next().unwrap().resid_rank, Some(8));
+
+    // explicit fields that DISAGREE with the tag fail the load
+    for (name, bad, want_msg) in [
+        (
+            "rotate_false_vs_rot_tag",
+            manifest_entry_pre("muxq-pv-rot", "muxq", false, r#", "rotate": false"#),
+            "pre-transform drifted",
+        ),
+        (
+            "rotate_true_vs_plain_tag",
+            manifest_entry_pre("muxq-pv", "muxq", false, r#", "rotate": true"#),
+            "pre-transform drifted",
+        ),
+        (
+            "permute_false_vs_perm_tag",
+            manifest_entry_pre("naive-pv-perm", "naive", false, r#", "permute": false"#),
+            "pre-transform drifted",
+        ),
+        (
+            "rank_vs_plain_resq_tag",
+            manifest_entry_pre("resq-pv", "resq", false, r#", "resid_rank": 8"#),
+            "resid_rank drifted",
+        ),
+        (
+            "rank_mismatch",
+            manifest_entry_pre("resq-pv-r8", "resq", false, r#", "resid_rank": 4"#),
+            "resid_rank drifted",
+        ),
+    ] {
+        let err = load_one(&format!("pre_drift_{name}"), bad).unwrap_err();
+        assert!(
+            format!("{err:#}").contains(want_msg),
+            "{name}: wanted {want_msg:?} in error, got {err:#}"
+        );
+    }
+
+    // non-canonical suffix ORDER is drift too: the tag spells pipeline
+    // order, so a rank suffix before a transform suffix must not load
+    assert!(
+        load_one("pre_rank_order", manifest_entry_pre("resq-pv-r8-sq", "resq", true, ""))
+            .is_err(),
+        "rank suffix must come after the pipeline suffixes"
+    );
+}
+
 #[test]
 fn truncated_weights_rejected() {
     let d = tmpdir("truncweights");

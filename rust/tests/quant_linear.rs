@@ -188,7 +188,8 @@ fn prop_llmint8_linear_tracks_fake_quant_oracle() {
 fn prop_row_path_is_single_row_batch_every_method() {
     // the seam the decode bit-exactness oracles stand on: for ONE row,
     // forward_row_into must equal forward_into bit for bit — for every
-    // method, smoothed or not
+    // method, under any pre-transform pipeline (smooth / rotate /
+    // permute compositions included)
     prop("forward_row_into == 1-row forward_into", |g| {
         let (k, n) = (g.usize(2, 24), g.usize(1, 16));
         let mut x = rand_mat(g, 1, k, 4.0);
@@ -202,10 +203,15 @@ fn prop_row_path_is_single_row_batch_every_method() {
             EngineSpec::naive(),
             EngineSpec::muxq(),
             EngineSpec::llmint8(),
+            EngineSpec::resq(),
         ];
-        let mut spec = *g.choice(&base);
-        if g.bool() {
-            spec = spec.with_smooth(0.5);
+        let mut spec = g.choice(&base).clone();
+        for _ in 0..g.usize(0, 3) {
+            spec = match g.usize(0, 2) {
+                0 => spec.with_smooth(0.5),
+                1 => spec.with_rotate(),
+                _ => spec.with_permute(),
+            };
         }
         let op = spec.pack(&w, &bias);
         let batch = op.forward(&x);
@@ -217,14 +223,30 @@ fn prop_row_path_is_single_row_batch_every_method() {
 
 #[test]
 fn prop_engine_tag_round_trips() {
+    // the FULL extended grammar: method × granularity × an arbitrary
+    // ordered pre-transform pipeline (duplicates allowed — order and
+    // multiplicity are observable) × resq rank × muxq exp × bit widths
     prop("EngineSpec tag -> parse -> tag is identity", |g| {
-        let method = *g.choice(&[Method::Fp16, Method::Naive, Method::Muxq, Method::LlmInt8]);
+        let method = *g.choice(&[
+            Method::Fp16,
+            Method::Naive,
+            Method::Muxq,
+            Method::LlmInt8,
+            Method::Resq,
+        ]);
         let mut spec = EngineSpec::new(method);
         if g.bool() {
             spec = spec.with_granularity(Granularity::PerTensor, Granularity::PerTensor);
         }
-        if g.bool() {
-            spec = spec.with_smooth(0.5);
+        for _ in 0..g.usize(0, 3) {
+            spec = match g.usize(0, 2) {
+                0 => spec.with_smooth(0.5),
+                1 => spec.with_rotate(),
+                _ => spec.with_permute(),
+            };
+        }
+        if method == Method::Resq && g.bool() {
+            spec = spec.with_resid_rank(g.usize(1, 64));
         }
         if method == Method::Muxq {
             spec = spec.with_muxq(MuxqParams {
@@ -232,19 +254,54 @@ fn prop_engine_tag_round_trips() {
                 exp_factor: g.usize(1, 4) as u32,
             });
         }
+        if matches!(method, Method::Naive | Method::Muxq) && g.bool() {
+            spec = spec.with_bits(8, 4);
+        }
         let tag = spec.tag();
         let back = EngineSpec::parse(&tag).map_err(|e| format!("{e:#}"))?;
         prop_assert(back.tag() == tag, format!("{tag} -> {}", back.tag()))?;
         prop_assert(back.method == spec.method, "method survived")?;
+        prop_assert(back.pre == spec.pre, format!("{tag}: pipeline survived in order"))?;
+        prop_assert(back.resid_rank == spec.resid_rank, "resid rank survived")?;
         prop_assert(
-            back.smooth_alpha.is_some() == spec.smooth_alpha.is_some(),
-            "smooth flag survived",
+            (back.ia_bits, back.w_bits) == (spec.ia_bits, spec.w_bits),
+            "bits survived",
         )?;
         if method == Method::Muxq {
             prop_assert(back.muxq.exp_factor == spec.muxq.exp_factor, "exp survived")?;
         }
         Ok(())
     });
+}
+
+#[test]
+fn tag_grammar_order_and_rejections() {
+    // pipeline order is observable, so the tag spells it: -sq-rot and
+    // -rot-sq are DIFFERENT specs that both round-trip
+    use muxq::quant::PreTransform;
+    let sq_rot = EngineSpec::parse("muxq-pv-sq-rot").unwrap();
+    let rot_sq = EngineSpec::parse("muxq-pv-rot-sq").unwrap();
+    assert_eq!(sq_rot.tag(), "muxq-pv-sq-rot");
+    assert_eq!(rot_sq.tag(), "muxq-pv-rot-sq");
+    assert!(matches!(sq_rot.pre[0], PreTransform::Smooth { .. }));
+    assert!(matches!(sq_rot.pre[1], PreTransform::Rotate { .. }));
+    assert!(matches!(rot_sq.pre[0], PreTransform::Rotate { .. }));
+    assert!(matches!(rot_sq.pre[1], PreTransform::Smooth { .. }));
+    assert_ne!(sq_rot.pre, rot_sq.pre);
+
+    // the composed W4A8 spelling from the issue round-trips too
+    let t = "naive-pv-rot-perm-w4a8";
+    assert_eq!(EngineSpec::parse(t).unwrap().tag(), t);
+    let t2 = "resq-pv-sq-r8";
+    assert_eq!(EngineSpec::parse(t2).unwrap().tag(), t2);
+
+    // rank suffix is resq-only, and rank 0 is meaningless
+    assert!(EngineSpec::parse("naive-pv-r4").is_err(), "rank is resq-only");
+    assert!(EngineSpec::parse("muxq-pv-r4").is_err(), "rank is resq-only");
+    assert!(EngineSpec::parse("resq-pv-r0").is_err(), "rank 0 rejected");
+    // junk suffixes still rejected
+    assert!(EngineSpec::parse("muxq-pv-rotate").is_err());
+    assert!(EngineSpec::parse("muxq-pv-rot-huh").is_err());
 }
 
 #[test]

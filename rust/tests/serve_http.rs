@@ -95,7 +95,7 @@ fn streamed_and_buffered_completions_are_bit_exact_vs_solo_session() {
     let fp = Gpt2Model::test_model(2, 32, 2, 48, 64, 7);
     let spec = EngineSpec::muxq();
     let gen = Arc::new(GenerationServer::start(
-        GenBackend::Int(QuantizedGpt2::new(fp.clone(), spec)),
+        GenBackend::Int(QuantizedGpt2::new(fp.clone(), spec.clone())),
         GenerationConfig { max_new_tokens: 16, ..Default::default() },
     ));
     let srv = HttpServer::start(
